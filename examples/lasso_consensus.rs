@@ -1,0 +1,60 @@
+//! Distributed sparse regression (consensus lasso) across penalty schemes.
+//!
+//! Twelve nodes each observe 25 noisy measurements of a 10-dim signal with
+//! only 3 active coefficients; the network jointly recovers the sparse
+//! support. Demonstrates a non-smooth f_i (soft-thresholding inner solver)
+//! under every penalty scheme on a weakly connected (cluster) graph.
+//!
+//!     cargo run --release --example lasso_consensus
+
+use fadmm::consensus::solvers::LassoNode;
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::graph::Topology;
+use fadmm::linalg::Mat;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::rng::Pcg;
+
+fn main() {
+    let dim = 10;
+    let mut signal = vec![0.0; dim];
+    signal[1] = 2.0;
+    signal[4] = -3.0;
+    signal[7] = 1.5;
+
+    let graph = Topology::Cluster.build(12).expect("cluster(12)");
+    println!("consensus lasso: 12 nodes (two cliques + bridge), 10-dim, 3-sparse\n");
+    println!("{:<12} {:>6} {:>10} {:>22}", "scheme", "iters", "converged",
+             "support recovered?");
+
+    for scheme in SchemeKind::PAPER {
+        let mut rng = Pcg::seed(7);
+        let nodes: Vec<LassoNode> = (0..12)
+            .map(|_| {
+                let a = Mat::randn(25, dim, &mut rng);
+                let b: Vec<f64> = (0..25)
+                    .map(|r| {
+                        a.row(r).iter().zip(&signal).map(|(x, t)| x * t).sum::<f64>()
+                            + 0.1 * rng.normal()
+                    })
+                    .collect();
+                LassoNode::new(a, b, 6.0)
+            })
+            .collect();
+        let mut engine = Engine::new(graph.clone(), nodes, EngineConfig {
+            scheme,
+            tol: 1e-7,
+            max_iters: 500,
+            seed: 3,
+            ..Default::default()
+        });
+        let report = engine.run();
+        let theta = &report.thetas[0];
+        let support_ok = (0..dim).all(|k| {
+            let active = signal[k] != 0.0;
+            let detected = theta[k].abs() > 0.3;
+            active == detected
+        });
+        println!("{:<12} {:>6} {:>10} {:>22}", scheme.name(), report.iterations,
+                 report.converged, if support_ok { "yes" } else { "NO" });
+    }
+}

@@ -1,0 +1,69 @@
+//! Quickstart: distributed least squares with an adaptive penalty.
+//!
+//! Eight nodes each hold a slice of a regression problem and cooperate
+//! over a ring to find the global fit — no data pooling, no center node.
+//! We run the fixed-penalty baseline and the paper's ADMM-AP scheme and
+//! compare iterations to convergence.
+//!
+//!     cargo run --release --example quickstart
+
+use fadmm::consensus::solvers::LeastSquaresNode;
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::graph::Topology;
+use fadmm::linalg::Mat;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::rng::Pcg;
+
+fn make_nodes(n_nodes: usize, rows: usize, dim: usize, seed: u64)
+              -> (Vec<LeastSquaresNode>, Vec<f64>) {
+    let mut rng = Pcg::seed(seed);
+    let theta_true = rng.normal_vec(dim);
+    let nodes = (0..n_nodes)
+        .map(|_| {
+            let a = Mat::randn(rows, dim, &mut rng);
+            let b: Vec<f64> = (0..rows)
+                .map(|r| {
+                    a.row(r).iter().zip(&theta_true).map(|(x, t)| x * t).sum::<f64>()
+                        + 0.05 * rng.normal()
+                })
+                .collect();
+            LeastSquaresNode::new(a, b)
+        })
+        .collect();
+    (nodes, theta_true)
+}
+
+fn main() {
+    let graph = Topology::Ring.build(8).expect("ring(8)");
+    println!("distributed least squares: 8 nodes, ring topology, 5-dim parameter\n");
+
+    for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Nap] {
+        let (nodes, theta_true) = make_nodes(8, 24, 5, 42);
+        let mut engine = Engine::new(graph.clone(), nodes, EngineConfig {
+            scheme,
+            tol: 1e-8,
+            max_iters: 600,
+            seed: 1,
+            ..Default::default()
+        });
+        let report = engine.run();
+        // worst-node distance to the true parameter
+        let err = report
+            .thetas
+            .iter()
+            .map(|th| {
+                th.iter()
+                    .zip(&theta_true)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .fold(0.0f64, f64::max);
+        println!(
+            "{:<12} converged={} iterations={:<4} max dist to θ* = {:.4}",
+            scheme.name(), report.converged, report.iterations, err
+        );
+    }
+    println!("\nADMM-AP / ADMM-NAP need no τ tuning — the penalty adapts from");
+    println!("each node's local objective (paper eq. 6-9).");
+}

@@ -1,0 +1,167 @@
+"""AOT lowering: JAX (L2 + L1) → HLO text artifacts for the Rust runtime.
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥0.5
+emits protos with 64-bit instruction ids which the pinned xla_extension
+0.5.1 behind the Rust `xla` crate rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids and round-trips cleanly. Lowered with
+``return_tuple=True`` — the Rust side unwraps with ``to_tuple*``.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Emits one ``<name>.hlo.txt`` per (kind, shape) pair plus ``manifest.json``
+describing the calling convention of every artifact (consumed by
+``rust/src/runtime/artifact.rs``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels.estep import estep_z  # noqa: E402
+from .kernels.moments import moments  # noqa: E402
+from .shapes import CONFIGS, unique_dm, unique_dn  # noqa: E402
+
+DTYPE = jnp.float64
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, DTYPE)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _moments_specs(d, n):
+    return [_spec(d, n), _spec(n)]
+
+
+def _node_update_specs(d, m):
+    # n, sx, sxx, w, mu, a, lam, gam, beta, eta_sum, eta_w_w, eta_w_mu, eta_w_a
+    return [_spec(), _spec(d), _spec(d, d), _spec(d, m), _spec(d), _spec(),
+            _spec(d, m), _spec(d), _spec(), _spec(), _spec(d, m), _spec(d),
+            _spec()]
+
+
+def _node_update_direct_specs(d, m, n):
+    return [_spec(d, n), _spec(n), _spec(d, m), _spec(d), _spec(),
+            _spec(d, m), _spec(d), _spec(), _spec(), _spec(d, m), _spec(d),
+            _spec()]
+
+
+def _objective_specs(d, m):
+    return [_spec(), _spec(d), _spec(d, d), _spec(d, m), _spec(d), _spec()]
+
+
+def _objective_batch_specs(d, m):
+    b = model.OBJECTIVE_BATCH
+    return [_spec(), _spec(d), _spec(d, d), _spec(b, d, m), _spec(b, d),
+            _spec(b)]
+
+
+def _estep_specs(d, m, n):
+    return [_spec(d, n), _spec(n), _spec(d, m), _spec(d), _spec()]
+
+
+def _tuple_wrap(fn):
+    """Every artifact returns a tuple (single outputs become 1-tuples)."""
+
+    def wrapped(*args):
+        out = fn(*args)
+        return out if isinstance(out, tuple) else (out,)
+
+    return wrapped
+
+
+def build_plan():
+    """All (name, fn, arg_specs, meta) lowering targets."""
+    plan = []
+    for d, m in unique_dm():
+        plan.append((
+            f"node_update_d{d}_m{m}", _tuple_wrap(model.node_update_from_moments),
+            _node_update_specs(d, m),
+            dict(kind="node_update", d=d, m=m, n=0),
+        ))
+        plan.append((
+            f"objective_d{d}_m{m}", _tuple_wrap(model.objective_from_moments),
+            _objective_specs(d, m),
+            dict(kind="objective", d=d, m=m, n=0),
+        ))
+        plan.append((
+            f"objective_batch_d{d}_m{m}",
+            _tuple_wrap(model.objective_batch_from_moments),
+            _objective_batch_specs(d, m),
+            dict(kind="objective_batch", d=d, m=m, n=model.OBJECTIVE_BATCH),
+        ))
+    for d, n in unique_dn():
+        plan.append((
+            f"moments_d{d}_n{n}", _tuple_wrap(moments),
+            _moments_specs(d, n),
+            dict(kind="moments", d=d, m=0, n=n),
+        ))
+    for cfg in CONFIGS:
+        d, m, n = cfg.d, cfg.m, cfg.n
+        plan.append((
+            f"node_update_direct_d{d}_m{m}_n{n}",
+            _tuple_wrap(model.node_update_direct),
+            _node_update_direct_specs(d, m, n),
+            dict(kind="node_update_direct", d=d, m=m, n=n),
+        ))
+        plan.append((
+            f"estep_z_d{d}_m{m}_n{n}", _tuple_wrap(estep_z),
+            _estep_specs(d, m, n),
+            dict(kind="estep_z", d=d, m=m, n=n),
+        ))
+    return plan
+
+
+def lower_all(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for name, fn, specs, meta in build_plan():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_shapes = [list(o.shape) for o in lowered.out_info]
+        entries.append(dict(
+            name=name, file=fname, num_inputs=len(specs),
+            input_shapes=[list(s.shape) for s in specs],
+            output_shapes=out_shapes, **meta,
+        ))
+        if verbose:
+            print(f"  lowered {name:40s} ({len(text)} chars)")
+    manifest = dict(version=1, dtype="f64", artifacts=entries)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(entries)} artifacts + manifest.json to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+    lower_all(args.out_dir, verbose=not args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: masked raw-moment accumulation.
+
+This is the only place the optimizer ever touches the raw data matrix, and
+therefore the O(N·D²) hot spot of the whole stack (everything downstream is
+O(D²·M) on the accumulated moments — see DESIGN.md §1).
+
+TPU shape of the kernel: the output moments (`sxx` is D×D) are *stationary*
+in VMEM while X is streamed HBM→VMEM in (D × Tn) column tiles; each grid
+step performs a rank-Tn update `sxx += (x·m) xᵀ` on the MXU plus two VPU
+reductions. `interpret=True` everywhere in this image (CPU PJRT only); the
+real-TPU resource estimate lives in `vmem_bytes()` / DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..shapes import sample_tile
+
+
+def _moments_kernel(x_ref, m_ref, n_ref, sx_ref, sxx_ref):
+    """One grid step: accumulate moments of a (D, Tn) sample tile."""
+    step = pl.program_id(0)
+
+    # The output blocks have a constant index_map, so the same VMEM buffers
+    # are revisited every step: zero them on the first visit.
+    @pl.when(step == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+
+    x = x_ref[...]                    # (D, Tn)
+    msk = m_ref[...]                  # (1, Tn)
+    xm = x * msk                      # masked samples
+
+    n_ref[...] += jnp.sum(msk, keepdims=True).reshape(n_ref.shape)
+    sx_ref[...] += jnp.sum(xm, axis=1, keepdims=True)
+    # rank-Tn update; MXU-shaped contraction over the sample axis
+    sxx_ref[...] += jax.lax.dot_general(
+        xm, x, (((1,), (1,)), ((), ())),
+        preferred_element_type=sxx_ref.dtype,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def moments(x: jnp.ndarray, mask: jnp.ndarray, *, tile: int | None = None):
+    """Masked raw moments via the Pallas kernel.
+
+    Args:
+      x: (D, N) sample block, one sample per column.
+      mask: (N,) 0/1 sample-validity mask (float dtype matching ``x``).
+      tile: sample-axis tile size; defaults to ``shapes.sample_tile(N)``.
+
+    Returns:
+      (n, sx, sxx) with shapes () , (D,), (D, D).
+    """
+    d, n_cols = x.shape
+    tn = tile if tile is not None else sample_tile(n_cols)
+    if n_cols % tn != 0:
+        raise ValueError(f"N={n_cols} not a multiple of tile {tn}")
+    grid = (n_cols // tn,)
+    mask2 = mask.reshape(1, n_cols)
+
+    n_out, sx_out, sxx_out = pl.pallas_call(
+        _moments_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d, tn), lambda i: (0, i)),
+            pl.BlockSpec((1, tn), lambda i: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((d, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, 1), x.dtype),
+            jax.ShapeDtypeStruct((d, 1), x.dtype),
+            jax.ShapeDtypeStruct((d, d), x.dtype),
+        ],
+        interpret=True,  # CPU PJRT only — see module docstring
+    )(x, mask2)
+    return n_out[0, 0], sx_out[:, 0], sxx_out
+
+
+def vmem_bytes(d: int, tile: int, itemsize: int = 8) -> int:
+    """Estimated VMEM residency of one grid step on a real TPU.
+
+    Stationary outputs (n, sx, sxx) + one streamed X tile + mask tile,
+    double-buffered on the streamed operands.
+    """
+    stationary = (1 + d + d * d) * itemsize
+    streamed = 2 * (d * tile + tile) * itemsize  # ×2: double buffering
+    return stationary + streamed

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel in this package
+must agree with its oracle to floating-point tolerance (enforced by
+`python/tests/test_kernels.py`, swept over shapes and dtypes with
+hypothesis). The Rust-side native backend re-implements the same math, so
+the chain of evidence is  ref.py (jnp)  ==  Pallas kernel  ==  lowered HLO
+==  rust `dppca::em`.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def moments_ref(x: jnp.ndarray, mask: jnp.ndarray):
+    """Masked raw moments of a D×N sample block.
+
+    Returns (n, sx, sxx):
+      n   = Σ_k m_k                (scalar)
+      sx  = Σ_k m_k x_k            (D,)
+      sxx = Σ_k m_k x_k x_kᵀ       (D, D)
+    """
+    xm = x * mask[None, :]
+    n = jnp.sum(mask)
+    sx = jnp.sum(xm, axis=1)
+    sxx = xm @ x.T
+    return n, sx, sxx
+
+
+def estep_z_ref(x: jnp.ndarray, mask: jnp.ndarray, w: jnp.ndarray,
+                mu: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Posterior means E[z_k] = M⁻¹Wᵀ(x_k − μ) for every masked sample.
+
+    Returns an (M, N) matrix; masked-out columns are zero.
+    """
+    m = w.shape[1]
+    mmat = w.T @ w + jnp.eye(m, dtype=x.dtype) / a
+    minv = jnp.linalg.inv(mmat)
+    centred = (x - mu[:, None]) * mask[None, :]
+    return minv @ (w.T @ centred)

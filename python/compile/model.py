@@ -1,0 +1,143 @@
+"""L2: the D-PPCA node computation in JAX.
+
+One EM + consensus-ADMM iteration of a single node, expressed over the
+masked raw moments (n, sx, Sxx) — see DESIGN.md §1 for the algebra and the
+paper (eq. 15) for the μ-update template the W/a updates are derived from.
+The per-edge penalties enter only through four aggregates the Rust
+coordinator computes in O(deg) per iteration:
+
+  eta_sum  = Σ_j η_ij                      (scalar)
+  eta_w_w  = Σ_j η_ij (W_i + W_j)          (D, M)
+  eta_w_mu = Σ_j η_ij (μ_i + μ_j)          (D,)
+  eta_w_a  = Σ_j η_ij (a_i + a_j)          (scalar)
+
+so a single lowered artifact serves any topology / penalty scheme / degree.
+
+Functions here are lowered once by `aot.py`; nothing in this file runs at
+optimization time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.moments import moments
+from .smallinv import inv_and_logdet_spd
+
+_LOG_2PI = 1.8378770664093453  # log(2π)
+
+
+def centred_scatter(n, sx, sxx, mu):
+    """S(μ) = Σ m_k (x_k − μ)(x_k − μ)ᵀ from raw moments."""
+    return sxx - jnp.outer(sx, mu) - jnp.outer(mu, sx) + n * jnp.outer(mu, mu)
+
+
+def marginal_nll(n, sx, sxx, w, mu, a):
+    """Marginal PPCA negative log-likelihood −log p(X | W, μ, a).
+
+    C = WWᵀ + a⁻¹I handled in M×M space:
+      log|C| = (M−D)·log a + log|M|,   tr(C⁻¹S) = a·(tr S − tr(M⁻¹ WᵀSW)).
+    """
+    d, m = w.shape
+    mmat = w.T @ w + jnp.eye(m, dtype=w.dtype) / a
+    minv, logdet_m = inv_and_logdet_spd(mmat)
+    s = centred_scatter(n, sx, sxx, mu)
+    wtsw = w.T @ s @ w
+    tr_term = a * (jnp.trace(s) - jnp.sum(minv * wtsw))
+    logdet_c = (m - d) * jnp.log(a) + logdet_m
+    return 0.5 * (n * d * _LOG_2PI + n * logdet_c + tr_term)
+
+
+def node_update_from_moments(n, sx, sxx, w, mu, a, lam, gam, beta,
+                             eta_sum, eta_w_w, eta_w_mu, eta_w_a):
+    """One E-step + consensus M-step + objective evaluation.
+
+    Args mirror the artifact calling convention (see aot.py / the Rust
+    `runtime::convention` module):
+      n, sx, sxx                      masked moments of the local data
+      w (D,M), mu (D,), a ()          current local parameters
+      lam (D,M), gam (D,), beta ()    Lagrange multipliers
+      eta_*                           consensus aggregates (module docstring)
+
+    Returns:
+      (w_new, mu_new, a_new, nll_new)
+    """
+    d, m = w.shape
+    eye_m = jnp.eye(m, dtype=w.dtype)
+
+    # ---- E-step (old parameters), aggregate form --------------------------
+    minv, _ = inv_and_logdet_spd(w.T @ w + eye_m / a)
+    s_old = centred_scatter(n, sx, sxx, mu)
+    cxz = s_old @ w @ minv                     # Σ (x−μ)E[z]ᵀ          (D,M)
+    wtssw = w.T @ s_old @ w
+    ezz_sum = n / a * minv + minv @ wtssw @ minv  # Σ E[zzᵀ]           (M,M)
+    sz = minv @ (w.T @ (sx - n * mu))          # Σ E[z]                (M,)
+
+    # ---- W update ---------------------------------------------------------
+    numer_w = a * cxz - 2.0 * lam + eta_w_w
+    denom_w = a * ezz_sum + 2.0 * eta_sum * eye_m
+    denom_w_inv, _ = inv_and_logdet_spd(denom_w)
+    w_new = numer_w @ denom_w_inv
+
+    # ---- μ update (uses fresh W; paper eq. 15) ----------------------------
+    numer_mu = a * (sx - w_new @ sz) - 2.0 * gam + eta_w_mu
+    mu_new = numer_mu / (n * a + 2.0 * eta_sum)
+
+    # ---- a update: positive root of  A·a² + B·a − C = 0 -------------------
+    s_new = centred_scatter(n, sx, sxx, mu_new)
+    cxz_new = cxz + jnp.outer(mu - mu_new, sz)  # Σ (x−μ_new)E[z]ᵀ
+    c_sum = (jnp.trace(s_new)
+             - 2.0 * jnp.sum(w_new * cxz_new)
+             + jnp.sum((w_new.T @ w_new) * ezz_sum))
+    a_coef = 2.0 * eta_sum
+    b_coef = 2.0 * beta + 0.5 * c_sum - eta_w_a
+    c_coef = n * d / 2.0
+    # consensus case: positive quadratic root; centralized (η≡0): C/B
+    disc = jnp.sqrt(b_coef * b_coef + 4.0 * a_coef * c_coef)
+    a_new = jnp.where(a_coef > 1e-12,
+                      (disc - b_coef) / jnp.where(a_coef > 1e-12, 2.0 * a_coef, 1.0),
+                      c_coef / b_coef)
+
+    nll_new = marginal_nll(n, sx, sxx, w_new, mu_new, a_new)
+    return w_new, mu_new, a_new, nll_new
+
+
+def node_update_direct(x, mask, w, mu, a, lam, gam, beta,
+                       eta_sum, eta_w_w, eta_w_mu, eta_w_a):
+    """Direct path: full pass over the raw data every iteration.
+
+    Identical numbers to `node_update_from_moments` (asserted in pytest);
+    this is the faithful per-iteration cost model of the paper, with the
+    Pallas moments kernel on the hot path.
+    """
+    n, sx, sxx = moments(x, mask)
+    return node_update_from_moments(n, sx, sxx, w, mu, a, lam, gam, beta,
+                                    eta_sum, eta_w_w, eta_w_mu, eta_w_a)
+
+
+def objective_from_moments(n, sx, sxx, w, mu, a):
+    """Artifact wrapper: marginal NLL of (possibly foreign) parameters.
+
+    Used by the AP/NAP penalty schemes, which evaluate the *local* objective
+    f_i at the neighbours' parameter estimates (paper eq. 7–8).
+    """
+    return marginal_nll(n, sx, sxx, w, mu, a)
+
+
+#: batch width of the `objective_batch` artifact (≥ max node degree of any
+#: experiment topology; unused slots are padded with copies — see the Rust
+#: runtime). One PJRT dispatch then serves a node's whole neighbourhood,
+#: which is the dominant §Perf win for the AP/NAP schemes.
+OBJECTIVE_BATCH = 20
+
+
+def objective_batch_from_moments(n, sx, sxx, ws, mus, a_s):
+    """Vmapped marginal NLL: score `OBJECTIVE_BATCH` parameter sets against
+    one node's moments in a single executable.
+
+    Args: ws (B, D, M), mus (B, D), a_s (B,) → (B,) NLL values.
+    """
+    import jax
+
+    return jax.vmap(marginal_nll, in_axes=(None, None, None, 0, 0, 0))(
+        n, sx, sxx, ws, mus, a_s)

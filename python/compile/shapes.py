@@ -1,0 +1,81 @@
+"""Shape registry for AOT lowering.
+
+Every (D, M, N) combination used by the Rust experiment harness is declared
+here; `aot.py` lowers one HLO artifact per (kind, shape) pair. D is the
+observation dimension, M the latent dimension, N the padded per-node sample
+count (actual sample counts are carried by a 0/1 mask so one artifact serves
+every node of an experiment).
+
+Keep this list in sync with `rust/src/experiments/*.rs` (the Rust side
+fails loudly at startup if a required artifact is missing from the
+manifest, so drift is caught immediately).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One lowering target: D×N data with an M-dimensional latent space."""
+
+    d: int  # observation dimension
+    m: int  # latent dimension
+    n: int  # padded per-node sample budget
+
+    @property
+    def dm(self) -> tuple[int, int]:
+        return (self.d, self.m)
+
+    @property
+    def dn(self) -> tuple[int, int]:
+        return (self.d, self.n)
+
+
+#: All experiment shapes. See DESIGN.md §6.
+CONFIGS: list[ShapeConfig] = [
+    # tests / quickstart
+    ShapeConfig(d=8, m=2, n=16),
+    # E1/E2 (Fig. 2): 500 samples of dim 20, M=5, split over J nodes
+    ShapeConfig(d=20, m=5, n=25),  # J = 20
+    ShapeConfig(d=20, m=5, n=32),  # J = 16 (500/16 = 31.25 -> mask-padded)
+    ShapeConfig(d=20, m=5, n=42),  # J = 12 (500/12 = 41.67 -> mask-padded)
+    # E3 (Fig. 3/5): turntable SfM, 120 tracked points, 30 frames, 5 cameras
+    # transposed measurement matrix: D = #points, samples = 2F_i = 12
+    ShapeConfig(d=120, m=3, n=12),
+    # E4 (Hopkins-like corpus): bucketed object sizes
+    ShapeConfig(d=60, m=3, n=6),
+    ShapeConfig(d=60, m=3, n=12),
+    ShapeConfig(d=100, m=3, n=6),
+    ShapeConfig(d=100, m=3, n=12),
+    ShapeConfig(d=140, m=3, n=6),
+    ShapeConfig(d=140, m=3, n=12),
+]
+
+
+def sample_tile(n: int) -> int:
+    """Pallas tile size along the sample axis.
+
+    Small paddings are a single tile; large ones stream 128-wide column
+    tiles (N is required to be a multiple of the tile).
+    """
+    if n <= 256:
+        return n
+    if n % 128 != 0:
+        raise ValueError(f"large sample budgets must be multiples of 128, got {n}")
+    return 128
+
+
+def unique_dm() -> list[tuple[int, int]]:
+    seen: dict[tuple[int, int], None] = {}
+    for c in CONFIGS:
+        seen.setdefault(c.dm)
+    return list(seen)
+
+
+def unique_dn() -> list[tuple[int, int]]:
+    seen: dict[tuple[int, int], None] = {}
+    for c in CONFIGS:
+        seen.setdefault(c.dn)
+    return list(seen)

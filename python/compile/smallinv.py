@@ -1,0 +1,43 @@
+"""Small SPD inverse / log-determinant in pure jnp.
+
+`jnp.linalg.inv` / `cholesky` lower to LAPACK *custom calls* on CPU, which
+the pinned runtime (xla_extension 0.5.1 behind the Rust `xla` crate) does
+not register — the compiled executable would die at run time. Every matrix
+we ever invert is a tiny well-conditioned SPD system (M×M with M ∈ {2,3,5},
+`WᵀW + a⁻¹I` or the M-step normalizer), so an unrolled Gauss-Jordan sweep
+without pivoting lowers to plain HLO ops and is numerically safe.
+
+The trip count is the static dimension → fully unrolled at trace time.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def inv_and_logdet_spd(a: jnp.ndarray):
+    """Inverse and log-determinant of a small SPD matrix.
+
+    Gauss-Jordan without pivoting; valid for SPD inputs (pivots equal the
+    Cholesky pivots squared-scaled and stay positive).
+
+    Returns:
+      (a_inv, logdet) with ``a_inv`` of the same shape/dtype as ``a``.
+    """
+    m = a.shape[0]
+    aug = jnp.concatenate([a, jnp.eye(m, dtype=a.dtype)], axis=1)
+    logdet = jnp.zeros((), dtype=a.dtype)
+    for k in range(m):
+        piv = aug[k, k]
+        logdet = logdet + jnp.log(piv)
+        row = aug[k] / piv
+        # eliminate column k from every row, then restore the pivot row
+        aug = aug - jnp.outer(aug[:, k], row)
+        aug = aug.at[k].set(row)
+    return aug[:, m:], logdet
+
+
+def inv_spd(a: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of a small SPD matrix (see `inv_and_logdet_spd`)."""
+    inv, _ = inv_and_logdet_spd(a)
+    return inv

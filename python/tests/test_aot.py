@@ -1,0 +1,74 @@
+"""AOT pipeline: lowering plan, HLO hygiene, manifest schema.
+
+The critical invariant is *no custom-calls*: `jnp.linalg.*` on CPU lowers
+to LAPACK custom-calls that the pinned xla_extension 0.5.1 runtime behind
+the Rust `xla` crate cannot execute. Every artifact must be plain HLO.
+"""
+
+import json
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import pytest
+
+from compile import aot
+from compile.shapes import CONFIGS, sample_tile, unique_dm, unique_dn
+
+
+def test_plan_covers_every_config():
+    plan = {name: meta for name, _, _, meta in aot.build_plan()}
+    for d, m in unique_dm():
+        assert f"node_update_d{d}_m{m}" in plan
+        assert f"objective_d{d}_m{m}" in plan
+        assert f"objective_batch_d{d}_m{m}" in plan
+    for d, n in unique_dn():
+        assert f"moments_d{d}_n{n}" in plan
+    for cfg in CONFIGS:
+        assert f"node_update_direct_d{cfg.d}_m{cfg.m}_n{cfg.n}" in plan
+        assert f"estep_z_d{cfg.d}_m{cfg.m}_n{cfg.n}" in plan
+
+
+def test_plan_names_unique():
+    names = [name for name, *_ in aot.build_plan()]
+    assert len(names) == len(set(names))
+
+
+def test_sample_tile_contract():
+    assert sample_tile(16) == 16
+    assert sample_tile(256) == 256
+    assert sample_tile(512) == 128
+    with pytest.raises(ValueError):
+        sample_tile(300)
+
+
+@pytest.mark.parametrize("name", ["node_update_d8_m2", "moments_d8_n16",
+                                  "node_update_direct_d8_m2_n16",
+                                  "estep_z_d8_m2_n16", "objective_d8_m2"])
+def test_lowering_is_custom_call_free(name):
+    plan = {n: (fn, specs) for n, fn, specs, _ in aot.build_plan()}
+    fn, specs = plan[name]
+    text = aot.to_hlo_text(jax.jit(fn).lower(*specs))
+    assert "custom-call" not in text, f"{name} contains a custom-call"
+    assert text.startswith("HloModule")
+
+
+def test_manifest_written(tmp_path):
+    """Full manifest round-trip on the smallest config subset."""
+    # monkeypatch the plan down to the d8 artifacts to keep the test fast
+    small = [p for p in aot.build_plan() if "_d8_" in p[0] or p[0].endswith("d8_m2")]
+    orig = aot.build_plan
+    aot.build_plan = lambda: small
+    try:
+        manifest = aot.lower_all(str(tmp_path), verbose=False)
+    finally:
+        aot.build_plan = orig
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk == manifest
+    assert on_disk["dtype"] == "f64"
+    for e in on_disk["artifacts"]:
+        assert (tmp_path / e["file"]).exists()
+        assert e["num_inputs"] == len(e["input_shapes"])
+        assert e["kind"] in {"node_update", "node_update_direct", "moments",
+                             "objective", "objective_batch", "estep_z"}

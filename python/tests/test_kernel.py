@@ -1,0 +1,121 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, dtypes, tile sizes and mask patterns; fixed
+seeds keep the suite deterministic.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.estep import estep_z
+from compile.kernels.moments import moments, vmem_bytes
+from compile.kernels.ref import estep_z_ref, moments_ref
+
+DTYPES = [np.float32, np.float64]
+
+
+def _data(seed, d, n, dtype, mask_p=0.8, scale=1.0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(d, n)) * scale, dtype=dtype)
+    mask = jnp.asarray((rng.random(n) < mask_p).astype(dtype))
+    return x, mask
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(1, 40),
+    tiles=st.integers(1, 4),
+    tile=st.sampled_from([1, 2, 8, 16, 128]),
+    dtype_i=st.integers(0, 1),
+    mask_p=st.floats(0.0, 1.0),
+)
+def test_moments_matches_ref(seed, d, tiles, tile, dtype_i, mask_p):
+    dtype = DTYPES[dtype_i]
+    n = tiles * tile
+    x, mask = _data(seed, d, n, dtype, mask_p)
+    got = moments(x, mask, tile=tile)
+    want = moments_ref(x, mask)
+    rtol = 1e-5 if dtype == np.float32 else 1e-12
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=rtol, atol=rtol)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.integers(2, 30),
+    m=st.integers(1, 5),
+    tiles=st.integers(1, 3),
+    tile=st.sampled_from([2, 8, 16]),
+    a=st.floats(0.1, 50.0),
+)
+def test_estep_matches_ref(seed, d, m, tiles, tile, a):
+    m = min(m, d)
+    n = tiles * tile
+    rng = np.random.default_rng(seed)
+    x, mask = _data(seed, d, n, np.float64)
+    w = jnp.asarray(rng.normal(size=(d, m)))
+    mu = jnp.asarray(rng.normal(size=d))
+    got = estep_z(x, mask, w, mu, jnp.asarray(a), tile=tile)
+    want = estep_z_ref(x, mask, w, mu, jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-9, atol=1e-9)
+
+
+def test_moments_empty_mask():
+    """All samples masked out → exact zeros, no NaN."""
+    x, _ = _data(1, 6, 8, np.float64)
+    mask = jnp.zeros(8)
+    n, sx, sxx = moments(x, mask)
+    assert float(n) == 0.0
+    assert np.all(np.asarray(sx) == 0.0) and np.all(np.asarray(sxx) == 0.0)
+
+
+def test_moments_full_mask_equals_unmasked_gram():
+    x, _ = _data(2, 5, 12, np.float64)
+    mask = jnp.ones(12)
+    n, sx, sxx = moments(x, mask)
+    assert float(n) == 12.0
+    np.testing.assert_allclose(np.asarray(sxx), np.asarray(x @ x.T), rtol=1e-12)
+
+
+def test_moments_tile_invariance():
+    """Same result regardless of how the sample axis is tiled."""
+    x, mask = _data(3, 10, 32, np.float64)
+    base = moments(x, mask, tile=32)
+    for tile in (1, 2, 4, 8, 16):
+        got = moments(x, mask, tile=tile)
+        for g, b in zip(got, base):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(b), rtol=1e-12)
+
+
+def test_moments_rejects_bad_tile():
+    x, mask = _data(4, 4, 10, np.float64)
+    with pytest.raises(ValueError):
+        moments(x, mask, tile=4)
+
+
+def test_estep_masked_columns_zero():
+    x, _ = _data(5, 7, 9, np.float64)
+    mask = jnp.asarray(np.array([1, 0, 1, 0, 0, 1, 1, 0, 1], dtype=np.float64))
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(7, 3)))
+    z = np.asarray(estep_z(x, mask, w, jnp.zeros(7), jnp.asarray(1.0), tile=9))
+    assert np.all(z[:, np.asarray(mask) == 0] == 0.0)
+
+
+def test_vmem_estimate_within_tpu_budget():
+    """DESIGN.md §Perf: every declared shape fits a 16 MiB VMEM budget."""
+    from compile.shapes import CONFIGS, sample_tile
+
+    for cfg in CONFIGS:
+        b = vmem_bytes(cfg.d, sample_tile(cfg.n))
+        assert b < 16 * 2**20, (cfg, b)

@@ -1,0 +1,201 @@
+"""L2 model math: EM monotonicity, consensus fixed points, oracle parity.
+
+The strongest test is `test_matches_tipping_bishop_optimum`: centralized EM
+run through `node_update_from_moments` (all consensus terms zero) must
+converge to the analytic PPCA maximum-likelihood solution.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import moments_ref
+from compile.smallinv import inv_and_logdet_spd
+
+
+def _zeros_consensus(d, m):
+    return (jnp.zeros((d, m)), jnp.zeros(d), jnp.asarray(0.0),
+            jnp.asarray(0.0), jnp.zeros((d, m)), jnp.zeros(d),
+            jnp.asarray(0.0))
+
+
+def _run_centralized_em(x, m, iters=200, seed=0):
+    d, _ = x.shape
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(d, m)))
+    mu = jnp.asarray(rng.normal(size=d))
+    a = jnp.asarray(1.0)
+    n, sx, sxx = moments_ref(x, jnp.ones(x.shape[1]))
+    lam, gam, beta, es, eww, ewmu, ewa = _zeros_consensus(d, m)
+
+    def body(_, carry):
+        w, mu, a, _ = carry
+        return model.node_update_from_moments(
+            n, sx, sxx, w, mu, a, lam, gam, beta, es, eww, ewmu, ewa)
+
+    w, mu, a, nll = jax.jit(
+        lambda c: jax.lax.fori_loop(0, iters, body, c)
+    )((w, mu, a, jnp.asarray(0.0)))
+    return w, mu, a, float(nll)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 4), seed=st.integers(0, 10_000))
+def test_smallinv_matches_numpy(m, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.normal(size=(m, m))
+    spd = b @ b.T + m * np.eye(m)
+    inv, logdet = inv_and_logdet_spd(jnp.asarray(spd))
+    np.testing.assert_allclose(np.asarray(inv), np.linalg.inv(spd), rtol=1e-9)
+    np.testing.assert_allclose(float(logdet), np.linalg.slogdet(spd)[1],
+                               rtol=1e-9)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_centralized_em_monotone(seed):
+    rng = np.random.default_rng(seed)
+    d, m, n = 10, 3, 60
+    x = jnp.asarray(rng.normal(size=(d, n)))
+    nmom, sx, sxx = moments_ref(x, jnp.ones(n))
+    lam, gam, beta, es, eww, ewmu, ewa = _zeros_consensus(d, m)
+    w = jnp.asarray(rng.normal(size=(d, m)))
+    mu = jnp.asarray(rng.normal(size=d))
+    a = jnp.asarray(1.0)
+    prev = float(model.marginal_nll(nmom, sx, sxx, w, mu, a))
+    for _ in range(40):
+        w, mu, a, nll = model.node_update_from_moments(
+            nmom, sx, sxx, w, mu, a, lam, gam, beta, es, eww, ewmu, ewa)
+        assert float(nll) <= prev + 1e-7
+        prev = float(nll)
+
+
+def test_matches_tipping_bishop_optimum():
+    """EM must reach the analytic PPCA ML solution (Tipping & Bishop '99).
+
+    ML: μ* = sample mean; σ²* = mean of discarded eigenvalues of sample
+    covariance; NLL* computable in closed form from the eigenvalues.
+    """
+    rng = np.random.default_rng(42)
+    d, m, n = 12, 4, 400
+    w_true = rng.normal(size=(d, m))
+    z = rng.normal(size=(m, n))
+    x = w_true @ z + rng.normal(size=(d, 1)) + 0.3 * rng.normal(size=(d, n))
+
+    # the μ-update contracts toward the sample mean with factor
+    # λ/(λ + a⁻¹) ≈ 0.99 per sweep, so give EM room to converge fully
+    w, mu, a, nll = _run_centralized_em(jnp.asarray(x), m, iters=6000)
+
+    xbar = x.mean(axis=1)
+    np.testing.assert_allclose(np.asarray(mu), xbar, atol=1e-6)
+
+    s = np.cov(x, bias=True)
+    evals = np.sort(np.linalg.eigvalsh(s))[::-1]
+    sigma2_star = evals[m:].mean()
+    np.testing.assert_allclose(1.0 / float(a), sigma2_star, rtol=1e-5)
+
+    # analytic optimal NLL
+    ll_terms = d * np.log(2 * np.pi) + np.sum(np.log(evals[:m])) \
+        + (d - m) * np.log(sigma2_star) + m + (d - m)
+    nll_star = 0.5 * n * ll_terms
+    np.testing.assert_allclose(nll, nll_star, rtol=1e-8)
+
+
+def test_direct_equals_moments_path():
+    rng = np.random.default_rng(7)
+    d, m, n = 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(d, n)))
+    mask = jnp.asarray((rng.random(n) < 0.7).astype(np.float64))
+    w = jnp.asarray(rng.normal(size=(d, m)))
+    mu = jnp.asarray(rng.normal(size=d))
+    a = jnp.asarray(1.5)
+    lam = jnp.asarray(rng.normal(size=(d, m)) * 0.1)
+    gam = jnp.asarray(rng.normal(size=d) * 0.1)
+    beta = jnp.asarray(0.05)
+    es = jnp.asarray(20.0)
+    eww = jnp.asarray(rng.normal(size=(d, m)))
+    ewmu = jnp.asarray(rng.normal(size=d))
+    ewa = jnp.asarray(30.0)
+    nmom, sx, sxx = moments_ref(x, mask)
+    a_out = model.node_update_from_moments(nmom, sx, sxx, w, mu, a, lam, gam,
+                                           beta, es, eww, ewmu, ewa)
+    b_out = model.node_update_direct(x, mask, w, mu, a, lam, gam, beta, es,
+                                     eww, ewmu, ewa)
+    for p, q in zip(a_out, b_out):
+        np.testing.assert_allclose(np.asarray(p), np.asarray(q), rtol=1e-11)
+
+
+def test_consensus_terms_pull_parameters():
+    """With a huge penalty toward a target, W must move toward it."""
+    rng = np.random.default_rng(3)
+    d, m, n = 6, 2, 40
+    x = jnp.asarray(rng.normal(size=(d, n)))
+    nmom, sx, sxx = moments_ref(x, jnp.ones(n))
+    w = jnp.asarray(rng.normal(size=(d, m)))
+    w_target = jnp.asarray(rng.normal(size=(d, m)))
+    mu = jnp.asarray(rng.normal(size=d))
+    a = jnp.asarray(1.0)
+    eta = 1e7
+    # one neighbour with parameters w_target: Ση(W_i+W_j) = η(w + w_target)
+    w_new, _, _, _ = model.node_update_from_moments(
+        nmom, sx, sxx, w, mu, a,
+        jnp.zeros((d, m)), jnp.zeros(d), jnp.asarray(0.0),
+        jnp.asarray(eta), eta * (w + w_target),
+        eta * (mu + mu), jnp.asarray(eta * 2.0))
+    np.testing.assert_allclose(np.asarray(w_new),
+                               np.asarray((w + w_target) / 2), atol=1e-4)
+
+
+def test_a_update_positive():
+    """The noise precision stays positive under adversarial multipliers."""
+    rng = np.random.default_rng(9)
+    d, m, n = 5, 2, 30
+    x = jnp.asarray(rng.normal(size=(d, n)))
+    nmom, sx, sxx = moments_ref(x, jnp.ones(n))
+    for beta_v in (-50.0, 0.0, 50.0):
+        _, _, a_new, _ = model.node_update_from_moments(
+            nmom, sx, sxx, jnp.asarray(rng.normal(size=(d, m))),
+            jnp.asarray(rng.normal(size=d)), jnp.asarray(1.0),
+            jnp.zeros((d, m)), jnp.zeros(d), jnp.asarray(beta_v),
+            jnp.asarray(10.0), jnp.zeros((d, m)), jnp.zeros(d),
+            jnp.asarray(25.0))
+        assert float(a_new) > 0.0
+
+
+def test_marginal_nll_matches_dense_gaussian():
+    """Woodbury NLL equals the dense multivariate-normal evaluation."""
+    rng = np.random.default_rng(11)
+    d, m, n = 7, 3, 25
+    x = rng.normal(size=(d, n))
+    w = rng.normal(size=(d, m))
+    mu = rng.normal(size=d)
+    a = 2.5
+    nmom, sx, sxx = moments_ref(jnp.asarray(x), jnp.ones(n))
+    got = float(model.marginal_nll(nmom, sx, sxx, jnp.asarray(w),
+                                   jnp.asarray(mu), jnp.asarray(a)))
+    c = w @ w.T + np.eye(d) / a
+    xc = x - mu[:, None]
+    want = 0.5 * (n * d * np.log(2 * np.pi) + n * np.linalg.slogdet(c)[1]
+                  + np.trace(np.linalg.solve(c, xc @ xc.T)))
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_objective_batch_matches_scalar():
+    """The vmapped batch artifact must equal per-item marginal NLL."""
+    rng = np.random.default_rng(13)
+    d, m, n = 8, 2, 20
+    x = jnp.asarray(rng.normal(size=(d, n)))
+    nmom, sx, sxx = moments_ref(x, jnp.ones(n))
+    b = model.OBJECTIVE_BATCH
+    ws = jnp.asarray(rng.normal(size=(b, d, m)))
+    mus = jnp.asarray(rng.normal(size=(b, d)))
+    a_s = jnp.asarray(rng.uniform(0.2, 5.0, size=b))
+    batched = model.objective_batch_from_moments(nmom, sx, sxx, ws, mus, a_s)
+    for k in range(b):
+        want = float(model.marginal_nll(nmom, sx, sxx, ws[k], mus[k], a_s[k]))
+        np.testing.assert_allclose(float(batched[k]), want, rtol=1e-11)

@@ -1,0 +1,37 @@
+//! E3 end-to-end bench: full runs of one turntable object per setting
+//! (the figure regenerator's unit of work), native backend.
+
+use fadmm::data::turntable::TurntableSpec;
+use fadmm::dppca::InitStrategy;
+use fadmm::experiments::caltech::SETTINGS;
+use fadmm::experiments::common::{run_dppca, BackendChoice, DppcaSpec};
+use fadmm::penalty::{SchemeKind, SchemeParams};
+use fadmm::sfm;
+use fadmm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let object = TurntableSpec::default().generate("Standing", 42);
+    let data = sfm::ppca_input(&object.measurements);
+    let (baseline, _) = sfm::svd_structure(&object.measurements).unwrap();
+    let blocks = sfm::split_frames(&data, object.frames, 5);
+    let backend = BackendChoice::Native.build().unwrap();
+
+    for setting in SETTINGS {
+        for scheme in [SchemeKind::Fixed, SchemeKind::Nap] {
+            b.bench(
+                &format!("caltech Standing {}/tmax{} {}", setting.topo.name(),
+                         setting.t_max, scheme.name()),
+                || {
+                    let mut spec = DppcaSpec::new(
+                        blocks.clone(), 12, 3, setting.topo.build(5).unwrap(), scheme);
+                    spec.params = SchemeParams { t_max: setting.t_max, ..Default::default() };
+                    spec.init = InitStrategy::LocalPca;
+                    spec.max_iters = 200;
+                    spec.reference = Some(&baseline);
+                    black_box(run_dppca(&spec, backend.clone()).unwrap());
+                },
+            );
+        }
+    }
+}

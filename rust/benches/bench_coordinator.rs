@@ -1,0 +1,50 @@
+//! L3 coordination overhead: sequential engine vs threaded actors on the
+//! same quadratic consensus problem (the compute is trivial, so this
+//! isolates messaging/synchronization cost per iteration).
+
+use std::sync::Arc;
+
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::coordinator::{ThreadedConfig, ThreadedRunner};
+use fadmm::graph::Topology;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::{black_box, Bencher};
+use fadmm::util::rng::Pcg;
+
+const ITERS: usize = 200;
+
+fn main() {
+    let mut b = Bencher::from_env();
+    for n in [8usize, 20] {
+        b.bench(&format!("sequential {n} nodes × {ITERS} iters"), || {
+            let mut rng = Pcg::seed(3);
+            let nodes: Vec<QuadraticNode> =
+                (0..n).map(|_| QuadraticNode::random(4, &mut rng)).collect();
+            let mut engine = Engine::new(Topology::Complete.build(n).unwrap(), nodes,
+                                         EngineConfig {
+                                             scheme: SchemeKind::Ap,
+                                             tol: 0.0,
+                                             max_iters: ITERS,
+                                             ..Default::default()
+                                         });
+            black_box(engine.run());
+        });
+        b.bench(&format!("threaded   {n} nodes × {ITERS} iters"), || {
+            let runner = ThreadedRunner::new(Topology::Complete.build(n).unwrap(),
+                                             ThreadedConfig {
+                                                 scheme: SchemeKind::Ap,
+                                                 tol: 0.0,
+                                                 max_iters: ITERS,
+                                                 ..Default::default()
+                                             });
+            let report = runner
+                .run(Arc::new(|i| {
+                    let mut rng = Pcg::seed(3 + i as u64);
+                    QuadraticNode::random(4, &mut rng)
+                }), |_, _| 0.0)
+                .unwrap();
+            black_box(report);
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! E1/E2 end-to-end bench: one full consensus iteration of the Fig. 2
+//! synthetic configuration (per scheme, per backend). Figure-level cost =
+//! per-iteration latency × the median iteration counts in
+//! results/fig2_summary.csv.
+
+use fadmm::data::{even_split, SubspaceSpec};
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::dppca::DppcaSolver;
+use fadmm::experiments::common::BackendChoice;
+use fadmm::linalg::Mat;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::Bencher;
+use fadmm::util::rng::Pcg;
+
+fn build_engine(j: usize, scheme: SchemeKind, backend: BackendChoice)
+                -> Engine<DppcaSolver> {
+    let data = SubspaceSpec::default().generate(&mut Pcg::seed(7));
+    let part = even_split(500, j);
+    let shared = backend.build().expect("backend");
+    let solvers: Vec<DppcaSolver> = part
+        .ranges
+        .iter()
+        .map(|&(lo, hi)| {
+            DppcaSolver::from_padded_block(&data.x.col_slice(lo, hi), part.padded,
+                                           5, shared.clone())
+                .unwrap()
+        })
+        .collect();
+    Engine::new(fadmm::graph::Topology::Complete.build(j).unwrap(), solvers,
+                EngineConfig { scheme, max_iters: usize::MAX, tol: 0.0,
+                               ..Default::default() })
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let have_artifacts =
+        fadmm::runtime::Manifest::default_dir().join("manifest.json").exists();
+    for backend in [BackendChoice::Native, BackendChoice::Xla] {
+        if backend == BackendChoice::Xla && !have_artifacts {
+            println!("(xla skipped: run `make artifacts`)");
+            continue;
+        }
+        for scheme in [SchemeKind::Fixed, SchemeKind::Vp, SchemeKind::Nap] {
+            let mut engine = build_engine(20, scheme, backend);
+            let mut t = 0usize;
+            b.bench(&format!("fig2 J=20 iter {:?}/{}", backend, scheme.name()), || {
+                engine.step(t, &mut |_, _| 0.0);
+                t += 1;
+            });
+        }
+    }
+}

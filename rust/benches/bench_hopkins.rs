@@ -1,0 +1,29 @@
+//! E4 end-to-end bench: a 6-object slice of the trajectory corpus per
+//! scheme (the table regenerator's unit of work), native backend.
+
+use fadmm::experiments::common::BackendChoice;
+use fadmm::experiments::hopkins::{run, HopkinsConfig};
+use fadmm::graph::Topology;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    for scheme in [SchemeKind::Fixed, SchemeKind::Vp, SchemeKind::VpAp] {
+        b.bench(&format!("hopkins 6-object slice {}", scheme.name()), || {
+            let dir = std::env::temp_dir().join("fadmm_bench_hopkins");
+            let cfg = HopkinsConfig {
+                objects: 6,
+                seeds: 1,
+                max_iters: 300,
+                backend: BackendChoice::Native,
+                schemes: vec![scheme],
+                topologies: vec![Topology::Complete],
+                degenerate_frac: 0.0,
+                ..Default::default()
+            };
+            black_box(run(&cfg, &dir).unwrap());
+            std::fs::remove_dir_all(&dir).ok();
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! Hot-path microbenchmarks: the per-node compute operations on both
+//! backends, across the experiment shapes. This is the L1/L2-side profile
+//! that drives EXPERIMENTS.md §Perf.
+//!
+//!     cargo bench --bench bench_node_update
+//!     FADMM_BENCH_FAST=1 cargo bench   # CI smoke settings
+
+use fadmm::dppca::PpcaParams;
+use fadmm::linalg::Mat;
+use fadmm::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
+use fadmm::util::bench::{black_box, Bencher};
+use fadmm::util::rng::Pcg;
+
+fn inputs(d: usize, m: usize, n: usize)
+          -> (Mat, Vec<f64>, PpcaParams, PpcaParams, f64, PpcaParams) {
+    let mut rng = Pcg::seed(1);
+    let x = Mat::randn(d, n, &mut rng);
+    let mask = vec![1.0; n];
+    let params = PpcaParams { w: Mat::randn(d, m, &mut rng), mu: rng.normal_vec(d), a: 1.0 };
+    let mult = PpcaParams::zeros(d, m);
+    let eta_sum = 20.0;
+    let eta_w = PpcaParams {
+        w: params.w.scale(2.0 * eta_sum),
+        mu: params.mu.iter().map(|v| 2.0 * eta_sum * v).collect(),
+        a: 2.0 * eta_sum,
+    };
+    (x, mask, params, mult, eta_sum, eta_w)
+}
+
+fn bench_backend(b: &mut Bencher, label: &str, backend: &mut dyn Backend,
+                 d: usize, m: usize, n: usize) {
+    let (x, mask, params, mult, eta_sum, eta_w) = inputs(d, m, n);
+    let mom = backend.moments(&x, &mask).unwrap();
+    b.bench(&format!("{label}/moments d{d} n{n}"), || {
+        black_box(backend.moments(&x, &mask).unwrap());
+    });
+    b.bench(&format!("{label}/node_update d{d} m{m}"), || {
+        black_box(backend.node_update(&mom, &params, &mult, eta_sum, &eta_w).unwrap());
+    });
+    b.bench(&format!("{label}/objective d{d} m{m}"), || {
+        black_box(backend.objective(&mom, &params).unwrap());
+    });
+    b.bench(&format!("{label}/estep_z d{d} m{m} n{n}"), || {
+        black_box(backend.estep_z(&x, &mask, &params).unwrap());
+    });
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let shapes = [(20usize, 5usize, 25usize), (120, 3, 12)];
+
+    println!("== native backend ==");
+    let mut native = NativeBackend::new();
+    for (d, m, n) in shapes {
+        bench_backend(&mut b, "native", &mut native, d, m, n);
+    }
+
+    if Manifest::default_dir().join("manifest.json").exists() {
+        println!("== xla backend (PJRT, AOT artifacts) ==");
+        let mut xla = XlaBackend::from_default_dir().expect("xla backend");
+        for (d, m, n) in shapes {
+            xla.warmup(d, m, n).unwrap();
+            bench_backend(&mut b, "xla", &mut xla, d, m, n);
+        }
+    } else {
+        println!("(xla backend skipped: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,34 @@
+//! Penalty-scheme update cost per scheme (L3 scheduler overhead).
+//! The schemes run once per node per iteration, so this must stay
+//! negligible next to the node update.
+
+use fadmm::penalty::{make_scheme, NodeObservation, SchemeKind, SchemeParams};
+use fadmm::util::bench::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let p = SchemeParams::default();
+    for deg in [2usize, 19] {
+        let f_nb: Vec<f64> = (0..deg).map(|k| 100.0 + k as f64).collect();
+        for kind in SchemeKind::ALL {
+            let mut scheme = make_scheme(kind, p, deg);
+            let mut eta = vec![p.eta0; deg];
+            let mut t = 0usize;
+            b.bench(&format!("{}/deg{deg}", kind.name()), || {
+                let obs = NodeObservation {
+                    t,
+                    primal_norm: 1.0,
+                    dual_norm: 0.5,
+                    global_primal: 1.0,
+                    global_dual: 0.5,
+                    f_self: 101.0,
+                    f_self_prev: 102.0,
+                    f_neighbors: &f_nb,
+                };
+                scheme.update(&obs, &mut eta);
+                t = (t + 1) % 50; // keep pre-t_max behaviour hot
+                black_box(&eta);
+            });
+        }
+    }
+}

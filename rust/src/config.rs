@@ -1,0 +1,204 @@
+//! CLI argument parsing and JSON run configuration.
+//!
+//! clap is unavailable offline; this is a deliberately small
+//! `--key value` / `--flag` parser plus a JSON-driven single-run config
+//! for the `repro run` subcommand.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::graph::Topology;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::util::json::Json;
+
+/// Parsed command line: one subcommand, positionals, `--key value` options
+/// and `--flag` booleans.
+#[derive(Debug, Clone, Default)]
+pub struct CliArgs {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl CliArgs {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    /// `known_flags` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, known_flags: &[&str])
+                                                 -> Result<CliArgs> {
+        let mut out = CliArgs::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.next() {
+            if first.starts_with("--") {
+                return Err(Error::Config(format!("expected subcommand, got '{first}'")));
+            }
+            out.subcommand = first;
+        }
+        while let Some(arg) = it.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if known_flags.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    let value = it.next().ok_or_else(|| {
+                        Error::Config(format!("option --{key} needs a value"))
+                    })?;
+                    out.options.insert(key.to_string(), value);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated scheme list (`--schemes vp,ap`) or the paper set.
+    pub fn schemes(&self) -> Result<Vec<SchemeKind>> {
+        match self.get("schemes") {
+            None => Ok(SchemeKind::PAPER.to_vec()),
+            Some(spec) => spec.split(',').map(|s| SchemeKind::parse(s.trim())).collect(),
+        }
+    }
+}
+
+/// JSON-driven single-run configuration for `repro run --config cfg.json`.
+///
+/// ```json
+/// {
+///   "problem": "synthetic",        // synthetic | turntable | trajectory
+///   "nodes": 20, "topology": "ring", "scheme": "admm-nap",
+///   "eta0": 10.0, "t_max": 50, "budget": 1.0, "alpha": 0.5, "beta": 0.1,
+///   "seed": 0, "max_iters": 400, "tol": 1e-3, "backend": "xla"
+/// }
+/// ```
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub problem: String,
+    pub nodes: usize,
+    pub topology: Topology,
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    pub seed: u64,
+    pub max_iters: usize,
+    pub tol: f64,
+    pub backend: String,
+}
+
+impl RunConfig {
+    pub fn from_file(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("read {}", path.display()), e))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunConfig> {
+        let s = |key: &str, default: &str| -> String {
+            j.get(key).and_then(Json::as_str).unwrap_or(default).to_string()
+        };
+        let f = |key: &str, default: f64| -> f64 {
+            j.get(key).and_then(Json::as_f64).unwrap_or(default)
+        };
+        let defaults = SchemeParams::default();
+        Ok(RunConfig {
+            problem: s("problem", "synthetic"),
+            nodes: f("nodes", 20.0) as usize,
+            topology: Topology::parse(&s("topology", "complete"))?,
+            scheme: SchemeKind::parse(&s("scheme", "admm-nap"))?,
+            params: SchemeParams {
+                eta0: f("eta0", defaults.eta0),
+                mu: f("mu", defaults.mu),
+                tau: f("tau", defaults.tau),
+                t_max: f("t_max", defaults.t_max as f64) as usize,
+                budget: f("budget", defaults.budget),
+                alpha: f("alpha", defaults.alpha),
+                beta: f("beta", defaults.beta),
+                ..defaults
+            },
+            seed: f("seed", 0.0) as u64,
+            max_iters: f("max_iters", 400.0) as usize,
+            tol: f("tol", 1e-3),
+            backend: s("backend", "xla"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> CliArgs {
+        CliArgs::parse(s.split_whitespace().map(String::from), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = args("fig2 --seeds 5 --axis size --verbose extra");
+        assert_eq!(a.subcommand, "fig2");
+        assert_eq!(a.get("seeds"), Some("5"));
+        assert_eq!(a.get_usize("seeds", 20).unwrap(), 5);
+        assert_eq!(a.get_or("axis", "all"), "size");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn rejects_missing_value_and_bad_numbers() {
+        assert!(CliArgs::parse(["x".to_string(), "--seeds".to_string()], &[]).is_err());
+        let a = args("x --seeds five");
+        assert!(a.get_usize("seeds", 1).is_err());
+    }
+
+    #[test]
+    fn schemes_parsing() {
+        assert_eq!(args("x").schemes().unwrap().len(), SchemeKind::PAPER.len());
+        let picked = args("x --schemes vp,ap").schemes().unwrap();
+        assert_eq!(picked, vec![SchemeKind::Vp, SchemeKind::Ap]);
+        assert!(args("x --schemes bogus").schemes().is_err());
+    }
+
+    #[test]
+    fn run_config_from_json() {
+        let j = Json::parse(
+            r#"{"problem":"synthetic","nodes":12,"topology":"ring",
+                "scheme":"admm-vp+ap","eta0":5.0,"t_max":25,"backend":"native"}"#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.nodes, 12);
+        assert_eq!(cfg.topology, Topology::Ring);
+        assert_eq!(cfg.scheme, SchemeKind::VpAp);
+        assert_eq!(cfg.params.eta0, 5.0);
+        assert_eq!(cfg.params.t_max, 25);
+        assert_eq!(cfg.backend, "native");
+    }
+}

@@ -1,0 +1,424 @@
+//! Decentralized consensus-ADMM engine.
+//!
+//! Solves `min Σ_i f_i(θ_i)  s.t.  θ_i = ρ_ij, ρ_ij = θ_j (j ∈ B_i)` by
+//! the bridge-variable-eliminated ADMM of Forero et al. / Yoon & Pavlovic,
+//! generalized to *per-edge, per-iteration* penalties η_ij (this paper):
+//!
+//! ```text
+//! θ_i^{t+1} = argmin_θ f_i(θ) + 2λ_iᵀθ + Σ_j η_ij ‖θ − (θ_i^t + θ_j^t)/2‖²
+//! λ_i^{t+1} = λ_i^t + ½ Σ_j η̄_ij (θ_i^{t+1} − θ_j^{t+1})
+//! η_ij^{t+1} = scheme(observations)            // the paper's contribution
+//! ```
+//!
+//! **Dual symmetrization** (η̄_ij = (η_ij + η_ji)/2): with per-edge
+//! penalties the two directions of an edge may disagree (AP/NAP adapt
+//! η_ij from node i's local objective). Deriving ADMM from the paper's
+//! full bridge-variable Lagrangian (eq. 3) keeps the two per-edge
+//! multipliers equal, and they aggregate into λ_i with the *edge-mean*
+//! penalty — using the raw directed η_ij there instead silently breaks
+//! the Σ_i λ_i = 0 invariant and ADMM drifts to a biased fixed point
+//! (caught by `multipliers_sum_to_zero*` and the central-optimum tests).
+//! The primal solve keeps the node's own directed η_ij, which is exactly
+//! the paper's per-edge emphasis mechanism; η̄ requires neighbours to
+//! include their η_ji in the broadcast — one extra scalar per message,
+//! still fully decentralized.
+//!
+//! The engine is generic over a [`LocalSolver`] (the `argmin` above): pure
+//! Rust closed forms for the convex demos ([`solvers`]), or the lowered
+//! XLA artifact for D-PPCA ([`crate::dppca`]). All parameters are handled
+//! as flat `Vec<f64>`s; structured applications flatten/unflatten at the
+//! solver boundary.
+//!
+//! This sequential engine performs exactly the computation+communication
+//! schedule of the distributed algorithm (Jacobi-style simultaneous node
+//! updates followed by neighbour broadcast); [`crate::coordinator`] runs
+//! the same schedule on real threads with message passing.
+
+pub mod solvers;
+
+use crate::graph::Graph;
+use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind, SchemeParams};
+use crate::util::rng::Pcg;
+
+/// A node's local optimization oracle.
+pub trait LocalSolver {
+    /// Flattened parameter dimension (identical across nodes).
+    fn dim(&self) -> usize;
+
+    /// Initial θ_i (random restarts are seeded through `rng`).
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64>;
+
+    /// Local objective f_i(θ) — must be evaluable at *foreign* parameters
+    /// (the AP/NAP schemes score neighbour estimates with it).
+    fn objective(&mut self, theta: &[f64]) -> f64;
+
+    /// Score several foreign parameter vectors at once. Backed solvers
+    /// override this to fold the whole neighbourhood into one executable
+    /// dispatch (EXPERIMENTS.md §Perf); the default loops.
+    fn objective_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        thetas.iter().map(|t| self.objective(t)).collect()
+    }
+
+    /// The penalized local update:
+    /// `argmin_θ f_i(θ) + 2λᵀθ + (Ση_ij)‖θ‖² − θᵀ(Ση_ij(θ_i+θ_j)) + const`
+    /// where `eta_sum = Σ_j η_ij` and `eta_wsum = Σ_j η_ij (θ_i + θ_j)`.
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64>;
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    /// relative objective-change tolerance (paper: 1e-3)
+    pub tol: f64,
+    /// consecutive under-tolerance iterations required
+    pub patience: usize,
+    /// iterations before convergence checking starts
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            scheme: SchemeKind::Fixed,
+            params: SchemeParams::default(),
+            tol: 1e-3,
+            patience: 3,
+            warmup: 5,
+            max_iters: 1000,
+            seed: 0,
+        }
+    }
+}
+
+/// Result of a run.
+#[derive(Debug)]
+pub struct RunReport {
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+    /// final parameters per node
+    pub thetas: Vec<Vec<f64>>,
+}
+
+/// The consensus engine (see module docs).
+pub struct Engine<S: LocalSolver> {
+    graph: Graph,
+    solvers: Vec<S>,
+    cfg: EngineConfig,
+    thetas: Vec<Vec<f64>>,
+    lambdas: Vec<Vec<f64>>,
+    /// per node, per neighbour-slot penalties η_ij
+    etas: Vec<Vec<f64>>,
+    schemes: Vec<Box<dyn PenaltyScheme>>,
+    /// rev_slot[i][slot] = position of node i in neighbour j's adjacency
+    /// list (for the symmetrized dual step; see module docs)
+    rev_slot: Vec<Vec<usize>>,
+    nbr_mean_prev: Vec<Vec<f64>>,
+    global_mean_prev: Vec<f64>,
+    f_self_prev: Vec<f64>,
+    // reusable scratch (hot-loop allocation hygiene, see DESIGN.md §Perf)
+    scratch_new_thetas: Vec<Vec<f64>>,
+    scratch_eta_wsum: Vec<f64>,
+    /// per-neighbour midpoint buffers, grown to max degree and reused
+    scratch_rhos: Vec<Vec<f64>>,
+}
+
+impl<S: LocalSolver> Engine<S> {
+    /// Build an engine; one solver per graph node.
+    pub fn new(graph: Graph, mut solvers: Vec<S>, cfg: EngineConfig) -> Self {
+        assert_eq!(graph.len(), solvers.len(), "one solver per node");
+        assert!(!solvers.is_empty());
+        let dim = solvers[0].dim();
+        assert!(solvers.iter().all(|s| s.dim() == dim), "homogeneous dims");
+        let mut rng = Pcg::new(cfg.seed, 0xE191E);
+        let thetas: Vec<Vec<f64>> = solvers
+            .iter_mut()
+            .map(|s| {
+                let th = s.initial_param(&mut rng);
+                assert_eq!(th.len(), dim);
+                th
+            })
+            .collect();
+        let n = graph.len();
+        let schemes = (0..n)
+            .map(|i| make_scheme(cfg.scheme, cfg.params, graph.degree(i)))
+            .collect();
+        let etas = (0..n)
+            .map(|i| vec![cfg.params.eta0; graph.degree(i)])
+            .collect();
+        let rev_slot = (0..n)
+            .map(|i| {
+                graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&j| graph.edge_slot(j, i).expect("graph symmetry"))
+                    .collect()
+            })
+            .collect();
+        Engine {
+            rev_slot,
+            lambdas: vec![vec![0.0; dim]; n],
+            nbr_mean_prev: vec![vec![0.0; dim]; n],
+            global_mean_prev: vec![0.0; dim],
+            f_self_prev: vec![f64::INFINITY; n],
+            scratch_new_thetas: vec![vec![0.0; dim]; n],
+            scratch_eta_wsum: vec![0.0; dim],
+            scratch_rhos: {
+                let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
+                vec![vec![0.0; dim]; max_deg]
+            },
+            etas,
+            schemes,
+            thetas,
+            solvers,
+            graph,
+            cfg,
+        }
+    }
+
+    /// Current per-node parameters.
+    pub fn thetas(&self) -> &[Vec<f64>] {
+        &self.thetas
+    }
+
+    /// Current per-node out-edge penalties (neighbour-slot order).
+    pub fn etas(&self) -> &[Vec<f64>] {
+        &self.etas
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Run to convergence or `max_iters`; no application metric.
+    pub fn run(&mut self) -> RunReport {
+        self.run_with(|_, _| 0.0)
+    }
+
+    /// Run with an application-metric callback, invoked once per iteration
+    /// with (iteration, thetas); its return value lands in
+    /// [`IterStats::app_error`] (the paper's plotted subspace angle).
+    pub fn run_with(&mut self, mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64)
+                    -> RunReport {
+        let mut recorder = Recorder::new();
+        let mut checker = ConvergenceChecker::new(self.cfg.tol)
+            .with_patience(self.cfg.patience)
+            .with_warmup(self.cfg.warmup);
+        let mut converged = false;
+        let mut iterations = 0;
+        for t in 0..self.cfg.max_iters {
+            let stats = self.step(t, &mut app_metric);
+            let objective = stats.objective;
+            recorder.push(stats);
+            iterations = t + 1;
+            if checker.update(objective) {
+                converged = true;
+                break;
+            }
+        }
+        RunReport {
+            iterations,
+            converged,
+            recorder,
+            thetas: self.thetas.clone(),
+        }
+    }
+
+    /// One full ADMM iteration; public so the benches can drive the hot
+    /// loop directly.
+    pub fn step(&mut self, t: usize,
+                app_metric: &mut impl FnMut(usize, &[Vec<f64>]) -> f64) -> IterStats {
+        let n = self.graph.len();
+        let dim = self.thetas[0].len();
+
+        // ---- local solves (Jacobi: all nodes see iteration-t neighbours) --
+        for i in 0..n {
+            let mut eta_sum = 0.0;
+            self.scratch_eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+            for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                let eta = self.etas[i][slot];
+                eta_sum += eta;
+                let ti = &self.thetas[i];
+                let tj = &self.thetas[j];
+                for k in 0..dim {
+                    self.scratch_eta_wsum[k] += eta * (ti[k] + tj[k]);
+                }
+            }
+            let new = self.solvers[i].solve(
+                &self.thetas[i], &self.lambdas[i], eta_sum, &self.scratch_eta_wsum);
+            debug_assert_eq!(new.len(), dim);
+            self.scratch_new_thetas[i] = new;
+        }
+
+        // ---- broadcast -----------------------------------------------------
+        std::mem::swap(&mut self.thetas, &mut self.scratch_new_thetas);
+
+        // ---- multiplier updates: λ_i += ½ Σ_j η̄_ij (θ_i − θ_j) ------------
+        // (η̄ = edge-mean penalty — see module docs on dual symmetrization)
+        for i in 0..n {
+            for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                let eta = 0.5 * (self.etas[i][slot] + self.etas[j][self.rev_slot[i][slot]]);
+                let (ti, tj) = (&self.thetas[i], &self.thetas[j]);
+                let li = &mut self.lambdas[i];
+                for k in 0..dim {
+                    li[k] += 0.5 * eta * (ti[k] - tj[k]);
+                }
+            }
+        }
+
+        // ---- residuals (paper eq. 5) ---------------------------------------
+        let mut max_primal: f64 = 0.0;
+        let mut max_dual: f64 = 0.0;
+        let mut primal_norms = vec![0.0; n];
+        let mut dual_norms = vec![0.0; n];
+        for i in 0..n {
+            let deg = self.graph.degree(i).max(1) as f64;
+            let mut nbr_mean = vec![0.0; dim];
+            for &j in self.graph.neighbors(i) {
+                for k in 0..dim {
+                    nbr_mean[k] += self.thetas[j][k];
+                }
+            }
+            nbr_mean.iter_mut().for_each(|x| *x /= deg);
+            let eta_bar = mean_slice(&self.etas[i]).unwrap_or(self.cfg.params.eta0);
+            let mut r2 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..dim {
+                let r = self.thetas[i][k] - nbr_mean[k];
+                let s = eta_bar * (nbr_mean[k] - self.nbr_mean_prev[i][k]);
+                r2 += r * r;
+                s2 += s * s;
+            }
+            primal_norms[i] = r2.sqrt();
+            dual_norms[i] = s2.sqrt();
+            max_primal = max_primal.max(primal_norms[i]);
+            max_dual = max_dual.max(dual_norms[i]);
+            self.nbr_mean_prev[i] = nbr_mean;
+        }
+
+        // ---- global residuals (for the RB reference scheme) ----------------
+        let mut global_mean = vec![0.0; dim];
+        for th in &self.thetas {
+            for k in 0..dim {
+                global_mean[k] += th[k];
+            }
+        }
+        global_mean.iter_mut().for_each(|x| *x /= n as f64);
+        let mut gr2 = 0.0;
+        for th in &self.thetas {
+            for k in 0..dim {
+                let d = th[k] - global_mean[k];
+                gr2 += d * d;
+            }
+        }
+        let mut gs2 = 0.0;
+        for k in 0..dim {
+            let d = global_mean[k] - self.global_mean_prev[k];
+            gs2 += d * d;
+        }
+        let eta_global = self.cfg.params.eta0;
+        let global_primal = gr2.sqrt();
+        let global_dual = eta_global * (n as f64).sqrt() * gs2.sqrt();
+        self.global_mean_prev = global_mean;
+
+        // ---- objectives ------------------------------------------------------
+        let mut objective = 0.0;
+        let mut f_self = vec![0.0; n];
+        for i in 0..n {
+            f_self[i] = self.solvers[i].objective(&self.thetas[i]);
+            objective += f_self[i];
+        }
+
+        // ---- penalty scheme updates (the paper's contribution) --------------
+        let mut f_nb_buf: Vec<f64> = Vec::new();
+        for i in 0..n {
+            f_nb_buf.clear();
+            if self.schemes[i].needs_neighbor_objectives() {
+                // evaluate f_i at every ρ_ij = (θ_i + θ_j)/2 in one batched
+                // call — the paper uses the bridge estimate instead of θ_j
+                // to retain locality
+                let deg = self.graph.degree(i);
+                for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                    let rho = &mut self.scratch_rhos[slot];
+                    for k in 0..dim {
+                        rho[k] = 0.5 * (self.thetas[i][k] + self.thetas[j][k]);
+                    }
+                }
+                f_nb_buf = self.solvers[i].objective_batch(&self.scratch_rhos[..deg]);
+            } else {
+                f_nb_buf.resize(self.graph.degree(i), 0.0);
+            }
+            let obs = NodeObservation {
+                t,
+                primal_norm: primal_norms[i],
+                dual_norm: dual_norms[i],
+                global_primal,
+                global_dual,
+                f_self: f_self[i],
+                f_self_prev: self.f_self_prev[i],
+                f_neighbors: &f_nb_buf,
+            };
+            self.schemes[i].update(&obs, &mut self.etas[i]);
+            self.f_self_prev[i] = f_self[i];
+        }
+
+        // ---- stats -----------------------------------------------------------
+        let (mut min_eta, mut max_eta, mut sum_eta, mut cnt) =
+            (f64::INFINITY, 0.0f64, 0.0, 0usize);
+        for e in self.etas.iter().flatten() {
+            min_eta = min_eta.min(*e);
+            max_eta = max_eta.max(*e);
+            sum_eta += *e;
+            cnt += 1;
+        }
+        IterStats {
+            iter: t,
+            objective,
+            max_primal,
+            max_dual,
+            mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
+            min_eta: if cnt == 0 { 0.0 } else { min_eta },
+            max_eta,
+            app_error: app_metric(t, &self.thetas),
+        }
+    }
+
+    /// Consensus disagreement: max_i ‖θ_i − θ̄‖₂ (test/diagnostic helper).
+    pub fn disagreement(&self) -> f64 {
+        let n = self.thetas.len();
+        let dim = self.thetas[0].len();
+        let mut mean = vec![0.0; dim];
+        for th in &self.thetas {
+            for k in 0..dim {
+                mean[k] += th[k] / n as f64;
+            }
+        }
+        self.thetas
+            .iter()
+            .map(|th| {
+                th.iter()
+                    .zip(&mean)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .fold(0.0, f64::max)
+    }
+}
+
+fn mean_slice(xs: &[f64]) -> Option<f64> {
+    if xs.is_empty() {
+        None
+    } else {
+        Some(xs.iter().sum::<f64>() / xs.len() as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,242 @@
+//! Pure-Rust [`LocalSolver`]s for convex consensus problems.
+//!
+//! These exercise the engine end-to-end without artifacts and back the
+//! quickstart/lasso examples. Each solves the penalized subproblem
+//! `argmin f(θ) + 2λᵀθ + (Ση)‖θ‖² − θᵀw + const`, `w = Ση_ij(θ_i+θ_j)`.
+
+use super::LocalSolver;
+use crate::linalg::{Cholesky, Mat};
+use crate::util::rng::Pcg;
+
+/// Distributed least squares: f_i(θ) = ½‖A_iθ − b_i‖².
+pub struct LeastSquaresNode {
+    ata: Mat,
+    atb: Vec<f64>,
+    a: Mat,
+    b: Vec<f64>,
+}
+
+impl LeastSquaresNode {
+    pub fn new(a: Mat, b: Vec<f64>) -> Self {
+        assert_eq!(a.rows(), b.len());
+        LeastSquaresNode { ata: a.t_matmul(&a), atb: a.t_matvec(&b), a, b }
+    }
+}
+
+impl LocalSolver for LeastSquaresNode {
+    fn dim(&self) -> usize {
+        self.ata.rows()
+    }
+
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64> {
+        rng.normal_vec(self.dim())
+    }
+
+    fn objective(&mut self, theta: &[f64]) -> f64 {
+        let r = self.a.matvec(theta);
+        0.5 * r.iter().zip(&self.b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+    }
+
+    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64> {
+        // (AᵀA + 2Ση·I) θ = Aᵀb − 2λ + w
+        let d = self.dim();
+        let mut lhs = self.ata.clone();
+        for i in 0..d {
+            lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
+        }
+        let rhs: Vec<f64> = (0..d)
+            .map(|k| self.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
+            .collect();
+        Cholesky::new(&lhs).expect("LS normal equations SPD").solve_vec(&rhs)
+    }
+}
+
+/// Distributed ridge regression: f_i(θ) = ½‖A_iθ − b_i‖² + (ω/2)‖θ‖².
+pub struct RidgeNode {
+    inner: LeastSquaresNode,
+    omega: f64,
+}
+
+impl RidgeNode {
+    pub fn new(a: Mat, b: Vec<f64>, omega: f64) -> Self {
+        assert!(omega >= 0.0);
+        RidgeNode { inner: LeastSquaresNode::new(a, b), omega }
+    }
+}
+
+impl LocalSolver for RidgeNode {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64> {
+        rng.normal_vec(self.dim())
+    }
+
+    fn objective(&mut self, theta: &[f64]) -> f64 {
+        let l2: f64 = theta.iter().map(|x| x * x).sum();
+        self.inner.objective(theta) + 0.5 * self.omega * l2
+    }
+
+    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64> {
+        let d = self.dim();
+        let mut lhs = self.inner.ata.clone();
+        for i in 0..d {
+            lhs[(i, i)] += self.omega + 2.0 * eta_sum + 1e-12;
+        }
+        let rhs: Vec<f64> = (0..d)
+            .map(|k| self.inner.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
+            .collect();
+        Cholesky::new(&lhs).expect("ridge normal equations SPD").solve_vec(&rhs)
+    }
+}
+
+/// Distributed lasso: f_i(θ) = ½‖A_iθ − b_i‖² + ω‖θ‖₁, solved per
+/// iteration by cyclic coordinate descent on the penalized subproblem.
+pub struct LassoNode {
+    ata: Mat,
+    atb: Vec<f64>,
+    a: Mat,
+    b: Vec<f64>,
+    omega: f64,
+    /// inner coordinate-descent sweeps per ADMM iteration
+    sweeps: usize,
+}
+
+impl LassoNode {
+    pub fn new(a: Mat, b: Vec<f64>, omega: f64) -> Self {
+        assert!(omega >= 0.0);
+        LassoNode {
+            ata: a.t_matmul(&a),
+            atb: a.t_matvec(&b),
+            a,
+            b,
+            omega,
+            sweeps: 25,
+        }
+    }
+}
+
+fn soft_threshold(x: f64, k: f64) -> f64 {
+    if x > k {
+        x - k
+    } else if x < -k {
+        x + k
+    } else {
+        0.0
+    }
+}
+
+impl LocalSolver for LassoNode {
+    fn dim(&self) -> usize {
+        self.ata.rows()
+    }
+
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64> {
+        rng.normal_vec(self.dim())
+    }
+
+    fn objective(&mut self, theta: &[f64]) -> f64 {
+        let r = self.a.matvec(theta);
+        let l1: f64 = theta.iter().map(|x| x.abs()).sum();
+        0.5 * r.iter().zip(&self.b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+            + self.omega * l1
+    }
+
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64> {
+        // minimize ½θᵀQθ − cᵀθ + ω‖θ‖₁ with
+        // Q = AᵀA + 2Ση·I, c = Aᵀb − 2λ + w
+        let d = self.dim();
+        let mut th = theta.to_vec();
+        let q = &self.ata;
+        let diag: Vec<f64> = (0..d).map(|k| q[(k, k)] + 2.0 * eta_sum + 1e-12).collect();
+        let c: Vec<f64> = (0..d)
+            .map(|k| self.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
+            .collect();
+        for _ in 0..self.sweeps {
+            for k in 0..d {
+                // residual correlation excluding coordinate k
+                let mut qk_th = 0.0;
+                for j in 0..d {
+                    if j != k {
+                        qk_th += q[(k, j)] * th[j];
+                    }
+                }
+                th[k] = soft_threshold(c[k] - qk_th, self.omega) / diag[k];
+            }
+        }
+        th
+    }
+}
+
+/// Generic strongly convex quadratic f(θ) = ½θᵀPθ − qᵀθ (+ c). Used by the
+/// engine tests: the centralized optimum (ΣP)⁻¹Σq is known in closed form.
+pub struct QuadraticNode {
+    pub p: Mat,
+    pub q: Vec<f64>,
+}
+
+impl QuadraticNode {
+    pub fn new(p: Mat, q: Vec<f64>) -> Self {
+        assert_eq!(p.rows(), p.cols());
+        assert_eq!(p.rows(), q.len());
+        QuadraticNode { p, q }
+    }
+
+    /// Random SPD instance.
+    pub fn random(dim: usize, rng: &mut Pcg) -> Self {
+        let b = Mat::randn(dim, dim, rng);
+        let mut p = b.t_matmul(&b);
+        for i in 0..dim {
+            p[(i, i)] += 1.0;
+        }
+        QuadraticNode { p, q: rng.normal_vec(dim) }
+    }
+
+    /// Centralized optimum of Σ_i f_i for a set of nodes.
+    pub fn central_optimum(nodes: &[QuadraticNode]) -> Vec<f64> {
+        let d = nodes[0].q.len();
+        let mut p_sum = Mat::zeros(d, d);
+        let mut q_sum = vec![0.0; d];
+        for n in nodes {
+            p_sum += &n.p;
+            for k in 0..d {
+                q_sum[k] += n.q[k];
+            }
+        }
+        Cholesky::new(&p_sum).unwrap().solve_vec(&q_sum)
+    }
+}
+
+impl LocalSolver for QuadraticNode {
+    fn dim(&self) -> usize {
+        self.q.len()
+    }
+
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64> {
+        rng.normal_vec(self.dim())
+    }
+
+    fn objective(&mut self, theta: &[f64]) -> f64 {
+        let pt = self.p.matvec(theta);
+        0.5 * crate::linalg::Mat::col_vec(theta).fro_dot(&Mat::col_vec(&pt))
+            - theta.iter().zip(&self.q).map(|(a, b)| a * b).sum::<f64>()
+    }
+
+    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64> {
+        // (P + 2Ση·I) θ = q − 2λ + w
+        let d = self.dim();
+        let mut lhs = self.p.clone();
+        for i in 0..d {
+            lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
+        }
+        let rhs: Vec<f64> = (0..d)
+            .map(|k| self.q[k] - 2.0 * lambda[k] + eta_wsum[k])
+            .collect();
+        Cholesky::new(&lhs).expect("quadratic SPD").solve_vec(&rhs)
+    }
+}

@@ -1,0 +1,293 @@
+//! Engine correctness: convergence to centralized optima across schemes
+//! and topologies; structural invariants of the ADMM loop.
+
+use super::solvers::*;
+use super::*;
+use crate::graph::Topology;
+use crate::linalg::Mat;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::util::prop;
+use crate::util::rng::Pcg;
+
+fn quad_nodes(n: usize, dim: usize, seed: u64) -> Vec<QuadraticNode> {
+    let mut rng = Pcg::seed(seed);
+    (0..n).map(|_| QuadraticNode::random(dim, &mut rng)).collect()
+}
+
+fn run_quadratic(scheme: SchemeKind, topo: Topology, n: usize, seed: u64)
+                 -> (RunReport, Vec<f64>, f64) {
+    let nodes = quad_nodes(n, 3, seed);
+    let optimum = QuadraticNode::central_optimum(&nodes);
+    let graph = topo.build(n).unwrap();
+    let cfg = EngineConfig {
+        scheme,
+        max_iters: 600,
+        tol: 1e-9, // tight: we check parameter error directly
+        seed,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(graph, nodes, cfg);
+    let report = engine.run();
+    let err = report
+        .thetas
+        .iter()
+        .map(|th| {
+            th.iter()
+                .zip(&optimum)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .fold(0.0f64, f64::max);
+    (report, optimum, err)
+}
+
+#[test]
+fn all_schemes_reach_central_optimum_complete_graph() {
+    for scheme in SchemeKind::ALL {
+        let (_, _, err) = run_quadratic(scheme, Topology::Complete, 8, 42);
+        assert!(err < 5e-4, "{scheme:?}: param error {err}");
+    }
+}
+
+#[test]
+fn all_schemes_reach_central_optimum_ring() {
+    for scheme in SchemeKind::ALL {
+        let (_, _, err) = run_quadratic(scheme, Topology::Ring, 8, 7);
+        assert!(err < 1e-3, "{scheme:?}: param error {err}");
+    }
+}
+
+#[test]
+fn cluster_topology_converges() {
+    for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Nap] {
+        let (_, _, err) = run_quadratic(scheme, Topology::Cluster, 10, 3);
+        assert!(err < 1e-3, "{scheme:?}: param error {err}");
+    }
+}
+
+#[test]
+fn engine_is_deterministic() {
+    let (r1, _, e1) = run_quadratic(SchemeKind::VpAp, Topology::Ring, 6, 11);
+    let (r2, _, e2) = run_quadratic(SchemeKind::VpAp, Topology::Ring, 6, 11);
+    assert_eq!(r1.iterations, r2.iterations);
+    assert_eq!(e1, e2);
+    assert_eq!(r1.thetas, r2.thetas);
+}
+
+#[test]
+fn multipliers_sum_to_zero_under_fixed_penalty() {
+    // with symmetric constant η, λ updates are antisymmetric across each
+    // edge, so Σ_i λ_i must remain 0 throughout
+    let nodes = quad_nodes(6, 3, 5);
+    let graph = Topology::Ring.build(6).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Fixed,
+        max_iters: 1,
+        ..Default::default()
+    });
+    for t in 0..40 {
+        engine.step(t, &mut |_, _| 0.0);
+        let dim = engine.thetas()[0].len();
+        for k in 0..dim {
+            let total: f64 = engine.lambdas.iter().map(|l| l[k]).sum();
+            assert!(total.abs() < 1e-8, "Σλ[{k}] = {total} at t={t}");
+        }
+    }
+}
+
+#[test]
+fn disagreement_shrinks() {
+    let nodes = quad_nodes(8, 3, 9);
+    let graph = Topology::Complete.build(8).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Ap,
+        max_iters: 1,
+        ..Default::default()
+    });
+    engine.step(0, &mut |_, _| 0.0);
+    let early = engine.disagreement();
+    for t in 1..120 {
+        engine.step(t, &mut |_, _| 0.0);
+    }
+    let late = engine.disagreement();
+    assert!(late < early * 1e-2, "disagreement {early} → {late}");
+}
+
+#[test]
+fn adaptive_schemes_at_least_as_fast_on_average() {
+    // the paper's headline: adaptive penalties converge in ≤ iterations of
+    // fixed ADMM on average (quadratic consensus, complete graph)
+    let mut fixed_total = 0usize;
+    let mut vp_total = 0usize;
+    for seed in 0..5 {
+        let (rf, _, _) = run_quadratic(SchemeKind::Fixed, Topology::Complete, 10, seed);
+        let (rv, _, _) = run_quadratic(SchemeKind::Vp, Topology::Complete, 10, seed);
+        fixed_total += rf.iterations;
+        vp_total += rv.iterations;
+    }
+    assert!(
+        vp_total as f64 <= fixed_total as f64 * 1.25,
+        "VP {vp_total} vs fixed {fixed_total}"
+    );
+}
+
+#[test]
+fn least_squares_consensus_recovers_global_fit() {
+    // distributed LS over row-partitioned data must match the pooled fit
+    let mut rng = Pcg::seed(21);
+    let dim = 4;
+    let theta_true = rng.normal_vec(dim);
+    let mut nodes = Vec::new();
+    let mut rows_all = Vec::new();
+    let mut b_all = Vec::new();
+    for _ in 0..6 {
+        let a = Mat::randn(12, dim, &mut rng);
+        let b: Vec<f64> = (0..12)
+            .map(|r| {
+                crate::linalg::Mat::col_vec(a.row(r)).fro_dot(&Mat::col_vec(&theta_true))
+                    + 0.01 * rng.normal()
+            })
+            .collect();
+        rows_all.extend_from_slice(a.data());
+        b_all.extend_from_slice(&b);
+        nodes.push(LeastSquaresNode::new(a, b));
+    }
+    let pooled_a = Mat::from_vec(6 * 12, dim, rows_all);
+    let pooled = {
+        let ata = pooled_a.t_matmul(&pooled_a);
+        let atb = pooled_a.t_matvec(&b_all);
+        crate::linalg::Cholesky::new(&ata).unwrap().solve_vec(&atb)
+    };
+    let graph = Topology::Ring.build(6).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Nap,
+        max_iters: 800,
+        tol: 1e-10,
+        ..Default::default()
+    });
+    let report = engine.run();
+    for th in &report.thetas {
+        for (a, b) in th.iter().zip(&pooled) {
+            assert!((a - b).abs() < 1e-3, "node param {a} vs pooled {b}");
+        }
+    }
+}
+
+#[test]
+fn lasso_consensus_sparsifies() {
+    // strong ℓ1 penalty must zero out noise coordinates consistently
+    let mut rng = Pcg::seed(31);
+    let dim = 6;
+    let mut theta_true = vec![0.0; dim];
+    theta_true[0] = 3.0;
+    theta_true[1] = -2.0;
+    let mut nodes = Vec::new();
+    for _ in 0..4 {
+        let a = Mat::randn(30, dim, &mut rng);
+        let b: Vec<f64> = (0..30)
+            .map(|r| {
+                Mat::col_vec(a.row(r)).fro_dot(&Mat::col_vec(&theta_true))
+                    + 0.05 * rng.normal()
+            })
+            .collect();
+        nodes.push(LassoNode::new(a, b, 8.0));
+    }
+    let graph = Topology::Complete.build(4).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Ap,
+        max_iters: 400,
+        ..Default::default()
+    });
+    let report = engine.run();
+    for th in &report.thetas {
+        assert!(th[0] > 1.0, "signal coord kept: {th:?}");
+        for k in 2..dim {
+            assert!(th[k].abs() < 0.2, "noise coord near zero: {th:?}");
+        }
+    }
+}
+
+#[test]
+fn observer_sees_every_iteration() {
+    let nodes = quad_nodes(4, 2, 1);
+    let graph = Topology::Complete.build(4).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        max_iters: 17,
+        tol: 0.0, // never converge
+        ..Default::default()
+    });
+    let mut calls = 0;
+    let report = engine.run_with(|t, thetas| {
+        assert_eq!(t, calls);
+        assert_eq!(thetas.len(), 4);
+        calls += 1;
+        t as f64
+    });
+    assert_eq!(calls, 17);
+    assert_eq!(report.recorder.stats.last().unwrap().app_error, 16.0);
+}
+
+#[test]
+fn eta_stats_recorded() {
+    let nodes = quad_nodes(5, 2, 2);
+    let graph = Topology::Ring.build(5).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Ap,
+        max_iters: 10,
+        tol: 0.0,
+        ..Default::default()
+    });
+    let report = engine.run();
+    for s in &report.recorder.stats {
+        assert!(s.min_eta > 0.0);
+        assert!(s.max_eta >= s.mean_eta && s.mean_eta >= s.min_eta);
+    }
+}
+
+#[test]
+fn random_topologies_converge_property() {
+    prop::check_named("consensus on random connected graphs", 10, |rng| {
+        let n = 4 + rng.below(8);
+        let graph = crate::graph::random_connected(n, 0.5, rng).unwrap();
+        let nodes = quad_nodes(n, 2, rng.next_u64());
+        let optimum = QuadraticNode::central_optimum(&nodes);
+        let mut engine = Engine::new(graph, nodes, EngineConfig {
+            scheme: SchemeKind::Nap,
+            max_iters: 500,
+            tol: 1e-10,
+            ..Default::default()
+        });
+        let report = engine.run();
+        for th in &report.thetas {
+            for (a, b) in th.iter().zip(&optimum) {
+                assert!((a - b).abs() < 5e-3, "{a} vs {b}");
+            }
+        }
+    });
+}
+
+#[test]
+#[ignore]
+fn debug_vp_trace() {
+    let nodes = quad_nodes(8, 3, 42);
+    let optimum = QuadraticNode::central_optimum(&nodes);
+    let graph = Topology::Complete.build(8).unwrap();
+    let mut engine = Engine::new(graph, nodes, EngineConfig {
+        scheme: SchemeKind::Vp,
+        max_iters: 1,
+        ..Default::default()
+    });
+    for t in 0..120 {
+        let s = engine.step(t, &mut |_, _| 0.0);
+        let err = engine
+            .thetas()
+            .iter()
+            .map(|th| th.iter().zip(&optimum).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt())
+            .fold(0.0f64, f64::max);
+        println!(
+            "t={t:3} obj={:>12.4} r={:.3e} s={:.3e} eta=[{:.1},{:.1}] err={err:.3e}",
+            s.objective, s.max_primal, s.max_dual, s.min_eta, s.max_eta
+        );
+    }
+}

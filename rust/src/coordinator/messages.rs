@@ -1,0 +1,41 @@
+//! Wire messages between node actors and the leader.
+
+use crate::graph::NodeId;
+
+/// Neighbour broadcast: parameters plus the sender's penalty on the edge
+/// toward the receiver (needed for the symmetrized dual step; one extra
+/// scalar per message keeps the scheme fully decentralized).
+#[derive(Debug, Clone)]
+pub struct Broadcast {
+    pub from: NodeId,
+    pub t: usize,
+    pub theta: Vec<f64>,
+    /// η_{from→to} at iteration t
+    pub eta_to_receiver: f64,
+}
+
+/// Per-iteration statistics a node reports to the leader.
+#[derive(Debug, Clone)]
+pub struct StatsMsg {
+    pub from: NodeId,
+    pub t: usize,
+    pub f_self: f64,
+    pub primal_norm: f64,
+    pub dual_norm: f64,
+    pub eta_min: f64,
+    pub eta_max: f64,
+    pub eta_sum: f64,
+    pub eta_count: usize,
+    /// current parameters (used by the leader's application metric)
+    pub theta: Vec<f64>,
+}
+
+/// Leader verdict closing an iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct Verdict {
+    pub t: usize,
+    pub stop: bool,
+    /// network-wide residuals (consumed only by the RB reference scheme)
+    pub global_primal: f64,
+    pub global_dual: f64,
+}

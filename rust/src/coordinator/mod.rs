@@ -1,0 +1,31 @@
+//! Threaded distributed runtime.
+//!
+//! The sequential [`crate::consensus::Engine`] executes the distributed
+//! algorithm's exact schedule deterministically (the mode used for the
+//! paper-figure experiments, where bit-reproducibility matters). This
+//! module runs the *same* per-node program on real OS threads with
+//! message-passing — one actor per graph node plus a leader that only
+//! aggregates convergence statistics (and the global residuals consumed
+//! by the non-decentralized RB reference scheme).
+//!
+//! Message flow per iteration (matching Algorithm 1 of the paper):
+//!
+//! ```text
+//! node i:  solve → broadcast (θ_i, η_i→j) → collect neighbours
+//!        → λ update (symmetrized η̄, see consensus module docs)
+//!        → residuals/objectives → stats to leader
+//! leader:  aggregate Σf_i, residuals → verdict (continue / stop)
+//! node i:  penalty-scheme update → next iteration
+//! ```
+//!
+//! PJRT handles are not `Send`, so threaded runs construct one backend
+//! per node thread through the [`SolverFactory`]; for the XLA backend
+//! that would mean one PJRT client per thread, hence threaded runs
+//! default to the native backend (identical numbers, see
+//! `integration_runtime.rs`).
+
+mod messages;
+mod runner;
+
+pub use messages::{Broadcast, StatsMsg, Verdict};
+pub use runner::{SolverFactory, ThreadedConfig, ThreadedReport, ThreadedRunner};

@@ -1,0 +1,503 @@
+//! Node actors on OS threads + the aggregating leader.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+use super::messages::{Broadcast, StatsMsg, Verdict};
+use crate::consensus::LocalSolver;
+use crate::error::{Error, Result};
+use crate::graph::{Graph, NodeId};
+use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
+use crate::penalty::{make_scheme, NodeObservation, SchemeKind, SchemeParams};
+use crate::util::rng::Pcg;
+
+/// Builds one node's solver inside its thread (backends need not be `Send`).
+pub type SolverFactory<S> = Arc<dyn Fn(NodeId) -> S + Send + Sync>;
+
+/// Threaded-run configuration (mirrors [`crate::consensus::EngineConfig`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadedConfig {
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    pub tol: f64,
+    pub patience: usize,
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+}
+
+impl Default for ThreadedConfig {
+    fn default() -> Self {
+        ThreadedConfig {
+            scheme: SchemeKind::Fixed,
+            params: SchemeParams::default(),
+            tol: 1e-3,
+            patience: 3,
+            warmup: 5,
+            max_iters: 1000,
+            seed: 0,
+        }
+    }
+}
+
+/// Outcome of a threaded run.
+#[derive(Debug)]
+pub struct ThreadedReport {
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+    pub thetas: Vec<Vec<f64>>,
+}
+
+/// Orchestrates node actors over a topology.
+pub struct ThreadedRunner {
+    graph: Graph,
+    cfg: ThreadedConfig,
+}
+
+impl ThreadedRunner {
+    pub fn new(graph: Graph, cfg: ThreadedConfig) -> Self {
+        ThreadedRunner { graph, cfg }
+    }
+
+    /// Run the distributed optimization; `app_metric` is evaluated by the
+    /// leader on the gathered per-iteration parameters.
+    pub fn run<S>(&self, factory: SolverFactory<S>,
+                  mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64)
+                  -> Result<ThreadedReport>
+    where
+        S: LocalSolver + 'static,
+    {
+        let n = self.graph.len();
+        let cfg = self.cfg;
+
+        // channels: per-node broadcast inbox, per-node verdict inbox,
+        // shared stats channel into the leader
+        let mut bcast_tx: Vec<Sender<Broadcast>> = Vec::with_capacity(n);
+        let mut bcast_rx: Vec<Option<Receiver<Broadcast>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            bcast_tx.push(tx);
+            bcast_rx.push(Some(rx));
+        }
+        let (stats_tx, stats_rx) = channel::<StatsMsg>();
+        let mut verdict_tx: Vec<Sender<Verdict>> = Vec::with_capacity(n);
+        let mut verdict_rx: Vec<Option<Receiver<Verdict>>> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (tx, rx) = channel();
+            verdict_tx.push(tx);
+            verdict_rx.push(Some(rx));
+        }
+
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let neighbors: Vec<NodeId> = self.graph.neighbors(i).to_vec();
+            let nb_senders: Vec<Sender<Broadcast>> =
+                neighbors.iter().map(|&j| bcast_tx[j].clone()).collect();
+            let my_rx = bcast_rx[i].take().expect("rx taken once");
+            let my_verdicts = verdict_rx[i].take().expect("rx taken once");
+            let stats = stats_tx.clone();
+            let factory = factory.clone();
+            handles.push(std::thread::spawn(move || {
+                node_main(i, cfg, neighbors, nb_senders, my_rx, my_verdicts,
+                          stats, factory)
+            }));
+        }
+        drop(stats_tx);
+
+        let leader = self.leader_loop(stats_rx, &verdict_tx, &mut app_metric);
+
+        let mut thetas: Vec<Vec<f64>> = vec![Vec::new(); n];
+        for h in handles {
+            let (id, theta) = h
+                .join()
+                .map_err(|_| Error::Config("node thread panicked".into()))?;
+            thetas[id] = theta;
+        }
+        let (iterations, converged, recorder) = leader?;
+        Ok(ThreadedReport { iterations, converged, recorder, thetas })
+    }
+
+    fn leader_loop(&self, stats_rx: Receiver<StatsMsg>, verdict_tx: &[Sender<Verdict>],
+                   app_metric: &mut impl FnMut(usize, &[Vec<f64>]) -> f64)
+                   -> Result<(usize, bool, Recorder)> {
+        let n = self.graph.len();
+        let mut recorder = Recorder::new();
+        let mut checker = ConvergenceChecker::new(self.cfg.tol)
+            .with_patience(self.cfg.patience)
+            .with_warmup(self.cfg.warmup);
+        let mut global_mean_prev: Option<Vec<f64>> = None;
+        let mut converged = false;
+        let mut iterations = 0;
+
+        for t in 0..self.cfg.max_iters {
+            let mut pending: Vec<Option<StatsMsg>> = vec![None; n];
+            let mut received = 0;
+            while received < n {
+                let msg = stats_rx
+                    .recv()
+                    .map_err(|_| Error::Config("node thread died mid-run".into()))?;
+                debug_assert_eq!(msg.t, t, "stats tag mismatch");
+                let from = msg.from;
+                if pending[from].replace(msg).is_none() {
+                    received += 1;
+                }
+            }
+            let stats: Vec<StatsMsg> = pending.into_iter().map(|m| m.unwrap()).collect();
+
+            // aggregate
+            let objective: f64 = stats.iter().map(|s| s.f_self).sum();
+            let max_primal = stats.iter().map(|s| s.primal_norm).fold(0.0, f64::max);
+            let max_dual = stats.iter().map(|s| s.dual_norm).fold(0.0, f64::max);
+            let eta_min = stats.iter().map(|s| s.eta_min).fold(f64::INFINITY, f64::min);
+            let eta_max = stats.iter().map(|s| s.eta_max).fold(0.0, f64::max);
+            let eta_cnt: usize = stats.iter().map(|s| s.eta_count).sum();
+            let eta_mean = if eta_cnt == 0 {
+                0.0
+            } else {
+                stats.iter().map(|s| s.eta_sum).sum::<f64>() / eta_cnt as f64
+            };
+
+            // global residuals (RB reference scheme)
+            let dim = stats[0].theta.len();
+            let mut gmean = vec![0.0; dim];
+            for s in &stats {
+                for k in 0..dim {
+                    gmean[k] += s.theta[k] / n as f64;
+                }
+            }
+            let mut gr2 = 0.0;
+            for s in &stats {
+                for k in 0..dim {
+                    let d = s.theta[k] - gmean[k];
+                    gr2 += d * d;
+                }
+            }
+            let gs2 = match &global_mean_prev {
+                Some(prev) => gmean
+                    .iter()
+                    .zip(prev)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>(),
+                None => f64::INFINITY,
+            };
+            let global_dual = if gs2.is_finite() {
+                self.cfg.params.eta0 * (n as f64).sqrt() * gs2.sqrt()
+            } else {
+                f64::INFINITY
+            };
+            global_mean_prev = Some(gmean);
+
+            let thetas: Vec<Vec<f64>> = stats.iter().map(|s| s.theta.clone()).collect();
+            let app_error = app_metric(t, &thetas);
+            recorder.push(IterStats {
+                iter: t,
+                objective,
+                max_primal,
+                max_dual,
+                mean_eta: eta_mean,
+                min_eta: if eta_cnt == 0 { 0.0 } else { eta_min },
+                max_eta: eta_max,
+                app_error,
+            });
+            iterations = t + 1;
+            let stop = checker.update(objective) || t + 1 == self.cfg.max_iters;
+            if stop && t + 1 < self.cfg.max_iters {
+                converged = true;
+            }
+            let verdict = Verdict {
+                t,
+                stop,
+                global_primal: gr2.sqrt(),
+                global_dual,
+            };
+            for tx in verdict_tx {
+                // a node that already stopped is gone; that's fine on stop
+                let _ = tx.send(verdict);
+            }
+            if stop {
+                break;
+            }
+        }
+        Ok((iterations, converged, recorder))
+    }
+}
+
+/// The per-node actor program (see module docs for the message schedule).
+#[allow(clippy::too_many_arguments)]
+fn node_main<S: LocalSolver>(
+    id: NodeId,
+    cfg: ThreadedConfig,
+    neighbors: Vec<NodeId>,
+    nb_senders: Vec<Sender<Broadcast>>,
+    inbox: Receiver<Broadcast>,
+    verdicts: Receiver<Verdict>,
+    stats: Sender<StatsMsg>,
+    factory: SolverFactory<S>,
+) -> (NodeId, Vec<f64>) {
+    let mut solver = factory(id);
+    let dim = solver.dim();
+    let deg = neighbors.len();
+    let mut rng = Pcg::new(cfg.seed, id as u64 + 1);
+    let mut theta = solver.initial_param(&mut rng);
+    let mut lambda = vec![0.0; dim];
+    let mut etas = vec![cfg.params.eta0; deg];
+    let mut scheme = make_scheme(cfg.scheme, cfg.params, deg);
+    let mut f_self_prev = f64::INFINITY;
+    let mut nbr_mean_prev = vec![0.0; dim];
+
+    let slot_of: HashMap<NodeId, usize> =
+        neighbors.iter().enumerate().map(|(s, &j)| (j, s)).collect();
+    // out-of-order broadcast staging: (tag → slot → theta/eta)
+    let mut pending: HashMap<usize, Vec<Option<(Vec<f64>, f64)>>> = HashMap::new();
+    let mut known: Vec<Vec<f64>> = vec![Vec::new(); deg];
+    let mut eta_in: Vec<f64> = vec![cfg.params.eta0; deg];
+
+    let collect = |tag: usize,
+                       pending: &mut HashMap<usize, Vec<Option<(Vec<f64>, f64)>>>,
+                       known: &mut Vec<Vec<f64>>, eta_in: &mut Vec<f64>| {
+        loop {
+            let entry = pending.entry(tag).or_insert_with(|| vec![None; deg]);
+            if entry.iter().all(Option::is_some) {
+                let entry = pending.remove(&tag).unwrap();
+                for (slot, item) in entry.into_iter().enumerate() {
+                    let (th, eta) = item.unwrap();
+                    known[slot] = th;
+                    eta_in[slot] = eta;
+                }
+                return;
+            }
+            match inbox.recv() {
+                Ok(msg) => {
+                    let slot = slot_of[&msg.from];
+                    pending
+                        .entry(msg.t)
+                        .or_insert_with(|| vec![None; deg])[slot] =
+                        Some((msg.theta, msg.eta_to_receiver));
+                }
+                Err(_) => return, // peers gone; leader will stop us
+            }
+        }
+    };
+
+    // initial exchange: θ⁰ tagged 0
+    for (slot, tx) in nb_senders.iter().enumerate() {
+        let _ = tx.send(Broadcast {
+            from: id,
+            t: 0,
+            theta: theta.clone(),
+            eta_to_receiver: etas[slot],
+        });
+    }
+    collect(0, &mut pending, &mut known, &mut eta_in);
+
+    for t in 0..cfg.max_iters {
+        // ---- local solve on iteration-t neighbour parameters -------------
+        let eta_sum: f64 = etas.iter().sum();
+        let mut eta_wsum = vec![0.0; dim];
+        for slot in 0..deg {
+            let e = etas[slot];
+            for k in 0..dim {
+                eta_wsum[k] += e * (theta[k] + known[slot][k]);
+            }
+        }
+        theta = solver.solve(&theta, &lambda, eta_sum, &eta_wsum);
+
+        // ---- broadcast θ^{t+1} with our edge penalties --------------------
+        for (slot, tx) in nb_senders.iter().enumerate() {
+            let _ = tx.send(Broadcast {
+                from: id,
+                t: t + 1,
+                theta: theta.clone(),
+                eta_to_receiver: etas[slot],
+            });
+        }
+        collect(t + 1, &mut pending, &mut known, &mut eta_in);
+
+        // ---- dual update with symmetrized penalties -----------------------
+        for slot in 0..deg {
+            let eta_bar = 0.5 * (etas[slot] + eta_in[slot]);
+            for k in 0..dim {
+                lambda[k] += 0.5 * eta_bar * (theta[k] - known[slot][k]);
+            }
+        }
+
+        // ---- residuals ----------------------------------------------------
+        let mut nbr_mean = vec![0.0; dim];
+        for slot in 0..deg {
+            for k in 0..dim {
+                nbr_mean[k] += known[slot][k] / deg.max(1) as f64;
+            }
+        }
+        let eta_bar_node = eta_sum / deg.max(1) as f64;
+        let mut r2 = 0.0;
+        let mut s2 = 0.0;
+        for k in 0..dim {
+            let r = theta[k] - nbr_mean[k];
+            let s = eta_bar_node * (nbr_mean[k] - nbr_mean_prev[k]);
+            r2 += r * r;
+            s2 += s * s;
+        }
+        nbr_mean_prev = nbr_mean;
+
+        // ---- objectives -----------------------------------------------------
+        let f_self = solver.objective(&theta);
+        let mut f_nb = vec![0.0; deg];
+        if scheme.needs_neighbor_objectives() {
+            let mut rho = vec![0.0; dim];
+            for slot in 0..deg {
+                for k in 0..dim {
+                    rho[k] = 0.5 * (theta[k] + known[slot][k]);
+                }
+                f_nb[slot] = solver.objective(&rho);
+            }
+        }
+
+        // ---- stats → leader; verdict ← leader ------------------------------
+        let eta_min = etas.iter().copied().fold(f64::INFINITY, f64::min);
+        let eta_max = etas.iter().copied().fold(0.0, f64::max);
+        let _ = stats.send(StatsMsg {
+            from: id,
+            t,
+            f_self,
+            primal_norm: r2.sqrt(),
+            dual_norm: s2.sqrt(),
+            eta_min: if deg == 0 { 0.0 } else { eta_min },
+            eta_max,
+            eta_sum,
+            eta_count: deg,
+            theta: theta.clone(),
+        });
+        let verdict = match verdicts.recv() {
+            Ok(v) => v,
+            Err(_) => break,
+        };
+        debug_assert_eq!(verdict.t, t);
+        if verdict.stop {
+            break;
+        }
+
+        // ---- penalty-scheme update -----------------------------------------
+        let obs = NodeObservation {
+            t,
+            primal_norm: r2.sqrt(),
+            dual_norm: s2.sqrt(),
+            global_primal: verdict.global_primal,
+            global_dual: verdict.global_dual,
+            f_self,
+            f_self_prev,
+            f_neighbors: &f_nb,
+        };
+        scheme.update(&obs, &mut etas);
+        f_self_prev = f_self;
+    }
+    (id, theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::consensus::solvers::QuadraticNode;
+    use crate::graph::Topology;
+    use crate::linalg::Mat;
+
+    fn quad_factory(n: usize, dim: usize, seed: u64)
+                    -> (SolverFactory<QuadraticNode>, Vec<f64>) {
+        // materialize all node problems up-front so the central optimum is
+        // computable; the factory clones per thread
+        let mut rng = Pcg::seed(seed);
+        let nodes: Vec<(Mat, Vec<f64>)> = (0..n)
+            .map(|_| {
+                let q = QuadraticNode::random(dim, &mut rng);
+                (q.p, q.q)
+            })
+            .collect();
+        let opt = QuadraticNode::central_optimum(
+            &nodes
+                .iter()
+                .map(|(p, q)| QuadraticNode::new(p.clone(), q.clone()))
+                .collect::<Vec<_>>(),
+        );
+        let nodes = Arc::new(nodes);
+        let factory: SolverFactory<QuadraticNode> = Arc::new(move |i| {
+            let (p, q) = nodes[i].clone();
+            QuadraticNode::new(p, q)
+        });
+        (factory, opt)
+    }
+
+    #[test]
+    fn threaded_matches_central_optimum() {
+        for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Vp,
+                       SchemeKind::Nap] {
+            let (factory, opt) = quad_factory(6, 3, 17);
+            let runner = ThreadedRunner::new(
+                Topology::Complete.build(6).unwrap(),
+                ThreadedConfig {
+                    scheme,
+                    tol: 1e-10,
+                    max_iters: 500,
+                    ..Default::default()
+                },
+            );
+            let report = runner.run(factory, |_, _| 0.0).unwrap();
+            for th in &report.thetas {
+                assert_eq!(th.len(), 3);
+                for (a, b) in th.iter().zip(&opt) {
+                    assert!((a - b).abs() < 1e-3, "{scheme:?}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn threaded_is_deterministic() {
+        let run = || {
+            let (factory, _) = quad_factory(5, 2, 3);
+            let runner = ThreadedRunner::new(
+                Topology::Ring.build(5).unwrap(),
+                ThreadedConfig { scheme: SchemeKind::VpAp, max_iters: 60, tol: 0.0,
+                                 ..Default::default() },
+            );
+            runner.run(factory, |_, _| 0.0).unwrap()
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a.thetas, b.thetas);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.recorder.objective_curve(), b.recorder.objective_curve());
+    }
+
+    #[test]
+    fn threaded_agrees_with_sequential_engine() {
+        // same problem, same convergence point (inits differ, optimum
+        // doesn't): consensus parameters must match to solver tolerance
+        let (factory, opt) = quad_factory(6, 3, 29);
+        let runner = ThreadedRunner::new(
+            Topology::Cluster.build(6).unwrap(),
+            ThreadedConfig { scheme: SchemeKind::Nap, tol: 1e-11, max_iters: 600,
+                             ..Default::default() },
+        );
+        let threaded = runner.run(factory, |_, _| 0.0).unwrap();
+        for th in &threaded.thetas {
+            for (a, b) in th.iter().zip(&opt) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn leader_records_every_iteration() {
+        let (factory, _) = quad_factory(4, 2, 5);
+        let runner = ThreadedRunner::new(
+            Topology::Complete.build(4).unwrap(),
+            ThreadedConfig { max_iters: 25, tol: 0.0, ..Default::default() },
+        );
+        let report = runner.run(factory, |t, _| t as f64).unwrap();
+        assert_eq!(report.iterations, 25);
+        assert_eq!(report.recorder.stats.len(), 25);
+        assert!(!report.converged);
+        assert_eq!(report.recorder.final_error(), 24.0);
+    }
+}

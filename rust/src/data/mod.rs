@@ -1,0 +1,20 @@
+//! Synthetic workload generators.
+//!
+//! Three families, matching the paper's three experiment groups (and the
+//! data substitutions documented in DESIGN.md §3):
+//!
+//! * [`synthetic`] — Gaussian-subspace samples (paper §5.1);
+//! * [`turntable`] — rigid 3-D objects on a turntable, affine-projected
+//!   into tracked 2-D features (Caltech Turntable substitute, §5.2);
+//! * [`trajectories`] — a 135-object corpus of rigid-motion trajectory
+//!   matrices with controlled degeneracies (Hopkins 155 substitute).
+
+pub mod partition;
+pub mod synthetic;
+pub mod trajectories;
+pub mod turntable;
+
+pub use partition::{even_split, Partition};
+pub use synthetic::{SubspaceData, SubspaceSpec};
+pub use trajectories::{TrajectoryCorpus, TrajectoryObject};
+pub use turntable::{turntable_objects, TurntableObject, OBJECT_NAMES};

@@ -1,0 +1,84 @@
+//! Even sample partitioning across nodes (paper: "the samples are
+//! assigned to each node evenly").
+
+/// Column ranges assigned to each node, plus the padded per-node budget.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// Half-open column ranges per node.
+    pub ranges: Vec<(usize, usize)>,
+    /// max over nodes of range length — the artifact's padded N.
+    pub padded: usize,
+}
+
+/// Split `n` samples over `j` nodes as evenly as possible: the first
+/// `n % j` nodes receive one extra sample (deterministic, contiguous).
+pub fn even_split(n: usize, j: usize) -> Partition {
+    assert!(j > 0, "even_split: zero nodes");
+    let base = n / j;
+    let extra = n % j;
+    let mut ranges = Vec::with_capacity(j);
+    let mut start = 0;
+    for i in 0..j {
+        let len = base + usize::from(i < extra);
+        ranges.push((start, start + len));
+        start += len;
+    }
+    Partition { ranges, padded: base + usize::from(extra > 0) }
+}
+
+impl Partition {
+    /// Number of samples owned by node `i`.
+    pub fn len(&self, i: usize) -> usize {
+        let (lo, hi) = self.ranges[i];
+        hi - lo
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.ranges.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn covers_everything_without_overlap() {
+        prop::check("partition is exact cover", |rng| {
+            let n = rng.below(1000);
+            let j = 1 + rng.below(30);
+            let p = even_split(n, j);
+            assert_eq!(p.num_nodes(), j);
+            let mut cursor = 0;
+            for &(lo, hi) in &p.ranges {
+                assert_eq!(lo, cursor);
+                assert!(hi >= lo);
+                cursor = hi;
+            }
+            assert_eq!(cursor, n);
+        });
+    }
+
+    #[test]
+    fn balance_within_one() {
+        prop::check("sizes differ by ≤ 1", |rng| {
+            let n = rng.below(1000);
+            let j = 1 + rng.below(30);
+            let p = even_split(n, j);
+            let sizes: Vec<usize> = (0..j).map(|i| p.len(i)).collect();
+            let max = *sizes.iter().max().unwrap();
+            let min = *sizes.iter().min().unwrap();
+            assert!(max - min <= 1);
+            assert_eq!(p.padded, max);
+        });
+    }
+
+    #[test]
+    fn paper_shapes() {
+        // the Fig. 2 configurations drive the artifact shape registry
+        assert_eq!(even_split(500, 20).padded, 25);
+        assert_eq!(even_split(500, 16).padded, 32);
+        assert_eq!(even_split(500, 12).padded, 42);
+    }
+}

@@ -1,0 +1,109 @@
+//! Gaussian-subspace synthetic data (paper §5.1).
+//!
+//! "We generated 500 samples of 20 dimensional observations from a 5-dim
+//! subspace following N(0, I), with the Gaussian measurement noise
+//! following N(0, 0.2·I)."
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+
+/// A generated dataset together with its ground truth.
+#[derive(Debug, Clone)]
+pub struct SubspaceData {
+    /// (D, N) observations, one sample per column.
+    pub x: Mat,
+    /// (D, M) ground-truth projection matrix (subspace basis).
+    pub w_true: Mat,
+    /// Ground-truth mean (D).
+    pub mu_true: Vec<f64>,
+    /// Noise variance used.
+    pub noise_var: f64,
+}
+
+/// Parameters for the generator; defaults reproduce the paper's setting.
+#[derive(Debug, Clone, Copy)]
+pub struct SubspaceSpec {
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    pub noise_var: f64,
+    /// If false the mean is zero (the paper's setting); if true a random
+    /// offset is added (used by robustness tests).
+    pub random_mean: bool,
+}
+
+impl Default for SubspaceSpec {
+    fn default() -> Self {
+        SubspaceSpec { d: 20, m: 5, n: 500, noise_var: 0.2, random_mean: false }
+    }
+}
+
+impl SubspaceSpec {
+    /// Generate a dataset.
+    pub fn generate(&self, rng: &mut Pcg) -> SubspaceData {
+        let w_true = Mat::randn(self.d, self.m, rng);
+        let z = Mat::randn(self.m, self.n, rng);
+        let mu_true: Vec<f64> = if self.random_mean {
+            rng.normal_vec(self.d)
+        } else {
+            vec![0.0; self.d]
+        };
+        let mut x = w_true.matmul(&z);
+        let sigma = self.noise_var.sqrt();
+        for r in 0..self.d {
+            for c in 0..self.n {
+                x[(r, c)] += mu_true[r] + sigma * rng.normal();
+            }
+        }
+        SubspaceData { x, w_true, mu_true, noise_var: self.noise_var }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{max_principal_angle_deg, Svd};
+    use crate::util::prop;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = SubspaceSpec::default();
+        let a = spec.generate(&mut Pcg::seed(1));
+        let b = spec.generate(&mut Pcg::seed(1));
+        assert_eq!(a.x.shape(), (20, 500));
+        assert_eq!(a.w_true.shape(), (20, 5));
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn pca_recovers_subspace() {
+        // sanity: top-M left singular vectors of centred data ≈ span(W_true)
+        let spec = SubspaceSpec::default();
+        let data = spec.generate(&mut Pcg::seed(7));
+        let svd = Svd::new(&data.x).unwrap();
+        let u5 = svd.u.col_slice(0, 5);
+        let angle = max_principal_angle_deg(&u5, &data.w_true).unwrap();
+        assert!(angle < 5.0, "angle {angle}");
+    }
+
+    #[test]
+    fn noise_scale_respected() {
+        prop::check("residual energy ≈ noise_var per dim", |rng| {
+            let spec = SubspaceSpec { d: 10, m: 2, n: 400, noise_var: 0.5, random_mean: false };
+            let data = spec.generate(rng);
+            // project out the true subspace; remaining variance ≈ noise
+            let (q, _) = crate::linalg::qr_thin(&data.w_true).unwrap();
+            let proj = q.matmul(&q.t_matmul(&data.x));
+            let resid = &data.x - &proj;
+            let var = resid.fro_norm().powi(2) / (spec.n as f64 * (spec.d - spec.m) as f64);
+            assert!((var - 0.5).abs() < 0.12, "var {var}");
+        });
+    }
+
+    #[test]
+    fn random_mean_offsets_data() {
+        let spec = SubspaceSpec { random_mean: true, ..Default::default() };
+        let data = spec.generate(&mut Pcg::seed(3));
+        assert!(data.mu_true.iter().any(|&v| v.abs() > 0.1));
+    }
+}

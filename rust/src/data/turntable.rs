@@ -1,0 +1,207 @@
+//! Synthetic turntable objects — the Caltech Turntable substitute.
+//!
+//! The paper's SfM experiment (§5.2, Figs. 3-5) consumes 2F×N measurement
+//! matrices of five rigid objects tracked over 30 turntable frames. We
+//! synthesize five objects with distinct geometry (named after the five
+//! Caltech objects used in the paper), rotate each about the vertical axis
+//! through the full frame sweep, project orthographically, and add pixel
+//! noise — exactly the input distribution the downstream pipeline sees.
+
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+
+/// The five objects reported in the paper.
+pub const OBJECT_NAMES: [&str; 5] =
+    ["BallSander", "BoxStuff", "Rooster", "Standing", "StorageBin"];
+
+/// One synthetic object: 3-D points + its 2F×N measurement matrix.
+#[derive(Debug, Clone)]
+pub struct TurntableObject {
+    pub name: String,
+    /// (N, 3) ground-truth structure (first frame's object coordinates).
+    pub structure: Mat,
+    /// (2F, N) tracked feature matrix: rows 2f, 2f+1 are frame f's u, v.
+    pub measurements: Mat,
+    pub frames: usize,
+}
+
+/// Geometry specification per object.
+#[derive(Debug, Clone, Copy)]
+pub struct TurntableSpec {
+    pub points: usize,
+    pub frames: usize,
+    /// total rotation swept over the sequence (radians)
+    pub sweep: f64,
+    /// observation noise std-dev (in projected units ≈ pixels)
+    pub noise: f64,
+    /// object size in projected units. Real tracked features live in
+    /// pixel coordinates (object extent ~10² px, tracker noise ~1 px);
+    /// matching that scale keeps the ML noise precision a* ≈ O(1), the
+    /// regime the paper's η⁰ = 10 was tuned for.
+    pub scale: f64,
+}
+
+impl Default for TurntableSpec {
+    fn default() -> Self {
+        // 120 points / 30 frames matches the d120 artifact shape
+        TurntableSpec {
+            points: 120,
+            frames: 30,
+            sweep: 70f64.to_radians(),
+            noise: 0.7,
+            scale: 60.0,
+        }
+    }
+}
+
+/// Sample a 3-D point cloud with per-object characteristic geometry.
+fn object_cloud(name: &str, points: usize, rng: &mut Pcg) -> Mat {
+    let mut p = Mat::zeros(points, 3);
+    for i in 0..points {
+        let (x, y, z) = match name {
+            // cylinder with a handle-ish protrusion
+            "BallSander" => {
+                let th = rng.range(0.0, std::f64::consts::TAU);
+                let h = rng.range(-1.0, 1.0);
+                (th.cos() * 0.7, h, th.sin() * 0.7)
+            }
+            // box: points on the surface of a cuboid
+            "BoxStuff" => {
+                let face = rng.below(3);
+                let sgn = if rng.f64() < 0.5 { -1.0 } else { 1.0 };
+                let u = rng.range(-1.0, 1.0);
+                let v = rng.range(-0.6, 0.6);
+                match face {
+                    0 => (sgn * 1.0, u * 0.8, v),
+                    1 => (u, sgn * 0.8, v),
+                    _ => (u, v * 0.8, sgn * 0.6),
+                }
+            }
+            // tall thin blob with an offset crest
+            "Rooster" => {
+                let t = rng.f64();
+                (0.3 * rng.normal() + 0.4 * (t * 9.0).sin(),
+                 1.4 * (t - 0.5),
+                 0.3 * rng.normal())
+            }
+            // person-like: vertical gaussian stack
+            "Standing" => (0.35 * rng.normal(), rng.range(-1.2, 1.2), 0.25 * rng.normal()),
+            // open box: shell of a cuboid minus the top
+            _ => {
+                let u = rng.range(-1.0, 1.0);
+                let v = rng.range(-1.0, 1.0);
+                let w = rng.range(0.0, 0.8);
+                match rng.below(5) {
+                    0 => (u, -0.0, v),          // bottom
+                    1 => (1.0, w, v),
+                    2 => (-1.0, w, v),
+                    3 => (u, w, 1.0),
+                    _ => (u, w, -1.0),
+                }
+            }
+        };
+        p[(i, 0)] = x;
+        p[(i, 1)] = y;
+        p[(i, 2)] = z;
+    }
+    p
+}
+
+/// Orthographic projection of the cloud rotated by `theta` about +y.
+/// Returns (u, v) rows for the frame.
+fn project(structure: &Mat, theta: f64, noise: f64, rng: &mut Pcg) -> (Vec<f64>, Vec<f64>) {
+    let (c, s) = (theta.cos(), theta.sin());
+    let n = structure.rows();
+    let mut u = Vec::with_capacity(n);
+    let mut v = Vec::with_capacity(n);
+    for i in 0..n {
+        let (x, y, z) = (structure[(i, 0)], structure[(i, 1)], structure[(i, 2)]);
+        // rotate about y then orthographic onto the image plane (x, y)
+        let xr = c * x + s * z;
+        u.push(xr + noise * rng.normal());
+        v.push(y + noise * rng.normal());
+    }
+    (u, v)
+}
+
+impl TurntableSpec {
+    /// Generate a named object deterministically from `seed`.
+    pub fn generate(&self, name: &str, seed: u64) -> TurntableObject {
+        let mut rng = Pcg::new(seed, 0xCA17EC);
+        let structure = object_cloud(name, self.points, &mut rng).scale(self.scale);
+        let mut meas = Mat::zeros(2 * self.frames, self.points);
+        for f in 0..self.frames {
+            let theta = self.sweep * (f as f64) / (self.frames.max(2) as f64 - 1.0);
+            let (u, v) = project(&structure, theta, self.noise, &mut rng);
+            meas.row_mut(2 * f).copy_from_slice(&u);
+            meas.row_mut(2 * f + 1).copy_from_slice(&v);
+        }
+        TurntableObject {
+            name: name.to_string(),
+            structure,
+            measurements: meas,
+            frames: self.frames,
+        }
+    }
+}
+
+/// The five-object benchmark set with the default spec.
+pub fn turntable_objects(seed: u64) -> Vec<TurntableObject> {
+    let spec = TurntableSpec::default();
+    OBJECT_NAMES
+        .iter()
+        .enumerate()
+        .map(|(k, name)| spec.generate(name, seed.wrapping_add(k as u64)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Svd;
+
+    #[test]
+    fn shapes_and_names() {
+        let objs = turntable_objects(0);
+        assert_eq!(objs.len(), 5);
+        for o in &objs {
+            assert_eq!(o.measurements.shape(), (60, 120));
+            assert_eq!(o.structure.shape(), (120, 3));
+        }
+        assert_eq!(objs[3].name, "Standing");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = turntable_objects(9);
+        let b = turntable_objects(9);
+        assert_eq!(a[0].measurements, b[0].measurements);
+    }
+
+    #[test]
+    fn centred_measurements_are_nearly_rank_3() {
+        // affine rigid scenes have rank-3 centred measurement matrices;
+        // noise leaves a sharp spectral gap after σ₃
+        let obj = TurntableSpec::default().generate("BoxStuff", 1);
+        let mut m = obj.measurements.clone();
+        for r in 0..m.rows() {
+            let mean: f64 = m.row(r).iter().sum::<f64>() / m.cols() as f64;
+            for c in 0..m.cols() {
+                m[(r, c)] -= mean;
+            }
+        }
+        let svd = Svd::new(&m).unwrap();
+        assert!(svd.s[3] / svd.s[2] < 0.05, "gap: {:?}", &svd.s[..5]);
+    }
+
+    #[test]
+    fn objects_have_distinct_geometry() {
+        let objs = turntable_objects(0);
+        for i in 0..objs.len() {
+            for j in (i + 1)..objs.len() {
+                let diff = objs[i].structure.max_abs_diff(&objs[j].structure);
+                assert!(diff > 0.1, "{} vs {}", objs[i].name, objs[j].name);
+            }
+        }
+    }
+}

@@ -1,0 +1,82 @@
+//! Centralized PPCA baselines (single node, no consensus).
+
+use super::em;
+use super::model::{Moments, PpcaParams};
+use crate::error::Result;
+use crate::linalg::Mat;
+use crate::util::rng::Pcg;
+
+/// Result of a centralized EM fit.
+#[derive(Debug, Clone)]
+pub struct CentralizedFit {
+    pub params: PpcaParams,
+    pub nll: f64,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// Fit PPCA by EM on pooled data (the `η ≡ 0` special case of the
+/// consensus node update — shares all math with the distributed path).
+pub fn centralized_em(x: &Mat, m: usize, tol: f64, max_iters: usize,
+                      rng: &mut Pcg) -> Result<CentralizedFit> {
+    let d = x.rows();
+    let mask = vec![1.0; x.cols()];
+    let mom = em::moments(x, &mask);
+    centralized_em_moments(&mom, d, m, tol, max_iters, rng)
+}
+
+/// EM from precomputed moments.
+pub fn centralized_em_moments(mom: &Moments, d: usize, m: usize, tol: f64,
+                              max_iters: usize, rng: &mut Pcg)
+                              -> Result<CentralizedFit> {
+    let zeros = PpcaParams::zeros(d, m);
+    let mut params = PpcaParams {
+        w: Mat::randn(d, m, rng),
+        mu: mom.mean(),
+        a: 1.0,
+    };
+    let mut nll = em::marginal_nll(mom, &params)?;
+    let mut converged = false;
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        let (p_new, nll_new) = em::node_update(mom, &params, &zeros, 0.0, &zeros)?;
+        iterations = it + 1;
+        let rel = (nll - nll_new).abs() / nll.abs().max(1e-12);
+        params = p_new;
+        nll = nll_new;
+        if rel < tol {
+            converged = true;
+            break;
+        }
+    }
+    Ok(CentralizedFit { params, nll, iterations, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::SubspaceSpec;
+    use crate::linalg::max_principal_angle_deg;
+
+    #[test]
+    fn recovers_planted_subspace() {
+        let spec = SubspaceSpec { d: 12, m: 3, n: 300, noise_var: 0.1, random_mean: false };
+        let data = spec.generate(&mut Pcg::seed(2));
+        let fit = centralized_em(&data.x, 3, 1e-9, 3000, &mut Pcg::seed(3)).unwrap();
+        assert!(fit.converged);
+        let angle = max_principal_angle_deg(&fit.params.w, &data.w_true).unwrap();
+        assert!(angle < 3.0, "angle {angle}");
+        // noise precision ≈ 1/0.1
+        assert!((1.0 / fit.params.a - 0.1).abs() < 0.05, "σ² = {}", 1.0 / fit.params.a);
+    }
+
+    #[test]
+    fn independent_restarts_agree_on_subspace() {
+        let spec = SubspaceSpec { d: 10, m: 2, n: 200, noise_var: 0.05, random_mean: true };
+        let data = spec.generate(&mut Pcg::seed(5));
+        let f1 = centralized_em(&data.x, 2, 1e-10, 800, &mut Pcg::seed(10)).unwrap();
+        let f2 = centralized_em(&data.x, 2, 1e-10, 800, &mut Pcg::seed(11)).unwrap();
+        let angle = max_principal_angle_deg(&f1.params.w, &f2.params.w).unwrap();
+        assert!(angle < 0.5, "restart disagreement {angle}°");
+    }
+}

@@ -1,0 +1,284 @@
+//! Native Rust implementation of the D-PPCA node computation.
+//!
+//! This mirrors `python/compile/model.py` *operation for operation* (the
+//! integration tests assert both paths agree to ~1e-9): masked moments,
+//! marginal NLL via the matrix-determinant lemma / Woodbury identity in
+//! M×M space, and the consensus M-step derived from the paper's eq. 15.
+
+use super::model::{Moments, PpcaParams};
+use crate::error::{Error, Result};
+use crate::linalg::{Cholesky, Mat};
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+/// Masked raw moments of a (D, N) sample block (oracle for the L1 kernel).
+pub fn moments(x: &Mat, mask: &[f64]) -> Moments {
+    let (d, n_cols) = x.shape();
+    assert_eq!(mask.len(), n_cols, "mask length");
+    let mut n = 0.0;
+    let mut sx = vec![0.0; d];
+    let mut sxx = Mat::zeros(d, d);
+    for k in 0..n_cols {
+        let m = mask[k];
+        if m == 0.0 {
+            continue;
+        }
+        n += m;
+        for i in 0..d {
+            let xi = m * x[(i, k)];
+            sx[i] += xi;
+            // rank-1 update on the upper triangle, mirrored below
+            for j in i..d {
+                sxx[(i, j)] += xi * x[(j, k)];
+            }
+        }
+    }
+    for i in 0..d {
+        for j in 0..i {
+            sxx[(i, j)] = sxx[(j, i)];
+        }
+    }
+    Moments { n, sx, sxx }
+}
+
+/// `M = WᵀW + a⁻¹I` factored; returns (M⁻¹, log|M|).
+fn latent_gram_inverse(w: &Mat, a: f64) -> Result<(Mat, f64)> {
+    let m = w.cols();
+    let mut mmat = w.t_matmul(w);
+    for i in 0..m {
+        mmat[(i, i)] += 1.0 / a;
+    }
+    let ch = Cholesky::new(&mmat)?;
+    Ok((ch.inverse(), ch.logdet()))
+}
+
+/// Marginal PPCA negative log-likelihood −log p(X | W, μ, a).
+pub fn marginal_nll(mom: &Moments, p: &PpcaParams) -> Result<f64> {
+    if !(p.a > 0.0) || !p.a.is_finite() {
+        return Err(Error::Numeric(format!("nll: invalid precision a={}", p.a)));
+    }
+    let (d, m) = (p.d(), p.m());
+    let (minv, logdet_m) = latent_gram_inverse(&p.w, p.a)?;
+    let s = mom.centred_scatter(&p.mu);
+    let wtsw = p.w.t_matmul(&s.matmul(&p.w));
+    let tr_term = p.a * (s.trace() - minv.fro_dot(&wtsw));
+    let logdet_c = (m as f64 - d as f64) * p.a.ln() + logdet_m;
+    Ok(0.5 * (mom.n * d as f64 * LOG_2PI + mom.n * logdet_c + tr_term))
+}
+
+/// One E-step + consensus M-step (paper eq. 15 and its W/a analogues).
+///
+/// `eta_w` carries the aggregates Σ_j η_ij (θ_i + θ_j) in its (w, mu, a)
+/// slots; `eta_sum` is Σ_j η_ij; `mult` holds (λ, γ, β).
+pub fn node_update(mom: &Moments, p: &PpcaParams, mult: &PpcaParams,
+                   eta_sum: f64, eta_w: &PpcaParams) -> Result<(PpcaParams, f64)> {
+    let (d, m) = (p.d(), p.m());
+    let n = mom.n;
+
+    // ---- E-step aggregates (old parameters) ------------------------------
+    let (minv, _) = latent_gram_inverse(&p.w, p.a)?;
+    let s_old = mom.centred_scatter(&p.mu);
+    let sw = s_old.matmul(&p.w);
+    let cxz = sw.matmul(&minv); // Σ (x−μ)E[z]ᵀ           (D, M)
+    let wtssw = p.w.t_matmul(&sw);
+    let mut ezz_sum = minv.matmul(&wtssw).matmul(&minv); // Σ E[zzᵀ]  (M, M)
+    ezz_sum.axpy(n / p.a, &minv);
+    // Σ E[z] = M⁻¹Wᵀ(sx − nμ)
+    let centred_sum: Vec<f64> = (0..d).map(|k| mom.sx[k] - n * p.mu[k]).collect();
+    let sz = minv.matvec(&p.w.t_matvec(&centred_sum));
+
+    // ---- W update ---------------------------------------------------------
+    let mut numer_w = cxz.scale(p.a);
+    numer_w.axpy(-2.0, &mult.w);
+    numer_w += &eta_w.w;
+    let mut denom_w = ezz_sum.scale(p.a);
+    for i in 0..m {
+        denom_w[(i, i)] += 2.0 * eta_sum;
+    }
+    let denom_inv = Cholesky::new(&denom_w)?.inverse();
+    let w_new = numer_w.matmul(&denom_inv);
+
+    // ---- μ update (fresh W; paper eq. 15) ---------------------------------
+    let w_sz = w_new.matvec(&sz);
+    let denom_mu = n * p.a + 2.0 * eta_sum;
+    let mu_new: Vec<f64> = (0..d)
+        .map(|k| (p.a * (mom.sx[k] - w_sz[k]) - 2.0 * mult.mu[k] + eta_w.mu[k]) / denom_mu)
+        .collect();
+
+    // ---- a update: positive root of A·a² + B·a − C = 0 --------------------
+    let s_new = mom.centred_scatter(&mu_new);
+    // Σ (x−μ_new)E[z]ᵀ = cxz + (μ_old − μ_new) szᵀ
+    let mu_diff: Vec<f64> = (0..d).map(|k| p.mu[k] - mu_new[k]).collect();
+    let mut cxz_new = cxz.clone();
+    cxz_new += &Mat::outer(&mu_diff, &sz);
+    let c_sum = s_new.trace() - 2.0 * w_new.fro_dot(&cxz_new)
+        + w_new.t_matmul(&w_new).fro_dot(&ezz_sum);
+    let a_coef = 2.0 * eta_sum;
+    let b_coef = 2.0 * mult.a + 0.5 * c_sum - eta_w.a;
+    let c_coef = n * d as f64 / 2.0;
+    let a_new = if a_coef > 1e-12 {
+        let disc = (b_coef * b_coef + 4.0 * a_coef * c_coef).sqrt();
+        (disc - b_coef) / (2.0 * a_coef)
+    } else {
+        c_coef / b_coef
+    };
+    if !(a_new > 0.0) || !a_new.is_finite() {
+        return Err(Error::Numeric(format!("node_update: a⁺ = {a_new}")));
+    }
+
+    let p_new = PpcaParams { w: w_new, mu: mu_new, a: a_new };
+    let nll = marginal_nll(mom, &p_new)?;
+    Ok((p_new, nll))
+}
+
+/// Posterior means E[z_k] = M⁻¹Wᵀ(x_k − μ) for every masked sample
+/// (oracle for the L1 `estep_z` kernel). Masked columns are zero.
+pub fn estep_z(x: &Mat, mask: &[f64], p: &PpcaParams) -> Result<Mat> {
+    let (d, n_cols) = x.shape();
+    let m = p.m();
+    let (minv, _) = latent_gram_inverse(&p.w, p.a)?;
+    let pw = minv.matmul_t(&p.w); // (M, D)
+    let mut z = Mat::zeros(m, n_cols);
+    for k in 0..n_cols {
+        if mask[k] == 0.0 {
+            continue;
+        }
+        let xc: Vec<f64> = (0..d).map(|r| (x[(r, k)] - p.mu[r]) * mask[k]).collect();
+        z.set_col(k, &pw.matvec(&xc));
+    }
+    Ok(z)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    fn random_setup(rng: &mut Pcg, d: usize, m: usize, n: usize)
+                    -> (Mat, Vec<f64>, PpcaParams) {
+        let x = Mat::randn(d, n, rng);
+        let mask: Vec<f64> = (0..n).map(|_| f64::from(rng.f64() < 0.8)).collect();
+        let p = PpcaParams {
+            w: Mat::randn(d, m, rng),
+            mu: rng.normal_vec(d),
+            a: rng.range(0.3, 3.0),
+        };
+        (x, mask, p)
+    }
+
+    #[test]
+    fn moments_match_naive() {
+        prop::check("masked moments", |rng| {
+            let (d, n) = (2 + rng.below(6), 1 + rng.below(12));
+            let (x, mask, _) = random_setup(rng, d, 1, n);
+            let mom = moments(&x, &mask);
+            let n_direct: f64 = mask.iter().sum();
+            assert!((mom.n - n_direct).abs() < 1e-12);
+            for i in 0..d {
+                let direct: f64 = (0..n).map(|k| mask[k] * x[(i, k)]).sum();
+                assert!((mom.sx[i] - direct).abs() < 1e-10);
+            }
+        });
+    }
+
+    #[test]
+    fn nll_matches_dense_gaussian() {
+        prop::check("Woodbury NLL = dense NLL", |rng| {
+            let (d, m, n) = (3 + rng.below(5), 1 + rng.below(3), 5 + rng.below(10));
+            let (x, mask, p) = random_setup(rng, d, m, n);
+            let mom = moments(&x, &mask);
+            let got = marginal_nll(&mom, &p).unwrap();
+            // dense evaluation: C = WWᵀ + a⁻¹I
+            let mut c = p.w.matmul_t(&p.w);
+            for i in 0..d {
+                c[(i, i)] += 1.0 / p.a;
+            }
+            let ch = Cholesky::new(&c).unwrap();
+            let cinv = ch.inverse();
+            let s = mom.centred_scatter(&p.mu);
+            let want = 0.5 * (mom.n * d as f64 * LOG_2PI + mom.n * ch.logdet()
+                + cinv.fro_dot(&s));
+            assert!((got - want).abs() < 1e-8 * want.abs().max(1.0),
+                    "{got} vs {want}");
+        });
+    }
+
+    #[test]
+    fn centralized_em_monotone() {
+        prop::check_named("EM decreases marginal NLL", 16, |rng| {
+            let (d, m, n) = (6, 2, 40);
+            let x = Mat::randn(d, n, rng);
+            let mask = vec![1.0; n];
+            let mom = moments(&x, &mask);
+            let zeros = PpcaParams::zeros(d, m);
+            let mut p = PpcaParams {
+                w: Mat::randn(d, m, rng),
+                mu: rng.normal_vec(d),
+                a: 1.0,
+            };
+            let mut prev = marginal_nll(&mom, &p).unwrap();
+            for _ in 0..30 {
+                let (p_new, nll) = node_update(&mom, &p, &zeros, 0.0, &zeros).unwrap();
+                assert!(nll <= prev + 1e-7, "{nll} > {prev}");
+                prev = nll;
+                p = p_new;
+            }
+        });
+    }
+
+    #[test]
+    fn huge_penalty_pins_to_target() {
+        let mut rng = Pcg::seed(4);
+        let (d, m, n) = (5, 2, 30);
+        let x = Mat::randn(d, n, &mut rng);
+        let mom = moments(&x, &vec![1.0; n]);
+        let p = PpcaParams { w: Mat::randn(d, m, &mut rng), mu: rng.normal_vec(d), a: 1.0 };
+        let target = PpcaParams { w: Mat::randn(d, m, &mut rng), mu: rng.normal_vec(d), a: 2.0 };
+        let eta = 1e8;
+        let mut eta_w = PpcaParams {
+            w: (&p.w + &target.w).scale(eta),
+            mu: p.mu.iter().zip(&target.mu).map(|(a, b)| eta * (a + b)).collect(),
+            a: eta * (p.a + target.a),
+        };
+        eta_w.a = eta * (p.a + target.a);
+        let zeros = PpcaParams::zeros(d, m);
+        let (p_new, _) = node_update(&mom, &p, &zeros, eta, &eta_w).unwrap();
+        let mid_w = (&p.w + &target.w).scale(0.5);
+        assert!(p_new.w.max_abs_diff(&mid_w) < 1e-4);
+        assert!((p_new.a - (p.a + target.a) / 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn estep_z_reconstructs_latents() {
+        // x = Wz exactly, huge a → posterior mean ≈ z (shrunk by M⁻¹WᵀW)
+        let mut rng = Pcg::seed(6);
+        let (d, m, n) = (10, 3, 8);
+        let w = Mat::randn(d, m, &mut rng);
+        let z_true = Mat::randn(m, n, &mut rng);
+        let x = w.matmul(&z_true);
+        let p = PpcaParams { w: w.clone(), mu: vec![0.0; d], a: 1e9 };
+        let z = estep_z(&x, &vec![1.0; n], &p).unwrap();
+        assert!(z.max_abs_diff(&z_true) < 1e-5);
+    }
+
+    #[test]
+    fn estep_z_zeroes_masked_columns() {
+        let mut rng = Pcg::seed(7);
+        let (x, _, p) = random_setup(&mut rng, 6, 2, 9);
+        let mask = vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0];
+        let z = estep_z(&x, &mask, &p).unwrap();
+        for (k, &mk) in mask.iter().enumerate() {
+            if mk == 0.0 {
+                assert!(z.col(k).iter().all(|&v| v == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_precision_rejected() {
+        let mom = Moments { n: 3.0, sx: vec![0.0; 2], sxx: Mat::eye(2) };
+        let p = PpcaParams { w: Mat::zeros(2, 1), mu: vec![0.0; 2], a: -1.0 };
+        assert!(marginal_nll(&mom, &p).is_err());
+    }
+}

@@ -1,0 +1,26 @@
+//! Distributed probabilistic PCA (the paper's §4 application).
+//!
+//! The local per-node computation (E-step + consensus M-step + marginal
+//! NLL) exists twice, by design:
+//!
+//! * the **lowered XLA artifacts** built from `python/compile/model.py`
+//!   (JAX L2 calling the Pallas L1 kernels) — the production path, driven
+//!   through [`crate::runtime::XlaBackend`];
+//! * the **native Rust oracle** in [`em`] — the identical math on
+//!   [`crate::linalg`], used by [`crate::runtime::NativeBackend`] for
+//!   artifact-free tests, threaded-coordinator runs, and as a
+//!   cross-validation oracle for the artifacts (see
+//!   `rust/tests/integration_runtime.rs`).
+//!
+//! [`DppcaSolver`] adapts either backend to the consensus engine's
+//! [`crate::consensus::LocalSolver`] interface by flattening
+//! θ = (W, μ, a) into a single parameter vector.
+
+pub mod centralized;
+pub mod em;
+mod model;
+mod solver;
+
+pub use centralized::{centralized_em, CentralizedFit};
+pub use model::{Moments, PpcaParams};
+pub use solver::{DppcaSolver, InitStrategy, UpdateMode};

@@ -1,0 +1,158 @@
+//! PPCA parameter containers and flattening.
+
+use crate::linalg::Mat;
+
+/// PPCA parameters θ = (W ∈ R^{D×M}, μ ∈ R^D, a > 0).
+///
+/// The same container also carries the Lagrange multipliers (λ, γ, β) and
+/// the η-weighted neighbour sums, which share the (D×M, D, scalar) shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PpcaParams {
+    pub w: Mat,
+    pub mu: Vec<f64>,
+    pub a: f64,
+}
+
+impl PpcaParams {
+    /// All-zero container (multiplier initialization).
+    pub fn zeros(d: usize, m: usize) -> PpcaParams {
+        PpcaParams { w: Mat::zeros(d, m), mu: vec![0.0; d], a: 0.0 }
+    }
+
+    pub fn d(&self) -> usize {
+        self.w.rows()
+    }
+
+    pub fn m(&self) -> usize {
+        self.w.cols()
+    }
+
+    /// Flattened dimension D·M + D + 1.
+    pub fn flat_dim(d: usize, m: usize) -> usize {
+        d * m + d + 1
+    }
+
+    /// Flatten as [vec(W) row-major | μ | a].
+    pub fn flatten(&self) -> Vec<f64> {
+        let mut out = Vec::with_capacity(Self::flat_dim(self.d(), self.m()));
+        out.extend_from_slice(self.w.data());
+        out.extend_from_slice(&self.mu);
+        out.push(self.a);
+        out
+    }
+
+    /// Inverse of [`flatten`].
+    pub fn unflatten(d: usize, m: usize, flat: &[f64]) -> PpcaParams {
+        assert_eq!(flat.len(), Self::flat_dim(d, m), "unflatten length");
+        PpcaParams {
+            w: Mat::from_rows(d, m, &flat[..d * m]),
+            mu: flat[d * m..d * m + d].to_vec(),
+            a: flat[d * m + d],
+        }
+    }
+}
+
+/// Masked raw moments of a node's data block (output of the L1 kernel):
+/// `n = Σ m_k`, `sx = Σ m_k x_k`, `sxx = Σ m_k x_k x_kᵀ`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Moments {
+    pub n: f64,
+    pub sx: Vec<f64>,
+    pub sxx: Mat,
+}
+
+impl Moments {
+    pub fn d(&self) -> usize {
+        self.sx.len()
+    }
+
+    /// Centred scatter S(μ) = Sxx − sx μᵀ − μ sxᵀ + n μμᵀ.
+    pub fn centred_scatter(&self, mu: &[f64]) -> Mat {
+        let d = self.d();
+        let mut s = self.sxx.clone();
+        for i in 0..d {
+            for j in 0..d {
+                s[(i, j)] += -self.sx[i] * mu[j] - mu[i] * self.sx[j]
+                    + self.n * mu[i] * mu[j];
+            }
+        }
+        s
+    }
+
+    /// Sample mean (undefined for empty blocks → zeros).
+    pub fn mean(&self) -> Vec<f64> {
+        if self.n <= 0.0 {
+            return vec![0.0; self.d()];
+        }
+        self.sx.iter().map(|x| x / self.n).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn flatten_roundtrip() {
+        prop::check("unflatten ∘ flatten = id", |rng| {
+            let d = 2 + rng.below(8);
+            let m = 1 + rng.below(d.min(4));
+            let p = PpcaParams {
+                w: Mat::randn(d, m, rng),
+                mu: rng.normal_vec(d),
+                a: rng.range(0.1, 5.0),
+            };
+            let q = PpcaParams::unflatten(d, m, &p.flatten());
+            assert_eq!(p, q);
+            assert_eq!(p.flatten().len(), PpcaParams::flat_dim(d, m));
+        });
+    }
+
+    #[test]
+    fn centred_scatter_matches_direct() {
+        prop::check("S(μ) from moments = direct Σ(x−μ)(x−μ)ᵀ", |rng| {
+            let d = 2 + rng.below(5);
+            let n = 3 + rng.below(10);
+            let x = Mat::randn(d, n, rng);
+            let mu = rng.normal_vec(d);
+            let mom = moments_of(&x);
+            let s = mom.centred_scatter(&mu);
+            let mut direct = Mat::zeros(d, d);
+            for k in 0..n {
+                let xc: Vec<f64> = (0..d).map(|r| x[(r, k)] - mu[r]).collect();
+                direct += &Mat::outer(&xc, &xc);
+            }
+            assert!(s.max_abs_diff(&direct) < 1e-9);
+        });
+    }
+
+    fn moments_of(x: &Mat) -> Moments {
+        let (d, n) = x.shape();
+        let mut sx = vec![0.0; d];
+        let mut sxx = Mat::zeros(d, d);
+        for k in 0..n {
+            let col = x.col(k);
+            for i in 0..d {
+                sx[i] += col[i];
+            }
+            sxx += &Mat::outer(&col, &col);
+        }
+        Moments { n: n as f64, sx, sxx }
+    }
+
+    #[test]
+    fn mean_of_empty_block() {
+        let m = Moments { n: 0.0, sx: vec![0.0; 3], sxx: Mat::zeros(3, 3) };
+        assert_eq!(m.mean(), vec![0.0; 3]);
+        let mut rng = Pcg::seed(1);
+        let x = Mat::randn(3, 5, &mut rng);
+        let mom = moments_of(&x);
+        let mean = mom.mean();
+        for i in 0..3 {
+            let direct: f64 = x.row(i).iter().sum::<f64>() / 5.0;
+            assert!((mean[i] - direct).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+/// Errors surfaced by the fadmm library.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Shape or dimension mismatch in linear algebra / marshalling.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Numerical failure (singular matrix, non-convergence of a factorization).
+    #[error("numerical failure: {0}")]
+    Numeric(String),
+
+    /// Invalid configuration (topology, scheme parameters, experiment spec).
+    #[error("invalid config: {0}")]
+    Config(String),
+
+    /// Artifact manifest / HLO loading problems.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// JSON parse error (in-repo parser, see `util::json`).
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Propagated XLA/PJRT error.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O error with context.
+    #[error("io error ({context}): {source}")]
+    Io {
+        context: String,
+        #[source]
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Attach a context string to an I/O error.
+    pub fn io(context: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { context: context.into(), source }
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,179 @@
+//! A1-A3 — ablations over the design choices DESIGN.md calls out.
+//!
+//! * `eta0` — η⁰ sensitivity: the adaptive schemes' selling point is
+//!   reduced dependence on the initial penalty (paper §2.1 on He et al.);
+//! * `budget` — NAP's (𝒯, α, β) sweep: convergence cost of the budget;
+//! * `vp` — VP's μ threshold and the homogeneous reset on/off (the paper
+//!   argues the reset is required — §3.1).
+
+use std::path::Path;
+
+use super::common::{run_dppca, BackendChoice, DppcaSpec};
+use crate::data::{even_split, SubspaceSpec};
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::linalg::Mat;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct AblationConfig {
+    pub seeds: usize,
+    pub backend: BackendChoice,
+    pub max_iters: usize,
+    /// nodes in the (complete) graph
+    pub j: usize,
+}
+
+impl Default for AblationConfig {
+    fn default() -> Self {
+        AblationConfig { seeds: 5, backend: BackendChoice::Native, max_iters: 400, j: 20 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub name: String,
+    pub variant: String,
+    pub scheme: SchemeKind,
+    pub median_iters: f64,
+    pub median_final_angle: f64,
+}
+
+fn run_variant(cfg: &AblationConfig, scheme: SchemeKind, params: SchemeParams,
+               backend: &crate::runtime::SharedBackend)
+               -> Result<(f64, f64)> {
+    let data = SubspaceSpec::default().generate(&mut Pcg::seed(7));
+    let part = even_split(500, cfg.j);
+    let blocks: Vec<Mat> = part
+        .ranges
+        .iter()
+        .map(|&(lo, hi)| data.x.col_slice(lo, hi))
+        .collect();
+    let graph = Topology::Complete.build(cfg.j)?;
+    let mut iters = Vec::new();
+    let mut finals = Vec::new();
+    for seed in 0..cfg.seeds as u64 {
+        let mut spec = DppcaSpec::new(blocks.clone(), part.padded, 5, graph.clone(), scheme);
+        spec.params = params;
+        spec.seed = seed;
+        spec.max_iters = cfg.max_iters;
+        spec.reference = Some(&data.w_true);
+        let r = run_dppca(&spec, backend.clone())?;
+        iters.push(r.iterations as f64);
+        finals.push(r.final_angle);
+    }
+    Ok((stats::median(&iters), stats::median(&finals)))
+}
+
+/// A1: η⁰ ∈ {1, 10, 100} across Fixed / VP / AP / NAP.
+pub fn eta0(cfg: &AblationConfig, out: &Path) -> Result<Vec<AblationRow>> {
+    let backend = cfg.backend.build()?;
+    let mut rows = Vec::new();
+    for &eta0 in &[1.0, 10.0, 100.0] {
+        for scheme in [SchemeKind::Fixed, SchemeKind::Vp, SchemeKind::Ap, SchemeKind::Nap] {
+            let params = SchemeParams { eta0, ..Default::default() };
+            let (mi, ma) = run_variant(cfg, scheme, params, &backend)?;
+            rows.push(AblationRow {
+                name: "eta0".into(),
+                variant: format!("eta0={eta0}"),
+                scheme,
+                median_iters: mi,
+                median_final_angle: ma,
+            });
+        }
+    }
+    write_rows(&rows, out, "ablation_eta0.csv")?;
+    Ok(rows)
+}
+
+/// A2: NAP budget sweep (𝒯, α, β).
+pub fn budget(cfg: &AblationConfig, out: &Path) -> Result<Vec<AblationRow>> {
+    let backend = cfg.backend.build()?;
+    let mut rows = Vec::new();
+    for &budget in &[0.5, 1.0, 2.0] {
+        for &alpha in &[0.3, 0.5, 0.9] {
+            let params = SchemeParams { budget, alpha, ..Default::default() };
+            let (mi, ma) = run_variant(cfg, SchemeKind::Nap, params, &backend)?;
+            rows.push(AblationRow {
+                name: "budget".into(),
+                variant: format!("T={budget};alpha={alpha}"),
+                scheme: SchemeKind::Nap,
+                median_iters: mi,
+                median_final_angle: ma,
+            });
+        }
+    }
+    for &beta in &[0.01, 0.1, 0.5] {
+        let params = SchemeParams { beta, ..Default::default() };
+        let (mi, ma) = run_variant(cfg, SchemeKind::Nap, params, &backend)?;
+        rows.push(AblationRow {
+            name: "budget".into(),
+            variant: format!("beta={beta}"),
+            scheme: SchemeKind::Nap,
+            median_iters: mi,
+            median_final_angle: ma,
+        });
+    }
+    write_rows(&rows, out, "ablation_budget.csv")?;
+    Ok(rows)
+}
+
+/// A3: VP μ threshold and reset-vs-freeze at t_max.
+pub fn vp(cfg: &AblationConfig, out: &Path) -> Result<Vec<AblationRow>> {
+    let backend = cfg.backend.build()?;
+    let mut rows = Vec::new();
+    for &mu in &[2.0, 10.0, 50.0] {
+        for &reset in &[true, false] {
+            let params = SchemeParams { mu, vp_reset: reset, ..Default::default() };
+            let (mi, ma) = run_variant(cfg, SchemeKind::Vp, params, &backend)?;
+            rows.push(AblationRow {
+                name: "vp".into(),
+                variant: format!("mu={mu};reset={reset}"),
+                scheme: SchemeKind::Vp,
+                median_iters: mi,
+                median_final_angle: ma,
+            });
+        }
+    }
+    write_rows(&rows, out, "ablation_vp.csv")?;
+    Ok(rows)
+}
+
+fn write_rows(rows: &[AblationRow], out: &Path, file: &str) -> Result<()> {
+    let mut w = CsvWriter::create(out.join(file),
+                                  &["name", "variant", "scheme", "median_iters",
+                                    "median_final_angle_deg"])?;
+    for r in rows {
+        w.row(&[r.name.clone(), r.variant.clone(), r.scheme.name().to_string(),
+                fnum(r.median_iters), fnum(r.median_final_angle)])?;
+    }
+    w.finish()
+}
+
+pub fn print_summary(rows: &[AblationRow]) {
+    println!("{:<8} {:<22} {:<12} {:>12} {:>16}", "ablation", "variant", "scheme",
+             "median iters", "final angle");
+    for r in rows {
+        println!("{:<8} {:<22} {:<12} {:>12.1} {:>16.4}", r.name, r.variant,
+                 r.scheme.name(), r.median_iters, r.median_final_angle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vp_ablation_smoke() {
+        let dir = std::env::temp_dir().join("fadmm_ablation_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = AblationConfig { seeds: 1, max_iters: 25, j: 6, ..Default::default() };
+        let rows = vp(&cfg, &dir).unwrap();
+        assert_eq!(rows.len(), 6);
+        assert!(dir.join("ablation_vp.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,197 @@
+//! E3/E5 — paper Fig. 3 & Fig. 5 (+ Fig. 4 description): distributed
+//! affine SfM on the five turntable objects.
+//!
+//! Five cameras on a complete or ring network; per-frame-centred,
+//! transposed measurement matrices (see [`crate::sfm`]); error = max
+//! subspace angle of any camera's W against the centralized SVD
+//! structure. Three settings, matching the paper's figure rows:
+//! (ring, t_max = 50), (complete, t_max = 50), (complete, t_max = 5).
+
+use std::path::Path;
+
+use super::common::{paper_schemes, run_dppca, BackendChoice, DppcaSpec};
+use crate::data::{turntable_objects, TurntableObject};
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::dppca::InitStrategy;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::sfm;
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::stats;
+
+pub const CAMERAS: usize = 5;
+
+/// The three experimental settings of Fig. 3 / Fig. 5.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Setting {
+    pub topo: Topology,
+    pub t_max: usize,
+}
+
+pub const SETTINGS: [Setting; 3] = [
+    Setting { topo: Topology::Ring, t_max: 50 },
+    Setting { topo: Topology::Complete, t_max: 50 },
+    Setting { topo: Topology::Complete, t_max: 5 },
+];
+
+fn setting_name(s: Setting) -> String {
+    format!("{}_tmax{}", s.topo.name(), s.t_max)
+}
+
+/// Summary row per (object, setting, scheme).
+#[derive(Debug, Clone)]
+pub struct CaltechRow {
+    pub object: String,
+    pub setting: String,
+    pub scheme: SchemeKind,
+    pub median_iterations: f64,
+    pub median_final_angle: f64,
+    pub curve: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct CaltechConfig {
+    pub seeds: usize,
+    pub backend: BackendChoice,
+    pub max_iters: usize,
+    pub schemes: Vec<SchemeKind>,
+    /// restrict to these object names (empty = all five)
+    pub objects: Vec<String>,
+    pub data_seed: u64,
+}
+
+impl Default for CaltechConfig {
+    fn default() -> Self {
+        CaltechConfig {
+            seeds: 5,
+            backend: BackendChoice::Native,
+            max_iters: 400,
+            schemes: paper_schemes().to_vec(),
+            objects: Vec::new(),
+            data_seed: 0,
+        }
+    }
+}
+
+/// Fig. 4 substitute: per-object dataset description + SVD baseline quality.
+pub fn describe(out_dir: &Path, data_seed: u64) -> Result<()> {
+    let objects = turntable_objects(data_seed);
+    let mut w = CsvWriter::create(out_dir.join("caltech_objects.csv"),
+                                  &["object", "points", "frames",
+                                    "svd_rank3_residual", "sigma4_over_sigma3"])?;
+    for o in &objects {
+        let (_, err) = sfm::svd_structure(&o.measurements)?;
+        let centred = sfm::center_rows(&o.measurements);
+        let svd = crate::linalg::Svd::new(&centred)?;
+        w.row(&[o.name.clone(), o.structure.rows().to_string(),
+                o.frames.to_string(), fnum(err), fnum(svd.s[3] / svd.s[2])])?;
+    }
+    w.finish()
+}
+
+/// Run one object × setting × scheme with restarts; returns the row.
+fn run_object(obj: &TurntableObject, setting: Setting, scheme: SchemeKind,
+              cfg: &CaltechConfig, backend: &crate::runtime::SharedBackend,
+              out_dir: &Path) -> Result<CaltechRow> {
+    let data = sfm::ppca_input(&obj.measurements);
+    let (baseline, _) = sfm::svd_structure(&obj.measurements)?;
+    let blocks = sfm::split_frames(&data, obj.frames, CAMERAS);
+    let n_padded = blocks.iter().map(|b| b.cols()).max().unwrap();
+    let graph = setting.topo.build(CAMERAS)?;
+
+    let mut curves = Vec::new();
+    let mut iters = Vec::new();
+    let mut finals = Vec::new();
+    for seed in 0..cfg.seeds as u64 {
+        let mut spec = DppcaSpec::new(blocks.clone(), n_padded, 3, graph.clone(), scheme);
+        spec.params = SchemeParams { t_max: setting.t_max, ..Default::default() };
+        spec.init = InitStrategy::LocalPca;
+        spec.seed = seed;
+        spec.max_iters = cfg.max_iters;
+        spec.reference = Some(&baseline);
+        let result = run_dppca(&spec, backend.clone())?;
+        iters.push(result.iterations as f64);
+        finals.push(result.final_angle);
+        curves.push(result.recorder.error_curve());
+    }
+    let curve = stats::median_curve(&curves);
+    let mut w = CsvWriter::create(
+        out_dir.join(format!("caltech_{}_{}_{}.csv", obj.name,
+                             setting_name(setting), scheme.name())),
+        &["iter", "median_angle_deg"],
+    )?;
+    for (t, v) in curve.iter().enumerate() {
+        w.row(&[t.to_string(), fnum(*v)])?;
+    }
+    w.finish()?;
+    Ok(CaltechRow {
+        object: obj.name.clone(),
+        setting: setting_name(setting),
+        scheme,
+        median_iterations: stats::median(&iters),
+        median_final_angle: stats::median(&finals),
+        curve,
+    })
+}
+
+/// Full sweep (all objects × settings × schemes).
+pub fn run(cfg: &CaltechConfig, out_dir: &Path) -> Result<Vec<CaltechRow>> {
+    let backend = cfg.backend.build()?;
+    let objects = turntable_objects(cfg.data_seed);
+    let selected: Vec<&TurntableObject> = objects
+        .iter()
+        .filter(|o| cfg.objects.is_empty() || cfg.objects.contains(&o.name))
+        .collect();
+    let mut rows = Vec::new();
+    for obj in selected {
+        for setting in SETTINGS {
+            for &scheme in &cfg.schemes {
+                rows.push(run_object(obj, setting, scheme, cfg, &backend, out_dir)?);
+            }
+        }
+    }
+    let mut w = CsvWriter::create(out_dir.join("caltech_summary.csv"),
+                                  &["object", "setting", "scheme",
+                                    "median_iters", "median_final_angle_deg"])?;
+    for r in &rows {
+        w.row(&[r.object.clone(), r.setting.clone(), r.scheme.name().to_string(),
+                fnum(r.median_iterations), fnum(r.median_final_angle)])?;
+    }
+    w.finish()?;
+    Ok(rows)
+}
+
+pub fn print_summary(rows: &[CaltechRow]) {
+    println!("{:<12} {:<18} {:<12} {:>12} {:>16}", "object", "setting", "scheme",
+             "median iters", "final angle");
+    for r in rows {
+        println!("{:<12} {:<18} {:<12} {:>12.1} {:>16.4}", r.object, r.setting,
+                 r.scheme.name(), r.median_iterations, r.median_final_angle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_object_single_setting() {
+        let dir = std::env::temp_dir().join("fadmm_caltech_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = CaltechConfig {
+            seeds: 1,
+            max_iters: 40,
+            schemes: vec![SchemeKind::Nap],
+            objects: vec!["Standing".to_string()],
+            ..Default::default()
+        };
+        let rows = run(&cfg, &dir).unwrap();
+        assert_eq!(rows.len(), SETTINGS.len());
+        for r in &rows {
+            assert!(r.median_final_angle.is_finite());
+        }
+        describe(&dir, 0).unwrap();
+        assert!(dir.join("caltech_objects.csv").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,188 @@
+//! Shared experiment plumbing: backend selection, one D-PPCA consensus
+//! run, and the subspace-angle observer.
+
+use crate::consensus::{Engine, EngineConfig};
+use crate::dppca::{DppcaSolver, InitStrategy, PpcaParams, UpdateMode};
+use crate::error::Result;
+use crate::graph::Graph;
+use crate::linalg::{max_principal_angle_deg, Mat};
+use crate::metrics::Recorder;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::runtime::{shared, NativeBackend, SharedBackend, XlaBackend};
+
+/// Which compute backend executes the node updates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendChoice {
+    /// AOT-lowered HLO artifacts through PJRT (the production path).
+    Xla,
+    /// Pure-Rust oracle (identical numbers; no artifacts needed).
+    Native,
+}
+
+impl BackendChoice {
+    pub fn parse(s: &str) -> Result<BackendChoice> {
+        match s {
+            "xla" => Ok(BackendChoice::Xla),
+            "native" => Ok(BackendChoice::Native),
+            _ => Err(crate::Error::Config(format!("unknown backend '{s}'"))),
+        }
+    }
+
+    /// Instantiate (XLA backends warm their executable cache lazily).
+    pub fn build(self) -> Result<SharedBackend> {
+        Ok(match self {
+            BackendChoice::Xla => shared(XlaBackend::from_default_dir()?),
+            BackendChoice::Native => shared(NativeBackend::new()),
+        })
+    }
+}
+
+/// One distributed PPCA problem instance.
+pub struct DppcaSpec<'a> {
+    /// per-node data blocks (D × N_i, unpadded)
+    pub blocks: Vec<Mat>,
+    /// padded per-node sample budget (must match an artifact shape)
+    pub n_padded: usize,
+    /// latent dimension
+    pub m: usize,
+    pub graph: Graph,
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    pub seed: u64,
+    pub max_iters: usize,
+    /// convergence tolerance on the relative objective change (paper: 1e-3)
+    pub tol: f64,
+    pub mode: UpdateMode,
+    pub init: InitStrategy,
+    /// ground-truth basis for the subspace-angle observer (D × M)
+    pub reference: Option<&'a Mat>,
+}
+
+impl<'a> DppcaSpec<'a> {
+    /// Defaults matching the paper's experimental setting.
+    pub fn new(blocks: Vec<Mat>, n_padded: usize, m: usize, graph: Graph,
+               scheme: SchemeKind) -> DppcaSpec<'a> {
+        DppcaSpec {
+            blocks,
+            n_padded,
+            m,
+            graph,
+            scheme,
+            params: SchemeParams::default(),
+            seed: 0,
+            max_iters: 600,
+            tol: 1e-3,
+            mode: UpdateMode::CachedMoments,
+            init: InitStrategy::Random,
+            reference: None,
+        }
+    }
+}
+
+/// Result of one run.
+#[derive(Debug)]
+pub struct DppcaRunResult {
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+    /// final per-node parameters
+    pub params: Vec<PpcaParams>,
+    /// final subspace-angle error vs the reference (NaN without reference)
+    pub final_angle: f64,
+}
+
+/// Max-over-nodes subspace angle between each node's W and `reference` —
+/// the paper's plotted error metric.
+pub fn max_angle_vs_reference(thetas: &[Vec<f64>], d: usize, m: usize,
+                              reference: &Mat) -> f64 {
+    thetas
+        .iter()
+        .map(|flat| {
+            let p = PpcaParams::unflatten(d, m, flat);
+            max_principal_angle_deg(&p.w, reference).unwrap_or(90.0)
+        })
+        .fold(0.0, f64::max)
+}
+
+/// Run one distributed D-PPCA instance on the chosen backend.
+pub fn run_dppca(spec: &DppcaSpec<'_>, backend: SharedBackend) -> Result<DppcaRunResult> {
+    let d = spec.blocks[0].rows();
+    let m = spec.m;
+    assert_eq!(spec.blocks.len(), spec.graph.len(), "one block per node");
+
+    let mut solvers = Vec::with_capacity(spec.blocks.len());
+    for block in &spec.blocks {
+        let solver = DppcaSolver::from_padded_block(block, spec.n_padded, m,
+                                                    backend.clone())?
+            .with_init(spec.init)
+            .with_mode(spec.mode);
+        solvers.push(solver);
+    }
+    let cfg = EngineConfig {
+        scheme: spec.scheme,
+        params: spec.params,
+        tol: spec.tol,
+        max_iters: spec.max_iters,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let mut engine = Engine::new(spec.graph.clone(), solvers, cfg);
+    let reference = spec.reference;
+    let report = match reference {
+        Some(basis) => engine.run_with(|_t, thetas| {
+            max_angle_vs_reference(thetas, d, m, basis)
+        }),
+        None => engine.run(),
+    };
+    let params: Vec<PpcaParams> = report
+        .thetas
+        .iter()
+        .map(|flat| PpcaParams::unflatten(d, m, flat))
+        .collect();
+    Ok(DppcaRunResult {
+        final_angle: report.recorder.final_error(),
+        iterations: report.iterations,
+        converged: report.converged,
+        recorder: report.recorder,
+        params,
+    })
+}
+
+/// Paper scheme lineup for the figures.
+pub fn paper_schemes() -> &'static [SchemeKind] {
+    &SchemeKind::PAPER
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{even_split, SubspaceSpec};
+    use crate::graph::Topology;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn dppca_consensus_recovers_subspace_native() {
+        // miniature fig2: 4 nodes, complete graph, native backend
+        let spec_data = SubspaceSpec { d: 8, m: 2, n: 60, noise_var: 0.1, random_mean: false };
+        let data = spec_data.generate(&mut Pcg::seed(1));
+        let part = even_split(60, 4);
+        let blocks: Vec<Mat> = part
+            .ranges
+            .iter()
+            .map(|&(lo, hi)| data.x.col_slice(lo, hi))
+            .collect();
+        let mut spec = DppcaSpec::new(blocks, 16, 2,
+                                      Topology::Complete.build(4).unwrap(),
+                                      SchemeKind::Ap);
+        spec.reference = Some(&data.w_true);
+        spec.max_iters = 400;
+        spec.tol = 1e-6;
+        let backend = BackendChoice::Native.build().unwrap();
+        let result = run_dppca(&spec, backend).unwrap();
+        assert!(result.final_angle < 10.0, "angle {}", result.final_angle);
+        assert!(result.params.iter().all(|p| p.a > 0.0));
+        // error decreased over the run
+        let curve = result.recorder.error_curve();
+        assert!(curve.last().unwrap() < &curve[0]);
+    }
+}

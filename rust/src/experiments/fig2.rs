@@ -1,0 +1,170 @@
+//! E1/E2 — paper Fig. 2: synthetic D-PPCA, subspace-angle error curves.
+//!
+//! Setup (paper §5.1): 500 samples of 20-dim observations from a 5-dim
+//! subspace N(0, I), measurement noise N(0, 0.2·I), samples split evenly
+//! over the nodes, η⁰ = 10, 20 random restarts, median curves reported.
+//!
+//! * axis "size": complete graphs with J ∈ {12, 16, 20};
+//! * axis "topology": J = 20 with complete / ring / cluster graphs.
+
+use std::path::Path;
+
+use super::common::{paper_schemes, run_dppca, BackendChoice, DppcaSpec};
+use crate::data::{even_split, SubspaceSpec};
+use crate::error::Result;
+use crate::graph::Topology;
+use crate::linalg::Mat;
+use crate::penalty::{SchemeKind, SchemeParams};
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::rng::Pcg;
+use crate::util::stats;
+
+/// One (configuration, scheme) summary row.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    pub config: String,
+    pub scheme: SchemeKind,
+    pub median_iterations: f64,
+    pub median_final_angle: f64,
+    /// median error curve (extended to the longest run)
+    pub curve: Vec<f64>,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    pub seeds: usize,
+    pub backend: BackendChoice,
+    pub max_iters: usize,
+    pub schemes: Vec<SchemeKind>,
+    /// include the size axis (Fig. 2a-c)
+    pub axis_size: bool,
+    /// include the topology axis (Fig. 2c-e)
+    pub axis_topology: bool,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            seeds: 20,
+            backend: BackendChoice::Native,
+            max_iters: 400,
+            schemes: paper_schemes().to_vec(),
+            axis_size: true,
+            axis_topology: true,
+        }
+    }
+}
+
+/// Run the sweep, write CSVs under `out_dir`, return the summary rows.
+pub fn run(cfg: &Fig2Config, out_dir: &Path) -> Result<Vec<Fig2Row>> {
+    let mut rows = Vec::new();
+    let mut targets: Vec<(String, usize, Topology, usize)> = Vec::new();
+    if cfg.axis_size {
+        for &j in &[12usize, 16, 20] {
+            targets.push((format!("size_J{j}"), j, Topology::Complete,
+                          even_split(500, j).padded));
+        }
+    }
+    if cfg.axis_topology {
+        for topo in [Topology::Complete, Topology::Ring, Topology::Cluster] {
+            targets.push((format!("topology_{}", topo.name()), 20, topo,
+                          even_split(500, 20).padded));
+        }
+    }
+
+    let backend = cfg.backend.build()?;
+    for (config_name, j, topo, n_padded) in targets {
+        let graph = topo.build(j)?;
+        for &scheme in &cfg.schemes {
+            let mut curves: Vec<Vec<f64>> = Vec::with_capacity(cfg.seeds);
+            let mut iters: Vec<f64> = Vec::with_capacity(cfg.seeds);
+            let mut finals: Vec<f64> = Vec::with_capacity(cfg.seeds);
+            for seed in 0..cfg.seeds as u64 {
+                // the *data* is fixed across restarts (paper: 20 random
+                // initializations of the same problem)
+                let data = SubspaceSpec::default().generate(&mut Pcg::seed(7));
+                let part = even_split(500, j);
+                let blocks: Vec<Mat> = part
+                    .ranges
+                    .iter()
+                    .map(|&(lo, hi)| data.x.col_slice(lo, hi))
+                    .collect();
+                let mut spec = DppcaSpec::new(blocks, n_padded, 5, graph.clone(), scheme);
+                spec.params = SchemeParams::default();
+                spec.seed = seed;
+                spec.max_iters = cfg.max_iters;
+                spec.reference = Some(&data.w_true);
+                let result = run_dppca(&spec, backend.clone())?;
+                iters.push(result.iterations as f64);
+                finals.push(result.final_angle);
+                curves.push(result.recorder.error_curve());
+            }
+            let median_curve = stats::median_curve(&curves);
+            let mut w = CsvWriter::create(
+                out_dir.join(format!("fig2_{config_name}_{}.csv", scheme.name())),
+                &["iter", "median_angle_deg"],
+            )?;
+            for (t, v) in median_curve.iter().enumerate() {
+                w.row(&[t.to_string(), fnum(*v)])?;
+            }
+            w.finish()?;
+            rows.push(Fig2Row {
+                config: config_name.clone(),
+                scheme,
+                median_iterations: stats::median(&iters),
+                median_final_angle: stats::median(&finals),
+                curve: median_curve,
+            });
+        }
+    }
+
+    // summary table
+    let mut w = CsvWriter::create(out_dir.join("fig2_summary.csv"),
+                                  &["config", "scheme", "median_iters",
+                                    "median_final_angle_deg"])?;
+    for r in &rows {
+        w.row(&[r.config.clone(), r.scheme.name().to_string(),
+                fnum(r.median_iterations), fnum(r.median_final_angle)])?;
+    }
+    w.finish()?;
+    Ok(rows)
+}
+
+/// Pretty-print the summary (CLI output).
+pub fn print_summary(rows: &[Fig2Row]) {
+    println!("{:<22} {:<12} {:>12} {:>18}", "config", "scheme", "median iters",
+             "final angle (deg)");
+    for r in rows {
+        println!("{:<22} {:<12} {:>12.1} {:>18.4}", r.config, r.scheme.name(),
+                 r.median_iterations, r.median_final_angle);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miniature_sweep_produces_all_rows() {
+        let dir = std::env::temp_dir().join("fadmm_fig2_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = Fig2Config {
+            seeds: 1,
+            max_iters: 30,
+            schemes: vec![SchemeKind::Fixed, SchemeKind::Ap],
+            axis_size: false,
+            axis_topology: true,
+            ..Default::default()
+        };
+        let rows = run(&cfg, &dir).unwrap();
+        assert_eq!(rows.len(), 3 * 2); // 3 topologies × 2 schemes
+        assert!(dir.join("fig2_summary.csv").exists());
+        assert!(dir.join("fig2_topology_ring_admm-ap.csv").exists());
+        for r in &rows {
+            assert!(r.median_final_angle.is_finite());
+            assert!(!r.curve.is_empty());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,19 @@
+//! Paper-experiment harness (see DESIGN.md §4 for the experiment index).
+//!
+//! Each submodule regenerates one paper artifact end to end — workload
+//! generation, distributed optimization across every penalty scheme, and
+//! CSV emission of the same rows/series the paper plots:
+//!
+//! * [`fig2`] — synthetic D-PPCA, graph size & topology sweeps (Fig. 2);
+//! * [`caltech`] — turntable SfM curves (Fig. 3 / Fig. 5, plus the Fig. 4
+//!   dataset description table);
+//! * [`hopkins`] — trajectory-corpus mean-iteration table (§5.2);
+//! * [`ablations`] — η⁰ sensitivity, NAP budget, VP μ/reset (ours).
+
+pub mod ablations;
+pub mod caltech;
+pub mod common;
+pub mod fig2;
+pub mod hopkins;
+
+pub use common::{BackendChoice, DppcaRunResult, DppcaSpec};

@@ -1,0 +1,246 @@
+//! Standard topology builders used across the paper's experiments.
+
+use super::{Graph, NodeId};
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg;
+
+/// Named topology families.
+///
+/// `Complete`, `Ring` and `Cluster` are the three used in the paper's
+/// synthetic study (§5.1); the rest are provided for ablations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Every pair connected.
+    Complete,
+    /// Cycle 0—1—…—(n−1)—0.
+    Ring,
+    /// Path 0—1—…—(n−1).
+    Chain,
+    /// Node 0 connected to all others.
+    Star,
+    /// Two complete halves linked by a single bridge edge (paper §5.1:
+    /// "a connected graph consisting of two complete graphs linked with
+    /// an edge").
+    Cluster,
+    /// √n × √n 4-neighbour grid (n must be a perfect square).
+    Grid,
+}
+
+impl Topology {
+    /// Build an n-node instance.
+    pub fn build(self, n: usize) -> Result<Graph> {
+        match self {
+            Topology::Complete => {
+                let mut edges = Vec::new();
+                for i in 0..n {
+                    for j in (i + 1)..n {
+                        edges.push((i, j));
+                    }
+                }
+                Graph::new(n, &edges)
+            }
+            Topology::Ring => {
+                if n < 3 {
+                    return Err(Error::Config("ring needs ≥ 3 nodes".into()));
+                }
+                let edges: Vec<_> = (0..n).map(|i| (i, (i + 1) % n)).collect();
+                Graph::new(n, &edges)
+            }
+            Topology::Chain => {
+                if n < 2 {
+                    return Err(Error::Config("chain needs ≥ 2 nodes".into()));
+                }
+                let edges: Vec<_> = (0..n - 1).map(|i| (i, i + 1)).collect();
+                Graph::new(n, &edges)
+            }
+            Topology::Star => {
+                if n < 2 {
+                    return Err(Error::Config("star needs ≥ 2 nodes".into()));
+                }
+                let edges: Vec<_> = (1..n).map(|i| (0, i)).collect();
+                Graph::new(n, &edges)
+            }
+            Topology::Cluster => {
+                if n < 4 {
+                    return Err(Error::Config("cluster needs ≥ 4 nodes".into()));
+                }
+                let half = n / 2;
+                let mut edges = Vec::new();
+                for i in 0..half {
+                    for j in (i + 1)..half {
+                        edges.push((i, j));
+                    }
+                }
+                for i in half..n {
+                    for j in (i + 1)..n {
+                        edges.push((i, j));
+                    }
+                }
+                // bridge between the last node of part one and the first of part two
+                edges.push((half - 1, half));
+                Graph::new(n, &edges)
+            }
+            Topology::Grid => {
+                let side = (n as f64).sqrt().round() as usize;
+                if side * side != n {
+                    return Err(Error::Config(format!("grid needs a square node count, got {n}")));
+                }
+                let mut edges = Vec::new();
+                for r in 0..side {
+                    for c in 0..side {
+                        let u = r * side + c;
+                        if c + 1 < side {
+                            edges.push((u, u + 1));
+                        }
+                        if r + 1 < side {
+                            edges.push((u, u + side));
+                        }
+                    }
+                }
+                Graph::new(n, &edges)
+            }
+        }
+    }
+
+    /// Parse from a CLI string.
+    pub fn parse(s: &str) -> Result<Topology> {
+        match s {
+            "complete" => Ok(Topology::Complete),
+            "ring" => Ok(Topology::Ring),
+            "chain" => Ok(Topology::Chain),
+            "star" => Ok(Topology::Star),
+            "cluster" => Ok(Topology::Cluster),
+            "grid" => Ok(Topology::Grid),
+            _ => Err(Error::Config(format!("unknown topology '{s}'"))),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Topology::Complete => "complete",
+            Topology::Ring => "ring",
+            Topology::Chain => "chain",
+            Topology::Star => "star",
+            Topology::Cluster => "cluster",
+            Topology::Grid => "grid",
+        }
+    }
+}
+
+/// Connected Erdős–Rényi G(n, p): sampled until connected (p well above the
+/// connectivity threshold in practice), with a spanning-tree fallback to
+/// guarantee termination.
+pub fn random_connected(n: usize, p: f64, rng: &mut Pcg) -> Result<Graph> {
+    if n == 0 {
+        return Err(Error::Config("graph: zero nodes".into()));
+    }
+    for _attempt in 0..64 {
+        let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.f64() < p {
+                    edges.push((i, j));
+                }
+            }
+        }
+        if let Ok(g) = Graph::new(n, &edges) {
+            return Ok(g);
+        }
+    }
+    // fallback: random spanning tree + extra edges
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+    for k in 1..n {
+        let parent = order[rng.below(k)];
+        edges.push((order[k], parent));
+    }
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if rng.f64() < p {
+                edges.push((i, j));
+            }
+        }
+    }
+    Graph::new(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn complete_degrees() {
+        let g = Topology::Complete.build(6).unwrap();
+        assert!((0..6).all(|i| g.degree(i) == 5));
+        assert_eq!(g.edge_count(), 15);
+        assert_eq!(g.diameter(), 1);
+    }
+
+    #[test]
+    fn ring_degrees_and_diameter() {
+        let g = Topology::Ring.build(8).unwrap();
+        assert!((0..8).all(|i| g.degree(i) == 2));
+        assert_eq!(g.diameter(), 4);
+    }
+
+    #[test]
+    fn cluster_structure() {
+        let g = Topology::Cluster.build(10).unwrap();
+        // bridge endpoints have degree 5, everyone else 4
+        assert_eq!(g.degree(4), 5);
+        assert_eq!(g.degree(5), 5);
+        assert_eq!(g.degree(0), 4);
+        assert_eq!(g.edge_count(), 2 * 10 + 1);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = Topology::Grid.build(9).unwrap();
+        assert_eq!(g.degree(4), 4); // centre
+        assert_eq!(g.degree(0), 2); // corner
+        assert!(Topology::Grid.build(8).is_err());
+    }
+
+    #[test]
+    fn star_and_chain() {
+        let star = Topology::Star.build(5).unwrap();
+        assert_eq!(star.degree(0), 4);
+        assert_eq!(star.diameter(), 2);
+        let chain = Topology::Chain.build(5).unwrap();
+        assert_eq!(chain.diameter(), 4);
+    }
+
+    #[test]
+    fn all_named_topologies_connected() {
+        prop::check("builders produce connected graphs", |rng| {
+            let n = 4 + rng.below(17);
+            for t in [Topology::Complete, Topology::Ring, Topology::Chain,
+                      Topology::Star, Topology::Cluster] {
+                let g = t.build(n).unwrap();
+                assert!(g.is_connected(), "{t:?} n={n}");
+            }
+        });
+    }
+
+    #[test]
+    fn random_connected_always_connected() {
+        prop::check("G(n,p) retried to connectivity", |rng| {
+            let n = 2 + rng.below(15);
+            let p = rng.range(0.05, 0.9);
+            let g = random_connected(n, p, rng).unwrap();
+            assert!(g.is_connected());
+            assert_eq!(g.len(), n);
+        });
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for t in [Topology::Complete, Topology::Ring, Topology::Chain,
+                  Topology::Star, Topology::Cluster, Topology::Grid] {
+            assert_eq!(Topology::parse(t.name()).unwrap(), t);
+        }
+        assert!(Topology::parse("möbius").is_err());
+    }
+}

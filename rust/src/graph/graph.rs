@@ -1,0 +1,202 @@
+//! Undirected connected graph with adjacency lists.
+
+use crate::error::{Error, Result};
+
+/// Node index.
+pub type NodeId = usize;
+/// Index into the directed-edge list.
+pub type EdgeId = usize;
+
+/// An undirected graph stored as sorted adjacency lists.
+///
+/// Invariants (enforced by [`Graph::new`]):
+/// * symmetric: `j ∈ B_i ⇔ i ∈ B_j`
+/// * irreflexive: no self-loops
+/// * connected (required by consensus ADMM for a consistent consensus)
+#[derive(Debug, Clone)]
+pub struct Graph {
+    adj: Vec<Vec<NodeId>>,
+    /// directed edge list (i, j) for all i, j ∈ B_i, in deterministic order
+    directed: Vec<(NodeId, NodeId)>,
+    /// directed.len() == 2 × undirected edge count
+    undirected_count: usize,
+}
+
+impl Graph {
+    /// Build and validate from undirected edge pairs.
+    pub fn new(n: usize, edges: &[(NodeId, NodeId)]) -> Result<Graph> {
+        if n == 0 {
+            return Err(Error::Config("graph: zero nodes".into()));
+        }
+        let mut adj: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+        for &(i, j) in edges {
+            if i >= n || j >= n {
+                return Err(Error::Config(format!("graph: edge ({i},{j}) out of range")));
+            }
+            if i == j {
+                return Err(Error::Config(format!("graph: self-loop at {i}")));
+            }
+            if !adj[i].contains(&j) {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+        for a in adj.iter_mut() {
+            a.sort_unstable();
+        }
+        let g = Graph {
+            undirected_count: adj.iter().map(|a| a.len()).sum::<usize>() / 2,
+            directed: adj
+                .iter()
+                .enumerate()
+                .flat_map(|(i, nb)| nb.iter().map(move |&j| (i, j)))
+                .collect(),
+            adj,
+        };
+        if n > 1 && !g.is_connected() {
+            return Err(Error::Config("graph: not connected".into()));
+        }
+        Ok(g)
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.adj.is_empty()
+    }
+
+    /// One-hop neighbours B_i (sorted).
+    pub fn neighbors(&self, i: NodeId) -> &[NodeId] {
+        &self.adj[i]
+    }
+
+    /// Degree |B_i|.
+    pub fn degree(&self, i: NodeId) -> usize {
+        self.adj[i].len()
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.undirected_count
+    }
+
+    /// All directed edges (i, j); each undirected edge appears twice.
+    /// Deterministic order: sorted by (i, j).
+    pub fn directed_edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.directed.iter().copied()
+    }
+
+    /// Index of directed edge (i, j) within node i's neighbour list.
+    pub fn edge_slot(&self, i: NodeId, j: NodeId) -> Option<usize> {
+        self.adj[i].binary_search(&j).ok()
+    }
+
+    /// BFS connectivity check.
+    pub fn is_connected(&self) -> bool {
+        if self.adj.is_empty() {
+            return false;
+        }
+        let mut seen = vec![false; self.adj.len()];
+        let mut queue = std::collections::VecDeque::from([0usize]);
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for &v in &self.adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.adj.len()
+    }
+
+    /// Graph diameter (longest shortest path); O(V·E) BFS from each node.
+    pub fn diameter(&self) -> usize {
+        let mut best = 0;
+        for s in 0..self.len() {
+            let mut dist = vec![usize::MAX; self.len()];
+            dist[s] = 0;
+            let mut queue = std::collections::VecDeque::from([s]);
+            while let Some(u) = queue.pop_front() {
+                for &v in &self.adj[u] {
+                    if dist[v] == usize::MAX {
+                        dist[v] = dist[u] + 1;
+                        queue.push_back(v);
+                    }
+                }
+            }
+            best = best.max(dist.iter().copied().max().unwrap_or(0));
+        }
+        best
+    }
+
+    /// Mean degree (graph-connectivity proxy used in experiment summaries).
+    pub fn mean_degree(&self) -> f64 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        self.adj.iter().map(|a| a.len()).sum::<usize>() as f64 / self.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_invariants() {
+        let g = Graph::new(4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edge_count(), 3);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.diameter(), 3);
+    }
+
+    #[test]
+    fn symmetry_of_directed_edges() {
+        let g = Graph::new(5, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 0)]).unwrap();
+        for (i, j) in g.directed_edges() {
+            assert!(g.neighbors(j).contains(&i));
+        }
+        assert_eq!(g.directed_edges().count(), 2 * g.edge_count());
+    }
+
+    #[test]
+    fn dedupes_parallel_edges() {
+        let g = Graph::new(3, &[(0, 1), (1, 0), (1, 2)]).unwrap();
+        assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn rejects_disconnected() {
+        assert!(Graph::new(4, &[(0, 1), (2, 3)]).is_err());
+    }
+
+    #[test]
+    fn rejects_self_loop_and_range() {
+        assert!(Graph::new(3, &[(0, 0)]).is_err());
+        assert!(Graph::new(3, &[(0, 5)]).is_err());
+    }
+
+    #[test]
+    fn singleton_graph_ok() {
+        let g = Graph::new(1, &[]).unwrap();
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.degree(0), 0);
+    }
+
+    #[test]
+    fn edge_slot_lookup() {
+        let g = Graph::new(4, &[(0, 2), (0, 3), (0, 1)]).unwrap();
+        assert_eq!(g.edge_slot(0, 1), Some(0));
+        assert_eq!(g.edge_slot(0, 2), Some(1));
+        assert_eq!(g.edge_slot(0, 3), Some(2));
+        assert_eq!(g.edge_slot(1, 2), None);
+    }
+}

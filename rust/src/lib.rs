@@ -1,0 +1,39 @@
+//! # fadmm — Fast ADMM for Distributed Optimization with Adaptive Penalty
+//!
+//! A full-system reproduction of Song, Yoon & Pavlovic (AAAI 2016): a fully
+//! decentralized consensus-ADMM runtime whose per-node / per-edge penalty
+//! parameters adapt every iteration (schemes VP, AP, NAP and combinations),
+//! applied to distributed probabilistic PCA and affine structure from
+//! motion.
+//!
+//! ## Architecture (three layers, Python never at runtime)
+//!
+//! * **L3 — this crate**: graph topology, node actors, per-edge penalty
+//!   schedulers ([`penalty`]), the consensus engine ([`consensus`]), the
+//!   D-PPCA application ([`dppca`]), experiments and benches.
+//! * **L2 — JAX (build time)**: the node EM/consensus update, lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **L1 — Pallas (build time)**: the data-touching moment/E-step kernels
+//!   embedded in the L2 program.
+//!
+//! The [`runtime`] module loads the lowered artifacts through the PJRT CPU
+//! client (`xla` crate) and exposes them behind a [`runtime::Backend`]
+//! trait; a pure-Rust [`runtime::NativeBackend`] implements the identical
+//! math for artifact-free tests and as a cross-check oracle.
+
+pub mod config;
+pub mod consensus;
+pub mod coordinator;
+pub mod data;
+pub mod dppca;
+pub mod error;
+pub mod experiments;
+pub mod graph;
+pub mod linalg;
+pub mod metrics;
+pub mod penalty;
+pub mod runtime;
+pub mod sfm;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,154 @@
+//! Cholesky factorization of SPD matrices.
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Debug, Clone)]
+pub struct Cholesky {
+    l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix; fails on non-positive pivots.
+    pub fn new(a: &Mat) -> Result<Cholesky> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Shape("cholesky: matrix not square".into()));
+        }
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a[(i, j)];
+                for k in 0..j {
+                    sum -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if sum <= 0.0 || !sum.is_finite() {
+                        return Err(Error::Numeric(format!(
+                            "cholesky: non-positive pivot {sum:.3e} at {i}"
+                        )));
+                    }
+                    l[(i, j)] = sum.sqrt();
+                } else {
+                    l[(i, j)] = sum / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// The factor L.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows();
+        debug_assert_eq!(b.len(), n);
+        // forward: L y = b
+        let mut y = b.to_vec();
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.l[(i, k)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        // backward: Lᵀ x = y
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                y[i] -= self.l[(k, i)] * y[k];
+            }
+            y[i] /= self.l[(i, i)];
+        }
+        y
+    }
+
+    /// Solve `A X = B` column-wise.
+    pub fn solve(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows(), b.cols());
+        for c in 0..b.cols() {
+            out.set_col(c, &self.solve_vec(&b.col(c)));
+        }
+        out
+    }
+
+    /// A⁻¹ (via n solves against identity).
+    pub fn inverse(&self) -> Mat {
+        self.solve(&Mat::eye(self.l.rows()))
+    }
+
+    /// log det A = 2 Σ log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_spd(n: usize, rng: &mut crate::util::rng::Pcg) -> Mat {
+        let b = Mat::randn(n, n, rng);
+        let mut spd = b.matmul_t(&b);
+        for i in 0..n {
+            spd[(i, i)] += n as f64;
+        }
+        spd
+    }
+
+    #[test]
+    fn reconstructs() {
+        prop::check("L Lᵀ = A", |rng| {
+            let n = 1 + rng.below(8);
+            let a = random_spd(n, rng);
+            let ch = Cholesky::new(&a).unwrap();
+            let rec = ch.l().matmul_t(ch.l());
+            assert!(rec.max_abs_diff(&a) < 1e-9 * (n as f64));
+        });
+    }
+
+    #[test]
+    fn solve_inverts() {
+        prop::check("A·solve(A,b) = b", |rng| {
+            let n = 1 + rng.below(8);
+            let a = random_spd(n, rng);
+            let b = rng.normal_vec(n);
+            let x = Cholesky::new(&a).unwrap().solve_vec(&b);
+            let back = a.matvec(&x);
+            for (u, v) in back.iter().zip(&b) {
+                assert!((u - v).abs() < 1e-8, "{u} vs {v}");
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        prop::check("A A⁻¹ = I", |rng| {
+            let n = 1 + rng.below(7);
+            let a = random_spd(n, rng);
+            let inv = Cholesky::new(&a).unwrap().inverse();
+            assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_rows(2, 2, &[4.0, 1.0, 1.0, 3.0]);
+        let ld = Cholesky::new(&a).unwrap().logdet();
+        assert!((ld - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 1.0]); // eigenvalues 3, −1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn rejects_non_square() {
+        assert!(Cholesky::new(&Mat::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,160 @@
+//! LU factorization with partial pivoting (general square systems).
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Packed LU factors with a row-permutation vector.
+#[derive(Debug, Clone)]
+pub struct Lu {
+    lu: Mat,
+    perm: Vec<usize>,
+    sign: f64,
+}
+
+impl Lu {
+    /// Factor a square matrix; fails if (numerically) singular.
+    pub fn new(a: &Mat) -> Result<Lu> {
+        let n = a.rows();
+        if a.cols() != n {
+            return Err(Error::Shape("lu: matrix not square".into()));
+        }
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut sign = 1.0;
+        for k in 0..n {
+            // partial pivot
+            let mut p = k;
+            let mut best = lu[(k, k)].abs();
+            for r in (k + 1)..n {
+                let v = lu[(r, k)].abs();
+                if v > best {
+                    best = v;
+                    p = r;
+                }
+            }
+            if best < 1e-300 {
+                return Err(Error::Numeric(format!("lu: singular at column {k}")));
+            }
+            if p != k {
+                perm.swap(p, k);
+                sign = -sign;
+                for c in 0..n {
+                    let tmp = lu[(k, c)];
+                    lu[(k, c)] = lu[(p, c)];
+                    lu[(p, c)] = tmp;
+                }
+            }
+            let pivot = lu[(k, k)];
+            for r in (k + 1)..n {
+                let factor = lu[(r, k)] / pivot;
+                lu[(r, k)] = factor;
+                for c in (k + 1)..n {
+                    let sub = factor * lu[(k, c)];
+                    lu[(r, c)] -= sub;
+                }
+            }
+        }
+        Ok(Lu { lu, perm, sign })
+    }
+
+    /// Solve `A x = b`.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.lu.rows();
+        debug_assert_eq!(b.len(), n);
+        let mut y: Vec<f64> = self.perm.iter().map(|&p| b[p]).collect();
+        // forward substitution (unit lower)
+        for i in 0..n {
+            for k in 0..i {
+                y[i] -= self.lu[(i, k)] * y[k];
+            }
+        }
+        // backward substitution
+        for i in (0..n).rev() {
+            for k in (i + 1)..n {
+                y[i] -= self.lu[(i, k)] * y[k];
+            }
+            y[i] /= self.lu[(i, i)];
+        }
+        y
+    }
+
+    /// Solve for a matrix right-hand side.
+    pub fn solve(&self, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(b.rows(), b.cols());
+        for c in 0..b.cols() {
+            out.set_col(c, &self.solve_vec(&b.col(c)));
+        }
+        out
+    }
+
+    /// A⁻¹.
+    pub fn inverse(&self) -> Mat {
+        self.solve(&Mat::eye(self.lu.rows()))
+    }
+
+    /// Determinant.
+    pub fn det(&self) -> f64 {
+        let mut d = self.sign;
+        for i in 0..self.lu.rows() {
+            d *= self.lu[(i, i)];
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn solves_random_systems() {
+        prop::check("LU solve", |rng| {
+            let n = 1 + rng.below(8);
+            let a = Mat::randn(n, n, rng);
+            // regularize so random matrices are safely invertible
+            let mut a = a;
+            for i in 0..n {
+                a[(i, i)] += 3.0;
+            }
+            let x_true = rng.normal_vec(n);
+            let b = a.matvec(&x_true);
+            let x = Lu::new(&a).unwrap().solve_vec(&b);
+            for (u, v) in x.iter().zip(&x_true) {
+                assert!((u - v).abs() < 1e-8);
+            }
+        });
+    }
+
+    #[test]
+    fn inverse_roundtrip() {
+        prop::check("A A⁻¹ = I (LU)", |rng| {
+            let n = 1 + rng.below(7);
+            let mut a = Mat::randn(n, n, rng);
+            for i in 0..n {
+                a[(i, i)] += 3.0;
+            }
+            let inv = Lu::new(&a).unwrap().inverse();
+            assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn det_2x2() {
+        let a = Mat::from_rows(2, 2, &[3.0, 1.0, 4.0, 2.0]);
+        assert!((Lu::new(&a).unwrap().det() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn det_permutation_sign() {
+        // row-swapped identity has det −1
+        let a = Mat::from_rows(2, 2, &[0.0, 1.0, 1.0, 0.0]);
+        assert!((Lu::new(&a).unwrap().det() + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 2.0, 4.0]);
+        assert!(Lu::new(&a).is_err());
+    }
+}

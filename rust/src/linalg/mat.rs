@@ -1,0 +1,496 @@
+//! Dense row-major matrix.
+
+use std::fmt;
+use std::ops::{Add, AddAssign, Index, IndexMut, Mul, Neg, Sub, SubAssign};
+
+use crate::error::{Error, Result};
+use crate::util::rng::Pcg;
+
+/// Dense f64 matrix, row-major storage.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major slice.
+    pub fn from_rows(rows: usize, cols: usize, data: &[f64]) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_rows: length mismatch");
+        Mat { rows, cols, data: data.to_vec() }
+    }
+
+    /// Take ownership of a row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "from_vec: length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Column vector from a slice.
+    pub fn col_vec(data: &[f64]) -> Mat {
+        Mat::from_rows(data.len(), 1, data)
+    }
+
+    /// Matrix of i.i.d. standard normals.
+    pub fn randn(rows: usize, cols: usize, rng: &mut Pcg) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Row-major data slice.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// One row as a slice.
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Set column `c` from a slice.
+    pub fn set_col(&mut self, c: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self[(r, c)] = v[r];
+        }
+    }
+
+    /// Transpose.
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// Matrix product `self * other`.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul: {}x{} * {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        // ikj loop order: stream over `other` rows for cache friendliness
+        for i in 0..self.rows {
+            let out_row = &mut out.data[i * other.cols..(i + 1) * other.cols];
+            for k in 0..self.cols {
+                let aik = self.data[i * self.cols + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[k * other.cols..(k + 1) * other.cols];
+                for (o, &b) in out_row.iter_mut().zip(brow) {
+                    *o += aik * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `selfᵀ * other` without materializing the transpose.
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "t_matmul shape");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        for k in 0..self.rows {
+            let arow = self.row(k);
+            let brow = other.row(k);
+            for (i, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * other.cols..(i + 1) * other.cols];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * otherᵀ` without materializing the transpose.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            for j in 0..other.rows {
+                let brow = other.row(j);
+                out[(i, j)] = dot(arow, brow);
+            }
+        }
+        out
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, v.len(), "matvec shape");
+        (0..self.rows).map(|r| dot(self.row(r), v)).collect()
+    }
+
+    /// `selfᵀ v` without materializing the transpose.
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, v.len(), "t_matvec shape");
+        let mut out = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            let vr = v[r];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o += vr * x;
+            }
+        }
+        out
+    }
+
+    /// Outer product of two vectors.
+    pub fn outer(u: &[f64], v: &[f64]) -> Mat {
+        let mut m = Mat::zeros(u.len(), v.len());
+        for (i, &ui) in u.iter().enumerate() {
+            for (j, &vj) in v.iter().enumerate() {
+                m[(i, j)] = ui * vj;
+            }
+        }
+        m
+    }
+
+    /// Scale in place.
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    /// Add `s * other` into self (axpy).
+    pub fn axpy(&mut self, s: f64, other: &Mat) {
+        assert_eq!(self.shape(), other.shape(), "axpy shape");
+        for (a, &b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Trace.
+    pub fn trace(&self) -> f64 {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Frobenius inner product ⟨self, other⟩.
+    pub fn fro_dot(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape(), "fro_dot shape");
+        dot(&self.data, &other.data)
+    }
+
+    /// Max |a_ij − b_ij|.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!(self.shape(), other.shape());
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Columns `lo..hi` as a new matrix.
+    pub fn col_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.cols);
+        let mut out = Mat::zeros(self.rows, hi - lo);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[lo..hi]);
+        }
+        out
+    }
+
+    /// Rows `lo..hi` as a new matrix.
+    pub fn row_slice(&self, lo: usize, hi: usize) -> Mat {
+        assert!(lo <= hi && hi <= self.rows);
+        Mat::from_rows(hi - lo, self.cols, &self.data[lo * self.cols..hi * self.cols])
+    }
+
+    /// Stack two matrices vertically.
+    pub fn vstack(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "vstack shape");
+        let mut data = self.data.clone();
+        data.extend_from_slice(&other.data);
+        Mat::from_vec(self.rows + other.rows, self.cols, data)
+    }
+
+    /// Symmetrize: (A + Aᵀ)/2.
+    pub fn symmetrize(&self) -> Mat {
+        assert_eq!(self.rows, self.cols);
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            for j in (i + 1)..self.cols {
+                let v = 0.5 * (self[(i, j)] + self[(j, i)]);
+                out[(i, j)] = v;
+                out[(j, i)] = v;
+            }
+        }
+        out
+    }
+
+    /// Check all entries are finite.
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    /// Error unless shapes match (library-boundary validation).
+    pub fn expect_shape(&self, rows: usize, cols: usize, what: &str) -> Result<()> {
+        if self.shape() != (rows, cols) {
+            return Err(Error::Shape(format!(
+                "{what}: expected {rows}x{cols}, got {}x{}",
+                self.rows, self.cols
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Dot product of two slices.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Add for &Mat {
+    type Output = Mat;
+    fn add(self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "add shape");
+        let mut out = self.clone();
+        out.axpy(1.0, other);
+        out
+    }
+}
+
+impl Sub for &Mat {
+    type Output = Mat;
+    fn sub(self, other: &Mat) -> Mat {
+        assert_eq!(self.shape(), other.shape(), "sub shape");
+        let mut out = self.clone();
+        out.axpy(-1.0, other);
+        out
+    }
+}
+
+impl AddAssign<&Mat> for Mat {
+    fn add_assign(&mut self, other: &Mat) {
+        self.axpy(1.0, other);
+    }
+}
+
+impl SubAssign<&Mat> for Mat {
+    fn sub_assign(&mut self, other: &Mat) {
+        self.axpy(-1.0, other);
+    }
+}
+
+impl Mul<&Mat> for &Mat {
+    type Output = Mat;
+    fn mul(self, other: &Mat) -> Mat {
+        self.matmul(other)
+    }
+}
+
+impl Neg for &Mat {
+    type Output = Mat;
+    fn neg(self) -> Mat {
+        self.scale(-1.0)
+    }
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        for r in 0..self.rows.min(8) {
+            write!(f, "  ")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:>10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_rows(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        prop::check("(Aᵀ)ᵀ = A", |rng| {
+            let (r, c) = (1 + rng.below(6), 1 + rng.below(6));
+            let a = Mat::randn(r, c, rng);
+            assert_eq!(a.t().t(), a);
+        });
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit() {
+        prop::check("AᵀB fused = explicit", |rng| {
+            let (r, c1, c2) = (1 + rng.below(5), 1 + rng.below(5), 1 + rng.below(5));
+            let a = Mat::randn(r, c1, rng);
+            let b = Mat::randn(r, c2, rng);
+            assert!(a.t_matmul(&b).max_abs_diff(&a.t().matmul(&b)) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit() {
+        prop::check("ABᵀ fused = explicit", |rng| {
+            let (r1, c, r2) = (1 + rng.below(5), 1 + rng.below(5), 1 + rng.below(5));
+            let a = Mat::randn(r1, c, rng);
+            let b = Mat::randn(r2, c, rng);
+            assert!(a.matmul_t(&b).max_abs_diff(&a.matmul(&b.t())) < 1e-12);
+        });
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        prop::check("Av = A·[v]", |rng| {
+            let (r, c) = (1 + rng.below(6), 1 + rng.below(6));
+            let a = Mat::randn(r, c, rng);
+            let v = rng.normal_vec(c);
+            let got = a.matvec(&v);
+            let want = a.matmul(&Mat::col_vec(&v));
+            for (i, g) in got.iter().enumerate() {
+                assert!((g - want[(i, 0)]).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn t_matvec_matches() {
+        prop::check("Aᵀv fused", |rng| {
+            let (r, c) = (1 + rng.below(6), 1 + rng.below(6));
+            let a = Mat::randn(r, c, rng);
+            let v = rng.normal_vec(r);
+            let got = a.t_matvec(&v);
+            let want = a.t().matvec(&v);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn associativity_within_tolerance() {
+        prop::check("(AB)C ≈ A(BC)", |rng| {
+            let n = 1 + rng.below(5);
+            let a = Mat::randn(n, n, rng);
+            let b = Mat::randn(n, n, rng);
+            let c = Mat::randn(n, n, rng);
+            let lhs = a.matmul(&b).matmul(&c);
+            let rhs = a.matmul(&b.matmul(&c));
+            assert!(lhs.max_abs_diff(&rhs) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn slices_and_stack() {
+        let a = Mat::from_rows(3, 2, &[1., 2., 3., 4., 5., 6.]);
+        assert_eq!(a.row_slice(1, 3).data(), &[3., 4., 5., 6.]);
+        assert_eq!(a.col_slice(1, 2).data(), &[2., 4., 6.]);
+        let b = a.row_slice(0, 1).vstack(&a.row_slice(2, 3));
+        assert_eq!(b.data(), &[1., 2., 5., 6.]);
+    }
+
+    #[test]
+    fn outer_and_trace() {
+        let m = Mat::outer(&[1.0, 2.0], &[3.0, 4.0]);
+        assert_eq!(m.data(), &[3.0, 4.0, 6.0, 8.0]);
+        assert_eq!(Mat::eye(4).trace(), 4.0);
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        prop::check("symmetrize", |rng| {
+            let n = 1 + rng.below(6);
+            let s = Mat::randn(n, n, rng).symmetrize();
+            assert!(s.max_abs_diff(&s.t()) == 0.0);
+        });
+    }
+
+    #[test]
+    fn expect_shape_errors() {
+        let a = Mat::zeros(2, 3);
+        assert!(a.expect_shape(2, 3, "ok").is_ok());
+        assert!(a.expect_shape(3, 2, "bad").is_err());
+    }
+}

@@ -1,0 +1,23 @@
+//! Dense linear algebra substrate.
+//!
+//! No LA crates are available in the offline build, so the small-matrix
+//! routines the system needs are implemented here from scratch: a dense
+//! row-major [`Mat`], Cholesky and LU factorizations, Householder QR,
+//! one-sided Jacobi SVD and principal (subspace) angles. Dimensions in
+//! this project are modest (D ≤ 150), so clarity and numerical robustness
+//! win over blocking/SIMD; the optimization-path hot spots live in the
+//! lowered XLA artifacts, not here.
+
+mod chol;
+mod lu;
+mod mat;
+mod qr;
+mod subspace;
+mod svd;
+
+pub use chol::Cholesky;
+pub use lu::Lu;
+pub use mat::Mat;
+pub use qr::qr_thin;
+pub use subspace::{max_principal_angle_deg, principal_angles};
+pub use svd::Svd;

@@ -1,0 +1,100 @@
+//! Principal angles between subspaces — the paper's error metric.
+//!
+//! The paper measures "maximum subspace angle" between each node's
+//! projection matrix and the ground truth (Fig. 2, 3, 5). The angles
+//! between span(A) and span(B) are arccos of the singular values of
+//! Q_AᵀQ_B where Q_* are orthonormal bases.
+
+use super::{qr_thin, Mat, Svd};
+use crate::error::Result;
+
+/// All principal angles (radians, ascending) between span(a) and span(b).
+pub fn principal_angles(a: &Mat, b: &Mat) -> Result<Vec<f64>> {
+    let (qa, _) = qr_thin(a)?;
+    let (qb, _) = qr_thin(b)?;
+    let m = qa.t_matmul(&qb);
+    let svd = Svd::new(&m)?;
+    // σ ∈ [0, 1] up to rounding; clamp before arccos
+    let mut angles: Vec<f64> = svd
+        .s
+        .iter()
+        .map(|&sig| sig.clamp(-1.0, 1.0).acos())
+        .collect();
+    angles.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    Ok(angles)
+}
+
+/// Maximum principal angle in degrees (the paper's reported scalar).
+pub fn max_principal_angle_deg(a: &Mat, b: &Mat) -> Result<f64> {
+    let angles = principal_angles(a, b)?;
+    Ok(angles.last().copied().unwrap_or(0.0).to_degrees())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn same_subspace_zero_angle() {
+        prop::check("angle(span A, span A·R) = 0", |rng| {
+            let a = Mat::randn(8 + rng.below(5), 1 + rng.below(3), rng);
+            // non-singular recombination spans the same space
+            let k = a.cols();
+            let mut r = Mat::randn(k, k, rng);
+            for i in 0..k {
+                r[(i, i)] += 3.0;
+            }
+            let b = a.matmul(&r);
+            let deg = max_principal_angle_deg(&a, &b).unwrap();
+            assert!(deg < 1e-5, "angle {deg}");
+        });
+    }
+
+    #[test]
+    fn orthogonal_subspaces_ninety() {
+        let mut a = Mat::zeros(4, 1);
+        a[(0, 0)] = 1.0;
+        let mut b = Mat::zeros(4, 1);
+        b[(2, 0)] = 1.0;
+        let deg = max_principal_angle_deg(&a, &b).unwrap();
+        assert!((deg - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn known_angle_2d() {
+        // span{e1} vs span{cosθ e1 + sinθ e2}
+        let theta = 0.3f64;
+        let a = Mat::from_rows(2, 1, &[1.0, 0.0]);
+        let b = Mat::from_rows(2, 1, &[theta.cos(), theta.sin()]);
+        let deg = max_principal_angle_deg(&a, &b).unwrap();
+        assert!((deg - theta.to_degrees()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn angles_bounded_and_symmetric() {
+        prop::check("0 ≤ θ ≤ 90°, θ(A,B) = θ(B,A)", |rng| {
+            let d = 6 + rng.below(6);
+            let a = Mat::randn(d, 2, rng);
+            let b = Mat::randn(d, 2, rng);
+            let ab = max_principal_angle_deg(&a, &b).unwrap();
+            let ba = max_principal_angle_deg(&b, &a).unwrap();
+            assert!((0.0..=90.0 + 1e-9).contains(&ab));
+            assert!((ab - ba).abs() < 1e-8);
+        });
+    }
+
+    #[test]
+    fn invariant_to_orthogonal_rotation() {
+        let mut rng = Pcg::seed(11);
+        let d = 8;
+        let a = Mat::randn(d, 3, &mut rng);
+        let b = Mat::randn(d, 3, &mut rng);
+        let base = max_principal_angle_deg(&a, &b).unwrap();
+        // random orthogonal Q via QR of a random matrix
+        let (q, _) = qr_thin(&Mat::randn(d, d, &mut rng)).unwrap();
+        let rotated = max_principal_angle_deg(&q.matmul(&a), &q.matmul(&b)).unwrap();
+        assert!((base - rotated).abs() < 1e-7);
+    }
+}

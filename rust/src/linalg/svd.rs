@@ -1,0 +1,205 @@
+//! Singular value decomposition via one-sided Jacobi rotations.
+//!
+//! One-sided Jacobi is simple, unconditionally convergent and highly
+//! accurate for the moderate sizes used here (centralized SfM baselines,
+//! principal angles: at most a few hundred rows, ≤ a few hundred columns).
+
+use super::Mat;
+use crate::error::{Error, Result};
+
+/// Thin SVD `A = U Σ Vᵀ` with singular values sorted descending.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// (m, k) orthonormal left vectors, k = min(m, n).
+    pub u: Mat,
+    /// k singular values, descending.
+    pub s: Vec<f64>,
+    /// (n, k) orthonormal right vectors.
+    pub v: Mat,
+}
+
+const MAX_SWEEPS: usize = 60;
+
+impl Svd {
+    /// Compute the thin SVD.
+    pub fn new(a: &Mat) -> Result<Svd> {
+        let (m, n) = a.shape();
+        if m >= n {
+            Self::tall(a)
+        } else {
+            // A = UΣVᵀ  ⇔  Aᵀ = VΣUᵀ
+            let t = Self::tall(&a.t())?;
+            Ok(Svd { u: t.v, s: t.s, v: t.u })
+        }
+    }
+
+    fn tall(a: &Mat) -> Result<Svd> {
+        let (m, n) = a.shape();
+        debug_assert!(m >= n);
+        let mut u = a.clone(); // columns become U·Σ
+        let mut v = Mat::eye(n);
+
+        let eps = 1e-15;
+        let mut converged = false;
+        for _sweep in 0..MAX_SWEEPS {
+            let mut off = 0.0f64;
+            for p in 0..n {
+                for q in (p + 1)..n {
+                    // 2x2 Gram block of columns p, q
+                    let mut app = 0.0;
+                    let mut aqq = 0.0;
+                    let mut apq = 0.0;
+                    for r in 0..m {
+                        let up = u[(r, p)];
+                        let uq = u[(r, q)];
+                        app += up * up;
+                        aqq += uq * uq;
+                        apq += up * uq;
+                    }
+                    if apq.abs() <= eps * (app * aqq).sqrt() + 1e-300 {
+                        continue;
+                    }
+                    off = off.max(apq.abs() / ((app * aqq).sqrt() + 1e-300));
+                    // Jacobi rotation annihilating the off-diagonal
+                    let zeta = (aqq - app) / (2.0 * apq);
+                    let t = zeta.signum() / (zeta.abs() + (1.0 + zeta * zeta).sqrt());
+                    let c = 1.0 / (1.0 + t * t).sqrt();
+                    let s = c * t;
+                    for r in 0..m {
+                        let up = u[(r, p)];
+                        let uq = u[(r, q)];
+                        u[(r, p)] = c * up - s * uq;
+                        u[(r, q)] = s * up + c * uq;
+                    }
+                    for r in 0..n {
+                        let vp = v[(r, p)];
+                        let vq = v[(r, q)];
+                        v[(r, p)] = c * vp - s * vq;
+                        v[(r, q)] = s * vp + c * vq;
+                    }
+                }
+            }
+            if off < 1e-14 {
+                converged = true;
+                break;
+            }
+        }
+        if !converged {
+            return Err(Error::Numeric("svd: jacobi sweeps did not converge".into()));
+        }
+
+        // extract singular values, normalize U, sort descending
+        let mut order: Vec<usize> = (0..n).collect();
+        let mut sigmas = vec![0.0f64; n];
+        for (j, sig) in sigmas.iter_mut().enumerate() {
+            *sig = super::mat::dot(&u.col(j), &u.col(j)).sqrt();
+        }
+        order.sort_by(|&i, &j| sigmas[j].partial_cmp(&sigmas[i]).unwrap());
+
+        let mut u_out = Mat::zeros(m, n);
+        let mut v_out = Mat::zeros(n, n);
+        let mut s_out = vec![0.0f64; n];
+        for (dst, &src) in order.iter().enumerate() {
+            let sig = sigmas[src];
+            s_out[dst] = sig;
+            let ucol = u.col(src);
+            if sig > 1e-300 {
+                let scaled: Vec<f64> = ucol.iter().map(|x| x / sig).collect();
+                u_out.set_col(dst, &scaled);
+            } else {
+                u_out.set_col(dst, &ucol); // zero column
+            }
+            v_out.set_col(dst, &v.col(src));
+        }
+        Ok(Svd { u: u_out, s: s_out, v: v_out })
+    }
+
+    /// Rank-k truncation `U_k Σ_k V_kᵀ` of the decomposed matrix.
+    pub fn low_rank(&self, k: usize) -> Mat {
+        let k = k.min(self.s.len());
+        let uk = self.u.col_slice(0, k);
+        let vk = self.v.col_slice(0, k);
+        let mut us = uk.clone();
+        for c in 0..k {
+            for r in 0..us.rows() {
+                us[(r, c)] *= self.s[c];
+            }
+        }
+        us.matmul_t(&vk)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn reconstructs() {
+        prop::check("UΣVᵀ = A", |rng| {
+            let m = 1 + rng.below(10);
+            let n = 1 + rng.below(10);
+            let a = Mat::randn(m, n, rng);
+            let svd = Svd::new(&a).unwrap();
+            let k = m.min(n);
+            let rec = svd.low_rank(k);
+            assert!(rec.max_abs_diff(&a) < 1e-9, "m={m} n={n}");
+        });
+    }
+
+    #[test]
+    fn orthonormal_factors() {
+        prop::check("UᵀU = VᵀV = I", |rng| {
+            let m = 3 + rng.below(8);
+            let n = 1 + rng.below(3);
+            let a = Mat::randn(m, n, rng);
+            let svd = Svd::new(&a).unwrap();
+            let k = m.min(n);
+            assert!(svd.u.t_matmul(&svd.u).max_abs_diff(&Mat::eye(k)) < 1e-10);
+            assert!(svd.v.t_matmul(&svd.v).max_abs_diff(&Mat::eye(k)) < 1e-10);
+        });
+    }
+
+    #[test]
+    fn singular_values_sorted_nonnegative() {
+        prop::check("σ sorted desc, ≥ 0", |rng| {
+            let a = Mat::randn(6 + rng.below(5), 1 + rng.below(6), rng);
+            let svd = Svd::new(&a).unwrap();
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+            assert!(svd.s.iter().all(|&x| x >= 0.0));
+        });
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Mat::from_rows(3, 2, &[3.0, 0.0, 0.0, -2.0, 0.0, 0.0]);
+        let svd = Svd::new(&a).unwrap();
+        assert!((svd.s[0] - 3.0).abs() < 1e-12);
+        assert!((svd.s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_deficient_ok() {
+        // duplicate columns → one zero singular value, still decomposes
+        let mut rng = crate::util::rng::Pcg::seed(5);
+        let base = Mat::randn(6, 1, &mut rng);
+        let mut a = Mat::zeros(6, 2);
+        a.set_col(0, &base.col(0));
+        a.set_col(1, &base.col(0));
+        let svd = Svd::new(&a).unwrap();
+        assert!(svd.s[1] < 1e-10);
+        assert!(svd.low_rank(2).max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn wide_matrix() {
+        let mut rng = crate::util::rng::Pcg::seed(6);
+        let a = Mat::randn(3, 7, &mut rng);
+        let svd = Svd::new(&a).unwrap();
+        assert_eq!(svd.u.shape(), (3, 3));
+        assert_eq!(svd.v.shape(), (7, 3));
+        assert!(svd.low_rank(3).max_abs_diff(&a) < 1e-9);
+    }
+}

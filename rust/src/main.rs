@@ -1,0 +1,206 @@
+//! `repro` — the fadmm experiment launcher.
+//!
+//! Subcommands (see `repro help`):
+//!   fig2       synthetic sweeps (paper Fig. 2)
+//!   caltech    turntable SfM curves (Fig. 3/5) + dataset description (Fig. 4)
+//!   hopkins    trajectory-corpus iteration table (§5.2)
+//!   ablation   η⁰ / NAP-budget / VP sweeps
+//!   run        one JSON-configured consensus run
+//!   check-artifacts   validate the AOT artifact manifest + compile warmup
+
+use std::path::PathBuf;
+
+use fadmm::config::{CliArgs, RunConfig};
+use fadmm::data::{even_split, SubspaceSpec};
+use fadmm::experiments::{ablations, caltech, common, fig2, hopkins};
+use fadmm::experiments::common::BackendChoice;
+use fadmm::linalg::Mat;
+use fadmm::runtime::XlaBackend;
+use fadmm::util::rng::Pcg;
+
+const HELP: &str = "\
+repro — Fast ADMM with Adaptive Penalty (AAAI'16) reproduction
+
+USAGE: repro <subcommand> [options]
+
+SUBCOMMANDS
+  fig2        synthetic D-PPCA sweeps (paper Fig. 2)
+                --axis size|topology|all   (default all)
+                --seeds N                  (default 20)
+                --schemes a,b,...          (default: paper set)
+                --backend xla|native       (default native; numerically identical)
+                --max-iters N              (default 400)
+                --out DIR                  (default results)
+  caltech     turntable SfM (Fig. 3/5); --describe adds the Fig. 4 table
+                --objects Name1,Name2  --seeds N (default 5)  --out DIR
+  hopkins     trajectory corpus table (§5.2)
+                --objects N (default 135)  --seeds N (default 5)  --out DIR
+  ablation    --name eta0|budget|vp|all  --seeds N  --out DIR
+  run         --config cfg.json          one consensus run, prints summary
+  check-artifacts   validate manifest and compile one artifact set
+  help        this text
+
+All experiments are seeded and deterministic; CSVs land in --out.
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
+    let args = CliArgs::parse(raw, &["describe", "verbose"])?;
+    match args.subcommand.as_str() {
+        "" | "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        "fig2" => cmd_fig2(&args),
+        "caltech" => cmd_caltech(&args),
+        "hopkins" => cmd_hopkins(&args),
+        "ablation" => cmd_ablation(&args),
+        "run" => cmd_run(&args),
+        "check-artifacts" => cmd_check_artifacts(),
+        other => Err(fadmm::Error::Config(format!(
+            "unknown subcommand '{other}' (try `repro help`)"
+        ))),
+    }
+}
+
+fn out_dir(args: &CliArgs) -> PathBuf {
+    PathBuf::from(args.get_or("out", "results"))
+}
+
+fn backend(args: &CliArgs) -> fadmm::Result<BackendChoice> {
+    BackendChoice::parse(&args.get_or("backend", "native"))
+}
+
+fn cmd_fig2(args: &CliArgs) -> fadmm::Result<()> {
+    let axis = args.get_or("axis", "all");
+    let cfg = fig2::Fig2Config {
+        seeds: args.get_usize("seeds", 20)?,
+        backend: backend(args)?,
+        max_iters: args.get_usize("max-iters", 400)?,
+        schemes: args.schemes()?,
+        axis_size: axis == "all" || axis == "size",
+        axis_topology: axis == "all" || axis == "topology",
+    };
+    let out = out_dir(args);
+    eprintln!("fig2: {} seeds, backend {:?}, out {}", cfg.seeds, cfg.backend,
+              out.display());
+    let rows = fig2::run(&cfg, &out)?;
+    fig2::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_caltech(args: &CliArgs) -> fadmm::Result<()> {
+    let out = out_dir(args);
+    if args.has_flag("describe") {
+        caltech::describe(&out, 0)?;
+        println!("wrote {}", out.join("caltech_objects.csv").display());
+    }
+    let cfg = caltech::CaltechConfig {
+        seeds: args.get_usize("seeds", 5)?,
+        backend: backend(args)?,
+        max_iters: args.get_usize("max-iters", 400)?,
+        schemes: args.schemes()?,
+        objects: args
+            .get("objects")
+            .map(|s| s.split(',').map(str::to_string).collect())
+            .unwrap_or_default(),
+        data_seed: args.get_usize("data-seed", 0)? as u64,
+    };
+    let rows = caltech::run(&cfg, &out)?;
+    caltech::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_hopkins(args: &CliArgs) -> fadmm::Result<()> {
+    let cfg = hopkins::HopkinsConfig {
+        objects: args.get_usize("objects", 135)?,
+        seeds: args.get_usize("seeds", 5)?,
+        backend: backend(args)?,
+        max_iters: args.get_usize("max-iters", 400)?,
+        schemes: args.schemes()?,
+        ..Default::default()
+    };
+    let out = out_dir(args);
+    eprintln!("hopkins: {} objects × {} seeds", cfg.objects, cfg.seeds);
+    let rows = hopkins::run(&cfg, &out)?;
+    hopkins::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_ablation(args: &CliArgs) -> fadmm::Result<()> {
+    let cfg = ablations::AblationConfig {
+        seeds: args.get_usize("seeds", 5)?,
+        backend: backend(args)?,
+        max_iters: args.get_usize("max-iters", 400)?,
+        j: args.get_usize("nodes", 20)?,
+    };
+    let out = out_dir(args);
+    let name = args.get_or("name", "all");
+    let mut rows = Vec::new();
+    if name == "all" || name == "eta0" {
+        rows.extend(ablations::eta0(&cfg, &out)?);
+    }
+    if name == "all" || name == "budget" {
+        rows.extend(ablations::budget(&cfg, &out)?);
+    }
+    if name == "all" || name == "vp" {
+        rows.extend(ablations::vp(&cfg, &out)?);
+    }
+    if rows.is_empty() {
+        return Err(fadmm::Error::Config(format!("unknown ablation '{name}'")));
+    }
+    ablations::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_run(args: &CliArgs) -> fadmm::Result<()> {
+    let path = args
+        .get("config")
+        .ok_or_else(|| fadmm::Error::Config("run needs --config file.json".into()))?;
+    let cfg = RunConfig::from_file(std::path::Path::new(path))?;
+    if cfg.problem != "synthetic" {
+        return Err(fadmm::Error::Config(format!(
+            "run: only 'synthetic' is wired here (got '{}'); use the caltech/\
+             hopkins subcommands for SfM problems",
+            cfg.problem
+        )));
+    }
+    let data = SubspaceSpec::default().generate(&mut Pcg::seed(7));
+    let part = even_split(500, cfg.nodes);
+    let blocks: Vec<Mat> = part
+        .ranges
+        .iter()
+        .map(|&(lo, hi)| data.x.col_slice(lo, hi))
+        .collect();
+    let mut spec = common::DppcaSpec::new(blocks, part.padded, 5,
+                                          cfg.topology.build(cfg.nodes)?, cfg.scheme);
+    spec.params = cfg.params;
+    spec.seed = cfg.seed;
+    spec.max_iters = cfg.max_iters;
+    spec.tol = cfg.tol;
+    spec.reference = Some(&data.w_true);
+    let backend = BackendChoice::parse(&cfg.backend)?.build()?;
+    let result = common::run_dppca(&spec, backend)?;
+    println!(
+        "scheme={} topology={} nodes={} iterations={} converged={} final_angle={:.4}°",
+        cfg.scheme.name(), cfg.topology.name(), cfg.nodes, result.iterations,
+        result.converged, result.final_angle
+    );
+    Ok(())
+}
+
+fn cmd_check_artifacts() -> fadmm::Result<()> {
+    let mut backend = XlaBackend::from_default_dir()?;
+    println!("manifest: {} artifacts at {}", backend.manifest().len(),
+             fadmm::runtime::Manifest::default_dir().display());
+    let compiled = backend.warmup(8, 2, 16)?;
+    println!("compiled {compiled} executables for the d8/m2/n16 smoke shape — OK");
+    Ok(())
+}

@@ -1,0 +1,102 @@
+//! The normalized objective-ratio weight τ_ij (paper eq. 7–8).
+//!
+//! κ_i(θ) = (f_i(θ) − f_min)/(f_max − f_min) + 1 ∈ [1, 2], where the
+//! min/max run over the local objective evaluated at the node's own
+//! parameters and every neighbour's. τ_ij = κ_i(θ_i)/κ_i(θ_j) − 1, hence
+//! τ ∈ [−1/2, 1] and the AP multiplier (1 + τ) ∈ [1/2, 2] — the bounded
+//! step the paper matches against He et al.'s suggested factors.
+
+/// Compute τ_ij for every neighbour slot from the local objective values.
+///
+/// * `f_self` — f_i(θ_i^t)
+/// * `f_neighbors` — f_i evaluated at each neighbour's parameter estimate
+///   (the paper uses ρ_ij in place of θ_j to retain locality)
+///
+/// Degenerate spread (all objectives equal, or non-finite input) yields
+/// τ = 0 for every edge: the scheme then leaves the penalty at η⁰, which
+/// is the paper's "onus on consensus" regime.
+pub fn tau_from_objectives(f_self: f64, f_neighbors: &[f64]) -> Vec<f64> {
+    if !f_self.is_finite() || f_neighbors.iter().any(|f| !f.is_finite()) {
+        return vec![0.0; f_neighbors.len()];
+    }
+    let mut f_min = f_self;
+    let mut f_max = f_self;
+    for &f in f_neighbors {
+        f_min = f_min.min(f);
+        f_max = f_max.max(f);
+    }
+    let spread = f_max - f_min;
+    if !(spread.is_finite() && spread > 1e-300) {
+        return vec![0.0; f_neighbors.len()];
+    }
+    let kappa = |f: f64| (f - f_min) / spread + 1.0;
+    let k_self = kappa(f_self);
+    f_neighbors.iter().map(|&f| k_self / kappa(f) - 1.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn better_neighbor_gets_positive_tau() {
+        // neighbour 0 fits our data better (lower local objective) → τ > 0
+        let tau = tau_from_objectives(10.0, &[5.0, 15.0]);
+        assert!(tau[0] > 0.0, "{tau:?}");
+        assert!(tau[1] < 0.0, "{tau:?}");
+    }
+
+    #[test]
+    fn bounded_in_half_to_one() {
+        prop::check("τ ∈ [−1/2, 1]", |rng| {
+            let f_self = rng.range(-100.0, 100.0);
+            let f_nb: Vec<f64> = (0..1 + rng.below(8))
+                .map(|_| rng.range(-100.0, 100.0))
+                .collect();
+            for &t in &tau_from_objectives(f_self, &f_nb) {
+                assert!((-0.5 - 1e-12..=1.0 + 1e-12).contains(&t), "τ = {t}");
+            }
+        });
+    }
+
+    #[test]
+    fn equal_objectives_give_zero() {
+        assert_eq!(tau_from_objectives(3.0, &[3.0, 3.0]), vec![0.0, 0.0]);
+        assert_eq!(tau_from_objectives(3.0, &[]), Vec::<f64>::new());
+    }
+
+    #[test]
+    fn extremes_hit_bounds() {
+        // self is worst, neighbour is best: κ_self = 2, κ_nb = 1 → τ = 1
+        let tau = tau_from_objectives(10.0, &[0.0]);
+        assert!((tau[0] - 1.0).abs() < 1e-12);
+        // self best, neighbour worst: κ_self = 1, κ_nb = 2 → τ = −1/2
+        let tau = tau_from_objectives(0.0, &[10.0]);
+        assert!((tau[0] + 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn non_finite_objectives_fail_safe() {
+        let tau = tau_from_objectives(f64::NAN, &[1.0, 2.0]);
+        assert_eq!(tau, vec![0.0, 0.0]);
+        let tau = tau_from_objectives(1.0, &[f64::INFINITY]);
+        assert_eq!(tau, vec![0.0]);
+    }
+
+    #[test]
+    fn scale_invariant() {
+        prop::check("τ invariant to affine objective rescaling", |rng| {
+            let f_self = rng.range(0.0, 10.0);
+            let f_nb: Vec<f64> = (0..3).map(|_| rng.range(0.0, 10.0)).collect();
+            let a = rng.range(0.5, 20.0);
+            let b = rng.range(-50.0, 50.0);
+            let t1 = tau_from_objectives(f_self, &f_nb);
+            let scaled: Vec<f64> = f_nb.iter().map(|&f| a * f + b).collect();
+            let t2 = tau_from_objectives(a * f_self + b, &scaled);
+            for (x, y) in t1.iter().zip(&t2) {
+                assert!((x - y).abs() < 1e-9);
+            }
+        });
+    }
+}

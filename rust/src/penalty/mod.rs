@@ -1,0 +1,27 @@
+//! Penalty-update schemes — the paper's contribution.
+//!
+//! Every scheme adapts the ADMM constraint penalties each iteration from
+//! purely node-local information (except the non-decentralized reference
+//! scheme [`SchemeKind::Rb`], kept as a baseline):
+//!
+//! | kind   | paper       | state                | granularity |
+//! |--------|-------------|----------------------|-------------|
+//! | Fixed  | baseline    | —                    | global      |
+//! | Rb     | eq. (4)     | global residuals     | global      |
+//! | Vp     | §3.1        | local residuals      | per node    |
+//! | Ap     | §3.2 (6-8)  | local objectives     | per edge    |
+//! | Nap    | §3.3 (9-11) | + per-edge budget    | per edge    |
+//! | VpAp   | §3.4 (12)   | residuals × τ_ij     | per edge    |
+//! | VpNap  | §3.4        | + per-edge budget    | per edge    |
+//!
+//! A scheme instance lives *inside one node* and only sees that node's
+//! [`NodeObservation`]; the engine owns one instance per node.
+
+mod kappa;
+mod schemes;
+
+pub use kappa::tau_from_objectives;
+pub use schemes::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind, SchemeParams};
+
+#[cfg(test)]
+mod tests;

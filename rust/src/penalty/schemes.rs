@@ -1,0 +1,398 @@
+//! The seven penalty schemes.
+
+use super::kappa::tau_from_objectives;
+
+/// Which scheme to run. See module docs for the paper mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    Fixed,
+    Rb,
+    Vp,
+    Ap,
+    Nap,
+    VpAp,
+    VpNap,
+}
+
+impl SchemeKind {
+    /// Every scheme, in the order the paper's figures list them.
+    pub const ALL: [SchemeKind; 7] = [
+        SchemeKind::Fixed, SchemeKind::Rb, SchemeKind::Vp, SchemeKind::Ap,
+        SchemeKind::Nap, SchemeKind::VpAp, SchemeKind::VpNap,
+    ];
+
+    /// The six compared in the paper's plots (Fixed baseline + proposed).
+    pub const PAPER: [SchemeKind; 6] = [
+        SchemeKind::Fixed, SchemeKind::Vp, SchemeKind::Ap, SchemeKind::Nap,
+        SchemeKind::VpAp, SchemeKind::VpNap,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SchemeKind::Fixed => "admm",
+            SchemeKind::Rb => "admm-rb",
+            SchemeKind::Vp => "admm-vp",
+            SchemeKind::Ap => "admm-ap",
+            SchemeKind::Nap => "admm-nap",
+            SchemeKind::VpAp => "admm-vp+ap",
+            SchemeKind::VpNap => "admm-vp+nap",
+        }
+    }
+
+    pub fn parse(s: &str) -> crate::Result<SchemeKind> {
+        match s {
+            "admm" | "fixed" => Ok(SchemeKind::Fixed),
+            "admm-rb" | "rb" => Ok(SchemeKind::Rb),
+            "admm-vp" | "vp" => Ok(SchemeKind::Vp),
+            "admm-ap" | "ap" => Ok(SchemeKind::Ap),
+            "admm-nap" | "nap" => Ok(SchemeKind::Nap),
+            "admm-vp+ap" | "vp+ap" | "vpap" => Ok(SchemeKind::VpAp),
+            "admm-vp+nap" | "vp+nap" | "vpnap" => Ok(SchemeKind::VpNap),
+            _ => Err(crate::Error::Config(format!("unknown scheme '{s}'"))),
+        }
+    }
+}
+
+/// Scheme hyper-parameters; defaults are the paper's suggestions.
+#[derive(Debug, Clone, Copy)]
+pub struct SchemeParams {
+    /// η⁰, the initial/reset penalty (paper: 10).
+    pub eta0: f64,
+    /// residual-balance threshold μ > 1 (paper/He et al.: 10).
+    pub mu: f64,
+    /// multiplicative step τ for VP/RB (paper/He et al.: 1 → ×2 / ÷2).
+    pub tau: f64,
+    /// maximum penalty-update iteration t_max (paper: 50).
+    pub t_max: usize,
+    /// NAP initial budget 𝒯 (paper: "any small value"; default 1).
+    pub budget: f64,
+    /// NAP budget growth rate α ∈ (0,1).
+    pub alpha: f64,
+    /// NAP objective-change threshold β ∈ (0,1) — budget keeps growing
+    /// while |f_i(θ_i^t) − f_i(θ_i^{t−1})| is still above it.
+    pub beta: f64,
+    /// numerical guard: multiplicative schemes clamp η to
+    /// [η⁰/eta_clamp, η⁰·eta_clamp].
+    pub eta_clamp: f64,
+    /// VP: reset to η⁰ at t_max (the paper's choice — heterogeneously
+    /// frozen penalties oscillate near the saddle point). `false` freezes
+    /// instead (ablation A3).
+    pub vp_reset: bool,
+}
+
+impl Default for SchemeParams {
+    fn default() -> Self {
+        SchemeParams {
+            eta0: 10.0,
+            mu: 10.0,
+            tau: 1.0,
+            t_max: 50,
+            budget: 1.0,
+            alpha: 0.5,
+            beta: 0.1,
+            eta_clamp: 1e4,
+            vp_reset: true,
+        }
+    }
+}
+
+/// Everything a node-local scheme may observe at iteration `t`.
+///
+/// `global_*` residuals are populated by the engine for the RB reference
+/// scheme only; decentralized schemes must not read them.
+#[derive(Debug, Clone)]
+pub struct NodeObservation<'a> {
+    pub t: usize,
+    /// ‖r_i‖ — local primal residual norm (paper eq. 5)
+    pub primal_norm: f64,
+    /// ‖s_i‖ — local dual residual norm (paper eq. 5)
+    pub dual_norm: f64,
+    /// network-wide residual norms (RB baseline only)
+    pub global_primal: f64,
+    pub global_dual: f64,
+    /// f_i(θ_i^t)
+    pub f_self: f64,
+    /// f_i(θ_i^{t−1})
+    pub f_self_prev: f64,
+    /// f_i evaluated at each neighbour estimate, in neighbour-slot order
+    pub f_neighbors: &'a [f64],
+}
+
+/// A node-local penalty scheduler. `eta` is the node's out-edge penalty
+/// array, indexed by neighbour slot; the scheme mutates it in place once
+/// per iteration.
+pub trait PenaltyScheme: Send {
+    fn kind(&self) -> SchemeKind;
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]);
+    /// Whether this scheme needs f_i evaluated at neighbour estimates
+    /// (lets the engine skip those objective evaluations otherwise).
+    fn needs_neighbor_objectives(&self) -> bool {
+        false
+    }
+}
+
+/// Instantiate a scheme for a node of the given degree.
+pub fn make_scheme(kind: SchemeKind, params: SchemeParams, degree: usize)
+                   -> Box<dyn PenaltyScheme> {
+    match kind {
+        SchemeKind::Fixed => Box::new(Fixed),
+        SchemeKind::Rb => Box::new(Rb { p: params }),
+        SchemeKind::Vp => Box::new(Vp { p: params }),
+        SchemeKind::Ap => Box::new(Ap { p: params }),
+        SchemeKind::Nap => Box::new(Nap::new(params, degree)),
+        SchemeKind::VpAp => Box::new(VpAp { p: params }),
+        SchemeKind::VpNap => Box::new(VpNap { inner: Nap::new(params, degree) }),
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Standard ADMM: constant penalty.
+struct Fixed;
+
+impl PenaltyScheme for Fixed {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Fixed
+    }
+
+    fn update(&mut self, _obs: &NodeObservation<'_>, _eta: &mut [f64]) {}
+}
+
+/// He et al. (2000) residual balancing on *global* residuals — the
+/// non-decentralized reference (paper eq. 4). Freezes after t_max.
+struct Rb {
+    p: SchemeParams,
+}
+
+impl PenaltyScheme for Rb {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Rb
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        if obs.t >= self.p.t_max {
+            return; // η frozen (homogeneous, so no reset needed)
+        }
+        let factor = balance_factor(obs.global_primal, obs.global_dual, self.p.mu, self.p.tau);
+        for e in eta.iter_mut() {
+            *e = clamp_eta(*e * factor, &self.p);
+        }
+    }
+}
+
+/// ADMM-VP (paper §3.1): residual balancing on *local* residuals with a
+/// per-node penalty; resets to η⁰ at t_max because heterogeneously frozen
+/// penalties oscillate near the saddle point.
+struct Vp {
+    p: SchemeParams,
+}
+
+impl PenaltyScheme for Vp {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Vp
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        if obs.t >= self.p.t_max {
+            if self.p.vp_reset {
+                // homogeneous reset; standard ADMM from here on
+                for e in eta.iter_mut() {
+                    *e = self.p.eta0;
+                }
+            }
+            // else: heterogeneous freeze (ablation A3 — the paper warns
+            // this oscillates near the saddle point)
+            return;
+        }
+        let factor = balance_factor(obs.primal_norm, obs.dual_norm, self.p.mu, self.p.tau);
+        for e in eta.iter_mut() {
+            *e = clamp_eta(*e * factor, &self.p);
+        }
+    }
+}
+
+/// ADMM-AP (paper §3.2): η_ij = η⁰(1 + τ_ij) from the normalized local
+/// objective ratio; falls back to η⁰ after t_max.
+struct Ap {
+    p: SchemeParams,
+}
+
+impl PenaltyScheme for Ap {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Ap
+    }
+
+    fn needs_neighbor_objectives(&self) -> bool {
+        true
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        debug_assert_eq!(obs.f_neighbors.len(), eta.len());
+        if obs.t >= self.p.t_max {
+            for e in eta.iter_mut() {
+                *e = self.p.eta0;
+            }
+            return;
+        }
+        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
+        for (e, t) in eta.iter_mut().zip(&tau) {
+            *e = self.p.eta0 * (1.0 + t);
+        }
+    }
+}
+
+/// ADMM-NAP (paper §3.3): AP gated by a per-edge adaptation *budget*
+/// Σ|τ| < 𝒯_ij; the budget grows geometrically (α^n·𝒯) while the local
+/// objective still moves more than β per iteration (eq. 10), bounded by
+/// 𝒯/(1−α) (eq. 11).
+struct Nap {
+    p: SchemeParams,
+    /// Σ_u |τ_ij^u| spent per edge slot
+    spent: Vec<f64>,
+    /// current upper bound 𝒯_ij per edge slot
+    bound: Vec<f64>,
+    /// growth counter n per edge slot (increments start at α¹)
+    n: Vec<u32>,
+}
+
+impl Nap {
+    fn new(p: SchemeParams, degree: usize) -> Nap {
+        Nap {
+            spent: vec![0.0; degree],
+            bound: vec![p.budget; degree],
+            n: vec![1; degree],
+            p,
+        }
+    }
+
+    /// Apply the budget logic around a caller-supplied η update.
+    /// `proposed(slot, tau)` returns the new η for an in-budget edge.
+    fn gated_update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64],
+                    proposed: impl Fn(usize, f64, f64) -> f64) {
+        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
+        let objective_moving = (obs.f_self - obs.f_self_prev).abs() > self.p.beta;
+        for slot in 0..eta.len() {
+            if self.spent[slot] < self.bound[slot] {
+                eta[slot] = clamp_eta(proposed(slot, tau[slot], eta[slot]), &self.p);
+                self.spent[slot] += tau[slot].abs();
+            } else {
+                eta[slot] = self.p.eta0;
+                // eq. (10): grow the budget while the objective still moves
+                if objective_moving {
+                    self.bound[slot] += self.p.alpha.powi(self.n[slot] as i32) * self.p.budget;
+                    self.n[slot] += 1;
+                }
+            }
+        }
+    }
+}
+
+impl PenaltyScheme for Nap {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Nap
+    }
+
+    fn needs_neighbor_objectives(&self) -> bool {
+        true
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        debug_assert_eq!(obs.f_neighbors.len(), eta.len());
+        let eta0 = self.p.eta0;
+        self.gated_update(obs, eta, |_slot, tau, _old| eta0 * (1.0 + tau));
+    }
+}
+
+/// ADMM-VP+AP (paper eq. 12): residual direction chooses ×2 / ÷2, the
+/// objective ratio modulates the magnitude; cumulative until t_max, then
+/// reset to η⁰.
+struct VpAp {
+    p: SchemeParams,
+}
+
+impl PenaltyScheme for VpAp {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::VpAp
+    }
+
+    fn needs_neighbor_objectives(&self) -> bool {
+        true
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        debug_assert_eq!(obs.f_neighbors.len(), eta.len());
+        if obs.t >= self.p.t_max {
+            for e in eta.iter_mut() {
+                *e = self.p.eta0;
+            }
+            return;
+        }
+        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
+        let dir = residual_direction(obs.primal_norm, obs.dual_norm, self.p.mu);
+        for (e, t) in eta.iter_mut().zip(&tau) {
+            match dir {
+                Direction::Grow => *e = clamp_eta(*e * (1.0 + t) * 2.0, &self.p),
+                Direction::Shrink => *e = clamp_eta(*e * (1.0 + t) * 0.5, &self.p),
+                Direction::Hold => {}
+            }
+        }
+    }
+}
+
+/// ADMM-VP+NAP (paper §3.4): the VP+AP update gated by the NAP budget
+/// instead of t_max.
+struct VpNap {
+    inner: Nap,
+}
+
+impl PenaltyScheme for VpNap {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::VpNap
+    }
+
+    fn needs_neighbor_objectives(&self) -> bool {
+        true
+    }
+
+    fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
+        debug_assert_eq!(obs.f_neighbors.len(), eta.len());
+        let dir = residual_direction(obs.primal_norm, obs.dual_norm, self.inner.p.mu);
+        self.inner.gated_update(obs, eta, |_slot, tau, old| match dir {
+            Direction::Grow => old * (1.0 + tau) * 2.0,
+            Direction::Shrink => old * (1.0 + tau) * 0.5,
+            Direction::Hold => old,
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Direction {
+    Grow,
+    Shrink,
+    Hold,
+}
+
+/// Which way residual balancing pushes the penalty (He et al. / eq. 4).
+fn residual_direction(primal: f64, dual: f64, mu: f64) -> Direction {
+    if primal > mu * dual {
+        Direction::Grow
+    } else if dual > mu * primal {
+        Direction::Shrink
+    } else {
+        Direction::Hold
+    }
+}
+
+fn balance_factor(primal: f64, dual: f64, mu: f64, tau: f64) -> f64 {
+    match residual_direction(primal, dual, mu) {
+        Direction::Grow => 1.0 + tau,
+        Direction::Shrink => 1.0 / (1.0 + tau),
+        Direction::Hold => 1.0,
+    }
+}
+
+fn clamp_eta(eta: f64, p: &SchemeParams) -> f64 {
+    eta.clamp(p.eta0 / p.eta_clamp, p.eta0 * p.eta_clamp)
+}

@@ -1,0 +1,297 @@
+//! Scheme invariants (unit + property tests).
+
+use super::*;
+use crate::util::prop;
+use crate::util::rng::Pcg;
+
+fn obs<'a>(t: usize, primal: f64, dual: f64, f_self: f64, f_prev: f64,
+           f_nb: &'a [f64]) -> NodeObservation<'a> {
+    NodeObservation {
+        t,
+        primal_norm: primal,
+        dual_norm: dual,
+        global_primal: primal,
+        global_dual: dual,
+        f_self,
+        f_self_prev: f_prev,
+        f_neighbors: f_nb,
+    }
+}
+
+fn random_obs<'a>(rng: &mut Pcg, t: usize, f_nb: &'a mut Vec<f64>, deg: usize)
+                  -> NodeObservation<'a> {
+    f_nb.clear();
+    for _ in 0..deg {
+        f_nb.push(rng.range(0.0, 100.0));
+    }
+    NodeObservation {
+        t,
+        primal_norm: rng.range(0.0, 5.0),
+        dual_norm: rng.range(0.0, 5.0),
+        global_primal: rng.range(0.0, 5.0),
+        global_dual: rng.range(0.0, 5.0),
+        f_self: rng.range(0.0, 100.0),
+        f_self_prev: rng.range(0.0, 100.0),
+        f_neighbors: f_nb,
+    }
+}
+
+#[test]
+fn fixed_never_changes() {
+    let mut s = make_scheme(SchemeKind::Fixed, SchemeParams::default(), 3);
+    let mut eta = vec![10.0; 3];
+    s.update(&obs(0, 100.0, 0.1, 5.0, 9.0, &[1.0, 2.0, 3.0]), &mut eta);
+    assert_eq!(eta, vec![10.0; 3]);
+}
+
+#[test]
+fn vp_doubles_on_large_primal_and_halves_on_large_dual() {
+    let p = SchemeParams::default();
+    let mut s = make_scheme(SchemeKind::Vp, p, 2);
+    let mut eta = vec![10.0; 2];
+    s.update(&obs(0, 100.0, 0.1, 0.0, 0.0, &[0.0, 0.0]), &mut eta);
+    assert_eq!(eta, vec![20.0; 2]);
+    s.update(&obs(1, 0.1, 100.0, 0.0, 0.0, &[0.0, 0.0]), &mut eta);
+    assert_eq!(eta, vec![10.0; 2]);
+    // within the μ band: hold
+    s.update(&obs(2, 1.0, 1.0, 0.0, 0.0, &[0.0, 0.0]), &mut eta);
+    assert_eq!(eta, vec![10.0; 2]);
+}
+
+#[test]
+fn vp_resets_homogeneously_at_tmax() {
+    let p = SchemeParams { t_max: 5, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Vp, p, 2);
+    let mut eta = vec![10.0; 2];
+    for t in 0..5 {
+        s.update(&obs(t, 100.0, 0.1, 0.0, 0.0, &[0.0, 0.0]), &mut eta);
+    }
+    assert!(eta[0] > 100.0); // grew substantially
+    s.update(&obs(5, 100.0, 0.1, 0.0, 0.0, &[0.0, 0.0]), &mut eta);
+    assert_eq!(eta, vec![10.0; 2]); // homogeneous reset
+}
+
+#[test]
+fn vp_keeps_slots_homogeneous() {
+    prop::check("VP slots identical (per-node penalty)", |rng| {
+        let mut s = make_scheme(SchemeKind::Vp, SchemeParams::default(), 4);
+        let mut eta = vec![10.0; 4];
+        let mut f_nb = Vec::new();
+        for t in 0..30 {
+            let o = random_obs(rng, t, &mut f_nb, 4);
+            s.update(&o, &mut eta);
+            for w in eta.windows(2) {
+                assert_eq!(w[0], w[1]);
+            }
+        }
+    });
+}
+
+#[test]
+fn ap_bounded_by_half_and_double_eta0() {
+    prop::check("AP η ∈ [η⁰/2, 2η⁰]", |rng| {
+        let p = SchemeParams::default();
+        let mut s = make_scheme(SchemeKind::Ap, p, 3);
+        let mut eta = vec![p.eta0; 3];
+        let mut f_nb = Vec::new();
+        for t in 0..60 {
+            let o = random_obs(rng, t, &mut f_nb, 3);
+            s.update(&o, &mut eta);
+            for &e in &eta {
+                assert!(e >= p.eta0 * 0.5 - 1e-9 && e <= p.eta0 * 2.0 + 1e-9, "η = {e}");
+            }
+        }
+    });
+}
+
+#[test]
+fn ap_rewards_better_neighbors() {
+    let p = SchemeParams::default();
+    let mut s = make_scheme(SchemeKind::Ap, p, 2);
+    let mut eta = vec![p.eta0; 2];
+    // neighbour 0 much better than us, neighbour 1 much worse
+    s.update(&obs(0, 1.0, 1.0, 10.0, 11.0, &[0.0, 20.0]), &mut eta);
+    assert!(eta[0] > p.eta0, "{eta:?}");
+    assert!(eta[1] < p.eta0, "{eta:?}");
+}
+
+#[test]
+fn ap_reverts_to_eta0_after_tmax() {
+    let p = SchemeParams { t_max: 3, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Ap, p, 1);
+    let mut eta = vec![p.eta0];
+    s.update(&obs(2, 1.0, 1.0, 10.0, 10.0, &[0.0]), &mut eta);
+    assert!(eta[0] > p.eta0);
+    s.update(&obs(3, 1.0, 1.0, 10.0, 10.0, &[0.0]), &mut eta);
+    assert_eq!(eta[0], p.eta0);
+}
+
+#[test]
+fn nap_budget_blocks_after_exhaustion() {
+    // tiny budget, stable objective: after spending 𝒯 the edge pins to η⁰
+    let p = SchemeParams { budget: 0.5, beta: 1e9, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Nap, p, 1);
+    let mut eta = vec![p.eta0];
+    let mut pinned = 0;
+    for t in 0..50 {
+        // τ = 1 every iteration (neighbour always better)
+        s.update(&obs(t, 1.0, 1.0, 10.0, 10.0, &[0.0]), &mut eta);
+        if eta[0] == p.eta0 {
+            pinned += 1;
+        } else {
+            assert_eq!(eta[0], 2.0 * p.eta0);
+        }
+    }
+    assert!(pinned >= 48, "budget 0.5 admits one τ=1 update, got {pinned} pins");
+}
+
+#[test]
+fn nap_budget_grows_while_objective_moves() {
+    // same budget but the objective keeps moving → bound grows past the
+    // spent τ (α close to 1 so the geometric limit 𝒯/(1−α) = 5 > Σ|τ|)
+    let p = SchemeParams { budget: 0.5, alpha: 0.9, beta: 0.1, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Nap, p, 1);
+    let mut eta = vec![p.eta0];
+    let mut adapted = 0;
+    for t in 0..50 {
+        // objective moving by 1.0 > β each iteration
+        s.update(&obs(t, 1.0, 1.0, 10.0 + t as f64, 9.0 + t as f64, &[0.0]), &mut eta);
+        if eta[0] != p.eta0 {
+            adapted += 1;
+        }
+    }
+    assert!(adapted >= 2, "growing budget admits ≥ 2 updates, got {adapted}");
+}
+
+#[test]
+fn nap_budget_respects_geometric_bound() {
+    prop::check("𝒯_ij ≤ 𝒯/(1−α) (paper eq. 11)", |rng| {
+        let alpha = rng.range(0.2, 0.9);
+        let budget = rng.range(0.1, 3.0);
+        let p = SchemeParams { budget, alpha, beta: 0.0, ..Default::default() };
+        let mut s = make_scheme(SchemeKind::Nap, p, 2);
+        let mut eta = vec![p.eta0; 2];
+        let mut f_nb = Vec::new();
+        // adversarial: objective always moves, τ always ±1-ish
+        for t in 0..200 {
+            let o = random_obs(rng, t, &mut f_nb, 2);
+            s.update(&o, &mut eta);
+        }
+        // drive once more and introspect via behaviour: an edge pinned to η⁰
+        // implies spent ≥ bound; the bound can never exceed 𝒯/(1−α)
+        let limit = budget / (1.0 - alpha) + 1e-9;
+        // we can't read private state, so assert the *observable* bound:
+        // total adaptation budget implies spent ≤ limit + final |τ| ≤ limit + 1
+        // (checked indirectly by the pin count over a long horizon)
+        let mut pins = 0;
+        for t in 200..400 {
+            s.update(&obs(t, 1.0, 1.0, 10.0, 10.0, &[0.0, 20.0]), &mut eta);
+            if eta[0] == p.eta0 {
+                pins += 1;
+            }
+        }
+        // with a stable objective the budget stops growing ⇒ eventually all pins
+        assert!(pins >= 195, "edges must pin once spent exceeds ≤ {limit}, pins={pins}");
+    });
+}
+
+#[test]
+fn vpap_direction_and_magnitude() {
+    let p = SchemeParams::default();
+    let mut s = make_scheme(SchemeKind::VpAp, p, 1);
+    let mut eta = vec![p.eta0];
+    // primal-dominant, neighbour better (τ = 1): η ← η·2·2
+    s.update(&obs(0, 100.0, 0.1, 10.0, 10.0, &[0.0]), &mut eta);
+    assert_eq!(eta[0], 40.0);
+    // dual-dominant, neighbour worse (τ = −1/2): η ← η·(1/2)·(1/2)
+    s.update(&obs(1, 0.1, 100.0, 0.0, 0.0, &[10.0]), &mut eta);
+    assert_eq!(eta[0], 10.0);
+    // band: hold
+    s.update(&obs(2, 1.0, 1.0, 5.0, 5.0, &[5.0]), &mut eta);
+    assert_eq!(eta[0], 10.0);
+}
+
+#[test]
+fn vpap_resets_after_tmax() {
+    let p = SchemeParams { t_max: 2, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::VpAp, p, 1);
+    let mut eta = vec![p.eta0];
+    s.update(&obs(0, 100.0, 0.1, 10.0, 10.0, &[0.0]), &mut eta);
+    s.update(&obs(1, 100.0, 0.1, 10.0, 10.0, &[0.0]), &mut eta);
+    assert!(eta[0] > p.eta0);
+    s.update(&obs(2, 100.0, 0.1, 10.0, 10.0, &[0.0]), &mut eta);
+    assert_eq!(eta[0], p.eta0);
+}
+
+#[test]
+fn vpnap_gated_by_budget_not_tmax() {
+    // t_max tiny but budget generous: VP+NAP keeps adapting past t_max
+    let p = SchemeParams { t_max: 1, budget: 100.0, beta: 1e9, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::VpNap, p, 1);
+    let mut eta = vec![p.eta0];
+    for t in 0..10 {
+        s.update(&obs(t, 100.0, 0.1, 10.0, 10.0, &[0.0]), &mut eta);
+    }
+    assert!(eta[0] > p.eta0, "still adapting at t=10 despite t_max=1: {eta:?}");
+}
+
+#[test]
+fn rb_uses_global_residuals_and_freezes() {
+    let p = SchemeParams { t_max: 2, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Rb, p, 2);
+    let mut eta = vec![p.eta0; 2];
+    // local says shrink, global says grow → RB must grow
+    let o = NodeObservation {
+        t: 0,
+        primal_norm: 0.1,
+        dual_norm: 100.0,
+        global_primal: 100.0,
+        global_dual: 0.1,
+        f_self: 0.0,
+        f_self_prev: 0.0,
+        f_neighbors: &[0.0, 0.0],
+    };
+    s.update(&o, &mut eta);
+    assert_eq!(eta, vec![20.0; 2]);
+    // after t_max: frozen, not reset
+    s.update(&NodeObservation { t: 2, ..o.clone() }, &mut eta);
+    assert_eq!(eta, vec![20.0; 2]);
+}
+
+#[test]
+fn eta_clamped_under_adversarial_residuals() {
+    prop::check("η stays within clamp under any observation stream", |rng| {
+        let p = SchemeParams::default();
+        for kind in SchemeKind::ALL {
+            let mut s = make_scheme(kind, p, 2);
+            let mut eta = vec![p.eta0; 2];
+            let mut f_nb = Vec::new();
+            for t in 0..120 {
+                let o = random_obs(rng, t, &mut f_nb, 2);
+                s.update(&o, &mut eta);
+                for &e in &eta {
+                    assert!(e.is_finite() && e > 0.0, "{kind:?}: η = {e}");
+                    assert!(e <= p.eta0 * p.eta_clamp * 2.0 + 1e-9, "{kind:?}: η = {e}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn parse_name_roundtrip() {
+    for kind in SchemeKind::ALL {
+        assert_eq!(SchemeKind::parse(kind.name()).unwrap(), kind);
+    }
+    assert!(SchemeKind::parse("bogus").is_err());
+}
+
+#[test]
+fn needs_neighbor_objectives_flags() {
+    let p = SchemeParams::default();
+    assert!(!make_scheme(SchemeKind::Fixed, p, 1).needs_neighbor_objectives());
+    assert!(!make_scheme(SchemeKind::Vp, p, 1).needs_neighbor_objectives());
+    assert!(make_scheme(SchemeKind::Ap, p, 1).needs_neighbor_objectives());
+    assert!(make_scheme(SchemeKind::Nap, p, 1).needs_neighbor_objectives());
+    assert!(make_scheme(SchemeKind::VpNap, p, 1).needs_neighbor_objectives());
+}

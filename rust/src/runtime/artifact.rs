@@ -1,0 +1,176 @@
+//! Artifact manifest: what `python/compile/aot.py` lowered, and where.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One lowered artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub kind: String,
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    pub num_inputs: usize,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    by_name: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate the manifest from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::io(format!("read {}", path.display()), e))?;
+        let root = Json::parse(&text)?;
+        let version = root.req("version")?.as_usize().unwrap_or(0);
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let dtype = root.req("dtype")?.as_str().unwrap_or("");
+        if dtype != "f64" {
+            return Err(Error::Artifact(format!("expected f64 artifacts, got '{dtype}'")));
+        }
+        let mut by_name = HashMap::new();
+        for item in root.req("artifacts")?.as_arr().unwrap_or(&[]) {
+            let entry = ArtifactEntry {
+                name: req_str(item, "name")?,
+                file: dir.join(req_str(item, "file")?),
+                kind: req_str(item, "kind")?,
+                d: req_usize(item, "d")?,
+                m: req_usize(item, "m")?,
+                n: req_usize(item, "n")?,
+                num_inputs: req_usize(item, "num_inputs")?,
+                output_shapes: item
+                    .req("output_shapes")?
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .unwrap_or(&[])
+                            .iter()
+                            .filter_map(|d| d.as_usize())
+                            .collect()
+                    })
+                    .collect(),
+            };
+            if !entry.file.exists() {
+                return Err(Error::Artifact(format!(
+                    "manifest lists missing file {}",
+                    entry.file.display()
+                )));
+            }
+            by_name.insert(entry.name.clone(), entry);
+        }
+        if by_name.is_empty() {
+            return Err(Error::Artifact("manifest has no artifacts".into()));
+        }
+        Ok(Manifest { dir, by_name })
+    }
+
+    /// Locate the default artifact directory: `$FADMM_ARTIFACTS` or
+    /// `./artifacts` relative to the workspace root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("FADMM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.by_name.get(name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "artifact '{name}' not in manifest — is python/compile/shapes.py \
+                 in sync with the experiment configuration? (run `make artifacts`)"
+            ))
+        })
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.by_name.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(|s| s.as_str())
+    }
+}
+
+fn req_str(item: &Json, key: &str) -> Result<String> {
+    item.req(key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| Error::Artifact(format!("manifest: '{key}' not a string")))
+}
+
+fn req_usize(item: &Json, key: &str) -> Result<usize> {
+    item.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Artifact(format!("manifest: '{key}' not an integer")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = std::env::temp_dir().join("fadmm_manifest_ok");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("m.hlo.txt"), "HloModule m").unwrap();
+        write_manifest(&dir, r#"{"version":1,"dtype":"f64","artifacts":[
+            {"name":"moments_d8_n16","file":"m.hlo.txt","kind":"moments",
+             "d":8,"m":0,"n":16,"num_inputs":2,
+             "input_shapes":[[8,16],[16]],"output_shapes":[[],[8],[8,8]]}]}"#);
+        let man = Manifest::load(&dir).unwrap();
+        assert_eq!(man.len(), 1);
+        let e = man.get("moments_d8_n16").unwrap();
+        assert_eq!(e.d, 8);
+        assert_eq!(e.output_shapes, vec![vec![], vec![8], vec![8, 8]]);
+        assert!(man.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_dtype_and_version() {
+        let dir = std::env::temp_dir().join("fadmm_manifest_bad");
+        write_manifest(&dir, r#"{"version":2,"dtype":"f64","artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        write_manifest(&dir, r#"{"version":1,"dtype":"f32","artifacts":[]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = std::env::temp_dir().join("fadmm_manifest_missing");
+        write_manifest(&dir, r#"{"version":1,"dtype":"f64","artifacts":[
+            {"name":"x","file":"gone.hlo.txt","kind":"moments","d":1,"m":0,
+             "n":1,"num_inputs":2,"input_shapes":[],"output_shapes":[]}]}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

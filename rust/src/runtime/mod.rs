@@ -1,0 +1,73 @@
+//! Compute backends: lowered XLA artifacts (production) and the native
+//! Rust oracle (tests / threaded runs).
+//!
+//! The optimization hot path calls one of four operations per node:
+//!
+//! * `moments` — L1 Pallas kernel, one pass over the raw data;
+//! * `node_update` — L2 EM + consensus M-step on cached moments;
+//! * `objective` — L2 marginal NLL (used for convergence and by the
+//!   AP/NAP penalty schemes on neighbour estimates);
+//! * `estep_z` — L1 kernel extracting posterior latents (final structure).
+//!
+//! [`XlaBackend`] executes the AOT artifacts through the PJRT CPU client
+//! (`xla` crate), compiled lazily and cached per artifact name.
+//! [`NativeBackend`] dispatches to [`crate::dppca::em`]; both must agree
+//! to ≲1e-9 (asserted in `rust/tests/integration_runtime.rs`).
+
+mod artifact;
+mod native;
+mod xla_backend;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use native::NativeBackend;
+pub use xla_backend::XlaBackend;
+
+use crate::dppca::{Moments, PpcaParams};
+use crate::error::Result;
+use crate::linalg::Mat;
+
+/// A D-PPCA compute backend (object-safe; shared by nodes via `Rc`).
+pub trait Backend {
+    fn name(&self) -> &'static str;
+
+    /// Masked raw moments of a (D, N) block.
+    fn moments(&mut self, x: &Mat, mask: &[f64]) -> Result<Moments>;
+
+    /// One EM + consensus M-step from cached moments.
+    /// Returns the new parameters and their marginal NLL.
+    fn node_update(&mut self, mom: &Moments, params: &PpcaParams,
+                   mult: &PpcaParams, eta_sum: f64, eta_w: &PpcaParams)
+                   -> Result<(PpcaParams, f64)>;
+
+    /// Direct path: the same update recomputing moments from raw data
+    /// (the faithful per-iteration cost model; see DESIGN.md §1).
+    fn node_update_direct(&mut self, x: &Mat, mask: &[f64], params: &PpcaParams,
+                          mult: &PpcaParams, eta_sum: f64, eta_w: &PpcaParams)
+                          -> Result<(PpcaParams, f64)> {
+        let mom = self.moments(x, mask)?;
+        self.node_update(&mom, params, mult, eta_sum, eta_w)
+    }
+
+    /// Marginal NLL of arbitrary parameters against the node's moments.
+    fn objective(&mut self, mom: &Moments, params: &PpcaParams) -> Result<f64>;
+
+    /// Score many parameter sets against one node's moments. The XLA
+    /// backend folds the whole batch into a single PJRT dispatch (the
+    /// dominant cost for the AP/NAP schemes — EXPERIMENTS.md §Perf); the
+    /// default just loops.
+    fn objective_batch(&mut self, mom: &Moments, params: &[PpcaParams])
+                       -> Result<Vec<f64>> {
+        params.iter().map(|p| self.objective(mom, p)).collect()
+    }
+
+    /// Posterior latent means (M, N); masked columns zero.
+    fn estep_z(&mut self, x: &Mat, mask: &[f64], params: &PpcaParams) -> Result<Mat>;
+}
+
+/// Shared, interiorly mutable backend handle used by per-node solvers.
+pub type SharedBackend = std::rc::Rc<std::cell::RefCell<dyn Backend>>;
+
+/// Wrap a backend for sharing across the nodes of one engine.
+pub fn shared(backend: impl Backend + 'static) -> SharedBackend {
+    std::rc::Rc::new(std::cell::RefCell::new(backend))
+}

@@ -1,0 +1,43 @@
+//! Pure-Rust backend: dispatches straight to [`crate::dppca::em`].
+
+use super::Backend;
+use crate::dppca::{em, Moments, PpcaParams};
+use crate::error::Result;
+use crate::linalg::Mat;
+
+/// Artifact-free backend implementing the identical math in Rust.
+///
+/// Used for: tests without `make artifacts`, the threaded coordinator
+/// (PJRT handles are not `Send`), and cross-validation of the artifacts.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn moments(&mut self, x: &Mat, mask: &[f64]) -> Result<Moments> {
+        Ok(em::moments(x, mask))
+    }
+
+    fn node_update(&mut self, mom: &Moments, params: &PpcaParams,
+                   mult: &PpcaParams, eta_sum: f64, eta_w: &PpcaParams)
+                   -> Result<(PpcaParams, f64)> {
+        em::node_update(mom, params, mult, eta_sum, eta_w)
+    }
+
+    fn objective(&mut self, mom: &Moments, params: &PpcaParams) -> Result<f64> {
+        em::marginal_nll(mom, params)
+    }
+
+    fn estep_z(&mut self, x: &Mat, mask: &[f64], params: &PpcaParams) -> Result<Mat> {
+        em::estep_z(x, mask, params)
+    }
+}

@@ -1,0 +1,278 @@
+//! PJRT-backed backend executing the AOT-lowered HLO artifacts.
+//!
+//! Artifacts are HLO *text* (see `python/compile/aot.py` for why), parsed
+//! by `HloModuleProto::from_text_file`, compiled once per name on the
+//! PJRT CPU client and cached. Literal marshalling is f64 row-major,
+//! matching JAX's C-order lowering.
+
+use std::collections::HashMap;
+
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::{Backend, Manifest};
+use crate::dppca::{Moments, PpcaParams};
+use crate::error::{Error, Result};
+use crate::linalg::Mat;
+
+/// PJRT CPU backend with a per-artifact executable cache.
+pub struct XlaBackend {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, PjRtLoadedExecutable>,
+    /// cumulative executions per artifact kind (perf introspection)
+    pub exec_counts: HashMap<&'static str, u64>,
+}
+
+impl XlaBackend {
+    /// Create from an artifact directory (must contain `manifest.json`).
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<XlaBackend> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = PjRtClient::cpu()?;
+        Ok(XlaBackend { client, manifest, cache: HashMap::new(), exec_counts: HashMap::new() })
+    }
+
+    /// Create from the default artifact location (`$FADMM_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn from_default_dir() -> Result<XlaBackend> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch) the executable for an artifact name.
+    fn executable(&mut self, name: &str) -> Result<&PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let entry = self.manifest.get(name)?;
+            let path = entry.file.to_string_lossy().to_string();
+            let proto = HloModuleProto::from_text_file(&path)?;
+            let comp = XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Eagerly compile every artifact a (d, m, n) experiment shape needs;
+    /// returns how many were newly compiled. Called at run start so the
+    /// hot loop never hits a compile.
+    pub fn warmup(&mut self, d: usize, m: usize, n: usize) -> Result<usize> {
+        let names = [
+            format!("moments_d{d}_n{n}"),
+            format!("node_update_d{d}_m{m}"),
+            format!("objective_d{d}_m{m}"),
+            format!("objective_batch_d{d}_m{m}"),
+            format!("node_update_direct_d{d}_m{m}_n{n}"),
+            format!("estep_z_d{d}_m{m}_n{n}"),
+        ];
+        let mut compiled = 0;
+        for name in names {
+            if !self.cache.contains_key(&name) {
+                self.executable(&name)?;
+                compiled += 1;
+            }
+        }
+        Ok(compiled)
+    }
+
+    fn run(&mut self, name: &str, kind: &'static str, inputs: &[Literal])
+           -> Result<Vec<Literal>> {
+        let exe = self.executable(name)?;
+        let result = exe.execute::<Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        *self.exec_counts.entry(kind).or_insert(0) += 1;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+// ---- literal marshalling ---------------------------------------------------
+
+fn lit_scalar(x: f64) -> Literal {
+    Literal::scalar(x)
+}
+
+fn lit_vec(v: &[f64]) -> Literal {
+    Literal::vec1(v)
+}
+
+fn lit_mat(m: &Mat) -> Result<Literal> {
+    Ok(Literal::vec1(m.data()).reshape(&[m.rows() as i64, m.cols() as i64])?)
+}
+
+fn take_scalar(lit: &Literal) -> Result<f64> {
+    let v = lit.to_vec::<f64>()?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error::Artifact("empty scalar output".into()))
+}
+
+fn take_vec(lit: &Literal, len: usize) -> Result<Vec<f64>> {
+    let v = lit.to_vec::<f64>()?;
+    if v.len() != len {
+        return Err(Error::Shape(format!("output len {} != {len}", v.len())));
+    }
+    Ok(v)
+}
+
+fn take_mat(lit: &Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = take_vec(lit, rows * cols)?;
+    Ok(Mat::from_vec(rows, cols, v))
+}
+
+fn expect_outputs(outs: &[Literal], want: usize, name: &str) -> Result<()> {
+    if outs.len() != want {
+        return Err(Error::Artifact(format!(
+            "{name}: expected {want} outputs, got {}",
+            outs.len()
+        )));
+    }
+    Ok(())
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn moments(&mut self, x: &Mat, mask: &[f64]) -> Result<Moments> {
+        let (d, n) = x.shape();
+        let name = format!("moments_d{d}_n{n}");
+        let outs = self.run(&name, "moments", &[lit_mat(x)?, lit_vec(mask)])?;
+        expect_outputs(&outs, 3, &name)?;
+        Ok(Moments {
+            n: take_scalar(&outs[0])?,
+            sx: take_vec(&outs[1], d)?,
+            sxx: take_mat(&outs[2], d, d)?,
+        })
+    }
+
+    fn node_update(&mut self, mom: &Moments, params: &PpcaParams,
+                   mult: &PpcaParams, eta_sum: f64, eta_w: &PpcaParams)
+                   -> Result<(PpcaParams, f64)> {
+        let (d, m) = (params.d(), params.m());
+        let name = format!("node_update_d{d}_m{m}");
+        let inputs = [
+            lit_scalar(mom.n),
+            lit_vec(&mom.sx),
+            lit_mat(&mom.sxx)?,
+            lit_mat(&params.w)?,
+            lit_vec(&params.mu),
+            lit_scalar(params.a),
+            lit_mat(&mult.w)?,
+            lit_vec(&mult.mu),
+            lit_scalar(mult.a),
+            lit_scalar(eta_sum),
+            lit_mat(&eta_w.w)?,
+            lit_vec(&eta_w.mu),
+            lit_scalar(eta_w.a),
+        ];
+        let outs = self.run(&name, "node_update", &inputs)?;
+        expect_outputs(&outs, 4, &name)?;
+        let p = PpcaParams {
+            w: take_mat(&outs[0], d, m)?,
+            mu: take_vec(&outs[1], d)?,
+            a: take_scalar(&outs[2])?,
+        };
+        Ok((p, take_scalar(&outs[3])?))
+    }
+
+    fn node_update_direct(&mut self, x: &Mat, mask: &[f64], params: &PpcaParams,
+                          mult: &PpcaParams, eta_sum: f64, eta_w: &PpcaParams)
+                          -> Result<(PpcaParams, f64)> {
+        let (d, n) = x.shape();
+        let m = params.m();
+        let name = format!("node_update_direct_d{d}_m{m}_n{n}");
+        let inputs = [
+            lit_mat(x)?,
+            lit_vec(mask),
+            lit_mat(&params.w)?,
+            lit_vec(&params.mu),
+            lit_scalar(params.a),
+            lit_mat(&mult.w)?,
+            lit_vec(&mult.mu),
+            lit_scalar(mult.a),
+            lit_scalar(eta_sum),
+            lit_mat(&eta_w.w)?,
+            lit_vec(&eta_w.mu),
+            lit_scalar(eta_w.a),
+        ];
+        let outs = self.run(&name, "node_update_direct", &inputs)?;
+        expect_outputs(&outs, 4, &name)?;
+        let p = PpcaParams {
+            w: take_mat(&outs[0], d, m)?,
+            mu: take_vec(&outs[1], d)?,
+            a: take_scalar(&outs[2])?,
+        };
+        Ok((p, take_scalar(&outs[3])?))
+    }
+
+    fn objective(&mut self, mom: &Moments, params: &PpcaParams) -> Result<f64> {
+        let (d, m) = (params.d(), params.m());
+        let name = format!("objective_d{d}_m{m}");
+        let inputs = [
+            lit_scalar(mom.n),
+            lit_vec(&mom.sx),
+            lit_mat(&mom.sxx)?,
+            lit_mat(&params.w)?,
+            lit_vec(&params.mu),
+            lit_scalar(params.a),
+        ];
+        let outs = self.run(&name, "objective", &inputs)?;
+        expect_outputs(&outs, 1, &name)?;
+        take_scalar(&outs[0])
+    }
+
+    fn objective_batch(&mut self, mom: &Moments, params: &[PpcaParams])
+                       -> Result<Vec<f64>> {
+        /// batch width lowered in `python/compile/model.py::OBJECTIVE_BATCH`
+        const B: usize = 20;
+        if params.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (d, m) = (params[0].d(), params[0].m());
+        let name = format!("objective_batch_d{d}_m{m}");
+        let mut out = Vec::with_capacity(params.len());
+        for chunk in params.chunks(B) {
+            // pad short chunks with copies of the first entry
+            let mut ws = Vec::with_capacity(B * d * m);
+            let mut mus = Vec::with_capacity(B * d);
+            let mut a_s = Vec::with_capacity(B);
+            for k in 0..B {
+                let p = chunk.get(k).unwrap_or(&chunk[0]);
+                ws.extend_from_slice(p.w.data());
+                mus.extend_from_slice(&p.mu);
+                a_s.push(p.a);
+            }
+            let inputs = [
+                lit_scalar(mom.n),
+                lit_vec(&mom.sx),
+                lit_mat(&mom.sxx)?,
+                Literal::vec1(&ws).reshape(&[B as i64, d as i64, m as i64])?,
+                Literal::vec1(&mus).reshape(&[B as i64, d as i64])?,
+                lit_vec(&a_s),
+            ];
+            let outs = self.run(&name, "objective_batch", &inputs)?;
+            expect_outputs(&outs, 1, &name)?;
+            let nlls = take_vec(&outs[0], B)?;
+            out.extend_from_slice(&nlls[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn estep_z(&mut self, x: &Mat, mask: &[f64], params: &PpcaParams) -> Result<Mat> {
+        let (d, n) = x.shape();
+        let m = params.m();
+        let name = format!("estep_z_d{d}_m{m}_n{n}");
+        let inputs = [
+            lit_mat(x)?,
+            lit_vec(mask),
+            lit_mat(&params.w)?,
+            lit_vec(&params.mu),
+            lit_scalar(params.a),
+        ];
+        let outs = self.run(&name, "estep_z", &inputs)?;
+        expect_outputs(&outs, 1, &name)?;
+        take_mat(&outs[0], m, n)
+    }
+}

@@ -1,0 +1,130 @@
+//! Distributed affine structure-from-motion on top of D-PPCA.
+//!
+//! Formulation (following Yoon & Pavlovic, NIPS'12, as used in the paper's
+//! §5.2): the 2F×N tracked-feature matrix is centred per frame (removing
+//! the affine translation) and **transposed**, giving an N×2F data matrix
+//! whose columns (one per frame coordinate row) are the PPCA samples and
+//! whose D = N rows are the tracked points. With latent dimension M = 3
+//! the PPCA projection matrix W ∈ R^{N×3} *is* the reconstructed 3-D
+//! structure, so running consensus D-PPCA over cameras — each owning its
+//! own frames (= its own sample columns) — jointly estimates the shared
+//! structure while camera motion lands in the per-sample latents E[z].
+//!
+//! Error metric: maximum principal angle between a node's W and the
+//! centralized SVD structure basis (the paper's ground truth).
+
+use crate::error::Result;
+use crate::linalg::{max_principal_angle_deg, Mat, Svd};
+
+/// Centre each row of a 2F×N measurement matrix (per-frame centroid
+/// subtraction — removes the affine translation component).
+pub fn center_rows(measurements: &Mat) -> Mat {
+    let mut m = measurements.clone();
+    let n = m.cols() as f64;
+    for r in 0..m.rows() {
+        let mean: f64 = m.row(r).iter().sum::<f64>() / n;
+        for c in 0..m.cols() {
+            m[(r, c)] -= mean;
+        }
+    }
+    m
+}
+
+/// Build the D-PPCA input: centred, transposed measurement matrix
+/// (N points × 2F frame-rows). Samples = columns.
+pub fn ppca_input(measurements: &Mat) -> Mat {
+    center_rows(measurements).t()
+}
+
+/// Centralized SVD baseline: the rank-3 structure basis (N×3) of the
+/// centred measurement matrix — the paper's ground truth for the subspace
+/// angle. Also returns the rank-3 reconstruction error (relative
+/// Frobenius) as a data-quality diagnostic.
+pub fn svd_structure(measurements: &Mat) -> Result<(Mat, f64)> {
+    let centred = center_rows(measurements);
+    let svd = Svd::new(&centred)?;
+    // centred is 2F×N: structure basis = top-3 right singular vectors
+    let basis = svd.v.col_slice(0, 3);
+    let recon = svd.low_rank(3);
+    let err = (&recon - &centred).fro_norm() / centred.fro_norm().max(1e-300);
+    Ok((basis, err))
+}
+
+/// Subspace-angle error (degrees) of an estimated structure `w` (N×3)
+/// against the SVD baseline.
+pub fn structure_error_deg(w: &Mat, baseline: &Mat) -> Result<f64> {
+    max_principal_angle_deg(w, baseline)
+}
+
+/// Split frames evenly over cameras: camera i receives the *sample
+/// columns* of the transposed matrix that belong to its frames. Returns
+/// per-camera (N × 2F_i) data blocks.
+pub fn split_frames(ppca_data: &Mat, frames: usize, cameras: usize) -> Vec<Mat> {
+    assert_eq!(ppca_data.cols(), 2 * frames, "ppca data must be N×2F");
+    let part = crate::data::even_split(frames, cameras);
+    part.ranges
+        .iter()
+        .map(|&(lo, hi)| ppca_data.col_slice(2 * lo, 2 * hi))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::turntable::TurntableSpec;
+
+    fn obj() -> crate::data::TurntableObject {
+        TurntableSpec::default().generate("Standing", 42)
+    }
+
+    #[test]
+    fn centering_zeroes_row_means() {
+        let m = center_rows(&obj().measurements);
+        for r in 0..m.rows() {
+            let mean: f64 = m.row(r).iter().sum::<f64>() / m.cols() as f64;
+            assert!(mean.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn svd_baseline_matches_true_structure() {
+        let o = obj();
+        let (basis, err) = svd_structure(&o.measurements).unwrap();
+        assert_eq!(basis.shape(), (120, 3));
+        assert!(err < 0.02, "rank-3 residual {err}");
+        // per-frame centring removes the centroid, so the SVD basis spans
+        // the *centred* structure — centre before comparing
+        let mut s = o.structure.clone();
+        for k in 0..3 {
+            let mean: f64 = s.col(k).iter().sum::<f64>() / s.rows() as f64;
+            for r in 0..s.rows() {
+                s[(r, k)] -= mean;
+            }
+        }
+        let angle = structure_error_deg(&s, &basis).unwrap();
+        assert!(angle < 2.0, "angle {angle}");
+    }
+
+    #[test]
+    fn split_covers_all_frames() {
+        let o = obj();
+        let data = ppca_input(&o.measurements);
+        let blocks = split_frames(&data, o.frames, 5);
+        assert_eq!(blocks.len(), 5);
+        let total: usize = blocks.iter().map(|b| b.cols()).sum();
+        assert_eq!(total, 2 * o.frames);
+        for b in &blocks {
+            assert_eq!(b.rows(), 120);
+            assert_eq!(b.cols(), 12); // 30 frames / 5 cameras × 2 rows
+        }
+    }
+
+    #[test]
+    fn perfect_rank3_data_has_zero_svd_error() {
+        // noiseless object: rank-3 reconstruction must be exact
+        let spec = TurntableSpec { noise: 0.0, ..Default::default() };
+        let o = spec.generate("BoxStuff", 7);
+        let (_, err) = svd_structure(&o.measurements).unwrap();
+        assert!(err < 1e-10, "err {err}");
+    }
+}

@@ -1,0 +1,144 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by the `rust/benches/*.rs` targets (`cargo bench`). Each benchmark
+//! warms up, then runs timed batches until a time budget is hit, and
+//! reports mean / median / p10 / p90 per-iteration latency. Intentionally
+//! simple — enough for regression tracking and the §Perf methodology in
+//! EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use super::stats;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} iters  mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.p10_ns),
+            fmt_ns(self.p90_ns),
+        )
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Prevent the optimizer from discarding a value (ptr read volatile trick).
+pub fn black_box<T>(x: T) -> T {
+    unsafe {
+        let y = std::ptr::read_volatile(&x);
+        std::mem::forget(x);
+        y
+    }
+}
+
+/// Benchmark runner with a global time budget per benchmark.
+pub struct Bencher {
+    /// seconds of measurement per benchmark (after warmup)
+    pub budget_secs: f64,
+    /// warmup seconds
+    pub warmup_secs: f64,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { budget_secs: 2.0, warmup_secs: 0.3, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fast settings for CI smoke runs (`FADMM_BENCH_FAST=1`).
+    pub fn from_env() -> Self {
+        if std::env::var("FADMM_BENCH_FAST").is_ok() {
+            Bencher { budget_secs: 0.2, warmup_secs: 0.05, results: Vec::new() }
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Measure `f`, printing the result line immediately.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed().as_secs_f64() < self.warmup_secs {
+            f();
+        }
+        // measured batches: size batches so each is ~1ms min
+        let probe_t = Instant::now();
+        f();
+        let probe = probe_t.elapsed().as_secs_f64().max(1e-9);
+        let batch = ((0.001 / probe).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed().as_secs_f64() < self.budget_secs {
+            let bt = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            let ns = bt.elapsed().as_nanos() as f64 / batch as f64;
+            samples.push(ns);
+            total_iters += batch;
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&samples),
+            median_ns: stats::median(&samples),
+            p10_ns: stats::percentile(&samples, 10.0),
+            p90_ns: stats::percentile(&samples, 90.0),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher { budget_secs: 0.05, warmup_secs: 0.01, results: vec![] };
+        let r = b.bench("noop-ish", || {
+            black_box(1u64 + black_box(2u64));
+        });
+        assert!(r.iters > 0);
+        assert!(r.mean_ns > 0.0);
+    }
+}

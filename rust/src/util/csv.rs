@@ -1,0 +1,113 @@
+//! Tiny CSV writer for experiment result series.
+//!
+//! Output columns are declared once; rows are type-checked against the
+//! header length at write time. Fields never need quoting here (numeric and
+//! identifier data only), but commas in strings are rejected loudly.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Streaming CSV writer.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    ncols: usize,
+    path: String,
+}
+
+impl CsvWriter {
+    /// Create the file (and any missing parent directories) and write the
+    /// header row.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<CsvWriter> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::io(format!("mkdir {}", dir.display()), e))?;
+        }
+        let file = File::create(path)
+            .map_err(|e| Error::io(format!("create {}", path.display()), e))?;
+        let mut w = CsvWriter {
+            out: BufWriter::new(file),
+            ncols: header.len(),
+            path: path.display().to_string(),
+        };
+        w.write_strs(header)?;
+        Ok(w)
+    }
+
+    fn write_strs(&mut self, fields: &[&str]) -> Result<()> {
+        if fields.len() != self.ncols {
+            return Err(Error::Config(format!(
+                "csv {}: row has {} fields, header has {}",
+                self.path,
+                fields.len(),
+                self.ncols
+            )));
+        }
+        let mut line = String::new();
+        for (i, f) in fields.iter().enumerate() {
+            if f.contains(',') || f.contains('\n') {
+                return Err(Error::Config(format!("csv field needs quoting: {f:?}")));
+            }
+            if i > 0 {
+                line.push(',');
+            }
+            line.push_str(f);
+        }
+        line.push('\n');
+        self.out
+            .write_all(line.as_bytes())
+            .map_err(|e| Error::io(format!("write {}", self.path), e))
+    }
+
+    /// Write a row of mixed values (anything `Display`, pre-formatted).
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        let refs: Vec<&str> = fields.iter().map(|s| s.as_str()).collect();
+        self.write_strs(&refs)
+    }
+
+    /// Flush to disk.
+    pub fn finish(mut self) -> Result<()> {
+        self.out
+            .flush()
+            .map_err(|e| Error::io(format!("flush {}", self.path), e))
+    }
+}
+
+/// Format an f64 compactly for CSV output.
+pub fn fnum(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_validates() {
+        let dir = std::env::temp_dir().join("fadmm_csv_test");
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        w.row(&["1".into(), "2".into()]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+        w.row(&[fnum(2.5), fnum(3.0)]).unwrap();
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n2.500000e0,3\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_commas() {
+        let dir = std::env::temp_dir().join("fadmm_csv_test2");
+        let mut w = CsvWriter::create(dir.join("t.csv"), &["a"]).unwrap();
+        assert!(w.row(&["x,y".into()]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

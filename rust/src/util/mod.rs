@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment ships only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (rand, serde, csv, proptest,
+//! criterion) are re-implemented here at the minimal scale this project
+//! needs. Each submodule is independently unit-tested.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,64 @@
+//! In-repo property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a closure over a seeded [`Pcg`]; the harness runs it for a
+//! fixed number of cases and reports the failing seed so a failure is
+//! reproducible with `check_one`. Generators are plain functions on the
+//! RNG — no shrinking, but seeds make failures replayable which is the
+//! 90% use case.
+
+use super::rng::Pcg;
+
+/// Number of cases per property (kept modest; these run in `cargo test`).
+pub const DEFAULT_CASES: usize = 64;
+
+/// Run `prop` for `cases` seeds; panic with the seed on the first failure.
+pub fn check_named(name: &str, cases: usize, mut prop: impl FnMut(&mut Pcg)) {
+    for case in 0..cases {
+        let seed = 0xFAD0_0000 + case as u64;
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut rng = Pcg::seed(seed);
+            prop(&mut rng);
+        }));
+        if let Err(panic) = result {
+            let msg = panic
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| panic.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property '{name}' failed at seed {seed:#x}: {msg}");
+        }
+    }
+}
+
+/// Run a property with the default case count.
+pub fn check(name: &str, prop: impl FnMut(&mut Pcg)) {
+    check_named(name, DEFAULT_CASES, prop);
+}
+
+/// Re-run a single failing seed (debugging helper).
+pub fn check_one(seed: u64, mut prop: impl FnMut(&mut Pcg)) {
+    let mut rng = Pcg::seed(seed);
+    prop(&mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check("addition commutes", |rng| {
+            let a = rng.f64();
+            let b = rng.f64();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn reports_failing_seed() {
+        check("always fails eventually", |rng| {
+            assert!(rng.f64() < 0.5, "got a large value");
+        });
+    }
+}

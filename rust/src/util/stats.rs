@@ -1,0 +1,93 @@
+//! Summary statistics over experiment repetitions.
+
+/// Median of a slice (averaging the middle pair for even lengths).
+/// Returns NaN for empty input.
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Arithmetic mean (NaN for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n−1 denominator; 0 for n<2).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Element-wise median across equally long series; series shorter than the
+/// longest are extended with their final value (a converged run holds its
+/// last error), matching how the paper plots median curves over restarts.
+pub fn median_curve(series: &[Vec<f64>]) -> Vec<f64> {
+    let len = series.iter().map(|s| s.len()).max().unwrap_or(0);
+    (0..len)
+        .map(|t| {
+            let col: Vec<f64> = series
+                .iter()
+                .filter_map(|s| s.get(t).copied().or_else(|| s.last().copied()))
+                .collect();
+            median(&col)
+        })
+        .collect()
+}
+
+/// Percentile (nearest-rank); p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn mean_std() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((std_dev(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]) - 2.138089935299395).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_curve_extends_short_series() {
+        let s = vec![vec![10.0, 5.0, 1.0], vec![8.0, 4.0]];
+        let m = median_curve(&s);
+        assert_eq!(m, vec![9.0, 4.5, 2.5]); // last value 4.0 extended
+    }
+
+    #[test]
+    fn percentile_bounds() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+}

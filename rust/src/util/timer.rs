@@ -1,0 +1,84 @@
+//! Lightweight wall-clock timing helpers.
+
+use std::time::Instant;
+
+/// Accumulating timer for named phases of the hot loop.
+#[derive(Debug, Default, Clone)]
+pub struct PhaseTimer {
+    entries: Vec<(String, f64, u64)>, // (name, total_secs, count)
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.add(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Record an externally measured duration.
+    pub fn add(&mut self, name: &str, secs: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.0 == name) {
+            e.1 += secs;
+            e.2 += 1;
+        } else {
+            self.entries.push((name.to_string(), secs, 1));
+        }
+    }
+
+    /// (name, total_secs, calls) rows sorted by total time descending.
+    pub fn report(&self) -> Vec<(String, f64, u64)> {
+        let mut rows = self.entries.clone();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    /// Human-readable profile table.
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        for (name, total, count) in self.report() {
+            s.push_str(&format!(
+                "{name:<28} {total:10.4}s  {count:8} calls  {:10.1}µs/call\n",
+                total / count as f64 * 1e6,
+            ));
+        }
+        s
+    }
+}
+
+/// Measure a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates() {
+        let mut t = PhaseTimer::new();
+        t.time("a", || std::thread::sleep(std::time::Duration::from_millis(1)));
+        t.time("a", || ());
+        t.time("b", || ());
+        let rows = t.report();
+        assert_eq!(rows.len(), 2);
+        let a = rows.iter().find(|r| r.0 == "a").unwrap();
+        assert_eq!(a.2, 2);
+        assert!(a.1 >= 0.001);
+    }
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, secs) = timed(|| 7);
+        assert_eq!(v, 7);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Cross-module integration: consensus engine × every scheme × larger
+//! convex problems, and sequential-vs-threaded agreement.
+
+use std::sync::Arc;
+
+use fadmm::consensus::solvers::{LassoNode, LeastSquaresNode, QuadraticNode, RidgeNode};
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::coordinator::{ThreadedConfig, ThreadedRunner};
+use fadmm::graph::{random_connected, Topology};
+use fadmm::linalg::Mat;
+use fadmm::penalty::{SchemeKind, SchemeParams};
+use fadmm::util::rng::Pcg;
+
+fn quad_problem(n: usize, dim: usize, seed: u64) -> (Vec<QuadraticNode>, Vec<f64>) {
+    let mut rng = Pcg::seed(seed);
+    let nodes: Vec<QuadraticNode> =
+        (0..n).map(|_| QuadraticNode::random(dim, &mut rng)).collect();
+    let opt = QuadraticNode::central_optimum(&nodes);
+    (nodes, opt)
+}
+
+fn max_err(thetas: &[Vec<f64>], opt: &[f64]) -> f64 {
+    thetas
+        .iter()
+        .map(|th| {
+            th.iter().zip(opt).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+        })
+        .fold(0.0, f64::max)
+}
+
+#[test]
+fn twenty_node_network_all_schemes() {
+    for scheme in SchemeKind::ALL {
+        let (nodes, opt) = quad_problem(20, 4, 99);
+        let mut engine = Engine::new(Topology::Complete.build(20).unwrap(), nodes,
+                                     EngineConfig {
+                                         scheme,
+                                         tol: 1e-10,
+                                         max_iters: 800,
+                                         ..Default::default()
+                                     });
+        let report = engine.run();
+        assert!(max_err(&report.thetas, &opt) < 1e-3,
+                "{scheme:?}: err {}", max_err(&report.thetas, &opt));
+    }
+}
+
+#[test]
+fn grid_and_star_topologies() {
+    for topo in [Topology::Grid, Topology::Star] {
+        let n = if topo == Topology::Grid { 16 } else { 12 };
+        let (nodes, opt) = quad_problem(n, 3, 5);
+        let mut engine = Engine::new(topo.build(n).unwrap(), nodes, EngineConfig {
+            scheme: SchemeKind::VpNap,
+            tol: 1e-10,
+            max_iters: 900,
+            ..Default::default()
+        });
+        let report = engine.run();
+        assert!(max_err(&report.thetas, &opt) < 5e-3, "{topo:?}");
+    }
+}
+
+#[test]
+fn mixed_solver_kinds_share_engine_api() {
+    // LS / ridge / lasso all plug into the same engine generically
+    let mut rng = Pcg::seed(17);
+    let dim = 4;
+    let mut make = |rng: &mut Pcg| {
+        let a = Mat::randn(20, dim, rng);
+        let b: Vec<f64> = (0..20).map(|_| rng.normal()).collect();
+        (a, b)
+    };
+    {
+        let (a, b) = make(&mut rng);
+        let nodes: Vec<LeastSquaresNode> = (0..4)
+            .map(|_| LeastSquaresNode::new(a.clone(), b.clone()))
+            .collect();
+        let report = Engine::new(Topology::Ring.build(4).unwrap(), nodes,
+                                 EngineConfig::default()).run();
+        assert!(report.iterations > 0);
+    }
+    {
+        let (a, b) = make(&mut rng);
+        let nodes: Vec<RidgeNode> = (0..4)
+            .map(|_| RidgeNode::new(a.clone(), b.clone(), 0.5))
+            .collect();
+        let report = Engine::new(Topology::Ring.build(4).unwrap(), nodes,
+                                 EngineConfig::default()).run();
+        assert!(report.converged);
+    }
+    {
+        let (a, b) = make(&mut rng);
+        let nodes: Vec<LassoNode> = (0..4)
+            .map(|_| LassoNode::new(a.clone(), b.clone(), 1.0))
+            .collect();
+        let report = Engine::new(Topology::Ring.build(4).unwrap(), nodes,
+                                 EngineConfig::default()).run();
+        assert!(report.iterations > 0);
+    }
+}
+
+#[test]
+fn threaded_and_sequential_reach_same_optimum() {
+    let (nodes, opt) = quad_problem(8, 3, 23);
+    let mut engine = Engine::new(Topology::Ring.build(8).unwrap(), nodes,
+                                 EngineConfig {
+                                     scheme: SchemeKind::Ap,
+                                     tol: 1e-11,
+                                     max_iters: 800,
+                                     ..Default::default()
+                                 });
+    let sequential = engine.run();
+
+    let runner = ThreadedRunner::new(Topology::Ring.build(8).unwrap(),
+                                     ThreadedConfig {
+                                         scheme: SchemeKind::Ap,
+                                         tol: 1e-11,
+                                         max_iters: 800,
+                                         ..Default::default()
+                                     });
+    let threaded = runner
+        .run(Arc::new(move |i| {
+            // regenerate the same deterministic problem inside the thread
+            let mut rng = Pcg::seed(23);
+            let mut nodes: Vec<QuadraticNode> = Vec::new();
+            for _ in 0..8 {
+                nodes.push(QuadraticNode::random(3, &mut rng));
+            }
+            nodes.swap_remove(i)
+        }), |_, _| 0.0)
+        .unwrap();
+
+    assert!(max_err(&sequential.thetas, &opt) < 1e-3);
+    assert!(max_err(&threaded.thetas, &opt) < 1e-3);
+}
+
+#[test]
+fn random_graphs_with_custom_params() {
+    let mut rng = Pcg::seed(77);
+    for _ in 0..3 {
+        let n = 5 + rng.below(10);
+        let graph = random_connected(n, 0.4, &mut rng).unwrap();
+        let (nodes, opt) = quad_problem(n, 2, rng.next_u64());
+        let params = SchemeParams { eta0: 5.0, t_max: 30, ..Default::default() };
+        let mut engine = Engine::new(graph, nodes, EngineConfig {
+            scheme: SchemeKind::VpAp,
+            params,
+            tol: 1e-10,
+            max_iters: 700,
+            ..Default::default()
+        });
+        let report = engine.run();
+        assert!(max_err(&report.thetas, &opt) < 5e-3);
+    }
+}

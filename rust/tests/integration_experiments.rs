@@ -1,0 +1,136 @@
+//! Experiment-harness integration: miniature versions of every paper
+//! artifact run end to end (CSV output + summary invariants), plus the
+//! XLA-backend variant when artifacts are present.
+
+use fadmm::experiments::common::BackendChoice;
+use fadmm::experiments::{ablations, caltech, fig2, hopkins};
+use fadmm::graph::Topology;
+use fadmm::penalty::SchemeKind;
+use fadmm::runtime::Manifest;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("fadmm_it_{name}"));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn have_artifacts() -> bool {
+    Manifest::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn fig2_size_axis_smoke() {
+    let dir = tmp("fig2");
+    let cfg = fig2::Fig2Config {
+        seeds: 2,
+        max_iters: 60,
+        schemes: vec![SchemeKind::Fixed, SchemeKind::Vp],
+        axis_size: true,
+        axis_topology: false,
+        ..Default::default()
+    };
+    let rows = fig2::run(&cfg, &dir).unwrap();
+    assert_eq!(rows.len(), 3 * 2); // J ∈ {12,16,20} × 2 schemes
+    // every curve starts high and ends lower (subspace being recovered)
+    for r in &rows {
+        assert!(r.curve[0] > *r.curve.last().unwrap(),
+                "{}/{:?} curve did not decrease", r.config, r.scheme);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn fig2_runs_on_xla_backend_when_available() {
+    if !have_artifacts() {
+        eprintln!("SKIP: run `make artifacts` for the XLA-backend test");
+        return;
+    }
+    let dir = tmp("fig2_xla");
+    let cfg = fig2::Fig2Config {
+        seeds: 1,
+        max_iters: 40,
+        backend: BackendChoice::Xla,
+        schemes: vec![SchemeKind::Ap],
+        axis_size: false,
+        axis_topology: true,
+        ..Default::default()
+    };
+    let rows = fig2::run(&cfg, &dir).unwrap();
+    assert_eq!(rows.len(), 3);
+
+    // native backend must produce the identical numbers (same seeds)
+    let dir2 = tmp("fig2_native_xcheck");
+    let cfg2 = fig2::Fig2Config { backend: BackendChoice::Native, ..cfg };
+    let rows2 = fig2::run(&cfg2, &dir2).unwrap();
+    for (a, b) in rows.iter().zip(&rows2) {
+        assert_eq!(a.median_iterations, b.median_iterations,
+                   "xla vs native iterations for {}", a.config);
+        assert!((a.median_final_angle - b.median_final_angle).abs() < 1e-6,
+                "xla vs native angle for {}", a.config);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn caltech_one_object_all_settings() {
+    let dir = tmp("caltech");
+    let cfg = caltech::CaltechConfig {
+        seeds: 2,
+        max_iters: 120,
+        schemes: vec![SchemeKind::Fixed, SchemeKind::Nap],
+        objects: vec!["BoxStuff".to_string()],
+        ..Default::default()
+    };
+    let rows = caltech::run(&cfg, &dir).unwrap();
+    assert_eq!(rows.len(), 3 * 2);
+    // complete/tmax50 should reach a small error for at least one scheme
+    let best = rows
+        .iter()
+        .filter(|r| r.setting == "complete_tmax50")
+        .map(|r| r.median_final_angle)
+        .fold(f64::INFINITY, f64::min);
+    assert!(best < 15.0, "best complete-graph angle {best}");
+    caltech::describe(&dir, 0).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn hopkins_mini_corpus_table() {
+    let dir = tmp("hopkins");
+    let cfg = hopkins::HopkinsConfig {
+        objects: 12,
+        seeds: 2,
+        max_iters: 300,
+        schemes: vec![SchemeKind::Fixed, SchemeKind::Vp, SchemeKind::Nap],
+        topologies: vec![Topology::Complete],
+        degenerate_frac: 0.15,
+        ..Default::default()
+    };
+    let rows = hopkins::run(&cfg, &dir).unwrap();
+    assert_eq!(rows.len(), 3);
+    let fixed = rows.iter().find(|r| r.scheme == SchemeKind::Fixed).unwrap();
+    let vp = rows.iter().find(|r| r.scheme == SchemeKind::Vp).unwrap();
+    assert!(fixed.objects_used > 0);
+    // E4's qualitative claim: VP at least as fast as the baseline
+    assert!(vp.mean_iterations <= fixed.mean_iterations * 1.05,
+            "VP {} vs fixed {}", vp.mean_iterations, fixed.mean_iterations);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn ablation_eta0_shows_adaptive_robustness() {
+    let dir = tmp("ablation");
+    let cfg = ablations::AblationConfig {
+        seeds: 2,
+        max_iters: 150,
+        j: 8,
+        ..Default::default()
+    };
+    let rows = ablations::eta0(&cfg, &dir).unwrap();
+    assert_eq!(rows.len(), 3 * 4); // 3 η⁰ × 4 schemes
+    for r in &rows {
+        assert!(r.median_iters > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

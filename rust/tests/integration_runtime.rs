@@ -1,0 +1,198 @@
+//! XLA artifacts vs the native Rust oracle — the cross-layer correctness
+//! contract: ref.py (jnp) == Pallas kernel == lowered HLO == dppca::em.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use fadmm::dppca::{Moments, PpcaParams};
+use fadmm::linalg::Mat;
+use fadmm::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
+use fadmm::util::rng::Pcg;
+
+fn artifact_dir() -> Option<std::path::PathBuf> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?}; run `make artifacts`");
+        None
+    }
+}
+
+fn backends() -> Option<(XlaBackend, NativeBackend)> {
+    let dir = artifact_dir()?;
+    Some((XlaBackend::new(dir).expect("xla backend"), NativeBackend::new()))
+}
+
+fn random_inputs(seed: u64, d: usize, m: usize, n: usize)
+                 -> (Mat, Vec<f64>, PpcaParams, PpcaParams, f64, PpcaParams) {
+    let mut rng = Pcg::seed(seed);
+    let x = Mat::randn(d, n, &mut rng);
+    let mask: Vec<f64> = (0..n).map(|k| f64::from(k < n - 2)).collect();
+    let params = PpcaParams {
+        w: Mat::randn(d, m, &mut rng),
+        mu: rng.normal_vec(d),
+        a: rng.range(0.5, 2.0),
+    };
+    let mult = PpcaParams {
+        w: Mat::randn(d, m, &mut rng).scale(0.05),
+        mu: rng.normal_vec(d).iter().map(|v| v * 0.05).collect(),
+        a: 0.02,
+    };
+    let eta_sum = 30.0;
+    let eta_w = PpcaParams {
+        w: (&params.w + &Mat::randn(d, m, &mut rng)).scale(eta_sum),
+        mu: params.mu.iter().map(|v| eta_sum * (v + 0.3)).collect(),
+        a: eta_sum * (params.a + 1.2),
+    };
+    (x, mask, params, mult, eta_sum, eta_w)
+}
+
+#[test]
+fn moments_kernel_matches_native() {
+    let Some((mut xla, mut native)) = backends() else { return };
+    for (d, m, n) in [(8, 2, 16), (20, 5, 25), (120, 3, 12)] {
+        let (x, mask, ..) = random_inputs(d as u64, d, m, n);
+        let a: Moments = xla.moments(&x, &mask).unwrap();
+        let b: Moments = native.moments(&x, &mask).unwrap();
+        assert!((a.n - b.n).abs() < 1e-9, "d{d}");
+        for (u, v) in a.sx.iter().zip(&b.sx) {
+            assert!((u - v).abs() < 1e-9, "d{d}");
+        }
+        assert!(a.sxx.max_abs_diff(&b.sxx) < 1e-8, "d{d}");
+    }
+}
+
+#[test]
+fn node_update_matches_native() {
+    let Some((mut xla, mut native)) = backends() else { return };
+    for (d, m, n) in [(8, 2, 16), (20, 5, 25), (20, 5, 42), (60, 3, 6)] {
+        let (x, mask, params, mult, eta_sum, eta_w) =
+            random_inputs(100 + d as u64, d, m, n);
+        let mom = native.moments(&x, &mask).unwrap();
+        let (pa, fa) = xla
+            .node_update(&mom, &params, &mult, eta_sum, &eta_w)
+            .unwrap();
+        let (pb, fb) = native
+            .node_update(&mom, &params, &mult, eta_sum, &eta_w)
+            .unwrap();
+        assert!(pa.w.max_abs_diff(&pb.w) < 1e-7, "d{d} W");
+        for (u, v) in pa.mu.iter().zip(&pb.mu) {
+            assert!((u - v).abs() < 1e-7, "d{d} mu");
+        }
+        assert!((pa.a - pb.a).abs() < 1e-7, "d{d} a: {} vs {}", pa.a, pb.a);
+        assert!((fa - fb).abs() < 1e-6 * fb.abs().max(1.0), "d{d} nll: {fa} vs {fb}");
+    }
+}
+
+#[test]
+fn direct_update_matches_cached_moments_path() {
+    let Some((mut xla, _)) = backends() else { return };
+    let (d, m, n) = (8, 2, 16);
+    let (x, mask, params, mult, eta_sum, eta_w) = random_inputs(7, d, m, n);
+    let mom = xla.moments(&x, &mask).unwrap();
+    let (pa, fa) = xla
+        .node_update(&mom, &params, &mult, eta_sum, &eta_w)
+        .unwrap();
+    let (pb, fb) = xla
+        .node_update_direct(&x, &mask, &params, &mult, eta_sum, &eta_w)
+        .unwrap();
+    assert!(pa.w.max_abs_diff(&pb.w) < 1e-10);
+    assert!((fa - fb).abs() < 1e-9);
+}
+
+#[test]
+fn objective_matches_native() {
+    let Some((mut xla, mut native)) = backends() else { return };
+    for (d, m, n) in [(8, 2, 16), (100, 3, 12), (140, 3, 6)] {
+        let (x, mask, params, ..) = random_inputs(200 + d as u64, d, m, n);
+        let mom = native.moments(&x, &mask).unwrap();
+        let fa = xla.objective(&mom, &params).unwrap();
+        let fb = native.objective(&mom, &params).unwrap();
+        assert!(
+            (fa - fb).abs() < 1e-7 * fb.abs().max(1.0),
+            "d{d}: {fa} vs {fb}"
+        );
+    }
+}
+
+#[test]
+fn estep_z_matches_native() {
+    let Some((mut xla, mut native)) = backends() else { return };
+    for (d, m, n) in [(8, 2, 16), (20, 5, 32), (120, 3, 12)] {
+        let (x, mask, params, ..) = random_inputs(300 + d as u64, d, m, n);
+        let za = xla.estep_z(&x, &mask, &params).unwrap();
+        let zb = native.estep_z(&x, &mask, &params).unwrap();
+        assert!(za.max_abs_diff(&zb) < 1e-8, "d{d}: {}", za.max_abs_diff(&zb));
+    }
+}
+
+#[test]
+fn objective_batch_matches_scalar_objective() {
+    let Some((mut xla, mut native)) = backends() else { return };
+    let mut rng = Pcg::seed(55);
+    for (d, m, n, count) in [(8, 2, 16, 3), (20, 5, 25, 19), (120, 3, 12, 25)] {
+        let (x, mask, ..) = random_inputs(d as u64, d, m, n);
+        let mom = native.moments(&x, &mask).unwrap();
+        let params: Vec<PpcaParams> = (0..count)
+            .map(|_| PpcaParams {
+                w: Mat::randn(d, m, &mut rng),
+                mu: rng.normal_vec(d),
+                a: rng.range(0.2, 5.0),
+            })
+            .collect();
+        let batched = xla.objective_batch(&mom, &params).unwrap();
+        assert_eq!(batched.len(), count);
+        for (p, &fb) in params.iter().zip(&batched) {
+            let fs = native.objective(&mom, p).unwrap();
+            assert!((fb - fs).abs() < 1e-7 * fs.abs().max(1.0),
+                    "d{d} batch {fb} vs scalar {fs}");
+        }
+    }
+}
+
+#[test]
+fn warmup_compiles_every_needed_artifact() {
+    let Some((mut xla, _)) = backends() else { return };
+    let compiled = xla.warmup(8, 2, 16).unwrap();
+    assert_eq!(compiled, 6);
+    // second warmup is a no-op
+    assert_eq!(xla.warmup(8, 2, 16).unwrap(), 0);
+}
+
+#[test]
+fn manifest_covers_all_experiment_shapes() {
+    let Some(dir) = artifact_dir() else { return };
+    let man = Manifest::load(dir).unwrap();
+    // every shape the experiment harness uses (fig2 / caltech / hopkins)
+    for (d, m, n) in [
+        (8, 2, 16),
+        (20, 5, 25), (20, 5, 32), (20, 5, 42),
+        (120, 3, 12),
+        (60, 3, 6), (60, 3, 12), (100, 3, 6), (100, 3, 12),
+        (140, 3, 6), (140, 3, 12),
+    ] {
+        for name in [
+            format!("moments_d{d}_n{n}"),
+            format!("node_update_d{d}_m{m}"),
+            format!("objective_d{d}_m{m}"),
+            format!("node_update_direct_d{d}_m{m}_n{n}"),
+            format!("estep_z_d{d}_m{m}_n{n}"),
+        ] {
+            assert!(man.contains(&name), "missing artifact {name}");
+        }
+    }
+}
+
+#[test]
+fn repeated_executions_are_stable() {
+    // PJRT buffers must not alias: identical inputs → identical outputs
+    let Some((mut xla, _)) = backends() else { return };
+    let (x, mask, params, mult, eta_sum, eta_w) = random_inputs(11, 8, 2, 16);
+    let mom = xla.moments(&x, &mask).unwrap();
+    let (p1, f1) = xla.node_update(&mom, &params, &mult, eta_sum, &eta_w).unwrap();
+    for _ in 0..5 {
+        let (p2, f2) = xla.node_update(&mom, &params, &mult, eta_sum, &eta_w).unwrap();
+        assert_eq!(f1, f2);
+        assert!(p1.w.max_abs_diff(&p2.w) == 0.0);
+    }
+}

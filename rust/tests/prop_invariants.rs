@@ -1,0 +1,181 @@
+//! Repo-wide property tests (in-repo harness; proptest unavailable
+//! offline — failures report the replayable seed).
+
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::dppca::{em, PpcaParams};
+use fadmm::graph::{random_connected, Topology};
+use fadmm::linalg::{max_principal_angle_deg, qr_thin, Mat, Svd};
+use fadmm::penalty::{make_scheme, NodeObservation, SchemeKind, SchemeParams};
+use fadmm::util::prop;
+use fadmm::util::rng::Pcg;
+
+#[test]
+fn svd_of_any_matrix_reconstructs() {
+    prop::check_named("SVD reconstruction across aspect ratios", 40, |rng| {
+        let m = 1 + rng.below(20);
+        let n = 1 + rng.below(20);
+        let scale = 10f64.powf(rng.range(-3.0, 3.0));
+        let a = Mat::randn(m, n, rng).scale(scale);
+        let svd = Svd::new(&a).unwrap();
+        let rec = svd.low_rank(m.min(n));
+        assert!(rec.max_abs_diff(&a) < 1e-9 * scale.max(1.0),
+                "m={m} n={n} scale={scale}");
+    });
+}
+
+#[test]
+fn principal_angle_triangle_like_bound() {
+    // θ(A,C) ≤ θ(A,B) + θ(B,C) for 1-dim subspaces
+    prop::check_named("angle triangle inequality (lines)", 40, |rng| {
+        let d = 3 + rng.below(8);
+        let a = Mat::randn(d, 1, rng);
+        let b = Mat::randn(d, 1, rng);
+        let c = Mat::randn(d, 1, rng);
+        let ab = max_principal_angle_deg(&a, &b).unwrap();
+        let bc = max_principal_angle_deg(&b, &c).unwrap();
+        let ac = max_principal_angle_deg(&a, &c).unwrap();
+        assert!(ac <= ab + bc + 1e-7, "{ac} > {ab} + {bc}");
+    });
+}
+
+#[test]
+fn graph_builders_satisfy_handshake() {
+    prop::check_named("Σ degrees = 2·|E| on all builders", 30, |rng| {
+        let n = 4 + rng.below(20);
+        for t in [Topology::Complete, Topology::Ring, Topology::Chain,
+                  Topology::Star, Topology::Cluster] {
+            let g = t.build(n).unwrap();
+            let total: usize = (0..n).map(|i| g.degree(i)).sum();
+            assert_eq!(total, 2 * g.edge_count(), "{t:?}");
+        }
+        let g = random_connected(n, rng.range(0.1, 0.9), rng).unwrap();
+        let total: usize = (0..n).map(|i| g.degree(i)).sum();
+        assert_eq!(total, 2 * g.edge_count());
+    });
+}
+
+#[test]
+fn penalty_schemes_never_produce_invalid_eta() {
+    prop::check_named("η finite & positive under adversarial streams", 24, |rng| {
+        let p = SchemeParams {
+            eta0: 10f64.powf(rng.range(-1.0, 2.0)),
+            ..Default::default()
+        };
+        let deg = 1 + rng.below(5);
+        for kind in SchemeKind::ALL {
+            let mut scheme = make_scheme(kind, p, deg);
+            let mut eta = vec![p.eta0; deg];
+            let mut f_nb = vec![0.0; deg];
+            for t in 0..80 {
+                for f in f_nb.iter_mut() {
+                    // adversarial: occasionally non-finite neighbour objectives
+                    *f = if rng.f64() < 0.05 { f64::NAN } else { rng.range(-1e6, 1e6) };
+                }
+                let obs = NodeObservation {
+                    t,
+                    primal_norm: rng.range(0.0, 1e3),
+                    dual_norm: rng.range(0.0, 1e3),
+                    global_primal: rng.range(0.0, 1e3),
+                    global_dual: rng.range(0.0, 1e3),
+                    f_self: rng.range(-1e6, 1e6),
+                    f_self_prev: rng.range(-1e6, 1e6),
+                    f_neighbors: &f_nb,
+                };
+                scheme.update(&obs, &mut eta);
+                for &e in &eta {
+                    assert!(e.is_finite() && e > 0.0, "{kind:?} η = {e}");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn ppca_node_update_preserves_feasibility() {
+    prop::check_named("a⁺ > 0, W⁺ finite for random consensus inputs", 24, |rng| {
+        let d = 2 + rng.below(8);
+        let m = 1 + rng.below(d.min(3));
+        let n = m + 2 + rng.below(10);
+        let x = Mat::randn(d, n, rng);
+        let mom = em::moments(&x, &vec![1.0; n]);
+        let params = PpcaParams {
+            w: Mat::randn(d, m, rng),
+            mu: rng.normal_vec(d),
+            a: rng.range(0.05, 20.0),
+        };
+        let mult = PpcaParams {
+            w: Mat::randn(d, m, rng).scale(0.1),
+            mu: rng.normal_vec(d).iter().map(|v| 0.1 * v).collect(),
+            a: rng.range(-0.5, 0.5),
+        };
+        let eta_sum = rng.range(0.1, 100.0);
+        let target = PpcaParams {
+            w: Mat::randn(d, m, rng),
+            mu: rng.normal_vec(d),
+            a: rng.range(0.05, 20.0),
+        };
+        let eta_w = PpcaParams {
+            w: (&params.w + &target.w).scale(eta_sum),
+            mu: params.mu.iter().zip(&target.mu).map(|(a, b)| eta_sum * (a + b)).collect(),
+            a: eta_sum * (params.a + target.a),
+        };
+        let (p_new, nll) = em::node_update(&mom, &params, &mult, eta_sum, &eta_w).unwrap();
+        assert!(p_new.a > 0.0 && p_new.a.is_finite());
+        assert!(p_new.w.is_finite());
+        assert!(nll.is_finite());
+    });
+}
+
+#[test]
+fn consensus_engine_invariance_to_node_relabeling() {
+    // permuting node identities (on a symmetric topology) permutes the
+    // solution but preserves the consensus value
+    prop::check_named("relabeling invariance (complete graph)", 8, |rng| {
+        let n = 4 + rng.below(4);
+        let seed = rng.next_u64();
+        let build = |perm: &[usize]| {
+            let mut base_rng = Pcg::seed(seed);
+            let mut nodes: Vec<QuadraticNode> =
+                (0..n).map(|_| QuadraticNode::random(2, &mut base_rng)).collect();
+            let mut permuted: Vec<Option<QuadraticNode>> =
+                nodes.drain(..).map(Some).collect();
+            let reordered: Vec<QuadraticNode> =
+                perm.iter().map(|&i| permuted[i].take().unwrap()).collect();
+            let mut engine = Engine::new(Topology::Complete.build(n).unwrap(),
+                                         reordered, EngineConfig {
+                                             scheme: SchemeKind::Fixed,
+                                             tol: 1e-12,
+                                             max_iters: 600,
+                                             seed: 9,
+                                             ..Default::default()
+                                         });
+            let report = engine.run();
+            // consensus mean parameter
+            let dim = report.thetas[0].len();
+            (0..dim)
+                .map(|k| report.thetas.iter().map(|t| t[k]).sum::<f64>() / n as f64)
+                .collect::<Vec<f64>>()
+        };
+        let id: Vec<usize> = (0..n).collect();
+        let mut shuffled = id.clone();
+        rng.shuffle(&mut shuffled);
+        let a = build(&id);
+        let b = build(&shuffled);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    });
+}
+
+#[test]
+fn qr_handles_scaled_bases() {
+    prop::check_named("QR across magnitudes", 30, |rng| {
+        let d = 4 + rng.below(12);
+        let k = 1 + rng.below(3);
+        let scale = 10f64.powf(rng.range(-6.0, 6.0));
+        let a = Mat::randn(d, k, rng).scale(scale);
+        let (q, r) = qr_thin(&a).unwrap();
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-8 * scale.max(1.0));
+    });
+}
