@@ -1,0 +1,78 @@
+//! Scale demo: 256 nodes on a ring, run by the sharded worker-pool
+//! coordinator — a workload the original thread-per-node runtime could
+//! not touch (it spawned one OS thread per node and heap-cloned every θ
+//! per neighbour per iteration).
+//!
+//! Each node holds a private strongly convex quadratic; the network
+//! agrees on the global minimizer through consensus ADMM with the
+//! paper's ADMM-AP adaptive penalty. The sharded runner exchanges
+//! parameters through a zero-copy double-buffered arena, so the per-node
+//! cost is just the local solve plus three pool barriers per iteration.
+//!
+//!     cargo run --release --example sharded_ring
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::coordinator::{ShardedConfig, ShardedRunner, SolverFactory};
+use fadmm::graph::Topology;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::rng::Pcg;
+
+const NODES: usize = 256;
+const DIM: usize = 6;
+
+fn main() {
+    let graph = Topology::Ring.build(NODES).expect("ring(256)");
+    println!("sharded consensus: {NODES} nodes, ring topology, {DIM}-dim parameter");
+
+    // the factory re-derives node i's problem inside whichever worker owns
+    // it — nothing but the closure crosses threads
+    let factory: SolverFactory<QuadraticNode> = Arc::new(|i| {
+        let mut rng = Pcg::seed(1000 + i as u64);
+        QuadraticNode::random(DIM, &mut rng)
+    });
+    // central optimum for reference (the test oracle at demo scale)
+    let nodes: Vec<QuadraticNode> = (0..NODES)
+        .map(|i| {
+            let mut rng = Pcg::seed(1000 + i as u64);
+            QuadraticNode::random(DIM, &mut rng)
+        })
+        .collect();
+    let optimum = QuadraticNode::central_optimum(&nodes);
+
+    let runner = ShardedRunner::new(graph, ShardedConfig {
+        scheme: SchemeKind::Ap,
+        tol: 1e-9,
+        max_iters: 4000,
+        ..Default::default()
+    });
+    println!("worker pool : {} workers ({} nodes per shard on average)\n",
+             runner.workers(), NODES / runner.workers().max(1));
+
+    let t0 = Instant::now();
+    let report = runner.run(factory).expect("sharded run");
+    let secs = t0.elapsed().as_secs_f64();
+
+    let err = report
+        .thetas
+        .iter()
+        .map(|th| {
+            th.iter()
+                .zip(&optimum)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        })
+        .fold(0.0f64, f64::max);
+
+    println!("converged    : {} in {} iterations ({:.2}s, {:.0} iter/s)",
+             report.converged, report.iterations, secs,
+             report.iterations as f64 / secs);
+    println!("max distance : {err:.3e} to the centralized optimum");
+    println!("\nA ring of 256 nodes has diameter 128, so information needs many");
+    println!("hops — exactly the regime where the paper's adaptive per-edge");
+    println!("penalties (and a runtime that scales past a few dozen nodes)");
+    println!("start to matter.");
+}

@@ -7,7 +7,7 @@
 
 use fadmm::dppca::PpcaParams;
 use fadmm::linalg::Mat;
-use fadmm::runtime::{Backend, Manifest, NativeBackend, XlaBackend};
+use fadmm::runtime::{Backend, NativeBackend};
 use fadmm::util::bench::{black_box, Bencher};
 use fadmm::util::rng::Pcg;
 
@@ -45,6 +45,26 @@ fn bench_backend(b: &mut Bencher, label: &str, backend: &mut dyn Backend,
     });
 }
 
+#[cfg(feature = "xla")]
+fn bench_xla(b: &mut Bencher, shapes: &[(usize, usize, usize)]) {
+    use fadmm::runtime::{Manifest, XlaBackend};
+    if Manifest::default_dir().join("manifest.json").exists() {
+        println!("== xla backend (PJRT, AOT artifacts) ==");
+        let mut xla = XlaBackend::from_default_dir().expect("xla backend");
+        for &(d, m, n) in shapes {
+            xla.warmup(d, m, n).unwrap();
+            bench_backend(b, "xla", &mut xla, d, m, n);
+        }
+    } else {
+        println!("(xla backend skipped: run `make artifacts`)");
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn bench_xla(_b: &mut Bencher, _shapes: &[(usize, usize, usize)]) {
+    println!("(xla backend skipped: rebuild with --features xla + make artifacts)");
+}
+
 fn main() {
     let mut b = Bencher::from_env();
     let shapes = [(20usize, 5usize, 25usize), (120, 3, 12)];
@@ -55,14 +75,8 @@ fn main() {
         bench_backend(&mut b, "native", &mut native, d, m, n);
     }
 
-    if Manifest::default_dir().join("manifest.json").exists() {
-        println!("== xla backend (PJRT, AOT artifacts) ==");
-        let mut xla = XlaBackend::from_default_dir().expect("xla backend");
-        for (d, m, n) in shapes {
-            xla.warmup(d, m, n).unwrap();
-            bench_backend(&mut b, "xla", &mut xla, d, m, n);
-        }
-    } else {
-        println!("(xla backend skipped: run `make artifacts`)");
-    }
+    bench_xla(&mut b, &shapes);
+
+    let path = b.write_json("node_update", vec![]).expect("write bench json");
+    println!("wrote {}", path.display());
 }

@@ -32,7 +32,8 @@
 //! This sequential engine performs exactly the computation+communication
 //! schedule of the distributed algorithm (Jacobi-style simultaneous node
 //! updates followed by neighbour broadcast); [`crate::coordinator`] runs
-//! the same schedule on real threads with message passing.
+//! the same schedule on a sharded worker pool exchanging parameters
+//! through a double-buffered arena.
 
 pub mod solvers;
 
@@ -60,11 +61,55 @@ pub trait LocalSolver {
         thetas.iter().map(|t| self.objective(t)).collect()
     }
 
+    /// Score several foreign parameter vectors into a caller-owned buffer
+    /// (the hot-loop variant: `out` keeps its allocation across
+    /// iterations, so the default never allocates). Solvers whose
+    /// [`LocalSolver::objective_batch`] folds the batch into one backend
+    /// dispatch should override this to delegate there.
+    fn objective_batch_into(&mut self, thetas: &[Vec<f64>], out: &mut Vec<f64>) {
+        out.clear();
+        for th in thetas {
+            let f = self.objective(th);
+            out.push(f);
+        }
+    }
+
     /// The penalized local update:
     /// `argmin_θ f_i(θ) + 2λᵀθ + (Ση_ij)‖θ‖² − θᵀ(Ση_ij(θ_i+θ_j)) + const`
     /// where `eta_sum = Σ_j η_ij` and `eta_wsum = Σ_j η_ij (θ_i + θ_j)`.
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64>;
+}
+
+/// Forwarding impl so heterogeneous solver sets can run behind one
+/// `Box<dyn LocalSolver>` (the sharded coordinator's factory builds
+/// solvers inside each worker thread, so neither `S` nor the boxed trait
+/// object needs to be `Send` — only the factory itself crosses threads).
+impl<T: LocalSolver + ?Sized> LocalSolver for Box<T> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn initial_param(&mut self, rng: &mut Pcg) -> Vec<f64> {
+        (**self).initial_param(rng)
+    }
+
+    fn objective(&mut self, theta: &[f64]) -> f64 {
+        (**self).objective(theta)
+    }
+
+    fn objective_batch(&mut self, thetas: &[Vec<f64>]) -> Vec<f64> {
+        (**self).objective_batch(thetas)
+    }
+
+    fn objective_batch_into(&mut self, thetas: &[Vec<f64>], out: &mut Vec<f64>) {
+        (**self).objective_batch_into(thetas, out)
+    }
+
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+             eta_wsum: &[f64]) -> Vec<f64> {
+        (**self).solve(theta, lambda, eta_sum, eta_wsum)
+    }
 }
 
 /// Engine configuration.
@@ -350,7 +395,8 @@ impl<S: LocalSolver> Engine<S> {
                         rho[k] = 0.5 * (self.thetas[i][k] + self.thetas[j][k]);
                     }
                 }
-                f_nb_buf = self.solvers[i].objective_batch(&self.scratch_rhos[..deg]);
+                self.solvers[i]
+                    .objective_batch_into(&self.scratch_rhos[..deg], &mut f_nb_buf);
             } else {
                 f_nb_buf.resize(self.graph.degree(i), 0.0);
             }

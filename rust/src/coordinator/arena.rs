@@ -1,0 +1,306 @@
+//! Zero-copy double-buffered parameter arena + the phase barrier.
+//!
+//! The worker pool exchanges neighbour parameters through two flat `f64`
+//! buffers per quantity (θ and the directed-edge penalties η) indexed by
+//! *epoch parity*: iteration `t` reads the `t % 2` buffer and writes the
+//! `(t + 1) % 2` buffer, so a broadcast is just the owner writing its own
+//! block — no `Vec` clones, no channels, no staging maps.
+//!
+//! ## Safety discipline (why the raw pointers are sound)
+//!
+//! Every block has exactly one *owner* (the worker whose shard contains
+//! the node). The schedule guarantees:
+//!
+//! * only the owner ever writes a block, and only into the write-parity
+//!   buffer of the current phase;
+//! * readers only touch the opposite-parity buffer, or the write buffer
+//!   *after* the [`PhaseBarrier`] that ends the writing phase;
+//! * the barrier is built on `Mutex`/`Condvar`, so every crossing
+//!   publishes all prior writes (happens-before) to every reader.
+//!
+//! Hence no location is ever written concurrently with another access.
+//! The accessors are still `unsafe fn`s: the *caller* (the shard loop in
+//! [`super::shard`]) is responsible for upholding the schedule.
+
+use std::sync::{Condvar, Mutex};
+
+use crate::graph::{Graph, NodeId};
+
+/// A fixed-size heap buffer of `f64` shared across workers through raw
+/// pointers (see the module docs for the aliasing discipline).
+struct RawBuf {
+    ptr: *mut f64,
+    len: usize,
+}
+
+// Safety: all access goes through the unsafe accessors below, whose
+// contract (owner-writes / parity / barrier) excludes data races.
+unsafe impl Send for RawBuf {}
+unsafe impl Sync for RawBuf {}
+
+impl RawBuf {
+    fn new(len: usize) -> RawBuf {
+        let boxed: Box<[f64]> = vec![0.0; len].into_boxed_slice();
+        RawBuf { ptr: Box::into_raw(boxed) as *mut f64, len }
+    }
+
+    /// # Safety
+    /// `[lo, hi)` must be in bounds and free of concurrent writers.
+    unsafe fn read(&self, lo: usize, hi: usize) -> &[f64] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
+    }
+
+    /// # Safety
+    /// `idx` must be in bounds and free of concurrent writers.
+    unsafe fn get(&self, idx: usize) -> f64 {
+        debug_assert!(idx < self.len);
+        *self.ptr.add(idx)
+    }
+
+    /// # Safety
+    /// `[lo, hi)` must be in bounds and accessed by no other thread for
+    /// the lifetime of the returned slice (exclusive ownership).
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn write(&self, lo: usize, hi: usize) -> &mut [f64] {
+        debug_assert!(lo <= hi && hi <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
+    }
+}
+
+impl Drop for RawBuf {
+    fn drop(&mut self) {
+        // Safety: ptr/len came from Box::into_raw of a Box<[f64]> of
+        // exactly this length, and Drop runs with exclusive access.
+        unsafe {
+            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)));
+        }
+    }
+}
+
+/// Double-buffered θ / η storage for one run (see module docs).
+///
+/// Layout: node `i`'s parameters live at `[i·dim, (i+1)·dim)` in each θ
+/// buffer; its out-edge penalties (neighbour-slot order, matching
+/// `Graph::neighbors(i)`) live at `[edge_off[i], edge_off[i+1])` in each
+/// η buffer, so η_{i→j} for `j` at slot `s` sits at `edge_off[i] + s`.
+pub struct ParamArena {
+    dim: usize,
+    n: usize,
+    theta: [RawBuf; 2],
+    eta: [RawBuf; 2],
+    edge_off: Vec<usize>,
+}
+
+impl ParamArena {
+    pub fn new(graph: &Graph, dim: usize) -> ParamArena {
+        let n = graph.len();
+        let mut edge_off = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        for i in 0..n {
+            edge_off.push(acc);
+            acc += graph.degree(i);
+        }
+        edge_off.push(acc);
+        ParamArena {
+            dim,
+            n,
+            theta: [RawBuf::new(n * dim), RawBuf::new(n * dim)],
+            eta: [RawBuf::new(acc), RawBuf::new(acc)],
+            edge_off,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Flat η-buffer index of the directed edge (`i` → its neighbour at
+    /// `slot`).
+    pub fn eta_index(&self, i: NodeId, slot: usize) -> usize {
+        debug_assert!(self.edge_off[i] + slot < self.edge_off[i + 1]);
+        self.edge_off[i] + slot
+    }
+
+    /// # Safety
+    /// No worker may be writing `node`'s θ block in `parity` concurrently.
+    pub unsafe fn theta(&self, parity: usize, node: NodeId) -> &[f64] {
+        self.theta[parity & 1].read(node * self.dim, (node + 1) * self.dim)
+    }
+
+    /// # Safety
+    /// As [`ParamArena::theta`], for the whole buffer (leader fold only,
+    /// between the post-stats and post-verdict barriers).
+    pub unsafe fn theta_all(&self, parity: usize) -> &[f64] {
+        self.theta[parity & 1].read(0, self.n * self.dim)
+    }
+
+    /// # Safety
+    /// Caller must be `node`'s owner, during a phase in which `parity` is
+    /// the write buffer.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn theta_mut(&self, parity: usize, node: NodeId) -> &mut [f64] {
+        self.theta[parity & 1].write(node * self.dim, (node + 1) * self.dim)
+    }
+
+    /// η at a flat index (see [`ParamArena::eta_index`]).
+    ///
+    /// # Safety
+    /// No worker may be writing the `parity` η buffer slot concurrently.
+    pub unsafe fn eta(&self, parity: usize, idx: usize) -> f64 {
+        self.eta[parity & 1].get(idx)
+    }
+
+    /// `node`'s whole out-edge η block, for publishing.
+    ///
+    /// # Safety
+    /// Caller must be `node`'s owner, during a phase in which `parity` is
+    /// the write buffer.
+    #[allow(clippy::mut_from_ref)]
+    pub unsafe fn eta_out_mut(&self, parity: usize, node: NodeId) -> &mut [f64] {
+        self.eta[parity & 1].write(self.edge_off[node], self.edge_off[node + 1])
+    }
+}
+
+/// Error returned by [`PhaseBarrier::wait`] once the barrier is poisoned.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Poisoned;
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+/// Reusable rendezvous for the worker pool with explicit poisoning: a
+/// panicking worker poisons the barrier instead of leaving its peers
+/// blocked forever (std's `Barrier` cannot be interrupted).
+pub struct PhaseBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+impl PhaseBarrier {
+    pub fn new(n: usize) -> PhaseBarrier {
+        assert!(n > 0, "barrier needs at least one participant");
+        PhaseBarrier {
+            n,
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, poisoned: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` workers arrive (or the barrier is poisoned).
+    pub fn wait(&self) -> Result<(), Poisoned> {
+        let mut g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        if g.poisoned {
+            return Err(Poisoned);
+        }
+        let gen = g.generation;
+        g.arrived += 1;
+        if g.arrived == self.n {
+            g.arrived = 0;
+            g.generation = g.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return Ok(());
+        }
+        while g.generation == gen && !g.poisoned {
+            g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+        if g.poisoned { Err(Poisoned) } else { Ok(()) }
+    }
+
+    /// Poison the barrier, releasing every current and future waiter with
+    /// `Err(Poisoned)`.
+    pub fn poison(&self) {
+        let mut g = self.state.lock().unwrap_or_else(|e| e.into_inner());
+        g.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn arena_layout_matches_graph() {
+        let g = Topology::Star.build(4).unwrap(); // deg: [3, 1, 1, 1]
+        let a = ParamArena::new(&g, 2);
+        assert_eq!(a.dim(), 2);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a.eta_index(0, 0), 0);
+        assert_eq!(a.eta_index(0, 2), 2);
+        assert_eq!(a.eta_index(1, 0), 3);
+        assert_eq!(a.eta_index(3, 0), 5);
+    }
+
+    #[test]
+    fn arena_single_thread_roundtrip() {
+        let g = Topology::Ring.build(3).unwrap();
+        let a = ParamArena::new(&g, 2);
+        unsafe {
+            a.theta_mut(0, 1).copy_from_slice(&[1.5, -2.5]);
+            a.eta_out_mut(1, 2).copy_from_slice(&[7.0, 8.0]);
+            assert_eq!(a.theta(0, 1), &[1.5, -2.5]);
+            assert_eq!(a.theta(1, 1), &[0.0, 0.0], "buffers are independent");
+            assert_eq!(a.eta(1, a.eta_index(2, 1)), 8.0);
+            assert_eq!(a.theta_all(0), &[0.0, 0.0, 1.5, -2.5, 0.0, 0.0]);
+        }
+    }
+
+    #[test]
+    fn barrier_synchronizes_writers_and_readers() {
+        let g = Topology::Complete.build(4).unwrap();
+        let arena = ParamArena::new(&g, 1);
+        let barrier = PhaseBarrier::new(4);
+        let hits = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for w in 0..4usize {
+                let (arena, barrier, hits) = (&arena, &barrier, &hits);
+                s.spawn(move || {
+                    for t in 0..50usize {
+                        let p = t & 1;
+                        unsafe { arena.theta_mut(p ^ 1, w)[0] = (t * 4 + w) as f64 };
+                        barrier.wait().unwrap();
+                        for peer in 0..4 {
+                            let got = unsafe { arena.theta(p ^ 1, peer)[0] };
+                            assert_eq!(got, (t * 4 + peer) as f64);
+                        }
+                        hits.fetch_add(1, Ordering::Relaxed);
+                        barrier.wait().unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 200);
+    }
+
+    #[test]
+    fn poisoned_barrier_releases_waiters() {
+        let barrier = PhaseBarrier::new(3);
+        std::thread::scope(|s| {
+            for _ in 0..2 {
+                let barrier = &barrier;
+                s.spawn(move || {
+                    assert_eq!(barrier.wait(), Err(Poisoned));
+                    // and every later wait fails immediately
+                    assert_eq!(barrier.wait(), Err(Poisoned));
+                });
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            barrier.poison();
+        });
+    }
+}

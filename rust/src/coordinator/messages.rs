@@ -1,36 +1,15 @@
-//! Wire messages between node actors and the leader.
+//! The one shared control record of the sharded runtime.
+//!
+//! The thread-per-node design this module used to serve exchanged
+//! heap-allocated `Broadcast` / `StatsMsg` values over mpsc channels —
+//! both are gone: parameters travel through the zero-copy
+//! [`crate::coordinator::ParamArena`] and statistics through per-shard
+//! partial reductions (`shard::ShardPartial`). What remains is the
+//! leader's per-iteration verdict, published once into a shared slot.
 
-use crate::graph::NodeId;
-
-/// Neighbour broadcast: parameters plus the sender's penalty on the edge
-/// toward the receiver (needed for the symmetrized dual step; one extra
-/// scalar per message keeps the scheme fully decentralized).
-#[derive(Debug, Clone)]
-pub struct Broadcast {
-    pub from: NodeId,
-    pub t: usize,
-    pub theta: Vec<f64>,
-    /// η_{from→to} at iteration t
-    pub eta_to_receiver: f64,
-}
-
-/// Per-iteration statistics a node reports to the leader.
-#[derive(Debug, Clone)]
-pub struct StatsMsg {
-    pub from: NodeId,
-    pub t: usize,
-    pub f_self: f64,
-    pub primal_norm: f64,
-    pub dual_norm: f64,
-    pub eta_min: f64,
-    pub eta_max: f64,
-    pub eta_sum: f64,
-    pub eta_count: usize,
-    /// current parameters (used by the leader's application metric)
-    pub theta: Vec<f64>,
-}
-
-/// Leader verdict closing an iteration.
+/// Leader verdict closing an iteration (written by the leader worker
+/// between the post-stats and post-verdict barriers, read by every
+/// worker after the latter).
 #[derive(Debug, Clone, Copy)]
 pub struct Verdict {
     pub t: usize,

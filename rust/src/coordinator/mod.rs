@@ -1,31 +1,65 @@
-//! Threaded distributed runtime.
+//! Sharded worker-pool distributed runtime.
 //!
 //! The sequential [`crate::consensus::Engine`] executes the distributed
 //! algorithm's exact schedule deterministically (the mode used for the
 //! paper-figure experiments, where bit-reproducibility matters). This
-//! module runs the *same* per-node program on real OS threads with
-//! message-passing — one actor per graph node plus a leader that only
-//! aggregates convergence statistics (and the global residuals consumed
-//! by the non-decentralized RB reference scheme).
+//! module runs the *same* per-node program on a fixed pool of
+//! `W = min(nodes, cores)` worker threads, each owning a contiguous
+//! shard of nodes (degree-weighted split, [`crate::graph::shard_ranges`]).
 //!
-//! Message flow per iteration (matching Algorithm 1 of the paper):
+//! It replaces a thread-per-node design that heap-cloned every θ vector
+//! per neighbour per iteration through mpsc channels and staged
+//! out-of-order deliveries in per-node `HashMap`s — fine for 8 nodes,
+//! hopeless for the hundreds-of-nodes regimes adaptive consensus ADMM is
+//! evaluated in. Here a "broadcast" is the owner writing its block of a
+//! shared, double-buffered parameter arena; neighbours read it in place.
+//!
+//! ## Schedule (three barriers per iteration)
+//!
+//! Iteration `t` reads the parity-`t%2` arena buffers and writes parity
+//! `(t+1)%2` (no pointer swap — the parity *is* the swap):
 //!
 //! ```text
-//! node i:  solve → broadcast (θ_i, η_i→j) → collect neighbours
-//!        → λ update (symmetrized η̄, see consensus module docs)
-//!        → residuals/objectives → stats to leader
-//! leader:  aggregate Σf_i, residuals → verdict (continue / stop)
-//! node i:  penalty-scheme update → next iteration
+//! phase A  each worker, each owned node i:
+//!            solve on θ^t, η^t  →  write θ^{t+1} into the write buffer
+//! ── barrier 1 (epoch swap: every θ^{t+1} visible) ──────────────────────
+//! phase B  λ update (symmetrized η̄ from own η^t + arena η^t_{j→i}),
+//!          residuals, objectives  →  per-shard partial reduction
+//!          (Σf, max‖r‖, max‖s‖, η min/mean/max, Σθ), node order
+//! ── barrier 2 (all partials published) ─────────────────────────────────
+//! fold     worker 0 combines partials in shard order, derives global
+//!          residuals + convergence verdict, runs the app metric
+//! ── barrier 3 (verdict visible) ────────────────────────────────────────
+//! phase C  penalty-scheme update → publish η^{t+1}; stop if told to
 //! ```
 //!
-//! PJRT handles are not `Send`, so threaded runs construct one backend
-//! per node thread through the [`SolverFactory`]; for the XLA backend
-//! that would mean one PJRT client per thread, hence threaded runs
-//! default to the native backend (identical numbers, see
-//! `integration_runtime.rs`).
+//! The η buffers are double-buffered for the same reason θ is: node i's
+//! λ step needs its neighbours' *iteration-t* penalties while those
+//! neighbours may already be writing their iteration-`t+1` values.
+//!
+//! ## Determinism
+//!
+//! Every node's computation depends only on neighbour parameters at
+//! fixed epochs, so results are independent of thread timing. Shards are
+//! contiguous and partials combine in shard order, so leader aggregates
+//! visit nodes in sequential order; their floating-point grouping (and
+//! nothing else) depends on the worker count, which [`RunnerReport`]
+//! records. With a fixed iteration budget the final parameters are
+//! bit-identical for *any* worker count (asserted in the runner tests);
+//! repeated runs at the same worker count are bit-identical in full.
+//!
+//! PJRT handles are not `Send`, so each worker constructs the solvers
+//! for its own shard through the [`SolverFactory`]; sharded runs default
+//! to the native backend (identical numbers, see
+//! `integration_runtime.rs`). A panicking worker poisons the phase
+//! barrier, so failures surface as `Err` instead of a pool deadlock.
 
+mod arena;
 mod messages;
 mod runner;
+mod shard;
 
-pub use messages::{Broadcast, StatsMsg, Verdict};
-pub use runner::{SolverFactory, ThreadedConfig, ThreadedReport, ThreadedRunner};
+pub use arena::{ParamArena, PhaseBarrier, Poisoned};
+pub use messages::Verdict;
+pub use runner::{RunnerReport, ShardedConfig, ShardedRunner, SolverFactory,
+                 ThreadedConfig, ThreadedReport, ThreadedRunner};

@@ -1,23 +1,32 @@
-//! Node actors on OS threads + the aggregating leader.
+//! The sharded worker-pool runner: public API + orchestration.
+//!
+//! Spawns `W = min(nodes, cores)` scoped worker threads (overridable via
+//! [`ShardedConfig::workers`]), each running the shard program in
+//! [`super::shard`] over a contiguous node range from
+//! [`crate::graph::shard_ranges`]. Parameters travel through the
+//! double-buffered [`super::arena::ParamArena`]; worker panics poison the
+//! phase barrier and surface as an `Err` instead of a deadlock.
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Mutex};
 
-use super::messages::{Broadcast, StatsMsg, Verdict};
+use super::arena::{ParamArena, PhaseBarrier};
+use super::messages::Verdict;
+use super::shard::{worker_main, LeadOutcome, LeadState, ShardPartial, WorkerCtx,
+                   WorkerError};
 use crate::consensus::LocalSolver;
 use crate::error::{Error, Result};
-use crate::graph::{Graph, NodeId};
-use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
-use crate::penalty::{make_scheme, NodeObservation, SchemeKind, SchemeParams};
-use crate::util::rng::Pcg;
+use crate::graph::{shard_ranges, Graph, NodeId};
+use crate::metrics::Recorder;
+use crate::penalty::{SchemeKind, SchemeParams};
 
-/// Builds one node's solver inside its thread (backends need not be `Send`).
+/// Builds one node's solver inside its worker thread (backends need not
+/// be `Send`; only the factory crosses threads).
 pub type SolverFactory<S> = Arc<dyn Fn(NodeId) -> S + Send + Sync>;
 
-/// Threaded-run configuration (mirrors [`crate::consensus::EngineConfig`]).
+/// Sharded-run configuration (mirrors [`crate::consensus::EngineConfig`]).
 #[derive(Debug, Clone, Copy)]
-pub struct ThreadedConfig {
+pub struct ShardedConfig {
     pub scheme: SchemeKind,
     pub params: SchemeParams,
     pub tol: f64,
@@ -25,11 +34,18 @@ pub struct ThreadedConfig {
     pub warmup: usize,
     pub max_iters: usize,
     pub seed: u64,
+    /// Worker-pool size; 0 (the default) resolves to
+    /// `min(nodes, available_parallelism)`.
+    pub workers: usize,
 }
 
-impl Default for ThreadedConfig {
+/// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
+/// runner this replaced used it).
+pub type ThreadedConfig = ShardedConfig;
+
+impl Default for ShardedConfig {
     fn default() -> Self {
-        ThreadedConfig {
+        ShardedConfig {
             scheme: SchemeKind::Fixed,
             params: SchemeParams::default(),
             tol: 1e-3,
@@ -37,375 +53,203 @@ impl Default for ThreadedConfig {
             warmup: 5,
             max_iters: 1000,
             seed: 0,
+            workers: 0,
         }
     }
 }
 
-/// Outcome of a threaded run.
+/// Outcome of a sharded run.
 #[derive(Debug)]
-pub struct ThreadedReport {
+pub struct RunnerReport {
     pub iterations: usize,
     pub converged: bool,
     pub recorder: Recorder,
     pub thetas: Vec<Vec<f64>>,
+    /// resolved worker-pool size (reduction grouping is deterministic
+    /// given this value; record it to reproduce a run exactly)
+    pub workers: usize,
 }
 
-/// Orchestrates node actors over a topology.
-pub struct ThreadedRunner {
+/// Backward-compatible name for [`RunnerReport`].
+pub type ThreadedReport = RunnerReport;
+
+/// Orchestrates the worker pool over a topology.
+pub struct ShardedRunner {
     graph: Graph,
-    cfg: ThreadedConfig,
+    cfg: ShardedConfig,
 }
 
-impl ThreadedRunner {
-    pub fn new(graph: Graph, cfg: ThreadedConfig) -> Self {
-        ThreadedRunner { graph, cfg }
+/// Backward-compatible name for [`ShardedRunner`].
+pub type ThreadedRunner = ShardedRunner;
+
+impl ShardedRunner {
+    pub fn new(graph: Graph, cfg: ShardedConfig) -> Self {
+        ShardedRunner { graph, cfg }
     }
 
-    /// Run the distributed optimization; `app_metric` is evaluated by the
-    /// leader on the gathered per-iteration parameters.
-    pub fn run<S>(&self, factory: SolverFactory<S>,
-                  mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64)
-                  -> Result<ThreadedReport>
+    /// The worker-pool size a run will use.
+    pub fn workers(&self) -> usize {
+        let n = self.graph.len();
+        if self.cfg.workers > 0 {
+            self.cfg.workers.min(n)
+        } else {
+            std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+                .min(n)
+        }
+    }
+
+    /// Run the distributed optimization with no application metric — the
+    /// fast path: per-iteration θ is never materialized out of the arena.
+    pub fn run<S>(&self, factory: SolverFactory<S>) -> Result<RunnerReport>
     where
-        S: LocalSolver + 'static,
+        S: LocalSolver,
+    {
+        self.run_impl(factory, None)
+    }
+
+    /// Run with an application-metric callback, invoked by the leader
+    /// worker once per iteration with `(iteration, thetas)`; its return
+    /// value lands in [`crate::metrics::IterStats::app_error`]. The θ
+    /// snapshot is copied into a buffer reused across iterations.
+    pub fn run_with<S>(&self, factory: SolverFactory<S>,
+                       mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64 + Send)
+                       -> Result<RunnerReport>
+    where
+        S: LocalSolver,
+    {
+        self.run_impl(factory, Some(&mut app_metric))
+    }
+
+    fn run_impl<S>(&self, factory: SolverFactory<S>,
+                   metric: Option<&mut (dyn FnMut(usize, &[Vec<f64>]) -> f64 + Send)>)
+                   -> Result<RunnerReport>
+    where
+        S: LocalSolver,
     {
         let n = self.graph.len();
-        let cfg = self.cfg;
+        // probe one solver for the parameter dimension (factories are
+        // deterministic constructors, so this is cheap and side-effect
+        // free by contract)
+        let dim = factory(0).dim();
 
-        // channels: per-node broadcast inbox, per-node verdict inbox,
-        // shared stats channel into the leader
-        let mut bcast_tx: Vec<Sender<Broadcast>> = Vec::with_capacity(n);
-        let mut bcast_rx: Vec<Option<Receiver<Broadcast>>> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            bcast_tx.push(tx);
-            bcast_rx.push(Some(rx));
-        }
-        let (stats_tx, stats_rx) = channel::<StatsMsg>();
-        let mut verdict_tx: Vec<Sender<Verdict>> = Vec::with_capacity(n);
-        let mut verdict_rx: Vec<Option<Receiver<Verdict>>> = Vec::with_capacity(n);
-        for _ in 0..n {
-            let (tx, rx) = channel();
-            verdict_tx.push(tx);
-            verdict_rx.push(Some(rx));
-        }
+        let workers = self.workers();
+        let ranges = shard_ranges(&self.graph, workers);
+        debug_assert_eq!(ranges.len(), workers);
 
-        let mut handles = Vec::with_capacity(n);
-        for i in 0..n {
-            let neighbors: Vec<NodeId> = self.graph.neighbors(i).to_vec();
-            let nb_senders: Vec<Sender<Broadcast>> =
-                neighbors.iter().map(|&j| bcast_tx[j].clone()).collect();
-            let my_rx = bcast_rx[i].take().expect("rx taken once");
-            let my_verdicts = verdict_rx[i].take().expect("rx taken once");
-            let stats = stats_tx.clone();
-            let factory = factory.clone();
-            handles.push(std::thread::spawn(move || {
-                node_main(i, cfg, neighbors, nb_senders, my_rx, my_verdicts,
-                          stats, factory)
-            }));
-        }
-        drop(stats_tx);
+        let arena = ParamArena::new(&self.graph, dim);
+        let barrier = PhaseBarrier::new(workers);
+        let partials = Mutex::new(vec![ShardPartial::new(dim); workers]);
+        let verdict = Mutex::new(Verdict {
+            t: 0,
+            stop: false,
+            global_primal: f64::INFINITY,
+            global_dual: f64::INFINITY,
+        });
+        let ctx = WorkerCtx {
+            graph: &self.graph,
+            arena: &arena,
+            barrier: &barrier,
+            partials: &partials,
+            verdict: &verdict,
+            cfg: self.cfg,
+        };
 
-        let leader = self.leader_loop(stats_rx, &verdict_tx, &mut app_metric);
+        let mut lead_slot = Some(LeadState::new(&self.cfg, metric));
+        let mut results: Vec<std::result::Result<Option<LeadOutcome>, WorkerError>> =
+            Vec::with_capacity(workers);
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for (w, range) in ranges.iter().cloned().enumerate() {
+                let factory = Arc::clone(&factory);
+                let lead = if w == 0 { lead_slot.take() } else { None };
+                let ctx_ref = &ctx;
+                handles.push(s.spawn(move || {
+                    match catch_unwind(AssertUnwindSafe(|| {
+                        worker_main(ctx_ref, w, range, factory, lead)
+                    })) {
+                        Ok(r) => r,
+                        Err(payload) => {
+                            // release peers blocked on the barrier, then
+                            // report the panic itself
+                            ctx_ref.barrier.poison();
+                            Err(WorkerError::Panicked(panic_message(&payload)))
+                        }
+                    }
+                }));
+            }
+            for h in handles {
+                results.push(h.join().unwrap_or_else(|payload| {
+                    Err(WorkerError::Panicked(panic_message(&payload)))
+                }));
+            }
+        });
 
-        let mut thetas: Vec<Vec<f64>> = vec![Vec::new(); n];
-        for h in handles {
-            let (id, theta) = h
-                .join()
-                .map_err(|_| Error::Config("node thread panicked".into()))?;
-            thetas[id] = theta;
-        }
-        let (iterations, converged, recorder) = leader?;
-        Ok(ThreadedReport { iterations, converged, recorder, thetas })
-    }
-
-    fn leader_loop(&self, stats_rx: Receiver<StatsMsg>, verdict_tx: &[Sender<Verdict>],
-                   app_metric: &mut impl FnMut(usize, &[Vec<f64>]) -> f64)
-                   -> Result<(usize, bool, Recorder)> {
-        let n = self.graph.len();
-        let mut recorder = Recorder::new();
-        let mut checker = ConvergenceChecker::new(self.cfg.tol)
-            .with_patience(self.cfg.patience)
-            .with_warmup(self.cfg.warmup);
-        let mut global_mean_prev: Option<Vec<f64>> = None;
-        let mut converged = false;
-        let mut iterations = 0;
-
-        for t in 0..self.cfg.max_iters {
-            let mut pending: Vec<Option<StatsMsg>> = vec![None; n];
-            let mut received = 0;
-            while received < n {
-                let msg = stats_rx
-                    .recv()
-                    .map_err(|_| Error::Config("node thread died mid-run".into()))?;
-                debug_assert_eq!(msg.t, t, "stats tag mismatch");
-                let from = msg.from;
-                if pending[from].replace(msg).is_none() {
-                    received += 1;
+        let mut outcome: Option<LeadOutcome> = None;
+        let mut panic_msg: Option<String> = None;
+        let mut poisoned = false;
+        for r in results {
+            match r {
+                Ok(Some(l)) => outcome = Some(l),
+                Ok(None) => {}
+                Err(WorkerError::Panicked(m)) => {
+                    if panic_msg.is_none() {
+                        panic_msg = Some(m);
+                    }
                 }
-            }
-            let stats: Vec<StatsMsg> = pending.into_iter().map(|m| m.unwrap()).collect();
-
-            // aggregate
-            let objective: f64 = stats.iter().map(|s| s.f_self).sum();
-            let max_primal = stats.iter().map(|s| s.primal_norm).fold(0.0, f64::max);
-            let max_dual = stats.iter().map(|s| s.dual_norm).fold(0.0, f64::max);
-            let eta_min = stats.iter().map(|s| s.eta_min).fold(f64::INFINITY, f64::min);
-            let eta_max = stats.iter().map(|s| s.eta_max).fold(0.0, f64::max);
-            let eta_cnt: usize = stats.iter().map(|s| s.eta_count).sum();
-            let eta_mean = if eta_cnt == 0 {
-                0.0
-            } else {
-                stats.iter().map(|s| s.eta_sum).sum::<f64>() / eta_cnt as f64
-            };
-
-            // global residuals (RB reference scheme)
-            let dim = stats[0].theta.len();
-            let mut gmean = vec![0.0; dim];
-            for s in &stats {
-                for k in 0..dim {
-                    gmean[k] += s.theta[k] / n as f64;
-                }
-            }
-            let mut gr2 = 0.0;
-            for s in &stats {
-                for k in 0..dim {
-                    let d = s.theta[k] - gmean[k];
-                    gr2 += d * d;
-                }
-            }
-            let gs2 = match &global_mean_prev {
-                Some(prev) => gmean
-                    .iter()
-                    .zip(prev)
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum::<f64>(),
-                None => f64::INFINITY,
-            };
-            let global_dual = if gs2.is_finite() {
-                self.cfg.params.eta0 * (n as f64).sqrt() * gs2.sqrt()
-            } else {
-                f64::INFINITY
-            };
-            global_mean_prev = Some(gmean);
-
-            let thetas: Vec<Vec<f64>> = stats.iter().map(|s| s.theta.clone()).collect();
-            let app_error = app_metric(t, &thetas);
-            recorder.push(IterStats {
-                iter: t,
-                objective,
-                max_primal,
-                max_dual,
-                mean_eta: eta_mean,
-                min_eta: if eta_cnt == 0 { 0.0 } else { eta_min },
-                max_eta: eta_max,
-                app_error,
-            });
-            iterations = t + 1;
-            let stop = checker.update(objective) || t + 1 == self.cfg.max_iters;
-            if stop && t + 1 < self.cfg.max_iters {
-                converged = true;
-            }
-            let verdict = Verdict {
-                t,
-                stop,
-                global_primal: gr2.sqrt(),
-                global_dual,
-            };
-            for tx in verdict_tx {
-                // a node that already stopped is gone; that's fine on stop
-                let _ = tx.send(verdict);
-            }
-            if stop {
-                break;
+                Err(WorkerError::Poisoned) => poisoned = true,
             }
         }
-        Ok((iterations, converged, recorder))
+        if let Some(m) = panic_msg {
+            return Err(Error::Config(format!("sharded runner: worker panicked: {m}")));
+        }
+        if poisoned {
+            return Err(Error::Config("sharded runner: a worker failed".into()));
+        }
+        let lead = outcome
+            .ok_or_else(|| Error::Config("sharded runner: leader returned no outcome".into()))?;
+
+        // final parameters sit in the buffer written at the last iteration
+        let parity = lead.iterations & 1;
+        let mut thetas = vec![vec![0.0; dim]; n];
+        for (i, th) in thetas.iter_mut().enumerate() {
+            // Safety: every worker has been joined; no concurrent access.
+            th.copy_from_slice(unsafe { arena.theta(parity, i) });
+        }
+        Ok(RunnerReport {
+            iterations: lead.iterations,
+            converged: lead.converged,
+            recorder: lead.recorder,
+            thetas,
+            workers,
+        })
     }
 }
 
-/// The per-node actor program (see module docs for the message schedule).
-#[allow(clippy::too_many_arguments)]
-fn node_main<S: LocalSolver>(
-    id: NodeId,
-    cfg: ThreadedConfig,
-    neighbors: Vec<NodeId>,
-    nb_senders: Vec<Sender<Broadcast>>,
-    inbox: Receiver<Broadcast>,
-    verdicts: Receiver<Verdict>,
-    stats: Sender<StatsMsg>,
-    factory: SolverFactory<S>,
-) -> (NodeId, Vec<f64>) {
-    let mut solver = factory(id);
-    let dim = solver.dim();
-    let deg = neighbors.len();
-    let mut rng = Pcg::new(cfg.seed, id as u64 + 1);
-    let mut theta = solver.initial_param(&mut rng);
-    let mut lambda = vec![0.0; dim];
-    let mut etas = vec![cfg.params.eta0; deg];
-    let mut scheme = make_scheme(cfg.scheme, cfg.params, deg);
-    let mut f_self_prev = f64::INFINITY;
-    let mut nbr_mean_prev = vec![0.0; dim];
-
-    let slot_of: HashMap<NodeId, usize> =
-        neighbors.iter().enumerate().map(|(s, &j)| (j, s)).collect();
-    // out-of-order broadcast staging: (tag → slot → theta/eta)
-    let mut pending: HashMap<usize, Vec<Option<(Vec<f64>, f64)>>> = HashMap::new();
-    let mut known: Vec<Vec<f64>> = vec![Vec::new(); deg];
-    let mut eta_in: Vec<f64> = vec![cfg.params.eta0; deg];
-
-    let collect = |tag: usize,
-                       pending: &mut HashMap<usize, Vec<Option<(Vec<f64>, f64)>>>,
-                       known: &mut Vec<Vec<f64>>, eta_in: &mut Vec<f64>| {
-        loop {
-            let entry = pending.entry(tag).or_insert_with(|| vec![None; deg]);
-            if entry.iter().all(Option::is_some) {
-                let entry = pending.remove(&tag).unwrap();
-                for (slot, item) in entry.into_iter().enumerate() {
-                    let (th, eta) = item.unwrap();
-                    known[slot] = th;
-                    eta_in[slot] = eta;
-                }
-                return;
-            }
-            match inbox.recv() {
-                Ok(msg) => {
-                    let slot = slot_of[&msg.from];
-                    pending
-                        .entry(msg.t)
-                        .or_insert_with(|| vec![None; deg])[slot] =
-                        Some((msg.theta, msg.eta_to_receiver));
-                }
-                Err(_) => return, // peers gone; leader will stop us
-            }
-        }
-    };
-
-    // initial exchange: θ⁰ tagged 0
-    for (slot, tx) in nb_senders.iter().enumerate() {
-        let _ = tx.send(Broadcast {
-            from: id,
-            t: 0,
-            theta: theta.clone(),
-            eta_to_receiver: etas[slot],
-        });
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
-    collect(0, &mut pending, &mut known, &mut eta_in);
-
-    for t in 0..cfg.max_iters {
-        // ---- local solve on iteration-t neighbour parameters -------------
-        let eta_sum: f64 = etas.iter().sum();
-        let mut eta_wsum = vec![0.0; dim];
-        for slot in 0..deg {
-            let e = etas[slot];
-            for k in 0..dim {
-                eta_wsum[k] += e * (theta[k] + known[slot][k]);
-            }
-        }
-        theta = solver.solve(&theta, &lambda, eta_sum, &eta_wsum);
-
-        // ---- broadcast θ^{t+1} with our edge penalties --------------------
-        for (slot, tx) in nb_senders.iter().enumerate() {
-            let _ = tx.send(Broadcast {
-                from: id,
-                t: t + 1,
-                theta: theta.clone(),
-                eta_to_receiver: etas[slot],
-            });
-        }
-        collect(t + 1, &mut pending, &mut known, &mut eta_in);
-
-        // ---- dual update with symmetrized penalties -----------------------
-        for slot in 0..deg {
-            let eta_bar = 0.5 * (etas[slot] + eta_in[slot]);
-            for k in 0..dim {
-                lambda[k] += 0.5 * eta_bar * (theta[k] - known[slot][k]);
-            }
-        }
-
-        // ---- residuals ----------------------------------------------------
-        let mut nbr_mean = vec![0.0; dim];
-        for slot in 0..deg {
-            for k in 0..dim {
-                nbr_mean[k] += known[slot][k] / deg.max(1) as f64;
-            }
-        }
-        let eta_bar_node = eta_sum / deg.max(1) as f64;
-        let mut r2 = 0.0;
-        let mut s2 = 0.0;
-        for k in 0..dim {
-            let r = theta[k] - nbr_mean[k];
-            let s = eta_bar_node * (nbr_mean[k] - nbr_mean_prev[k]);
-            r2 += r * r;
-            s2 += s * s;
-        }
-        nbr_mean_prev = nbr_mean;
-
-        // ---- objectives -----------------------------------------------------
-        let f_self = solver.objective(&theta);
-        let mut f_nb = vec![0.0; deg];
-        if scheme.needs_neighbor_objectives() {
-            let mut rho = vec![0.0; dim];
-            for slot in 0..deg {
-                for k in 0..dim {
-                    rho[k] = 0.5 * (theta[k] + known[slot][k]);
-                }
-                f_nb[slot] = solver.objective(&rho);
-            }
-        }
-
-        // ---- stats → leader; verdict ← leader ------------------------------
-        let eta_min = etas.iter().copied().fold(f64::INFINITY, f64::min);
-        let eta_max = etas.iter().copied().fold(0.0, f64::max);
-        let _ = stats.send(StatsMsg {
-            from: id,
-            t,
-            f_self,
-            primal_norm: r2.sqrt(),
-            dual_norm: s2.sqrt(),
-            eta_min: if deg == 0 { 0.0 } else { eta_min },
-            eta_max,
-            eta_sum,
-            eta_count: deg,
-            theta: theta.clone(),
-        });
-        let verdict = match verdicts.recv() {
-            Ok(v) => v,
-            Err(_) => break,
-        };
-        debug_assert_eq!(verdict.t, t);
-        if verdict.stop {
-            break;
-        }
-
-        // ---- penalty-scheme update -----------------------------------------
-        let obs = NodeObservation {
-            t,
-            primal_norm: r2.sqrt(),
-            dual_norm: s2.sqrt(),
-            global_primal: verdict.global_primal,
-            global_dual: verdict.global_dual,
-            f_self,
-            f_self_prev,
-            f_neighbors: &f_nb,
-        };
-        scheme.update(&obs, &mut etas);
-        f_self_prev = f_self;
-    }
-    (id, theta)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::consensus::solvers::QuadraticNode;
+    use crate::consensus::{Engine, EngineConfig};
     use crate::graph::Topology;
     use crate::linalg::Mat;
+    use crate::util::rng::Pcg;
 
     fn quad_factory(n: usize, dim: usize, seed: u64)
                     -> (SolverFactory<QuadraticNode>, Vec<f64>) {
         // materialize all node problems up-front so the central optimum is
-        // computable; the factory clones per thread
+        // computable; the factory clones per worker
         let mut rng = Pcg::seed(seed);
         let nodes: Vec<(Mat, Vec<f64>)> = (0..n)
             .map(|_| {
@@ -427,8 +271,21 @@ mod tests {
         (factory, opt)
     }
 
+    fn max_err(thetas: &[Vec<f64>], opt: &[f64]) -> f64 {
+        thetas
+            .iter()
+            .map(|th| {
+                th.iter()
+                    .zip(opt)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .fold(0.0, f64::max)
+    }
+
     #[test]
-    fn threaded_matches_central_optimum() {
+    fn sharded_matches_central_optimum() {
         for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Vp,
                        SchemeKind::Nap] {
             let (factory, opt) = quad_factory(6, 3, 17);
@@ -441,7 +298,7 @@ mod tests {
                     ..Default::default()
                 },
             );
-            let report = runner.run(factory, |_, _| 0.0).unwrap();
+            let report = runner.run(factory).unwrap();
             for th in &report.thetas {
                 assert_eq!(th.len(), 3);
                 for (a, b) in th.iter().zip(&opt) {
@@ -452,7 +309,7 @@ mod tests {
     }
 
     #[test]
-    fn threaded_is_deterministic() {
+    fn sharded_is_deterministic() {
         let run = || {
             let (factory, _) = quad_factory(5, 2, 3);
             let runner = ThreadedRunner::new(
@@ -460,7 +317,7 @@ mod tests {
                 ThreadedConfig { scheme: SchemeKind::VpAp, max_iters: 60, tol: 0.0,
                                  ..Default::default() },
             );
-            runner.run(factory, |_, _| 0.0).unwrap()
+            runner.run(factory).unwrap()
         };
         let a = run();
         let b = run();
@@ -470,7 +327,7 @@ mod tests {
     }
 
     #[test]
-    fn threaded_agrees_with_sequential_engine() {
+    fn sharded_agrees_with_sequential_engine() {
         // same problem, same convergence point (inits differ, optimum
         // doesn't): consensus parameters must match to solver tolerance
         let (factory, opt) = quad_factory(6, 3, 29);
@@ -479,8 +336,8 @@ mod tests {
             ThreadedConfig { scheme: SchemeKind::Nap, tol: 1e-11, max_iters: 600,
                              ..Default::default() },
         );
-        let threaded = runner.run(factory, |_, _| 0.0).unwrap();
-        for th in &threaded.thetas {
+        let sharded = runner.run(factory).unwrap();
+        for th in &sharded.thetas {
             for (a, b) in th.iter().zip(&opt) {
                 assert!((a - b).abs() < 1e-3);
             }
@@ -494,10 +351,142 @@ mod tests {
             Topology::Complete.build(4).unwrap(),
             ThreadedConfig { max_iters: 25, tol: 0.0, ..Default::default() },
         );
-        let report = runner.run(factory, |t, _| t as f64).unwrap();
+        let report = runner.run_with(factory, |t, _| t as f64).unwrap();
         assert_eq!(report.iterations, 25);
         assert_eq!(report.recorder.stats.len(), 25);
         assert!(!report.converged);
         assert_eq!(report.recorder.final_error(), 24.0);
+    }
+
+    #[test]
+    fn engine_parity_star_and_ring_all_schemes() {
+        // the sequential Engine is the oracle: on the same problem both
+        // runtimes must land on the centralized optimum, every scheme,
+        // on a hub topology and a sparse cycle
+        for topo in [Topology::Star, Topology::Ring] {
+            for scheme in SchemeKind::ALL {
+                let (factory, opt) = quad_factory(6, 3, 61);
+                let mut rng = Pcg::seed(61);
+                let nodes: Vec<QuadraticNode> =
+                    (0..6).map(|_| QuadraticNode::random(3, &mut rng)).collect();
+                let mut engine = Engine::new(topo.build(6).unwrap(), nodes,
+                                             EngineConfig {
+                                                 scheme,
+                                                 tol: 1e-10,
+                                                 max_iters: 1200,
+                                                 ..Default::default()
+                                             });
+                let sequential = engine.run();
+                assert!(max_err(&sequential.thetas, &opt) < 1e-3,
+                        "engine {topo:?}/{scheme:?}: {}",
+                        max_err(&sequential.thetas, &opt));
+
+                let runner = ShardedRunner::new(topo.build(6).unwrap(),
+                                                ShardedConfig {
+                                                    scheme,
+                                                    tol: 1e-10,
+                                                    max_iters: 1200,
+                                                    ..Default::default()
+                                                });
+                let sharded = runner.run(factory).unwrap();
+                assert!(max_err(&sharded.thetas, &opt) < 1e-3,
+                        "sharded {topo:?}/{scheme:?}: {}",
+                        max_err(&sharded.thetas, &opt));
+            }
+        }
+    }
+
+    #[test]
+    fn isolated_node_runs_without_nan() {
+        // a degree-0 node exercises every deg.max(1) / eta_count == 0
+        // guard in the residual and η-statistics paths
+        for scheme in SchemeKind::ALL {
+            let (factory, opt) = quad_factory(1, 3, 9);
+            let runner = ShardedRunner::new(Graph::new(1, &[]).unwrap(),
+                                            ShardedConfig {
+                                                scheme,
+                                                max_iters: 40,
+                                                ..Default::default()
+                                            });
+            let report = runner.run(factory).unwrap();
+            assert!(report.iterations > 0, "{scheme:?}");
+            for th in &report.thetas {
+                assert!(th.iter().all(|x| x.is_finite()), "{scheme:?}: {th:?}");
+            }
+            // with no consensus constraint the node solves its own problem
+            assert!(max_err(&report.thetas, &opt) < 1e-6, "{scheme:?}");
+            for s in &report.recorder.stats {
+                assert!(s.objective.is_finite(), "{scheme:?}");
+                assert!(s.max_primal.is_finite() && s.max_dual.is_finite(),
+                        "{scheme:?}");
+                assert_eq!(s.mean_eta, 0.0, "{scheme:?}: no edges, no η");
+                assert_eq!(s.min_eta, 0.0, "{scheme:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_node_results() {
+        // node-level computation is independent of the shard layout; with
+        // a fixed iteration count the final parameters are bit-identical
+        // for any worker count (leader reductions only feed the stop
+        // check, disabled here via tol = 0)
+        let run = |workers: usize| {
+            let (factory, _) = quad_factory(7, 3, 13);
+            let runner = ShardedRunner::new(
+                Topology::Ring.build(7).unwrap(),
+                ShardedConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 60,
+                                workers, ..Default::default() },
+            );
+            runner.run(factory).unwrap()
+        };
+        let one = run(1);
+        let three = run(3);
+        let auto = run(0);
+        assert_eq!(one.workers, 1);
+        assert_eq!(three.workers, 3);
+        assert_eq!(one.thetas, three.thetas);
+        assert_eq!(one.thetas, auto.thetas);
+        assert_eq!(one.iterations, three.iterations);
+    }
+
+    #[test]
+    fn boxed_solvers_run_heterogeneously() {
+        // Box<dyn LocalSolver> through the forwarding impl: mix quadratic
+        // nodes with ridge nodes in one run
+        use crate::consensus::solvers::RidgeNode;
+        let factory: SolverFactory<Box<dyn LocalSolver>> = Arc::new(|i| {
+            let mut rng = Pcg::seed(100 + i as u64);
+            let solver: Box<dyn LocalSolver> = if i % 2 == 0 {
+                Box::new(QuadraticNode::random(3, &mut rng))
+            } else {
+                let a = Mat::randn(8, 3, &mut rng);
+                let b: Vec<f64> = (0..8).map(|_| rng.normal()).collect();
+                Box::new(RidgeNode::new(a, b, 0.5))
+            };
+            solver
+        });
+        let runner = ShardedRunner::new(Topology::Ring.build(4).unwrap(),
+                                        ShardedConfig { max_iters: 120,
+                                                        ..Default::default() });
+        let report = runner.run(factory).unwrap();
+        assert!(report.iterations > 0);
+        assert!(report.thetas.iter().all(|t| t.iter().all(|x| x.is_finite())));
+    }
+
+    #[test]
+    fn panicking_solver_reports_error_not_deadlock() {
+        let factory: SolverFactory<QuadraticNode> = Arc::new(|i| {
+            if i == 3 {
+                panic!("solver construction failed on purpose");
+            }
+            let mut rng = Pcg::seed(1 + i as u64);
+            QuadraticNode::random(2, &mut rng)
+        });
+        let runner = ShardedRunner::new(Topology::Ring.build(6).unwrap(),
+                                        ShardedConfig { max_iters: 50, workers: 3,
+                                                        ..Default::default() });
+        let err = runner.run(factory).unwrap_err();
+        assert!(err.to_string().contains("panicked"), "{err}");
     }
 }

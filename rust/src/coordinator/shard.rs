@@ -1,0 +1,478 @@
+//! The per-worker shard program: phase A (solve) → barrier → phase B
+//! (duals, residuals, objectives, partial reduction) → barrier → leader
+//! fold → barrier → phase C (penalty-scheme update + η publish).
+//!
+//! See [`super`] (the coordinator module docs) for the full schedule and
+//! the determinism argument. Everything here is crate-private; the public
+//! surface is [`super::runner::ShardedRunner`].
+
+use std::ops::Range;
+use std::sync::Mutex;
+
+use super::arena::ParamArena;
+use super::arena::PhaseBarrier;
+use super::messages::Verdict;
+use super::runner::{ShardedConfig, SolverFactory};
+use crate::consensus::LocalSolver;
+use crate::graph::{Graph, NodeId};
+use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme};
+use crate::util::rng::Pcg;
+
+/// Application-metric callback threaded into the leader worker.
+pub(crate) type AppMetric<'m> = &'m mut (dyn FnMut(usize, &[Vec<f64>]) -> f64 + Send);
+
+/// Why a worker stopped without a result.
+#[derive(Debug)]
+pub(crate) enum WorkerError {
+    /// A peer poisoned the barrier (it panicked and reported separately).
+    Poisoned,
+    /// This worker's own body panicked (message extracted by the runner).
+    Panicked(String),
+}
+
+/// Everything a worker borrows from the runner for the duration of a run.
+pub(crate) struct WorkerCtx<'a> {
+    pub graph: &'a Graph,
+    pub arena: &'a ParamArena,
+    pub barrier: &'a PhaseBarrier,
+    pub partials: &'a Mutex<Vec<ShardPartial>>,
+    pub verdict: &'a Mutex<Verdict>,
+    pub cfg: ShardedConfig,
+}
+
+/// One shard's contribution to the leader fold, accumulated in sequential
+/// node order within the shard so that combining shards in index order
+/// reproduces a single-threaded sweep over `0..n`.
+#[derive(Debug, Clone)]
+pub(crate) struct ShardPartial {
+    pub f_sum: f64,
+    pub max_primal: f64,
+    pub max_dual: f64,
+    pub eta_min: f64,
+    pub eta_max: f64,
+    pub eta_sum: f64,
+    pub eta_count: usize,
+    pub theta_sum: Vec<f64>,
+}
+
+impl ShardPartial {
+    pub(crate) fn new(dim: usize) -> ShardPartial {
+        ShardPartial {
+            f_sum: 0.0,
+            max_primal: 0.0,
+            max_dual: 0.0,
+            eta_min: f64::INFINITY,
+            eta_max: 0.0,
+            eta_sum: 0.0,
+            eta_count: 0,
+            theta_sum: vec![0.0; dim],
+        }
+    }
+
+    fn reset(&mut self) {
+        self.f_sum = 0.0;
+        self.max_primal = 0.0;
+        self.max_dual = 0.0;
+        self.eta_min = f64::INFINITY;
+        self.eta_max = 0.0;
+        self.eta_sum = 0.0;
+        self.eta_count = 0;
+        self.theta_sum.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    /// Copy into a pre-sized slot without reallocating its `theta_sum`.
+    fn store_into(&self, dst: &mut ShardPartial) {
+        dst.f_sum = self.f_sum;
+        dst.max_primal = self.max_primal;
+        dst.max_dual = self.max_dual;
+        dst.eta_min = self.eta_min;
+        dst.eta_max = self.eta_max;
+        dst.eta_sum = self.eta_sum;
+        dst.eta_count = self.eta_count;
+        dst.theta_sum.copy_from_slice(&self.theta_sum);
+    }
+}
+
+/// Leader-only state (worker 0): convergence tracking, the recorder, the
+/// global-residual memory and the reusable θ snapshot for the app metric.
+pub(crate) struct LeadState<'m> {
+    checker: ConvergenceChecker,
+    recorder: Recorder,
+    global_mean_prev: Option<Vec<f64>>,
+    gmean: Vec<f64>,
+    metric: Option<AppMetric<'m>>,
+    snapshot: Vec<Vec<f64>>,
+    iterations: usize,
+    converged: bool,
+}
+
+impl<'m> LeadState<'m> {
+    pub(crate) fn new(cfg: &ShardedConfig, metric: Option<AppMetric<'m>>) -> LeadState<'m> {
+        LeadState {
+            checker: ConvergenceChecker::new(cfg.tol)
+                .with_patience(cfg.patience)
+                .with_warmup(cfg.warmup),
+            recorder: Recorder::new(),
+            global_mean_prev: None,
+            gmean: Vec::new(),
+            metric,
+            snapshot: Vec::new(),
+            iterations: 0,
+            converged: false,
+        }
+    }
+}
+
+/// What the leader worker hands back to the runner.
+pub(crate) struct LeadOutcome {
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+}
+
+/// Per-node state owned by exactly one worker. θ itself lives only in the
+/// arena (zero-copy); everything here is private to the node.
+struct NodeState<S> {
+    id: NodeId,
+    solver: S,
+    scheme: Box<dyn PenaltyScheme>,
+    /// out-edge penalties η_{i→j}, neighbour-slot order (working copy;
+    /// published to the arena at the end of each iteration)
+    etas: Vec<f64>,
+    lambda: Vec<f64>,
+    nbr_mean_prev: Vec<f64>,
+    /// flat η-arena index of the *incoming* penalty η_{j→i} per slot
+    in_eta_idx: Vec<usize>,
+    /// reused neighbour-objective buffer (AP/NAP schemes)
+    f_nb: Vec<f64>,
+    f_self_prev: f64,
+    // carried from phase A/B to phase C within one iteration
+    eta_sum: f64,
+    f_self: f64,
+    primal: f64,
+    dual: f64,
+}
+
+/// Worker-local scratch, reused across nodes and iterations.
+struct Scratch {
+    eta_wsum: Vec<f64>,
+    nbr_mean: Vec<f64>,
+    rhos: Vec<Vec<f64>>,
+}
+
+/// The worker body. `widx` is the shard index; worker 0 carries the
+/// leader state. Returns the leader outcome (worker 0) or `None`.
+pub(crate) fn worker_main<S: LocalSolver>(
+    ctx: &WorkerCtx<'_>,
+    widx: usize,
+    range: Range<usize>,
+    factory: SolverFactory<S>,
+    mut lead: Option<LeadState<'_>>,
+) -> Result<Option<LeadOutcome>, WorkerError> {
+    let cfg = ctx.cfg;
+    let dim = ctx.arena.dim();
+
+    // ---- construct solvers + per-node state; publish θ⁰ / η⁰ -------------
+    let mut nodes: Vec<NodeState<S>> = Vec::with_capacity(range.len());
+    let mut max_deg = 0usize;
+    for i in range {
+        let mut solver = factory(i);
+        assert_eq!(solver.dim(), dim, "homogeneous dims");
+        let deg = ctx.graph.degree(i);
+        max_deg = max_deg.max(deg);
+        let mut rng = Pcg::new(cfg.seed, i as u64 + 1);
+        let theta0 = solver.initial_param(&mut rng);
+        assert_eq!(theta0.len(), dim);
+        let etas = vec![cfg.params.eta0; deg];
+        // Safety: we own node i; parity 0 is the pre-loop write buffer and
+        // nobody reads it before the init barrier below.
+        unsafe {
+            ctx.arena.theta_mut(0, i).copy_from_slice(&theta0);
+            ctx.arena.eta_out_mut(0, i).copy_from_slice(&etas);
+        }
+        let in_eta_idx = ctx
+            .graph
+            .neighbors(i)
+            .iter()
+            .map(|&j| {
+                let slot = ctx.graph.edge_slot(j, i).expect("graph symmetry");
+                ctx.arena.eta_index(j, slot)
+            })
+            .collect();
+        nodes.push(NodeState {
+            id: i,
+            solver,
+            scheme: make_scheme(cfg.scheme, cfg.params, deg),
+            etas,
+            lambda: vec![0.0; dim],
+            nbr_mean_prev: vec![0.0; dim],
+            in_eta_idx,
+            f_nb: vec![0.0; deg],
+            f_self_prev: f64::INFINITY,
+            eta_sum: 0.0,
+            f_self: 0.0,
+            primal: 0.0,
+            dual: 0.0,
+        });
+    }
+    let mut scratch = Scratch {
+        eta_wsum: vec![0.0; dim],
+        nbr_mean: vec![0.0; dim],
+        rhos: vec![vec![0.0; dim]; max_deg],
+    };
+    let mut partial = ShardPartial::new(dim);
+
+    // everyone's θ⁰/η⁰ must be visible before the first solve
+    ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?;
+
+    for t in 0..cfg.max_iters {
+        let p = t & 1; // read parity (epoch t)
+        let q = p ^ 1; // write parity (epoch t+1)
+
+        // ---- phase A: local solves on epoch-t parameters ------------------
+        for st in &mut nodes {
+            // Safety: phase A reads only parity-p θ (no writers this phase)
+            // and writes only our own parity-q block.
+            let theta_t = unsafe { ctx.arena.theta(p, st.id) };
+            let mut eta_sum = 0.0;
+            scratch.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+            for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
+                let e = st.etas[slot];
+                eta_sum += e;
+                let tj = unsafe { ctx.arena.theta(p, j) };
+                for k in 0..dim {
+                    scratch.eta_wsum[k] += e * (theta_t[k] + tj[k]);
+                }
+            }
+            st.eta_sum = eta_sum;
+            let new_theta = st.solver.solve(theta_t, &st.lambda, eta_sum,
+                                            &scratch.eta_wsum);
+            debug_assert_eq!(new_theta.len(), dim);
+            unsafe { ctx.arena.theta_mut(q, st.id) }.copy_from_slice(&new_theta);
+        }
+        ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // epoch swap
+
+        // ---- phase B: duals, residuals, objectives, partial reduction -----
+        partial.reset();
+        for st in &mut nodes {
+            let deg = ctx.graph.degree(st.id);
+            // Safety: after the barrier every parity-q θ block is complete
+            // and no worker writes θ until the next phase A; η parity-p is
+            // stable until phase C writes parity-q.
+            let th_new = unsafe { ctx.arena.theta(q, st.id) };
+
+            // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), η̄ the edge-mean penalty
+            for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
+                let eta_in = unsafe { ctx.arena.eta(p, st.in_eta_idx[slot]) };
+                let eta_bar = 0.5 * (st.etas[slot] + eta_in);
+                let tj = unsafe { ctx.arena.theta(q, j) };
+                for k in 0..dim {
+                    st.lambda[k] += 0.5 * eta_bar * (th_new[k] - tj[k]);
+                }
+            }
+
+            // local residuals (paper eq. 5)
+            scratch.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
+            for &j in ctx.graph.neighbors(st.id) {
+                let tj = unsafe { ctx.arena.theta(q, j) };
+                for k in 0..dim {
+                    scratch.nbr_mean[k] += tj[k];
+                }
+            }
+            let inv_deg = 1.0 / deg.max(1) as f64;
+            scratch.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+            let eta_bar_node = st.eta_sum * inv_deg;
+            let mut r2 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..dim {
+                let r = th_new[k] - scratch.nbr_mean[k];
+                let s = eta_bar_node * (scratch.nbr_mean[k] - st.nbr_mean_prev[k]);
+                r2 += r * r;
+                s2 += s * s;
+            }
+            st.nbr_mean_prev.copy_from_slice(&scratch.nbr_mean);
+            st.primal = r2.sqrt();
+            st.dual = s2.sqrt();
+
+            // objectives (f at bridge midpoints only if the scheme asks)
+            st.f_self = st.solver.objective(th_new);
+            if st.scheme.needs_neighbor_objectives() {
+                for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
+                    let tj = unsafe { ctx.arena.theta(q, j) };
+                    let rho = &mut scratch.rhos[slot];
+                    for k in 0..dim {
+                        rho[k] = 0.5 * (th_new[k] + tj[k]);
+                    }
+                }
+                st.solver.objective_batch_into(&scratch.rhos[..deg], &mut st.f_nb);
+            }
+
+            // shard-local reduction, node order = sequential order
+            partial.f_sum += st.f_self;
+            partial.max_primal = partial.max_primal.max(st.primal);
+            partial.max_dual = partial.max_dual.max(st.dual);
+            for &e in &st.etas {
+                partial.eta_min = partial.eta_min.min(e);
+                partial.eta_max = partial.eta_max.max(e);
+                partial.eta_sum += e;
+            }
+            partial.eta_count += deg;
+            for k in 0..dim {
+                partial.theta_sum[k] += th_new[k];
+            }
+        }
+        {
+            let mut slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
+            partial.store_into(&mut slots[widx]);
+        }
+        ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // stats ready
+
+        // ---- leader fold (worker 0 only) ----------------------------------
+        if let Some(lead) = lead.as_mut() {
+            fold(ctx, lead, t, q);
+        }
+        ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // verdict ready
+
+        let verdict = *ctx.verdict.lock().unwrap_or_else(|e| e.into_inner());
+        debug_assert_eq!(verdict.t, t, "verdict tag mismatch");
+        if verdict.stop {
+            break;
+        }
+
+        // ---- phase C: penalty-scheme updates + publish η^{t+1} ------------
+        for st in &mut nodes {
+            let obs = NodeObservation {
+                t,
+                primal_norm: st.primal,
+                dual_norm: st.dual,
+                global_primal: verdict.global_primal,
+                global_dual: verdict.global_dual,
+                f_self: st.f_self,
+                f_self_prev: st.f_self_prev,
+                f_neighbors: &st.f_nb,
+            };
+            st.scheme.update(&obs, &mut st.etas);
+            st.f_self_prev = st.f_self;
+            // Safety: we own node st.id; parity-q η is the write buffer
+            // until the next iteration's post-solve barrier.
+            unsafe { ctx.arena.eta_out_mut(q, st.id) }.copy_from_slice(&st.etas);
+        }
+    }
+
+    Ok(lead.map(|l| LeadOutcome {
+        iterations: l.iterations,
+        converged: l.converged,
+        recorder: l.recorder,
+    }))
+}
+
+/// The leader's serial fold: combine shard partials (in shard order),
+/// derive global residuals, run the app metric + convergence check and
+/// publish the iteration verdict. Runs between the post-stats and
+/// post-verdict barriers, so it may read the whole parity-`q` θ buffer.
+fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
+    let n = ctx.graph.len();
+    let dim = ctx.arena.dim();
+    let inv_n = 1.0 / n as f64;
+
+    let mut objective = 0.0;
+    let mut max_primal: f64 = 0.0;
+    let mut max_dual: f64 = 0.0;
+    let mut eta_min = f64::INFINITY;
+    let mut eta_max: f64 = 0.0;
+    let mut eta_sum = 0.0;
+    let mut eta_count = 0usize;
+    if lead.gmean.len() != dim {
+        lead.gmean.resize(dim, 0.0);
+    }
+    lead.gmean.iter_mut().for_each(|x| *x = 0.0);
+    {
+        let slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
+        for part in slots.iter() {
+            objective += part.f_sum;
+            max_primal = max_primal.max(part.max_primal);
+            max_dual = max_dual.max(part.max_dual);
+            eta_min = eta_min.min(part.eta_min);
+            eta_max = eta_max.max(part.eta_max);
+            eta_sum += part.eta_sum;
+            eta_count += part.eta_count;
+            for k in 0..dim {
+                lead.gmean[k] += part.theta_sum[k];
+            }
+        }
+    }
+    lead.gmean.iter_mut().for_each(|x| *x *= inv_n);
+
+    // global residuals (consumed by the RB reference scheme)
+    let mut gr2 = 0.0;
+    {
+        // Safety: between the two barriers no worker writes parity-q θ.
+        let all = unsafe { ctx.arena.theta_all(q) };
+        for i in 0..n {
+            let th = &all[i * dim..(i + 1) * dim];
+            for k in 0..dim {
+                let d = th[k] - lead.gmean[k];
+                gr2 += d * d;
+            }
+        }
+    }
+    // like the Engine, the previous global mean starts at zero (so the
+    // t = 0 dual is finite and the Rb trajectory matches the oracle)
+    let gs2 = match &lead.global_mean_prev {
+        Some(prev) => lead
+            .gmean
+            .iter()
+            .zip(prev)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>(),
+        None => lead.gmean.iter().map(|a| a * a).sum::<f64>(),
+    };
+    let global_dual = ctx.cfg.params.eta0 * (n as f64).sqrt() * gs2.sqrt();
+    if let Some(prev) = lead.global_mean_prev.as_mut() {
+        prev.copy_from_slice(&lead.gmean);
+    } else {
+        lead.global_mean_prev = Some(lead.gmean.clone());
+    }
+
+    // app metric: θ materialized (into a reused snapshot) only on demand
+    let app_error = match lead.metric.as_mut() {
+        Some(metric) => {
+            if lead.snapshot.len() != n {
+                lead.snapshot = vec![vec![0.0; dim]; n];
+            }
+            // Safety: as above — stable parity-q reads inside the fold.
+            let all = unsafe { ctx.arena.theta_all(q) };
+            for i in 0..n {
+                lead.snapshot[i].copy_from_slice(&all[i * dim..(i + 1) * dim]);
+            }
+            metric(t, &lead.snapshot)
+        }
+        None => 0.0,
+    };
+
+    lead.recorder.push(IterStats {
+        iter: t,
+        objective,
+        max_primal,
+        max_dual,
+        mean_eta: if eta_count == 0 { 0.0 } else { eta_sum / eta_count as f64 },
+        min_eta: if eta_count == 0 { 0.0 } else { eta_min },
+        max_eta: eta_max,
+        app_error,
+    });
+    lead.iterations = t + 1;
+    // Engine semantics: converged iff the checker fired, even when that
+    // happens exactly on the final iteration
+    let hit = lead.checker.update(objective);
+    if hit {
+        lead.converged = true;
+    }
+    let stop = hit || t + 1 == ctx.cfg.max_iters;
+    *ctx.verdict.lock().unwrap_or_else(|e| e.into_inner()) = Verdict {
+        t,
+        stop,
+        global_primal: gr2.sqrt(),
+        global_dual,
+    };
+}

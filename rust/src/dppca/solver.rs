@@ -209,6 +209,14 @@ impl LocalSolver for DppcaSolver {
         }
     }
 
+    fn objective_batch_into(&mut self, thetas: &[Vec<f64>], out: &mut Vec<f64>) {
+        // keep the single-dispatch batched path (the default would loop
+        // scalar objectives and lose the backend's batching)
+        let scores = self.objective_batch(thetas);
+        out.clear();
+        out.extend_from_slice(&scores);
+    }
+
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
         let p = PpcaParams::unflatten(self.d, self.m, theta);

@@ -1,37 +1,33 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls (no `thiserror`): the default build
+//! must compile with zero external dependencies in the offline build
+//! environment.
 
 /// Errors surfaced by the fadmm library.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape or dimension mismatch in linear algebra / marshalling.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Numerical failure (singular matrix, non-convergence of a factorization).
-    #[error("numerical failure: {0}")]
     Numeric(String),
 
     /// Invalid configuration (topology, scheme parameters, experiment spec).
-    #[error("invalid config: {0}")]
     Config(String),
 
     /// Artifact manifest / HLO loading problems.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// JSON parse error (in-repo parser, see `util::json`).
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Propagated XLA/PJRT error.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O error with context.
-    #[error("io error ({context}): {source}")]
     Io {
         context: String,
-        #[source]
         source: std::io::Error,
     },
 }
@@ -43,6 +39,30 @@ impl Error {
     }
 }
 
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Numeric(m) => write!(f, "numerical failure: {m}"),
+            Error::Config(m) => write!(f, "invalid config: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io { context, source } => write!(f, "io error ({context}): {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io { source, .. } => Some(source),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -51,3 +71,19 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_carries_context() {
+        let e = Error::Config("bad topology".into());
+        assert_eq!(e.to_string(), "invalid config: bad topology");
+        let io = Error::io("reading manifest",
+                           std::io::Error::new(std::io::ErrorKind::NotFound, "gone"));
+        assert!(io.to_string().contains("reading manifest"));
+        assert!(std::error::Error::source(&io).is_some());
+        assert!(std::error::Error::source(&e).is_none());
+    }
+}

@@ -8,7 +8,9 @@ use crate::graph::Graph;
 use crate::linalg::{max_principal_angle_deg, Mat};
 use crate::metrics::Recorder;
 use crate::penalty::{SchemeKind, SchemeParams};
-use crate::runtime::{shared, NativeBackend, SharedBackend, XlaBackend};
+use crate::runtime::{shared, NativeBackend, SharedBackend};
+#[cfg(feature = "xla")]
+use crate::runtime::XlaBackend;
 
 /// Which compute backend executes the node updates.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,10 +32,16 @@ impl BackendChoice {
 
     /// Instantiate (XLA backends warm their executable cache lazily).
     pub fn build(self) -> Result<SharedBackend> {
-        Ok(match self {
-            BackendChoice::Xla => shared(XlaBackend::from_default_dir()?),
-            BackendChoice::Native => shared(NativeBackend::new()),
-        })
+        match self {
+            #[cfg(feature = "xla")]
+            BackendChoice::Xla => Ok(shared(XlaBackend::from_default_dir()?)),
+            #[cfg(not(feature = "xla"))]
+            BackendChoice::Xla => Err(crate::Error::Config(
+                "xla backend unavailable in this build: rebuild with \
+                 `--features xla` (and vendor the xla crate)".into(),
+            )),
+            BackendChoice::Native => Ok(shared(NativeBackend::new())),
+        }
     }
 }
 

@@ -8,9 +8,11 @@
 
 mod builders;
 mod graph;
+mod sharding;
 
 pub use builders::{random_connected, Topology};
 pub use graph::{EdgeId, Graph, NodeId};
+pub use sharding::shard_ranges;
 
 /// Effective-influence summary of a penalized graph state: for every edge,
 /// the ratio of its penalty to the mean penalty. Values ≪ 1 correspond to

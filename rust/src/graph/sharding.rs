@@ -1,0 +1,117 @@
+//! Contiguous load-balanced node partitioning for the worker-pool runtime.
+
+use std::ops::Range;
+
+use super::Graph;
+
+/// Split nodes `0..n` into at most `max_shards` contiguous, non-empty
+/// ranges of near-equal total cost, where a node costs `1 + degree(i)`
+/// (one local solve plus per-neighbour exchange/objective work).
+///
+/// Contiguity matters twice over: each worker's parameter-arena reads and
+/// writes stay on adjacent cache lines, and concatenating the shards in
+/// order reproduces the sequential node order, so shard-combined
+/// reductions visit nodes exactly as a single-threaded sweep would.
+///
+/// Deterministic: same graph + same `max_shards` → same ranges.
+pub fn shard_ranges(graph: &Graph, max_shards: usize) -> Vec<Range<usize>> {
+    let n = graph.len();
+    let shards = max_shards.max(1).min(n);
+    let cost = |i: usize| (1 + graph.degree(i)) as f64;
+    let total: f64 = (0..n).map(cost).sum();
+
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0usize;
+    let mut spent = 0.0;
+    for s in 0..shards {
+        let remaining = shards - s;
+        if remaining == 1 {
+            out.push(start..n);
+            break;
+        }
+        // leave at least one node for each later shard
+        let max_end = n - (remaining - 1);
+        let target = (total - spent) / remaining as f64;
+        let mut end = start + 1;
+        let mut acc = cost(start);
+        while end < max_end {
+            let c = cost(end);
+            // stop once the midpoint of the next node overshoots the target
+            if acc + 0.5 * c > target {
+                break;
+            }
+            acc += c;
+            end += 1;
+        }
+        spent += acc;
+        out.push(start..end);
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::util::prop;
+
+    fn check_partition(g: &Graph, shards: usize) {
+        let ranges = shard_ranges(g, shards);
+        assert_eq!(ranges.len(), shards.max(1).min(g.len()));
+        let mut expect = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, expect, "contiguous, in order");
+            assert!(r.end > r.start, "non-empty");
+            expect = r.end;
+        }
+        assert_eq!(expect, g.len(), "covers every node");
+    }
+
+    #[test]
+    fn covers_all_named_topologies() {
+        for topo in [Topology::Complete, Topology::Ring, Topology::Chain,
+                     Topology::Star, Topology::Cluster] {
+            let g = topo.build(13).unwrap();
+            for shards in [1, 2, 3, 5, 13, 64] {
+                check_partition(&g, shards);
+            }
+        }
+    }
+
+    #[test]
+    fn star_hub_gets_a_small_shard() {
+        // node 0 of a star carries almost all the edge cost; a balanced
+        // 2-way split must not give shard 0 half the nodes
+        let g = Topology::Star.build(41).unwrap();
+        let ranges = shard_ranges(&g, 2);
+        assert!(ranges[0].len() < ranges[1].len(),
+                "hub shard {:?} should be smaller than leaf shard {:?}",
+                ranges[0], ranges[1]);
+    }
+
+    #[test]
+    fn uniform_costs_split_evenly() {
+        let g = Topology::Ring.build(12).unwrap();
+        let ranges = shard_ranges(&g, 4);
+        assert_eq!(ranges, vec![0..3, 3..6, 6..9, 9..12]);
+    }
+
+    #[test]
+    fn more_shards_than_nodes_clamps() {
+        let g = Topology::Ring.build(5).unwrap();
+        assert_eq!(shard_ranges(&g, 99).len(), 5);
+        let singleton = Graph::new(1, &[]).unwrap();
+        assert_eq!(shard_ranges(&singleton, 8), vec![0..1]);
+    }
+
+    #[test]
+    fn random_graphs_partition_property() {
+        prop::check("shard_ranges partitions any connected graph", |rng| {
+            let n = 2 + rng.below(30);
+            let g = crate::graph::random_connected(n, 0.3, rng).unwrap();
+            let shards = 1 + rng.below(n + 3);
+            check_partition(&g, shards);
+        });
+    }
+}

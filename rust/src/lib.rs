@@ -17,9 +17,11 @@
 //!   embedded in the L2 program.
 //!
 //! The [`runtime`] module loads the lowered artifacts through the PJRT CPU
-//! client (`xla` crate) and exposes them behind a [`runtime::Backend`]
-//! trait; a pure-Rust [`runtime::NativeBackend`] implements the identical
-//! math for artifact-free tests and as a cross-check oracle.
+//! client (`xla` crate, behind the off-by-default `xla` cargo feature so
+//! the default build is dependency-free) and exposes them behind a
+//! [`runtime::Backend`] trait; a pure-Rust [`runtime::NativeBackend`]
+//! implements the identical math for artifact-free tests and as a
+//! cross-check oracle.
 
 pub mod config;
 pub mod consensus;

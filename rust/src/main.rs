@@ -15,7 +15,6 @@ use fadmm::data::{even_split, SubspaceSpec};
 use fadmm::experiments::{ablations, caltech, common, fig2, hopkins};
 use fadmm::experiments::common::BackendChoice;
 use fadmm::linalg::Mat;
-use fadmm::runtime::XlaBackend;
 use fadmm::util::rng::Pcg;
 
 const HELP: &str = "\
@@ -196,11 +195,20 @@ fn cmd_run(args: &CliArgs) -> fadmm::Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "xla")]
 fn cmd_check_artifacts() -> fadmm::Result<()> {
-    let mut backend = XlaBackend::from_default_dir()?;
+    let mut backend = fadmm::runtime::XlaBackend::from_default_dir()?;
     println!("manifest: {} artifacts at {}", backend.manifest().len(),
              fadmm::runtime::Manifest::default_dir().display());
     let compiled = backend.warmup(8, 2, 16)?;
     println!("compiled {compiled} executables for the d8/m2/n16 smoke shape — OK");
     Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn cmd_check_artifacts() -> fadmm::Result<()> {
+    Err(fadmm::Error::Config(
+        "check-artifacts requires the `xla` feature: \
+         cargo run --features xla -- check-artifacts".into(),
+    ))
 }

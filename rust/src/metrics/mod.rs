@@ -1,7 +1,8 @@
 //! Convergence checking and per-iteration metric recording.
 
-use crate::util::csv::{fnum, CsvWriter};
 use crate::error::Result;
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::json::{num, obj, Json};
 
 /// Relative-change convergence criterion (paper §5: "we compare the
 /// relative change of (14) to a fixed threshold, 1e-3").
@@ -140,6 +141,21 @@ impl Recorder {
         self.stats.last().map(|s| s.app_error).unwrap_or(f64::NAN)
     }
 
+    /// Compact machine-readable run summary (consumed by the bench JSON
+    /// reports; curves stay in CSV via [`Recorder::write_csv`]). The
+    /// `final_*` fields are omitted for an empty recorder (NaN is not
+    /// representable in JSON).
+    pub fn summary_json(&self) -> Json {
+        let mut fields = vec![("iterations", num(self.stats.len() as f64))];
+        if let Some(last) = self.stats.last() {
+            fields.push(("final_objective", num(last.objective)));
+            fields.push(("final_max_primal", num(last.max_primal)));
+            fields.push(("final_max_dual", num(last.max_dual)));
+            fields.push(("final_mean_eta", num(last.mean_eta)));
+        }
+        obj(fields)
+    }
+
     /// Dump the full run as CSV.
     pub fn write_csv(&self, path: &std::path::Path) -> Result<()> {
         let mut w = CsvWriter::create(path, &[
@@ -206,6 +222,19 @@ mod tests {
         assert_eq!(r.error_curve(), vec![0.0, 1.0, 2.0]);
         assert_eq!(r.final_error(), 2.0);
         assert_eq!(r.iterations(), 3);
+    }
+
+    #[test]
+    fn recorder_summary_json_shape() {
+        let mut r = Recorder::new();
+        r.push(IterStats { iter: 0, objective: 2.0, max_primal: 0.5,
+                           ..Default::default() });
+        r.push(IterStats { iter: 1, objective: 1.0, max_primal: 0.25,
+                           ..Default::default() });
+        let j = r.summary_json();
+        assert_eq!(j.get("iterations").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("final_objective").unwrap().as_f64(), Some(1.0));
+        assert_eq!(j.get("final_max_primal").unwrap().as_f64(), Some(0.25));
     }
 
     #[test]

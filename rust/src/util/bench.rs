@@ -6,9 +6,12 @@
 //! simple — enough for regression tracking and the §Perf methodology in
 //! EXPERIMENTS.md.
 
+use std::path::PathBuf;
 use std::time::Instant;
 
+use super::json::{arr, num, obj, s, Json};
 use super::stats;
+use crate::error::Error;
 
 /// One benchmark result.
 #[derive(Debug, Clone)]
@@ -22,6 +25,18 @@ pub struct BenchResult {
 }
 
 impl BenchResult {
+    /// Machine-readable form (one entry of `BENCH_<target>.json`).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", s(self.name.as_str())),
+            ("iters", num(self.iters as f64)),
+            ("mean_ns", num(self.mean_ns)),
+            ("median_ns", num(self.median_ns)),
+            ("p10_ns", num(self.p10_ns)),
+            ("p90_ns", num(self.p90_ns)),
+        ])
+    }
+
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12} iters  mean {:>12}  median {:>12}  p10 {:>12}  p90 {:>12}",
@@ -126,6 +141,34 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Look up a recorded result by exact name.
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Write every recorded result — plus caller-supplied derived fields —
+    /// to `BENCH_<target>.json` at the repo root, so the perf trajectory
+    /// is tracked commit over commit. The directory can be overridden
+    /// with `FADMM_BENCH_DIR` (used by tests); the default resolves the
+    /// repo root relative to this crate at compile time.
+    pub fn write_json(&self, target: &str, extra: Vec<(&str, Json)>)
+                      -> crate::error::Result<PathBuf> {
+        let dir = std::env::var("FADMM_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(".."));
+        let path = dir.join(format!("BENCH_{target}.json"));
+        let mut fields = vec![
+            ("target", s(target)),
+            ("budget_secs", num(self.budget_secs)),
+            ("results", arr(self.results.iter().map(BenchResult::to_json).collect())),
+        ];
+        fields.extend(extra);
+        let doc = obj(fields);
+        std::fs::write(&path, doc.to_string())
+            .map_err(|e| Error::io(format!("writing {}", path.display()), e))?;
+        Ok(path)
+    }
 }
 
 #[cfg(test)]
@@ -140,5 +183,30 @@ mod tests {
         });
         assert!(r.iters > 0);
         assert!(r.mean_ns > 0.0);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let dir = std::env::temp_dir().join("fadmm_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::env::set_var("FADMM_BENCH_DIR", &dir);
+        let mut b = Bencher { budget_secs: 0.02, warmup_secs: 0.0, results: vec![] };
+        b.bench("alpha", || {
+            black_box(black_box(3u64) * 7);
+        });
+        let path = b
+            .write_json("unit_test", vec![("note", super::super::json::s("ok"))])
+            .unwrap();
+        std::env::remove_var("FADMM_BENCH_DIR");
+        assert!(path.ends_with("BENCH_unit_test.json"));
+        let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("target").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(doc.get("note").unwrap().as_str(), Some("ok"));
+        let results = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("alpha"));
+        assert!(results[0].get("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        assert!(b.result("alpha").is_some());
+        assert!(b.result("beta").is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,9 +1,10 @@
 //! Small self-contained utilities.
 //!
-//! The offline build environment ships only the `xla` crate's dependency
-//! closure, so the usual ecosystem crates (rand, serde, csv, proptest,
-//! criterion) are re-implemented here at the minimal scale this project
-//! needs. Each submodule is independently unit-tested.
+//! The offline build environment has no registry access, so the default
+//! build carries zero external dependencies (the `xla` backend is
+//! feature-gated) and the usual ecosystem crates (rand, serde, csv,
+//! proptest, criterion) are re-implemented here at the minimal scale this
+//! project needs. Each submodule is independently unit-tested.
 
 pub mod bench;
 pub mod csv;

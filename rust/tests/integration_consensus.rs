@@ -121,14 +121,14 @@ fn threaded_and_sequential_reach_same_optimum() {
                                      });
     let threaded = runner
         .run(Arc::new(move |i| {
-            // regenerate the same deterministic problem inside the thread
+            // regenerate the same deterministic problem inside the worker
             let mut rng = Pcg::seed(23);
             let mut nodes: Vec<QuadraticNode> = Vec::new();
             for _ in 0..8 {
                 nodes.push(QuadraticNode::random(3, &mut rng));
             }
             nodes.swap_remove(i)
-        }), |_, _| 0.0)
+        }))
         .unwrap();
 
     assert!(max_err(&sequential.thetas, &opt) < 1e-3);

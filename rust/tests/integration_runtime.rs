@@ -1,7 +1,11 @@
 //! XLA artifacts vs the native Rust oracle — the cross-layer correctness
 //! contract: ref.py (jnp) == Pallas kernel == lowered HLO == dppca::em.
 //!
-//! Requires `make artifacts` (skipped with a loud message otherwise).
+//! Requires `make artifacts` (skipped with a loud message otherwise) and a
+//! build with the `xla` cargo feature (the whole file is compiled out of
+//! the default offline build).
+
+#![cfg(feature = "xla")]
 
 use fadmm::dppca::{Moments, PpcaParams};
 use fadmm::linalg::Mat;
