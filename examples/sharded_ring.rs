@@ -6,8 +6,11 @@
 //! Each node holds a private strongly convex quadratic; the network
 //! agrees on the global minimizer through consensus ADMM with the
 //! paper's ADMM-AP adaptive penalty. The sharded runner exchanges
-//! parameters through a zero-copy double-buffered arena, so the per-node
-//! cost is just the local solve plus three pool barriers per iteration.
+//! parameters through a zero-copy double-buffered arena — solvers write
+//! θ^{t+1} straight into it via `solve_into`, nodes are RCM-relabeled so
+//! neighbours co-locate within a shard, and a steady-state iteration
+//! performs zero heap allocations — so the per-node cost is just the
+//! local solve plus three pool barriers per iteration.
 //!
 //!     cargo run --release --example sharded_ring
 

@@ -9,13 +9,17 @@
 //!
 //! Also proves the scale claim with 256- and 1024-node ring runs that the
 //! thread-per-node design (one OS thread + per-neighbour `Vec` clones per
-//! node) was never able to handle, and writes the machine-readable
-//! `BENCH_coordinator.json` at the repo root.
+//! node) was never able to handle, measures the hot loop's allocation
+//! hygiene with a counting global allocator (phase A must perform zero
+//! allocations; a whole steady-state iteration must too), and writes the
+//! machine-readable `BENCH_coordinator.json` at the repo root.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use fadmm::consensus::solvers::QuadraticNode;
-use fadmm::consensus::{Engine, EngineConfig};
+use fadmm::consensus::{Engine, EngineConfig, LocalSolver};
 use fadmm::coordinator::{ShardedConfig, ShardedRunner, SolverFactory};
 use fadmm::graph::Topology;
 use fadmm::penalty::SchemeKind;
@@ -26,6 +30,38 @@ use fadmm::util::rng::Pcg;
 const ITERS: usize = 200;
 const SCALE_ITERS: usize = 50;
 const DIM: usize = 4;
+
+/// Counting allocator: lets the bench assert the hot loop's zero-alloc
+/// claim instead of taking it on faith. Counts allocation *events*
+/// (alloc + realloc); frees are uninstrumented on purpose.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn allocs_during(f: impl FnOnce()) -> u64 {
+    let before = ALLOCATIONS.load(Ordering::SeqCst);
+    f();
+    ALLOCATIONS.load(Ordering::SeqCst) - before
+}
 
 fn quad_factory() -> SolverFactory<QuadraticNode> {
     Arc::new(|i| {
@@ -108,6 +144,44 @@ fn main() {
         ])));
     }
 
+    println!("== allocation hygiene (counting global allocator) ==");
+    {
+        // phase A micro-proof: a warm solver's solve_into must not touch
+        // the allocator at all (it is handed the arena block directly)
+        let mut rng = Pcg::seed(3);
+        let mut solver = QuadraticNode::random(DIM, &mut rng);
+        let theta = rng.normal_vec(DIM);
+        let lambda = vec![0.0; DIM];
+        let eta_wsum: Vec<f64> = theta.iter().map(|v| 2.0 * 20.0 * v).collect();
+        let mut out = vec![0.0; DIM];
+        solver.solve_into(&theta, &lambda, 20.0, &eta_wsum, &mut out); // warm scratch
+        let solve_allocs = allocs_during(|| {
+            for _ in 0..1000 {
+                solver.solve_into(&theta, &lambda, 20.0, &eta_wsum, &mut out);
+            }
+        });
+        black_box(out[0]);
+        println!("  phase A: {solve_allocs} allocations across 1000 solve_into calls");
+        assert_eq!(solve_allocs, 0, "phase A (solve_into) must be allocation-free");
+
+        // whole-iteration steady state: two identical runs differing only
+        // in iteration count — the delta isolates per-iteration allocs
+        // (startup: threads, solvers, arena; all identical across runs)
+        let run_allocs =
+            |iters: usize| allocs_during(|| { black_box(sharded_run(64, Topology::Ring, iters)); });
+        let _ = run_allocs(8); // warm-up run (first-touch effects)
+        let base = run_allocs(40);
+        let doubled = run_allocs(80);
+        let per_iter = (doubled as f64 - base as f64) / 40.0;
+        println!("  steady state: {per_iter:.2} allocations per iteration \
+                  (40-iter run: {base}, 80-iter run: {doubled})");
+        assert_eq!(per_iter, 0.0, "a steady-state iteration must be allocation-free");
+        extra.push(("allocation", obj(vec![
+            ("phase_a_allocs_per_1000_solves", num(solve_allocs as f64)),
+            ("steady_state_allocs_per_iter", num(per_iter)),
+        ])));
+    }
+
     println!("== scale (ring, ADMM-AP — thread-per-node could not run these) ==");
     let mut scale_fields: Vec<(&str, Json)> = Vec::new();
     for n in [256usize, 1024] {
@@ -122,10 +196,18 @@ fn main() {
         });
         let report = last_report.expect("bench ran at least once");
         assert_eq!(report.iterations, SCALE_ITERS, "scale run must complete");
+        let seq_ns = b.result(&seq_name).unwrap().mean_ns;
+        let sharded_ns = b.result(&sharded_name).unwrap().mean_ns;
+        // per-iteration coordination overhead at scale — the number the
+        // ci.sh bench regression gate tracks commit over commit
+        let overhead = (sharded_ns - seq_ns) / SCALE_ITERS as f64;
+        println!("  n={n}: sharded overhead/iter {overhead:.0}ns over the \
+                  sequential floor");
         let key = if n == 256 { "ring_256" } else { "ring_1024" };
         scale_fields.push((key, obj(vec![
-            ("sequential_mean_ns", num(b.result(&seq_name).unwrap().mean_ns)),
-            ("sharded_mean_ns", num(b.result(&sharded_name).unwrap().mean_ns)),
+            ("sequential_mean_ns", num(seq_ns)),
+            ("sharded_mean_ns", num(sharded_ns)),
+            ("coordination_overhead_sharded_ns_per_iter", num(overhead)),
             ("workers", num(report.workers as f64)),
             ("run", report.recorder.summary_json()),
         ])));

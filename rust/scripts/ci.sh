@@ -42,6 +42,57 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench bench_coordinator
   FADMM_BENCH_FAST=1 FADMM_BENCH_DIR="$smoke_dir" \
     cargo bench --bench bench_node_update
+
+  # ---- bench regression gate -----------------------------------------
+  # Compare the freshly measured per-iteration coordination overhead
+  # against the committed BENCH_coordinator.json at the repo root. Fails
+  # when the fresh overhead regresses by more than FADMM_BENCH_GATE_PCT
+  # percent (default 50 — fast-mode smoke numbers are noisy; tighten for
+  # full-budget runs). Skips gracefully when there is no committed
+  # baseline, no fresh JSON, or no python3.
+  echo "== bench regression gate =="
+  baseline="../BENCH_coordinator.json"
+  fresh="$smoke_dir/BENCH_coordinator.json"
+  if [[ ! -f "$baseline" ]]; then
+    echo "bench gate: no committed BENCH_coordinator.json baseline; skipping"
+  elif [[ ! -f "$fresh" ]]; then
+    echo "bench gate: bench wrote no fresh JSON; skipping"
+  elif ! command -v python3 >/dev/null 2>&1; then
+    echo "bench gate: python3 unavailable; skipping"
+  else
+    python3 - "$baseline" "$fresh" "${FADMM_BENCH_GATE_PCT:-50}" <<'PY'
+import json, sys
+
+base = json.load(open(sys.argv[1]))
+fresh = json.load(open(sys.argv[2]))
+pct = float(sys.argv[3])
+
+def overhead(doc, key):
+    try:
+        v = doc["scale"][key]["coordination_overhead_sharded_ns_per_iter"]
+        return float(v)
+    except (KeyError, TypeError, ValueError):
+        return None
+
+failures = []
+for key in ("ring_256", "ring_1024"):
+    b, f = overhead(base, key), overhead(fresh, key)
+    if b is None or f is None:
+        print(f"bench gate: {key}: overhead field missing (skipping entry)")
+        continue
+    if b <= 0:
+        print(f"bench gate: {key}: baseline overhead {b:.0f}ns <= 0 (skipping entry)")
+        continue
+    delta = (f - b) / b * 100.0
+    print(f"bench gate: {key}: overhead/iter {f:.0f}ns vs baseline {b:.0f}ns "
+          f"({delta:+.1f}%)")
+    if delta > pct:
+        failures.append(key)
+if failures:
+    sys.exit(f"bench gate: regression above {pct:.0f}% on: {', '.join(failures)}")
+print("bench gate: OK")
+PY
+  fi
   rm -rf "$smoke_dir"
 fi
 

@@ -79,6 +79,28 @@ pub trait LocalSolver {
     /// where `eta_sum = Σ_j η_ij` and `eta_wsum = Σ_j η_ij (θ_i + θ_j)`.
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64>;
+
+    /// [`LocalSolver::solve`] into a caller-owned buffer — the hot-loop
+    /// variant. The sharded runtime's phase A hands the node's own
+    /// parity-`q` arena block in as `out`, so an overriding solver makes
+    /// the whole solve-and-broadcast step allocation-free.
+    ///
+    /// Contract (asserted by the `solve_into_matches_solve_bitwise`
+    /// property test for every bundled solver):
+    /// * `out.len() == self.dim()`; `out` may hold arbitrary stale data on
+    ///   entry and must be fully overwritten (it is never an input);
+    /// * the written values are **bit-identical** to what `solve` returns
+    ///   for the same arguments — the sequential engine and the sharded
+    ///   runtime use different entry points and must not diverge.
+    ///
+    /// The default forwards to `solve`; closed-form solvers override it to
+    /// reuse internal scratch and allocate nothing per call.
+    fn solve_into(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
+        let new = self.solve(theta, lambda, eta_sum, eta_wsum);
+        debug_assert_eq!(new.len(), out.len());
+        out.copy_from_slice(&new);
+    }
 }
 
 /// Forwarding impl so heterogeneous solver sets can run behind one
@@ -109,6 +131,11 @@ impl<T: LocalSolver + ?Sized> LocalSolver for Box<T> {
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
         (**self).solve(theta, lambda, eta_sum, eta_wsum)
+    }
+
+    fn solve_into(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
+        (**self).solve_into(theta, lambda, eta_sum, eta_wsum, out)
     }
 }
 
@@ -167,11 +194,22 @@ pub struct Engine<S: LocalSolver> {
     nbr_mean_prev: Vec<Vec<f64>>,
     global_mean_prev: Vec<f64>,
     f_self_prev: Vec<f64>,
-    // reusable scratch (hot-loop allocation hygiene, see DESIGN.md §Perf)
+    // reusable scratch (hot-loop allocation hygiene, see DESIGN.md §Perf):
+    // `step` allocates nothing in steady state
     scratch_new_thetas: Vec<Vec<f64>>,
     scratch_eta_wsum: Vec<f64>,
     /// per-neighbour midpoint buffers, grown to max degree and reused
     scratch_rhos: Vec<Vec<f64>>,
+    /// Σ_j η_ij per node, carried from the solve to the residual pass (the
+    /// sharded worker computes η̄ from the same sum — the engines must not
+    /// diverge, isolated nodes included)
+    scratch_eta_sums: Vec<f64>,
+    scratch_nbr_mean: Vec<f64>,
+    scratch_global_mean: Vec<f64>,
+    scratch_primal_norms: Vec<f64>,
+    scratch_dual_norms: Vec<f64>,
+    scratch_f_self: Vec<f64>,
+    scratch_f_nb: Vec<f64>,
 }
 
 impl<S: LocalSolver> Engine<S> {
@@ -206,6 +244,7 @@ impl<S: LocalSolver> Engine<S> {
                     .collect()
             })
             .collect();
+        let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
         Engine {
             rev_slot,
             lambdas: vec![vec![0.0; dim]; n],
@@ -214,10 +253,14 @@ impl<S: LocalSolver> Engine<S> {
             f_self_prev: vec![f64::INFINITY; n],
             scratch_new_thetas: vec![vec![0.0; dim]; n],
             scratch_eta_wsum: vec![0.0; dim],
-            scratch_rhos: {
-                let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
-                vec![vec![0.0; dim]; max_deg]
-            },
+            scratch_rhos: vec![vec![0.0; dim]; max_deg],
+            scratch_eta_sums: vec![0.0; n],
+            scratch_nbr_mean: vec![0.0; dim],
+            scratch_global_mean: vec![0.0; dim],
+            scratch_primal_norms: vec![0.0; n],
+            scratch_dual_norms: vec![0.0; n],
+            scratch_f_self: vec![0.0; n],
+            scratch_f_nb: Vec::with_capacity(max_deg),
             etas,
             schemes,
             thetas,
@@ -251,7 +294,7 @@ impl<S: LocalSolver> Engine<S> {
     /// [`IterStats::app_error`] (the paper's plotted subspace angle).
     pub fn run_with(&mut self, mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64)
                     -> RunReport {
-        let mut recorder = Recorder::new();
+        let mut recorder = Recorder::with_capacity(self.cfg.max_iters);
         let mut checker = ConvergenceChecker::new(self.cfg.tol)
             .with_patience(self.cfg.patience)
             .with_warmup(self.cfg.warmup);
@@ -295,10 +338,10 @@ impl<S: LocalSolver> Engine<S> {
                     self.scratch_eta_wsum[k] += eta * (ti[k] + tj[k]);
                 }
             }
-            let new = self.solvers[i].solve(
-                &self.thetas[i], &self.lambdas[i], eta_sum, &self.scratch_eta_wsum);
-            debug_assert_eq!(new.len(), dim);
-            self.scratch_new_thetas[i] = new;
+            self.scratch_eta_sums[i] = eta_sum;
+            self.solvers[i].solve_into(
+                &self.thetas[i], &self.lambdas[i], eta_sum,
+                &self.scratch_eta_wsum, &mut self.scratch_new_thetas[i]);
         }
 
         // ---- broadcast -----------------------------------------------------
@@ -320,70 +363,83 @@ impl<S: LocalSolver> Engine<S> {
         // ---- residuals (paper eq. 5) ---------------------------------------
         let mut max_primal: f64 = 0.0;
         let mut max_dual: f64 = 0.0;
-        let mut primal_norms = vec![0.0; n];
-        let mut dual_norms = vec![0.0; n];
         for i in 0..n {
-            let deg = self.graph.degree(i).max(1) as f64;
-            let mut nbr_mean = vec![0.0; dim];
+            let inv_deg = 1.0 / self.graph.degree(i).max(1) as f64;
+            self.scratch_nbr_mean.iter_mut().for_each(|x| *x = 0.0);
             for &j in self.graph.neighbors(i) {
                 for k in 0..dim {
-                    nbr_mean[k] += self.thetas[j][k];
+                    self.scratch_nbr_mean[k] += self.thetas[j][k];
                 }
             }
-            nbr_mean.iter_mut().for_each(|x| *x /= deg);
-            let eta_bar = mean_slice(&self.etas[i]).unwrap_or(self.cfg.params.eta0);
+            self.scratch_nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+            // η̄ exactly as the sharded worker derives it (Σ_j η_ij · 1/deg,
+            // hence 0 for an isolated node): the recorded dual-residual
+            // observations must be identical across the two runtimes
+            let eta_bar = self.scratch_eta_sums[i] * inv_deg;
             let mut r2 = 0.0;
             let mut s2 = 0.0;
             for k in 0..dim {
-                let r = self.thetas[i][k] - nbr_mean[k];
-                let s = eta_bar * (nbr_mean[k] - self.nbr_mean_prev[i][k]);
+                let r = self.thetas[i][k] - self.scratch_nbr_mean[k];
+                let s = eta_bar * (self.scratch_nbr_mean[k] - self.nbr_mean_prev[i][k]);
                 r2 += r * r;
                 s2 += s * s;
             }
-            primal_norms[i] = r2.sqrt();
-            dual_norms[i] = s2.sqrt();
-            max_primal = max_primal.max(primal_norms[i]);
-            max_dual = max_dual.max(dual_norms[i]);
-            self.nbr_mean_prev[i] = nbr_mean;
+            self.scratch_primal_norms[i] = r2.sqrt();
+            self.scratch_dual_norms[i] = s2.sqrt();
+            max_primal = max_primal.max(self.scratch_primal_norms[i]);
+            max_dual = max_dual.max(self.scratch_dual_norms[i]);
+            self.nbr_mean_prev[i].copy_from_slice(&self.scratch_nbr_mean);
         }
 
         // ---- global residuals (for the RB reference scheme) ----------------
-        let mut global_mean = vec![0.0; dim];
+        self.scratch_global_mean.iter_mut().for_each(|x| *x = 0.0);
         for th in &self.thetas {
             for k in 0..dim {
-                global_mean[k] += th[k];
+                self.scratch_global_mean[k] += th[k];
             }
         }
-        global_mean.iter_mut().for_each(|x| *x /= n as f64);
+        self.scratch_global_mean.iter_mut().for_each(|x| *x /= n as f64);
         let mut gr2 = 0.0;
         for th in &self.thetas {
             for k in 0..dim {
-                let d = th[k] - global_mean[k];
+                let d = th[k] - self.scratch_global_mean[k];
                 gr2 += d * d;
             }
         }
         let mut gs2 = 0.0;
         for k in 0..dim {
-            let d = global_mean[k] - self.global_mean_prev[k];
+            let d = self.scratch_global_mean[k] - self.global_mean_prev[k];
             gs2 += d * d;
         }
         let eta_global = self.cfg.params.eta0;
         let global_primal = gr2.sqrt();
         let global_dual = eta_global * (n as f64).sqrt() * gs2.sqrt();
-        self.global_mean_prev = global_mean;
+        self.global_mean_prev.copy_from_slice(&self.scratch_global_mean);
 
         // ---- objectives ------------------------------------------------------
         let mut objective = 0.0;
-        let mut f_self = vec![0.0; n];
         for i in 0..n {
-            f_self[i] = self.solvers[i].objective(&self.thetas[i]);
-            objective += f_self[i];
+            let f = self.solvers[i].objective(&self.thetas[i]);
+            self.scratch_f_self[i] = f;
+            objective += f;
+        }
+
+        // ---- η stats (over the η^t used by this iteration's solves) ---------
+        // computed *before* the scheme updates so the recorded curves mean
+        // the same thing in both runtimes (the sharded leader folds η
+        // statistics in phase B, before phase C updates them)
+        let (mut min_eta, mut max_eta, mut sum_eta, mut cnt) =
+            (f64::INFINITY, 0.0f64, 0.0, 0usize);
+        for e in self.etas.iter().flatten() {
+            min_eta = min_eta.min(*e);
+            max_eta = max_eta.max(*e);
+            sum_eta += *e;
+            cnt += 1;
         }
 
         // ---- penalty scheme updates (the paper's contribution) --------------
-        let mut f_nb_buf: Vec<f64> = Vec::new();
         for i in 0..n {
-            f_nb_buf.clear();
+            self.scratch_f_nb.clear();
             if self.schemes[i].needs_neighbor_objectives() {
                 // evaluate f_i at every ρ_ij = (θ_i + θ_j)/2 in one batched
                 // call — the paper uses the bridge estimate instead of θ_j
@@ -396,33 +452,25 @@ impl<S: LocalSolver> Engine<S> {
                     }
                 }
                 self.solvers[i]
-                    .objective_batch_into(&self.scratch_rhos[..deg], &mut f_nb_buf);
+                    .objective_batch_into(&self.scratch_rhos[..deg], &mut self.scratch_f_nb);
             } else {
-                f_nb_buf.resize(self.graph.degree(i), 0.0);
+                self.scratch_f_nb.resize(self.graph.degree(i), 0.0);
             }
             let obs = NodeObservation {
                 t,
-                primal_norm: primal_norms[i],
-                dual_norm: dual_norms[i],
+                primal_norm: self.scratch_primal_norms[i],
+                dual_norm: self.scratch_dual_norms[i],
                 global_primal,
                 global_dual,
-                f_self: f_self[i],
+                f_self: self.scratch_f_self[i],
                 f_self_prev: self.f_self_prev[i],
-                f_neighbors: &f_nb_buf,
+                f_neighbors: &self.scratch_f_nb,
             };
             self.schemes[i].update(&obs, &mut self.etas[i]);
-            self.f_self_prev[i] = f_self[i];
+            self.f_self_prev[i] = self.scratch_f_self[i];
         }
 
         // ---- stats -----------------------------------------------------------
-        let (mut min_eta, mut max_eta, mut sum_eta, mut cnt) =
-            (f64::INFINITY, 0.0f64, 0.0, 0usize);
-        for e in self.etas.iter().flatten() {
-            min_eta = min_eta.min(*e);
-            max_eta = max_eta.max(*e);
-            sum_eta += *e;
-            cnt += 1;
-        }
         IterStats {
             iter: t,
             objective,
@@ -455,14 +503,6 @@ impl<S: LocalSolver> Engine<S> {
                     .sqrt()
             })
             .fold(0.0, f64::max)
-    }
-}
-
-fn mean_slice(xs: &[f64]) -> Option<f64> {
-    if xs.is_empty() {
-        None
-    } else {
-        Some(xs.iter().sum::<f64>() / xs.len() as f64)
     }
 }
 

@@ -3,10 +3,33 @@
 //! These exercise the engine end-to-end without artifacts and back the
 //! quickstart/lasso examples. Each solves the penalized subproblem
 //! `argmin f(θ) + 2λᵀθ + (Ση)‖θ‖² − θᵀw + const`, `w = Ση_ij(θ_i+θ_j)`.
+//!
+//! Every solver implements [`LocalSolver::solve_into`] against internal
+//! scratch (a reusable regularized system plus its Cholesky factor), so
+//! the hot loop performs **zero heap allocations** per solve in steady
+//! state; `solve` is a thin allocating wrapper around the same code path,
+//! which makes the two bit-identical by construction. Objectives are
+//! likewise accumulated row-wise without materializing residual vectors.
 
 use super::LocalSolver;
 use crate::linalg::{Cholesky, Mat};
 use crate::util::rng::Pcg;
+
+/// ½‖Aθ − b‖² accumulated row-wise (no residual vector materialized);
+/// shared by the least-squares-flavoured objectives below.
+fn half_ssq_residual(a: &Mat, b: &[f64], theta: &[f64]) -> f64 {
+    let mut acc = 0.0;
+    for r in 0..a.rows() {
+        let row = a.row(r);
+        let mut pred = 0.0;
+        for (x, y) in row.iter().zip(theta) {
+            pred += x * y;
+        }
+        let d = pred - b[r];
+        acc += d * d;
+    }
+    0.5 * acc
+}
 
 /// Distributed least squares: f_i(θ) = ½‖A_iθ − b_i‖².
 pub struct LeastSquaresNode {
@@ -14,12 +37,25 @@ pub struct LeastSquaresNode {
     atb: Vec<f64>,
     a: Mat,
     b: Vec<f64>,
+    /// solve_into scratch: regularized normal matrix + its Cholesky factor
+    lhs: Mat,
+    chol: Mat,
 }
 
 impl LeastSquaresNode {
     pub fn new(a: Mat, b: Vec<f64>) -> Self {
         assert_eq!(a.rows(), b.len());
-        LeastSquaresNode { ata: a.t_matmul(&a), atb: a.t_matvec(&b), a, b }
+        let ata = a.t_matmul(&a);
+        let atb = a.t_matvec(&b);
+        let d = ata.rows();
+        LeastSquaresNode {
+            ata,
+            atb,
+            a,
+            b,
+            lhs: Mat::zeros(d, d),
+            chol: Mat::zeros(d, d),
+        }
     }
 }
 
@@ -33,22 +69,31 @@ impl LocalSolver for LeastSquaresNode {
     }
 
     fn objective(&mut self, theta: &[f64]) -> f64 {
-        let r = self.a.matvec(theta);
-        0.5 * r.iter().zip(&self.b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
+        half_ssq_residual(&self.a, &self.b, theta)
     }
 
-    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.solve_into(theta, lambda, eta_sum, eta_wsum, &mut out);
+        out
+    }
+
+    fn solve_into(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
         // (AᵀA + 2Ση·I) θ = Aᵀb − 2λ + w
         let d = self.dim();
-        let mut lhs = self.ata.clone();
+        debug_assert_eq!(out.len(), d);
+        self.lhs.data_mut().copy_from_slice(self.ata.data());
         for i in 0..d {
-            lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
+            self.lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
         }
-        let rhs: Vec<f64> = (0..d)
-            .map(|k| self.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
-            .collect();
-        Cholesky::new(&lhs).expect("LS normal equations SPD").solve_vec(&rhs)
+        for k in 0..d {
+            out[k] = self.atb[k] - 2.0 * lambda[k] + eta_wsum[k];
+        }
+        Cholesky::factor_into(&self.lhs, &mut self.chol)
+            .expect("LS normal equations SPD");
+        Cholesky::solve_in_place(&self.chol, out);
     }
 }
 
@@ -79,17 +124,27 @@ impl LocalSolver for RidgeNode {
         self.inner.objective(theta) + 0.5 * self.omega * l2
     }
 
-    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
-        let d = self.dim();
-        let mut lhs = self.inner.ata.clone();
+        let mut out = vec![0.0; self.dim()];
+        self.solve_into(theta, lambda, eta_sum, eta_wsum, &mut out);
+        out
+    }
+
+    fn solve_into(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
+        let d = self.inner.dim();
+        debug_assert_eq!(out.len(), d);
+        self.inner.lhs.data_mut().copy_from_slice(self.inner.ata.data());
         for i in 0..d {
-            lhs[(i, i)] += self.omega + 2.0 * eta_sum + 1e-12;
+            self.inner.lhs[(i, i)] += self.omega + 2.0 * eta_sum + 1e-12;
         }
-        let rhs: Vec<f64> = (0..d)
-            .map(|k| self.inner.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
-            .collect();
-        Cholesky::new(&lhs).expect("ridge normal equations SPD").solve_vec(&rhs)
+        for k in 0..d {
+            out[k] = self.inner.atb[k] - 2.0 * lambda[k] + eta_wsum[k];
+        }
+        Cholesky::factor_into(&self.inner.lhs, &mut self.inner.chol)
+            .expect("ridge normal equations SPD");
+        Cholesky::solve_in_place(&self.inner.chol, out);
     }
 }
 
@@ -103,18 +158,26 @@ pub struct LassoNode {
     omega: f64,
     /// inner coordinate-descent sweeps per ADMM iteration
     sweeps: usize,
+    /// solve_into scratch: regularized diagonal and linear term
+    diag: Vec<f64>,
+    c: Vec<f64>,
 }
 
 impl LassoNode {
     pub fn new(a: Mat, b: Vec<f64>, omega: f64) -> Self {
         assert!(omega >= 0.0);
+        let ata = a.t_matmul(&a);
+        let atb = a.t_matvec(&b);
+        let d = ata.rows();
         LassoNode {
-            ata: a.t_matmul(&a),
-            atb: a.t_matvec(&b),
+            ata,
+            atb,
             a,
             b,
             omega,
             sweeps: 25,
+            diag: vec![0.0; d],
+            c: vec![0.0; d],
         }
     }
 }
@@ -139,36 +202,41 @@ impl LocalSolver for LassoNode {
     }
 
     fn objective(&mut self, theta: &[f64]) -> f64 {
-        let r = self.a.matvec(theta);
         let l1: f64 = theta.iter().map(|x| x.abs()).sum();
-        0.5 * r.iter().zip(&self.b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>()
-            + self.omega * l1
+        half_ssq_residual(&self.a, &self.b, theta) + self.omega * l1
     }
 
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.solve_into(theta, lambda, eta_sum, eta_wsum, &mut out);
+        out
+    }
+
+    fn solve_into(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
         // minimize ½θᵀQθ − cᵀθ + ω‖θ‖₁ with
-        // Q = AᵀA + 2Ση·I, c = Aᵀb − 2λ + w
+        // Q = AᵀA + 2Ση·I, c = Aᵀb − 2λ + w; warm-started at θ^t
         let d = self.dim();
-        let mut th = theta.to_vec();
+        debug_assert_eq!(out.len(), d);
+        out.copy_from_slice(theta);
         let q = &self.ata;
-        let diag: Vec<f64> = (0..d).map(|k| q[(k, k)] + 2.0 * eta_sum + 1e-12).collect();
-        let c: Vec<f64> = (0..d)
-            .map(|k| self.atb[k] - 2.0 * lambda[k] + eta_wsum[k])
-            .collect();
+        for k in 0..d {
+            self.diag[k] = q[(k, k)] + 2.0 * eta_sum + 1e-12;
+            self.c[k] = self.atb[k] - 2.0 * lambda[k] + eta_wsum[k];
+        }
         for _ in 0..self.sweeps {
             for k in 0..d {
                 // residual correlation excluding coordinate k
                 let mut qk_th = 0.0;
                 for j in 0..d {
                     if j != k {
-                        qk_th += q[(k, j)] * th[j];
+                        qk_th += q[(k, j)] * out[j];
                     }
                 }
-                th[k] = soft_threshold(c[k] - qk_th, self.omega) / diag[k];
+                out[k] = soft_threshold(self.c[k] - qk_th, self.omega) / self.diag[k];
             }
         }
-        th
     }
 }
 
@@ -177,13 +245,17 @@ impl LocalSolver for LassoNode {
 pub struct QuadraticNode {
     pub p: Mat,
     pub q: Vec<f64>,
+    /// solve_into scratch: regularized system + its Cholesky factor
+    lhs: Mat,
+    chol: Mat,
 }
 
 impl QuadraticNode {
     pub fn new(p: Mat, q: Vec<f64>) -> Self {
         assert_eq!(p.rows(), p.cols());
         assert_eq!(p.rows(), q.len());
-        QuadraticNode { p, q }
+        let d = p.rows();
+        QuadraticNode { p, q, lhs: Mat::zeros(d, d), chol: Mat::zeros(d, d) }
     }
 
     /// Random SPD instance.
@@ -193,7 +265,7 @@ impl QuadraticNode {
         for i in 0..dim {
             p[(i, i)] += 1.0;
         }
-        QuadraticNode { p, q: rng.normal_vec(dim) }
+        QuadraticNode::new(p, rng.normal_vec(dim))
     }
 
     /// Centralized optimum of Σ_i f_i for a set of nodes.
@@ -221,22 +293,40 @@ impl LocalSolver for QuadraticNode {
     }
 
     fn objective(&mut self, theta: &[f64]) -> f64 {
-        let pt = self.p.matvec(theta);
-        0.5 * crate::linalg::Mat::col_vec(theta).fro_dot(&Mat::col_vec(&pt))
-            - theta.iter().zip(&self.q).map(|(a, b)| a * b).sum::<f64>()
+        // ½θᵀPθ − qᵀθ, accumulated row-wise (no Pθ vector)
+        let d = self.q.len();
+        let mut quad = 0.0;
+        for r in 0..d {
+            let row = self.p.row(r);
+            let mut pr = 0.0;
+            for (x, y) in row.iter().zip(theta) {
+                pr += x * y;
+            }
+            quad += theta[r] * pr;
+        }
+        0.5 * quad - theta.iter().zip(&self.q).map(|(a, b)| a * b).sum::<f64>()
     }
 
-    fn solve(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+    fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.solve_into(theta, lambda, eta_sum, eta_wsum, &mut out);
+        out
+    }
+
+    fn solve_into(&mut self, _theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
         // (P + 2Ση·I) θ = q − 2λ + w
         let d = self.dim();
-        let mut lhs = self.p.clone();
+        debug_assert_eq!(out.len(), d);
+        self.lhs.data_mut().copy_from_slice(self.p.data());
         for i in 0..d {
-            lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
+            self.lhs[(i, i)] += 2.0 * eta_sum + 1e-12;
         }
-        let rhs: Vec<f64> = (0..d)
-            .map(|k| self.q[k] - 2.0 * lambda[k] + eta_wsum[k])
-            .collect();
-        Cholesky::new(&lhs).expect("quadratic SPD").solve_vec(&rhs)
+        for k in 0..d {
+            out[k] = self.q[k] - 2.0 * lambda[k] + eta_wsum[k];
+        }
+        Cholesky::factor_into(&self.lhs, &mut self.chol).expect("quadratic SPD");
+        Cholesky::solve_in_place(&self.chol, out);
     }
 }

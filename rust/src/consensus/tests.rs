@@ -76,6 +76,40 @@ fn engine_is_deterministic() {
 }
 
 #[test]
+fn solve_into_matches_solve_bitwise() {
+    // the trait contract: solve_into (the arena hot path) must be
+    // bit-identical to solve for every bundled solver, including on a
+    // reused/dirty output buffer and warm internal scratch
+    prop::check("solve_into ≡ solve for every bundled solver", |rng| {
+        let dim = 2 + rng.below(4);
+        let rows = dim + 2 + rng.below(6);
+        let a = Mat::randn(rows, dim, rng);
+        let b: Vec<f64> = (0..rows).map(|_| rng.normal()).collect();
+        let mut solvers: Vec<Box<dyn LocalSolver>> = vec![
+            Box::new(LeastSquaresNode::new(a.clone(), b.clone())),
+            Box::new(RidgeNode::new(a.clone(), b.clone(), rng.range(0.0, 2.0))),
+            Box::new(LassoNode::new(a.clone(), b.clone(), rng.range(0.0, 2.0))),
+            Box::new(QuadraticNode::random(dim, rng)),
+        ];
+        for s in solvers.iter_mut() {
+            let theta = rng.normal_vec(dim);
+            let lambda = rng.normal_vec(dim);
+            let eta_sum = rng.range(0.1, 50.0);
+            let eta_wsum = rng.normal_vec(dim);
+            let direct = s.solve(&theta, &lambda, eta_sum, &eta_wsum);
+            let mut buffered = vec![f64::NAN; dim]; // stale contents allowed
+            s.solve_into(&theta, &lambda, eta_sum, &eta_wsum, &mut buffered);
+            assert_eq!(direct, buffered);
+            // again through the now-warm scratch
+            let direct2 = s.solve(&theta, &lambda, eta_sum, &eta_wsum);
+            s.solve_into(&theta, &lambda, eta_sum, &eta_wsum, &mut buffered);
+            assert_eq!(direct2, buffered);
+            assert_eq!(direct, direct2, "solve must be stateless across calls");
+        }
+    });
+}
+
+#[test]
 fn multipliers_sum_to_zero_under_fixed_penalty() {
     // with symmetric constant η, λ updates are antisymmetric across each
     // edge, so Σ_i λ_i must remain 0 throughout

@@ -21,14 +21,18 @@
 //!
 //! ```text
 //! phase A  each worker, each owned node i:
-//!            solve on θ^t, η^t  →  write θ^{t+1} into the write buffer
+//!            solve on θ^t, η^t  →  solve_into writes θ^{t+1} directly
+//!            into the node's write-parity arena block (no per-call Vec)
 //! ── barrier 1 (epoch swap: every θ^{t+1} visible) ──────────────────────
 //! phase B  λ update (symmetrized η̄ from own η^t + arena η^t_{j→i}),
 //!          residuals, objectives  →  per-shard partial reduction
-//!          (Σf, max‖r‖, max‖s‖, η min/mean/max, Σθ), node order
+//!          (Σf, max‖r‖, max‖s‖, η min/mean/max, Σθ, Σ‖θ−m_shard‖²),
+//!          node order
 //! ── barrier 2 (all partials published) ─────────────────────────────────
-//! fold     worker 0 combines partials in shard order, derives global
-//!          residuals + convergence verdict, runs the app metric
+//! fold     worker 0 combines the W partials in shard order — O(W·dim),
+//!          global residuals derive from the folded centered statistics
+//!          (Chan-style mean/spread combination; no per-node rescan) —
+//!          checks convergence, runs the app metric
 //! ── barrier 3 (verdict visible) ────────────────────────────────────────
 //! phase C  penalty-scheme update → publish η^{t+1}; stop if told to
 //! ```
@@ -37,16 +41,49 @@
 //! λ step needs its neighbours' *iteration-t* penalties while those
 //! neighbours may already be writing their iteration-`t+1` values.
 //!
+//! ## Allocation-free hot loop
+//!
+//! In steady state one full iteration performs **zero heap allocations**
+//! (asserted by `bench_coordinator`'s counting allocator): phase A writes
+//! through [`crate::consensus::LocalSolver::solve_into`] into the arena,
+//! phase B reuses per-worker scratch and per-node buffers, the fold
+//! combines fixed-size partials into a pre-sized recorder, and phase C's
+//! schemes reuse per-node τ buffers. Handing the arena block to the
+//! solver is sound because the `&mut [f64]` aliases nothing the solver
+//! can reach: it is the owner's parity-`q` block, written by exactly one
+//! worker during phase A while every phase-A *read* (θ^t, λ, scratch)
+//! lives in the opposite-parity buffer or in worker-private state, and
+//! `solve_into` must fully overwrite it, so stale θ^{t−1} bytes are never
+//! observable.
+//!
+//! ## Locality-aware sharding
+//!
+//! By default the runner relabels nodes with reverse Cuthill–McKee
+//! ([`crate::graph::rcm_order`], [`ShardedConfig::relabel`]) before the
+//! contiguous degree-weighted split, so neighbours receive nearby ids and
+//! phase-B arena reads stay mostly shard-local instead of bouncing cache
+//! lines between workers. The permutation is transparent: solver
+//! factories, RNG streams, app-metric snapshots and `RunnerReport::thetas`
+//! are all keyed by the caller's original node ids. Relabeling changes
+//! only shard ownership and the sequential visit order — i.e. the
+//! floating-point *grouping* of leader-side reductions — never any
+//! node-level arithmetic (θ⁰ seeding stays keyed to original ids).
+//!
 //! ## Determinism
 //!
 //! Every node's computation depends only on neighbour parameters at
 //! fixed epochs, so results are independent of thread timing. Shards are
 //! contiguous and partials combine in shard order, so leader aggregates
-//! visit nodes in sequential order; their floating-point grouping (and
-//! nothing else) depends on the worker count, which [`RunnerReport`]
-//! records. With a fixed iteration budget the final parameters are
-//! bit-identical for *any* worker count (asserted in the runner tests);
-//! repeated runs at the same worker count are bit-identical in full.
+//! visit nodes in (relabeled) sequential order; their floating-point
+//! grouping (and nothing else) depends on the worker count and the
+//! relabeling policy, both recorded/configured on [`ShardedConfig`].
+//! With a fixed iteration budget the final parameters are bit-identical
+//! for *any* worker count (asserted in the runner tests) for every
+//! *decentralized* scheme — node updates never read the leader's folds.
+//! The one exception is the non-decentralized RB reference scheme, whose
+//! η updates consume the folded global residuals and can therefore pick
+//! up last-ulp grouping differences across worker counts. Repeated runs
+//! at the same configuration are bit-identical in full for all schemes.
 //!
 //! PJRT handles are not `Send`, so each worker constructs the solvers
 //! for its own shard through the [`SolverFactory`]; sharded runs default

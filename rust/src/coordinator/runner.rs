@@ -16,7 +16,7 @@ use super::shard::{worker_main, LeadOutcome, LeadState, ShardPartial, WorkerCtx,
                    WorkerError};
 use crate::consensus::LocalSolver;
 use crate::error::{Error, Result};
-use crate::graph::{shard_ranges, Graph, NodeId};
+use crate::graph::{rcm_order, relabel_graph, shard_ranges, Graph, NodeId, Relabel};
 use crate::metrics::Recorder;
 use crate::penalty::{SchemeKind, SchemeParams};
 
@@ -37,6 +37,11 @@ pub struct ShardedConfig {
     /// Worker-pool size; 0 (the default) resolves to
     /// `min(nodes, available_parallelism)`.
     pub workers: usize,
+    /// Node-relabeling policy applied before sharding (default: RCM, so
+    /// neighbours co-locate and phase-B arena reads stay shard-local).
+    /// Transparent to callers: factories, metrics and reported θ all use
+    /// the original node ids regardless.
+    pub relabel: Relabel,
 }
 
 /// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
@@ -54,6 +59,7 @@ impl Default for ShardedConfig {
             max_iters: 1000,
             seed: 0,
             workers: 0,
+            relabel: Relabel::default(),
         }
     }
 }
@@ -135,10 +141,24 @@ impl ShardedRunner {
         let dim = factory(0).dim();
 
         let workers = self.workers();
-        let ranges = shard_ranges(&self.graph, workers);
+
+        // locality-aware sharding: relabel so neighbours co-locate before
+        // the contiguous split. `order[shard_id] = original_id`; the
+        // permutation is undone at every user-visible surface below.
+        let order: Vec<NodeId> = match self.cfg.relabel {
+            Relabel::Identity => (0..n).collect(),
+            Relabel::Rcm => rcm_order(&self.graph),
+        };
+        let relabeled: Option<Graph> = match self.cfg.relabel {
+            Relabel::Identity => None,
+            Relabel::Rcm => Some(relabel_graph(&self.graph, &order)?),
+        };
+        let graph: &Graph = relabeled.as_ref().unwrap_or(&self.graph);
+
+        let ranges = shard_ranges(graph, workers);
         debug_assert_eq!(ranges.len(), workers);
 
-        let arena = ParamArena::new(&self.graph, dim);
+        let arena = ParamArena::new(graph, dim);
         let barrier = PhaseBarrier::new(workers);
         let partials = Mutex::new(vec![ShardPartial::new(dim); workers]);
         let verdict = Mutex::new(Verdict {
@@ -148,11 +168,12 @@ impl ShardedRunner {
             global_dual: f64::INFINITY,
         });
         let ctx = WorkerCtx {
-            graph: &self.graph,
+            graph,
             arena: &arena,
             barrier: &barrier,
             partials: &partials,
             verdict: &verdict,
+            order: &order,
             cfg: self.cfg,
         };
 
@@ -210,12 +231,13 @@ impl ShardedRunner {
         let lead = outcome
             .ok_or_else(|| Error::Config("sharded runner: leader returned no outcome".into()))?;
 
-        // final parameters sit in the buffer written at the last iteration
+        // final parameters sit in the buffer written at the last
+        // iteration; un-permute so thetas[i] is the caller's node i
         let parity = lead.iterations & 1;
         let mut thetas = vec![vec![0.0; dim]; n];
-        for (i, th) in thetas.iter_mut().enumerate() {
+        for (i, &orig) in order.iter().enumerate() {
             // Safety: every worker has been joined; no concurrent access.
-            th.copy_from_slice(unsafe { arena.theta(parity, i) });
+            thetas[orig].copy_from_slice(unsafe { arena.theta(parity, i) });
         }
         Ok(RunnerReport {
             iterations: lead.iterations,
@@ -242,7 +264,7 @@ mod tests {
     use super::*;
     use crate::consensus::solvers::QuadraticNode;
     use crate::consensus::{Engine, EngineConfig};
-    use crate::graph::Topology;
+    use crate::graph::{random_connected, Topology};
     use crate::linalg::Mat;
     use crate::util::rng::Pcg;
 
@@ -397,6 +419,116 @@ mod tests {
     }
 
     #[test]
+    fn rcm_and_identity_match_engine_on_random_graph() {
+        // the satellite parity oracle: on a random connected graph, every
+        // scheme lands on the centralized optimum under RCM relabeling,
+        // under identity labeling, and in the sequential Engine
+        let mut grng = Pcg::seed(1234);
+        let graph = random_connected(10, 0.35, &mut grng).unwrap();
+        for scheme in SchemeKind::ALL {
+            for relabel in [Relabel::Rcm, Relabel::Identity] {
+                let (factory, opt) = quad_factory(10, 2, 91);
+                let runner = ShardedRunner::new(graph.clone(), ShardedConfig {
+                    scheme,
+                    tol: 1e-10,
+                    max_iters: 1500,
+                    relabel,
+                    ..Default::default()
+                });
+                let report = runner.run(factory).unwrap();
+                assert!(max_err(&report.thetas, &opt) < 5e-3,
+                        "sharded {scheme:?}/{relabel:?}: {}",
+                        max_err(&report.thetas, &opt));
+            }
+            let mut rng = Pcg::seed(91);
+            let nodes: Vec<QuadraticNode> =
+                (0..10).map(|_| QuadraticNode::random(2, &mut rng)).collect();
+            let (_, opt) = quad_factory(10, 2, 91);
+            let mut engine = Engine::new(graph.clone(), nodes, EngineConfig {
+                scheme,
+                tol: 1e-10,
+                max_iters: 1500,
+                ..Default::default()
+            });
+            let sequential = engine.run();
+            assert!(max_err(&sequential.thetas, &opt) < 5e-3,
+                    "engine {scheme:?}: {}", max_err(&sequential.thetas, &opt));
+        }
+    }
+
+    #[test]
+    fn relabeling_is_transparent_in_reported_thetas() {
+        // with a zero iteration budget the report returns each node's θ⁰,
+        // which is seeded by *original* node id — so the reported vector
+        // must be bit-identical under any relabeling policy
+        let run = |relabel| {
+            let (factory, _) = quad_factory(9, 3, 41);
+            ShardedRunner::new(
+                Topology::Ring.build(9).unwrap(),
+                ShardedConfig { max_iters: 0, relabel, ..Default::default() },
+            )
+            .run(factory)
+            .unwrap()
+        };
+        let id = run(Relabel::Identity);
+        let rcm = run(Relabel::Rcm);
+        assert_eq!(id.thetas, rcm.thetas);
+        assert_eq!(id.iterations, 0);
+    }
+
+    #[test]
+    fn isolated_node_dual_matches_engine() {
+        // degree-0 η̄ is 0 in BOTH runtimes (η̄ = Ση·(1/deg.max(1)); the
+        // engine used to fall back to η⁰) — the recorded dual-residual
+        // observations must agree bit-for-bit
+        let (factory, _) = quad_factory(1, 3, 9);
+        let runner = ShardedRunner::new(
+            Graph::new(1, &[]).unwrap(),
+            ShardedConfig { max_iters: 20, tol: 0.0, ..Default::default() },
+        );
+        let sharded = runner.run(factory).unwrap();
+        let mut rng = Pcg::seed(9);
+        let nodes = vec![QuadraticNode::random(3, &mut rng)];
+        let mut engine = Engine::new(Graph::new(1, &[]).unwrap(), nodes,
+                                     EngineConfig { max_iters: 20, tol: 0.0,
+                                                    ..Default::default() });
+        let sequential = engine.run();
+        assert_eq!(sequential.recorder.stats.len(), sharded.recorder.stats.len());
+        for (a, b) in sequential.recorder.stats.iter().zip(&sharded.recorder.stats) {
+            assert_eq!(a.max_dual, b.max_dual, "iter {}", a.iter);
+            assert_eq!(a.max_dual, 0.0, "no neighbours ⇒ zero dual residual");
+        }
+    }
+
+    #[test]
+    fn both_runtimes_record_pre_update_eta_stats() {
+        // IterStats[t] carries the η^t used by iteration t's solves in
+        // BOTH runtimes; under an adaptive scheme that means iteration 0
+        // must record exactly η⁰ everywhere (the update lands in stats[1])
+        let eta0 = SchemeParams::default().eta0;
+        let (factory, _) = quad_factory(6, 2, 77);
+        let runner = ShardedRunner::new(
+            Topology::Ring.build(6).unwrap(),
+            ShardedConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 3,
+                            ..Default::default() },
+        );
+        let sharded = runner.run(factory).unwrap();
+        let mut rng = Pcg::seed(77);
+        let nodes: Vec<QuadraticNode> =
+            (0..6).map(|_| QuadraticNode::random(2, &mut rng)).collect();
+        let mut engine = Engine::new(Topology::Ring.build(6).unwrap(), nodes,
+                                     EngineConfig { scheme: SchemeKind::Ap,
+                                                    tol: 0.0, max_iters: 3,
+                                                    ..Default::default() });
+        let sequential = engine.run();
+        for stats in [&sharded.recorder.stats, &sequential.recorder.stats] {
+            assert_eq!(stats[0].mean_eta, eta0);
+            assert_eq!(stats[0].min_eta, eta0);
+            assert_eq!(stats[0].max_eta, eta0);
+        }
+    }
+
+    #[test]
     fn isolated_node_runs_without_nan() {
         // a degree-0 node exercises every deg.max(1) / eta_count == 0
         // guard in the residual and η-statistics paths
@@ -429,8 +561,11 @@ mod tests {
     fn worker_count_does_not_change_node_results() {
         // node-level computation is independent of the shard layout; with
         // a fixed iteration count the final parameters are bit-identical
-        // for any worker count (leader reductions only feed the stop
-        // check, disabled here via tol = 0)
+        // for any worker count. Holds for every decentralized scheme (Ap
+        // here) — leader folds feed only the stop check (disabled via
+        // tol = 0); the non-decentralized Rb reference also reads the
+        // folded global residuals and is exempt from this guarantee (see
+        // the module docs on determinism).
         let run = |workers: usize| {
             let (factory, _) = quad_factory(7, 3, 13);
             let runner = ShardedRunner::new(

@@ -33,11 +33,17 @@ pub(crate) enum WorkerError {
 
 /// Everything a worker borrows from the runner for the duration of a run.
 pub(crate) struct WorkerCtx<'a> {
+    /// The (possibly relabeled) graph the pool actually runs on.
     pub graph: &'a Graph,
     pub arena: &'a ParamArena,
     pub barrier: &'a PhaseBarrier,
     pub partials: &'a Mutex<Vec<ShardPartial>>,
     pub verdict: &'a Mutex<Verdict>,
+    /// `order[shard_id] = original_id` — the relabeling permutation
+    /// (identity when relabeling is off). Everything user-visible (solver
+    /// factory, RNG streams, app-metric snapshots, reported θ) is keyed by
+    /// original ids; everything pool-internal by shard ids.
+    pub order: &'a [NodeId],
     pub cfg: ShardedConfig,
 }
 
@@ -54,6 +60,15 @@ pub(crate) struct ShardPartial {
     pub eta_sum: f64,
     pub eta_count: usize,
     pub theta_sum: Vec<f64>,
+    /// Number of nodes in the shard (weight for the mean combination).
+    pub node_count: usize,
+    /// Σ_i ‖θ_i − m_s‖² about the *shard* mean `m_s = theta_sum / n_s` —
+    /// centered, so the leader can combine spreads across shards (Chan
+    /// et al.'s pairwise update) without the catastrophic cancellation a
+    /// raw Σ‖θ‖² would hit at large ‖θ‖. With `theta_sum` these are the
+    /// sufficient statistics for the global primal residual; the leader
+    /// fold never rescans the arena (see [`fold`]).
+    pub centered_sq: f64,
 }
 
 impl ShardPartial {
@@ -67,6 +82,8 @@ impl ShardPartial {
             eta_sum: 0.0,
             eta_count: 0,
             theta_sum: vec![0.0; dim],
+            node_count: 0,
+            centered_sq: 0.0,
         }
     }
 
@@ -79,6 +96,8 @@ impl ShardPartial {
         self.eta_sum = 0.0;
         self.eta_count = 0;
         self.theta_sum.iter_mut().for_each(|x| *x = 0.0);
+        self.node_count = 0;
+        self.centered_sq = 0.0;
     }
 
     /// Copy into a pre-sized slot without reallocating its `theta_sum`.
@@ -91,6 +110,8 @@ impl ShardPartial {
         dst.eta_sum = self.eta_sum;
         dst.eta_count = self.eta_count;
         dst.theta_sum.copy_from_slice(&self.theta_sum);
+        dst.node_count = self.node_count;
+        dst.centered_sq = self.centered_sq;
     }
 }
 
@@ -113,7 +134,7 @@ impl<'m> LeadState<'m> {
             checker: ConvergenceChecker::new(cfg.tol)
                 .with_patience(cfg.patience)
                 .with_warmup(cfg.warmup),
-            recorder: Recorder::new(),
+            recorder: Recorder::with_capacity(cfg.max_iters),
             global_mean_prev: None,
             gmean: Vec::new(),
             metric,
@@ -174,14 +195,17 @@ pub(crate) fn worker_main<S: LocalSolver>(
     let dim = ctx.arena.dim();
 
     // ---- construct solvers + per-node state; publish θ⁰ / η⁰ -------------
+    // solver construction and θ⁰ seeding are keyed by *original* node id
+    // so a relabeled run computes exactly the same per-node trajectories
     let mut nodes: Vec<NodeState<S>> = Vec::with_capacity(range.len());
     let mut max_deg = 0usize;
     for i in range {
-        let mut solver = factory(i);
+        let orig = ctx.order[i];
+        let mut solver = factory(orig);
         assert_eq!(solver.dim(), dim, "homogeneous dims");
         let deg = ctx.graph.degree(i);
         max_deg = max_deg.max(deg);
-        let mut rng = Pcg::new(cfg.seed, i as u64 + 1);
+        let mut rng = Pcg::new(cfg.seed, orig as u64 + 1);
         let theta0 = solver.initial_param(&mut rng);
         assert_eq!(theta0.len(), dim);
         let etas = vec![cfg.params.eta0; deg];
@@ -246,10 +270,14 @@ pub(crate) fn worker_main<S: LocalSolver>(
                 }
             }
             st.eta_sum = eta_sum;
-            let new_theta = st.solver.solve(theta_t, &st.lambda, eta_sum,
-                                            &scratch.eta_wsum);
-            debug_assert_eq!(new_theta.len(), dim);
-            unsafe { ctx.arena.theta_mut(q, st.id) }.copy_from_slice(&new_theta);
+            // Safety: we own st.id and parity-q is this phase's write
+            // buffer; nobody reads it before the epoch-swap barrier, and
+            // it aliases nothing the solver can see (θ^t lives in the
+            // opposite-parity buffer). solve_into overwrites the block in
+            // full, so stale θ^{t−1} contents are never observable.
+            let theta_next = unsafe { ctx.arena.theta_mut(q, st.id) };
+            st.solver.solve_into(theta_t, &st.lambda, eta_sum,
+                                 &scratch.eta_wsum, theta_next);
         }
         ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // epoch swap
 
@@ -322,6 +350,26 @@ pub(crate) fn worker_main<S: LocalSolver>(
                 partial.theta_sum[k] += th_new[k];
             }
         }
+        // second shard-local pass over parity-q: spread about the *shard*
+        // mean. Centering here (instead of folding raw Σ‖θ‖²) keeps the
+        // leader's combined global residual accurate at any ‖θ‖ scale —
+        // the subtraction a raw sum-of-squares needs cancels
+        // catastrophically once ‖θ‖² ≫ spread.
+        partial.node_count = nodes.len();
+        if !nodes.is_empty() {
+            let inv_count = 1.0 / nodes.len() as f64;
+            for k in 0..dim {
+                scratch.nbr_mean[k] = partial.theta_sum[k] * inv_count;
+            }
+            for st in &nodes {
+                // Safety: parity-q θ is stable throughout phase B.
+                let th = unsafe { ctx.arena.theta(q, st.id) };
+                for k in 0..dim {
+                    let d = th[k] - scratch.nbr_mean[k];
+                    partial.centered_sq += d * d;
+                }
+            }
+        }
         {
             let mut slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
             partial.store_into(&mut slots[widx]);
@@ -367,14 +415,21 @@ pub(crate) fn worker_main<S: LocalSolver>(
     }))
 }
 
-/// The leader's serial fold: combine shard partials (in shard order),
-/// derive global residuals, run the app metric + convergence check and
-/// publish the iteration verdict. Runs between the post-stats and
-/// post-verdict barriers, so it may read the whole parity-`q` θ buffer.
+/// The leader's fold: combine the W shard partials (in shard order),
+/// derive global residuals from their sufficient statistics, run the app
+/// metric + convergence check and publish the iteration verdict. Runs
+/// between the post-stats and post-verdict barriers.
+///
+/// O(W·dim + dim) — the fold never touches per-node state. The global
+/// primal residual `Σᵢ‖θᵢ − ḡ‖²` comes from the per-shard *centered*
+/// statistics (n_s, Σθ, Σ‖θ − m_s‖²) combined in shard order with Chan
+/// et al.'s pairwise update, which stays accurate at any ‖θ‖ scale (a
+/// raw Σ‖θ‖² − n‖ḡ‖² subtraction loses all precision once ‖θ‖² ≫
+/// spread). Only the on-demand app-metric snapshot still reads the
+/// parity-`q` arena.
 fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
     let n = ctx.graph.len();
     let dim = ctx.arena.dim();
-    let inv_n = 1.0 / n as f64;
 
     let mut objective = 0.0;
     let mut max_primal: f64 = 0.0;
@@ -387,6 +442,10 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
         lead.gmean.resize(dim, 0.0);
     }
     lead.gmean.iter_mut().for_each(|x| *x = 0.0);
+    // running combination state: after shard s, `lead.gmean` holds the
+    // mean over the first `agg_n` nodes and `gr2` their spread about it
+    let mut agg_n = 0usize;
+    let mut gr2 = 0.0;
     {
         let slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
         for part in slots.iter() {
@@ -397,26 +456,33 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
             eta_max = eta_max.max(part.eta_max);
             eta_sum += part.eta_sum;
             eta_count += part.eta_count;
-            for k in 0..dim {
-                lead.gmean[k] += part.theta_sum[k];
+            if part.node_count == 0 {
+                continue;
             }
+            let nb = part.node_count as f64;
+            let inv_b = 1.0 / nb;
+            if agg_n == 0 {
+                for k in 0..dim {
+                    lead.gmean[k] = part.theta_sum[k] * inv_b;
+                }
+                gr2 = part.centered_sq;
+            } else {
+                let na = agg_n as f64;
+                let inv_tot = 1.0 / (na + nb);
+                let mut delta_sq = 0.0;
+                for k in 0..dim {
+                    let mb = part.theta_sum[k] * inv_b;
+                    let d = mb - lead.gmean[k];
+                    delta_sq += d * d;
+                    lead.gmean[k] = (lead.gmean[k] * na + part.theta_sum[k]) * inv_tot;
+                }
+                gr2 += part.centered_sq + delta_sq * na * nb * inv_tot;
+            }
+            agg_n += part.node_count;
         }
     }
-    lead.gmean.iter_mut().for_each(|x| *x *= inv_n);
-
-    // global residuals (consumed by the RB reference scheme)
-    let mut gr2 = 0.0;
-    {
-        // Safety: between the two barriers no worker writes parity-q θ.
-        let all = unsafe { ctx.arena.theta_all(q) };
-        for i in 0..n {
-            let th = &all[i * dim..(i + 1) * dim];
-            for k in 0..dim {
-                let d = th[k] - lead.gmean[k];
-                gr2 += d * d;
-            }
-        }
-    }
+    debug_assert_eq!(agg_n, n, "every node folded exactly once");
+    let gr2 = gr2.max(0.0);
     // like the Engine, the previous global mean starts at zero (so the
     // t = 0 dual is finite and the Rb trajectory matches the oracle)
     let gs2 = match &lead.global_mean_prev {
@@ -435,16 +501,19 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
         lead.global_mean_prev = Some(lead.gmean.clone());
     }
 
-    // app metric: θ materialized (into a reused snapshot) only on demand
+    // app metric: θ materialized (into a reused snapshot) only on demand,
+    // indexed by *original* node id so relabeling stays invisible
     let app_error = match lead.metric.as_mut() {
         Some(metric) => {
             if lead.snapshot.len() != n {
                 lead.snapshot = vec![vec![0.0; dim]; n];
             }
-            // Safety: as above — stable parity-q reads inside the fold.
+            // Safety: between the post-stats and post-verdict barriers no
+            // worker writes parity-q θ.
             let all = unsafe { ctx.arena.theta_all(q) };
             for i in 0..n {
-                lead.snapshot[i].copy_from_slice(&all[i * dim..(i + 1) * dim]);
+                lead.snapshot[ctx.order[i]]
+                    .copy_from_slice(&all[i * dim..(i + 1) * dim]);
             }
             metric(t, &lead.snapshot)
         }

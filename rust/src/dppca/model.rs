@@ -34,11 +34,21 @@ impl PpcaParams {
 
     /// Flatten as [vec(W) row-major | μ | a].
     pub fn flatten(&self) -> Vec<f64> {
-        let mut out = Vec::with_capacity(Self::flat_dim(self.d(), self.m()));
-        out.extend_from_slice(self.w.data());
-        out.extend_from_slice(&self.mu);
-        out.push(self.a);
+        let mut out = vec![0.0; Self::flat_dim(self.d(), self.m())];
+        self.flatten_into(&mut out);
         out
+    }
+
+    /// [`PpcaParams::flatten`] into a caller-owned buffer (the hot-loop
+    /// variant behind `DppcaSolver::solve_into`: the buffer survives
+    /// across iterations, so steady-state flattening allocates nothing).
+    pub fn flatten_into(&self, out: &mut [f64]) {
+        let dm = self.w.data().len();
+        let d = self.mu.len();
+        assert_eq!(out.len(), dm + d + 1, "flatten_into length");
+        out[..dm].copy_from_slice(self.w.data());
+        out[dm..dm + d].copy_from_slice(&self.mu);
+        out[dm + d] = self.a;
     }
 
     /// Inverse of [`flatten`].

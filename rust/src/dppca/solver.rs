@@ -219,6 +219,13 @@ impl LocalSolver for DppcaSolver {
 
     fn solve(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
              eta_wsum: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; theta.len()];
+        self.solve_into(theta, lambda, eta_sum, eta_wsum, &mut out);
+        out
+    }
+
+    fn solve_into(&mut self, theta: &[f64], lambda: &[f64], eta_sum: f64,
+                  eta_wsum: &[f64], out: &mut [f64]) {
         let p = PpcaParams::unflatten(self.d, self.m, theta);
         let mult = PpcaParams::unflatten(self.d, self.m, lambda);
         let eta_w = PpcaParams::unflatten(self.d, self.m, eta_wsum);
@@ -232,14 +239,26 @@ impl LocalSolver for DppcaSolver {
         };
         match result {
             Ok((p_new, nll)) => {
-                let flat = p_new.flatten();
-                self.last_solve = Some((flat.clone(), nll));
-                flat
+                // refresh the (θ⁺, nll) cache in place where possible so
+                // the flatten layer allocates nothing in steady state
+                match &mut self.last_solve {
+                    Some((flat, cached_nll)) if flat.len() == out.len() => {
+                        p_new.flatten_into(flat);
+                        *cached_nll = nll;
+                        out.copy_from_slice(flat);
+                    }
+                    slot => {
+                        let mut flat = vec![0.0; out.len()];
+                        p_new.flatten_into(&mut flat);
+                        out.copy_from_slice(&flat);
+                        *slot = Some((flat, nll));
+                    }
+                }
             }
             // a failed local solve keeps the previous parameters (the
             // engine's residuals will reflect the stall); this only fires
             // on numerically degenerate foreign input
-            Err(_) => theta.to_vec(),
+            Err(_) => out.copy_from_slice(theta),
         }
     }
 }
@@ -277,6 +296,28 @@ mod tests {
         // force a fresh backend evaluation and compare
         s.last_solve = None;
         let f_direct = s.objective(&new);
+        assert!((f_cached - f_direct).abs() < 1e-9, "{f_cached} vs {f_direct}");
+    }
+
+    #[test]
+    fn solve_into_matches_solve_bitwise() {
+        let backend = shared(NativeBackend::new());
+        let x = sample_block(8, 5, 12);
+        let mut s = DppcaSolver::from_block(x, 2, backend).unwrap();
+        let mut rng = Pcg::seed(4);
+        let theta = s.initial_param(&mut rng);
+        let dim = theta.len();
+        let lambda = vec![0.05; dim];
+        let eta_wsum: Vec<f64> = theta.iter().map(|v| 24.0 * v).collect();
+        let direct = s.solve(&theta, &lambda, 12.0, &eta_wsum);
+        let mut buffered = vec![f64::NAN; dim];
+        s.solve_into(&theta, &lambda, 12.0, &eta_wsum, &mut buffered);
+        assert_eq!(direct, buffered);
+        // the (θ⁺, nll) cache refreshed through the into-path still
+        // short-circuits objective() to the backend's value
+        let f_cached = s.objective(&buffered);
+        s.last_solve = None;
+        let f_direct = s.objective(&buffered);
         assert!((f_cached - f_direct).abs() < 1e-9, "{f_cached} vs {f_direct}");
     }
 

@@ -8,10 +8,12 @@
 
 mod builders;
 mod graph;
+mod relabel;
 mod sharding;
 
 pub use builders::{random_connected, Topology};
 pub use graph::{EdgeId, Graph, NodeId};
+pub use relabel::{bandwidth, rcm_order, relabel_graph, Relabel};
 pub use sharding::shard_ranges;
 
 /// Effective-influence summary of a penalized graph state: for every edge,

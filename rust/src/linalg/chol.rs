@@ -12,11 +12,23 @@ pub struct Cholesky {
 impl Cholesky {
     /// Factor an SPD matrix; fails on non-positive pivots.
     pub fn new(a: &Mat) -> Result<Cholesky> {
+        let mut l = Mat::zeros(a.rows(), a.rows());
+        Cholesky::factor_into(a, &mut l)?;
+        Ok(Cholesky { l })
+    }
+
+    /// Factor an SPD matrix into a caller-owned `n × n` scratch matrix —
+    /// the allocation-free path behind [`Cholesky::new`], for hot loops
+    /// that refactor a same-shape system every iteration. Only the lower
+    /// triangle of `l` is written; stale upper-triangle entries from a
+    /// previous factorization are never read, neither here nor by
+    /// [`Cholesky::solve_in_place`].
+    pub fn factor_into(a: &Mat, l: &mut Mat) -> Result<()> {
         let n = a.rows();
         if a.cols() != n {
             return Err(Error::Shape("cholesky: matrix not square".into()));
         }
-        let mut l = Mat::zeros(n, n);
+        assert_eq!(l.shape(), (n, n), "cholesky: scratch factor shape");
         for i in 0..n {
             for j in 0..=i {
                 let mut sum = a[(i, j)];
@@ -35,7 +47,7 @@ impl Cholesky {
                 }
             }
         }
-        Ok(Cholesky { l })
+        Ok(())
     }
 
     /// The factor L.
@@ -43,26 +55,33 @@ impl Cholesky {
         &self.l
     }
 
-    /// Solve `A x = b` for one right-hand side.
-    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
-        let n = self.l.rows();
-        debug_assert_eq!(b.len(), n);
+    /// Solve `A x = b` in place against a factor written by
+    /// [`Cholesky::factor_into`]: `x` enters holding `b` and leaves
+    /// holding `A⁻¹ b`. Allocation-free.
+    pub fn solve_in_place(l: &Mat, x: &mut [f64]) {
+        let n = l.rows();
+        debug_assert_eq!(x.len(), n);
         // forward: L y = b
-        let mut y = b.to_vec();
         for i in 0..n {
             for k in 0..i {
-                y[i] -= self.l[(i, k)] * y[k];
+                x[i] -= l[(i, k)] * x[k];
             }
-            y[i] /= self.l[(i, i)];
+            x[i] /= l[(i, i)];
         }
         // backward: Lᵀ x = y
         for i in (0..n).rev() {
             for k in (i + 1)..n {
-                y[i] -= self.l[(k, i)] * y[k];
+                x[i] -= l[(k, i)] * x[k];
             }
-            y[i] /= self.l[(i, i)];
+            x[i] /= l[(i, i)];
         }
-        y
+    }
+
+    /// Solve `A x = b` for one right-hand side.
+    pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let mut x = b.to_vec();
+        Cholesky::solve_in_place(&self.l, &mut x);
+        x
     }
 
     /// Solve `A X = B` column-wise.
@@ -131,6 +150,26 @@ mod tests {
             let a = random_spd(n, rng);
             let inv = Cholesky::new(&a).unwrap().inverse();
             assert!(a.matmul(&inv).max_abs_diff(&Mat::eye(n)) < 1e-8);
+        });
+    }
+
+    #[test]
+    fn factor_into_reuses_scratch_bitwise() {
+        // the hot-loop path must match the allocating path exactly, even
+        // when the scratch factor carries a previous factorization
+        prop::check("repeated factor_into ≡ fresh Cholesky::new", |rng| {
+            let n = 1 + rng.below(8);
+            let mut l = Mat::zeros(n, n);
+            for _ in 0..3 {
+                let a = random_spd(n, rng);
+                Cholesky::factor_into(&a, &mut l).unwrap();
+                let fresh = Cholesky::new(&a).unwrap();
+                assert_eq!(l.data(), fresh.l().data());
+                let b = rng.normal_vec(n);
+                let mut x = b.clone();
+                Cholesky::solve_in_place(&l, &mut x);
+                assert_eq!(x, fresh.solve_vec(&b));
+            }
         });
     }
 

@@ -119,6 +119,15 @@ impl Recorder {
         Self::default()
     }
 
+    /// Recorder with the stats buffer pre-sized for a known iteration
+    /// budget, so hot-loop `push`es never reallocate. The pre-size is
+    /// capped so "run until tol" sentinels (`max_iters: usize::MAX`)
+    /// don't eagerly allocate or overflow; past the cap, pushes fall
+    /// back to amortized growth.
+    pub fn with_capacity(iters: usize) -> Self {
+        Recorder { stats: Vec::with_capacity(iters.min(1 << 16)) }
+    }
+
     pub fn push(&mut self, s: IterStats) {
         self.stats.push(s);
     }

@@ -16,8 +16,20 @@
 /// τ = 0 for every edge: the scheme then leaves the penalty at η⁰, which
 /// is the paper's "onus on consensus" regime.
 pub fn tau_from_objectives(f_self: f64, f_neighbors: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(f_neighbors.len());
+    tau_from_objectives_into(f_self, f_neighbors, &mut out);
+    out
+}
+
+/// [`tau_from_objectives`] into a caller-owned buffer — the hot-loop
+/// variant behind the per-node schemes: each scheme owns a τ buffer
+/// pre-sized to its degree and reuses it every iteration, so steady-state
+/// penalty updates allocate nothing.
+pub fn tau_from_objectives_into(f_self: f64, f_neighbors: &[f64], out: &mut Vec<f64>) {
+    out.clear();
     if !f_self.is_finite() || f_neighbors.iter().any(|f| !f.is_finite()) {
-        return vec![0.0; f_neighbors.len()];
+        out.resize(f_neighbors.len(), 0.0);
+        return;
     }
     let mut f_min = f_self;
     let mut f_max = f_self;
@@ -27,11 +39,12 @@ pub fn tau_from_objectives(f_self: f64, f_neighbors: &[f64]) -> Vec<f64> {
     }
     let spread = f_max - f_min;
     if !(spread.is_finite() && spread > 1e-300) {
-        return vec![0.0; f_neighbors.len()];
+        out.resize(f_neighbors.len(), 0.0);
+        return;
     }
     let kappa = |f: f64| (f - f_min) / spread + 1.0;
     let k_self = kappa(f_self);
-    f_neighbors.iter().map(|&f| k_self / kappa(f) - 1.0).collect()
+    out.extend(f_neighbors.iter().map(|&f| k_self / kappa(f) - 1.0));
 }
 
 #[cfg(test)]

@@ -1,6 +1,17 @@
 //! The seven penalty schemes.
+//!
+//! Clamping policy: every adaptive update routes through [`clamp_eta`]
+//! (η ∈ [η⁰/eta_clamp, η⁰·eta_clamp]) — including AP, whose normalized
+//! τ ∈ [−½, 1] already bounds the step to [η⁰/2, 2η⁰]. At the default
+//! `eta_clamp = 1e4` the clamp is therefore a no-op for AP, but routing
+//! it through anyway keeps degenerate configurations (`eta_clamp < 2`)
+//! and future τ definitions safe, and makes AP behave like VP/RB/NAP.
+//!
+//! Allocation hygiene: the τ-computing schemes own a per-node scratch
+//! buffer pre-sized to the node's degree, so steady-state updates never
+//! allocate (the coordinator's phase C runs inside the hot loop).
 
-use super::kappa::tau_from_objectives;
+use super::kappa::tau_from_objectives_into;
 
 /// Which scheme to run. See module docs for the paper mapping.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -138,9 +149,9 @@ pub fn make_scheme(kind: SchemeKind, params: SchemeParams, degree: usize)
         SchemeKind::Fixed => Box::new(Fixed),
         SchemeKind::Rb => Box::new(Rb { p: params }),
         SchemeKind::Vp => Box::new(Vp { p: params }),
-        SchemeKind::Ap => Box::new(Ap { p: params }),
+        SchemeKind::Ap => Box::new(Ap { p: params, tau: Vec::with_capacity(degree) }),
         SchemeKind::Nap => Box::new(Nap::new(params, degree)),
-        SchemeKind::VpAp => Box::new(VpAp { p: params }),
+        SchemeKind::VpAp => Box::new(VpAp { p: params, tau: Vec::with_capacity(degree) }),
         SchemeKind::VpNap => Box::new(VpNap { inner: Nap::new(params, degree) }),
     }
 }
@@ -212,9 +223,11 @@ impl PenaltyScheme for Vp {
 }
 
 /// ADMM-AP (paper §3.2): η_ij = η⁰(1 + τ_ij) from the normalized local
-/// objective ratio; falls back to η⁰ after t_max.
+/// objective ratio; falls back to η⁰ after t_max. Clamped like every
+/// other adaptive scheme (see the module docs — a no-op at defaults).
 struct Ap {
     p: SchemeParams,
+    tau: Vec<f64>,
 }
 
 impl PenaltyScheme for Ap {
@@ -234,9 +247,9 @@ impl PenaltyScheme for Ap {
             }
             return;
         }
-        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
-        for (e, t) in eta.iter_mut().zip(&tau) {
-            *e = self.p.eta0 * (1.0 + t);
+        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
+        for (e, t) in eta.iter_mut().zip(&self.tau) {
+            *e = clamp_eta(self.p.eta0 * (1.0 + t), &self.p);
         }
     }
 }
@@ -253,6 +266,8 @@ struct Nap {
     bound: Vec<f64>,
     /// growth counter n per edge slot (increments start at α¹)
     n: Vec<u32>,
+    /// reusable τ buffer (hot-loop allocation hygiene)
+    tau: Vec<f64>,
 }
 
 impl Nap {
@@ -261,20 +276,22 @@ impl Nap {
             spent: vec![0.0; degree],
             bound: vec![p.budget; degree],
             n: vec![1; degree],
+            tau: Vec::with_capacity(degree),
             p,
         }
     }
 
     /// Apply the budget logic around a caller-supplied η update.
-    /// `proposed(slot, tau)` returns the new η for an in-budget edge.
+    /// `proposed(slot, tau, old)` returns the new η for an in-budget edge.
     fn gated_update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64],
                     proposed: impl Fn(usize, f64, f64) -> f64) {
-        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
+        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
         let objective_moving = (obs.f_self - obs.f_self_prev).abs() > self.p.beta;
         for slot in 0..eta.len() {
+            let tau = self.tau[slot];
             if self.spent[slot] < self.bound[slot] {
-                eta[slot] = clamp_eta(proposed(slot, tau[slot], eta[slot]), &self.p);
-                self.spent[slot] += tau[slot].abs();
+                eta[slot] = clamp_eta(proposed(slot, tau, eta[slot]), &self.p);
+                self.spent[slot] += tau.abs();
             } else {
                 eta[slot] = self.p.eta0;
                 // eq. (10): grow the budget while the objective still moves
@@ -308,6 +325,7 @@ impl PenaltyScheme for Nap {
 /// reset to η⁰.
 struct VpAp {
     p: SchemeParams,
+    tau: Vec<f64>,
 }
 
 impl PenaltyScheme for VpAp {
@@ -327,9 +345,9 @@ impl PenaltyScheme for VpAp {
             }
             return;
         }
-        let tau = tau_from_objectives(obs.f_self, obs.f_neighbors);
+        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
         let dir = residual_direction(obs.primal_norm, obs.dual_norm, self.p.mu);
-        for (e, t) in eta.iter_mut().zip(&tau) {
+        for (e, t) in eta.iter_mut().zip(&self.tau) {
             match dir {
                 Direction::Grow => *e = clamp_eta(*e * (1.0 + t) * 2.0, &self.p),
                 Direction::Shrink => *e = clamp_eta(*e * (1.0 + t) * 0.5, &self.p),

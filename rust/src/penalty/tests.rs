@@ -116,6 +116,35 @@ fn ap_rewards_better_neighbors() {
 }
 
 #[test]
+fn ap_respects_tight_eta_clamp() {
+    // degenerate configuration: eta_clamp < 2 makes AP's natural range
+    // [η⁰/2, 2η⁰] overflow the numerical clamp — AP must clamp exactly
+    // like VP/RB/NAP do (regression: AP used to publish η unclamped)
+    let p = SchemeParams { eta_clamp: 1.2, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Ap, p, 2);
+    let mut eta = vec![p.eta0; 2];
+    // neighbour 0 far better (τ = ½ → unclamped 1.5η⁰ > 1.2η⁰),
+    // neighbour 1 far worse (τ = −¼ → unclamped 0.75η⁰ < η⁰/1.2)
+    s.update(&obs(0, 1.0, 1.0, 10.0, 10.0, &[0.0, 20.0]), &mut eta);
+    assert_eq!(eta[0], p.eta0 * p.eta_clamp);
+    assert_eq!(eta[1], p.eta0 / p.eta_clamp);
+}
+
+#[test]
+fn ap_degenerate_objective_ratio_pins_to_eta0() {
+    // degenerate objective ratios (no spread / non-finite) give τ = 0:
+    // the update must land exactly on η⁰, inside any clamp
+    let p = SchemeParams { eta_clamp: 1.5, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Ap, p, 2);
+    let mut eta = vec![p.eta0 * 1.4; 2];
+    s.update(&obs(0, 5.0, 5.0, f64::NAN, 0.0, &[1.0, 2.0]), &mut eta);
+    assert_eq!(eta, vec![p.eta0; 2]);
+    let mut eta = vec![p.eta0 * 1.4; 2];
+    s.update(&obs(1, 5.0, 5.0, 3.0, 3.0, &[3.0, 3.0]), &mut eta);
+    assert_eq!(eta, vec![p.eta0; 2]);
+}
+
+#[test]
 fn ap_reverts_to_eta0_after_tmax() {
     let p = SchemeParams { t_max: 3, ..Default::default() };
     let mut s = make_scheme(SchemeKind::Ap, p, 1);
