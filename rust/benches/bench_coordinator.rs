@@ -512,6 +512,7 @@ mod legacy {
                 f_self,
                 f_self_prev,
                 f_neighbors: &f_nb,
+                live: None,
             };
             scheme.update(&obs, &mut etas);
             f_self_prev = f_self;

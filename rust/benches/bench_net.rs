@@ -1,0 +1,110 @@
+//! Simulated-network runtime cost: wall-clock of the discrete-event loop,
+//! plus the two scenario-level metrics the ROADMAP tracks — rounds to
+//! consensus and virtual time — under a clean link vs 10% loss. Writes
+//! the machine-readable `BENCH_net.json` (same layout contract as
+//! `BENCH_coordinator.json`: a `results` array from the Bencher and a
+//! derived `scenario` object for gates/dashboards).
+
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::experiments::common::quad_problem;
+use fadmm::net::{AsyncRunner, FaultPlan, LinkModel, NetConfig};
+use fadmm::graph::Topology;
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::{black_box, Bencher};
+use fadmm::util::json::{num, obj, s, Json};
+
+const N: usize = 16;
+const DIM: usize = 3;
+
+fn lossy_plan(loss: f64) -> FaultPlan {
+    FaultPlan {
+        link: LinkModel { base: 2, jitter: 4, loss, dup: 0.02 },
+        ..FaultPlan::none()
+    }
+}
+
+fn run_once(scheme: SchemeKind, plan: FaultPlan, tol: f64, max_iters: usize)
+            -> fadmm::net::NetReport {
+    let solvers: Vec<QuadraticNode> = quad_problem(N, DIM, 77);
+    let runner = AsyncRunner::new(
+        Topology::Ring.build(N).unwrap(),
+        solvers,
+        NetConfig {
+            scheme,
+            tol,
+            max_iters,
+            seed: 5,
+            max_staleness: 1,
+            silence_timeout: 16,
+            tracing: false,
+            ..Default::default()
+        },
+        plan,
+    );
+    runner.run()
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    // keyed by owned strings; borrowed at the single obj() call below
+    let mut scenario_fields: Vec<(String, Json)> = Vec::new();
+
+    println!("== event-loop wall cost (ring {N}, ADMM-AP, fixed 120 rounds) ==");
+    b.bench("async zero-fault 120 rounds", || {
+        black_box(run_once(SchemeKind::Ap, FaultPlan::none(), 0.0, 120));
+    });
+    b.bench("async 10% loss 120 rounds", || {
+        black_box(run_once(SchemeKind::Ap, lossy_plan(0.10), 0.0, 120));
+    });
+
+    println!("== rounds-to-consensus and virtual time (tol 1e-6) ==");
+    // deterministic single runs — these are scenario metrics, not timing
+    for (name, loss) in [("clean", 0.0f64), ("loss10", 0.10)] {
+        for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Nap,
+                       SchemeKind::VpNap] {
+            let plan = if loss > 0.0 { lossy_plan(loss) } else { FaultPlan::none() };
+            let report = run_once(scheme, plan, 1e-6, 800);
+            let last_primal = report
+                .recorder
+                .stats
+                .last()
+                .map(|st| st.max_primal)
+                .unwrap_or(f64::NAN);
+            println!(
+                "{name:<8} {:<12} rounds {:>4} vtime {:>7} dropped {:>5} \
+                 stale {:>6} primal {:.3e}",
+                scheme.name(), report.iterations, report.virtual_time,
+                report.counters.dropped_total(), report.counters.stale_reads,
+                last_primal,
+            );
+            let key = format!("{name}_{}", scheme.name());
+            scenario_fields.push((
+                key,
+                obj(vec![
+                    ("rounds", num(report.iterations as f64)),
+                    ("virtual_time", num(report.virtual_time as f64)),
+                    ("converged", num(if report.converged { 1.0 } else { 0.0 })),
+                    ("final_primal", num(last_primal)),
+                    ("dropped", num(report.counters.dropped_total() as f64)),
+                    ("stale_reads", num(report.counters.stale_reads as f64)),
+                    ("counters", report.counters.summary_json()),
+                ]),
+            ));
+        }
+    }
+
+    let scenario = obj(scenario_fields
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect());
+    let extra = vec![
+        ("nodes", num(N as f64)),
+        ("dim", num(DIM as f64)),
+        ("topology", s("ring")),
+        ("scenario", scenario),
+    ];
+    match b.write_json("net", extra) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("bench_net: could not write JSON: {e}"),
+    }
+}

@@ -24,6 +24,7 @@ fn main() {
                     f_self: 101.0,
                     f_self_prev: 102.0,
                     f_neighbors: &f_nb,
+                    live: None,
                 };
                 scheme.update(&obs, &mut eta);
                 t = (t + 1) % 50; // keep pre-t_max behaviour hot

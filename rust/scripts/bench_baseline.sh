@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Refresh the committed bench baselines from a full-budget run.
+#
+#   rust/scripts/bench_baseline.sh            # coordinator (the gated one)
+#   rust/scripts/bench_baseline.sh --all      # + net
+#
+# Run this on a quiet machine (no other load): the ci.sh regression gate
+# compares every future smoke run against the numbers written here. The
+# full budget (no FADMM_BENCH_FAST) writes BENCH_<target>.json at the
+# repo root, replacing any provisional envelope baseline.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== full-budget bench_coordinator (writes ../BENCH_coordinator.json) =="
+cargo bench --bench bench_coordinator
+
+if [[ "${1:-}" == "--all" ]]; then
+  echo "== full-budget bench_net (writes ../BENCH_net.json) =="
+  cargo bench --bench bench_net
+fi
+
+echo "baseline refreshed; commit the updated BENCH_*.json"

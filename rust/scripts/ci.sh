@@ -33,6 +33,24 @@ else
   echo "(clippy not installed; skipping lint pass)"
 fi
 
+echo "== net_scenarios smoke matrix (small n, 3 seeds) =="
+# the full loss × latency × churn matrix at toy size: exercises every
+# scenario cell for every scheme end-to-end through the repro binary
+net_dir="$(mktemp -d)"
+cargo run --release --quiet --bin repro -- net \
+  --nodes 8 --seeds 3 --max-iters 150 --out "$net_dir"
+if [[ ! -f "$net_dir/net_scenarios.csv" ]]; then
+  echo "net smoke: net_scenarios.csv missing" >&2
+  exit 1
+fi
+# every (scenario × scheme) row present: 7 scenarios × 7 schemes + header
+net_rows="$(wc -l < "$net_dir/net_scenarios.csv")"
+if [[ "$net_rows" -ne 50 ]]; then
+  echo "net smoke: expected 50 csv lines (7 scenarios × 7 schemes + header), got $net_rows" >&2
+  exit 1
+fi
+rm -rf "$net_dir"
+
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== bench smoke (FADMM_BENCH_FAST=1) =="
   # fast-mode numbers are noisy: keep the smoke's BENCH_*.json out of the
@@ -42,6 +60,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench bench_coordinator
   FADMM_BENCH_FAST=1 FADMM_BENCH_DIR="$smoke_dir" \
     cargo bench --bench bench_node_update
+  FADMM_BENCH_FAST=1 FADMM_BENCH_DIR="$smoke_dir" \
+    cargo bench --bench bench_net
+  if [[ ! -f "$smoke_dir/BENCH_net.json" ]]; then
+    echo "bench smoke: bench_net wrote no BENCH_net.json" >&2
+    exit 1
+  fi
 
   # ---- bench regression gate -----------------------------------------
   # Compare the freshly measured per-iteration coordination overhead

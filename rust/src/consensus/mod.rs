@@ -465,6 +465,7 @@ impl<S: LocalSolver> Engine<S> {
                 f_self: self.scratch_f_self[i],
                 f_self_prev: self.f_self_prev[i],
                 f_neighbors: &self.scratch_f_nb,
+                live: None,
             };
             self.schemes[i].update(&obs, &mut self.etas[i]);
             self.f_self_prev[i] = self.scratch_f_self[i];

@@ -8,7 +8,7 @@
 //! phase barrier and surface as an `Err` instead of a deadlock.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 
 use super::arena::{ParamArena, PhaseBarrier};
 use super::messages::Verdict;
@@ -83,6 +83,11 @@ pub type ThreadedReport = RunnerReport;
 pub struct ShardedRunner {
     graph: Graph,
     cfg: ShardedConfig,
+    /// RCM permutation, computed once per runner: the graph is immutable
+    /// for the runner's lifetime, so repeated `run` calls skip the BFS
+    /// (ROADMAP open item). Dynamic graphs invalidate through
+    /// [`crate::graph::LiveView::generation`] instead.
+    rcm_cache: OnceLock<Vec<NodeId>>,
 }
 
 /// Backward-compatible name for [`ShardedRunner`].
@@ -90,7 +95,13 @@ pub type ThreadedRunner = ShardedRunner;
 
 impl ShardedRunner {
     pub fn new(graph: Graph, cfg: ShardedConfig) -> Self {
-        ShardedRunner { graph, cfg }
+        ShardedRunner { graph, cfg, rcm_cache: OnceLock::new() }
+    }
+
+    /// The cached RCM permutation, if a relabeled run has computed it
+    /// (test/diagnostics hook — lets callers verify reuse).
+    pub fn cached_order(&self) -> Option<&[NodeId]> {
+        self.rcm_cache.get().map(Vec::as_slice)
     }
 
     /// The worker-pool size a run will use.
@@ -144,14 +155,20 @@ impl ShardedRunner {
 
         // locality-aware sharding: relabel so neighbours co-locate before
         // the contiguous split. `order[shard_id] = original_id`; the
-        // permutation is undone at every user-visible surface below.
-        let order: Vec<NodeId> = match self.cfg.relabel {
-            Relabel::Identity => (0..n).collect(),
-            Relabel::Rcm => rcm_order(&self.graph),
+        // permutation is undone at every user-visible surface below. The
+        // RCM BFS runs once per runner and is reused by later `run` calls
+        // (the graph cannot change under us).
+        let identity: Vec<NodeId>;
+        let order: &[NodeId] = match self.cfg.relabel {
+            Relabel::Identity => {
+                identity = (0..n).collect();
+                &identity
+            }
+            Relabel::Rcm => self.rcm_cache.get_or_init(|| rcm_order(&self.graph)),
         };
         let relabeled: Option<Graph> = match self.cfg.relabel {
             Relabel::Identity => None,
-            Relabel::Rcm => Some(relabel_graph(&self.graph, &order)?),
+            Relabel::Rcm => Some(relabel_graph(&self.graph, order)?),
         };
         let graph: &Graph = relabeled.as_ref().unwrap_or(&self.graph);
 
@@ -173,7 +190,7 @@ impl ShardedRunner {
             barrier: &barrier,
             partials: &partials,
             verdict: &verdict,
-            order: &order,
+            order,
             cfg: self.cfg,
         };
 
@@ -454,6 +471,44 @@ mod tests {
             assert!(max_err(&sequential.thetas, &opt) < 5e-3,
                     "engine {scheme:?}: {}", max_err(&sequential.thetas, &opt));
         }
+    }
+
+    #[test]
+    fn rcm_permutation_cached_and_reused_across_runs() {
+        // the ROADMAP open item: repeated `run` calls on one runner must
+        // skip the RCM BFS. The cache fills on the first run, the second
+        // run reuses the same allocation, and both runs are bit-identical.
+        let graph = Topology::Ring.build(12).unwrap();
+        let runner = ShardedRunner::new(
+            graph.clone(),
+            ShardedConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 40,
+                            workers: 3, ..Default::default() },
+        );
+        assert!(runner.cached_order().is_none(), "cache empty before any run");
+        let (factory, _) = quad_factory(12, 2, 55);
+        let a = runner.run(factory).unwrap();
+        let cached = runner.cached_order().expect("first RCM run fills the cache");
+        assert_eq!(cached, rcm_order(&graph), "cache holds the RCM permutation");
+        let ptr = cached.as_ptr();
+        let (factory, _) = quad_factory(12, 2, 55);
+        let b = runner.run(factory).unwrap();
+        assert_eq!(runner.cached_order().unwrap().as_ptr(), ptr,
+                   "second run reuses the cached permutation (no recompute)");
+        assert_eq!(a.thetas, b.thetas, "reuse is bit-transparent");
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.recorder.objective_curve(), b.recorder.objective_curve());
+    }
+
+    #[test]
+    fn identity_relabeling_never_fills_rcm_cache() {
+        let runner = ShardedRunner::new(
+            Topology::Ring.build(6).unwrap(),
+            ShardedConfig { max_iters: 5, relabel: Relabel::Identity,
+                            ..Default::default() },
+        );
+        let (factory, _) = quad_factory(6, 2, 5);
+        runner.run(factory).unwrap();
+        assert!(runner.cached_order().is_none());
     }
 
     #[test]

@@ -399,6 +399,7 @@ pub(crate) fn worker_main<S: LocalSolver>(
                 f_self: st.f_self,
                 f_self_prev: st.f_self_prev,
                 f_neighbors: &st.f_nb,
+                live: None,
             };
             st.scheme.update(&obs, &mut st.etas);
             st.f_self_prev = st.f_self;

@@ -161,6 +161,17 @@ pub fn paper_schemes() -> &'static [SchemeKind] {
     &SchemeKind::PAPER
 }
 
+/// A seeded quadratic consensus problem (one random SPD node objective
+/// per graph node) — the cheap workload behind the net-scenario sweep and
+/// benches, where the subject under test is the runtime, not the model.
+pub fn quad_problem(n: usize, dim: usize, seed: u64)
+                    -> Vec<crate::consensus::solvers::QuadraticNode> {
+    let mut rng = crate::util::rng::Pcg::seed(seed);
+    (0..n)
+        .map(|_| crate::consensus::solvers::QuadraticNode::random(dim, &mut rng))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -8,12 +8,15 @@
 //! * [`caltech`] — turntable SfM curves (Fig. 3 / Fig. 5, plus the Fig. 4
 //!   dataset description table);
 //! * [`hopkins`] — trajectory-corpus mean-iteration table (§5.2);
-//! * [`ablations`] — η⁰ sensitivity, NAP budget, VP μ/reset (ours).
+//! * [`ablations`] — η⁰ sensitivity, NAP budget, VP μ/reset (ours);
+//! * [`net_scenarios`] — loss × latency × churn fault matrix over the
+//!   simulated-network runtime (ours; [`crate::net`]).
 
 pub mod ablations;
 pub mod caltech;
 pub mod common;
 pub mod fig2;
 pub mod hopkins;
+pub mod net_scenarios;
 
 pub use common::{BackendChoice, DppcaRunResult, DppcaSpec};

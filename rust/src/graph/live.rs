@@ -1,0 +1,296 @@
+//! A mutable liveness overlay over an immutable [`Graph`].
+//!
+//! The net runtime ([`crate::net`]) needs a topology that changes while a
+//! run is in flight: nodes join and leave (scripted churn) and edges get
+//! switched off and on (the NAP scheme's effective-topology decisions).
+//! Rebuilding a [`Graph`] per change would invalidate every neighbour-slot
+//! index held by in-flight node state, so instead the graph stays frozen —
+//! it enumerates every node and edge that can *ever* exist — and this view
+//! masks subsets of it in and out.
+//!
+//! Degree-dependent quantities must follow the mask, not the frozen graph:
+//! [`LiveView::live_degree`] is what η̄ normalization divides by, and a node
+//! whose live degree reaches zero takes the isolated-node semantics of the
+//! synchronous runtimes (η̄ = 0, no consensus term). Every mutation bumps a
+//! generation counter so derived artifacts — the RCM ordering cached here,
+//! or anything a caller keys on [`LiveView::generation`] — invalidate
+//! incrementally instead of being recomputed per read.
+
+use super::{Graph, NodeId};
+
+/// Liveness mask over a frozen [`Graph`] (see module docs).
+#[derive(Debug, Clone)]
+pub struct LiveView {
+    graph: Graph,
+    node_live: Vec<bool>,
+    /// slot_live[i][slot] — whether the directed edge (i, neighbors(i)[slot])
+    /// is active. Kept symmetric by the mutators: (i→j) and (j→i) always
+    /// agree, like the underlying undirected graph.
+    slot_live: Vec<Vec<bool>>,
+    generation: u64,
+    /// (generation at compute time, live-subgraph RCM order)
+    rcm_cache: Option<(u64, Vec<NodeId>)>,
+}
+
+impl LiveView {
+    /// A view with every node and edge live.
+    pub fn new(graph: Graph) -> LiveView {
+        let n = graph.len();
+        let slot_live = (0..n).map(|i| vec![true; graph.degree(i)]).collect();
+        LiveView {
+            node_live: vec![true; n],
+            slot_live,
+            generation: 0,
+            rcm_cache: None,
+            graph,
+        }
+    }
+
+    /// The frozen underlying graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Bumped by every mutation; key derived artifacts on it.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn node_live(&self, i: NodeId) -> bool {
+        self.node_live[i]
+    }
+
+    /// Whether the directed slot (i, neighbors(i)[slot]) is active.
+    pub fn slot_live(&self, i: NodeId, slot: usize) -> bool {
+        self.slot_live[i][slot]
+    }
+
+    /// Number of active slots at node i (what η̄ normalization divides by).
+    pub fn live_degree(&self, i: NodeId) -> usize {
+        self.slot_live[i].iter().filter(|&&l| l).count()
+    }
+
+    /// Whether every slot of node i is active (the common fast path: when
+    /// true, callers can skip per-slot masking entirely and run the exact
+    /// arithmetic of the synchronous runtimes).
+    pub fn all_slots_live(&self, i: NodeId) -> bool {
+        self.slot_live[i].iter().all(|&l| l)
+    }
+
+    /// Number of live nodes.
+    pub fn live_count(&self) -> usize {
+        self.node_live.iter().filter(|&&l| l).count()
+    }
+
+    /// Activate/deactivate a node. Deactivation also masks every incident
+    /// edge (both directions); activation restores edges only toward
+    /// neighbours that are themselves live.
+    pub fn set_node(&mut self, i: NodeId, live: bool) {
+        self.node_live[i] = live;
+        for slot in 0..self.graph.degree(i) {
+            let j = self.graph.neighbors(i)[slot];
+            let on = live && self.node_live[j];
+            self.slot_live[i][slot] = on;
+            let rev = self.graph.edge_slot(j, i).expect("graph symmetry");
+            self.slot_live[j][rev] = on;
+        }
+        self.generation += 1;
+    }
+
+    /// Activate/deactivate the undirected edge {i, j} (both directed
+    /// slots). No-op masking-in if either endpoint is dead. Returns whether
+    /// the edge ended up live.
+    pub fn set_edge(&mut self, i: NodeId, j: NodeId, live: bool) -> bool {
+        let slot = self.graph.edge_slot(i, j).expect("edge exists in frozen graph");
+        let rev = self.graph.edge_slot(j, i).expect("graph symmetry");
+        let on = live && self.node_live[i] && self.node_live[j];
+        self.slot_live[i][slot] = on;
+        self.slot_live[j][rev] = on;
+        self.generation += 1;
+        on
+    }
+
+    /// BFS connectivity over the live subgraph (dead nodes ignored).
+    /// Vacuously true with ≤ 1 live node.
+    pub fn live_connected(&self) -> bool {
+        let n = self.graph.len();
+        let start = match (0..n).find(|&i| self.node_live[i]) {
+            Some(s) => s,
+            None => return true,
+        };
+        let mut seen = vec![false; n];
+        let mut queue = std::collections::VecDeque::from([start]);
+        seen[start] = true;
+        let mut count = 1;
+        while let Some(u) = queue.pop_front() {
+            for (slot, &v) in self.graph.neighbors(u).iter().enumerate() {
+                if self.slot_live[u][slot] && !seen[v] {
+                    seen[v] = true;
+                    count += 1;
+                    queue.push_back(v);
+                }
+            }
+        }
+        count == self.live_count()
+    }
+
+    /// Reverse Cuthill–McKee order over the *live* subgraph, cached by
+    /// generation: repeated reads between mutations reuse the permutation,
+    /// and any mutation invalidates it incrementally (next read recomputes).
+    /// Dead nodes are appended after the live ordering so the result is
+    /// always a full permutation of `0..n`.
+    pub fn rcm_order_live(&mut self) -> &[NodeId] {
+        if self
+            .rcm_cache
+            .as_ref()
+            .is_none_or(|(gen, _)| *gen != self.generation)
+        {
+            let order = self.compute_rcm_live();
+            self.rcm_cache = Some((self.generation, order));
+        }
+        &self.rcm_cache.as_ref().unwrap().1
+    }
+
+    /// Whether a cached RCM order for the current generation exists (test
+    /// and diagnostics hook — lets callers verify reuse without timing).
+    pub fn rcm_cache_fresh(&self) -> bool {
+        self.rcm_cache
+            .as_ref()
+            .is_some_and(|(gen, _)| *gen == self.generation)
+    }
+
+    fn compute_rcm_live(&self) -> Vec<NodeId> {
+        let n = self.graph.len();
+        let live_deg: Vec<usize> = (0..n).map(|i| self.live_degree(i)).collect();
+        let mut visited = vec![false; n];
+        let mut order: Vec<NodeId> = Vec::with_capacity(n);
+        let mut nbrs: Vec<NodeId> = Vec::new();
+        // deterministic: start each live component from its minimum-degree
+        // node (ties by id), BFS with degree-sorted neighbour expansion —
+        // the same discipline as `graph::rcm_order`, restricted to live
+        // slots
+        loop {
+            let start = (0..n)
+                .filter(|&i| self.node_live[i] && !visited[i])
+                .min_by_key(|&i| (live_deg[i], i));
+            let start = match start {
+                Some(s) => s,
+                None => break,
+            };
+            visited[start] = true;
+            let head = order.len();
+            order.push(start);
+            let mut cursor = head;
+            while cursor < order.len() {
+                let u = order[cursor];
+                cursor += 1;
+                nbrs.clear();
+                for (slot, &v) in self.graph.neighbors(u).iter().enumerate() {
+                    if self.slot_live[u][slot] && !visited[v] {
+                        nbrs.push(v);
+                    }
+                }
+                nbrs.sort_unstable_by_key(|&v| (live_deg[v], v));
+                for &v in &nbrs {
+                    visited[v] = true;
+                    order.push(v);
+                }
+            }
+        }
+        order.reverse();
+        // dead nodes last, in id order (full permutation invariant)
+        for i in 0..n {
+            if !self.node_live[i] {
+                order.push(i);
+            }
+        }
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+
+    #[test]
+    fn starts_fully_live() {
+        let v = LiveView::new(Topology::Ring.build(5).unwrap());
+        assert_eq!(v.live_count(), 5);
+        assert!((0..5).all(|i| v.all_slots_live(i)));
+        assert_eq!(v.live_degree(0), 2);
+        assert!(v.live_connected());
+        assert_eq!(v.generation(), 0);
+    }
+
+    #[test]
+    fn node_leave_masks_both_directions() {
+        let mut v = LiveView::new(Topology::Ring.build(5).unwrap());
+        v.set_node(2, false);
+        assert!(!v.node_live(2));
+        assert_eq!(v.live_degree(2), 0);
+        assert_eq!(v.live_degree(1), 1, "edge 1-2 masked from node 1's side");
+        assert_eq!(v.live_degree(3), 1);
+        assert!(v.live_connected(), "ring minus one node is a live path");
+        assert_eq!(v.generation(), 1);
+    }
+
+    #[test]
+    fn rejoin_restores_only_live_neighbours() {
+        let mut v = LiveView::new(Topology::Ring.build(5).unwrap());
+        v.set_node(2, false);
+        v.set_node(3, false);
+        v.set_node(2, true);
+        assert_eq!(v.live_degree(2), 1, "edge to dead node 3 stays masked");
+        assert_eq!(v.live_degree(1), 2);
+    }
+
+    #[test]
+    fn edge_toggle_is_symmetric() {
+        let mut v = LiveView::new(Topology::Complete.build(4).unwrap());
+        assert!(!v.set_edge(0, 3, false));
+        assert_eq!(v.live_degree(0), 2);
+        assert_eq!(v.live_degree(3), 2);
+        let slot03 = v.graph().edge_slot(0, 3).unwrap();
+        let slot30 = v.graph().edge_slot(3, 0).unwrap();
+        assert!(!v.slot_live(0, slot03));
+        assert!(!v.slot_live(3, slot30));
+        assert!(v.set_edge(0, 3, true));
+        assert!(v.all_slots_live(0));
+    }
+
+    #[test]
+    fn isolated_live_node_disconnects_view() {
+        let mut v = LiveView::new(Topology::Chain.build(3).unwrap());
+        v.set_edge(0, 1, false);
+        assert!(!v.live_connected());
+        assert_eq!(v.live_degree(0), 0, "isolated-node semantics apply");
+    }
+
+    #[test]
+    fn rcm_cache_invalidates_on_mutation() {
+        let mut v = LiveView::new(Topology::Ring.build(8).unwrap());
+        let a = v.rcm_order_live().to_vec();
+        assert!(v.rcm_cache_fresh());
+        let b = v.rcm_order_live().to_vec();
+        assert_eq!(a, b, "no mutation ⇒ cached permutation reused");
+        v.set_node(5, false);
+        assert!(!v.rcm_cache_fresh(), "mutation invalidates the cache");
+        let c = v.rcm_order_live().to_vec();
+        assert_ne!(a, c, "dead node moves to the tail of the order");
+        assert_eq!(c[7], 5, "dead nodes appended after the live ordering");
+        // still a permutation
+        let mut sorted = c.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fully_live_rcm_is_a_permutation_of_all_nodes() {
+        let mut v = LiveView::new(Topology::Grid.build(16).unwrap());
+        let order = v.rcm_order_live().to_vec();
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..16).collect::<Vec<_>>());
+    }
+}

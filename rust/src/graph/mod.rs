@@ -8,11 +8,13 @@
 
 mod builders;
 mod graph;
+mod live;
 mod relabel;
 mod sharding;
 
 pub use builders::{random_connected, Topology};
 pub use graph::{EdgeId, Graph, NodeId};
+pub use live::LiveView;
 pub use relabel::{bandwidth, rcm_order, relabel_graph, Relabel};
 pub use sharding::shard_ranges;
 

@@ -33,6 +33,7 @@ pub mod experiments;
 pub mod graph;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod penalty;
 pub mod runtime;
 pub mod sfm;

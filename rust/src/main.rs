@@ -5,6 +5,7 @@
 //!   caltech    turntable SfM curves (Fig. 3/5) + dataset description (Fig. 4)
 //!   hopkins    trajectory-corpus iteration table (§5.2)
 //!   ablation   η⁰ / NAP-budget / VP sweeps
+//!   net        fault-scenario matrix on the simulated-network runtime
 //!   run        one JSON-configured consensus run
 //!   check-artifacts   validate the AOT artifact manifest + compile warmup
 
@@ -12,7 +13,7 @@ use std::path::PathBuf;
 
 use fadmm::config::{CliArgs, RunConfig};
 use fadmm::data::{even_split, SubspaceSpec};
-use fadmm::experiments::{ablations, caltech, common, fig2, hopkins};
+use fadmm::experiments::{ablations, caltech, common, fig2, hopkins, net_scenarios};
 use fadmm::experiments::common::BackendChoice;
 use fadmm::linalg::Mat;
 use fadmm::util::rng::Pcg;
@@ -35,6 +36,10 @@ SUBCOMMANDS
   hopkins     trajectory corpus table (§5.2)
                 --objects N (default 135)  --seeds N (default 5)  --out DIR
   ablation    --name eta0|budget|vp|all  --seeds N  --out DIR
+  net         loss × latency × churn matrix on the async simulated-network
+              runtime, all schemes by default
+                --nodes N (default 12)  --seeds N (default 5)
+                --max-iters N (default 400)  --schemes a,b,...  --out DIR
   run         --config cfg.json          one consensus run, prints summary
   check-artifacts   validate manifest and compile one artifact set
   help        this text
@@ -61,6 +66,7 @@ fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
         "caltech" => cmd_caltech(&args),
         "hopkins" => cmd_hopkins(&args),
         "ablation" => cmd_ablation(&args),
+        "net" => cmd_net(&args),
         "run" => cmd_run(&args),
         "check-artifacts" => cmd_check_artifacts(),
         other => Err(fadmm::Error::Config(format!(
@@ -156,6 +162,24 @@ fn cmd_ablation(args: &CliArgs) -> fadmm::Result<()> {
         return Err(fadmm::Error::Config(format!("unknown ablation '{name}'")));
     }
     ablations::print_summary(&rows);
+    Ok(())
+}
+
+fn cmd_net(args: &CliArgs) -> fadmm::Result<()> {
+    let cfg = net_scenarios::NetScenarioConfig {
+        nodes: args.get_usize("nodes", 12)?,
+        seeds: args.get_usize("seeds", 5)?,
+        max_iters: args.get_usize("max-iters", 400)?,
+        schemes: match args.get("schemes") {
+            None => fadmm::penalty::SchemeKind::ALL.to_vec(),
+            Some(_) => args.schemes()?,
+        },
+    };
+    let out = out_dir(args);
+    eprintln!("net: {} nodes × {} seeds × {} schemes, out {}", cfg.nodes,
+              cfg.seeds, cfg.schemes.len(), out.display());
+    let rows = net_scenarios::run(&cfg, &out)?;
+    net_scenarios::print_summary(&rows);
     Ok(())
 }
 

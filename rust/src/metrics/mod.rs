@@ -108,6 +108,66 @@ pub struct IterStats {
     pub app_error: f64,
 }
 
+/// Per-scenario event and staleness counters for a simulated-network run
+/// ([`crate::net`]). Purely additive bookkeeping: the simulator and the
+/// async runner bump these as events fire, and experiment CSVs / bench
+/// JSONs report them next to the convergence metrics so a scenario's
+/// fault load is visible alongside its cost.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetCounters {
+    /// messages handed to the transport (before loss/partition sampling)
+    pub sent: u64,
+    /// messages delivered to a live destination
+    pub delivered: u64,
+    /// messages dropped by the Bernoulli loss model
+    pub dropped_loss: u64,
+    /// messages dropped for crossing an active partition cut
+    pub dropped_partition: u64,
+    /// messages dropped because the destination was dead at delivery time
+    pub dropped_dead: u64,
+    /// extra deliveries injected by the duplication model
+    pub duplicated: u64,
+    /// neighbour-cache reads older than the ideal stamp (any age > 0)
+    pub stale_reads: u64,
+    /// forced reads past the staleness bound (silent-neighbour fallback)
+    pub fallback_reads: u64,
+    /// silence timeouts that fired (a forced advance was *attempted*; it
+    /// still blocks if a live slot has no cache entry yet)
+    pub timeouts: u64,
+    pub joins: u64,
+    pub leaves: u64,
+    /// NAP effective-topology decisions applied by the controller
+    pub edges_deactivated: u64,
+    pub edges_reactivated: u64,
+}
+
+impl NetCounters {
+    /// Machine-readable form (embedded in `BENCH_net.json` and run
+    /// summaries).
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("sent", num(self.sent as f64)),
+            ("delivered", num(self.delivered as f64)),
+            ("dropped_loss", num(self.dropped_loss as f64)),
+            ("dropped_partition", num(self.dropped_partition as f64)),
+            ("dropped_dead", num(self.dropped_dead as f64)),
+            ("duplicated", num(self.duplicated as f64)),
+            ("stale_reads", num(self.stale_reads as f64)),
+            ("fallback_reads", num(self.fallback_reads as f64)),
+            ("timeouts", num(self.timeouts as f64)),
+            ("joins", num(self.joins as f64)),
+            ("leaves", num(self.leaves as f64)),
+            ("edges_deactivated", num(self.edges_deactivated as f64)),
+            ("edges_reactivated", num(self.edges_reactivated as f64)),
+        ])
+    }
+
+    /// Total messages lost to any cause (loss + partition + dead dst).
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped_loss + self.dropped_partition + self.dropped_dead
+    }
+}
+
 /// Records per-iteration curves for one run.
 #[derive(Debug, Clone, Default)]
 pub struct Recorder {
@@ -244,6 +304,23 @@ mod tests {
         assert_eq!(j.get("iterations").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("final_objective").unwrap().as_f64(), Some(1.0));
         assert_eq!(j.get("final_max_primal").unwrap().as_f64(), Some(0.25));
+    }
+
+    #[test]
+    fn net_counters_json_and_totals() {
+        let c = NetCounters {
+            sent: 10,
+            delivered: 6,
+            dropped_loss: 2,
+            dropped_partition: 1,
+            dropped_dead: 1,
+            ..Default::default()
+        };
+        assert_eq!(c.dropped_total(), 4);
+        let j = c.summary_json();
+        assert_eq!(j.get("sent").unwrap().as_usize(), Some(10));
+        assert_eq!(j.get("dropped_loss").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("timeouts").unwrap().as_usize(), Some(0));
     }
 
     #[test]

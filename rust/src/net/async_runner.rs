@@ -1,0 +1,1035 @@
+//! Asynchronous, fault-tolerant ADMM over the simulated network.
+//!
+//! ## Protocol
+//!
+//! Each node runs the same two-phase round structure as the synchronous
+//! engines, but gated on *messages* instead of barriers. Round `t` of
+//! node `i`:
+//!
+//! 1. **Solve** (phase A): needs every live neighbour's θ with stamp
+//!    "ideally `t`" — computes θ_i^{t+1} via [`LocalSolver::solve_into`]
+//!    with the node's own η^t, broadcasts `Theta{stamp: t+1}`.
+//! 2. **Reduce** (phase B): needs neighbour θ stamped ideally `t+1` and
+//!    neighbour η stamped ideally `t` — λ update with the symmetrized
+//!    η̄ = ½(η_ij + η_ji), local residuals, objectives, and a round-`t`
+//!    *contribution* to the global fold.
+//! 3. **Scheme** (phase C): penalty update via [`PenaltyScheme`] (the RB
+//!    reference scheme first waits for the round-`t` fold, since it reads
+//!    global residuals), broadcasts `Eta{stamp: t+1}`, hands the fresh η
+//!    to the [`TopologyController`].
+//!
+//! ## Bounded staleness and the silent-neighbour fallback
+//!
+//! A read with ideal stamp `r` accepts the largest cached stamp `≤ r`,
+//! and a phase may *start* once every live neighbour has some stamp
+//! `≥ r − max_staleness` (with `max_staleness = 0` this is the exact
+//! lock-step schedule of the synchronous engines). When a neighbour goes
+//! silent — loss streak, partition — the node arms a `silence_timeout`
+//! wake-up; when it fires, the node proceeds anyway with the best cached
+//! value (the *stale η̄/θ̄ fallback*; counted in
+//! [`crate::metrics::NetCounters::fallback_reads`] and traced). The
+//! one-shot join handshake is delivered reliably, so any slot that was
+//! ever live has a cache entry and forced progress is always possible.
+//!
+//! ## Zero-fault parity (the oracle contract)
+//!
+//! With [`FaultPlan::none`] and `max_staleness = 0`, every read resolves
+//! to its exact ideal stamp, folds run over all n nodes in id order with
+//! the same floating-point accumulation order as [`Engine::step`], and θ⁰
+//! is seeded from the identical shared RNG stream — so the per-round
+//! trajectory (θ, λ, η, every [`IterStats`] field) is **bit-for-bit**
+//! equal to the sequential engine's, for all seven schemes. The tests in
+//! `net::tests` assert this on Ring and Star.
+//!
+//! ## Dynamic topology
+//!
+//! Scripted churn events pop out of the simulator queue; the
+//! [`TopologyController`] applies them to the run's [`LiveView`]. A dead
+//! neighbour's slot drops out of η̄ normalization and the solve/λ loops
+//! (live-degree semantics; a fully isolated node degenerates to η̄ = 0
+//! exactly like the synchronous runtimes). A joining node enters at the
+//! current round frontier with a reliable state handshake in both
+//! directions. Global folds expect a contribution from every node that
+//! was live for that round — nodes that leave stop being expected, nodes
+//! that join are only expected from their start round on.
+
+use std::collections::BTreeMap;
+
+use crate::consensus::LocalSolver;
+use crate::graph::{Graph, LiveView, NodeId};
+use crate::metrics::{ConvergenceChecker, IterStats, NetCounters, Recorder};
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
+                     SchemeParams};
+use crate::util::rng::Pcg;
+
+use super::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TraceEvent, TraceKind};
+use super::topology::{ActivityConfig, TopologyController};
+
+#[cfg(doc)]
+use crate::consensus::Engine;
+
+/// Async-runner configuration (mirrors [`crate::consensus::EngineConfig`]
+/// plus the network knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    pub tol: f64,
+    pub patience: usize,
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// How many rounds behind its ideal stamp a neighbour read may lag
+    /// before the node blocks. 0 = exact lock-step (the parity setting).
+    /// Nodes free-run at the budget, so keep this ≤ 1: systematic lag ≥ 2
+    /// destabilizes the dual accumulation on the standard workloads (see
+    /// the module-level "Stability boundary" notes).
+    pub max_staleness: u64,
+    /// Virtual ticks a blocked node waits before forcing progress on the
+    /// best cached values. 0 disables the fallback (pure blocking — only
+    /// safe under zero loss).
+    pub silence_timeout: Ticks,
+    /// Enable the NAP effective-topology rule (edge masking by penalty
+    /// influence). `None` keeps the physical topology fixed up to churn.
+    pub activity: Option<ActivityConfig>,
+    /// Record the replayable event trace (tests/debugging; counters are
+    /// always kept).
+    pub tracing: bool,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            scheme: SchemeKind::Fixed,
+            params: SchemeParams::default(),
+            tol: 1e-3,
+            patience: 3,
+            warmup: 5,
+            max_iters: 1000,
+            seed: 0,
+            max_staleness: 0,
+            silence_timeout: 64,
+            activity: None,
+            tracing: true,
+        }
+    }
+}
+
+/// Outcome of an async run.
+#[derive(Debug)]
+pub struct NetReport {
+    /// Completed global folds (= engine iterations at zero faults).
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+    /// Final per-node parameters: the θ each node carried at the last
+    /// fold it contributed to (θ⁰ for nodes that never ran).
+    pub thetas: Vec<Vec<f64>>,
+    /// Virtual time consumed (ticks).
+    pub virtual_time: Ticks,
+    pub counters: NetCounters,
+    /// Replayable event trace (empty when `tracing` was off).
+    pub trace: Vec<TraceEvent>,
+    /// Final liveness per node.
+    pub live: Vec<bool>,
+}
+
+// ---------------------------------------------------------------------------
+
+/// Stamp-indexed per-slot neighbour cache. Reads resolve to the largest
+/// stamp ≤ ideal (falling forward to the smallest stamp > ideal only when
+/// nothing older exists — a node that joined at a later round than the
+/// reader's ideal); entries below the resolved stamp are pruned, the
+/// newest entry is never dropped.
+#[derive(Debug, Default)]
+struct SlotCache {
+    theta: BTreeMap<u64, Vec<f64>>,
+    eta: BTreeMap<u64, f64>,
+}
+
+impl SlotCache {
+    fn theta_ready(&self, ideal: u64, stale: u64) -> bool {
+        self.theta
+            .range(ideal.saturating_sub(stale)..)
+            .next()
+            .is_some()
+    }
+
+    fn eta_ready(&self, ideal: u64, stale: u64) -> bool {
+        self.eta.range(ideal.saturating_sub(stale)..).next().is_some()
+    }
+
+    /// Resolve a θ read (see type docs). Caller guarantees non-emptiness.
+    fn read_theta(&mut self, ideal: u64) -> (u64, &[f64]) {
+        let best = self.theta.range(..=ideal).next_back().map(|(&s, _)| s);
+        match best {
+            Some(s) => {
+                self.theta.retain(|&k, _| k >= s);
+                (s, self.theta.get(&s).expect("retained").as_slice())
+            }
+            None => {
+                let (&s, v) = self.theta.iter().next().expect("cache checked nonempty");
+                (s, v.as_slice())
+            }
+        }
+    }
+
+    fn read_eta(&mut self, ideal: u64) -> (u64, f64) {
+        let best = self.eta.range(..=ideal).next_back().map(|(&s, _)| s);
+        match best {
+            Some(s) => {
+                self.eta.retain(|&k, _| k >= s);
+                (s, *self.eta.get(&s).expect("retained"))
+            }
+            None => {
+                let (&s, &v) = self.eta.iter().next().expect("cache checked nonempty");
+                (s, v)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Phase {
+    /// waiting to run phase A of round `t`
+    Solve,
+    /// waiting to run phase B of round `t`
+    Reduce,
+    /// phase B done; phase C pending (RB waits for the round fold here)
+    FoldWait,
+    /// scripted joiner that has not activated yet
+    Dormant,
+    /// left the network
+    Dead,
+    /// finished `max_iters` rounds
+    Done,
+}
+
+struct NodeRt<S> {
+    solver: S,
+    scheme: Box<dyn PenaltyScheme>,
+    /// θ^t before phase A of round t; θ^{t+1} after
+    theta: Vec<f64>,
+    theta_next: Vec<f64>,
+    lambda: Vec<f64>,
+    /// out-edge penalties η^t_{i→·}, neighbour-slot order (full degree)
+    etas: Vec<f64>,
+    nbr_mean_prev: Vec<f64>,
+    f_self_prev: f64,
+    t: u64,
+    phase: Phase,
+    caches: Vec<SlotCache>,
+    f_nb: Vec<f64>,
+    // carried across phases within a round (mirrors Engine scratch)
+    eta_sum: f64,
+    primal: f64,
+    dual: f64,
+    f_self: f64,
+    // silence-timeout bookkeeping
+    wake_epoch: u64,
+    timeout_armed: bool,
+    /// first round this node participates in (u64::MAX while dormant)
+    start_round: u64,
+    /// live-slot count at phase A — η̄ must divide the phase-A η sum by
+    /// the phase-A degree even if churn shrinks the live set mid-round
+    live_deg_a: usize,
+    /// the scheme reads folded global residuals (RB) → phase C must wait
+    /// for the round's fold
+    needs_globals: bool,
+}
+
+/// One node's round-`t` input to the global fold. Carries the raw η and θ
+/// vectors so the fold can reproduce the sequential engine's flat
+/// accumulation order bit-for-bit (a pre-reduced per-node partial would
+/// regroup the floating-point sums).
+struct Contribution {
+    f_self: f64,
+    primal: f64,
+    dual: f64,
+    etas: Vec<f64>,
+    theta: Vec<f64>,
+}
+
+struct FoldState {
+    /// round → per-node contribution slots
+    pending: BTreeMap<u64, Vec<Option<Contribution>>>,
+    next_fold: u64,
+    /// zeros at start, like the engine's `global_mean_prev`
+    global_mean_prev: Vec<f64>,
+    gmean: Vec<f64>,
+    checker: ConvergenceChecker,
+    recorder: Recorder,
+    /// θ each node carried at the last fold it contributed to
+    latest_committed: Vec<Vec<f64>>,
+    /// latest folded (global_primal, global_dual) — what RB observes
+    globals: (f64, f64),
+    converged: bool,
+}
+
+struct Scratch {
+    eta_wsum: Vec<f64>,
+    nbr_mean: Vec<f64>,
+    rhos: Vec<Vec<f64>>,
+    mask: Vec<bool>,
+}
+
+/// The asynchronous runner (see module docs).
+pub struct AsyncRunner<S: LocalSolver> {
+    cfg: NetConfig,
+    ctrl: TopologyController,
+    sim: NetSim,
+    nodes: Vec<NodeRt<S>>,
+    scratch: Scratch,
+    fold: FoldState,
+    /// deferred wake-ups (topology toggles, fold completions)
+    pending_wakes: Vec<NodeId>,
+    foldwait_dirty: bool,
+    stopped: bool,
+}
+
+impl<S: LocalSolver> AsyncRunner<S> {
+    /// Build a runner; one solver per graph node (like [`Engine::new`] —
+    /// θ⁰ seeding is shared-stream in id order, so the zero-fault run is
+    /// bit-identical to the engine's).
+    pub fn new(graph: Graph, mut solvers: Vec<S>, cfg: NetConfig, plan: FaultPlan)
+               -> AsyncRunner<S> {
+        let n = graph.len();
+        assert_eq!(n, solvers.len(), "one solver per node");
+        assert!(!solvers.is_empty());
+        let dim = solvers[0].dim();
+        assert!(solvers.iter().all(|s| s.dim() == dim), "homogeneous dims");
+        for ev in &plan.churn {
+            let node = match *ev {
+                super::sim::ChurnEvent::Join { node, .. }
+                | super::sim::ChurnEvent::Leave { node, .. } => node,
+            };
+            assert!(node < n, "churn event on node {node} out of range");
+        }
+        assert!(plan.initially_dormant.iter().all(|&i| i < n),
+                "dormant node out of range");
+
+        // θ⁰ from the engine's shared stream, id order — parity-critical
+        let mut rng = Pcg::new(cfg.seed, 0xE191E);
+        let thetas: Vec<Vec<f64>> = solvers
+            .iter_mut()
+            .map(|s| {
+                let th = s.initial_param(&mut rng);
+                assert_eq!(th.len(), dim);
+                th
+            })
+            .collect();
+
+        let dormant = plan.initially_dormant.clone();
+        let mut ctrl = TopologyController::new(graph, cfg.activity);
+        for &i in &dormant {
+            ctrl.view_mut().set_node(i, false);
+        }
+        let graph_ref = ctrl.view().graph();
+        let mut max_deg = 0usize;
+        let mut nodes: Vec<NodeRt<S>> = Vec::with_capacity(n);
+        for (i, (solver, theta)) in solvers.drain(..).zip(thetas).enumerate() {
+            let deg = graph_ref.degree(i);
+            max_deg = max_deg.max(deg);
+            let is_dormant = dormant.contains(&i);
+            let phase = if is_dormant {
+                Phase::Dormant
+            } else if cfg.max_iters == 0 {
+                Phase::Done
+            } else {
+                Phase::Solve
+            };
+            let scheme = make_scheme(cfg.scheme, cfg.params, deg);
+            let needs_globals = scheme.needs_global_residuals();
+            nodes.push(NodeRt {
+                solver,
+                scheme,
+                theta,
+                theta_next: vec![0.0; dim],
+                lambda: vec![0.0; dim],
+                etas: vec![cfg.params.eta0; deg],
+                nbr_mean_prev: vec![0.0; dim],
+                f_self_prev: f64::INFINITY,
+                t: 0,
+                phase,
+                caches: (0..deg).map(|_| SlotCache::default()).collect(),
+                f_nb: Vec::with_capacity(deg),
+                eta_sum: 0.0,
+                primal: 0.0,
+                dual: 0.0,
+                f_self: 0.0,
+                wake_epoch: 0,
+                timeout_armed: false,
+                start_round: if is_dormant { u64::MAX } else { 0 },
+                live_deg_a: 0,
+                needs_globals,
+            });
+        }
+        let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        let latest_committed = nodes.iter().map(|nd| nd.theta.clone()).collect();
+        AsyncRunner {
+            scratch: Scratch {
+                eta_wsum: vec![0.0; dim],
+                nbr_mean: vec![0.0; dim],
+                rhos: vec![vec![0.0; dim]; max_deg],
+                mask: Vec::with_capacity(max_deg),
+            },
+            fold: FoldState {
+                pending: BTreeMap::new(),
+                next_fold: 0,
+                global_mean_prev: vec![0.0; dim],
+                gmean: vec![0.0; dim],
+                checker: ConvergenceChecker::new(cfg.tol)
+                    .with_patience(cfg.patience)
+                    .with_warmup(cfg.warmup),
+                recorder: Recorder::with_capacity(cfg.max_iters),
+                latest_committed,
+                globals: (f64::INFINITY, f64::INFINITY),
+                converged: false,
+            },
+            pending_wakes: Vec::new(),
+            foldwait_dirty: false,
+            stopped: false,
+            nodes,
+            ctrl,
+            sim,
+            cfg,
+        }
+    }
+
+    /// Drive the simulation to completion and report.
+    pub fn run(mut self) -> NetReport {
+        self.init_handshake();
+        let n = self.nodes.len();
+        for i in 0..n {
+            self.try_advance(i, false);
+        }
+        self.drain();
+
+        while !self.stopped {
+            let Some((at, event)) = self.sim.pop() else { break };
+            // stale wake-ups are skipped without advancing the clock, so
+            // virtual time reflects real activity only
+            if let Event::Wake { node, epoch } = event {
+                let nd = &self.nodes[node];
+                if epoch != nd.wake_epoch
+                    || matches!(nd.phase, Phase::Dormant | Phase::Dead | Phase::Done)
+                {
+                    continue;
+                }
+            }
+            self.sim.advance_to(at);
+            match event {
+                Event::Deliver { src, dst, payload, dup: _ } => {
+                    self.on_deliver(src, dst, payload);
+                }
+                Event::Wake { node, epoch: _ } => {
+                    self.sim.counters.timeouts += 1;
+                    self.nodes[node].timeout_armed = false;
+                    self.try_advance(node, true);
+                }
+                Event::Join { node } => self.on_join(node),
+                Event::Leave { node } => self.on_leave(node),
+            }
+            self.drain();
+        }
+        self.finish()
+    }
+
+    // -- event handlers -----------------------------------------------------
+
+    fn init_handshake(&mut self) {
+        let n = self.nodes.len();
+        for i in 0..n {
+            if !self.ctrl.view().node_live(i) {
+                continue;
+            }
+            self.broadcast_state(i, 0, 0);
+        }
+    }
+
+    /// Reliably send node i's current θ (stamped `ts`) and η (stamped
+    /// `es`) to every live neighbour — the join/init handshake.
+    fn broadcast_state(&mut self, i: NodeId, ts: u64, es: u64) {
+        let deg = self.ctrl.view().graph().degree(i);
+        for slot in 0..deg {
+            if !self.ctrl.view().slot_live(i, slot) {
+                continue;
+            }
+            let j = self.ctrl.view().graph().neighbors(i)[slot];
+            let theta = self.nodes[i].theta.clone();
+            let eta = self.nodes[i].etas[slot];
+            self.sim.send(i, j, Payload::Theta { stamp: ts, theta }, true);
+            self.sim.send(i, j, Payload::Eta { stamp: es, eta }, true);
+        }
+    }
+
+    fn on_deliver(&mut self, src: NodeId, dst: NodeId, payload: Payload) {
+        if matches!(self.nodes[dst].phase, Phase::Dormant | Phase::Dead) {
+            self.sim.note_dead_delivery(src, dst, &payload);
+            return;
+        }
+        let slot = self
+            .ctrl
+            .view()
+            .graph()
+            .edge_slot(dst, src)
+            .expect("messages travel existing edges");
+        self.sim.note_delivered(src, dst, &payload);
+        let cache = &mut self.nodes[dst].caches[slot];
+        match payload {
+            Payload::Theta { stamp, theta } => {
+                cache.theta.insert(stamp, theta);
+            }
+            Payload::Eta { stamp, eta } => {
+                cache.eta.insert(stamp, eta);
+            }
+        }
+        self.try_advance(dst, false);
+    }
+
+    fn on_join(&mut self, node: NodeId) {
+        // a rejoiner (left earlier, phase Dead) may have been ahead of the
+        // surviving peers when it left; never restart below one past its
+        // own last round, or it would contribute the same round twice
+        let rejoin_floor = if self.nodes[node].phase == Phase::Dead {
+            self.nodes[node].t + 1
+        } else {
+            0
+        };
+        if !self.ctrl.apply_join(node, &mut self.sim) {
+            return;
+        }
+        // enter at the current round frontier: one past the most advanced
+        // live peer, and never below the fold cursor
+        let frontier = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(j, nd)| {
+                j != node && !matches!(nd.phase, Phase::Dormant | Phase::Dead)
+            })
+            .map(|(_, nd)| nd.t + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.fold.next_fold)
+            .max(rejoin_floor);
+        let start = frontier.min(self.cfg.max_iters as u64);
+        {
+            let nd = &mut self.nodes[node];
+            nd.t = start;
+            nd.start_round = start;
+            nd.phase = if start >= self.cfg.max_iters as u64 {
+                Phase::Done
+            } else {
+                Phase::Solve
+            };
+        }
+        // two-way reliable state handshake so neither side starts from an
+        // empty cache
+        self.broadcast_state(node, start, start);
+        let deg = self.ctrl.view().graph().degree(node);
+        for slot in 0..deg {
+            if !self.ctrl.view().slot_live(node, slot) {
+                continue;
+            }
+            let j = self.ctrl.view().graph().neighbors(node)[slot];
+            let (ts, es) = self.current_stamps(j);
+            let rev = self
+                .ctrl
+                .view()
+                .graph()
+                .edge_slot(j, node)
+                .expect("graph symmetry");
+            let theta = self.nodes[j].theta.clone();
+            let eta = self.nodes[j].etas[rev];
+            self.sim.send(j, node, Payload::Theta { stamp: ts, theta }, true);
+            self.sim.send(j, node, Payload::Eta { stamp: es, eta }, true);
+            self.pending_wakes.push(j);
+        }
+        self.try_advance(node, false);
+    }
+
+    /// Stamps describing what a node's `theta`/`etas` fields currently
+    /// hold (phase-dependent; see the protocol in the module docs).
+    fn current_stamps(&self, i: NodeId) -> (u64, u64) {
+        let nd = &self.nodes[i];
+        match nd.phase {
+            Phase::Reduce | Phase::FoldWait => (nd.t + 1, nd.t),
+            _ => (nd.t, nd.t),
+        }
+    }
+
+    fn on_leave(&mut self, node: NodeId) {
+        if !self.ctrl.apply_leave(node, &mut self.sim) {
+            return;
+        }
+        self.nodes[node].phase = Phase::Dead;
+        // fold expectations shrank; blocked neighbours may be ready now
+        let deg = self.ctrl.view().graph().degree(node);
+        for slot in 0..deg {
+            let j = self.ctrl.view().graph().neighbors(node)[slot];
+            if !matches!(self.nodes[j].phase, Phase::Dormant | Phase::Dead) {
+                self.pending_wakes.push(j);
+            }
+        }
+        self.try_folds();
+    }
+
+    // -- the node state machine --------------------------------------------
+
+    fn try_advance(&mut self, i: NodeId, mut force: bool) {
+        loop {
+            if self.stopped {
+                return;
+            }
+            match self.nodes[i].phase {
+                Phase::Dormant | Phase::Dead | Phase::Done => return,
+                Phase::Solve => {
+                    let ok = phase_a(&mut self.nodes[i], i, self.ctrl.view(),
+                                     &mut self.scratch, &mut self.sim, &self.cfg,
+                                     force);
+                    if !ok {
+                        self.arm_timeout(i);
+                        return;
+                    }
+                    self.nodes[i].phase = Phase::Reduce;
+                }
+                Phase::Reduce => {
+                    let contrib = phase_b(&mut self.nodes[i], i, self.ctrl.view(),
+                                          &mut self.scratch, &mut self.sim,
+                                          &self.cfg, force);
+                    let Some(contrib) = contrib else {
+                        self.arm_timeout(i);
+                        return;
+                    };
+                    let t = self.nodes[i].t;
+                    self.nodes[i].phase = Phase::FoldWait;
+                    self.record_contribution(t, i, contrib);
+                    self.try_folds();
+                    if self.stopped {
+                        return;
+                    }
+                }
+                Phase::FoldWait => {
+                    let t = self.nodes[i].t;
+                    if self.nodes[i].needs_globals && self.fold.next_fold <= t {
+                        return; // woken by the fold (no timeout: folds
+                                // complete as peers progress)
+                    }
+                    let toggled = phase_c(&mut self.nodes[i], i, &mut self.ctrl,
+                                          &mut self.sim, &self.cfg,
+                                          self.fold.globals,
+                                          &mut self.scratch.mask);
+                    for (a, b) in toggled {
+                        self.pending_wakes.push(a);
+                        self.pending_wakes.push(b);
+                    }
+                    let nd = &mut self.nodes[i];
+                    nd.t += 1;
+                    nd.phase = if nd.t >= self.cfg.max_iters as u64 {
+                        Phase::Done
+                    } else {
+                        Phase::Solve
+                    };
+                }
+            }
+            // progress happened: invalidate any armed timeout
+            let nd = &mut self.nodes[i];
+            nd.wake_epoch += 1;
+            nd.timeout_armed = false;
+            force = false;
+        }
+    }
+
+    fn arm_timeout(&mut self, i: NodeId) {
+        let timeout = self.cfg.silence_timeout;
+        if timeout == 0 || self.nodes[i].timeout_armed {
+            return;
+        }
+        self.nodes[i].timeout_armed = true;
+        let epoch = self.nodes[i].wake_epoch;
+        let at = self.sim.now() + timeout;
+        self.sim.schedule(at, Event::Wake { node: i, epoch });
+    }
+
+    /// Process deferred wake-ups until quiescent.
+    fn drain(&mut self) {
+        loop {
+            if self.stopped {
+                return;
+            }
+            if let Some(i) = self.pending_wakes.pop() {
+                if !matches!(self.nodes[i].phase,
+                             Phase::Dormant | Phase::Dead | Phase::Done) {
+                    self.try_advance(i, false);
+                }
+                continue;
+            }
+            if self.foldwait_dirty {
+                self.foldwait_dirty = false;
+                for i in 0..self.nodes.len() {
+                    if self.nodes[i].phase == Phase::FoldWait {
+                        self.try_advance(i, false);
+                    }
+                }
+                continue;
+            }
+            return;
+        }
+    }
+
+    // -- folds ---------------------------------------------------------------
+
+    fn record_contribution(&mut self, round: u64, i: NodeId, c: Contribution) {
+        let n = self.nodes.len();
+        let slots = self
+            .fold
+            .pending
+            .entry(round)
+            .or_insert_with(|| (0..n).map(|_| None).collect());
+        debug_assert!(slots[i].is_none(), "one contribution per node per round");
+        slots[i] = Some(c);
+    }
+
+    /// Whether node `i` owes a contribution to round `r`.
+    fn expects(&self, i: NodeId, r: u64) -> bool {
+        let nd = &self.nodes[i];
+        !matches!(nd.phase, Phase::Dead | Phase::Dormant) && nd.start_round <= r
+    }
+
+    fn try_folds(&mut self) {
+        let n = self.nodes.len();
+        while !self.stopped {
+            let r = self.fold.next_fold;
+            if r >= self.cfg.max_iters as u64 {
+                break;
+            }
+            let Some(slots) = self.fold.pending.get(&r) else { break };
+            let complete = (0..n).all(|i| slots[i].is_some() || !self.expects(i, r));
+            if !complete {
+                break;
+            }
+            let slots = self.fold.pending.remove(&r).expect("present");
+            self.do_fold(r, slots);
+        }
+        // contributions for rounds before the cursor can never fold (their
+        // owner died mid-round); drop them so memory stays bounded
+        let cursor = self.fold.next_fold;
+        self.fold.pending.retain(|&r, _| r >= cursor);
+    }
+
+    /// Combine a completed round in node-id order with the sequential
+    /// engine's exact accumulation order (flat sums — no per-shard
+    /// regrouping), push the [`IterStats`], run the convergence check.
+    fn do_fold(&mut self, r: u64, slots: Vec<Option<Contribution>>) {
+        let dim = self.fold.gmean.len();
+
+        let mut objective = 0.0;
+        let mut max_primal: f64 = 0.0;
+        let mut max_dual: f64 = 0.0;
+        let mut min_eta = f64::INFINITY;
+        let mut max_eta: f64 = 0.0;
+        let mut sum_eta = 0.0;
+        let mut cnt = 0usize;
+        let mut m = 0usize;
+        self.fold.gmean.iter_mut().for_each(|x| *x = 0.0);
+        for c in slots.iter().flatten() {
+            objective += c.f_self;
+            max_primal = max_primal.max(c.primal);
+            max_dual = max_dual.max(c.dual);
+            for &e in &c.etas {
+                min_eta = min_eta.min(e);
+                max_eta = max_eta.max(e);
+                sum_eta += e;
+                cnt += 1;
+            }
+            for k in 0..dim {
+                self.fold.gmean[k] += c.theta[k];
+            }
+            m += 1;
+        }
+        if m == 0 {
+            return; // nothing to fold (all contributors died)
+        }
+        self.fold.gmean.iter_mut().for_each(|x| *x /= m as f64);
+        let mut gr2 = 0.0;
+        for c in slots.iter().flatten() {
+            for k in 0..dim {
+                let d = c.theta[k] - self.fold.gmean[k];
+                gr2 += d * d;
+            }
+        }
+        let mut gs2 = 0.0;
+        for k in 0..dim {
+            let d = self.fold.gmean[k] - self.fold.global_mean_prev[k];
+            gs2 += d * d;
+        }
+        let global_primal = gr2.sqrt();
+        let global_dual = self.cfg.params.eta0 * (m as f64).sqrt() * gs2.sqrt();
+        self.fold
+            .global_mean_prev
+            .copy_from_slice(&self.fold.gmean);
+
+        for (i, c) in slots.into_iter().enumerate() {
+            if let Some(c) = c {
+                self.fold.latest_committed[i] = c.theta;
+            }
+        }
+
+        self.fold.recorder.push(IterStats {
+            iter: r as usize,
+            objective,
+            max_primal,
+            max_dual,
+            mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
+            min_eta: if cnt == 0 { 0.0 } else { min_eta },
+            max_eta,
+            app_error: 0.0,
+        });
+        self.fold.globals = (global_primal, global_dual);
+        self.fold.next_fold = r + 1;
+        self.sim.record(TraceKind::Fold { round: r });
+        self.foldwait_dirty = true;
+
+        let hit = self.fold.checker.update(objective);
+        if hit {
+            self.fold.converged = true;
+        }
+        if hit || r + 1 == self.cfg.max_iters as u64 {
+            self.stopped = true;
+            self.sim.record(TraceKind::Stop { rounds: r + 1 });
+        }
+    }
+
+    fn finish(mut self) -> NetReport {
+        let n = self.nodes.len();
+        let live = (0..n).map(|i| self.ctrl.view().node_live(i)).collect();
+        NetReport {
+            iterations: self.fold.next_fold as usize,
+            converged: self.fold.converged,
+            recorder: self.fold.recorder,
+            thetas: self.fold.latest_committed,
+            virtual_time: self.sim.now(),
+            counters: self.sim.counters,
+            trace: std::mem::take(&mut self.sim.trace),
+            live,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase bodies. Free functions over disjoint runner fields; each mirrors
+// the corresponding block of `Engine::step` exactly (same loops, same
+// accumulation order) so the zero-fault run is bit-identical.
+
+/// Check readiness of every live slot of node `i` for a phase. Forced
+/// progress still requires a non-empty cache per live slot (guaranteed
+/// after the reliable handshake has arrived).
+fn slots_ready<S: LocalSolver>(node: &NodeRt<S>, i: NodeId, view: &LiveView,
+                               theta_ideal: u64, eta_ideal: Option<u64>,
+                               stale: u64, force: bool) -> bool {
+    let deg = view.graph().degree(i);
+    for slot in 0..deg {
+        if !view.slot_live(i, slot) {
+            continue;
+        }
+        let c = &node.caches[slot];
+        if force {
+            if c.theta.is_empty() || (eta_ideal.is_some() && c.eta.is_empty()) {
+                return false;
+            }
+        } else if !c.theta_ready(theta_ideal, stale)
+            || eta_ideal.is_some_and(|ei| !c.eta_ready(ei, stale))
+        {
+            return false;
+        }
+    }
+    true
+}
+
+/// Count a resolved read's staleness; trace forced fallbacks.
+fn note_read(sim: &mut NetSim, node: NodeId, nbr: NodeId, ideal: u64, used: u64,
+             stale: u64) {
+    if used < ideal {
+        sim.counters.stale_reads += 1;
+        if used + stale < ideal {
+            sim.counters.fallback_reads += 1;
+            sim.record(TraceKind::Fallback { node, nbr, ideal, used });
+        }
+    }
+}
+
+/// Phase A: the local solve on (ideally) epoch-`t` neighbour parameters.
+fn phase_a<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
+                           scratch: &mut Scratch, sim: &mut NetSim,
+                           cfg: &NetConfig, force: bool) -> bool {
+    let t = node.t;
+    if !slots_ready(node, i, view, t, None, cfg.max_staleness, force) {
+        return false;
+    }
+    let graph = view.graph();
+    let dim = node.theta.len();
+    let mut eta_sum = 0.0;
+    let mut live_deg = 0usize;
+    scratch.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+    for (slot, &j) in graph.neighbors(i).iter().enumerate() {
+        if !view.slot_live(i, slot) {
+            continue;
+        }
+        live_deg += 1;
+        let e = node.etas[slot];
+        eta_sum += e;
+        let (used, tj) = node.caches[slot].read_theta(t);
+        for k in 0..dim {
+            scratch.eta_wsum[k] += e * (node.theta[k] + tj[k]);
+        }
+        note_read(sim, i, j, t, used, cfg.max_staleness);
+    }
+    node.eta_sum = eta_sum;
+    node.live_deg_a = live_deg;
+    node.solver.solve_into(&node.theta, &node.lambda, eta_sum,
+                           &scratch.eta_wsum, &mut node.theta_next);
+    std::mem::swap(&mut node.theta, &mut node.theta_next);
+
+    // broadcast θ^{t+1}
+    for (slot, &j) in graph.neighbors(i).iter().enumerate() {
+        if !view.slot_live(i, slot) {
+            continue;
+        }
+        sim.send(i, j, Payload::Theta { stamp: t + 1, theta: node.theta.clone() },
+                 false);
+    }
+    true
+}
+
+/// Phase B: λ update, residuals, objectives — the round-`t` reduce.
+fn phase_b<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
+                           scratch: &mut Scratch, sim: &mut NetSim,
+                           cfg: &NetConfig, force: bool) -> Option<Contribution> {
+    let t = node.t;
+    if !slots_ready(node, i, view, t + 1, Some(t), cfg.max_staleness, force) {
+        return None;
+    }
+    let graph = view.graph();
+    let dim = node.theta.len();
+    let deg = graph.degree(i);
+
+    // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), η̄ the edge-mean penalty, fused with
+    // the neighbour-mean accumulation so each slot's θ^{t+1} is resolved
+    // once. λ and nbr_mean are independent accumulators, each still fed
+    // in slot order — the floating-point grouping (and hence zero-fault
+    // bit-parity with the engine's two separate passes) is unchanged.
+    scratch.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
+    let mut live_deg = 0usize;
+    for (slot, &j) in graph.neighbors(i).iter().enumerate() {
+        if !view.slot_live(i, slot) {
+            continue;
+        }
+        live_deg += 1;
+        let (used_e, eta_in) = node.caches[slot].read_eta(t);
+        note_read(sim, i, j, t, used_e, cfg.max_staleness);
+        let eta_bar = 0.5 * (node.etas[slot] + eta_in);
+        let (used_t, tj) = node.caches[slot].read_theta(t + 1);
+        for k in 0..dim {
+            node.lambda[k] += 0.5 * eta_bar * (node.theta[k] - tj[k]);
+            scratch.nbr_mean[k] += tj[k];
+        }
+        note_read(sim, i, j, t + 1, used_t, cfg.max_staleness);
+    }
+
+    // local residuals (paper eq. 5) over the live neighbourhood. The
+    // neighbour mean divides by the phase-B live count (it must match the
+    // sum just accumulated), while η̄ divides the phase-A η sum by the
+    // phase-A live count — mid-round churn must not inflate the dual
+    // residual by pairing one snapshot's sum with the other's degree. At
+    // a stable topology both counts are equal (and engine-bit-identical).
+    let inv_deg = 1.0 / live_deg.max(1) as f64;
+    scratch.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+    let inv_deg_a = 1.0 / node.live_deg_a.max(1) as f64;
+    let eta_bar_node = node.eta_sum * inv_deg_a;
+    let mut r2 = 0.0;
+    let mut s2 = 0.0;
+    for k in 0..dim {
+        let r = node.theta[k] - scratch.nbr_mean[k];
+        let s = eta_bar_node * (scratch.nbr_mean[k] - node.nbr_mean_prev[k]);
+        r2 += r * r;
+        s2 += s * s;
+    }
+    node.nbr_mean_prev.copy_from_slice(&scratch.nbr_mean);
+    node.primal = r2.sqrt();
+    node.dual = s2.sqrt();
+
+    // objectives (f at bridge midpoints only if the scheme asks)
+    node.f_self = node.solver.objective(&node.theta);
+    node.f_nb.clear();
+    if node.scheme.needs_neighbor_objectives() {
+        for slot in 0..deg {
+            let rho = &mut scratch.rhos[slot];
+            if view.slot_live(i, slot) {
+                let (_, tj) = node.caches[slot].read_theta(t + 1);
+                for k in 0..dim {
+                    rho[k] = 0.5 * (node.theta[k] + tj[k]);
+                }
+            } else {
+                // dead slot: placeholder the scheme will mask out
+                rho.copy_from_slice(&node.theta);
+            }
+        }
+        node.solver.objective_batch_into(&scratch.rhos[..deg], &mut node.f_nb);
+    } else {
+        node.f_nb.resize(deg, 0.0);
+    }
+
+    Some(Contribution {
+        f_self: node.f_self,
+        primal: node.primal,
+        dual: node.dual,
+        etas: node.etas.clone(),
+        theta: node.theta.clone(),
+    })
+}
+
+/// Phase C: penalty-scheme update, η broadcast, topology observation.
+fn phase_c<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId,
+                           ctrl: &mut TopologyController, sim: &mut NetSim,
+                           cfg: &NetConfig, globals: (f64, f64),
+                           mask_scratch: &mut Vec<bool>)
+                           -> Vec<(NodeId, NodeId)> {
+    let t = node.t;
+    let deg = ctrl.view().graph().degree(i);
+    mask_scratch.clear();
+    let mut all_live = true;
+    for slot in 0..deg {
+        let l = ctrl.view().slot_live(i, slot);
+        all_live &= l;
+        mask_scratch.push(l);
+    }
+    // parity-critical: pass None when fully live, so the synchronous
+    // engines and the zero-fault async run construct identical
+    // observations
+    let live = if all_live { None } else { Some(&mask_scratch[..]) };
+    let obs = NodeObservation {
+        t: t as usize,
+        primal_norm: node.primal,
+        dual_norm: node.dual,
+        global_primal: globals.0,
+        global_dual: globals.1,
+        f_self: node.f_self,
+        f_self_prev: node.f_self_prev,
+        f_neighbors: &node.f_nb,
+        live,
+    };
+    node.scheme.update(&obs, &mut node.etas);
+    node.f_self_prev = node.f_self;
+
+    // broadcast η^{t+1} (one scalar per neighbour — the directed penalty
+    // the receiver needs for its symmetrized dual step)
+    for (slot, &j) in ctrl.view().graph().neighbors(i).iter().enumerate() {
+        if !ctrl.view().slot_live(i, slot) {
+            continue;
+        }
+        sim.send(i, j, Payload::Eta { stamp: t + 1, eta: node.etas[slot] }, false);
+    }
+
+    ctrl.observe_etas(i, &node.etas, sim)
+}

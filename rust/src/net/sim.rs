@@ -1,0 +1,509 @@
+//! Deterministic, seeded discrete-event network simulator.
+//!
+//! A virtual clock in integer **ticks**, a binary-heap event queue with a
+//! monotone sequence number as the tie-break (so simultaneous events pop
+//! in schedule order — total determinism even at zero latency), a seeded
+//! [`Pcg`] stream for every stochastic decision (per-message latency
+//! jitter, Bernoulli loss, duplication), scripted transient partitions and
+//! node join/leave schedules, and an append-only event trace. Two runs
+//! with the same seed and plan produce bit-identical traces; the
+//! determinism test in `net::tests` asserts exactly that.
+//!
+//! The simulator is pure transport + clock: it knows which messages exist
+//! and when they arrive, but nothing about ADMM. The consumer
+//! ([`super::AsyncRunner`]) pops [`Event`]s one at a time and reacts;
+//! liveness of the *destination* is the consumer's concern (a message to a
+//! node that died in flight is counted/traced here when the consumer
+//! reports it via [`NetSim::note_dead_delivery`]).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::NodeId;
+use crate::metrics::NetCounters;
+use crate::util::rng::Pcg;
+
+/// Virtual time in ticks (dimensionless; latency/timeout parameters give
+/// it meaning per scenario).
+pub type Ticks = u64;
+
+/// Per-link delivery model applied to every steady-state message.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkModel {
+    /// fixed propagation delay
+    pub base: Ticks,
+    /// uniform extra delay in `[0, jitter]` (0 ⇒ deterministic latency)
+    pub jitter: Ticks,
+    /// Bernoulli message-loss probability
+    pub loss: f64,
+    /// Bernoulli duplication probability (the copy takes an independent
+    /// latency draw, so duplicates can arrive out of order)
+    pub dup: f64,
+}
+
+impl LinkModel {
+    /// The zero-fault oracle link: instantaneous, lossless, no dups.
+    pub fn ideal() -> LinkModel {
+        LinkModel { base: 0, jitter: 0, loss: 0.0, dup: 0.0 }
+    }
+}
+
+/// A scripted transient partition: while `start <= now < end`, messages
+/// between `group` and its complement are dropped. Node membership is
+/// evaluated at send time.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub start: Ticks,
+    pub end: Ticks,
+    pub group: Vec<NodeId>,
+}
+
+impl Partition {
+    fn cuts(&self, now: Ticks, a: NodeId, b: NodeId) -> bool {
+        if now < self.start || now >= self.end {
+            return false;
+        }
+        let ga = self.group.contains(&a);
+        let gb = self.group.contains(&b);
+        ga != gb
+    }
+}
+
+/// One scripted churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnEvent {
+    /// Node activates at `at` (it must be listed in
+    /// [`FaultPlan::initially_dormant`] or have left earlier).
+    Join { at: Ticks, node: NodeId },
+    /// Node halts at `at`; its edges are masked and in-flight messages to
+    /// it are dropped on delivery.
+    Leave { at: Ticks, node: NodeId },
+}
+
+impl ChurnEvent {
+    pub fn at(&self) -> Ticks {
+        match *self {
+            ChurnEvent::Join { at, .. } | ChurnEvent::Leave { at, .. } => at,
+        }
+    }
+}
+
+/// Everything that can go wrong, scripted per scenario.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub link: LinkModel,
+    pub partitions: Vec<Partition>,
+    pub churn: Vec<ChurnEvent>,
+    /// nodes that exist in the frozen graph but only activate at their
+    /// scripted `Join`
+    pub initially_dormant: Vec<NodeId>,
+}
+
+impl FaultPlan {
+    /// The zero-fault plan (the oracle scenario).
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            link: LinkModel::ideal(),
+            partitions: Vec::new(),
+            churn: Vec::new(),
+            initially_dormant: Vec::new(),
+        }
+    }
+
+    /// Whether a message from `a` to `b` sent at `now` crosses an active
+    /// partition cut.
+    pub fn partitioned(&self, now: Ticks, a: NodeId, b: NodeId) -> bool {
+        self.partitions.iter().any(|p| p.cuts(now, a, b))
+    }
+}
+
+/// Message payloads of the async ADMM protocol (see
+/// [`super::async_runner`] for the protocol itself). `stamp = r` always
+/// means "state of epoch r": θ^r, or the sender's out-edge penalty
+/// η^r_{src→dst}.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    Theta { stamp: u64, theta: Vec<f64> },
+    Eta { stamp: u64, eta: f64 },
+}
+
+impl Payload {
+    pub fn stamp(&self) -> u64 {
+        match *self {
+            Payload::Theta { stamp, .. } | Payload::Eta { stamp, .. } => stamp,
+        }
+    }
+
+    fn kind_name(&self) -> &'static str {
+        match self {
+            Payload::Theta { .. } => "theta",
+            Payload::Eta { .. } => "eta",
+        }
+    }
+}
+
+/// What the consumer sees when it pops the queue.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// A message arrival. `dup` marks duplicated copies (for the trace).
+    Deliver { src: NodeId, dst: NodeId, payload: Payload, dup: bool },
+    /// A silence-timeout wakeup armed by the consumer; `epoch` lets the
+    /// consumer discard wakeups that a later advance made stale.
+    Wake { node: NodeId, epoch: u64 },
+    /// Scripted churn firing.
+    Join { node: NodeId },
+    Leave { node: NodeId },
+}
+
+/// Replayable trace entry. Compact on purpose: payload *contents* are
+/// omitted (θ vectors would dwarf the trace), but stamps, endpoints and
+/// causes are all there, so two traces compare meaningfully.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at: Ticks,
+    pub kind: TraceKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TraceKind {
+    Send { src: NodeId, dst: NodeId, what: &'static str, stamp: u64 },
+    Deliver { src: NodeId, dst: NodeId, what: &'static str, stamp: u64 },
+    DropLoss { src: NodeId, dst: NodeId, stamp: u64 },
+    DropPartition { src: NodeId, dst: NodeId, stamp: u64 },
+    DropDead { src: NodeId, dst: NodeId, stamp: u64 },
+    Duplicate { src: NodeId, dst: NodeId, stamp: u64 },
+    Join { node: NodeId },
+    Leave { node: NodeId },
+    EdgeOff { a: NodeId, b: NodeId },
+    EdgeOn { a: NodeId, b: NodeId },
+    /// a silent-neighbour fallback read (stamp = what was actually used)
+    Fallback { node: NodeId, nbr: NodeId, ideal: u64, used: u64 },
+    /// a completed global fold
+    Fold { round: u64 },
+    /// the run stopped (converged or out of budget) after `rounds` folds
+    Stop { rounds: u64 },
+}
+
+/// Heap entry: ordered by (time, seq) via the derived lexicographic Ord,
+/// wrapped in `Reverse` for min-heap behaviour.
+#[derive(Debug, Clone, PartialEq, Eq)]
+struct Scheduled {
+    at: Ticks,
+    seq: u64,
+    event: Event,
+}
+
+impl Ord for Scheduled {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.at, self.seq).cmp(&(other.at, other.seq))
+    }
+}
+
+impl PartialOrd for Scheduled {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+// Event contains f64 payloads, so Eq must be asserted manually; payload
+// equality is only used by tests comparing deterministic replays, where
+// bitwise f64 equality is exactly the intended semantics.
+impl Eq for Event {}
+
+/// The simulator (see module docs).
+pub struct NetSim {
+    now: Ticks,
+    seq: u64,
+    queue: BinaryHeap<Reverse<Scheduled>>,
+    rng: Pcg,
+    plan: FaultPlan,
+    tracing: bool,
+    pub trace: Vec<TraceEvent>,
+    pub counters: NetCounters,
+}
+
+impl NetSim {
+    pub fn new(seed: u64, plan: FaultPlan, tracing: bool) -> NetSim {
+        let mut sim = NetSim {
+            now: 0,
+            seq: 0,
+            queue: BinaryHeap::new(),
+            // dedicated stream so network randomness never perturbs the
+            // optimization seeds
+            rng: Pcg::new(seed, 0x5E7),
+            plan,
+            tracing,
+            trace: Vec::new(),
+            counters: NetCounters::default(),
+        };
+        // churn is part of the plan; schedule it up-front so the queue is
+        // the single source of "what happens next"
+        let churn = sim.plan.churn.clone();
+        for ev in churn {
+            match ev {
+                ChurnEvent::Join { at, node } => sim.schedule(at, Event::Join { node }),
+                ChurnEvent::Leave { at, node } => sim.schedule(at, Event::Leave { node }),
+            }
+        }
+        sim
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> Ticks {
+        self.now
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Append a consumer-side trace entry (fallback reads, folds, topology
+    /// decisions) at the current virtual time.
+    pub fn record(&mut self, kind: TraceKind) {
+        if self.tracing {
+            self.trace.push(TraceEvent { at: self.now, kind });
+        }
+    }
+
+    /// Schedule an event at absolute time `at` (clamped to now).
+    pub fn schedule(&mut self, at: Ticks, event: Event) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        self.queue.push(Reverse(Scheduled { at, seq, event }));
+    }
+
+    /// Send a protocol message, applying the fault plan. `reliable`
+    /// bypasses loss/duplication/partitions (used for the one-shot join
+    /// handshake, so a node that ever had a live neighbour also has a
+    /// cache entry for it); latency still applies.
+    pub fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool) {
+        self.counters.sent += 1;
+        let stamp = payload.stamp();
+        let what = payload.kind_name();
+        self.record(TraceKind::Send { src, dst, what, stamp });
+        if !reliable {
+            if self.plan.partitioned(self.now, src, dst) {
+                self.counters.dropped_partition += 1;
+                self.record(TraceKind::DropPartition { src, dst, stamp });
+                return;
+            }
+            if self.plan.link.loss > 0.0 && self.rng.f64() < self.plan.link.loss {
+                self.counters.dropped_loss += 1;
+                self.record(TraceKind::DropLoss { src, dst, stamp });
+                return;
+            }
+        }
+        let copies = if !reliable && self.plan.link.dup > 0.0
+            && self.rng.f64() < self.plan.link.dup
+        {
+            self.counters.duplicated += 1;
+            self.record(TraceKind::Duplicate { src, dst, stamp });
+            2
+        } else {
+            1
+        };
+        for copy in 0..copies {
+            let latency = self.sample_latency();
+            self.schedule(self.now + latency, Event::Deliver {
+                src,
+                dst,
+                payload: payload.clone(),
+                dup: copy > 0,
+            });
+        }
+    }
+
+    fn sample_latency(&mut self) -> Ticks {
+        let l = self.plan.link;
+        if l.jitter == 0 {
+            l.base
+        } else {
+            l.base + self.rng.below(l.jitter as usize + 1) as Ticks
+        }
+    }
+
+    /// Pop the next event *without* advancing the virtual clock: the
+    /// consumer decides whether the event is meaningful (a stale wakeup
+    /// whose epoch no longer matches should not drag virtual time forward)
+    /// and calls [`NetSim::advance_to`] before handling it.
+    pub fn pop(&mut self) -> Option<(Ticks, Event)> {
+        let Reverse(s) = self.queue.pop()?;
+        debug_assert!(s.at >= self.now, "virtual clock must be monotone");
+        Some((s.at, s.event))
+    }
+
+    /// Advance the virtual clock to `at` (monotone).
+    pub fn advance_to(&mut self, at: Ticks) {
+        debug_assert!(at >= self.now);
+        self.now = at;
+    }
+
+    /// [`NetSim::pop`] + [`NetSim::advance_to`] in one call (tests and
+    /// simple consumers).
+    pub fn pop_advance(&mut self) -> Option<Event> {
+        let (at, event) = self.pop()?;
+        self.advance_to(at);
+        Some(event)
+    }
+
+    /// Bookkeeping for a delivery the consumer accepted.
+    pub fn note_delivered(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        self.counters.delivered += 1;
+        self.record(TraceKind::Deliver {
+            src,
+            dst,
+            what: payload.kind_name(),
+            stamp: payload.stamp(),
+        });
+    }
+
+    /// Bookkeeping for a delivery whose destination was dead.
+    pub fn note_dead_delivery(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        self.counters.dropped_dead += 1;
+        self.record(TraceKind::DropDead { src, dst, stamp: payload.stamp() });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn theta(stamp: u64) -> Payload {
+        Payload::Theta { stamp, theta: vec![1.0, 2.0] }
+    }
+
+    #[test]
+    fn events_pop_in_time_then_seq_order() {
+        let mut sim = NetSim::new(0, FaultPlan::none(), true);
+        sim.schedule(5, Event::Wake { node: 0, epoch: 0 });
+        sim.schedule(2, Event::Wake { node: 1, epoch: 0 });
+        sim.schedule(2, Event::Wake { node: 2, epoch: 0 });
+        assert_eq!(sim.pop_advance(), Some(Event::Wake { node: 1, epoch: 0 }));
+        assert_eq!(sim.pop_advance(), Some(Event::Wake { node: 2, epoch: 0 }),
+                   "same tick: schedule order wins");
+        assert_eq!(sim.now(), 2);
+        assert_eq!(sim.pop_advance(), Some(Event::Wake { node: 0, epoch: 0 }));
+        assert_eq!(sim.now(), 5);
+        assert_eq!(sim.pop_advance(), None);
+    }
+
+    #[test]
+    fn ideal_link_delivers_instantly_and_losslessly() {
+        let mut sim = NetSim::new(7, FaultPlan::none(), true);
+        for k in 0..50 {
+            sim.send(0, 1, theta(k), false);
+        }
+        let mut got = 0;
+        while let Some(ev) = sim.pop_advance() {
+            match ev {
+                Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+                    assert_eq!(payload.stamp(), got, "FIFO at fixed latency");
+                    got += 1;
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        assert_eq!(got, 50);
+        assert_eq!(sim.now(), 0, "zero latency keeps the clock at 0");
+    }
+
+    #[test]
+    fn lossy_link_drops_a_plausible_fraction() {
+        let plan = FaultPlan {
+            link: LinkModel { base: 1, jitter: 3, loss: 0.3, dup: 0.0 },
+            ..FaultPlan::none()
+        };
+        let mut sim = NetSim::new(3, plan, false);
+        for k in 0..2000 {
+            sim.send(0, 1, Payload::Eta { stamp: k, eta: 1.0 }, false);
+        }
+        let dropped = sim.counters.dropped_loss;
+        assert!((400..800).contains(&(dropped as usize)), "dropped {dropped}");
+        let mut delivered = 0;
+        while sim.pop_advance().is_some() {
+            delivered += 1;
+        }
+        assert_eq!(delivered as u64 + dropped, 2000);
+    }
+
+    #[test]
+    fn duplication_schedules_two_copies() {
+        let plan = FaultPlan {
+            link: LinkModel { base: 0, jitter: 0, loss: 0.0, dup: 1.0 },
+            ..FaultPlan::none()
+        };
+        let mut sim = NetSim::new(1, plan, true);
+        sim.send(0, 1, theta(0), false);
+        let a = sim.pop_advance().unwrap();
+        let b = sim.pop_advance().unwrap();
+        match (a, b) {
+            (Event::Deliver { dup: d1, .. }, Event::Deliver { dup: d2, .. }) => {
+                assert!(!d1 && d2, "original then duplicate");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(sim.counters.duplicated, 1);
+    }
+
+    #[test]
+    fn partition_cuts_only_across_groups_during_window() {
+        let plan = FaultPlan {
+            partitions: vec![Partition { start: 10, end: 20, group: vec![0, 1] }],
+            ..FaultPlan::none()
+        };
+        let mut sim = NetSim::new(0, plan, false);
+        // before the window: crosses fine
+        sim.send(0, 2, theta(0), false);
+        // inside the window: cross-cut dropped, intra-group passes
+        sim.schedule(10, Event::Wake { node: 0, epoch: 0 });
+        while let Some(ev) = sim.pop_advance() {
+            if matches!(ev, Event::Wake { .. }) {
+                break;
+            }
+        }
+        assert_eq!(sim.now(), 10);
+        sim.send(0, 2, theta(1), false);
+        sim.send(0, 1, theta(2), false);
+        assert_eq!(sim.counters.dropped_partition, 1);
+        // reliable handshake pierces the partition
+        sim.send(2, 0, theta(3), true);
+        assert_eq!(sim.counters.dropped_partition, 1);
+    }
+
+    #[test]
+    fn churn_plan_preschedules_events() {
+        let plan = FaultPlan {
+            churn: vec![
+                ChurnEvent::Leave { at: 8, node: 3 },
+                ChurnEvent::Join { at: 4, node: 5 },
+            ],
+            ..FaultPlan::none()
+        };
+        let mut sim = NetSim::new(0, plan, true);
+        assert_eq!(sim.pop_advance(), Some(Event::Join { node: 5 }));
+        assert_eq!(sim.now(), 4);
+        assert_eq!(sim.pop_advance(), Some(Event::Leave { node: 3 }));
+        assert_eq!(sim.now(), 8);
+    }
+
+    #[test]
+    fn identical_seeds_identical_traces() {
+        let run = || {
+            let plan = FaultPlan {
+                link: LinkModel { base: 2, jitter: 5, loss: 0.2, dup: 0.1 },
+                ..FaultPlan::none()
+            };
+            let mut sim = NetSim::new(42, plan, true);
+            for k in 0..200 {
+                sim.send((k % 3) as usize, ((k + 1) % 3) as usize, theta(k), false);
+            }
+            while sim.pop_advance().is_some() {}
+            (sim.trace.clone(), sim.counters)
+        };
+        let (t1, c1) = run();
+        let (t2, c2) = run();
+        assert_eq!(t1, t2);
+        assert_eq!(c1, c2);
+    }
+}

@@ -1,0 +1,363 @@
+//! Live topology control: scripted churn and the NAP effective-topology
+//! mapping.
+//!
+//! The paper observes that NAP's per-edge penalty budgets "effectively
+//! lead to an adaptive, dynamic network topology" (Fig. 1c: edges whose
+//! penalty influence collapses become "dotted" — still drawn, barely
+//! coupling). This module makes that story *operational*: the
+//! [`TopologyController`] owns the run's [`LiveView`] and turns two kinds
+//! of decisions into mask mutations —
+//!
+//! * **scripted churn** ([`crate::net::ChurnEvent`]s popped from the
+//!   simulator): a `Leave` deactivates the node and every incident edge; a
+//!   `Join` activates the node and its edges toward live neighbours;
+//! * **edge activity** (optional, [`ActivityConfig`]): each time a node
+//!   publishes fresh penalties, the controller recomputes every incident
+//!   undirected edge's *influence* — its symmetrized penalty η̄_ij divided
+//!   by the mean η̄ over currently-eligible edges — and deactivates edges
+//!   whose influence has stayed below `off_below` for `patience`
+//!   consecutive observations (hysteresis: reactivation needs `on_above`).
+//!   A deactivated edge stops carrying messages and drops out of both
+//!   endpoints' solves, λ updates and η̄ normalizations; this is exactly
+//!   the "weakly influencing edge" of the paper made physical. Because
+//!   η̄ is symmetrized, a one-sided penalty collapse (AP emphasizing one
+//!   direction) keeps the edge's influence near ½ — masking requires both
+//!   directions to agree the edge is idle.
+//!
+//! Degree-dependent quantities stay correct by construction because every
+//! consumer reads degrees through [`LiveView::live_degree`]; a node whose
+//! last edge deactivates would take the isolated-node semantics (η̄ = 0)
+//! shared by both synchronous runtimes since PR 2 — to keep consensus
+//! reachable the activity rule therefore never masks a node's last live
+//! edge.
+
+use crate::graph::{Graph, LiveView, NodeId};
+
+use super::sim::{NetSim, TraceKind};
+
+/// Hysteresis thresholds for the NAP effective-topology mapping. All
+/// ratios are relative to the mean symmetrized penalty over eligible
+/// edges.
+#[derive(Debug, Clone, Copy)]
+pub struct ActivityConfig {
+    /// deactivate when influence < `off_below` for `patience` consecutive
+    /// observations of that edge
+    pub off_below: f64,
+    /// reactivate when a masked edge's influence recovers above this
+    pub on_above: f64,
+    /// consecutive low-influence observations required before masking
+    pub patience: u32,
+}
+
+impl Default for ActivityConfig {
+    fn default() -> Self {
+        // conservative defaults: only persistent near-zero influence masks
+        // an edge, and recovery to ~mean level restores it
+        ActivityConfig { off_below: 0.05, on_above: 0.5, patience: 3 }
+    }
+}
+
+/// Applies churn + edge-activity decisions to the run's [`LiveView`].
+pub struct TopologyController {
+    view: LiveView,
+    activity: Option<ActivityConfig>,
+    /// undirected edge list (i < j), index-aligned with the streak/mask
+    /// bookkeeping below
+    edges: Vec<(NodeId, NodeId)>,
+    /// slot_to_edge[node][slot] → undirected edge id
+    slot_to_edge: Vec<Vec<usize>>,
+    /// latest published directed η per (node, slot)
+    eta_dir: Vec<Vec<f64>>,
+    below_streak: Vec<u32>,
+    /// edges currently masked *by the activity rule* (churn-masked edges
+    /// are not ours to reactivate)
+    activity_masked: Vec<bool>,
+}
+
+impl TopologyController {
+    pub fn new(graph: Graph, activity: Option<ActivityConfig>) -> TopologyController {
+        let n = graph.len();
+        let mut edges: Vec<(NodeId, NodeId)> =
+            graph.directed_edges().filter(|&(a, b)| a < b).collect();
+        edges.sort_unstable();
+        let mut slot_to_edge: Vec<Vec<usize>> =
+            (0..n).map(|i| vec![usize::MAX; graph.degree(i)]).collect();
+        for (eid, &(a, b)) in edges.iter().enumerate() {
+            let sa = graph.edge_slot(a, b).expect("edge exists");
+            let sb = graph.edge_slot(b, a).expect("graph symmetry");
+            slot_to_edge[a][sa] = eid;
+            slot_to_edge[b][sb] = eid;
+        }
+        let eta_dir = (0..n).map(|i| vec![0.0; graph.degree(i)]).collect();
+        let m = edges.len();
+        TopologyController {
+            view: LiveView::new(graph),
+            activity,
+            edges,
+            slot_to_edge,
+            eta_dir,
+            below_streak: vec![0; m],
+            activity_masked: vec![false; m],
+        }
+    }
+
+    pub fn view(&self) -> &LiveView {
+        &self.view
+    }
+
+    pub fn view_mut(&mut self) -> &mut LiveView {
+        &mut self.view
+    }
+
+    /// Apply a scripted join. Returns false if the node was already live
+    /// (the event is then a no-op the caller should skip).
+    pub fn apply_join(&mut self, node: NodeId, sim: &mut NetSim) -> bool {
+        if self.view.node_live(node) {
+            return false;
+        }
+        self.view.set_node(node, true);
+        // set_node restored every edge toward live neighbours — re-apply
+        // the activity rule's masks, or a rejoin would silently resurrect
+        // edges the rule still holds deactivated (desyncing
+        // `activity_masked` from the view)
+        let degree = self.view.graph().degree(node);
+        for slot in 0..degree {
+            let eid = self.slot_to_edge[node][slot];
+            if self.activity_masked[eid] {
+                let (a, b) = self.edges[eid];
+                self.view.set_edge(a, b, false);
+            }
+        }
+        sim.counters.joins += 1;
+        sim.record(TraceKind::Join { node });
+        true
+    }
+
+    /// Apply a scripted leave. Returns false if the node was already dead.
+    pub fn apply_leave(&mut self, node: NodeId, sim: &mut NetSim) -> bool {
+        if !self.view.node_live(node) {
+            return false;
+        }
+        self.view.set_node(node, false);
+        sim.counters.leaves += 1;
+        sim.record(TraceKind::Leave { node });
+        true
+    }
+
+    /// Record node `i`'s freshly published out-edge penalties and, if the
+    /// activity rule is enabled, re-evaluate the influence of its incident
+    /// edges. Returns the edges toggled this call (endpoint pairs), so the
+    /// runner can wake blocked neighbours.
+    pub fn observe_etas(&mut self, i: NodeId, etas: &[f64], sim: &mut NetSim)
+                        -> Vec<(NodeId, NodeId)> {
+        debug_assert_eq!(etas.len(), self.eta_dir[i].len());
+        self.eta_dir[i].copy_from_slice(etas);
+        let Some(cfg) = self.activity else {
+            return Vec::new();
+        };
+
+        // mean symmetrized penalty over eligible edges: both endpoints
+        // live, and the edge either active or masked by us (it must be
+        // able to re-enter the comparison)
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for (eid, &(a, b)) in self.edges.iter().enumerate() {
+            if !self.view.node_live(a) || !self.view.node_live(b) {
+                continue;
+            }
+            let sa = self.view.graph().edge_slot(a, b).expect("edge exists");
+            if !self.view.slot_live(a, sa) && !self.activity_masked[eid] {
+                continue; // churn-masked, not ours
+            }
+            sum += self.eta_bar(a, b);
+            count += 1;
+        }
+        if count == 0 || sum <= 0.0 {
+            return Vec::new();
+        }
+        let mean = sum / count as f64;
+
+        // re-evaluate only the edges incident to i (the publishing node)
+        let mut toggled = Vec::new();
+        let degree = self.view.graph().degree(i);
+        for slot in 0..degree {
+            let eid = self.slot_to_edge[i][slot];
+            let (a, b) = self.edges[eid];
+            let j = if a == i { b } else { a };
+            if !self.view.node_live(a) || !self.view.node_live(b) {
+                continue;
+            }
+            let sa = self.view.graph().edge_slot(a, b).expect("edge exists");
+            let churn_masked = !self.view.slot_live(a, sa) && !self.activity_masked[eid];
+            if churn_masked {
+                continue;
+            }
+            let influence = self.eta_bar(a, b) / mean;
+            if self.activity_masked[eid] {
+                if influence > cfg.on_above {
+                    self.activity_masked[eid] = false;
+                    self.below_streak[eid] = 0;
+                    self.view.set_edge(a, b, true);
+                    sim.counters.edges_reactivated += 1;
+                    sim.record(TraceKind::EdgeOn { a, b });
+                    toggled.push((a, b));
+                }
+            } else if influence < cfg.off_below {
+                self.below_streak[eid] += 1;
+                // never disconnect a node's last live edge: a fully
+                // isolated node would stop moving toward consensus
+                if self.below_streak[eid] >= cfg.patience
+                    && self.view.live_degree(i) > 1
+                    && self.view.live_degree(j) > 1
+                {
+                    self.activity_masked[eid] = true;
+                    self.view.set_edge(a, b, false);
+                    sim.counters.edges_deactivated += 1;
+                    sim.record(TraceKind::EdgeOff { a, b });
+                    toggled.push((a, b));
+                }
+            } else {
+                self.below_streak[eid] = 0;
+            }
+        }
+        toggled
+    }
+
+    /// Symmetrized penalty η̄_ab = (η_{a→b} + η_{b→a}) / 2 from the latest
+    /// published values.
+    fn eta_bar(&self, a: NodeId, b: NodeId) -> f64 {
+        let sa = self.view.graph().edge_slot(a, b).expect("edge exists");
+        let sb = self.view.graph().edge_slot(b, a).expect("graph symmetry");
+        0.5 * (self.eta_dir[a][sa] + self.eta_dir[b][sb])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+    use crate::net::sim::FaultPlan;
+
+    fn sim() -> NetSim {
+        NetSim::new(0, FaultPlan::none(), false)
+    }
+
+    #[test]
+    fn churn_round_trip() {
+        let mut ctrl = TopologyController::new(Topology::Ring.build(5).unwrap(), None);
+        let mut s = sim();
+        assert!(ctrl.apply_leave(2, &mut s));
+        assert!(!ctrl.apply_leave(2, &mut s), "idempotent");
+        assert_eq!(ctrl.view().live_degree(1), 1);
+        assert!(ctrl.apply_join(2, &mut s));
+        assert_eq!(ctrl.view().live_degree(1), 2);
+        assert_eq!(s.counters.leaves, 1);
+        assert_eq!(s.counters.joins, 1);
+    }
+
+    #[test]
+    fn low_influence_edge_deactivates_after_patience() {
+        let g = Topology::Complete.build(4).unwrap();
+        let mut ctrl = TopologyController::new(
+            g,
+            Some(ActivityConfig { off_below: 0.2, on_above: 0.8, patience: 2 }),
+        );
+        let mut s = sim();
+        // warm-up: everyone publishes uniform strong penalties
+        for i in 0..4 {
+            ctrl.observe_etas(i, &[10.0, 10.0, 10.0], &mut s);
+        }
+        // the {0,1} edge collapses from BOTH sides (η̄ is symmetrized, so a
+        // one-sided collapse keeps the edge's influence near ½ — by design
+        // it must not mask). Slot 0 of node 0 is neighbour 1 and slot 0 of
+        // node 1 is neighbour 0 (sorted adjacency).
+        let weak = [0.01, 10.0, 10.0];
+        ctrl.observe_etas(1, &weak, &mut s);
+        let t1 = ctrl.observe_etas(0, &weak, &mut s);
+        assert!(t1.is_empty(), "patience 2: first low observation only streaks");
+        let t2 = ctrl.observe_etas(0, &weak, &mut s);
+        assert_eq!(t2, vec![(0, 1)]);
+        assert_eq!(s.counters.edges_deactivated, 1);
+        let slot = ctrl.view().graph().edge_slot(0, 1).unwrap();
+        assert!(!ctrl.view().slot_live(0, slot));
+        assert_eq!(ctrl.view().live_degree(0), 2);
+
+        // recovery: both directions strong again → reactivates (the first
+        // one-sided strong publish leaves influence ≈ ½ < on_above)
+        let strong = [10.0, 10.0, 10.0];
+        let t3 = ctrl.observe_etas(0, &strong, &mut s);
+        assert!(t3.is_empty(), "half-recovered edge stays masked");
+        let t4 = ctrl.observe_etas(1, &strong, &mut s);
+        assert_eq!(t4, vec![(0, 1)]);
+        assert_eq!(s.counters.edges_reactivated, 1);
+        assert!(ctrl.view().slot_live(0, slot));
+    }
+
+    #[test]
+    fn last_live_edge_is_never_masked() {
+        let g = Topology::Chain.build(3).unwrap(); // 0-1-2
+        let mut ctrl = TopologyController::new(
+            g,
+            Some(ActivityConfig { off_below: 0.9, on_above: 2.0, patience: 1 }),
+        );
+        let mut s = sim();
+        ctrl.observe_etas(1, &[10.0, 10.0], &mut s);
+        ctrl.observe_etas(2, &[10.0], &mut s);
+        // node 0's only edge looks weak, but masking it would isolate 0
+        let toggled = ctrl.observe_etas(0, &[0.001], &mut s);
+        assert!(toggled.is_empty());
+        assert_eq!(ctrl.view().live_degree(0), 1);
+    }
+
+    #[test]
+    fn rejoin_preserves_activity_masks() {
+        // a leave/rejoin cycle must not resurrect an edge the activity
+        // rule still holds deactivated (set_node restores every edge;
+        // apply_join re-applies the rule's masks on top)
+        let g = Topology::Complete.build(4).unwrap();
+        let mut ctrl = TopologyController::new(
+            g,
+            Some(ActivityConfig { off_below: 0.2, on_above: 0.8, patience: 1 }),
+        );
+        let mut s = sim();
+        for i in 0..4 {
+            ctrl.observe_etas(i, &[10.0, 10.0, 10.0], &mut s);
+        }
+        let weak = [0.01, 10.0, 10.0];
+        ctrl.observe_etas(1, &weak, &mut s);
+        ctrl.observe_etas(0, &weak, &mut s);
+        let slot = ctrl.view().graph().edge_slot(0, 1).unwrap();
+        assert!(!ctrl.view().slot_live(0, slot), "edge {{0,1}} activity-masked");
+
+        ctrl.apply_leave(0, &mut s);
+        ctrl.apply_join(0, &mut s);
+        assert!(!ctrl.view().slot_live(0, slot),
+                "rejoin must keep the activity-masked edge off");
+        assert_eq!(ctrl.view().live_degree(0), 2,
+                   "the other edges are restored");
+
+        // and the rule can still reactivate it through the normal path
+        let strong = [10.0, 10.0, 10.0];
+        ctrl.observe_etas(0, &strong, &mut s);
+        let t = ctrl.observe_etas(1, &strong, &mut s);
+        assert_eq!(t, vec![(0, 1)]);
+        assert!(ctrl.view().slot_live(0, slot));
+    }
+
+    #[test]
+    fn churn_masked_edges_are_not_activity_candidates() {
+        let g = Topology::Ring.build(4).unwrap();
+        let mut ctrl = TopologyController::new(
+            g,
+            Some(ActivityConfig { off_below: 0.5, on_above: 0.9, patience: 1 }),
+        );
+        let mut s = sim();
+        ctrl.apply_leave(1, &mut s);
+        for i in [0usize, 2, 3] {
+            ctrl.observe_etas(i, &[10.0, 10.0], &mut s);
+        }
+        // edges to the dead node never toggle, live edges unaffected
+        assert_eq!(s.counters.edges_deactivated, 0);
+        assert_eq!(ctrl.view().live_degree(0), 1);
+    }
+}

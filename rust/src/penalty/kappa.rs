@@ -26,16 +26,39 @@ pub fn tau_from_objectives(f_self: f64, f_neighbors: &[f64]) -> Vec<f64> {
 /// pre-sized to its degree and reuses it every iteration, so steady-state
 /// penalty updates allocate nothing.
 pub fn tau_from_objectives_into(f_self: f64, f_neighbors: &[f64], out: &mut Vec<f64>) {
+    tau_from_objectives_masked_into(f_self, f_neighbors, None, out);
+}
+
+/// [`tau_from_objectives_into`] restricted to the *live* neighbour slots.
+///
+/// The net runtime ([`crate::net`]) runs the schemes over a dynamic
+/// topology: slots whose edge is currently masked off carry stale or
+/// placeholder objective values that must not contaminate the κ
+/// normalization. With `live = Some(mask)`, the min/max spread runs over
+/// `f_self` and the live entries only, dead slots get τ = 0, and a node
+/// whose live neighbourhood is empty degenerates to all-zero τ (the η⁰
+/// regime). `live = None` means every slot is live — bit-identical to the
+/// unmasked computation, which is what the synchronous runtimes pass.
+pub fn tau_from_objectives_masked_into(f_self: f64, f_neighbors: &[f64],
+                                       live: Option<&[bool]>, out: &mut Vec<f64>) {
     out.clear();
-    if !f_self.is_finite() || f_neighbors.iter().any(|f| !f.is_finite()) {
+    let is_live = |slot: usize| live.is_none_or(|m| m[slot]);
+    if !f_self.is_finite()
+        || f_neighbors
+            .iter()
+            .enumerate()
+            .any(|(slot, f)| is_live(slot) && !f.is_finite())
+    {
         out.resize(f_neighbors.len(), 0.0);
         return;
     }
     let mut f_min = f_self;
     let mut f_max = f_self;
-    for &f in f_neighbors {
-        f_min = f_min.min(f);
-        f_max = f_max.max(f);
+    for (slot, &f) in f_neighbors.iter().enumerate() {
+        if is_live(slot) {
+            f_min = f_min.min(f);
+            f_max = f_max.max(f);
+        }
     }
     let spread = f_max - f_min;
     if !(spread.is_finite() && spread > 1e-300) {
@@ -44,7 +67,13 @@ pub fn tau_from_objectives_into(f_self: f64, f_neighbors: &[f64], out: &mut Vec<
     }
     let kappa = |f: f64| (f - f_min) / spread + 1.0;
     let k_self = kappa(f_self);
-    out.extend(f_neighbors.iter().map(|&f| k_self / kappa(f) - 1.0));
+    out.extend(f_neighbors.iter().enumerate().map(|(slot, &f)| {
+        if is_live(slot) {
+            k_self / kappa(f) - 1.0
+        } else {
+            0.0
+        }
+    }));
 }
 
 #[cfg(test)]
@@ -95,6 +124,52 @@ mod tests {
         assert_eq!(tau, vec![0.0, 0.0]);
         let tau = tau_from_objectives(1.0, &[f64::INFINITY]);
         assert_eq!(tau, vec![0.0]);
+    }
+
+    #[test]
+    fn masked_slots_get_zero_and_skip_normalization() {
+        // unmasked: f_nb = [5, 1000] would stretch the spread; masking slot
+        // 1 must reproduce the 2-point computation on [self, 5] exactly
+        let mut masked = Vec::new();
+        tau_from_objectives_masked_into(10.0, &[5.0, 1000.0],
+                                        Some(&[true, false]), &mut masked);
+        let two_point = tau_from_objectives(10.0, &[5.0]);
+        assert_eq!(masked.len(), 2);
+        assert_eq!(masked[0], two_point[0], "live slot matches unmasked 2-point τ");
+        assert_eq!(masked[1], 0.0, "dead slot pinned to τ = 0");
+    }
+
+    #[test]
+    fn masked_non_finite_dead_slot_is_harmless() {
+        // a dead slot carrying NaN must not trip the fail-safe for the rest
+        let mut masked = Vec::new();
+        tau_from_objectives_masked_into(10.0, &[5.0, f64::NAN],
+                                        Some(&[true, false]), &mut masked);
+        assert!(masked[0] > 0.0, "{masked:?}");
+        assert_eq!(masked[1], 0.0);
+    }
+
+    #[test]
+    fn none_mask_is_bit_identical_to_unmasked() {
+        prop::check("masked(None) ≡ unmasked", |rng| {
+            let f_self = rng.range(-100.0, 100.0);
+            let f_nb: Vec<f64> = (0..1 + rng.below(6))
+                .map(|_| rng.range(-100.0, 100.0))
+                .collect();
+            let mut a = Vec::new();
+            let mut b = Vec::new();
+            tau_from_objectives_into(f_self, &f_nb, &mut a);
+            tau_from_objectives_masked_into(f_self, &f_nb, None, &mut b);
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn all_dead_mask_degenerates_to_zero() {
+        let mut out = Vec::new();
+        tau_from_objectives_masked_into(10.0, &[5.0, 7.0],
+                                        Some(&[false, false]), &mut out);
+        assert_eq!(out, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -20,7 +20,8 @@
 mod kappa;
 mod schemes;
 
-pub use kappa::{tau_from_objectives, tau_from_objectives_into};
+pub use kappa::{tau_from_objectives, tau_from_objectives_into,
+                tau_from_objectives_masked_into};
 pub use schemes::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind, SchemeParams};
 
 #[cfg(test)]

@@ -10,8 +10,14 @@
 //! Allocation hygiene: the τ-computing schemes own a per-node scratch
 //! buffer pre-sized to the node's degree, so steady-state updates never
 //! allocate (the coordinator's phase C runs inside the hot loop).
+//!
+//! Liveness: under a dynamic topology ([`crate::net`]) the observation
+//! carries an optional per-slot mask. Dead slots are frozen — η
+//! untouched, excluded from τ normalization, no budget spent — and a
+//! `None` mask (what the synchronous runtimes pass) is bit-identical to
+//! the pre-liveness behaviour.
 
-use super::kappa::tau_from_objectives_into;
+use super::kappa::tau_from_objectives_masked_into;
 
 /// Which scheme to run. See module docs for the paper mapping.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -127,6 +133,20 @@ pub struct NodeObservation<'a> {
     pub f_self_prev: f64,
     /// f_i evaluated at each neighbour estimate, in neighbour-slot order
     pub f_neighbors: &'a [f64],
+    /// Per-slot edge liveness under a dynamic topology ([`crate::net`]):
+    /// `None` means every slot is live (what the synchronous runtimes pass
+    /// — bit-identical to the pre-liveness behaviour). With `Some(mask)`,
+    /// dead slots are frozen: their η is left untouched, they are excluded
+    /// from the τ normalization, and budgeted schemes neither spend nor
+    /// grow budget on them.
+    pub live: Option<&'a [bool]>,
+}
+
+/// Whether a neighbour slot is live under an optional mask (`None` ⇒ all
+/// slots live).
+#[inline]
+fn slot_is_live(live: Option<&[bool]>, slot: usize) -> bool {
+    live.is_none_or(|m| m[slot])
 }
 
 /// A node-local penalty scheduler. `eta` is the node's out-edge penalty
@@ -138,6 +158,13 @@ pub trait PenaltyScheme: Send {
     /// Whether this scheme needs f_i evaluated at neighbour estimates
     /// (lets the engine skip those objective evaluations otherwise).
     fn needs_neighbor_objectives(&self) -> bool {
+        false
+    }
+    /// Whether this scheme reads the network-wide residuals
+    /// (`global_primal`/`global_dual`). The async runtime gates such a
+    /// scheme's update on the round's global fold; decentralized schemes
+    /// keep the default and never wait.
+    fn needs_global_residuals(&self) -> bool {
         false
     }
 }
@@ -180,13 +207,19 @@ impl PenaltyScheme for Rb {
         SchemeKind::Rb
     }
 
+    fn needs_global_residuals(&self) -> bool {
+        true
+    }
+
     fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
         if obs.t >= self.p.t_max {
             return; // η frozen (homogeneous, so no reset needed)
         }
         let factor = balance_factor(obs.global_primal, obs.global_dual, self.p.mu, self.p.tau);
-        for e in eta.iter_mut() {
-            *e = clamp_eta(*e * factor, &self.p);
+        for (slot, e) in eta.iter_mut().enumerate() {
+            if slot_is_live(obs.live, slot) {
+                *e = clamp_eta(*e * factor, &self.p);
+            }
         }
     }
 }
@@ -206,9 +239,12 @@ impl PenaltyScheme for Vp {
     fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
         if obs.t >= self.p.t_max {
             if self.p.vp_reset {
-                // homogeneous reset; standard ADMM from here on
-                for e in eta.iter_mut() {
-                    *e = self.p.eta0;
+                // homogeneous reset; standard ADMM from here on (dead
+                // slots stay frozen — their edge is not participating)
+                for (slot, e) in eta.iter_mut().enumerate() {
+                    if slot_is_live(obs.live, slot) {
+                        *e = self.p.eta0;
+                    }
                 }
             }
             // else: heterogeneous freeze (ablation A3 — the paper warns
@@ -216,8 +252,10 @@ impl PenaltyScheme for Vp {
             return;
         }
         let factor = balance_factor(obs.primal_norm, obs.dual_norm, self.p.mu, self.p.tau);
-        for e in eta.iter_mut() {
-            *e = clamp_eta(*e * factor, &self.p);
+        for (slot, e) in eta.iter_mut().enumerate() {
+            if slot_is_live(obs.live, slot) {
+                *e = clamp_eta(*e * factor, &self.p);
+            }
         }
     }
 }
@@ -242,14 +280,19 @@ impl PenaltyScheme for Ap {
     fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
         debug_assert_eq!(obs.f_neighbors.len(), eta.len());
         if obs.t >= self.p.t_max {
-            for e in eta.iter_mut() {
-                *e = self.p.eta0;
+            for (slot, e) in eta.iter_mut().enumerate() {
+                if slot_is_live(obs.live, slot) {
+                    *e = self.p.eta0;
+                }
             }
             return;
         }
-        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
-        for (e, t) in eta.iter_mut().zip(&self.tau) {
-            *e = clamp_eta(self.p.eta0 * (1.0 + t), &self.p);
+        tau_from_objectives_masked_into(obs.f_self, obs.f_neighbors, obs.live,
+                                        &mut self.tau);
+        for (slot, (e, t)) in eta.iter_mut().zip(&self.tau).enumerate() {
+            if slot_is_live(obs.live, slot) {
+                *e = clamp_eta(self.p.eta0 * (1.0 + t), &self.p);
+            }
         }
     }
 }
@@ -285,9 +328,14 @@ impl Nap {
     /// `proposed(slot, tau, old)` returns the new η for an in-budget edge.
     fn gated_update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64],
                     proposed: impl Fn(usize, f64, f64) -> f64) {
-        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
+        tau_from_objectives_masked_into(obs.f_self, obs.f_neighbors, obs.live,
+                                        &mut self.tau);
         let objective_moving = (obs.f_self - obs.f_self_prev).abs() > self.p.beta;
         for slot in 0..eta.len() {
+            if !slot_is_live(obs.live, slot) {
+                // dead edge: η frozen, no budget spent or grown
+                continue;
+            }
             let tau = self.tau[slot];
             if self.spent[slot] < self.bound[slot] {
                 eta[slot] = clamp_eta(proposed(slot, tau, eta[slot]), &self.p);
@@ -340,14 +388,20 @@ impl PenaltyScheme for VpAp {
     fn update(&mut self, obs: &NodeObservation<'_>, eta: &mut [f64]) {
         debug_assert_eq!(obs.f_neighbors.len(), eta.len());
         if obs.t >= self.p.t_max {
-            for e in eta.iter_mut() {
-                *e = self.p.eta0;
+            for (slot, e) in eta.iter_mut().enumerate() {
+                if slot_is_live(obs.live, slot) {
+                    *e = self.p.eta0;
+                }
             }
             return;
         }
-        tau_from_objectives_into(obs.f_self, obs.f_neighbors, &mut self.tau);
+        tau_from_objectives_masked_into(obs.f_self, obs.f_neighbors, obs.live,
+                                        &mut self.tau);
         let dir = residual_direction(obs.primal_norm, obs.dual_norm, self.p.mu);
-        for (e, t) in eta.iter_mut().zip(&self.tau) {
+        for (slot, (e, t)) in eta.iter_mut().zip(&self.tau).enumerate() {
+            if !slot_is_live(obs.live, slot) {
+                continue;
+            }
             match dir {
                 Direction::Grow => *e = clamp_eta(*e * (1.0 + t) * 2.0, &self.p),
                 Direction::Shrink => *e = clamp_eta(*e * (1.0 + t) * 0.5, &self.p),

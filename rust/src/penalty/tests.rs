@@ -15,6 +15,7 @@ fn obs<'a>(t: usize, primal: f64, dual: f64, f_self: f64, f_prev: f64,
         f_self,
         f_self_prev: f_prev,
         f_neighbors: f_nb,
+        live: None,
     }
 }
 
@@ -33,6 +34,7 @@ fn random_obs<'a>(rng: &mut Pcg, t: usize, f_nb: &'a mut Vec<f64>, deg: usize)
         f_self: rng.range(0.0, 100.0),
         f_self_prev: rng.range(0.0, 100.0),
         f_neighbors: f_nb,
+        live: None,
     }
 }
 
@@ -279,6 +281,7 @@ fn rb_uses_global_residuals_and_freezes() {
         f_self: 0.0,
         f_self_prev: 0.0,
         f_neighbors: &[0.0, 0.0],
+        live: None,
     };
     s.update(&o, &mut eta);
     assert_eq!(eta, vec![20.0; 2]);
@@ -308,6 +311,105 @@ fn eta_clamped_under_adversarial_residuals() {
 }
 
 #[test]
+fn dead_slots_freeze_eta_in_every_scheme() {
+    // under a liveness mask, every scheme must leave a dead slot's η
+    // untouched no matter what the observations say, while live slots
+    // keep adapting
+    let p = SchemeParams::default();
+    for kind in SchemeKind::ALL {
+        let mut s = make_scheme(kind, p, 3);
+        let mut eta = vec![p.eta0; 3];
+        let f_nb = [1.0, 2.0, 50.0];
+        let live = [true, false, true];
+        for t in 0..80 {
+            let o = NodeObservation {
+                t,
+                primal_norm: 100.0,
+                dual_norm: 0.1,
+                global_primal: 100.0,
+                global_dual: 0.1,
+                f_self: 25.0,
+                f_self_prev: 40.0,
+                f_neighbors: &f_nb,
+                live: Some(&live),
+            };
+            s.update(&o, &mut eta);
+            assert_eq!(eta[1], p.eta0, "{kind:?}: dead slot drifted at t={t}");
+            for &e in &eta {
+                assert!(e.is_finite() && e > 0.0, "{kind:?}: η = {e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn all_live_mask_matches_none_bitwise() {
+    // Some(all-true) must reproduce the unmasked trajectory bit-for-bit —
+    // the async runtime relies on this to switch masks on and off freely
+    let p = SchemeParams::default();
+    let live = [true, true];
+    for kind in SchemeKind::ALL {
+        let mut a = make_scheme(kind, p, 2);
+        let mut b = make_scheme(kind, p, 2);
+        let mut eta_a = vec![p.eta0; 2];
+        let mut eta_b = vec![p.eta0; 2];
+        let mut rng = Pcg::seed(99);
+        let mut f_nb = Vec::new();
+        for t in 0..60 {
+            let o = random_obs(&mut rng, t, &mut f_nb, 2);
+            a.update(&o, &mut eta_a);
+            let masked = NodeObservation { live: Some(&live), ..o.clone() };
+            b.update(&masked, &mut eta_b);
+            assert_eq!(eta_a, eta_b, "{kind:?} diverged at t={t}");
+        }
+    }
+}
+
+#[test]
+fn nap_budget_not_spent_on_dead_slots() {
+    // freeze slot 0 for the whole budgeted phase: when the mask lifts, the
+    // slot must still have budget to spend (its η starts adapting) while
+    // an always-live slot with the same stream has already exhausted its
+    let p = SchemeParams { budget: 0.5, ..Default::default() };
+    let mut s = make_scheme(SchemeKind::Nap, p, 2);
+    let mut eta = vec![p.eta0; 2];
+    let f_nb = [1.0, 1.0];
+    let live = [false, true];
+    // τ for a live slot here: f_self = 5 > f_nb → τ = 1 (spends 1.0 > 0.5)
+    for t in 0..4 {
+        let o = NodeObservation {
+            t,
+            primal_norm: 1.0,
+            dual_norm: 1.0,
+            global_primal: 1.0,
+            global_dual: 1.0,
+            f_self: 5.0,
+            f_self_prev: 5.0,
+            f_neighbors: &f_nb,
+            live: Some(&live),
+        };
+        s.update(&o, &mut eta);
+    }
+    assert_eq!(eta[0], p.eta0, "dead slot untouched");
+    assert_eq!(eta[1], p.eta0, "live slot exhausted its budget → reset to η⁰");
+    // unmask slot 0: it still has budget, so the AP-style step applies
+    let o = NodeObservation {
+        t: 4,
+        primal_norm: 1.0,
+        dual_norm: 1.0,
+        global_primal: 1.0,
+        global_dual: 1.0,
+        f_self: 5.0,
+        f_self_prev: 5.0,
+        f_neighbors: &f_nb,
+        live: Some(&[true, true]),
+    };
+    s.update(&o, &mut eta);
+    assert_eq!(eta[0], p.eta0 * 2.0, "fresh budget spends on first live update");
+    assert_eq!(eta[1], p.eta0, "exhausted slot stays at η⁰");
+}
+
+#[test]
 fn parse_name_roundtrip() {
     for kind in SchemeKind::ALL {
         assert_eq!(SchemeKind::parse(kind.name()).unwrap(), kind);
@@ -323,4 +425,16 @@ fn needs_neighbor_objectives_flags() {
     assert!(make_scheme(SchemeKind::Ap, p, 1).needs_neighbor_objectives());
     assert!(make_scheme(SchemeKind::Nap, p, 1).needs_neighbor_objectives());
     assert!(make_scheme(SchemeKind::VpNap, p, 1).needs_neighbor_objectives());
+}
+
+#[test]
+fn needs_global_residuals_flags() {
+    // only the non-decentralized RB reference reads the folded global
+    // residuals (the async runtime gates its update on the round's fold)
+    let p = SchemeParams::default();
+    for kind in SchemeKind::ALL {
+        let expect = kind == SchemeKind::Rb;
+        assert_eq!(make_scheme(kind, p, 2).needs_global_residuals(), expect,
+                   "{kind:?}");
+    }
 }

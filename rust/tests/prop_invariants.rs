@@ -81,6 +81,7 @@ fn penalty_schemes_never_produce_invalid_eta() {
                     f_self: rng.range(-1e6, 1e6),
                     f_self_prev: rng.range(-1e6, 1e6),
                     f_neighbors: &f_nb,
+                    live: None,
                 };
                 scheme.update(&obs, &mut eta);
                 for &e in &eta {
