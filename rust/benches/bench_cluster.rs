@@ -1,0 +1,149 @@
+//! Hybrid cluster-runtime cost: wall-clock of the machine-level
+//! discrete-event loop, plus the scenario metrics the ROADMAP tracks —
+//! rounds to consensus, extra rounds vs the oracle fold, and virtual time
+//! — for the tree and gossip collectives under a clean link vs 10% loss.
+//! Writes the machine-readable `BENCH_cluster.json` (same layout contract
+//! as `BENCH_net.json`: a `results` array from the Bencher plus a derived
+//! `scenario` object for gates/dashboards).
+
+use fadmm::cluster::{ClusterConfig, ClusterReport, ClusterRunner, CollectiveKind};
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::coordinator::{ShardedConfig, ShardedRunner, SolverFactory};
+use fadmm::experiments::common::quad_problem_factory;
+use fadmm::graph::Topology;
+use fadmm::net::{FaultPlan, LinkModel};
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::{black_box, Bencher};
+use fadmm::util::json::{num, obj, s, Json};
+
+const N: usize = 24;
+const DIM: usize = 3;
+const MACHINES: usize = 4;
+
+fn factory(seed: u64) -> SolverFactory<QuadraticNode> {
+    quad_problem_factory(N, DIM, seed)
+}
+
+fn lossy_plan(loss: f64) -> FaultPlan {
+    if loss <= 0.0 {
+        FaultPlan::none()
+    } else {
+        FaultPlan {
+            link: LinkModel { base: 2, jitter: 4, loss, dup: 0.02 },
+            ..FaultPlan::none()
+        }
+    }
+}
+
+fn run_once(scheme: SchemeKind, collective: CollectiveKind, loss: f64, tol: f64,
+            max_iters: usize) -> ClusterReport {
+    let runner = ClusterRunner::new(
+        Topology::Ring.build(N).unwrap(),
+        ClusterConfig {
+            scheme,
+            tol,
+            max_iters,
+            seed: 5,
+            machines: MACHINES,
+            workers: 1,
+            collective,
+            max_staleness: if loss > 0.0 { 1 } else { 0 },
+            silence_timeout: 16,
+            collective_timeout: 24,
+            fallback_after: 2,
+            tracing: false,
+            ..Default::default()
+        },
+        lossy_plan(loss),
+        factory(77),
+    )
+    .unwrap();
+    runner.run()
+}
+
+fn oracle_rounds(scheme: SchemeKind, tol: f64, max_iters: usize) -> usize {
+    ShardedRunner::new(
+        Topology::Ring.build(N).unwrap(),
+        ShardedConfig { scheme, tol, max_iters, seed: 5, workers: MACHINES,
+                        ..Default::default() },
+    )
+    .run(factory(77))
+    .unwrap()
+    .iterations
+}
+
+fn main() {
+    let mut b = Bencher::from_env();
+    let mut scenario_fields: Vec<(String, Json)> = Vec::new();
+
+    println!("== event-loop wall cost (ring {N}, {MACHINES} machines, ADMM-AP, \
+              fixed 80 rounds) ==");
+    b.bench("cluster tree zero-fault 80 rounds", || {
+        black_box(run_once(SchemeKind::Ap, CollectiveKind::Tree, 0.0, 0.0, 80));
+    });
+    b.bench("cluster gossip zero-fault 80 rounds", || {
+        black_box(run_once(SchemeKind::Ap, CollectiveKind::Gossip, 0.0, 0.0, 80));
+    });
+    b.bench("cluster tree 10% loss 80 rounds", || {
+        black_box(run_once(SchemeKind::Ap, CollectiveKind::Tree, 0.10, 0.0, 80));
+    });
+
+    println!("== rounds-to-consensus and extra rounds vs the oracle fold \
+              (tol 1e-6) ==");
+    // the oracle depends only on the scheme — solve each once, not per cell
+    let schemes = [SchemeKind::Fixed, SchemeKind::Rb, SchemeKind::Nap];
+    let oracles: Vec<usize> =
+        schemes.iter().map(|&s| oracle_rounds(s, 1e-6, 600)).collect();
+    for (name, loss) in [("clean", 0.0f64), ("loss10", 0.10)] {
+        for collective in CollectiveKind::ALL {
+            for (si, &scheme) in schemes.iter().enumerate() {
+                let report = run_once(scheme, collective, loss, 1e-6, 600);
+                let oracle = oracles[si];
+                let extra = report.iterations as i64 - oracle as i64;
+                let last_primal = report
+                    .recorder
+                    .stats
+                    .last()
+                    .map(|st| st.max_primal)
+                    .unwrap_or(f64::NAN);
+                println!(
+                    "{name:<8} {:<7} {:<12} rounds {:>4} oracle {:>4} extra {:>4} \
+                     vtime {:>7} dropped {:>5} primal {:.3e}",
+                    collective.name(), scheme.name(), report.iterations, oracle,
+                    extra, report.virtual_time,
+                    report.counters.dropped_total(), last_primal,
+                );
+                let key = format!("{name}_{}_{}", collective.name(), scheme.name());
+                scenario_fields.push((
+                    key,
+                    obj(vec![
+                        ("rounds", num(report.iterations as f64)),
+                        ("oracle_rounds", num(oracle as f64)),
+                        ("extra_rounds", num(extra as f64)),
+                        ("virtual_time", num(report.virtual_time as f64)),
+                        ("converged", num(if report.converged { 1.0 } else { 0.0 })),
+                        ("final_primal", num(last_primal)),
+                        ("dropped", num(report.counters.dropped_total() as f64)),
+                        ("counters", report.counters.summary_json()),
+                    ]),
+                ));
+            }
+        }
+    }
+
+    let scenario = obj(scenario_fields
+        .iter()
+        .map(|(k, v)| (k.as_str(), v.clone()))
+        .collect());
+    let extra = vec![
+        ("nodes", num(N as f64)),
+        ("dim", num(DIM as f64)),
+        ("machines", num(MACHINES as f64)),
+        ("topology", s("ring")),
+        ("scenario", scenario),
+    ];
+    match b.write_json("cluster", extra) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("bench_cluster: could not write JSON: {e}"),
+    }
+}

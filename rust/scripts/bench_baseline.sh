@@ -2,7 +2,7 @@
 # Refresh the committed bench baselines from a full-budget run.
 #
 #   rust/scripts/bench_baseline.sh            # coordinator (the gated one)
-#   rust/scripts/bench_baseline.sh --all      # + net
+#   rust/scripts/bench_baseline.sh --all      # + net + cluster
 #
 # Run this on a quiet machine (no other load): the ci.sh regression gate
 # compares every future smoke run against the numbers written here. The
@@ -18,6 +18,8 @@ cargo bench --bench bench_coordinator
 if [[ "${1:-}" == "--all" ]]; then
   echo "== full-budget bench_net (writes ../BENCH_net.json) =="
   cargo bench --bench bench_net
+  echo "== full-budget bench_cluster (writes ../BENCH_cluster.json) =="
+  cargo bench --bench bench_cluster
 fi
 
 echo "baseline refreshed; commit the updated BENCH_*.json"

@@ -43,13 +43,37 @@ if [[ ! -f "$net_dir/net_scenarios.csv" ]]; then
   echo "net smoke: net_scenarios.csv missing" >&2
   exit 1
 fi
-# every (scenario × scheme) row present: 7 scenarios × 7 schemes + header
+# every (scenario × scheme) row present: 8 scenarios × 7 schemes + header
 net_rows="$(wc -l < "$net_dir/net_scenarios.csv")"
-if [[ "$net_rows" -ne 50 ]]; then
-  echo "net smoke: expected 50 csv lines (7 scenarios × 7 schemes + header), got $net_rows" >&2
+if [[ "$net_rows" -ne 57 ]]; then
+  echo "net smoke: expected 57 csv lines (8 scenarios × 7 schemes + header), got $net_rows" >&2
   exit 1
 fi
 rm -rf "$net_dir"
+
+echo "== cluster smoke matrix (2–4 machines × both collectives × 3 schemes) =="
+# the hybrid runtime end to end through the repro binary: every
+# (machines × scenario × collective × scheme) cell, seeded
+cluster_dir="$(mktemp -d)"
+cargo run --release --quiet --bin repro -- cluster \
+  --nodes 12 --machines 2,4 --seeds 1 --max-iters 120 \
+  --schemes admm,admm-rb,admm-nap --loss 0,0.1 --out "$cluster_dir"
+if [[ ! -f "$cluster_dir/cluster_scenarios.csv" ]]; then
+  echo "cluster smoke: cluster_scenarios.csv missing" >&2
+  exit 1
+fi
+# 2 machine counts × 2 scenarios × 2 collectives × 3 schemes + header
+cluster_rows="$(wc -l < "$cluster_dir/cluster_scenarios.csv")"
+if [[ "$cluster_rows" -ne 25 ]]; then
+  echo "cluster smoke: expected 25 csv lines (2×2×2×3 cells + header), got $cluster_rows" >&2
+  exit 1
+fi
+# replay the shipped example FaultPlan through the net runtime (plan
+# loader round-trips through the CLI path)
+cargo run --release --quiet --bin repro -- net \
+  --nodes 8 --seeds 1 --max-iters 100 --schemes admm \
+  --plan ../examples/net_plan_loss_partition.json --out "$cluster_dir"
+rm -rf "$cluster_dir"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== bench smoke (FADMM_BENCH_FAST=1) =="
@@ -64,6 +88,12 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     cargo bench --bench bench_net
   if [[ ! -f "$smoke_dir/BENCH_net.json" ]]; then
     echo "bench smoke: bench_net wrote no BENCH_net.json" >&2
+    exit 1
+  fi
+  FADMM_BENCH_FAST=1 FADMM_BENCH_DIR="$smoke_dir" \
+    cargo bench --bench bench_cluster
+  if [[ ! -f "$smoke_dir/BENCH_cluster.json" ]]; then
+    echo "bench smoke: bench_cluster wrote no BENCH_cluster.json" >&2
     exit 1
   fi
 

@@ -1,0 +1,757 @@
+//! The per-machine runtime: a PR 1-style sharded worker pool over the
+//! machine's contiguous node slice, with stamp-indexed boundary caches
+//! toward neighbouring machines.
+//!
+//! Intra-machine execution is *barrier-synchronous* and reuses the
+//! coordinator's building blocks verbatim: the zero-copy double-buffered
+//! [`ParamArena`] (allocated over the full graph; only local and
+//! boundary-in blocks are ever touched), the
+//! [`crate::consensus::LocalSolver::solve_into`] hot path writing θ^{t+1}
+//! straight into the parity-`q` block, and per-shard
+//! [`StatPartial`]s with centered second-pass statistics, accumulated in
+//! node order. Shards execute on scoped worker threads (one spawn per
+//! phase — the join is the phase barrier) or inline when the machine has
+//! a single shard; either way the arithmetic is identical because all
+//! cross-shard data flows through the parity-disciplined arena and the
+//! partials combine in shard order.
+//!
+//! The *driver* (the cluster runner's single-threaded event loop) owns
+//! everything between phases: it resolves boundary θ/η reads from the
+//! stamp-indexed caches into the arena's remote blocks before a phase
+//! runs, and extracts boundary batches to send after a phase completes.
+//! During a pool phase no driver code touches the arena, so the
+//! coordinator's aliasing discipline carries over unchanged.
+
+use std::collections::BTreeMap;
+use std::ops::Range;
+
+use crate::consensus::LocalSolver;
+use crate::coordinator::ParamArena;
+use crate::graph::{Graph, NodeId};
+use crate::metrics::StatPartial;
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
+                     SchemeParams};
+use crate::util::rng::Pcg;
+
+use super::partition::MachinePartition;
+
+/// Machine lifecycle phase (mirrors the async runner's node phases at
+/// machine granularity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum MPhase {
+    /// waiting to run phase A of round `t`
+    Solve,
+    /// waiting to run phase B of round `t`
+    Reduce,
+    /// phase B done; phase C pending (RB waits for the round verdict)
+    FoldWait,
+    /// scripted joiner that has not activated yet
+    Dormant,
+    /// left the cluster
+    Dead,
+    /// finished `max_iters` rounds
+    Done,
+}
+
+/// Per-node state owned by exactly one machine (and, within it, one
+/// shard). θ and published η live only in the machine's arena.
+pub(crate) struct MNode<S> {
+    /// relabeled global node id
+    pub id: NodeId,
+    pub solver: S,
+    pub scheme: Box<dyn PenaltyScheme>,
+    /// out-edge penalties η_{i→j}, neighbour-slot order (working copy)
+    pub etas: Vec<f64>,
+    pub lambda: Vec<f64>,
+    pub nbr_mean_prev: Vec<f64>,
+    /// flat η-arena index of the *incoming* penalty η_{j→i} per slot
+    pub in_eta_idx: Vec<usize>,
+    /// machine of each neighbour slot (own id ⇒ intra-machine edge)
+    pub nbr_machine: Vec<usize>,
+    pub f_nb: Vec<f64>,
+    pub f_self_prev: f64,
+    // carried across phases within one round
+    pub eta_sum: f64,
+    /// live-slot count at phase A (η̄ must divide the phase-A η sum by the
+    /// phase-A degree even if a link toggles mid-round)
+    pub live_deg_a: usize,
+    pub f_self: f64,
+    pub primal: f64,
+    pub dual: f64,
+}
+
+/// Per-shard worker scratch, reused across rounds.
+pub(crate) struct ShardScratch {
+    eta_wsum: Vec<f64>,
+    nbr_mean: Vec<f64>,
+    rhos: Vec<Vec<f64>>,
+    pub partial: StatPartial,
+    /// raw Σ‖θ‖² over the shard (gossip mass; separate accumulator so the
+    /// centered statistics stay bit-identical to the coordinator's)
+    pub raw_sq: f64,
+}
+
+impl ShardScratch {
+    fn new(dim: usize, max_deg: usize) -> ShardScratch {
+        ShardScratch {
+            eta_wsum: vec![0.0; dim],
+            nbr_mean: vec![0.0; dim],
+            rhos: vec![vec![0.0; dim]; max_deg],
+            partial: StatPartial::new(dim),
+            raw_sq: 0.0,
+        }
+    }
+}
+
+/// One simulated machine (see module docs).
+pub(crate) struct MachineRt<S> {
+    pub id: usize,
+    /// this machine's contiguous slice of (relabeled) node ids
+    pub span: Range<usize>,
+    pub shards: Vec<Range<usize>>,
+    pub arena: ParamArena,
+    pub nodes: Vec<MNode<S>>,
+    pub scratch: Vec<ShardScratch>,
+    mask_scratch: Vec<bool>,
+    pub phase: MPhase,
+    pub t: u64,
+    pub start_round: u64,
+    /// `link_live[p]` — whether the machine link self↔p currently carries
+    /// traffic (true for p == self.id); refreshed against the quotient
+    /// LiveView generation by the runner
+    pub link_live: Vec<bool>,
+    pub link_gen: u64,
+    /// parity of the arena buffer holding the *current* θ / published η
+    /// (for the rejoin parity sync; tracked by the phase runners)
+    pub theta_parity: usize,
+    pub eta_parity: usize,
+
+    // -- boundary-in state ---------------------------------------------------
+    /// sorted remote node ids this machine reads (θ side)
+    pub in_nodes: Vec<NodeId>,
+    pub in_node_machine: Vec<usize>,
+    pub in_theta: Vec<BTreeMap<u64, Vec<f64>>>,
+    /// incoming cross penalties: (remote j, slot of the local node in j's
+    /// adjacency, machine of j) per cache entry
+    pub in_eta_edges: Vec<(NodeId, usize, usize)>,
+    pub in_eta: Vec<BTreeMap<u64, f64>>,
+    /// (remote j, local i) → index into `in_eta`/`in_eta_edges`
+    pub in_eta_index: BTreeMap<(NodeId, NodeId), usize>,
+
+    // -- boundary-out state --------------------------------------------------
+    /// per quotient slot: local nodes with ≥ 1 edge into that machine
+    pub out_nodes: Vec<Vec<NodeId>>,
+    /// per quotient slot: cross edges (local i, remote j, slot of j in i)
+    pub out_edges: Vec<Vec<(NodeId, NodeId, usize)>>,
+
+    // -- per-round products --------------------------------------------------
+    pub partials: Vec<StatPartial>,
+    pub raw_sq: f64,
+    /// round → flat local θ^{round+1} (pruned behind the verdict horizon)
+    pub snapshots: BTreeMap<u64, Vec<f64>>,
+    /// round → folded/estimated (global_primal, global_dual)
+    pub verdicts: BTreeMap<u64, (f64, f64)>,
+    pub latest_globals: (f64, f64),
+    /// verdicts known cover rounds `[0, horizon)`
+    pub horizon: u64,
+    pub needs_globals: bool,
+
+    // -- timers --------------------------------------------------------------
+    pub wake_epoch: u64,
+    pub timeout_armed: bool,
+    pub coll_epoch: u64,
+    pub coll_armed: bool,
+    /// per-round collective retransmit counts (tree)
+    pub retries: BTreeMap<u64, u32>,
+    /// this machine's previous collective mean estimate — the
+    /// decentralized analogue of the leader's `global_mean_prev` (gossip
+    /// duals and tree fallback verdicts derive their Δmean from it;
+    /// starts at zero like the engines)
+    pub coll_mean_prev: Vec<f64>,
+}
+
+/// Rounds of snapshots/verdicts retained behind a machine's own horizon
+/// (bounds memory; far larger than any reachable run-ahead spread).
+const KEEP_ROUNDS: u64 = 16;
+
+impl<S: LocalSolver + Send> MachineRt<S> {
+    /// Build machine `id`. `order[new] = orig` is the relabeling
+    /// permutation; solver construction and θ⁰ seeding are keyed by
+    /// *original* node ids exactly like the sharded runner, so a
+    /// one-machine cluster is bit-identical to it.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn build(
+        graph: &Graph,
+        part: &MachinePartition,
+        id: usize,
+        workers: usize,
+        order: &[NodeId],
+        factory: &(dyn Fn(NodeId) -> S + Send + Sync),
+        dim: usize,
+        scheme: SchemeKind,
+        params: SchemeParams,
+        seed: u64,
+        dormant: bool,
+        max_iters: usize,
+    ) -> MachineRt<S> {
+        let span = part.ranges[id].clone();
+        let shards = crate::graph::shard_ranges_in(graph, span.clone(), workers);
+        let arena = ParamArena::new(graph, dim);
+
+        let mut nodes: Vec<MNode<S>> = Vec::with_capacity(span.len());
+        let mut max_deg = 0usize;
+        let mut needs_globals = false;
+        for i in span.clone() {
+            let orig = order[i];
+            let mut solver = factory(orig);
+            assert_eq!(solver.dim(), dim, "homogeneous dims");
+            let deg = graph.degree(i);
+            max_deg = max_deg.max(deg);
+            let mut rng = Pcg::new(seed, orig as u64 + 1);
+            let theta0 = solver.initial_param(&mut rng);
+            assert_eq!(theta0.len(), dim);
+            let etas = vec![params.eta0; deg];
+            // Safety: single-threaded construction; parity 0 is the
+            // pre-loop write buffer.
+            unsafe {
+                arena.theta_mut(0, i).copy_from_slice(&theta0);
+                arena.eta_out_mut(0, i).copy_from_slice(&etas);
+            }
+            let in_eta_idx = graph
+                .neighbors(i)
+                .iter()
+                .map(|&j| {
+                    let slot = graph.edge_slot(j, i).expect("graph symmetry");
+                    arena.eta_index(j, slot)
+                })
+                .collect();
+            let nbr_machine = graph
+                .neighbors(i)
+                .iter()
+                .map(|&j| part.machine_of[j])
+                .collect();
+            let node_scheme = make_scheme(scheme, params, deg);
+            needs_globals |= node_scheme.needs_global_residuals();
+            nodes.push(MNode {
+                id: i,
+                solver,
+                scheme: node_scheme,
+                etas,
+                lambda: vec![0.0; dim],
+                nbr_mean_prev: vec![0.0; dim],
+                in_eta_idx,
+                nbr_machine,
+                f_nb: vec![0.0; deg],
+                f_self_prev: f64::INFINITY,
+                eta_sum: 0.0,
+                live_deg_a: 0,
+                f_self: 0.0,
+                primal: 0.0,
+                dual: 0.0,
+            });
+        }
+
+        // boundary-in indices (sorted ⇒ deterministic cache layout)
+        let mut in_set: Vec<NodeId> = Vec::new();
+        let mut in_eta_edges: Vec<(NodeId, usize, usize)> = Vec::new();
+        let mut in_eta_index: BTreeMap<(NodeId, NodeId), usize> = BTreeMap::new();
+        for i in span.clone() {
+            for &j in graph.neighbors(i) {
+                if part.machine_of[j] == id {
+                    continue;
+                }
+                in_set.push(j);
+                let slot = graph.edge_slot(j, i).expect("graph symmetry");
+                let idx = in_eta_edges.len();
+                in_eta_edges.push((j, slot, part.machine_of[j]));
+                in_eta_index.insert((j, i), idx);
+            }
+        }
+        in_set.sort_unstable();
+        in_set.dedup();
+        let in_node_machine: Vec<usize> =
+            in_set.iter().map(|&j| part.machine_of[j]).collect();
+        let in_theta = in_set.iter().map(|_| BTreeMap::new()).collect();
+        let in_eta = in_eta_edges.iter().map(|_| BTreeMap::new()).collect();
+
+        // boundary-out, per quotient slot
+        let qdeg = part.quotient.degree(id);
+        let mut out_nodes: Vec<Vec<NodeId>> = vec![Vec::new(); qdeg];
+        let mut out_edges: Vec<Vec<(NodeId, NodeId, usize)>> = vec![Vec::new(); qdeg];
+        for (qslot, &p) in part.quotient.neighbors(id).iter().enumerate() {
+            for i in span.clone() {
+                let mut touches = false;
+                for (slot, &j) in graph.neighbors(i).iter().enumerate() {
+                    if part.machine_of[j] == p {
+                        touches = true;
+                        out_edges[qslot].push((i, j, slot));
+                    }
+                }
+                if touches {
+                    out_nodes[qslot].push(i);
+                }
+            }
+        }
+
+        let workers_used = shards.len();
+        MachineRt {
+            id,
+            phase: if dormant {
+                MPhase::Dormant
+            } else if max_iters == 0 {
+                MPhase::Done
+            } else {
+                MPhase::Solve
+            },
+            t: 0,
+            start_round: if dormant { u64::MAX } else { 0 },
+            link_live: vec![true; part.len()],
+            link_gen: u64::MAX, // force a refresh before the first phase
+            theta_parity: 0,
+            eta_parity: 0,
+            scratch: (0..workers_used).map(|_| ShardScratch::new(dim, max_deg)).collect(),
+            mask_scratch: Vec::with_capacity(max_deg),
+            partials: (0..workers_used).map(|_| StatPartial::new(dim)).collect(),
+            raw_sq: 0.0,
+            snapshots: BTreeMap::new(),
+            verdicts: BTreeMap::new(),
+            latest_globals: (f64::INFINITY, f64::INFINITY),
+            horizon: 0,
+            needs_globals,
+            wake_epoch: 0,
+            timeout_armed: false,
+            coll_epoch: 0,
+            coll_armed: false,
+            retries: BTreeMap::new(),
+            coll_mean_prev: vec![0.0; dim],
+            in_nodes: in_set,
+            in_node_machine,
+            in_theta,
+            in_eta_edges,
+            in_eta,
+            in_eta_index,
+            out_nodes,
+            out_edges,
+            span,
+            shards,
+            arena,
+            nodes,
+        }
+    }
+
+    pub(crate) fn local_len(&self) -> usize {
+        self.span.len()
+    }
+
+    /// Whether the machine participates in rounds at all right now.
+    pub(crate) fn running(&self) -> bool {
+        matches!(self.phase, MPhase::Solve | MPhase::Reduce | MPhase::FoldWait)
+    }
+
+    // -- boundary caches -----------------------------------------------------
+
+    /// Cache readiness of boundary θ for ideal stamp `ideal` (phase A:
+    /// `t`; phase B: `t+1`). Dead-link sources are the caller's concern.
+    pub(crate) fn in_theta_ready(&self, idx: usize, ideal: u64, stale: u64,
+                                 force: bool) -> bool {
+        let c = &self.in_theta[idx];
+        if force {
+            !c.is_empty()
+        } else {
+            c.range(ideal.saturating_sub(stale)..).next().is_some()
+        }
+    }
+
+    pub(crate) fn in_eta_ready(&self, idx: usize, ideal: u64, stale: u64,
+                               force: bool) -> bool {
+        let c = &self.in_eta[idx];
+        if force {
+            !c.is_empty()
+        } else {
+            c.range(ideal.saturating_sub(stale)..).next().is_some()
+        }
+    }
+
+    /// Resolve a boundary θ read (largest stamp ≤ ideal, falling forward
+    /// to the smallest newer stamp only when nothing older exists) and
+    /// materialize it into the parity-`ideal&1` arena block. Returns the
+    /// used stamp. Entries below the resolved stamp are pruned; the
+    /// newest entry is never dropped.
+    pub(crate) fn resolve_in_theta(&mut self, idx: usize, ideal: u64) -> u64 {
+        let cache = &mut self.in_theta[idx];
+        let best = cache.range(..=ideal).next_back().map(|(&s, _)| s);
+        let used = match best {
+            Some(s) => {
+                cache.retain(|&k, _| k >= s);
+                s
+            }
+            None => *cache.keys().next().expect("cache checked nonempty"),
+        };
+        let th = cache.get(&used).expect("retained");
+        // Safety: the driver resolves boundary reads strictly between pool
+        // phases; nothing else touches a remote block.
+        unsafe { self.arena.theta_mut((ideal & 1) as usize, self.in_nodes[idx]) }
+            .copy_from_slice(th);
+        used
+    }
+
+    /// Resolve a boundary η read into the remote sender's out-edge slot of
+    /// the parity-`ideal&1` η buffer. Returns the used stamp.
+    pub(crate) fn resolve_in_eta(&mut self, idx: usize, ideal: u64) -> u64 {
+        let cache = &mut self.in_eta[idx];
+        let best = cache.range(..=ideal).next_back().map(|(&s, _)| s);
+        let used = match best {
+            Some(s) => {
+                cache.retain(|&k, _| k >= s);
+                s
+            }
+            None => *cache.keys().next().expect("cache checked nonempty"),
+        };
+        let v = *cache.get(&used).expect("retained");
+        let (j, slot, _) = self.in_eta_edges[idx];
+        // Safety: as in resolve_in_theta — remote η blocks are driver-only.
+        unsafe { self.arena.eta_out_mut((ideal & 1) as usize, j) }[slot] = v;
+        used
+    }
+
+    // -- pool phases ---------------------------------------------------------
+
+    /// Phase A over all shards: local solves on epoch-`t` parameters,
+    /// θ^{t+1} written into the parity-`q` arena blocks.
+    pub(crate) fn run_phase_a(&mut self, graph: &Graph, t: u64) {
+        let mid = self.id;
+        let arena = &self.arena;
+        let link_live = &self.link_live[..];
+        if self.shards.len() == 1 {
+            shard_phase_a(graph, arena, link_live, mid, &mut self.nodes,
+                          &mut self.scratch[0], t);
+        } else {
+            let shards = &self.shards;
+            let mut node_rest: &mut [MNode<S>] = &mut self.nodes;
+            let mut sc_rest: &mut [ShardScratch] = &mut self.scratch;
+            std::thread::scope(|s| {
+                for shard in shards {
+                    let len = shard.end - shard.start;
+                    let (nchunk, tail) = node_rest.split_at_mut(len);
+                    node_rest = tail;
+                    let (schunk, stail) = sc_rest.split_at_mut(1);
+                    sc_rest = stail;
+                    s.spawn(move || {
+                        shard_phase_a(graph, arena, link_live, mid, nchunk,
+                                      &mut schunk[0], t);
+                    });
+                }
+            });
+        }
+        self.theta_parity = ((t & 1) ^ 1) as usize;
+    }
+
+    /// Phase B over all shards: duals, residuals, objectives, per-shard
+    /// partial reduction (and the raw Σ‖θ‖² gossip mass).
+    pub(crate) fn run_phase_b(&mut self, graph: &Graph, t: u64) {
+        let mid = self.id;
+        let arena = &self.arena;
+        let link_live = &self.link_live[..];
+        if self.shards.len() == 1 {
+            shard_phase_b(graph, arena, link_live, mid, &mut self.nodes,
+                          &mut self.scratch[0], t);
+        } else {
+            let shards = &self.shards;
+            let mut node_rest: &mut [MNode<S>] = &mut self.nodes;
+            let mut sc_rest: &mut [ShardScratch] = &mut self.scratch;
+            std::thread::scope(|s| {
+                for shard in shards {
+                    let len = shard.end - shard.start;
+                    let (nchunk, tail) = node_rest.split_at_mut(len);
+                    node_rest = tail;
+                    let (schunk, stail) = sc_rest.split_at_mut(1);
+                    sc_rest = stail;
+                    s.spawn(move || {
+                        shard_phase_b(graph, arena, link_live, mid, nchunk,
+                                      &mut schunk[0], t);
+                    });
+                }
+            });
+        }
+        // fold products out of the scratch (shard order)
+        self.raw_sq = 0.0;
+        for w in 0..self.scratch.len() {
+            self.scratch[w].partial.store_into(&mut self.partials[w]);
+            self.raw_sq += self.scratch[w].raw_sq;
+        }
+    }
+
+    /// Phase C: penalty-scheme updates + publish η^{t+1} into parity `q`.
+    /// Sequential — per-node work is independent and reads nothing
+    /// cross-node, so the arithmetic is placement-invariant.
+    pub(crate) fn run_phase_c(&mut self, graph: &Graph, t: u64, globals: (f64, f64)) {
+        let q = ((t & 1) ^ 1) as usize;
+        let mid = self.id;
+        let arena = &self.arena;
+        let link_live = &self.link_live;
+        let mask = &mut self.mask_scratch;
+        for st in &mut self.nodes {
+            let deg = graph.degree(st.id);
+            mask.clear();
+            let mut all = true;
+            for slot in 0..deg {
+                let pm = st.nbr_machine[slot];
+                let l = pm == mid || link_live[pm];
+                all &= l;
+                mask.push(l);
+            }
+            // parity-critical: a fully live neighbourhood passes None so
+            // the schemes run the exact pre-liveness arithmetic
+            let live = if all { None } else { Some(&mask[..]) };
+            let obs = NodeObservation {
+                t: t as usize,
+                primal_norm: st.primal,
+                dual_norm: st.dual,
+                global_primal: globals.0,
+                global_dual: globals.1,
+                f_self: st.f_self,
+                f_self_prev: st.f_self_prev,
+                f_neighbors: &st.f_nb,
+                live,
+            };
+            st.scheme.update(&obs, &mut st.etas);
+            st.f_self_prev = st.f_self;
+            // Safety: we own every local node; parity-q η is the write
+            // buffer until the next round's phase B resolves into parity p.
+            unsafe { arena.eta_out_mut(q, st.id) }.copy_from_slice(&st.etas);
+        }
+        self.eta_parity = q;
+    }
+
+    /// Mirror every local θ/η block into the opposite-parity buffer — the
+    /// rejoin path, where the machine may restart at a round of either
+    /// parity while its buffers only hold the last-written side.
+    pub(crate) fn sync_parities(&mut self) {
+        let tp = self.theta_parity;
+        let ep = self.eta_parity;
+        for i in self.span.clone() {
+            // Safety: driver-side; the machine is not running any phase.
+            let th = unsafe { self.arena.theta(tp, i) }.to_vec();
+            unsafe { self.arena.theta_mut(tp ^ 1, i) }.copy_from_slice(&th);
+            let eta = unsafe { self.arena.eta_out_mut(ep, i) }.to_vec();
+            unsafe { self.arena.eta_out_mut(ep ^ 1, i) }.copy_from_slice(&eta);
+        }
+    }
+
+    /// Record the round-`t` θ^{t+1} snapshot (flat, local nodes in span
+    /// order) and prune snapshots far behind the verdict horizon.
+    pub(crate) fn snapshot(&mut self, t: u64) {
+        let q = ((t & 1) ^ 1) as usize;
+        let dim = self.arena.dim();
+        let mut flat = vec![0.0; self.span.len() * dim];
+        for (off, i) in self.span.clone().enumerate() {
+            // Safety: driver-side, between pool phases.
+            flat[off * dim..(off + 1) * dim]
+                .copy_from_slice(unsafe { self.arena.theta(q, i) });
+        }
+        self.snapshots.insert(t, flat);
+        let floor = self.horizon.saturating_sub(KEEP_ROUNDS);
+        self.snapshots.retain(|&r, _| r >= floor);
+        self.verdicts.retain(|&r, _| r >= floor);
+        self.retries.retain(|&r, _| r >= floor);
+    }
+
+    /// The machine's best θ snapshot for round `r` (exact round, else the
+    /// newest older one, else the oldest available, else θ⁰).
+    pub(crate) fn snapshot_for(&self, r: u64, dim: usize) -> Vec<f64> {
+        if let Some(s) = self.snapshots.range(..=r).next_back() {
+            return s.1.clone();
+        }
+        if let Some(s) = self.snapshots.iter().next() {
+            return s.1.clone();
+        }
+        // never ran a round: θ⁰ sits in parity 0
+        let mut flat = vec![0.0; self.span.len() * dim];
+        for (off, i) in self.span.clone().enumerate() {
+            // Safety: driver-side.
+            flat[off * dim..(off + 1) * dim]
+                .copy_from_slice(unsafe { self.arena.theta(0, i) });
+        }
+        flat
+    }
+
+    /// Extract the boundary θ batch toward quotient slot `qslot` from the
+    /// parity of stamp `stamp` (θ^{stamp} = parity `stamp & 1`).
+    pub(crate) fn boundary_theta(&self, qslot: usize, stamp: u64)
+                                 -> Vec<(NodeId, Vec<f64>)> {
+        let parity = (stamp & 1) as usize;
+        self.out_nodes[qslot]
+            .iter()
+            .map(|&i| {
+                // Safety: driver-side, between pool phases.
+                (i, unsafe { self.arena.theta(parity, i) }.to_vec())
+            })
+            .collect()
+    }
+
+    /// Extract the boundary η batch toward quotient slot `qslot` from the
+    /// nodes' current working penalties (η^{t+1} right after phase C; η⁰
+    /// at the init handshake).
+    pub(crate) fn boundary_eta(&self, qslot: usize) -> Vec<(NodeId, NodeId, f64)> {
+        let lo = self.span.start;
+        self.out_edges[qslot]
+            .iter()
+            .map(|&(i, j, slot)| (i, j, self.nodes[i - lo].etas[slot]))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shard phase bodies. Transcribed from `coordinator::shard::worker_main`
+// phases A/B, with a per-slot machine-link mask added: when every link is
+// live the branches never fire and the floating-point stream is identical
+// to the coordinator's (the one-machine bit-parity test pins this).
+
+fn shard_phase_a<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
+                                 link_live: &[bool], mid: usize,
+                                 nodes: &mut [MNode<S>], sc: &mut ShardScratch,
+                                 t: u64) {
+    let p = (t & 1) as usize;
+    let q = p ^ 1;
+    let dim = arena.dim();
+    for st in nodes {
+        // Safety: phase A reads only parity-p θ (local peers' θ^t and the
+        // driver-materialized boundary θ) and writes only our parity-q
+        // block — the coordinator's discipline verbatim.
+        let theta_t = unsafe { arena.theta(p, st.id) };
+        let mut eta_sum = 0.0;
+        let mut live_deg = 0usize;
+        sc.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+        for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
+            let pm = st.nbr_machine[slot];
+            if pm != mid && !link_live[pm] {
+                continue;
+            }
+            live_deg += 1;
+            let e = st.etas[slot];
+            eta_sum += e;
+            let tj = unsafe { arena.theta(p, j) };
+            for k in 0..dim {
+                sc.eta_wsum[k] += e * (theta_t[k] + tj[k]);
+            }
+        }
+        st.eta_sum = eta_sum;
+        st.live_deg_a = live_deg;
+        // Safety: we own st.id; parity q is this phase's write buffer and
+        // solve_into fully overwrites it.
+        let theta_next = unsafe { arena.theta_mut(q, st.id) };
+        st.solver.solve_into(theta_t, &st.lambda, eta_sum, &sc.eta_wsum,
+                             theta_next);
+    }
+}
+
+fn shard_phase_b<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
+                                 link_live: &[bool], mid: usize,
+                                 nodes: &mut [MNode<S>], sc: &mut ShardScratch,
+                                 t: u64) {
+    let p = (t & 1) as usize;
+    let q = p ^ 1;
+    let dim = arena.dim();
+    sc.partial.reset();
+    sc.raw_sq = 0.0;
+    for st in nodes.iter_mut() {
+        let deg = graph.degree(st.id);
+        // Safety: after the phase-A join every parity-q θ block is
+        // complete; η parity-p holds the round's penalties (local peers'
+        // phase-C publishes from last round + driver-resolved boundary η).
+        let th_new = unsafe { arena.theta(q, st.id) };
+
+        // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), fused with the neighbour-mean
+        // accumulation; both accumulators are fed in slot order, so the
+        // floating-point grouping matches the coordinator's two passes.
+        sc.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
+        let mut live_deg = 0usize;
+        for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
+            let pm = st.nbr_machine[slot];
+            if pm != mid && !link_live[pm] {
+                continue;
+            }
+            live_deg += 1;
+            let eta_in = unsafe { arena.eta(p, st.in_eta_idx[slot]) };
+            let eta_bar = 0.5 * (st.etas[slot] + eta_in);
+            let tj = unsafe { arena.theta(q, j) };
+            for k in 0..dim {
+                st.lambda[k] += 0.5 * eta_bar * (th_new[k] - tj[k]);
+                sc.nbr_mean[k] += tj[k];
+            }
+        }
+
+        // local residuals over the live neighbourhood; η̄ divides the
+        // phase-A η sum by the phase-A live count (mid-round link toggles
+        // must not pair one snapshot's sum with the other's degree)
+        let inv_deg = 1.0 / live_deg.max(1) as f64;
+        sc.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+        let inv_deg_a = 1.0 / st.live_deg_a.max(1) as f64;
+        let eta_bar_node = st.eta_sum * inv_deg_a;
+        let mut r2 = 0.0;
+        let mut s2 = 0.0;
+        for k in 0..dim {
+            let r = th_new[k] - sc.nbr_mean[k];
+            let s = eta_bar_node * (sc.nbr_mean[k] - st.nbr_mean_prev[k]);
+            r2 += r * r;
+            s2 += s * s;
+        }
+        st.nbr_mean_prev.copy_from_slice(&sc.nbr_mean);
+        st.primal = r2.sqrt();
+        st.dual = s2.sqrt();
+
+        // objectives (f at bridge midpoints only if the scheme asks);
+        // dead slots get a placeholder the scheme's mask excludes
+        st.f_self = st.solver.objective(th_new);
+        if st.scheme.needs_neighbor_objectives() {
+            for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
+                let rho = &mut sc.rhos[slot];
+                let pm = st.nbr_machine[slot];
+                if pm == mid || link_live[pm] {
+                    let tj = unsafe { arena.theta(q, j) };
+                    for k in 0..dim {
+                        rho[k] = 0.5 * (th_new[k] + tj[k]);
+                    }
+                } else {
+                    rho.copy_from_slice(th_new);
+                }
+            }
+            st.solver.objective_batch_into(&sc.rhos[..deg], &mut st.f_nb);
+        } else {
+            st.f_nb.clear();
+            st.f_nb.resize(deg, 0.0);
+        }
+
+        // shard-local reduction, node order = sequential order
+        sc.partial.f_sum += st.f_self;
+        sc.partial.max_primal = sc.partial.max_primal.max(st.primal);
+        sc.partial.max_dual = sc.partial.max_dual.max(st.dual);
+        for &e in &st.etas {
+            sc.partial.eta_min = sc.partial.eta_min.min(e);
+            sc.partial.eta_max = sc.partial.eta_max.max(e);
+            sc.partial.eta_sum += e;
+        }
+        sc.partial.eta_count += deg;
+        for k in 0..dim {
+            sc.partial.theta_sum[k] += th_new[k];
+        }
+    }
+    // second shard-local pass: spread about the shard mean (the centered
+    // statistic the Chan-style fold needs) + the raw Σ‖θ‖² gossip mass
+    sc.partial.node_count = nodes.len();
+    if !nodes.is_empty() {
+        let inv_count = 1.0 / nodes.len() as f64;
+        for k in 0..dim {
+            sc.nbr_mean[k] = sc.partial.theta_sum[k] * inv_count;
+        }
+        for st in nodes.iter() {
+            // Safety: parity-q θ is stable throughout phase B.
+            let th = unsafe { arena.theta(q, st.id) };
+            for k in 0..dim {
+                let d = th[k] - sc.nbr_mean[k];
+                sc.partial.centered_sq += d * d;
+                sc.raw_sq += th[k] * th[k];
+            }
+        }
+    }
+}

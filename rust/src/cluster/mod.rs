@@ -1,0 +1,89 @@
+//! Hybrid cluster runtime: sharded worker pools per machine, a simulated
+//! network between machines, and decentralized collective reductions.
+//!
+//! This is the composition of the three runtimes that came before it.
+//! The sequential [`crate::consensus::Engine`] defines the arithmetic;
+//! the sharded [`crate::coordinator`] runs it on a worker pool with a
+//! zero-copy arena; the async [`crate::net`] runtime runs it over a
+//! faulty network — but one node per endpoint, and with a global fold
+//! that is an *omniscient-simulator oracle* (the simulator folds every
+//! node's contribution in id order, something no real deployment could
+//! do). Here the deployment shape is realistic end to end:
+//!
+//! ```text
+//! cluster
+//! ├── machine 0 ─ sharded worker pool over nodes  0..a   (PR 1 arena,
+//! │               solve_into, per-shard centered partials — barrier-
+//! │               synchronous inside the machine)
+//! ├── machine 1 ─ pool over nodes a..b
+//! │     ⋮            boundary θ/η and statistic partials travel ONLY
+//! └── machine M─1    through net::sim (latency, loss, duplication,
+//!                    partitions, churn — *between* machines)
+//! ```
+//!
+//! **Hierarchy.** `machine ⊃ shard ⊃ node`: the (RCM-relabeled) node
+//! graph is split into `M` contiguous machine slices by the same
+//! degree-weighted splitter the pool uses for shards
+//! ([`MachinePartition`]), and each machine splits its slice again into
+//! `W` worker shards. Intra-machine neighbour reads go through the
+//! machine's arena exactly as in the coordinator; cross-machine edges
+//! read stamp-indexed boundary caches filled by [`crate::net::sim`]
+//! messages, with the async runtime's bounded-staleness and
+//! silence-timeout semantics at machine granularity.
+//!
+//! **Collectives.** The oracle fold is replaced by a pluggable reduction
+//! ([`CollectiveKind`]) over the live machine quotient graph:
+//!
+//! | fold        | exactness                        | cost / failure story |
+//! |-------------|----------------------------------|----------------------|
+//! | oracle (PR 3) | exact, node-id order           | physically unrealizable |
+//! | `tree`      | **exact**: partial lists concatenate rootward and the root absorbs them in machine-id (= node-id) order with the coordinator's Chan-style fold | 2·depth hops latency per round; root bottleneck; timeout-retransmit under loss; detached machines fall back to local folds |
+//! | `gossip`    | approximate: loss-robust push-sum ratio estimates + max-gossip, per-node-normalized residuals | fully decentralized; renormalizes over the live component; accuracy ∝ tick budget; estimates bias RB and the stop rule |
+//!
+//! The `cluster_scenarios` experiment measures the *extra rounds per
+//! scheme* each collective costs against the oracle fold under loss —
+//! the tradeoff is a number in a CSV, not an anecdote.
+//!
+//! **Parity contracts** (pinned by `cluster::tests`):
+//!
+//! * 1 machine, zero faults, tree collective ⇒ **bit-for-bit** equal to
+//!   [`crate::coordinator::ShardedRunner`] (same worker count): θ,
+//!   iteration count, convergence flag and every recorded IterStats
+//!   field, for all seven penalty schemes.
+//! * M machines, zero faults, tree, one worker per machine ⇒ bit-for-bit
+//!   equal to `ShardedRunner` with `workers = M` — the tree folds the
+//!   same shard partials in the same order, so even the RB reference
+//!   scheme's folded-residual trajectory is identical. Against the
+//!   sequential `Engine` the node trajectories of every *decentralized*
+//!   scheme are exact; only the folded global statistics differ by the
+//!   documented Chan-vs-flat reassociation (last-ulp regrouping).
+//! * Any faults, any collective: same seed ⇒ bit-identical event trace.
+//!
+//! **Liveness under partition.** A machine cut off by a transport
+//! partition keeps iterating: boundary reads fall back to the newest
+//! cached values after `silence_timeout`, and after `fallback_after`
+//! unanswered retransmissions it substitutes a *local* fold for the
+//! missing verdict (counted in
+//! [`crate::metrics::NetCounters::collective_fallbacks`]). The rest of
+//! the cluster folds without it after `collective_timeout`
+//! ([`crate::metrics::NetCounters::collective_timeouts`]), so one
+//! isolated machine never poisons the collective; scripted machine churn
+//! re-roots the tree deterministically over the live quotient view, and
+//! gossip needs no repair at all — its ratio estimates renormalize over
+//! whatever remains reachable. RB's `needs_global_residuals()` gating
+//! and the NAP [`crate::net::TopologyController`] both operate on the
+//! machine-level live graph (RB waits on the round's collective verdict;
+//! the activity rule masks machine links whose mean cross-cut η̄
+//! collapses).
+
+mod collective;
+mod machine;
+mod partition;
+mod runner;
+
+pub use collective::CollectiveKind;
+pub use partition::MachinePartition;
+pub use runner::{factory_of, ClusterConfig, ClusterReport, ClusterRunner};
+
+#[cfg(test)]
+mod tests;

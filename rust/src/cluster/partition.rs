@@ -1,0 +1,120 @@
+//! Machine-level partitioning: contiguous node slices and the machine
+//! quotient graph.
+//!
+//! The cluster runtime splits the (relabeled) node graph into `M`
+//! contiguous id ranges with the same degree-weighted splitter the
+//! worker pool uses for shards ([`crate::graph::shard_ranges`]) — with
+//! RCM relabeling on (the default), neighbours carry nearby ids, so the
+//! contiguous machine slices are also *locality-aware*: most edges stay
+//! machine-internal and the boundary surface the simulated network has
+//! to carry is small.
+//!
+//! The **quotient graph** has one vertex per machine and an edge wherever
+//! any node edge crosses the cut. It is the topology of everything
+//! machine-level: boundary-exchange links, the collective spanning tree /
+//! gossip links, the machine [`crate::graph::LiveView`] that scripted
+//! churn and the NAP activity rule mutate, and the id space of the
+//! machine-level [`crate::net::FaultPlan`].
+
+use std::ops::Range;
+
+use crate::error::Result;
+use crate::graph::{shard_ranges, Graph, NodeId};
+
+/// A machine partition of a node graph (see module docs).
+#[derive(Debug, Clone)]
+pub struct MachinePartition {
+    /// `ranges[m]` — machine m's contiguous slice of (relabeled) node ids,
+    /// ascending and exhaustive.
+    pub ranges: Vec<Range<usize>>,
+    /// `machine_of[node] = m` (relabeled ids).
+    pub machine_of: Vec<usize>,
+    /// Machine quotient graph: machines adjacent iff a node edge crosses.
+    pub quotient: Graph,
+}
+
+impl MachinePartition {
+    /// Partition `graph` into at most `machines` contiguous slices.
+    pub fn new(graph: &Graph, machines: usize) -> Result<MachinePartition> {
+        let ranges = shard_ranges(graph, machines);
+        let m = ranges.len();
+        let mut machine_of = vec![0usize; graph.len()];
+        for (mid, r) in ranges.iter().enumerate() {
+            for i in r.clone() {
+                machine_of[i] = mid;
+            }
+        }
+        let mut edges: Vec<(NodeId, NodeId)> = Vec::new();
+        for (i, j) in graph.directed_edges() {
+            let (a, b) = (machine_of[i], machine_of[j]);
+            if a < b {
+                edges.push((a, b));
+            }
+        }
+        edges.sort_unstable();
+        edges.dedup();
+        let quotient = Graph::new(m, &edges)?;
+        Ok(MachinePartition { ranges, machine_of, quotient })
+    }
+
+    /// Number of machines actually created (≤ the requested count).
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Topology;
+
+    #[test]
+    fn single_machine_covers_everything() {
+        let g = Topology::Ring.build(9).unwrap();
+        let p = MachinePartition::new(&g, 1).unwrap();
+        assert_eq!(p.ranges, vec![0..9]);
+        assert_eq!(p.quotient.len(), 1);
+        assert_eq!(p.quotient.edge_count(), 0);
+        assert!(p.machine_of.iter().all(|&m| m == 0));
+    }
+
+    #[test]
+    fn ring_quotient_is_a_ring_of_machines() {
+        let g = Topology::Ring.build(12).unwrap();
+        let p = MachinePartition::new(&g, 4).unwrap();
+        assert_eq!(p.len(), 4);
+        // contiguous + exhaustive
+        let mut expect = 0;
+        for r in &p.ranges {
+            assert_eq!(r.start, expect);
+            expect = r.end;
+        }
+        assert_eq!(expect, 12);
+        // each machine borders its two neighbouring slices (wrap included)
+        assert_eq!(p.quotient.len(), 4);
+        assert!(p.quotient.edge_slot(0, 1).is_some());
+        assert!(p.quotient.edge_slot(0, 3).is_some(), "ring wraps");
+        assert!(p.quotient.edge_slot(0, 2).is_none());
+        assert!(p.quotient.is_connected());
+    }
+
+    #[test]
+    fn more_machines_than_nodes_clamps() {
+        let g = Topology::Chain.build(3).unwrap();
+        let p = MachinePartition::new(&g, 10).unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.quotient.len(), 3);
+    }
+
+    #[test]
+    fn machine_ranges_match_shard_ranges() {
+        // the machine split IS the worker-pool splitter at machine count
+        let g = Topology::Star.build(21).unwrap();
+        let p = MachinePartition::new(&g, 3).unwrap();
+        assert_eq!(p.ranges, shard_ranges(&g, 3));
+    }
+}

@@ -1,0 +1,1375 @@
+//! The cluster driver: a single-threaded discrete-event loop over the
+//! machine-level simulated network.
+//!
+//! Each machine is a state machine (`Solve → Reduce → FoldWait → …`)
+//! advanced by message arrivals and timers popped from the shared
+//! [`NetSim`] queue, exactly like the per-node [`crate::net::AsyncRunner`]
+//! — but one step of a machine executes a whole barrier-synchronous
+//! worker-pool iteration over its local node slice
+//! ([`super::machine`]), and the global fold travels through the chosen
+//! collective ([`super::collective`]) instead of an omniscient oracle.
+//! See the [`super`] module docs for the full protocol and the parity
+//! contracts.
+
+use std::sync::Arc;
+
+use crate::consensus::LocalSolver;
+use crate::coordinator::SolverFactory;
+use crate::error::{Error, Result};
+use crate::graph::{rcm_order, relabel_graph, Graph, NodeId, Relabel};
+use crate::metrics::{ConvergenceChecker, IterStats, NetCounters, Recorder,
+                     RunningFold, StatPartial};
+use crate::net::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TimerKind,
+                      TraceEvent, TraceKind};
+use crate::net::{ActivityConfig, TopologyController};
+use crate::penalty::{SchemeKind, SchemeParams};
+
+use super::collective::{build_tree, estimate, subtree, CollectiveKind,
+                        GossipState, TreeState, MASS_COUNT, MASS_ETA,
+                        MASS_ETA_CNT, MASS_F, MASS_SQ, MASS_THETA};
+use super::machine::{MPhase, MachineRt};
+use super::partition::MachinePartition;
+
+/// Cluster-run configuration (mirrors [`crate::coordinator::ShardedConfig`]
+/// plus the machine/network/collective knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    pub scheme: SchemeKind,
+    pub params: SchemeParams,
+    pub tol: f64,
+    pub patience: usize,
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    /// Simulated machine count (clamped to the node count).
+    pub machines: usize,
+    /// Worker-pool size per machine; 0 resolves to
+    /// `min(local nodes, available_parallelism)` like the sharded runner.
+    pub workers: usize,
+    /// Node-relabeling policy applied before the machine split (default
+    /// RCM — locality-aware machine slices, small boundary surface).
+    pub relabel: Relabel,
+    /// Which reduction layer replaces the oracle fold.
+    pub collective: CollectiveKind,
+    /// Boundary-read staleness budget in rounds (0 = lock-step).
+    pub max_staleness: u64,
+    /// Silent-neighbour fallback timeout in ticks (0 = pure blocking).
+    pub silence_timeout: Ticks,
+    /// Collective patience in ticks before forwarding/folding without
+    /// stragglers and before retransmitting (0 = pure blocking).
+    pub collective_timeout: Ticks,
+    /// Retransmits before a machine substitutes a local fallback verdict.
+    pub fallback_after: u32,
+    /// Rounds a machine may run ahead of its verdict horizon.
+    pub pipeline: u64,
+    /// Push-sum exchange ticks per round (0 = auto: 4⌈log₂M⌉+4, min 8 —
+    /// see [`super::collective`] for the measured accuracy rationale).
+    pub gossip_ticks: u32,
+    /// Virtual ticks between push-sum exchanges.
+    pub gossip_spacing: Ticks,
+    /// Machine-level NAP activity rule over the quotient graph.
+    pub activity: Option<ActivityConfig>,
+    pub tracing: bool,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            scheme: SchemeKind::Fixed,
+            params: SchemeParams::default(),
+            tol: 1e-3,
+            patience: 3,
+            warmup: 5,
+            max_iters: 1000,
+            seed: 0,
+            machines: 2,
+            workers: 0,
+            relabel: Relabel::default(),
+            collective: CollectiveKind::Tree,
+            max_staleness: 0,
+            silence_timeout: 64,
+            collective_timeout: 128,
+            fallback_after: 3,
+            pipeline: 2,
+            gossip_ticks: 0,
+            gossip_spacing: 4,
+            activity: None,
+            tracing: true,
+        }
+    }
+}
+
+/// Outcome of a cluster run.
+#[derive(Debug)]
+pub struct ClusterReport {
+    /// Completed collective rounds recorded by the designated machine.
+    pub iterations: usize,
+    pub converged: bool,
+    pub recorder: Recorder,
+    /// Final per-node parameters at the stop round (original node ids).
+    pub thetas: Vec<Vec<f64>>,
+    pub virtual_time: Ticks,
+    pub counters: NetCounters,
+    pub trace: Vec<TraceEvent>,
+    pub machines: usize,
+    pub live_machines: Vec<bool>,
+    /// Resolved per-machine worker-pool target.
+    pub workers_per_machine: usize,
+}
+
+/// Designated-recorder state: the convergence checker and the recorded
+/// curves live with the tree root (tree) or the lowest live machine
+/// (gossip). The simulator halts the run the moment the stop decision is
+/// computed — the broadcast a real deployment would need costs zero extra
+/// rounds here, exactly like the async runner's `Stop` handling.
+struct RootState {
+    cursor: u64,
+    checker: ConvergenceChecker,
+    recorder: Recorder,
+    global_mean_prev: Option<Vec<f64>>,
+    fold: RunningFold,
+    converged: bool,
+}
+
+enum Coll {
+    Tree(TreeState),
+    Gossip(GossipState),
+}
+
+/// The hybrid cluster runner (see [`super`] and the module docs).
+pub struct ClusterRunner<S: LocalSolver + Send> {
+    cfg: ClusterConfig,
+    /// relabeled node graph
+    graph: Graph,
+    /// `order[new] = orig` relabeling permutation
+    order: Vec<NodeId>,
+    part: MachinePartition,
+    ctrl: TopologyController,
+    sim: NetSim,
+    machines: Vec<MachineRt<S>>,
+    coll: Coll,
+    fold: RootState,
+    pending_wakes: Vec<usize>,
+    stopped: bool,
+    stop_round: Option<u64>,
+    dim: usize,
+    n_total: usize,
+    workers_used: usize,
+}
+
+impl<S: LocalSolver + Send> ClusterRunner<S> {
+    /// Build a runner. Solver construction and θ⁰ seeding are keyed by
+    /// *original* node ids through the factory, exactly like
+    /// [`crate::coordinator::ShardedRunner`].
+    pub fn new(graph: Graph, cfg: ClusterConfig, plan: FaultPlan,
+               factory: SolverFactory<S>) -> Result<ClusterRunner<S>> {
+        let n = graph.len();
+        if n == 0 {
+            return Err(Error::Config("cluster: empty graph".into()));
+        }
+        let dim = factory(0).dim();
+
+        let order: Vec<NodeId> = match cfg.relabel {
+            Relabel::Identity => (0..n).collect(),
+            Relabel::Rcm => rcm_order(&graph),
+        };
+        let relabeled = match cfg.relabel {
+            Relabel::Identity => graph,
+            Relabel::Rcm => relabel_graph(&graph, &order)?,
+        };
+        let part = MachinePartition::new(&relabeled, cfg.machines.max(1))?;
+        let mcount = part.len();
+
+        for ev in &plan.churn {
+            let m = match *ev {
+                crate::net::ChurnEvent::Join { node, .. }
+                | crate::net::ChurnEvent::Leave { node, .. } => node,
+            };
+            if m >= mcount {
+                return Err(Error::Config(format!(
+                    "cluster: churn event on machine {m} out of range (machines: {mcount})"
+                )));
+            }
+        }
+        if let Some(&d) = plan.initially_dormant.iter().find(|&&d| d >= mcount) {
+            return Err(Error::Config(format!(
+                "cluster: dormant machine {d} out of range (machines: {mcount})"
+            )));
+        }
+
+        let mut ctrl = TopologyController::new(part.quotient.clone(), cfg.activity);
+        for &m in &plan.initially_dormant {
+            ctrl.view_mut().set_node(m, false);
+        }
+
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+        };
+
+        let machines: Vec<MachineRt<S>> = (0..mcount)
+            .map(|m| {
+                MachineRt::build(
+                    &relabeled, &part, m, workers, &order, &*factory, dim,
+                    cfg.scheme, cfg.params, cfg.seed,
+                    plan.initially_dormant.contains(&m), cfg.max_iters,
+                )
+            })
+            .collect();
+
+        let coll = match cfg.collective {
+            CollectiveKind::Tree => Coll::Tree(TreeState::new(ctrl.view())),
+            CollectiveKind::Gossip => {
+                let ticks = if cfg.gossip_ticks > 0 {
+                    cfg.gossip_ticks
+                } else {
+                    GossipState::auto_ticks(mcount)
+                };
+                Coll::Gossip(GossipState::new(mcount, dim, ticks,
+                                              cfg.gossip_spacing.max(1)))
+            }
+        };
+
+        let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        Ok(ClusterRunner {
+            fold: RootState {
+                cursor: 0,
+                checker: ConvergenceChecker::new(cfg.tol)
+                    .with_patience(cfg.patience)
+                    .with_warmup(cfg.warmup),
+                recorder: Recorder::with_capacity(cfg.max_iters),
+                global_mean_prev: None,
+                fold: RunningFold::new(dim),
+                converged: false,
+            },
+            pending_wakes: Vec::new(),
+            stopped: false,
+            stop_round: None,
+            dim,
+            n_total: n,
+            workers_used: workers,
+            graph: relabeled,
+            order,
+            part,
+            ctrl,
+            sim,
+            machines,
+            coll,
+            cfg,
+        })
+    }
+
+    /// Drive the cluster to completion and report.
+    pub fn run(mut self) -> ClusterReport {
+        self.init_handshake();
+        for m in 0..self.machines.len() {
+            self.try_advance(m, false);
+        }
+        self.drain();
+
+        while !self.stopped {
+            let Some((at, event)) = self.sim.pop() else { break };
+            // stale wake-ups/timers are skipped without advancing the
+            // clock, so virtual time reflects real activity only
+            match &event {
+                Event::Wake { node, epoch } => {
+                    let mach = &self.machines[*node];
+                    if *epoch != mach.wake_epoch || !mach.running() {
+                        continue;
+                    }
+                }
+                Event::Timer { node, kind: TimerKind::Collective, epoch } => {
+                    // Done machines still service collective timers — the
+                    // tail rounds' retransmissions must outlive the
+                    // machine's own round budget
+                    let mach = &self.machines[*node];
+                    if *epoch != mach.coll_epoch
+                        || matches!(mach.phase, MPhase::Dormant | MPhase::Dead)
+                    {
+                        continue;
+                    }
+                }
+                _ => {}
+            }
+            self.sim.advance_to(at);
+            match event {
+                Event::Deliver { src, dst, payload, dup: _ } => {
+                    self.on_deliver(src, dst, payload);
+                }
+                Event::Wake { node, epoch: _ } => {
+                    self.sim.counters.timeouts += 1;
+                    self.machines[node].timeout_armed = false;
+                    self.try_advance(node, true);
+                }
+                Event::Timer { node, kind: TimerKind::Gossip, .. } => {
+                    self.on_gossip_timer(node);
+                }
+                Event::Timer { node, kind: TimerKind::Collective, .. } => {
+                    self.on_coll_timer(node);
+                }
+                Event::Join { node } => self.on_join(node),
+                Event::Leave { node } => self.on_leave(node),
+            }
+            self.drain();
+        }
+        self.finish()
+    }
+
+    // -- setup / teardown ---------------------------------------------------
+
+    fn init_handshake(&mut self) {
+        for m in 0..self.machines.len() {
+            if !self.ctrl.view().node_live(m) {
+                continue;
+            }
+            self.send_state(m, 0, 0);
+        }
+    }
+
+    /// Quotient slots of machine `m` whose link currently carries
+    /// traffic, as `(qslot, peer)` pairs in adjacency order — the one
+    /// definition of "live neighbour machine" every send/gossip path
+    /// shares.
+    fn live_neighbors(&self, m: usize) -> Vec<(usize, usize)> {
+        let view = self.ctrl.view();
+        self.part
+            .quotient
+            .neighbors(m)
+            .iter()
+            .enumerate()
+            .filter(|&(qslot, _)| view.slot_live(m, qslot))
+            .map(|(qslot, &p)| (qslot, p))
+            .collect()
+    }
+
+    /// Reliably send machine `m`'s boundary θ (stamped `ts`) and η
+    /// (stamped `es`) to every live neighbour machine.
+    fn send_state(&mut self, m: usize, ts: u64, es: u64) {
+        for (qslot, p) in self.live_neighbors(m) {
+            let nodes = self.machines[m].boundary_theta(qslot, ts);
+            let edges = self.machines[m].boundary_eta(qslot);
+            self.sim.send(m, p, Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.sim.send(m, p, Payload::BoundaryEta { stamp: es, edges }, true);
+        }
+    }
+
+    fn finish(mut self) -> ClusterReport {
+        let n = self.graph.len();
+        let dim = self.dim;
+        let target = self.stop_round.unwrap_or(u64::MAX);
+        let mut thetas = vec![vec![0.0; dim]; n];
+        for mach in &self.machines {
+            let flat = mach.snapshot_for(target, dim);
+            for (off, i) in mach.span.clone().enumerate() {
+                thetas[self.order[i]]
+                    .copy_from_slice(&flat[off * dim..(off + 1) * dim]);
+            }
+        }
+        let live_machines =
+            (0..self.machines.len()).map(|m| self.ctrl.view().node_live(m)).collect();
+        ClusterReport {
+            iterations: self.fold.cursor as usize,
+            converged: self.fold.converged,
+            recorder: self.fold.recorder,
+            thetas,
+            virtual_time: self.sim.now(),
+            counters: self.sim.counters,
+            trace: std::mem::take(&mut self.sim.trace),
+            machines: self.machines.len(),
+            live_machines,
+            workers_per_machine: self.workers_used,
+        }
+    }
+
+    // -- the machine state machine ------------------------------------------
+
+    fn try_advance(&mut self, m: usize, mut force: bool) {
+        loop {
+            if self.stopped {
+                return;
+            }
+            match self.machines[m].phase {
+                MPhase::Dormant | MPhase::Dead | MPhase::Done => return,
+                MPhase::Solve => {
+                    let t = self.machines[m].t;
+                    if t > self.machines[m].horizon + self.cfg.pipeline {
+                        return; // woken when the verdict horizon advances
+                    }
+                    if !self.ready_a(m, force) {
+                        self.arm_silence(m);
+                        return;
+                    }
+                    self.resolve_a(m);
+                    {
+                        let mach = &mut self.machines[m];
+                        mach.run_phase_a(&self.graph, t);
+                        mach.snapshot(t);
+                        mach.phase = MPhase::Reduce;
+                    }
+                    self.send_boundary_theta(m, t + 1);
+                }
+                MPhase::Reduce => {
+                    if !self.ready_b(m, force) {
+                        self.arm_silence(m);
+                        return;
+                    }
+                    self.resolve_b(m);
+                    let t = self.machines[m].t;
+                    self.machines[m].run_phase_b(&self.graph, t);
+                    self.machines[m].phase = MPhase::FoldWait;
+                    self.collective_ready(m, t);
+                    if self.stopped {
+                        return;
+                    }
+                }
+                MPhase::FoldWait => {
+                    let t = self.machines[m].t;
+                    let verdict = self.machines[m].verdicts.get(&t).copied();
+                    if self.machines[m].needs_globals && verdict.is_none() {
+                        return; // woken by the verdict (or its fallback)
+                    }
+                    let globals =
+                        verdict.unwrap_or(self.machines[m].latest_globals);
+                    self.refresh_links(m);
+                    self.machines[m].run_phase_c(&self.graph, t, globals);
+                    self.send_boundary_eta(m, t + 1);
+                    self.observe_machine_etas(m);
+                    if self.stopped {
+                        return;
+                    }
+                    let mach = &mut self.machines[m];
+                    mach.t += 1;
+                    mach.phase = if mach.t >= self.cfg.max_iters as u64 {
+                        MPhase::Done
+                    } else {
+                        MPhase::Solve
+                    };
+                }
+            }
+            // progress happened: invalidate any armed silence timeout
+            let mach = &mut self.machines[m];
+            mach.wake_epoch = mach.wake_epoch.wrapping_add(1);
+            mach.timeout_armed = false;
+            force = false;
+        }
+    }
+
+    fn drain(&mut self) {
+        while !self.stopped {
+            let Some(m) = self.pending_wakes.pop() else { return };
+            if self.machines[m].running() {
+                self.try_advance(m, false);
+            }
+        }
+    }
+
+    fn arm_silence(&mut self, m: usize) {
+        let timeout = self.cfg.silence_timeout;
+        if timeout == 0 || self.machines[m].timeout_armed {
+            return;
+        }
+        self.machines[m].timeout_armed = true;
+        let epoch = self.machines[m].wake_epoch;
+        let at = self.sim.now() + timeout;
+        self.sim.schedule(at, Event::Wake { node: m, epoch });
+    }
+
+    /// Recompute `link_live` for machine `m` against the quotient view.
+    fn refresh_links(&mut self, m: usize) {
+        let gen = self.ctrl.view().generation();
+        if self.machines[m].link_gen == gen {
+            return;
+        }
+        let mcount = self.machines.len();
+        let mut live = vec![false; mcount];
+        live[m] = true;
+        {
+            let view = self.ctrl.view();
+            for (qslot, &p) in self.part.quotient.neighbors(m).iter().enumerate() {
+                live[p] = view.slot_live(m, qslot);
+            }
+        }
+        let mach = &mut self.machines[m];
+        mach.link_live = live;
+        mach.link_gen = gen;
+    }
+
+    // -- boundary readiness / resolution ------------------------------------
+
+    fn ready_a(&mut self, m: usize, force: bool) -> bool {
+        self.refresh_links(m);
+        let mach = &self.machines[m];
+        let t = mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..mach.in_nodes.len() {
+            let p = mach.in_node_machine[idx];
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_theta_ready(idx, t, stale, force) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn resolve_a(&mut self, m: usize) {
+        let t = self.machines[m].t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..self.machines[m].in_nodes.len() {
+            let p = self.machines[m].in_node_machine[idx];
+            if !self.machines[m].link_live[p] {
+                continue;
+            }
+            let used = self.machines[m].resolve_in_theta(idx, t);
+            self.note_read(m, p, t, used, stale);
+        }
+    }
+
+    fn ready_b(&mut self, m: usize, force: bool) -> bool {
+        self.refresh_links(m);
+        let mach = &self.machines[m];
+        let t = mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..mach.in_nodes.len() {
+            let p = mach.in_node_machine[idx];
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_theta_ready(idx, t + 1, stale, force) {
+                return false;
+            }
+        }
+        for idx in 0..mach.in_eta_edges.len() {
+            let p = mach.in_eta_edges[idx].2;
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_eta_ready(idx, t, stale, force) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn resolve_b(&mut self, m: usize) {
+        let t = self.machines[m].t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..self.machines[m].in_nodes.len() {
+            let p = self.machines[m].in_node_machine[idx];
+            if !self.machines[m].link_live[p] {
+                continue;
+            }
+            let used = self.machines[m].resolve_in_theta(idx, t + 1);
+            self.note_read(m, p, t + 1, used, stale);
+        }
+        for idx in 0..self.machines[m].in_eta_edges.len() {
+            let p = self.machines[m].in_eta_edges[idx].2;
+            if !self.machines[m].link_live[p] {
+                continue;
+            }
+            let used = self.machines[m].resolve_in_eta(idx, t);
+            self.note_read(m, p, t, used, stale);
+        }
+    }
+
+    fn note_read(&mut self, m: usize, nbr: usize, ideal: u64, used: u64, stale: u64) {
+        self.sim.note_stale_read(m, nbr, ideal, used, stale);
+    }
+
+    // -- boundary sends -----------------------------------------------------
+
+    fn send_boundary_theta(&mut self, m: usize, stamp: u64) {
+        for (qslot, p) in self.live_neighbors(m) {
+            let nodes = self.machines[m].boundary_theta(qslot, stamp);
+            self.sim.send(m, p, Payload::BoundaryTheta { stamp, nodes }, false);
+        }
+    }
+
+    fn send_boundary_eta(&mut self, m: usize, stamp: u64) {
+        for (qslot, p) in self.live_neighbors(m) {
+            let edges = self.machines[m].boundary_eta(qslot);
+            self.sim.send(m, p, Payload::BoundaryEta { stamp, edges }, false);
+        }
+    }
+
+    // -- event handlers -----------------------------------------------------
+
+    fn on_deliver(&mut self, src: usize, dst: usize, payload: Payload) {
+        if matches!(self.machines[dst].phase, MPhase::Dormant | MPhase::Dead) {
+            self.sim.note_dead_delivery(src, dst, &payload);
+            return;
+        }
+        self.sim.note_delivered(src, dst, &payload);
+        match payload {
+            Payload::BoundaryTheta { stamp, nodes } => {
+                for (node, th) in nodes {
+                    let idx = self.machines[dst]
+                        .in_nodes
+                        .binary_search(&node)
+                        .expect("boundary node known to the receiver");
+                    self.machines[dst].in_theta[idx].insert(stamp, th);
+                }
+                self.try_advance(dst, false);
+            }
+            Payload::BoundaryEta { stamp, edges } => {
+                for (i, j, eta) in edges {
+                    let idx = *self.machines[dst]
+                        .in_eta_index
+                        .get(&(i, j))
+                        .expect("cross edge known to the receiver");
+                    self.machines[dst].in_eta[idx].insert(stamp, eta);
+                }
+                self.try_advance(dst, false);
+            }
+            Payload::Part { round, entries } => self.on_part(dst, src, round, entries),
+            Payload::Verdict { round, global_primal, global_dual } => {
+                self.on_verdict(dst, round, global_primal, global_dual);
+            }
+            Payload::Gossip { round, mass, weight, maxes } => {
+                self.on_gossip_mass(dst, src, round, mass, weight, maxes);
+            }
+            // per-node payloads never travel the machine-level transport
+            Payload::Theta { .. } | Payload::Eta { .. } => {}
+        }
+    }
+
+    fn on_leave(&mut self, m: usize) {
+        if !self.ctrl.apply_leave(m, &mut self.sim) {
+            return;
+        }
+        self.machines[m].phase = MPhase::Dead;
+        self.after_view_change();
+    }
+
+    fn on_join(&mut self, m: usize) {
+        // a rejoiner may have been ahead of the survivors when it left;
+        // never restart below one past its own last round
+        let rejoin_floor = if self.machines[m].phase == MPhase::Dead {
+            self.machines[m].t + 1
+        } else {
+            0
+        };
+        if !self.ctrl.apply_join(m, &mut self.sim) {
+            return;
+        }
+        let frontier = self
+            .machines
+            .iter()
+            .enumerate()
+            .filter(|&(j, mm)| j != m && mm.running())
+            .map(|(_, mm)| mm.t + 1)
+            .max()
+            .unwrap_or(0)
+            .max(self.fold.cursor)
+            .max(rejoin_floor);
+        let start = frontier.min(self.cfg.max_iters as u64);
+        {
+            let mach = &mut self.machines[m];
+            mach.t = start;
+            mach.start_round = start;
+            mach.horizon = mach.horizon.max(start);
+            mach.phase = if start >= self.cfg.max_iters as u64 {
+                MPhase::Done
+            } else {
+                MPhase::Solve
+            };
+            mach.sync_parities();
+        }
+        // two-way reliable boundary handshake so neither side starts from
+        // an empty cache
+        self.send_state(m, start, start);
+        for (_, p) in self.live_neighbors(m) {
+            let (ts, es) = self.current_stamps(p);
+            let rev = self
+                .part
+                .quotient
+                .edge_slot(p, m)
+                .expect("quotient symmetry");
+            let nodes = self.machines[p].boundary_theta(rev, ts);
+            let edges = self.machines[p].boundary_eta(rev);
+            self.sim.send(p, m, Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.sim.send(p, m, Payload::BoundaryEta { stamp: es, edges }, true);
+            self.pending_wakes.push(p);
+        }
+        self.after_view_change();
+        // resume any push-sum rounds stranded while the machine was dead
+        self.gossip_kick(m);
+        self.try_advance(m, false);
+    }
+
+    /// Stamps describing what machine `p`'s θ/η currently hold.
+    fn current_stamps(&self, p: usize) -> (u64, u64) {
+        let mach = &self.machines[p];
+        match mach.phase {
+            MPhase::Reduce | MPhase::FoldWait => (mach.t + 1, mach.t),
+            _ => (mach.t, mach.t),
+        }
+    }
+
+    /// React to quotient-view mutations (churn, activity toggles): wake
+    /// every running machine and re-evaluate pending collective rounds
+    /// whose expectations may have shrunk.
+    fn after_view_change(&mut self) {
+        if matches!(self.cfg.collective, CollectiveKind::Tree) {
+            self.tree_refresh();
+            let pending: Vec<(usize, u64)> = {
+                let Coll::Tree(t) = &self.coll else { return };
+                (0..self.machines.len())
+                    .flat_map(|m| t.inbox[m].keys().map(move |&r| (m, r)))
+                    .collect()
+            };
+            for (m, r) in pending {
+                if self.stopped {
+                    return;
+                }
+                if self.machines[m].running() {
+                    self.tree_progress(m, r);
+                }
+            }
+        }
+        for m in 0..self.machines.len() {
+            if self.machines[m].running() {
+                self.pending_wakes.push(m);
+            }
+        }
+    }
+
+    /// Feed the machine-level NAP activity rule: the mean directed η over
+    /// each machine cut, observed by the quotient TopologyController.
+    fn observe_machine_etas(&mut self, m: usize) {
+        if self.cfg.activity.is_none() {
+            return;
+        }
+        let means: Vec<f64> = {
+            let mach = &self.machines[m];
+            let lo = mach.span.start;
+            (0..mach.out_edges.len())
+                .map(|qslot| {
+                    let edges = &mach.out_edges[qslot];
+                    if edges.is_empty() {
+                        return 0.0;
+                    }
+                    let mut s = 0.0;
+                    for &(i, _j, slot) in edges {
+                        s += mach.nodes[i - lo].etas[slot];
+                    }
+                    s / edges.len() as f64
+                })
+                .collect()
+        };
+        let toggled = self.ctrl.observe_etas(m, &means, &mut self.sim);
+        if !toggled.is_empty() {
+            self.after_view_change();
+        }
+    }
+
+    // -- collective dispatch ------------------------------------------------
+
+    fn collective_ready(&mut self, m: usize, round: u64) {
+        match self.cfg.collective {
+            CollectiveKind::Tree => self.tree_deposit(m, round),
+            CollectiveKind::Gossip => self.gossip_start(m, round),
+        }
+    }
+
+    /// Whether machine `p` owes a contribution to round `r`.
+    fn expects(&self, p: usize, r: u64) -> bool {
+        self.ctrl.view().node_live(p) && self.machines[p].start_round <= r
+    }
+
+    fn arm_coll(&mut self, m: usize) {
+        let timeout = self.cfg.collective_timeout;
+        if timeout == 0 || self.machines[m].coll_armed {
+            return;
+        }
+        self.machines[m].coll_armed = true;
+        let epoch = self.machines[m].coll_epoch;
+        let at = self.sim.now() + timeout;
+        self.sim
+            .schedule(at, Event::Timer { node: m, kind: TimerKind::Collective, epoch });
+    }
+
+    /// Record a verdict at machine `m`. Returns false if it was a
+    /// duplicate.
+    fn store_verdict(&mut self, m: usize, r: u64, gp: f64, gd: f64) -> bool {
+        let mach = &mut self.machines[m];
+        if mach.verdicts.insert(r, (gp, gd)).is_some() {
+            return false;
+        }
+        if r + 1 > mach.horizon {
+            mach.horizon = r + 1;
+            mach.latest_globals = (gp, gd);
+        }
+        mach.retries.remove(&r);
+        // cancel the in-flight collective timer; outstanding rounds
+        // re-arm through tree_rearm
+        mach.coll_armed = false;
+        mach.coll_epoch = mach.coll_epoch.wrapping_add(1);
+        self.pending_wakes.push(m);
+        true
+    }
+
+    // -- tree collective ----------------------------------------------------
+
+    fn tree_refresh(&mut self) {
+        let gen = self.ctrl.view().generation();
+        let view = self.ctrl.view();
+        let Coll::Tree(tree) = &mut self.coll else { return };
+        if tree.topo.built_gen == gen {
+            return;
+        }
+        let old_root = tree.topo.root;
+        tree.topo = build_tree(view);
+        if tree.topo.root != old_root {
+            self.sim.record(TraceKind::Reroot { root: tree.topo.root });
+        }
+    }
+
+    fn tree_deposit(&mut self, m: usize, round: u64) {
+        {
+            let entry = self.machines[m].partials.clone();
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            tree.inbox[m].entry(round).or_default().insert(m, entry);
+        }
+        self.tree_progress(m, round);
+    }
+
+    fn tree_progress(&mut self, m: usize, round: u64) {
+        self.tree_refresh();
+        let (is_root, parent) = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            (tree.topo.root == m, tree.topo.parent[m])
+        };
+        if is_root {
+            self.try_root_folds();
+            return;
+        }
+        let (complete, own_present) = self.subtree_status(m, round);
+        if !complete {
+            if own_present {
+                self.arm_coll(m);
+            }
+            return;
+        }
+        self.tree_forward(m, round, parent);
+    }
+
+    /// (subtree complete for `round`, own entry present) at machine `m`.
+    fn subtree_status(&self, m: usize, round: u64) -> (bool, bool) {
+        let Coll::Tree(tree) = &self.coll else { return (false, false) };
+        let present = tree.inbox[m].get(&round);
+        let own = present.is_some_and(|map| map.contains_key(&m));
+        let members = subtree(&tree.topo, m);
+        let complete = members.iter().all(|&p| {
+            !self.expects(p, round)
+                || present.is_some_and(|map| map.contains_key(&p))
+        });
+        (complete, own)
+    }
+
+    /// Send machine `m`'s accumulated round entries rootward (or mark
+    /// them forwarded when detached) and await the verdict.
+    fn tree_forward(&mut self, m: usize, round: u64, parent: Option<usize>) {
+        let entries = {
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            let Some(map) = tree.inbox[m].get(&round) else { return };
+            let e: Vec<(usize, Vec<StatPartial>)> =
+                map.iter().map(|(&k, v)| (k, v.clone())).collect();
+            tree.sent_up[m].insert(round);
+            e
+        };
+        if let Some(p) = parent {
+            self.sim.send(m, p, Payload::Part { round, entries }, false);
+        }
+        self.arm_coll(m);
+    }
+
+    fn on_part(&mut self, dst: usize, src: usize, round: u64,
+               entries: Vec<(usize, Vec<StatPartial>)>) {
+        // straggler for an already-verdicted round: answer directly
+        if let Some(&(gp, gd)) = self.machines[dst].verdicts.get(&round) {
+            self.sim.send(dst, src,
+                          Payload::Verdict { round, global_primal: gp, global_dual: gd },
+                          false);
+            return;
+        }
+        {
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            let map = tree.inbox[dst].entry(round).or_default();
+            for (mid, parts) in entries {
+                map.insert(mid, parts);
+            }
+        }
+        self.tree_progress(dst, round);
+    }
+
+    fn on_verdict(&mut self, dst: usize, round: u64, gp: f64, gd: f64) {
+        if !self.store_verdict(dst, round, gp, gd) {
+            return;
+        }
+        let children = {
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            // prune only *settled* rounds: an older round whose verdict
+            // was lost must keep its inbox entry alive, or the
+            // retransmit → straggler-reply → fallback recovery would be
+            // disarmed by a newer verdict overtaking it (tree_rearm
+            // below re-arms for exactly those survivors)
+            let settled = &self.machines[dst].verdicts;
+            tree.inbox[dst]
+                .retain(|&r, _| r > round || !settled.contains_key(&r));
+            tree.sent_up[dst]
+                .retain(|&r| r > round || !settled.contains_key(&r));
+            tree.topo.children[dst].clone()
+        };
+        for c in children {
+            if self.ctrl.view().node_live(c) {
+                self.sim.send(dst, c,
+                              Payload::Verdict { round, global_primal: gp, global_dual: gd },
+                              false);
+            }
+        }
+        self.tree_rearm(dst);
+    }
+
+    /// Re-arm the collective timer if machine `m` still has rounds
+    /// awaiting a verdict.
+    fn tree_rearm(&mut self, m: usize) {
+        let outstanding = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            tree.inbox[m]
+                .iter()
+                .any(|(r, map)| map.contains_key(&m)
+                     && !self.machines[m].verdicts.contains_key(r))
+        };
+        if outstanding {
+            self.arm_coll(m);
+        }
+    }
+
+    fn try_root_folds(&mut self) {
+        loop {
+            if self.stopped {
+                return;
+            }
+            let r = self.fold.cursor;
+            if r >= self.cfg.max_iters as u64 {
+                return;
+            }
+            let root = {
+                let Coll::Tree(tree) = &self.coll else { return };
+                tree.topo.root
+            };
+            let (complete, own) = self.subtree_status(root, r);
+            if !complete {
+                if own {
+                    self.arm_coll(root);
+                }
+                return;
+            }
+            let has = {
+                let Coll::Tree(tree) = &self.coll else { return };
+                tree.inbox[root].contains_key(&r)
+            };
+            if !has {
+                return;
+            }
+            self.root_fold(r, false);
+        }
+    }
+
+    /// Fold round `r` at the root: absorb every delivered machine's shard
+    /// partials in machine-id order (= node-id order, since machine
+    /// slices ascend) with the coordinator's exact Chan-style
+    /// combination, record the IterStats, run the convergence check and
+    /// start the verdict broadcast.
+    fn root_fold(&mut self, r: u64, forced: bool) {
+        let root = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            tree.topo.root
+        };
+        let entries = {
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            let Some(map) = tree.inbox[root].remove(&r) else { return };
+            tree.sent_up[root].remove(&r);
+            map
+        };
+        if forced {
+            self.sim.counters.collective_timeouts += 1;
+            self.sim
+                .record(TraceKind::CollectiveTimeout { machine: root, round: r });
+        }
+        self.fold.fold.reset();
+        for parts in entries.values() {
+            for p in parts {
+                self.fold.fold.absorb(p);
+            }
+        }
+        if self.fold.fold.agg_n == 0 {
+            return;
+        }
+        let objective = self.fold.fold.objective;
+        let gr2 = self.fold.fold.gr2.max(0.0);
+        // like the engines, the previous global mean starts at zero
+        let gs2 = match &self.fold.global_mean_prev {
+            Some(prev) => self
+                .fold
+                .fold
+                .gmean
+                .iter()
+                .zip(prev)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>(),
+            None => self.fold.fold.gmean.iter().map(|a| a * a).sum(),
+        };
+        let global_primal = gr2.sqrt();
+        let global_dual = self.cfg.params.eta0
+            * (self.fold.fold.agg_n as f64).sqrt()
+            * gs2.sqrt();
+        match self.fold.global_mean_prev.as_mut() {
+            Some(prev) => prev.copy_from_slice(&self.fold.fold.gmean),
+            None => self.fold.global_mean_prev = Some(self.fold.fold.gmean.clone()),
+        }
+        self.fold.recorder.push(IterStats {
+            iter: r as usize,
+            objective,
+            max_primal: self.fold.fold.max_primal,
+            max_dual: self.fold.fold.max_dual,
+            mean_eta: self.fold.fold.mean_eta(),
+            min_eta: self.fold.fold.min_eta(),
+            max_eta: self.fold.fold.eta_max,
+            app_error: 0.0,
+        });
+        self.fold.cursor = r + 1;
+        self.sim.record(TraceKind::Fold { round: r });
+        self.store_verdict(root, r, global_primal, global_dual);
+
+        let hit = self.fold.checker.update(objective);
+        if hit {
+            self.fold.converged = true;
+        }
+        if hit || r + 1 == self.cfg.max_iters as u64 {
+            self.stopped = true;
+            self.stop_round = Some(r);
+            self.sim.record(TraceKind::Stop { rounds: r + 1 });
+            return;
+        }
+        let children = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            tree.topo.children[root].clone()
+        };
+        for c in children {
+            if self.ctrl.view().node_live(c) {
+                self.sim.send(root, c,
+                              Payload::Verdict {
+                                  round: r,
+                                  global_primal,
+                                  global_dual,
+                              },
+                              false);
+            }
+        }
+    }
+
+    /// A machine's local substitute fold over whatever its subtree
+    /// delivered for `round` (the isolated-machine survival path).
+    fn local_fold(&mut self, m: usize, round: u64) -> (f64, f64) {
+        let mut rf = RunningFold::new(self.dim);
+        {
+            let Coll::Tree(tree) = &self.coll else {
+                return (f64::INFINITY, f64::INFINITY);
+            };
+            if let Some(map) = tree.inbox[m].get(&round) {
+                for parts in map.values() {
+                    for p in parts {
+                        rf.absorb(p);
+                    }
+                }
+            }
+        }
+        let gp = rf.global_primal();
+        let mach = &mut self.machines[m];
+        let mut gs2 = 0.0;
+        for k in 0..self.dim {
+            let d = rf.gmean[k] - mach.coll_mean_prev[k];
+            gs2 += d * d;
+        }
+        mach.coll_mean_prev.copy_from_slice(&rf.gmean);
+        let gd = self.cfg.params.eta0 * (rf.agg_n as f64).sqrt() * gs2.sqrt();
+        (gp, gd)
+    }
+
+    fn on_coll_timer(&mut self, m: usize) {
+        self.machines[m].coll_armed = false;
+        self.machines[m].coll_epoch = self.machines[m].coll_epoch.wrapping_add(1);
+        if !matches!(self.cfg.collective, CollectiveKind::Tree) {
+            return;
+        }
+        self.tree_refresh();
+        let root = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            tree.topo.root
+        };
+        if m == root {
+            let r = self.fold.cursor;
+            if r >= self.cfg.max_iters as u64 {
+                return;
+            }
+            let (_, own) = self.subtree_status(root, r);
+            if own {
+                self.root_fold(r, true);
+                if !self.stopped {
+                    self.try_root_folds();
+                }
+            }
+            return;
+        }
+        // oldest outstanding round with our own entry and no verdict
+        let (next, forwarded, parent) = {
+            let Coll::Tree(tree) = &self.coll else { return };
+            let cand = tree.inbox[m]
+                .iter()
+                .filter(|&(r, map)| {
+                    map.contains_key(&m) && !self.machines[m].verdicts.contains_key(r)
+                })
+                .map(|(&r, _)| r)
+                .next();
+            match cand {
+                None => return,
+                Some(r) => (r, tree.sent_up[m].contains(&r), tree.topo.parent[m]),
+            }
+        };
+        if !forwarded {
+            // straggling children: forward what we have
+            self.sim.counters.collective_timeouts += 1;
+            self.sim
+                .record(TraceKind::CollectiveTimeout { machine: m, round: next });
+            self.tree_forward(m, next, parent);
+            return;
+        }
+        let retries = {
+            let e = self.machines[m].retries.entry(next).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if retries > self.cfg.fallback_after {
+            let (gp, gd) = self.local_fold(m, next);
+            self.sim.counters.collective_fallbacks += 1;
+            self.sim
+                .record(TraceKind::FallbackVerdict { machine: m, round: next });
+            self.store_verdict(m, next, gp, gd);
+            self.tree_rearm(m);
+        } else {
+            self.sim.counters.collective_retries += 1;
+            self.tree_forward(m, next, parent);
+        }
+    }
+
+    // -- gossip collective --------------------------------------------------
+
+    fn gossip_start(&mut self, m: usize, round: u64) {
+        self.refresh_links(m);
+        let dim = self.dim;
+        let (mass, maxes) = {
+            let mach = &self.machines[m];
+            let mut mass = vec![0.0; MASS_THETA + dim];
+            mass[MASS_COUNT] = mach.local_len() as f64;
+            mass[MASS_SQ] = mach.raw_sq;
+            let mut maxes = [0.0, 0.0, 0.0, f64::NEG_INFINITY];
+            for p in &mach.partials {
+                mass[MASS_F] += p.f_sum;
+                mass[MASS_ETA] += p.eta_sum;
+                mass[MASS_ETA_CNT] += p.eta_count as f64;
+                for k in 0..dim {
+                    mass[MASS_THETA + k] += p.theta_sum[k];
+                }
+                maxes[0] = maxes[0].max(p.max_primal);
+                maxes[1] = maxes[1].max(p.max_dual);
+                maxes[2] = maxes[2].max(p.eta_max);
+                maxes[3] = maxes[3].max(-p.eta_min);
+            }
+            (mass, maxes)
+        };
+        {
+            let Coll::Gossip(g) = &mut self.coll else { return };
+            let len = g.mass_len;
+            let gr = g.rounds[m]
+                .entry(round)
+                .or_insert_with(|| super::collective::GossipRound::new(len));
+            gr.add_own(&mass, maxes);
+        }
+        self.gossip_tick(m, round);
+    }
+
+    fn gossip_tick(&mut self, m: usize, round: u64) {
+        self.refresh_links(m);
+        let peers: Vec<usize> =
+            self.live_neighbors(m).into_iter().map(|(_, p)| p).collect();
+        let (ticks, spacing) = {
+            let Coll::Gossip(g) = &self.coll else { return };
+            (g.ticks, g.spacing)
+        };
+        let mut finished = false;
+        let mut outgoing: Option<(usize, Vec<f64>, f64, [f64; 4])> = None;
+        {
+            let Coll::Gossip(g) = &mut self.coll else { return };
+            let Some(gr) = g.rounds[m].get_mut(&round) else { return };
+            if gr.done || !gr.inited {
+                return;
+            }
+            if peers.is_empty() || ticks == 0 {
+                gr.sent = ticks;
+                finished = true;
+            } else {
+                // deterministic rotation over the live peers
+                let dst = peers[(round as usize + gr.sent as usize + m) % peers.len()];
+                let (mass, w) = gr.push_half(dst);
+                let maxes = gr.maxes;
+                outgoing = Some((dst, mass, w, maxes));
+                gr.sent += 1;
+                if gr.sent >= ticks {
+                    finished = true;
+                }
+            }
+        }
+        if let Some((dst, mass, weight, maxes)) = outgoing {
+            self.sim.counters.gossip_ticks += 1;
+            self.sim
+                .send(m, dst, Payload::Gossip { round, mass, weight, maxes }, false);
+        }
+        if finished {
+            self.gossip_complete(m, round);
+        } else {
+            let at = self.sim.now() + spacing;
+            let epoch = self.machines[m].coll_epoch;
+            self.sim
+                .schedule(at, Event::Timer { node: m, kind: TimerKind::Gossip, epoch });
+        }
+    }
+
+    /// Restore the one-timer-per-unfinished-round invariant: if machine
+    /// `m` still owes push-sum exchanges on any round, chain one fresh
+    /// gossip timer. Needed after a round completes (its chain ends with
+    /// it) and after a rejoin (timers that fired while the machine was
+    /// dead were consumed without rescheduling). No-op under tree.
+    fn gossip_kick(&mut self, m: usize) {
+        let owes = {
+            let Coll::Gossip(g) = &self.coll else { return };
+            let ticks = g.ticks;
+            g.rounds[m]
+                .values()
+                .any(|gr| gr.inited && !gr.done && gr.sent < ticks)
+        };
+        if owes {
+            let spacing = {
+                let Coll::Gossip(g) = &self.coll else { return };
+                g.spacing
+            };
+            let epoch = self.machines[m].coll_epoch;
+            let at = self.sim.now() + spacing;
+            self.sim
+                .schedule(at, Event::Timer { node: m, kind: TimerKind::Gossip, epoch });
+        }
+    }
+
+    fn on_gossip_timer(&mut self, m: usize) {
+        if matches!(self.machines[m].phase, MPhase::Dormant | MPhase::Dead) {
+            return;
+        }
+        // tick the oldest unfinished round (each pending round keeps a
+        // timer in flight, so every round eventually completes its budget)
+        let next = {
+            let Coll::Gossip(g) = &self.coll else { return };
+            let ticks = g.ticks;
+            g.rounds[m]
+                .iter()
+                .filter(|(_, gr)| gr.inited && !gr.done && gr.sent < ticks)
+                .map(|(&r, _)| r)
+                .next()
+        };
+        if let Some(round) = next {
+            self.gossip_tick(m, round);
+        }
+    }
+
+    fn on_gossip_mass(&mut self, dst: usize, src: usize, round: u64,
+                      mass: Vec<f64>, weight: f64, maxes: [f64; 4]) {
+        let Coll::Gossip(g) = &mut self.coll else { return };
+        let len = g.mass_len;
+        let gr = g.rounds[dst]
+            .entry(round)
+            .or_insert_with(|| super::collective::GossipRound::new(len));
+        if gr.done {
+            return; // late mass for an estimated round (documented loss)
+        }
+        gr.absorb(src, &mass, weight, maxes);
+    }
+
+    fn gossip_complete(&mut self, m: usize, round: u64) {
+        let est = {
+            let Coll::Gossip(g) = &mut self.coll else { return };
+            let Some(gr) = g.rounds[m].get_mut(&round) else { return };
+            gr.done = true;
+            estimate(gr, self.dim)
+        };
+        {
+            // bound per-machine gossip memory
+            let Coll::Gossip(g) = &mut self.coll else { return };
+            g.rounds[m].retain(|&r, _| r + 16 >= round);
+        }
+        // this round's tick chain just ended; keep other pending rounds
+        // ticking (see gossip_kick)
+        self.gossip_kick(m);
+        // per-machine RB verdict from the per-node-normalized estimates
+        let gd = {
+            let mach = &mut self.machines[m];
+            let mut gs2 = 0.0;
+            for k in 0..self.dim {
+                let d = est.gmean[k] - mach.coll_mean_prev[k];
+                gs2 += d * d;
+            }
+            mach.coll_mean_prev.copy_from_slice(&est.gmean);
+            self.cfg.params.eta0 * gs2.sqrt()
+        };
+        self.store_verdict(m, round, est.gp, gd);
+
+        // the lowest live machine is the designated recorder
+        let designated = (0..self.machines.len())
+            .find(|&p| self.ctrl.view().node_live(p))
+            .unwrap_or(0);
+        if m == designated && round >= self.fold.cursor {
+            let objective = est.avg_f * self.n_total as f64;
+            self.fold.recorder.push(IterStats {
+                iter: round as usize,
+                objective,
+                max_primal: est.max_primal,
+                max_dual: est.max_dual,
+                mean_eta: est.mean_eta,
+                min_eta: est.min_eta,
+                max_eta: est.max_eta,
+                app_error: 0.0,
+            });
+            self.fold.cursor = round + 1;
+            self.sim.record(TraceKind::Fold { round });
+            let hit = self.fold.checker.update(objective);
+            if hit {
+                self.fold.converged = true;
+            }
+            if hit || round + 1 == self.cfg.max_iters as u64 {
+                self.stopped = true;
+                self.stop_round = Some(round);
+                self.sim.record(TraceKind::Stop { rounds: round + 1 });
+            }
+        }
+    }
+}
+
+/// Convenience: build a factory from a plain closure (parity with the
+/// sharded runner's [`SolverFactory`]).
+pub fn factory_of<S, F>(f: F) -> SolverFactory<S>
+where
+    F: Fn(NodeId) -> S + Send + Sync + 'static,
+{
+    Arc::new(f)
+}

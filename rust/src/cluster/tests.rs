@@ -1,0 +1,476 @@
+//! Cluster-runtime integration tests: bit-parity against the sharded
+//! runner, trace determinism, and fault scenarios (loss, isolated
+//! machines, machine churn).
+
+use super::*;
+use crate::coordinator::{ShardedConfig, ShardedRunner};
+// the shared materialized problem: cluster and sharded oracle construct
+// *identical* solvers (bit-parity depends on it)
+use crate::experiments::common::quad_problem_factory as quad_factory;
+use crate::graph::Topology;
+use crate::metrics::IterStats;
+use crate::net::{ChurnEvent, FaultPlan, LinkModel, Partition, TraceKind};
+use crate::penalty::SchemeKind;
+
+fn assert_stats_bit_equal(a: &IterStats, b: &IterStats) {
+    assert_eq!(a.iter, b.iter);
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "iter {}", a.iter);
+    assert_eq!(a.max_primal.to_bits(), b.max_primal.to_bits(), "iter {}", a.iter);
+    assert_eq!(a.max_dual.to_bits(), b.max_dual.to_bits(), "iter {}", a.iter);
+    assert_eq!(a.mean_eta.to_bits(), b.mean_eta.to_bits(), "iter {}", a.iter);
+    assert_eq!(a.min_eta.to_bits(), b.min_eta.to_bits(), "iter {}", a.iter);
+    assert_eq!(a.max_eta.to_bits(), b.max_eta.to_bits(), "iter {}", a.iter);
+}
+
+fn lossy(loss: f64) -> FaultPlan {
+    FaultPlan {
+        link: LinkModel { base: 2, jitter: 4, loss, dup: 0.02 },
+        ..FaultPlan::none()
+    }
+}
+
+// -- acceptance: one-machine bit parity --------------------------------------
+
+#[test]
+fn one_machine_cluster_is_bit_identical_to_sharded_runner() {
+    // the acceptance bar: 1 machine, zero faults, tree collective ⇒
+    // bit-for-bit equal to ShardedRunner (same worker count) for all
+    // seven schemes on Ring and Star — θ, iterations, convergence flag
+    // and every recorded IterStats field
+    for topo in [Topology::Ring, Topology::Star] {
+        for scheme in SchemeKind::ALL {
+            let (tol, max_iters, seed) = (1e-4, 60usize, 11u64);
+            let sharded = ShardedRunner::new(
+                topo.build(6).unwrap(),
+                ShardedConfig { scheme, tol, max_iters, seed, workers: 2,
+                                ..Default::default() },
+            )
+            .run(quad_factory(6, 3, 5))
+            .unwrap();
+
+            let cluster = ClusterRunner::new(
+                topo.build(6).unwrap(),
+                ClusterConfig { scheme, tol, max_iters, seed, machines: 1,
+                                workers: 2, collective: CollectiveKind::Tree,
+                                ..Default::default() },
+                FaultPlan::none(),
+                quad_factory(6, 3, 5),
+            )
+            .unwrap()
+            .run();
+
+            assert_eq!(sharded.iterations, cluster.iterations, "{topo:?}/{scheme:?}");
+            assert_eq!(sharded.converged, cluster.converged, "{topo:?}/{scheme:?}");
+            assert_eq!(sharded.thetas, cluster.thetas,
+                       "{topo:?}/{scheme:?}: θ must be bit-identical");
+            assert_eq!(sharded.recorder.stats.len(), cluster.recorder.stats.len());
+            for (a, b) in sharded.recorder.stats.iter().zip(&cluster.recorder.stats) {
+                assert_stats_bit_equal(a, b);
+            }
+            // one machine ⇒ no network traffic at all
+            assert_eq!(cluster.virtual_time, 0, "{topo:?}/{scheme:?}");
+            assert_eq!(cluster.counters.sent, 0);
+            assert_eq!(cluster.counters.stale_reads, 0);
+            assert_eq!(cluster.machines, 1);
+        }
+    }
+}
+
+// -- acceptance: multi-machine tree parity -----------------------------------
+
+#[test]
+fn multi_machine_tree_matches_sharded_runner_bitwise() {
+    // M machines × 1 worker over zero faults: the machine slices ARE the
+    // W = M shard split, and the tree folds the same partials in the
+    // same (node-id) order — so the whole trajectory, RB's folded
+    // residuals included, is bit-identical to ShardedRunner(workers = M)
+    for scheme in SchemeKind::ALL {
+        let (tol, max_iters, seed) = (1e-4, 80usize, 23u64);
+        let sharded = ShardedRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ShardedConfig { scheme, tol, max_iters, seed, workers: 3,
+                            ..Default::default() },
+        )
+        .run(quad_factory(12, 2, 41))
+        .unwrap();
+
+        let cluster = ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig { scheme, tol, max_iters, seed, machines: 3,
+                            workers: 1, collective: CollectiveKind::Tree,
+                            ..Default::default() },
+            FaultPlan::none(),
+            quad_factory(12, 2, 41),
+        )
+        .unwrap()
+        .run();
+
+        assert_eq!(sharded.iterations, cluster.iterations, "{scheme:?}");
+        assert_eq!(sharded.converged, cluster.converged, "{scheme:?}");
+        assert_eq!(sharded.thetas, cluster.thetas, "{scheme:?}");
+        assert_eq!(sharded.recorder.stats.len(), cluster.recorder.stats.len());
+        for (a, b) in sharded.recorder.stats.iter().zip(&cluster.recorder.stats) {
+            assert_stats_bit_equal(a, b);
+        }
+        // zero faults + ideal links ⇒ no virtual time, no drops, no
+        // stale reads — but real boundary/collective traffic
+        assert_eq!(cluster.virtual_time, 0, "{scheme:?}");
+        assert!(cluster.counters.sent > 0);
+        assert_eq!(cluster.counters.dropped_total(), 0);
+        assert_eq!(cluster.counters.stale_reads, 0);
+    }
+}
+
+#[test]
+fn gossip_zero_fault_keeps_decentralized_node_trajectories_exact() {
+    // the gossip estimates feed only RB and the stop rule; with a fixed
+    // round budget every decentralized scheme's θ stream is untouched by
+    // the collective, hence bit-identical to the sharded oracle — while
+    // the recorded objective is a push-sum *estimate* near the exact fold
+    for scheme in [SchemeKind::Fixed, SchemeKind::Ap, SchemeKind::Nap] {
+        let sharded = ShardedRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ShardedConfig { scheme, tol: 0.0, max_iters: 40, seed: 9, workers: 4,
+                            ..Default::default() },
+        )
+        .run(quad_factory(12, 2, 77))
+        .unwrap();
+
+        let cluster = ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig { scheme, tol: 0.0, max_iters: 40, seed: 9,
+                            machines: 4, workers: 1,
+                            collective: CollectiveKind::Gossip,
+                            gossip_ticks: 16, // ≤ 0.1% ratio error on a 4-ring
+                            ..Default::default() },
+            FaultPlan::none(),
+            quad_factory(12, 2, 77),
+        )
+        .unwrap()
+        .run();
+
+        assert_eq!(cluster.iterations, 40, "{scheme:?}");
+        assert_eq!(sharded.thetas, cluster.thetas,
+                   "{scheme:?}: gossip must not perturb decentralized θ");
+        assert!(cluster.virtual_time > 0, "gossip ticks consume virtual time");
+        assert!(cluster.counters.gossip_ticks > 0);
+        let exact = sharded.recorder.stats.last().unwrap().objective;
+        let est = cluster.recorder.stats.last().unwrap().objective;
+        assert!((est - exact).abs() <= 0.35 * exact.abs().max(1.0),
+                "{scheme:?}: push-sum estimate {est} too far from exact {exact}");
+    }
+}
+
+// -- determinism --------------------------------------------------------------
+
+#[test]
+fn same_seed_identical_trace_both_collectives() {
+    for collective in CollectiveKind::ALL {
+        let run = || {
+            let plan = FaultPlan {
+                link: LinkModel { base: 2, jitter: 5, loss: 0.15, dup: 0.05 },
+                partitions: vec![Partition { start: 40, end: 160, group: vec![3] }],
+                ..FaultPlan::none()
+            };
+            ClusterRunner::new(
+                Topology::Ring.build(12).unwrap(),
+                ClusterConfig {
+                    scheme: SchemeKind::Nap,
+                    tol: 0.0,
+                    max_iters: 60,
+                    seed: 3,
+                    machines: 4,
+                    workers: 1,
+                    collective,
+                    max_staleness: 1,
+                    silence_timeout: 8,
+                    collective_timeout: 16,
+                    fallback_after: 2,
+                    ..Default::default()
+                },
+                plan,
+                quad_factory(12, 2, 21),
+            )
+            .unwrap()
+            .run()
+        };
+        let a = run();
+        let b = run();
+        assert!(!a.trace.is_empty(), "{collective:?}");
+        assert_eq!(a.trace, b.trace, "{collective:?}: trace must replay identically");
+        assert_eq!(a.thetas, b.thetas, "{collective:?}");
+        assert_eq!(a.iterations, b.iterations, "{collective:?}");
+        assert_eq!(a.virtual_time, b.virtual_time, "{collective:?}");
+        assert_eq!(a.counters, b.counters, "{collective:?}");
+        assert_eq!(a.recorder.objective_curve(), b.recorder.objective_curve());
+    }
+}
+
+// -- fault scenarios ----------------------------------------------------------
+
+#[test]
+fn cluster_converges_under_loss_with_both_collectives() {
+    for collective in CollectiveKind::ALL {
+        let report = ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig {
+                scheme: SchemeKind::Fixed,
+                tol: 0.0,
+                max_iters: 400,
+                seed: 1,
+                machines: 4,
+                workers: 1,
+                collective,
+                max_staleness: 1,
+                silence_timeout: 16,
+                collective_timeout: 24,
+                fallback_after: 2,
+                ..Default::default()
+            },
+            lossy(0.10),
+            quad_factory(12, 2, 33),
+        )
+        .unwrap()
+        .run();
+        assert_eq!(report.iterations, 400, "{collective:?}: every round folds");
+        assert!(report.counters.dropped_loss > 0, "{collective:?}");
+        assert!(report.counters.stale_reads > 0, "{collective:?}");
+        let last = report.recorder.stats.last().unwrap();
+        assert!(last.max_primal < 1e-2,
+                "{collective:?}: consensus under 10% loss, primal {}",
+                last.max_primal);
+        assert!(report.virtual_time > 0);
+    }
+}
+
+#[test]
+fn isolated_machine_does_not_poison_the_collective() {
+    // the satellite bar: one machine fully partitioned away for a long
+    // window. The tree re-times around it (root folds without it, the
+    // islander substitutes local fallback verdicts), gossip renormalizes
+    // over the live component — and after the heal the cluster converges.
+    // NetCounters must record the outage.
+    for collective in CollectiveKind::ALL {
+        let plan = FaultPlan {
+            link: LinkModel { base: 1, jitter: 2, loss: 0.0, dup: 0.0 },
+            partitions: vec![Partition { start: 50, end: 400, group: vec![2] }],
+            ..FaultPlan::none()
+        };
+        let report = ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig {
+                scheme: SchemeKind::Vp,
+                tol: 0.0,
+                max_iters: 300,
+                seed: 17,
+                machines: 4,
+                workers: 1,
+                collective,
+                max_staleness: 1,
+                silence_timeout: 8,
+                collective_timeout: 12,
+                fallback_after: 2,
+                ..Default::default()
+            },
+            plan,
+            quad_factory(12, 2, 17),
+        )
+        .unwrap()
+        .run();
+        assert!(report.counters.dropped_partition > 0, "{collective:?}");
+        assert_eq!(report.iterations, 300,
+                   "{collective:?}: the survivors keep folding every round");
+        if collective == CollectiveKind::Tree {
+            assert!(report.counters.collective_timeouts > 0,
+                    "the root must have folded without the islander");
+            assert!(report.counters.collective_fallbacks > 0,
+                    "the islander must have substituted local verdicts");
+        }
+        assert!(report.live_machines.iter().all(|&l| l),
+                "a transport partition is not churn");
+        let last = report.recorder.stats.last().unwrap();
+        assert!(last.max_primal < 1e-2,
+                "{collective:?}: post-heal consensus, primal {}", last.max_primal);
+    }
+}
+
+#[test]
+fn machine_churn_reroots_and_survivors_converge() {
+    // machine 3 joins mid-run from dormancy; machine 0 — the initial
+    // tree root and designated recorder — leaves later, forcing a
+    // deterministic re-root over the live quotient graph
+    let plan = FaultPlan {
+        link: LinkModel { base: 1, jitter: 2, loss: 0.05, dup: 0.0 },
+        partitions: vec![],
+        churn: vec![
+            ChurnEvent::Join { at: 150, node: 3 },
+            ChurnEvent::Leave { at: 600, node: 0 },
+        ],
+        initially_dormant: vec![3],
+    };
+    let report = ClusterRunner::new(
+        Topology::Ring.build(12).unwrap(),
+        ClusterConfig {
+            scheme: SchemeKind::Nap,
+            tol: 0.0,
+            max_iters: 300,
+            seed: 7,
+            machines: 4,
+            workers: 1,
+            collective: CollectiveKind::Tree,
+            max_staleness: 1,
+            silence_timeout: 8,
+            collective_timeout: 12,
+            fallback_after: 2,
+            ..Default::default()
+        },
+        plan,
+        quad_factory(12, 2, 51),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.counters.joins, 1);
+    assert_eq!(report.counters.leaves, 1);
+    assert!(!report.live_machines[0], "machine 0 left");
+    assert!(report.live_machines[3], "machine 3 joined");
+    assert!(report
+        .trace
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Reroot { root: 1 })),
+        "losing the root must re-root the tree at machine 1");
+    assert!(report.iterations > 0);
+    let last = report.recorder.stats.last().unwrap();
+    assert!(last.max_primal < 5e-2,
+            "survivor consensus, primal {}", last.max_primal);
+}
+
+#[test]
+fn gossip_survives_machine_churn_with_verdict_gated_scheme() {
+    // regression: gossip tick timers consumed while a machine is dead
+    // must be re-chained on rejoin (and after each round completes), or
+    // an RB machine deadlocks in FoldWait waiting on an estimate that no
+    // timer will ever finish
+    let plan = FaultPlan {
+        link: LinkModel { base: 1, jitter: 2, loss: 0.05, dup: 0.0 },
+        partitions: vec![],
+        churn: vec![
+            ChurnEvent::Leave { at: 200, node: 2 },
+            ChurnEvent::Join { at: 500, node: 2 },
+        ],
+        initially_dormant: vec![],
+    };
+    let report = ClusterRunner::new(
+        Topology::Ring.build(12).unwrap(),
+        ClusterConfig {
+            scheme: SchemeKind::Rb, // needs_global_residuals: FoldWait gates
+            tol: 0.0,
+            max_iters: 250,
+            seed: 29,
+            machines: 4,
+            workers: 1,
+            collective: CollectiveKind::Gossip,
+            max_staleness: 1,
+            silence_timeout: 8,
+            ..Default::default()
+        },
+        plan,
+        quad_factory(12, 2, 29),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.counters.leaves, 1);
+    assert_eq!(report.counters.joins, 1);
+    assert_eq!(report.iterations, 250,
+               "the designated machine must estimate every round");
+    assert!(report.live_machines[2], "machine 2 rejoined");
+    let last = report.recorder.stats.last().unwrap();
+    assert!(last.max_primal < 5e-2,
+            "post-rejoin consensus, primal {}", last.max_primal);
+}
+
+#[test]
+fn machine_level_activity_rule_runs_to_completion() {
+    // the NAP effective-topology rule on the quotient graph: with an
+    // aggressive config the run must stay finite and the trace/counter
+    // books must agree whether or not links actually toggle
+    let report = ClusterRunner::new(
+        Topology::Complete.build(12).unwrap(),
+        ClusterConfig {
+            scheme: SchemeKind::Nap,
+            tol: 0.0,
+            max_iters: 120,
+            seed: 13,
+            machines: 4,
+            workers: 1,
+            collective: CollectiveKind::Tree,
+            activity: Some(crate::net::ActivityConfig {
+                off_below: 0.6,
+                on_above: 0.95,
+                patience: 2,
+            }),
+            ..Default::default()
+        },
+        FaultPlan::none(),
+        quad_factory(12, 2, 13),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.iterations, 120);
+    for th in &report.thetas {
+        assert!(th.iter().all(|x| x.is_finite()));
+    }
+    let offs = report
+        .trace
+        .iter()
+        .filter(|e| matches!(e.kind, TraceKind::EdgeOff { .. }))
+        .count() as u64;
+    assert_eq!(offs, report.counters.edges_deactivated);
+}
+
+#[test]
+fn zero_round_budget_returns_theta0() {
+    let sharded = ShardedRunner::new(
+        Topology::Ring.build(9).unwrap(),
+        ShardedConfig { max_iters: 0, ..Default::default() },
+    )
+    .run(quad_factory(9, 3, 41))
+    .unwrap();
+    let cluster = ClusterRunner::new(
+        Topology::Ring.build(9).unwrap(),
+        ClusterConfig { max_iters: 0, machines: 3, workers: 1,
+                        ..Default::default() },
+        FaultPlan::none(),
+        quad_factory(9, 3, 41),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(cluster.iterations, 0);
+    assert!(!cluster.converged);
+    assert_eq!(cluster.thetas, sharded.thetas, "θ⁰ seeding is runner-identical");
+}
+
+#[test]
+fn threaded_machine_pools_match_single_shard_pools() {
+    // worker count only regroups the intra-machine partials; with a
+    // fixed budget and a decentralized scheme, node results are
+    // bit-identical whether each machine runs 1 shard inline or 3
+    // shards on scoped threads
+    let run = |workers: usize| {
+        ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 50,
+                            seed: 2, machines: 2, workers,
+                            ..Default::default() },
+            FaultPlan::none(),
+            quad_factory(12, 2, 19),
+        )
+        .unwrap()
+        .run()
+    };
+    let one = run(1);
+    let three = run(3);
+    assert_eq!(one.thetas, three.thetas);
+    assert_eq!(one.iterations, three.iterations);
+    assert_eq!(one.workers_per_machine, 1);
+    assert_eq!(three.workers_per_machine, 3);
+}

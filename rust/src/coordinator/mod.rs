@@ -90,6 +90,12 @@
 //! to the native backend (identical numbers, see
 //! `integration_runtime.rs`). A panicking worker poisons the phase
 //! barrier, so failures surface as `Err` instead of a pool deadlock.
+//!
+//! The shard-partial statistics and their Chan-style combination are
+//! shared vocabulary with the cluster runtime ([`crate::cluster`]), which
+//! runs this same pool *per machine* and ships
+//! [`crate::metrics::StatPartial`]s across a simulated network instead of
+//! a mutex — see `cluster::machine` for the composition.
 
 mod arena;
 mod messages;

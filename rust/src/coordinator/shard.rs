@@ -15,7 +15,8 @@ use super::messages::Verdict;
 use super::runner::{ShardedConfig, SolverFactory};
 use crate::consensus::LocalSolver;
 use crate::graph::{Graph, NodeId};
-use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
+use crate::metrics::{ConvergenceChecker, IterStats, Recorder, RunningFold,
+                     StatPartial};
 use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme};
 use crate::util::rng::Pcg;
 
@@ -49,71 +50,11 @@ pub(crate) struct WorkerCtx<'a> {
 
 /// One shard's contribution to the leader fold, accumulated in sequential
 /// node order within the shard so that combining shards in index order
-/// reproduces a single-threaded sweep over `0..n`.
-#[derive(Debug, Clone)]
-pub(crate) struct ShardPartial {
-    pub f_sum: f64,
-    pub max_primal: f64,
-    pub max_dual: f64,
-    pub eta_min: f64,
-    pub eta_max: f64,
-    pub eta_sum: f64,
-    pub eta_count: usize,
-    pub theta_sum: Vec<f64>,
-    /// Number of nodes in the shard (weight for the mean combination).
-    pub node_count: usize,
-    /// Σ_i ‖θ_i − m_s‖² about the *shard* mean `m_s = theta_sum / n_s` —
-    /// centered, so the leader can combine spreads across shards (Chan
-    /// et al.'s pairwise update) without the catastrophic cancellation a
-    /// raw Σ‖θ‖² would hit at large ‖θ‖. With `theta_sum` these are the
-    /// sufficient statistics for the global primal residual; the leader
-    /// fold never rescans the arena (see [`fold`]).
-    pub centered_sq: f64,
-}
-
-impl ShardPartial {
-    pub(crate) fn new(dim: usize) -> ShardPartial {
-        ShardPartial {
-            f_sum: 0.0,
-            max_primal: 0.0,
-            max_dual: 0.0,
-            eta_min: f64::INFINITY,
-            eta_max: 0.0,
-            eta_sum: 0.0,
-            eta_count: 0,
-            theta_sum: vec![0.0; dim],
-            node_count: 0,
-            centered_sq: 0.0,
-        }
-    }
-
-    fn reset(&mut self) {
-        self.f_sum = 0.0;
-        self.max_primal = 0.0;
-        self.max_dual = 0.0;
-        self.eta_min = f64::INFINITY;
-        self.eta_max = 0.0;
-        self.eta_sum = 0.0;
-        self.eta_count = 0;
-        self.theta_sum.iter_mut().for_each(|x| *x = 0.0);
-        self.node_count = 0;
-        self.centered_sq = 0.0;
-    }
-
-    /// Copy into a pre-sized slot without reallocating its `theta_sum`.
-    fn store_into(&self, dst: &mut ShardPartial) {
-        dst.f_sum = self.f_sum;
-        dst.max_primal = self.max_primal;
-        dst.max_dual = self.max_dual;
-        dst.eta_min = self.eta_min;
-        dst.eta_max = self.eta_max;
-        dst.eta_sum = self.eta_sum;
-        dst.eta_count = self.eta_count;
-        dst.theta_sum.copy_from_slice(&self.theta_sum);
-        dst.node_count = self.node_count;
-        dst.centered_sq = self.centered_sq;
-    }
-}
+/// reproduces a single-threaded sweep over `0..n`. Since the cluster
+/// runtime ([`crate::cluster`]) ships the same statistics across the
+/// simulated network, the type now lives in [`crate::metrics`] as
+/// [`StatPartial`]; this alias keeps the coordinator's vocabulary.
+pub(crate) type ShardPartial = StatPartial;
 
 /// Leader-only state (worker 0): convergence tracking, the recorder, the
 /// global-residual memory and the reusable θ snapshot for the app metric.
@@ -121,7 +62,7 @@ pub(crate) struct LeadState<'m> {
     checker: ConvergenceChecker,
     recorder: Recorder,
     global_mean_prev: Option<Vec<f64>>,
-    gmean: Vec<f64>,
+    fold: RunningFold,
     metric: Option<AppMetric<'m>>,
     snapshot: Vec<Vec<f64>>,
     iterations: usize,
@@ -136,7 +77,7 @@ impl<'m> LeadState<'m> {
                 .with_warmup(cfg.warmup),
             recorder: Recorder::with_capacity(cfg.max_iters),
             global_mean_prev: None,
-            gmean: Vec::new(),
+            fold: RunningFold::new(0), // gmean sized lazily at first fold
             metric,
             snapshot: Vec::new(),
             iterations: 0,
@@ -432,74 +373,36 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
     let n = ctx.graph.len();
     let dim = ctx.arena.dim();
 
-    let mut objective = 0.0;
-    let mut max_primal: f64 = 0.0;
-    let mut max_dual: f64 = 0.0;
-    let mut eta_min = f64::INFINITY;
-    let mut eta_max: f64 = 0.0;
-    let mut eta_sum = 0.0;
-    let mut eta_count = 0usize;
-    if lead.gmean.len() != dim {
-        lead.gmean.resize(dim, 0.0);
+    if lead.fold.gmean.len() != dim {
+        lead.fold.gmean.resize(dim, 0.0);
     }
-    lead.gmean.iter_mut().for_each(|x| *x = 0.0);
-    // running combination state: after shard s, `lead.gmean` holds the
-    // mean over the first `agg_n` nodes and `gr2` their spread about it
-    let mut agg_n = 0usize;
-    let mut gr2 = 0.0;
+    lead.fold.reset();
     {
         let slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
         for part in slots.iter() {
-            objective += part.f_sum;
-            max_primal = max_primal.max(part.max_primal);
-            max_dual = max_dual.max(part.max_dual);
-            eta_min = eta_min.min(part.eta_min);
-            eta_max = eta_max.max(part.eta_max);
-            eta_sum += part.eta_sum;
-            eta_count += part.eta_count;
-            if part.node_count == 0 {
-                continue;
-            }
-            let nb = part.node_count as f64;
-            let inv_b = 1.0 / nb;
-            if agg_n == 0 {
-                for k in 0..dim {
-                    lead.gmean[k] = part.theta_sum[k] * inv_b;
-                }
-                gr2 = part.centered_sq;
-            } else {
-                let na = agg_n as f64;
-                let inv_tot = 1.0 / (na + nb);
-                let mut delta_sq = 0.0;
-                for k in 0..dim {
-                    let mb = part.theta_sum[k] * inv_b;
-                    let d = mb - lead.gmean[k];
-                    delta_sq += d * d;
-                    lead.gmean[k] = (lead.gmean[k] * na + part.theta_sum[k]) * inv_tot;
-                }
-                gr2 += part.centered_sq + delta_sq * na * nb * inv_tot;
-            }
-            agg_n += part.node_count;
+            lead.fold.absorb(part);
         }
     }
-    debug_assert_eq!(agg_n, n, "every node folded exactly once");
-    let gr2 = gr2.max(0.0);
+    debug_assert_eq!(lead.fold.agg_n, n, "every node folded exactly once");
+    let objective = lead.fold.objective;
+    let gr2 = lead.fold.gr2.max(0.0);
     // like the Engine, the previous global mean starts at zero (so the
     // t = 0 dual is finite and the Rb trajectory matches the oracle)
     let gs2 = match &lead.global_mean_prev {
         Some(prev) => lead
+            .fold
             .gmean
             .iter()
             .zip(prev)
             .map(|(a, b)| (a - b) * (a - b))
             .sum::<f64>(),
-        None => lead.gmean.iter().map(|a| a * a).sum::<f64>(),
+        None => lead.fold.gmean.iter().map(|a| a * a).sum::<f64>(),
     };
     let global_dual = ctx.cfg.params.eta0 * (n as f64).sqrt() * gs2.sqrt();
     if let Some(prev) = lead.global_mean_prev.as_mut() {
-        prev.copy_from_slice(&lead.gmean);
+        prev.copy_from_slice(&lead.fold.gmean);
     } else {
-        lead.global_mean_prev = Some(lead.gmean.clone());
+        lead.global_mean_prev = Some(lead.fold.gmean.clone());
     }
 
     // app metric: θ materialized (into a reused snapshot) only on demand,
@@ -524,11 +427,11 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
     lead.recorder.push(IterStats {
         iter: t,
         objective,
-        max_primal,
-        max_dual,
-        mean_eta: if eta_count == 0 { 0.0 } else { eta_sum / eta_count as f64 },
-        min_eta: if eta_count == 0 { 0.0 } else { eta_min },
-        max_eta: eta_max,
+        max_primal: lead.fold.max_primal,
+        max_dual: lead.fold.max_dual,
+        mean_eta: lead.fold.mean_eta(),
+        min_eta: lead.fold.min_eta(),
+        max_eta: lead.fold.eta_max,
         app_error,
     });
     lead.iterations = t + 1;

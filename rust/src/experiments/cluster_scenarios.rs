@@ -1,0 +1,306 @@
+//! E-cluster — the machines × loss × collective × scheme matrix over the
+//! hybrid cluster runtime.
+//!
+//! Every cell runs the same seeded quadratic consensus problem through
+//! [`ClusterRunner`] and through the single-box [`ShardedRunner`] oracle
+//! (whose leader fold is the omniscient reduction the collectives
+//! replace), and reports **extra rounds vs oracle** — how many more
+//! rounds to the stop criterion the tree or gossip reduction costs under
+//! each loss level. By the cluster parity contracts, the `tree`
+//! collective at zero faults is bit-identical to the oracle, so its
+//! extra-rounds cell is exactly 0 and every non-zero entry is
+//! attributable to injected faults or (for `gossip`) estimator error.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::cluster::{ClusterConfig, ClusterRunner, CollectiveKind};
+use crate::coordinator::{ShardedConfig, ShardedRunner};
+use crate::error::Result;
+use crate::graph::{Graph, Topology};
+use crate::net::{FaultPlan, LinkModel};
+use crate::penalty::SchemeKind;
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::stats;
+
+use super::common::quad_problem_factory;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct ClusterScenarioConfig {
+    /// ring size
+    pub nodes: usize,
+    /// machine counts to sweep
+    pub machines_list: Vec<usize>,
+    pub seeds: usize,
+    pub max_iters: usize,
+    pub schemes: Vec<SchemeKind>,
+    /// Bernoulli loss levels (0.0 ⇒ the zero-fault cell)
+    pub loss_levels: Vec<f64>,
+    pub collectives: Vec<CollectiveKind>,
+}
+
+impl Default for ClusterScenarioConfig {
+    fn default() -> Self {
+        ClusterScenarioConfig {
+            nodes: 24,
+            machines_list: vec![2, 4],
+            seeds: 3,
+            max_iters: 300,
+            schemes: SchemeKind::ALL.to_vec(),
+            loss_levels: vec![0.0, 0.10, 0.30],
+            collectives: CollectiveKind::ALL.to_vec(),
+        }
+    }
+}
+
+/// One (machines, scenario, collective, scheme) summary row (seed medians).
+#[derive(Debug, Clone)]
+pub struct ClusterScenarioRow {
+    pub machines: usize,
+    pub collective: CollectiveKind,
+    pub scheme: SchemeKind,
+    pub scenario: String,
+    pub median_rounds: f64,
+    pub median_oracle_rounds: f64,
+    /// median over seeds of (cluster rounds − oracle rounds)
+    pub median_extra_rounds: f64,
+    pub median_virtual_time: f64,
+    pub median_final_primal: f64,
+    pub converged_fraction: f64,
+    pub median_dropped: f64,
+    pub median_collective_timeouts: f64,
+    pub median_gossip_ticks: f64,
+}
+
+fn loss_plan(loss: f64) -> FaultPlan {
+    if loss <= 0.0 {
+        FaultPlan::none()
+    } else {
+        FaultPlan {
+            link: LinkModel { base: 2, jitter: 4, loss, dup: 0.02 },
+            ..FaultPlan::none()
+        }
+    }
+}
+
+const TOL: f64 = 1e-6;
+const DIM: usize = 3;
+
+fn scenario_graph(n: usize) -> Result<Graph> {
+    Topology::Ring.build(n)
+}
+
+/// Run the full sweep, write `cluster_scenarios.csv` under `out_dir`.
+pub fn run(cfg: &ClusterScenarioConfig, out_dir: &Path)
+           -> Result<Vec<ClusterScenarioRow>> {
+    let scenarios: Vec<(String, FaultPlan)> = cfg
+        .loss_levels
+        .iter()
+        .map(|&l| {
+            let name = if l <= 0.0 {
+                "zero".to_string()
+            } else {
+                format!("loss{:.0}", l * 100.0)
+            };
+            (name, loss_plan(l))
+        })
+        .collect();
+    run_scenarios(cfg, &scenarios, out_dir)
+}
+
+/// Replay one JSON-recorded machine-level plan across the matrix
+/// (`repro cluster --plan foo.json`; ids in the plan are machine ids).
+pub fn run_plan(cfg: &ClusterScenarioConfig, plan: FaultPlan, out_dir: &Path)
+                -> Result<Vec<ClusterScenarioRow>> {
+    run_scenarios(cfg, &[("plan".to_string(), plan)], out_dir)
+}
+
+fn run_scenarios(cfg: &ClusterScenarioConfig,
+                 scenarios: &[(String, FaultPlan)], out_dir: &Path)
+                 -> Result<Vec<ClusterScenarioRow>> {
+    // oracle rounds per (machines, scheme, seed): the sharded runner with
+    // workers = machines folds the identical shard partials omnisciently
+    let mut oracle: BTreeMap<(usize, usize, u64), f64> = BTreeMap::new();
+    let scheme_index =
+        |s: SchemeKind| SchemeKind::ALL.iter().position(|&k| k == s).unwrap();
+    for &machines in &cfg.machines_list {
+        for &scheme in &cfg.schemes {
+            for seed in 0..cfg.seeds as u64 {
+                let report = ShardedRunner::new(
+                    scenario_graph(cfg.nodes)?,
+                    ShardedConfig {
+                        scheme,
+                        tol: TOL,
+                        max_iters: cfg.max_iters,
+                        seed,
+                        workers: machines,
+                        ..Default::default()
+                    },
+                )
+                .run(quad_problem_factory(cfg.nodes, DIM, 1000 + seed))?;
+                oracle.insert((machines, scheme_index(scheme), seed),
+                              report.iterations as f64);
+            }
+        }
+    }
+
+    let mut rows = Vec::new();
+    for &machines in &cfg.machines_list {
+        for (scenario_name, plan) in scenarios {
+            let faulty = plan.link.loss > 0.0
+                || !plan.partitions.is_empty()
+                || !plan.churn.is_empty();
+            for &collective in &cfg.collectives {
+                for &scheme in &cfg.schemes {
+                    let mut rounds = Vec::with_capacity(cfg.seeds);
+                    let mut extras = Vec::with_capacity(cfg.seeds);
+                    let mut oracles = Vec::with_capacity(cfg.seeds);
+                    let mut vtimes = Vec::with_capacity(cfg.seeds);
+                    let mut primals = Vec::with_capacity(cfg.seeds);
+                    let mut dropped = Vec::with_capacity(cfg.seeds);
+                    let mut ctimeouts = Vec::with_capacity(cfg.seeds);
+                    let mut gticks = Vec::with_capacity(cfg.seeds);
+                    let mut converged = 0usize;
+                    for seed in 0..cfg.seeds as u64 {
+                        let runner = ClusterRunner::new(
+                            scenario_graph(cfg.nodes)?,
+                            ClusterConfig {
+                                scheme,
+                                tol: TOL,
+                                max_iters: cfg.max_iters,
+                                seed,
+                                machines,
+                                workers: 1,
+                                collective,
+                                max_staleness: if faulty { 1 } else { 0 },
+                                silence_timeout: 16,
+                                collective_timeout: 24,
+                                fallback_after: 2,
+                                tracing: false,
+                                ..Default::default()
+                            },
+                            plan.clone(),
+                            quad_problem_factory(cfg.nodes, DIM, 1000 + seed),
+                        )?;
+                        let report = runner.run();
+                        let base =
+                            oracle[&(machines, scheme_index(scheme), seed)];
+                        rounds.push(report.iterations as f64);
+                        oracles.push(base);
+                        extras.push(report.iterations as f64 - base);
+                        vtimes.push(report.virtual_time as f64);
+                        primals.push(report
+                            .recorder
+                            .stats
+                            .last()
+                            .map(|s| s.max_primal)
+                            .unwrap_or(f64::NAN));
+                        dropped.push(report.counters.dropped_total() as f64);
+                        ctimeouts.push(report.counters.collective_timeouts as f64);
+                        gticks.push(report.counters.gossip_ticks as f64);
+                        if report.converged {
+                            converged += 1;
+                        }
+                    }
+                    rows.push(ClusterScenarioRow {
+                        machines,
+                        collective,
+                        scheme,
+                        scenario: scenario_name.clone(),
+                        median_rounds: stats::median(&rounds),
+                        median_oracle_rounds: stats::median(&oracles),
+                        median_extra_rounds: stats::median(&extras),
+                        median_virtual_time: stats::median(&vtimes),
+                        median_final_primal: stats::median(&primals),
+                        converged_fraction: converged as f64
+                            / cfg.seeds.max(1) as f64,
+                        median_dropped: stats::median(&dropped),
+                        median_collective_timeouts: stats::median(&ctimeouts),
+                        median_gossip_ticks: stats::median(&gticks),
+                    });
+                }
+            }
+        }
+    }
+
+    let mut w = CsvWriter::create(out_dir.join("cluster_scenarios.csv"), &[
+        "machines", "collective", "scheme", "scenario", "median_rounds",
+        "median_oracle_rounds", "median_extra_rounds", "median_virtual_time",
+        "median_final_primal", "converged_fraction", "median_dropped",
+        "median_collective_timeouts", "median_gossip_ticks",
+    ])?;
+    for r in &rows {
+        w.row(&[
+            r.machines.to_string(),
+            r.collective.name().to_string(),
+            r.scheme.name().to_string(),
+            r.scenario.clone(),
+            fnum(r.median_rounds),
+            fnum(r.median_oracle_rounds),
+            fnum(r.median_extra_rounds),
+            fnum(r.median_virtual_time),
+            fnum(r.median_final_primal),
+            fnum(r.converged_fraction),
+            fnum(r.median_dropped),
+            fnum(r.median_collective_timeouts),
+            fnum(r.median_gossip_ticks),
+        ])?;
+    }
+    w.finish()?;
+    Ok(rows)
+}
+
+/// Pretty-print the summary (CLI output).
+pub fn print_summary(rows: &[ClusterScenarioRow]) {
+    println!("{:<4} {:<7} {:<12} {:<8} {:>7} {:>7} {:>6} {:>9} {:>13} {:>5} {:>8}",
+             "M", "coll", "scheme", "scen", "rounds", "oracle", "extra",
+             "vtime", "final_primal", "conv", "dropped");
+    for r in rows {
+        println!("{:<4} {:<7} {:<12} {:<8} {:>7.0} {:>7.0} {:>6.0} {:>9.0} \
+                  {:>13.3e} {:>5.2} {:>8.0}",
+                 r.machines, r.collective.name(), r.scheme.name(), r.scenario,
+                 r.median_rounds, r.median_oracle_rounds, r.median_extra_rounds,
+                 r.median_virtual_time, r.median_final_primal,
+                 r.converged_fraction, r.median_dropped);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miniature_matrix_reports_extra_rounds() {
+        let dir = std::env::temp_dir().join("fadmm_clsc_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let cfg = ClusterScenarioConfig {
+            nodes: 8,
+            machines_list: vec![2],
+            seeds: 1,
+            max_iters: 120,
+            schemes: vec![SchemeKind::Fixed, SchemeKind::Rb],
+            loss_levels: vec![0.0, 0.10],
+            collectives: CollectiveKind::ALL.to_vec(),
+        };
+        let rows = run(&cfg, &dir).unwrap();
+        // machines × scenarios × collectives × schemes
+        assert_eq!(rows.len(), 2 * 2 * 2);
+        assert!(dir.join("cluster_scenarios.csv").exists());
+        for r in &rows {
+            assert!(r.median_rounds > 0.0, "{:?}", r);
+            assert!(r.median_oracle_rounds > 0.0, "{:?}", r);
+        }
+        // the parity contract made measurable: tree at zero faults costs
+        // exactly zero extra rounds vs the oracle fold
+        for r in rows.iter().filter(|r| {
+            r.scenario == "zero" && r.collective == CollectiveKind::Tree
+        }) {
+            assert_eq!(r.median_extra_rounds, 0.0, "{:?}/{:?}", r.scheme, r.scenario);
+        }
+        // the lossy cells must actually have dropped traffic
+        let lossy = rows.iter().find(|r| r.scenario == "loss10").unwrap();
+        assert!(lossy.median_dropped > 0.0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

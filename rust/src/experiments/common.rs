@@ -172,6 +172,25 @@ pub fn quad_problem(n: usize, dim: usize, seed: u64)
         .collect()
 }
 
+/// [`quad_problem`] behind a cloneable [`crate::coordinator::SolverFactory`]:
+/// the node matrices are materialized once and every factory call rebuilds
+/// the same solver, so the sharded oracle and the cluster runtime construct
+/// *identical* per-node problems (the extra-rounds-vs-oracle comparisons
+/// and the bit-parity tests all depend on this).
+pub fn quad_problem_factory(n: usize, dim: usize, seed: u64)
+    -> crate::coordinator::SolverFactory<crate::consensus::solvers::QuadraticNode> {
+    use crate::consensus::solvers::QuadraticNode;
+    let nodes: Vec<(crate::linalg::Mat, Vec<f64>)> = quad_problem(n, dim, seed)
+        .into_iter()
+        .map(|q| (q.p, q.q))
+        .collect();
+    let nodes = std::sync::Arc::new(nodes);
+    std::sync::Arc::new(move |i| {
+        let (p, q) = nodes[i].clone();
+        QuadraticNode::new(p, q)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

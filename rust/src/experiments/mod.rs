@@ -10,10 +10,14 @@
 //! * [`hopkins`] — trajectory-corpus mean-iteration table (§5.2);
 //! * [`ablations`] — η⁰ sensitivity, NAP budget, VP μ/reset (ours);
 //! * [`net_scenarios`] — loss × latency × churn fault matrix over the
-//!   simulated-network runtime (ours; [`crate::net`]).
+//!   simulated-network runtime (ours; [`crate::net`]);
+//! * [`cluster_scenarios`] — machines × loss × collective × scheme matrix
+//!   over the hybrid cluster runtime, reporting extra rounds vs the
+//!   oracle fold (ours; [`crate::cluster`]).
 
 pub mod ablations;
 pub mod caltech;
+pub mod cluster_scenarios;
 pub mod common;
 pub mod fig2;
 pub mod hopkins;

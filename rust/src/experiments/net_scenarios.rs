@@ -36,6 +36,8 @@ pub struct Scenario {
     pub max_staleness: u64,
     /// silent-neighbour fallback timeout in ticks (0 = pure blocking)
     pub silence_timeout: u64,
+    /// lag-aware λ damping (the `stale3_damped` comparison cell)
+    pub lag_damping: bool,
 }
 
 /// Sweep configuration.
@@ -84,6 +86,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             plan: FaultPlan::none(),
             max_staleness: 0,
             silence_timeout: 64,
+            lag_damping: false,
         },
         Scenario {
             name: "latency",
@@ -93,18 +96,21 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             },
             max_staleness: 1,
             silence_timeout: 32,
+            lag_damping: false,
         },
         Scenario {
             name: "loss10",
             plan: FaultPlan { link: lossy(0.10), ..FaultPlan::none() },
             max_staleness: 1,
             silence_timeout: 16,
+            lag_damping: false,
         },
         Scenario {
             name: "loss30",
             plan: FaultPlan { link: lossy(0.30), ..FaultPlan::none() },
             max_staleness: 1,
             silence_timeout: 16,
+            lag_damping: false,
         },
         // deliberately past the stability boundary: three rounds of
         // systematic read lag destabilize the dual accumulation (the
@@ -117,6 +123,18 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             plan: FaultPlan { link: lossy(0.10), ..FaultPlan::none() },
             max_staleness: 3,
             silence_timeout: 16,
+            lag_damping: false,
+        },
+        // the same over-budget cell with lag-aware λ damping: each stale
+        // dual step is scaled by 1/(1+lag), so the comparison against
+        // `stale3` measures whether damping moves the staleness ≥ 2
+        // divergence boundary out (the ROADMAP open item)
+        Scenario {
+            name: "stale3_damped",
+            plan: FaultPlan { link: lossy(0.10), ..FaultPlan::none() },
+            max_staleness: 3,
+            silence_timeout: 16,
+            lag_damping: true,
         },
         Scenario {
             name: "partition",
@@ -131,6 +149,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             },
             max_staleness: 1,
             silence_timeout: 8,
+            lag_damping: false,
         },
         Scenario {
             name: "churn",
@@ -145,8 +164,22 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             },
             max_staleness: 1,
             silence_timeout: 16,
+            lag_damping: false,
         },
     ]
+}
+
+/// A single-scenario sweep replaying a JSON-recorded [`FaultPlan`]
+/// (`repro net --plan foo.json`). Staleness/timeout knobs take the lossy
+/// defaults; damping stays off.
+pub fn plan_scenario(plan: FaultPlan) -> Scenario {
+    Scenario {
+        name: "plan",
+        plan,
+        max_staleness: 1,
+        silence_timeout: 16,
+        lag_damping: false,
+    }
 }
 
 /// The communication graph for a scenario: a ring, plus — for churn — the
@@ -162,10 +195,23 @@ fn scenario_graph(n: usize, churn: bool) -> Result<Graph> {
     }
 }
 
-/// Run the sweep, write `net_scenarios.csv` under `out_dir`, return rows.
+/// Run the full sweep, write `net_scenarios.csv` under `out_dir`.
 pub fn run(cfg: &NetScenarioConfig, out_dir: &Path) -> Result<Vec<NetScenarioRow>> {
+    run_scenarios(cfg, scenario_matrix(cfg.nodes), out_dir)
+}
+
+/// Replay one JSON-recorded plan as a single-scenario sweep
+/// (`repro net --plan foo.json`). Churn events on node id `nodes` drive
+/// the bridging joiner node the churn graph adds.
+pub fn run_plan(cfg: &NetScenarioConfig, plan: FaultPlan, out_dir: &Path)
+                -> Result<Vec<NetScenarioRow>> {
+    run_scenarios(cfg, vec![plan_scenario(plan)], out_dir)
+}
+
+fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
+                 out_dir: &Path) -> Result<Vec<NetScenarioRow>> {
     let mut rows = Vec::new();
-    for scenario in scenario_matrix(cfg.nodes) {
+    for scenario in scenarios {
         let churn = !scenario.plan.churn.is_empty();
         for &scheme in &cfg.schemes {
             let mut rounds = Vec::with_capacity(cfg.seeds);
@@ -184,6 +230,7 @@ pub fn run(cfg: &NetScenarioConfig, out_dir: &Path) -> Result<Vec<NetScenarioRow
                     seed,
                     max_staleness: scenario.max_staleness,
                     silence_timeout: scenario.silence_timeout,
+                    lag_damping: scenario.lag_damping,
                     tracing: false,
                     ..Default::default()
                 }, scenario.plan.clone());
@@ -268,11 +315,12 @@ mod tests {
         assert!(dir.join("net_scenarios.csv").exists());
         for r in &rows {
             assert!(r.median_rounds > 0.0, "{}/{:?}", r.scenario, r.scheme);
-            // the stale3 cell is the scripted divergence demonstration;
-            // its residual may be astronomically large (though still
+            // the stale3 cells are the scripted over-budget demonstration;
+            // their residuals may be astronomically large (though still
             // finite at this tiny budget), so only the stable cells get
-            // the finiteness bar
-            if r.scenario != "stale3" {
+            // the finiteness bar — the damped variant's improvement is
+            // measured by the CSV comparison, not asserted here
+            if !r.scenario.starts_with("stale3") {
                 assert!(r.median_final_primal.is_finite(),
                         "{}/{:?}", r.scenario, r.scheme);
             }

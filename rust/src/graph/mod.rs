@@ -16,7 +16,7 @@ pub use builders::{random_connected, Topology};
 pub use graph::{EdgeId, Graph, NodeId};
 pub use live::LiveView;
 pub use relabel::{bandwidth, rcm_order, relabel_graph, Relabel};
-pub use sharding::shard_ranges;
+pub use sharding::{shard_ranges, shard_ranges_in};
 
 /// Effective-influence summary of a penalized graph state: for every edge,
 /// the ratio of its penalty to the mean penalty. Values ≪ 1 correspond to

@@ -15,13 +15,30 @@ use super::Graph;
 ///
 /// Deterministic: same graph + same `max_shards` → same ranges.
 pub fn shard_ranges(graph: &Graph, max_shards: usize) -> Vec<Range<usize>> {
-    let n = graph.len();
-    let shards = max_shards.max(1).min(n);
+    shard_ranges_in(graph, 0..graph.len(), max_shards)
+}
+
+/// [`shard_ranges`] restricted to a contiguous node sub-range: split
+/// `span` into at most `max_shards` contiguous, non-empty ranges of
+/// near-equal total cost. The cluster runtime shards each *machine's*
+/// node slice this way, so a one-machine cluster reproduces the global
+/// `shard_ranges` split exactly (`shard_ranges_in(g, 0..n, w) ==
+/// shard_ranges(g, w)` by construction).
+pub fn shard_ranges_in(graph: &Graph, span: Range<usize>,
+                       max_shards: usize) -> Vec<Range<usize>> {
+    debug_assert!(span.end <= graph.len());
+    let lo = span.start;
+    let n = span.end;
+    let len = n.saturating_sub(lo);
+    if len == 0 {
+        return Vec::new();
+    }
+    let shards = max_shards.max(1).min(len);
     let cost = |i: usize| (1 + graph.degree(i)) as f64;
-    let total: f64 = (0..n).map(cost).sum();
+    let total: f64 = (lo..n).map(cost).sum();
 
     let mut out = Vec::with_capacity(shards);
-    let mut start = 0usize;
+    let mut start = lo;
     let mut spent = 0.0;
     for s in 0..shards {
         let remaining = shards - s;
@@ -103,6 +120,37 @@ mod tests {
         assert_eq!(shard_ranges(&g, 99).len(), 5);
         let singleton = Graph::new(1, &[]).unwrap();
         assert_eq!(shard_ranges(&singleton, 8), vec![0..1]);
+    }
+
+    #[test]
+    fn sub_range_sharding_matches_global_on_full_span() {
+        for topo in [Topology::Ring, Topology::Star, Topology::Cluster] {
+            let g = topo.build(14).unwrap();
+            for shards in [1, 3, 5, 14] {
+                assert_eq!(shard_ranges_in(&g, 0..14, shards),
+                           shard_ranges(&g, shards), "{topo:?}/{shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_range_sharding_partitions_the_span() {
+        let g = Topology::Star.build(20).unwrap();
+        for (span, shards) in [(3..17, 4), (0..5, 2), (10..11, 3), (7..7, 2)] {
+            let ranges = shard_ranges_in(&g, span.clone(), shards);
+            if span.is_empty() {
+                assert!(ranges.is_empty());
+                continue;
+            }
+            let mut expect = span.start;
+            for r in &ranges {
+                assert_eq!(r.start, expect);
+                assert!(r.end > r.start);
+                expect = r.end;
+            }
+            assert_eq!(expect, span.end);
+            assert_eq!(ranges.len(), shards.min(span.len()));
+        }
     }
 
     #[test]

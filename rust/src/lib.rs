@@ -23,6 +23,7 @@
 //! implements the identical math for artifact-free tests and as a
 //! cross-check oracle.
 
+pub mod cluster;
 pub mod config;
 pub mod consensus;
 pub mod coordinator;

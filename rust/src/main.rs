@@ -11,9 +11,11 @@
 
 use std::path::PathBuf;
 
+use fadmm::cluster::CollectiveKind;
 use fadmm::config::{CliArgs, RunConfig};
 use fadmm::data::{even_split, SubspaceSpec};
-use fadmm::experiments::{ablations, caltech, common, fig2, hopkins, net_scenarios};
+use fadmm::experiments::{ablations, caltech, cluster_scenarios, common, fig2,
+                         hopkins, net_scenarios};
 use fadmm::experiments::common::BackendChoice;
 use fadmm::linalg::Mat;
 use fadmm::util::rng::Pcg;
@@ -40,6 +42,17 @@ SUBCOMMANDS
               runtime, all schemes by default
                 --nodes N (default 12)  --seeds N (default 5)
                 --max-iters N (default 400)  --schemes a,b,...  --out DIR
+                --plan file.json  replay a recorded FaultPlan as the only
+                                  scenario (node ids; churn on id == nodes
+                                  drives the bridging joiner)
+  cluster     machines × loss × collective × scheme matrix on the hybrid
+              cluster runtime (sharded pool per machine over the simulated
+              network), reporting extra rounds vs the oracle fold
+                --nodes N (default 24)  --machines a,b,... (default 2,4)
+                --seeds N (default 3)  --max-iters N (default 300)
+                --schemes a,b,...  --collectives tree,gossip
+                --loss a,b,... (default 0,0.1,0.3)  --out DIR
+                --plan file.json  replay a recorded machine-level FaultPlan
   run         --config cfg.json          one consensus run, prints summary
   check-artifacts   validate manifest and compile one artifact set
   help        this text
@@ -67,6 +80,7 @@ fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
         "hopkins" => cmd_hopkins(&args),
         "ablation" => cmd_ablation(&args),
         "net" => cmd_net(&args),
+        "cluster" => cmd_cluster(&args),
         "run" => cmd_run(&args),
         "check-artifacts" => cmd_check_artifacts(),
         other => Err(fadmm::Error::Config(format!(
@@ -176,10 +190,78 @@ fn cmd_net(args: &CliArgs) -> fadmm::Result<()> {
         },
     };
     let out = out_dir(args);
-    eprintln!("net: {} nodes × {} seeds × {} schemes, out {}", cfg.nodes,
-              cfg.seeds, cfg.schemes.len(), out.display());
-    let rows = net_scenarios::run(&cfg, &out)?;
+    let rows = match args.get("plan") {
+        Some(path) => {
+            let plan = fadmm::net::load_plan(std::path::Path::new(path))?;
+            eprintln!("net: replaying plan {} on {} nodes × {} seeds, out {}",
+                      path, cfg.nodes, cfg.seeds, out.display());
+            net_scenarios::run_plan(&cfg, plan, &out)?
+        }
+        None => {
+            eprintln!("net: {} nodes × {} seeds × {} schemes, out {}", cfg.nodes,
+                      cfg.seeds, cfg.schemes.len(), out.display());
+            net_scenarios::run(&cfg, &out)?
+        }
+    };
     net_scenarios::print_summary(&rows);
+    Ok(())
+}
+
+fn parse_list<T, E>(raw: Option<&str>, default: Vec<T>,
+                    parse: impl Fn(&str) -> std::result::Result<T, E>)
+                    -> fadmm::Result<Vec<T>>
+where
+    E: std::fmt::Display,
+{
+    match raw {
+        None => Ok(default),
+        Some(s) => s
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| {
+                parse(t.trim()).map_err(|e| {
+                    fadmm::Error::Config(format!("bad list entry '{t}': {e}"))
+                })
+            })
+            .collect(),
+    }
+}
+
+fn cmd_cluster(args: &CliArgs) -> fadmm::Result<()> {
+    let cfg = cluster_scenarios::ClusterScenarioConfig {
+        nodes: args.get_usize("nodes", 24)?,
+        machines_list: parse_list(args.get("machines"), vec![2, 4],
+                                  str::parse::<usize>)?,
+        seeds: args.get_usize("seeds", 3)?,
+        max_iters: args.get_usize("max-iters", 300)?,
+        schemes: match args.get("schemes") {
+            None => fadmm::penalty::SchemeKind::ALL.to_vec(),
+            Some(_) => args.schemes()?,
+        },
+        loss_levels: parse_list(args.get("loss"), vec![0.0, 0.10, 0.30],
+                                str::parse::<f64>)?,
+        collectives: match args.get("collectives") {
+            None => CollectiveKind::ALL.to_vec(),
+            Some(s) => parse_list(Some(s), vec![], |t| CollectiveKind::parse(t))?,
+        },
+    };
+    let out = out_dir(args);
+    let rows = match args.get("plan") {
+        Some(path) => {
+            let plan = fadmm::net::load_plan(std::path::Path::new(path))?;
+            eprintln!("cluster: replaying plan {} across machines {:?}, out {}",
+                      path, cfg.machines_list, out.display());
+            cluster_scenarios::run_plan(&cfg, plan, &out)?
+        }
+        None => {
+            eprintln!("cluster: {} nodes, machines {:?}, {} seeds, {} schemes, \
+                       out {}",
+                      cfg.nodes, cfg.machines_list, cfg.seeds,
+                      cfg.schemes.len(), out.display());
+            cluster_scenarios::run(&cfg, &out)?
+        }
+    };
+    cluster_scenarios::print_summary(&rows);
     Ok(())
 }
 

@@ -108,6 +108,184 @@ pub struct IterStats {
     pub app_error: f64,
 }
 
+/// One shard's (or machine's) contribution to a global statistics fold,
+/// accumulated over its nodes in sequential id order. Shared by the
+/// sharded coordinator's leader fold and the cluster collectives
+/// ([`crate::cluster`]), so every runtime combines partial statistics
+/// with exactly the same arithmetic.
+///
+/// `theta_sum` and `centered_sq` are the sufficient statistics for the
+/// global primal residual: `centered_sq = Σ_i ‖θ_i − m_s‖²` about the
+/// *local* mean `m_s = theta_sum / node_count`. Centering locally (rather
+/// than shipping raw Σ‖θ‖²) lets [`RunningFold`] combine partials with
+/// Chan et al.'s pairwise update, which stays accurate at any ‖θ‖ scale.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatPartial {
+    /// Σ_i f_i(θ_i) over the partial's nodes
+    pub f_sum: f64,
+    /// max_i ‖r_i‖ (local primal residual norm)
+    pub max_primal: f64,
+    /// max_i ‖s_i‖ (local dual residual norm)
+    pub max_dual: f64,
+    pub eta_min: f64,
+    pub eta_max: f64,
+    pub eta_sum: f64,
+    pub eta_count: usize,
+    /// Σ_i θ_i (flat, `dim` entries)
+    pub theta_sum: Vec<f64>,
+    /// number of nodes folded into this partial
+    pub node_count: usize,
+    /// Σ_i ‖θ_i − m_s‖² about the partial's own mean (see type docs)
+    pub centered_sq: f64,
+}
+
+impl StatPartial {
+    pub fn new(dim: usize) -> StatPartial {
+        StatPartial {
+            f_sum: 0.0,
+            max_primal: 0.0,
+            max_dual: 0.0,
+            eta_min: f64::INFINITY,
+            eta_max: 0.0,
+            eta_sum: 0.0,
+            eta_count: 0,
+            theta_sum: vec![0.0; dim],
+            node_count: 0,
+            centered_sq: 0.0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.f_sum = 0.0;
+        self.max_primal = 0.0;
+        self.max_dual = 0.0;
+        self.eta_min = f64::INFINITY;
+        self.eta_max = 0.0;
+        self.eta_sum = 0.0;
+        self.eta_count = 0;
+        self.theta_sum.iter_mut().for_each(|x| *x = 0.0);
+        self.node_count = 0;
+        self.centered_sq = 0.0;
+    }
+
+    /// Copy into a pre-sized slot without reallocating its `theta_sum`.
+    pub fn store_into(&self, dst: &mut StatPartial) {
+        dst.f_sum = self.f_sum;
+        dst.max_primal = self.max_primal;
+        dst.max_dual = self.max_dual;
+        dst.eta_min = self.eta_min;
+        dst.eta_max = self.eta_max;
+        dst.eta_sum = self.eta_sum;
+        dst.eta_count = self.eta_count;
+        dst.theta_sum.copy_from_slice(&self.theta_sum);
+        dst.node_count = self.node_count;
+        dst.centered_sq = self.centered_sq;
+    }
+}
+
+/// Sequential combination of [`StatPartial`]s: after absorbing partials
+/// `p_1 … p_k` (in that order), `gmean` holds the mean over all folded
+/// nodes and `gr2` their spread about it, combined with Chan et al.'s
+/// pairwise mean/spread update — the exact arithmetic of the sharded
+/// coordinator's leader fold, factored out so the cluster collectives
+/// reproduce it bit-for-bit when they absorb the same partials in the
+/// same order.
+#[derive(Debug, Clone)]
+pub struct RunningFold {
+    pub objective: f64,
+    pub max_primal: f64,
+    pub max_dual: f64,
+    pub eta_min: f64,
+    pub eta_max: f64,
+    pub eta_sum: f64,
+    pub eta_count: usize,
+    /// running mean over folded nodes (valid once `agg_n > 0`)
+    pub gmean: Vec<f64>,
+    /// nodes folded so far
+    pub agg_n: usize,
+    /// running Σ‖θ − gmean‖² (may drift a hair below 0; clamp at read)
+    pub gr2: f64,
+}
+
+impl RunningFold {
+    pub fn new(dim: usize) -> RunningFold {
+        RunningFold {
+            objective: 0.0,
+            max_primal: 0.0,
+            max_dual: 0.0,
+            eta_min: f64::INFINITY,
+            eta_max: 0.0,
+            eta_sum: 0.0,
+            eta_count: 0,
+            gmean: vec![0.0; dim],
+            agg_n: 0,
+            gr2: 0.0,
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.objective = 0.0;
+        self.max_primal = 0.0;
+        self.max_dual = 0.0;
+        self.eta_min = f64::INFINITY;
+        self.eta_max = 0.0;
+        self.eta_sum = 0.0;
+        self.eta_count = 0;
+        self.gmean.iter_mut().for_each(|x| *x = 0.0);
+        self.agg_n = 0;
+        self.gr2 = 0.0;
+    }
+
+    /// Fold one more partial (order-sensitive; callers fold in node-id
+    /// order for reproducibility).
+    pub fn absorb(&mut self, part: &StatPartial) {
+        let dim = self.gmean.len();
+        self.objective += part.f_sum;
+        self.max_primal = self.max_primal.max(part.max_primal);
+        self.max_dual = self.max_dual.max(part.max_dual);
+        self.eta_min = self.eta_min.min(part.eta_min);
+        self.eta_max = self.eta_max.max(part.eta_max);
+        self.eta_sum += part.eta_sum;
+        self.eta_count += part.eta_count;
+        if part.node_count == 0 {
+            return;
+        }
+        let nb = part.node_count as f64;
+        let inv_b = 1.0 / nb;
+        if self.agg_n == 0 {
+            for k in 0..dim {
+                self.gmean[k] = part.theta_sum[k] * inv_b;
+            }
+            self.gr2 = part.centered_sq;
+        } else {
+            let na = self.agg_n as f64;
+            let inv_tot = 1.0 / (na + nb);
+            let mut delta_sq = 0.0;
+            for k in 0..dim {
+                let mb = part.theta_sum[k] * inv_b;
+                let d = mb - self.gmean[k];
+                delta_sq += d * d;
+                self.gmean[k] = (self.gmean[k] * na + part.theta_sum[k]) * inv_tot;
+            }
+            self.gr2 += part.centered_sq + delta_sq * na * nb * inv_tot;
+        }
+        self.agg_n += part.node_count;
+    }
+
+    /// √Σ‖θ − ḡ‖² — the folded global primal residual.
+    pub fn global_primal(&self) -> f64 {
+        self.gr2.max(0.0).sqrt()
+    }
+
+    pub fn mean_eta(&self) -> f64 {
+        if self.eta_count == 0 { 0.0 } else { self.eta_sum / self.eta_count as f64 }
+    }
+
+    pub fn min_eta(&self) -> f64 {
+        if self.eta_count == 0 { 0.0 } else { self.eta_min }
+    }
+}
+
 /// Per-scenario event and staleness counters for a simulated-network run
 /// ([`crate::net`]). Purely additive bookkeeping: the simulator and the
 /// async runner bump these as events fire, and experiment CSVs / bench
@@ -139,6 +317,16 @@ pub struct NetCounters {
     /// NAP effective-topology decisions applied by the controller
     pub edges_deactivated: u64,
     pub edges_reactivated: u64,
+    /// cluster collective: a machine gave up waiting for a subtree /
+    /// verdict and proceeded with what it had
+    pub collective_timeouts: u64,
+    /// cluster collective: a machine substituted a *local* fold for a
+    /// verdict that never arrived (isolated-machine survival mode)
+    pub collective_fallbacks: u64,
+    /// cluster collective: contribution retransmissions after a timeout
+    pub collective_retries: u64,
+    /// cluster gossip: push-sum exchange ticks performed
+    pub gossip_ticks: u64,
 }
 
 impl NetCounters {
@@ -159,6 +347,10 @@ impl NetCounters {
             ("leaves", num(self.leaves as f64)),
             ("edges_deactivated", num(self.edges_deactivated as f64)),
             ("edges_reactivated", num(self.edges_reactivated as f64)),
+            ("collective_timeouts", num(self.collective_timeouts as f64)),
+            ("collective_fallbacks", num(self.collective_fallbacks as f64)),
+            ("collective_retries", num(self.collective_retries as f64)),
+            ("gossip_ticks", num(self.gossip_ticks as f64)),
         ])
     }
 
@@ -321,6 +513,42 @@ mod tests {
         assert_eq!(j.get("sent").unwrap().as_usize(), Some(10));
         assert_eq!(j.get("dropped_loss").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("timeouts").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn running_fold_matches_flat_statistics() {
+        // two partials over a 5-point scalar dataset: the Chan combination
+        // must reproduce the flat mean and spread to fp accuracy
+        let data = [1.0f64, 4.0, -2.0, 8.0, 0.5];
+        let mut parts = Vec::new();
+        for chunk in [&data[..2], &data[2..]] {
+            let mut p = StatPartial::new(1);
+            let mean: f64 = chunk.iter().sum::<f64>() / chunk.len() as f64;
+            p.theta_sum[0] = chunk.iter().sum();
+            p.node_count = chunk.len();
+            p.centered_sq = chunk.iter().map(|x| (x - mean) * (x - mean)).sum();
+            p.f_sum = 1.0;
+            p.eta_min = 2.0;
+            p.eta_max = 3.0;
+            p.eta_sum = 5.0;
+            p.eta_count = 2;
+            parts.push(p);
+        }
+        let mut fold = RunningFold::new(1);
+        for p in &parts {
+            fold.absorb(p);
+        }
+        let flat_mean: f64 = data.iter().sum::<f64>() / data.len() as f64;
+        let flat_sq: f64 = data.iter().map(|x| (x - flat_mean) * (x - flat_mean)).sum();
+        assert_eq!(fold.agg_n, 5);
+        assert!((fold.gmean[0] - flat_mean).abs() < 1e-12);
+        assert!((fold.gr2 - flat_sq).abs() < 1e-9);
+        assert_eq!(fold.objective, 2.0);
+        assert_eq!(fold.mean_eta(), 2.5);
+        assert_eq!(fold.min_eta(), 2.0);
+        // empty partials are absorbed without touching the mean state
+        fold.absorb(&StatPartial::new(1));
+        assert_eq!(fold.agg_n, 5);
     }
 
     #[test]

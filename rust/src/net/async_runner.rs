@@ -92,6 +92,15 @@ pub struct NetConfig {
     /// Enable the NAP effective-topology rule (edge masking by penalty
     /// influence). `None` keeps the physical topology fixed up to churn.
     pub activity: Option<ActivityConfig>,
+    /// Lag-aware λ damping: scale each slot's dual increment by
+    /// `1/(1 + lag)` where `lag` is how many rounds the resolved θ^{t+1}
+    /// read trailed its ideal stamp. Stale dual steps are the positive
+    /// feedback that destabilizes budgets ≥ 2 (see the module docs'
+    /// stability boundary); damping shrinks exactly those steps. Off by
+    /// default — and bit-identical to the undamped runner whenever no
+    /// read lags (zero faults, or `max_staleness = 0` without forced
+    /// fallbacks).
+    pub lag_damping: bool,
     /// Record the replayable event trace (tests/debugging; counters are
     /// always kept).
     pub tracing: bool,
@@ -110,6 +119,7 @@ impl Default for NetConfig {
             max_staleness: 0,
             silence_timeout: 64,
             activity: None,
+            lag_damping: false,
             tracing: true,
         }
     }
@@ -273,6 +283,15 @@ struct Scratch {
     mask: Vec<bool>,
 }
 
+/// Application-metric hook invoked at every completed fold with
+/// `(round, latest committed θ per node, per-node liveness)`. The θ
+/// snapshot is *async-friendly*: a dead, dormant or lagging node's slot
+/// holds the last value it committed (θ⁰ if it never ran), and the
+/// liveness slice says which slots are current — so metrics like the
+/// D-PPCA subspace angle can run under loss and churn without the hook
+/// having to know the protocol.
+pub type AppMetricHook = Box<dyn FnMut(usize, &[Vec<f64>], &[bool]) -> f64>;
+
 /// The asynchronous runner (see module docs).
 pub struct AsyncRunner<S: LocalSolver> {
     cfg: NetConfig,
@@ -285,6 +304,7 @@ pub struct AsyncRunner<S: LocalSolver> {
     pending_wakes: Vec<NodeId>,
     foldwait_dirty: bool,
     stopped: bool,
+    metric: Option<AppMetricHook>,
 }
 
 impl<S: LocalSolver> AsyncRunner<S> {
@@ -389,11 +409,22 @@ impl<S: LocalSolver> AsyncRunner<S> {
             pending_wakes: Vec::new(),
             foldwait_dirty: false,
             stopped: false,
+            metric: None,
             nodes,
             ctrl,
             sim,
             cfg,
         }
+    }
+
+    /// Attach an application-metric hook (see [`AppMetricHook`]); its
+    /// value lands in [`IterStats::app_error`] per completed fold.
+    pub fn with_app_metric(
+        mut self,
+        metric: impl FnMut(usize, &[Vec<f64>], &[bool]) -> f64 + 'static,
+    ) -> Self {
+        self.metric = Some(Box::new(metric));
+        self
     }
 
     /// Drive the simulation to completion and report.
@@ -427,6 +458,9 @@ impl<S: LocalSolver> AsyncRunner<S> {
                     self.nodes[node].timeout_armed = false;
                     self.try_advance(node, true);
                 }
+                // auxiliary timers belong to the cluster runtime; this
+                // consumer never arms one
+                Event::Timer { .. } => {}
                 Event::Join { node } => self.on_join(node),
                 Event::Leave { node } => self.on_leave(node),
             }
@@ -483,6 +517,9 @@ impl<S: LocalSolver> AsyncRunner<S> {
             Payload::Eta { stamp, eta } => {
                 cache.eta.insert(stamp, eta);
             }
+            // cluster (machine-level) payloads never travel the per-node
+            // transport — mirror of the cluster runner ignoring Theta/Eta
+            _ => {}
         }
         self.try_advance(dst, false);
     }
@@ -776,6 +813,18 @@ impl<S: LocalSolver> AsyncRunner<S> {
             }
         }
 
+        // app metric over the committed snapshot (stale slots keep their
+        // last committed value; the liveness slice marks them)
+        let app_error = match self.metric.as_mut() {
+            Some(metric) => {
+                let n = self.fold.latest_committed.len();
+                let live: Vec<bool> =
+                    (0..n).map(|i| self.ctrl.view().node_live(i)).collect();
+                metric(r as usize, &self.fold.latest_committed, &live)
+            }
+            None => 0.0,
+        };
+
         self.fold.recorder.push(IterStats {
             iter: r as usize,
             objective,
@@ -784,7 +833,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
             mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
             min_eta: if cnt == 0 { 0.0 } else { min_eta },
             max_eta,
-            app_error: 0.0,
+            app_error,
         });
         self.fold.globals = (global_primal, global_dual);
         self.fold.next_fold = r + 1;
@@ -847,16 +896,11 @@ fn slots_ready<S: LocalSolver>(node: &NodeRt<S>, i: NodeId, view: &LiveView,
     true
 }
 
-/// Count a resolved read's staleness; trace forced fallbacks.
+/// Count a resolved read's staleness; trace forced fallbacks (shared
+/// accounting — see [`NetSim::note_stale_read`]).
 fn note_read(sim: &mut NetSim, node: NodeId, nbr: NodeId, ideal: u64, used: u64,
              stale: u64) {
-    if used < ideal {
-        sim.counters.stale_reads += 1;
-        if used + stale < ideal {
-            sim.counters.fallback_reads += 1;
-            sim.record(TraceKind::Fallback { node, nbr, ideal, used });
-        }
-    }
+    sim.note_stale_read(node, nbr, ideal, used, stale);
 }
 
 /// Phase A: the local solve on (ideally) epoch-`t` neighbour parameters.
@@ -930,9 +974,23 @@ fn phase_b<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
         note_read(sim, i, j, t, used_e, cfg.max_staleness);
         let eta_bar = 0.5 * (node.etas[slot] + eta_in);
         let (used_t, tj) = node.caches[slot].read_theta(t + 1);
-        for k in 0..dim {
-            node.lambda[k] += 0.5 * eta_bar * (node.theta[k] - tj[k]);
-            scratch.nbr_mean[k] += tj[k];
+        // lag-aware damping (opt-in): a dual step computed from a θ^{t+1}
+        // read that resolved `lag` rounds stale is scaled by 1/(1+lag) —
+        // stale steps are exactly the positive-feedback term behind the
+        // staleness ≥ 2 divergence. The undamped branch is kept verbatim
+        // so the default stays literally the pre-damping arithmetic.
+        let lag = (t + 1).saturating_sub(used_t);
+        if cfg.lag_damping && lag > 0 {
+            let damp = 1.0 / (1.0 + lag as f64);
+            for k in 0..dim {
+                node.lambda[k] += damp * (0.5 * eta_bar * (node.theta[k] - tj[k]));
+                scratch.nbr_mean[k] += tj[k];
+            }
+        } else {
+            for k in 0..dim {
+                node.lambda[k] += 0.5 * eta_bar * (node.theta[k] - tj[k]);
+                scratch.nbr_mean[k] += tj[k];
+            }
         }
         note_read(sim, i, j, t + 1, used_t, cfg.max_staleness);
     }

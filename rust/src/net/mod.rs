@@ -64,13 +64,26 @@
 //! and partitions exercise the same mask machinery, so "NAP-induced
 //! topology" and "failure-induced topology" are one code path.
 
+//! ## Relation to the cluster runtime
+//!
+//! This module's global fold is an *omniscient-simulator oracle*: the
+//! runner folds every node's contribution in id order, which no real
+//! deployment could do. [`crate::cluster`] replaces it with physical
+//! collectives (spanning-tree reduce/broadcast, push-sum gossip) over a
+//! machine-level instance of this same transport, and measures what that
+//! realism costs; the per-node runtime here keeps the oracle fold as the
+//! trusted reference. Fault scenarios for both runtimes can be recorded
+//! and replayed as JSON [`FaultPlan`]s (see [`plan`]).
+
 mod async_runner;
+pub mod plan;
 pub mod sim;
 mod topology;
 
-pub use async_runner::{AsyncRunner, NetConfig, NetReport};
+pub use async_runner::{AppMetricHook, AsyncRunner, NetConfig, NetReport};
+pub use plan::{load_plan, plan_from_json, plan_to_json};
 pub use sim::{ChurnEvent, Event, FaultPlan, LinkModel, NetSim, Partition, Payload,
-              Ticks, TraceEvent, TraceKind};
+              Ticks, TimerKind, TraceEvent, TraceKind};
 pub use topology::{ActivityConfig, TopologyController};
 
 #[cfg(test)]

@@ -1,0 +1,265 @@
+//! JSON round-trip for [`FaultPlan`] — recorded fault scenarios as data.
+//!
+//! The scenario matrices in `experiments` are code-defined; this module
+//! lets `repro net --plan foo.json` and `repro cluster --plan foo.json`
+//! replay *arbitrary* recorded loss/latency/partition/churn scenarios
+//! (the ROADMAP open item). The format mirrors the [`FaultPlan`] fields
+//! one-to-one, every field optional with zero-fault defaults:
+//!
+//! ```json
+//! {
+//!   "link": { "base": 2, "jitter": 4, "loss": 0.10, "dup": 0.02 },
+//!   "partitions": [ { "start": 50, "end": 250, "group": [0, 1, 2] } ],
+//!   "churn": [ { "kind": "join",  "at": 200, "node": 8 },
+//!              { "kind": "leave", "at": 600, "node": 2 } ],
+//!   "initially_dormant": [8]
+//! }
+//! ```
+//!
+//! For `repro net` the ids are node ids; for `repro cluster` they are
+//! *machine* ids (the cluster transport's endpoints). [`plan_to_json`] is
+//! the exact inverse of [`plan_from_json`], asserted by the round-trip
+//! test below, so plans can be programmatically generated, saved and
+//! replayed. An example plan ships at `examples/net_plan_loss_partition.json`.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::sim::{ChurnEvent, FaultPlan, LinkModel, Partition};
+
+/// Load a plan from a JSON file.
+pub fn load_plan(path: &Path) -> Result<FaultPlan> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::io(format!("read plan {}", path.display()), e))?;
+    plan_from_json(&Json::parse(&text)?)
+}
+
+fn req_u64(j: &Json, key: &str, ctx: &str) -> Result<u64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+        .map(|x| x as u64)
+        .ok_or_else(|| Error::Config(format!("plan: {ctx} needs integer '{key}'")))
+}
+
+fn req_usize(j: &Json, key: &str, ctx: &str) -> Result<usize> {
+    Ok(req_u64(j, key, ctx)? as usize)
+}
+
+/// Parse a plan from its JSON form (all fields optional).
+pub fn plan_from_json(j: &Json) -> Result<FaultPlan> {
+    let mut plan = FaultPlan::none();
+
+    if let Some(link) = j.get("link") {
+        let f = |key: &str, default: f64| -> Result<f64> {
+            match link.get(key) {
+                None => Ok(default),
+                Some(v) => v
+                    .as_f64()
+                    .ok_or_else(|| Error::Config(format!("plan: link.{key} not a number"))),
+            }
+        };
+        let int = |key: &str| -> Result<u64> {
+            match link.get(key) {
+                None => Ok(0),
+                Some(v) => v
+                    .as_f64()
+                    .filter(|x| *x >= 0.0 && x.fract() == 0.0)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| {
+                        Error::Config(format!(
+                            "plan: link.{key} must be a non-negative integer"
+                        ))
+                    }),
+            }
+        };
+        let loss = f("loss", 0.0)?;
+        let dup = f("dup", 0.0)?;
+        if !(0.0..=1.0).contains(&loss) || !(0.0..=1.0).contains(&dup) {
+            return Err(Error::Config("plan: loss/dup must lie in [0, 1]".into()));
+        }
+        plan.link = LinkModel { base: int("base")?, jitter: int("jitter")?, loss, dup };
+    }
+
+    if let Some(parts) = j.get("partitions") {
+        let parts = parts
+            .as_arr()
+            .ok_or_else(|| Error::Config("plan: 'partitions' must be an array".into()))?;
+        for p in parts {
+            let group = p
+                .get("group")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| Error::Config("plan: partition needs 'group' array".into()))?
+                .iter()
+                .map(|v| {
+                    v.as_usize()
+                        .ok_or_else(|| Error::Config("plan: group ids must be integers".into()))
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let start = req_u64(p, "start", "partition")?;
+            let end = req_u64(p, "end", "partition")?;
+            if end < start {
+                return Err(Error::Config("plan: partition end < start".into()));
+            }
+            plan.partitions.push(Partition { start, end, group });
+        }
+    }
+
+    if let Some(churn) = j.get("churn") {
+        let churn = churn
+            .as_arr()
+            .ok_or_else(|| Error::Config("plan: 'churn' must be an array".into()))?;
+        for c in churn {
+            let at = req_u64(c, "at", "churn event")?;
+            let node = req_usize(c, "node", "churn event")?;
+            let kind = c
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Config("plan: churn event needs 'kind'".into()))?;
+            plan.churn.push(match kind {
+                "join" => ChurnEvent::Join { at, node },
+                "leave" => ChurnEvent::Leave { at, node },
+                other => {
+                    return Err(Error::Config(format!(
+                        "plan: unknown churn kind '{other}' (join|leave)"
+                    )))
+                }
+            });
+        }
+    }
+
+    if let Some(dormant) = j.get("initially_dormant") {
+        let dormant = dormant.as_arr().ok_or_else(|| {
+            Error::Config("plan: 'initially_dormant' must be an array".into())
+        })?;
+        for v in dormant {
+            plan.initially_dormant.push(v.as_usize().ok_or_else(|| {
+                Error::Config("plan: dormant ids must be integers".into())
+            })?);
+        }
+    }
+
+    Ok(plan)
+}
+
+/// Serialize a plan (exact inverse of [`plan_from_json`]).
+pub fn plan_to_json(plan: &FaultPlan) -> Json {
+    let link = obj(vec![
+        ("base", num(plan.link.base as f64)),
+        ("jitter", num(plan.link.jitter as f64)),
+        ("loss", num(plan.link.loss)),
+        ("dup", num(plan.link.dup)),
+    ]);
+    let partitions = arr(plan
+        .partitions
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("start", num(p.start as f64)),
+                ("end", num(p.end as f64)),
+                ("group", arr(p.group.iter().map(|&g| num(g as f64)).collect())),
+            ])
+        })
+        .collect());
+    let churn = arr(plan
+        .churn
+        .iter()
+        .map(|c| match *c {
+            ChurnEvent::Join { at, node } => obj(vec![
+                ("kind", s("join")),
+                ("at", num(at as f64)),
+                ("node", num(node as f64)),
+            ]),
+            ChurnEvent::Leave { at, node } => obj(vec![
+                ("kind", s("leave")),
+                ("at", num(at as f64)),
+                ("node", num(node as f64)),
+            ]),
+        })
+        .collect());
+    let dormant = arr(plan
+        .initially_dormant
+        .iter()
+        .map(|&i| num(i as f64))
+        .collect());
+    obj(vec![
+        ("link", link),
+        ("partitions", partitions),
+        ("churn", churn),
+        ("initially_dormant", dormant),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_plan() -> FaultPlan {
+        FaultPlan {
+            link: LinkModel { base: 2, jitter: 4, loss: 0.125, dup: 0.0625 },
+            partitions: vec![Partition { start: 50, end: 250, group: vec![0, 1, 2] }],
+            churn: vec![
+                ChurnEvent::Join { at: 200, node: 8 },
+                ChurnEvent::Leave { at: 600, node: 2 },
+            ],
+            initially_dormant: vec![8],
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let plan = sample_plan();
+        let j = plan_to_json(&plan);
+        let back = plan_from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.link.base, plan.link.base);
+        assert_eq!(back.link.jitter, plan.link.jitter);
+        assert_eq!(back.link.loss, plan.link.loss, "dyadic loss survives exactly");
+        assert_eq!(back.link.dup, plan.link.dup);
+        assert_eq!(back.partitions.len(), 1);
+        assert_eq!(back.partitions[0].start, 50);
+        assert_eq!(back.partitions[0].end, 250);
+        assert_eq!(back.partitions[0].group, vec![0, 1, 2]);
+        assert_eq!(back.churn, plan.churn);
+        assert_eq!(back.initially_dormant, vec![8]);
+        // and the re-serialization is byte-identical
+        assert_eq!(plan_to_json(&back).to_string(), j.to_string());
+    }
+
+    #[test]
+    fn empty_object_is_the_zero_fault_plan() {
+        let plan = plan_from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert_eq!(plan.link.loss, 0.0);
+        assert_eq!(plan.link.base, 0);
+        assert!(plan.partitions.is_empty());
+        assert!(plan.churn.is_empty());
+        assert!(plan.initially_dormant.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_plans() {
+        for bad in [
+            r#"{"link": {"loss": 1.5}}"#,
+            r#"{"link": {"base": -2}}"#,
+            r#"{"link": {"jitter": 2.7}}"#,
+            r#"{"partitions": [{"start": 9, "end": 3, "group": [0]}]}"#,
+            r#"{"partitions": [{"start": 0, "end": 3}]}"#,
+            r#"{"churn": [{"kind": "explode", "at": 1, "node": 0}]}"#,
+            r#"{"churn": [{"kind": "join", "node": 0}]}"#,
+            r#"{"initially_dormant": [1.5]}"#,
+        ] {
+            assert!(plan_from_json(&Json::parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn example_plan_file_parses() {
+        // the shipped demo plan must stay loadable
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../examples/net_plan_loss_partition.json");
+        let plan = load_plan(&path).unwrap();
+        assert!(plan.link.loss > 0.0);
+        assert!(!plan.partitions.is_empty());
+    }
+}

@@ -20,7 +20,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::graph::NodeId;
-use crate::metrics::NetCounters;
+use crate::metrics::{NetCounters, StatPartial};
 use crate::util::rng::Pcg;
 
 /// Virtual time in ticks (dimensionless; latency/timeout parameters give
@@ -117,20 +117,44 @@ impl FaultPlan {
     }
 }
 
-/// Message payloads of the async ADMM protocol (see
-/// [`super::async_runner`] for the protocol itself). `stamp = r` always
-/// means "state of epoch r": θ^r, or the sender's out-edge penalty
-/// η^r_{src→dst}.
+/// Message payloads. `Theta`/`Eta` belong to the per-node async protocol
+/// (see [`super::async_runner`]); the remaining variants belong to the
+/// machine-level cluster protocol ([`crate::cluster`]), whose endpoints
+/// are *machine* ids. `stamp = r` always means "state of epoch/round r":
+/// θ^r, the sender's out-edge penalty η^r, or round-r collective traffic.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
     Theta { stamp: u64, theta: Vec<f64> },
     Eta { stamp: u64, eta: f64 },
+    /// Cluster boundary batch: θ^{stamp} of every listed (global node id,
+    /// parameter) pair the destination machine borders.
+    BoundaryTheta { stamp: u64, nodes: Vec<(NodeId, Vec<f64>)> },
+    /// Cluster boundary penalties: η^{stamp}_{i→j} per cross edge (i on
+    /// the sending machine, j on the receiving one).
+    BoundaryEta { stamp: u64, edges: Vec<(NodeId, NodeId, f64)> },
+    /// Tree collective, rootward: per-machine statistic partials for one
+    /// round, concatenated along the tree (machine id, that machine's
+    /// shard partials in shard order).
+    Part { round: u64, entries: Vec<(NodeId, Vec<StatPartial>)> },
+    /// Tree collective, leafward: the folded round verdict.
+    Verdict { round: u64, global_primal: f64, global_dual: f64 },
+    /// Gossip collective: cumulative push-sum mass for one round (robust
+    /// to loss — the receiver consumes deltas of the cumulative stream)
+    /// plus the max-gossip statistics `[max_primal, max_dual, max_eta,
+    /// −min_eta]`.
+    Gossip { round: u64, mass: Vec<f64>, weight: f64, maxes: [f64; 4] },
 }
 
 impl Payload {
     pub fn stamp(&self) -> u64 {
         match *self {
-            Payload::Theta { stamp, .. } | Payload::Eta { stamp, .. } => stamp,
+            Payload::Theta { stamp, .. }
+            | Payload::Eta { stamp, .. }
+            | Payload::BoundaryTheta { stamp, .. }
+            | Payload::BoundaryEta { stamp, .. } => stamp,
+            Payload::Part { round, .. }
+            | Payload::Verdict { round, .. }
+            | Payload::Gossip { round, .. } => round,
         }
     }
 
@@ -138,8 +162,23 @@ impl Payload {
         match self {
             Payload::Theta { .. } => "theta",
             Payload::Eta { .. } => "eta",
+            Payload::BoundaryTheta { .. } => "btheta",
+            Payload::BoundaryEta { .. } => "beta",
+            Payload::Part { .. } => "part",
+            Payload::Verdict { .. } => "verdict",
+            Payload::Gossip { .. } => "gossip",
         }
     }
+}
+
+/// Which consumer-armed timer fired (cluster runtime; the async runner
+/// uses the dedicated [`Event::Wake`] for its single silence timer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TimerKind {
+    /// next push-sum exchange tick of an in-flight gossip round
+    Gossip,
+    /// collective patience expired: retransmit / proceed without stragglers
+    Collective,
 }
 
 /// What the consumer sees when it pops the queue.
@@ -150,6 +189,9 @@ pub enum Event {
     /// A silence-timeout wakeup armed by the consumer; `epoch` lets the
     /// consumer discard wakeups that a later advance made stale.
     Wake { node: NodeId, epoch: u64 },
+    /// A consumer-armed auxiliary timer (gossip ticks, collective
+    /// patience); `epoch` disambiguates stale firings like `Wake`.
+    Timer { node: NodeId, kind: TimerKind, epoch: u64 },
     /// Scripted churn firing.
     Join { node: NodeId },
     Leave { node: NodeId },
@@ -182,6 +224,12 @@ pub enum TraceKind {
     Fold { round: u64 },
     /// the run stopped (converged or out of budget) after `rounds` folds
     Stop { rounds: u64 },
+    /// a cluster machine gave up waiting on collective traffic for a round
+    CollectiveTimeout { machine: NodeId, round: u64 },
+    /// a cluster machine substituted a local fold for a missing verdict
+    FallbackVerdict { machine: NodeId, round: u64 },
+    /// the collective spanning tree was rebuilt with a new root
+    Reroot { root: NodeId },
 }
 
 /// Heap entry: ordered by (time, seq) via the derived lexicographic Ord,
@@ -345,6 +393,21 @@ impl NetSim {
         let (at, event) = self.pop()?;
         self.advance_to(at);
         Some(event)
+    }
+
+    /// Bookkeeping for a resolved stale read: counts any lag, and counts
+    /// + traces reads forced past the staleness budget (the
+    /// silent-neighbour fallback). Shared by the async and cluster
+    /// runtimes so their `NetCounters` mean the same thing.
+    pub fn note_stale_read(&mut self, node: NodeId, nbr: NodeId, ideal: u64,
+                           used: u64, stale: u64) {
+        if used < ideal {
+            self.counters.stale_reads += 1;
+            if used + stale < ideal {
+                self.counters.fallback_reads += 1;
+                self.record(TraceKind::Fallback { node, nbr, ideal, used });
+            }
+        }
     }
 
     /// Bookkeeping for a delivery the consumer accepted.

@@ -340,6 +340,131 @@ fn nap_activity_rule_masks_and_run_completes() {
     assert!(last.max_primal.is_finite());
 }
 
+// -- satellite: lag-aware λ damping ------------------------------------------
+
+#[test]
+fn lag_damping_is_bit_identical_when_no_read_lags() {
+    // zero faults + lock-step: no read ever resolves stale, so the
+    // damping branch never fires and the flag is bit-transparent
+    let run = |damp: bool| {
+        AsyncRunner::new(
+            Topology::Ring.build(6).unwrap(),
+            quad_nodes(6, 3, 5),
+            NetConfig {
+                scheme: SchemeKind::Ap,
+                tol: 1e-4,
+                max_iters: 60,
+                seed: 11,
+                lag_damping: damp,
+                ..Default::default()
+            },
+            FaultPlan::none(),
+        )
+        .run()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.thetas, on.thetas);
+    assert_eq!(off.iterations, on.iterations);
+    assert_eq!(off.recorder.stats.len(), on.recorder.stats.len());
+    for (a, b) in off.recorder.stats.iter().zip(&on.recorder.stats) {
+        assert_stats_bit_equal(a, b);
+    }
+}
+
+#[test]
+fn lag_damping_tames_the_over_budget_staleness_cell() {
+    // the stale3 regime (systematic 3-round lag under loss) destabilizes
+    // the undamped dual accumulation; scaling stale steps by 1/(1+lag)
+    // must leave the damped run no worse — and finite
+    let run = |damp: bool| {
+        AsyncRunner::new(
+            Topology::Ring.build(8).unwrap(),
+            quad_nodes(8, 2, 33),
+            NetConfig {
+                scheme: SchemeKind::Fixed,
+                tol: 0.0,
+                max_iters: 300,
+                seed: 5,
+                max_staleness: 3,
+                silence_timeout: 16,
+                lag_damping: damp,
+                tracing: false,
+                ..Default::default()
+            },
+            FaultPlan {
+                link: LinkModel { base: 2, jitter: 4, loss: 0.10, dup: 0.02 },
+                ..FaultPlan::none()
+            },
+        )
+        .run()
+    };
+    let undamped = run(false);
+    let damped = run(true);
+    assert!(damped.counters.stale_reads > 0, "budget must actually be used");
+    let pu = undamped.recorder.stats.last().unwrap().max_primal;
+    let pd = damped.recorder.stats.last().unwrap().max_primal;
+    assert!(pd.is_finite(), "damped run must stay finite");
+    assert!(pd < pu || pd < 1e-2,
+            "damping must not be worse than the raw stale3 cell: {pd} vs {pu}");
+}
+
+// -- satellite: async-friendly app-metric hook -------------------------------
+
+#[test]
+fn dppca_runs_through_async_runtime_with_app_metric() {
+    // the ROADMAP item: D-PPCA (not just quadratic consensus) through the
+    // net runtime, scored by the subspace-angle hook under 10% loss
+    use crate::data::{even_split, SubspaceSpec};
+    use crate::dppca::DppcaSolver;
+    use crate::experiments::common::{max_angle_vs_reference, BackendChoice};
+    use crate::util::rng::Pcg;
+
+    let spec = SubspaceSpec { d: 6, m: 2, n: 48, noise_var: 0.05, random_mean: false };
+    let data = spec.generate(&mut Pcg::seed(4));
+    let part = even_split(48, 4);
+    let backend = BackendChoice::Native.build().unwrap();
+    let solvers: Vec<DppcaSolver> = part
+        .ranges
+        .iter()
+        .map(|&(lo, hi)| {
+            DppcaSolver::from_block(data.x.col_slice(lo, hi), 2, backend.clone())
+                .unwrap()
+        })
+        .collect();
+    let w_true = data.w_true.clone();
+    let report = AsyncRunner::new(
+        Topology::Ring.build(4).unwrap(),
+        solvers,
+        NetConfig {
+            scheme: SchemeKind::Ap,
+            tol: 1e-5,
+            max_iters: 200,
+            seed: 2,
+            max_staleness: 1,
+            silence_timeout: 16,
+            tracing: false,
+            ..Default::default()
+        },
+        FaultPlan {
+            link: LinkModel { base: 2, jitter: 4, loss: 0.10, dup: 0.0 },
+            ..FaultPlan::none()
+        },
+    )
+    .with_app_metric(move |_round, thetas, live| {
+        // no churn in this scenario: every snapshot slot stays current
+        assert!(live.iter().all(|&l| l));
+        max_angle_vs_reference(thetas, 6, 2, &w_true)
+    })
+    .run();
+    assert!(report.counters.dropped_loss > 0, "loss model must have bitten");
+    assert!(report.recorder.stats.iter().all(|s| s.app_error.is_finite()));
+    let curve = report.recorder.error_curve();
+    assert!(curve.last().unwrap() < &curve[0],
+            "subspace angle must improve under loss: {} → {}",
+            curve[0], curve.last().unwrap());
+}
+
 #[test]
 fn staleness_budget_allows_run_ahead_under_jitter() {
     // pure latency jitter, no loss: with a one-round staleness budget the

@@ -16,6 +16,17 @@
 //!
 //! A scheme instance lives *inside one node* and only sees that node's
 //! [`NodeObservation`]; the engine owns one instance per node.
+//!
+//! The `global_*` observation fields are populated differently per
+//! runtime: the sequential/sharded engines and the async runtime feed RB
+//! an exact (omniscient) fold, while the cluster runtime
+//! ([`crate::cluster`]) feeds it *collective results* — the spanning-tree
+//! fold (exact, delayed by tree latency) or the gossip estimate
+//! (approximate, per-node normalized; RB's balance test compares the
+//! primal/dual ratio, from which the normalization cancels). Schemes are
+//! agnostic to the source by design — `needs_global_residuals()` is the
+//! only coupling, and it gates how long a runtime must wait before the
+//! scheme's update can run.
 
 mod kappa;
 mod schemes;
