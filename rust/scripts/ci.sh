@@ -16,6 +16,45 @@ cargo build --release
 echo "== tier-1: cargo test -q =="
 cargo test -q
 
+echo "== kernel single-transcription grep gate =="
+# The protocol kernel extraction (PR 5) holds only if the λ dual step and
+# the Chan-style centered-statistics fold exist in exactly one place each:
+# src/kernel/ (golden.rs keeps a frozen test-only copy by design) and
+# src/metrics/. Any reappearance in a runtime is a re-transcription — the
+# bug class the refactor removed.
+gate_fail=0
+# the dual step, in every spelling the repo has ever used: an indexed
+# `+=` whose increment multiplies by a half-penalty (`0.5 * eta…`, any
+# binding name — the pre-refactor engine called it `eta`, the runtimes
+# `eta_bar`), plus the named-field forms
+if grep -rn "\[k\] += .*0\.5 \* eta\|lambda\[k\] +=\|lambda\[k\]+=\|0\.5 \* eta_bar\|0\.5\*eta_bar" \
+    src --include='*.rs' | grep -v "^src/kernel/"; then
+  echo "grep gate: λ-update / dual-step transcription found outside src/kernel/" >&2
+  gate_fail=1
+fi
+if grep -rn "centered_sq +=\|delta_sq" src --include='*.rs' \
+    | grep -v "^src/metrics/"; then
+  echo "grep gate: Chan-fold arithmetic outside src/metrics/" >&2
+  gate_fail=1
+fi
+# pattern-rot guard: the canonical transcriptions must still match their
+# own patterns, or the gate is silently vacuous
+if ! grep -q "lambda\[k\] +=" src/kernel/node.rs; then
+  echo "grep gate: kernel λ step no longer matches the gate pattern (update ci.sh)" >&2
+  gate_fail=1
+fi
+if ! grep -q "centered_sq +=" src/metrics/mod.rs; then
+  echo "grep gate: metrics Chan fold no longer matches the gate pattern (update ci.sh)" >&2
+  gate_fail=1
+fi
+if [[ "$gate_fail" -ne 0 ]]; then
+  exit 1
+fi
+echo "grep gate: OK (λ step only in kernel/, Chan fold only in metrics/)"
+
+echo "== kernel golden-trace parity (pre-refactor Engine::step, bitwise) =="
+cargo test -q --release kernel::golden
+
 # clippy: warning-clean, modulo the two idioms this codebase uses on
 # purpose (index-based math loops; wide arg lists in the actor plumbing)
 if cargo clippy --version >/dev/null 2>&1; then
@@ -43,10 +82,11 @@ if [[ ! -f "$net_dir/net_scenarios.csv" ]]; then
   echo "net smoke: net_scenarios.csv missing" >&2
   exit 1
 fi
-# every (scenario × scheme) row present: 8 scenarios × 7 schemes + header
+# every (scenario × scheme) row present: 9 scenarios × 7 schemes + header
+# (the stale3 triple: raw / damped / skip-λ-on-fallback)
 net_rows="$(wc -l < "$net_dir/net_scenarios.csv")"
-if [[ "$net_rows" -ne 57 ]]; then
-  echo "net smoke: expected 57 csv lines (8 scenarios × 7 schemes + header), got $net_rows" >&2
+if [[ "$net_rows" -ne 64 ]]; then
+  echo "net smoke: expected 64 csv lines (9 scenarios × 7 schemes + header), got $net_rows" >&2
   exit 1
 fi
 rm -rf "$net_dir"
@@ -73,6 +113,13 @@ fi
 cargo run --release --quiet --bin repro -- net \
   --nodes 8 --seeds 1 --max-iters 100 --schemes admm \
   --plan ../examples/net_plan_loss_partition.json --out "$cluster_dir"
+# the D-PPCA cluster cell (4 machines @ 10% loss, subspace-angle hook)
+cargo run --release --quiet --bin repro -- cluster --dppca \
+  --max-iters 120 --out "$cluster_dir"
+if [[ ! -f "$cluster_dir/cluster_dppca.csv" ]]; then
+  echo "cluster smoke: cluster_dppca.csv missing" >&2
+  exit 1
+fi
 rm -rf "$cluster_dir"
 
 if [[ "${1:-}" != "--no-bench" ]]; then
@@ -95,6 +142,43 @@ if [[ "${1:-}" != "--no-bench" ]]; then
   if [[ ! -f "$smoke_dir/BENCH_cluster.json" ]]; then
     echo "bench smoke: bench_cluster wrote no BENCH_cluster.json" >&2
     exit 1
+  fi
+
+  # ---- cluster baseline gate -----------------------------------------
+  # Check the fresh bench_cluster scenario metrics against the committed
+  # BENCH_cluster.json envelope: the clean_tree cells must cost exactly
+  # the committed extra rounds vs the oracle (0 — the parity contract as
+  # a number), and no cell may blow past the committed round bound.
+  # Machine-speed independent, so it holds for smoke runs too.
+  echo "== cluster baseline gate =="
+  cluster_baseline="../BENCH_cluster.json"
+  cluster_fresh="$smoke_dir/BENCH_cluster.json"
+  if [[ ! -f "$cluster_baseline" ]]; then
+    echo "cluster gate: no committed BENCH_cluster.json baseline; skipping"
+  elif ! command -v python3 >/dev/null 2>&1; then
+    echo "cluster gate: python3 unavailable; skipping"
+  else
+    python3 - "$cluster_baseline" "$cluster_fresh" <<'PY'
+import json, sys
+
+base = json.load(open(sys.argv[1]))
+fresh = json.load(open(sys.argv[2]))
+env = base.get("scenario", {}).get("envelope", {})
+want_extra = env.get("clean_tree_extra_rounds", 0)
+max_rounds = env.get("max_rounds_any_cell")
+failures = []
+cells = fresh.get("scenario", {})
+for key, cell in cells.items():
+    if not isinstance(cell, dict) or "rounds" not in cell:
+        continue
+    if key.startswith("clean_tree_") and cell.get("extra_rounds") != want_extra:
+        failures.append(f"{key}: extra_rounds {cell.get('extra_rounds')} != {want_extra}")
+    if max_rounds is not None and cell["rounds"] > max_rounds:
+        failures.append(f"{key}: rounds {cell['rounds']} > envelope {max_rounds}")
+if failures:
+    sys.exit("cluster gate: " + "; ".join(failures))
+print(f"cluster gate: OK ({len(cells)} cells)")
+PY
   fi
 
   # ---- bench regression gate -----------------------------------------

@@ -89,11 +89,21 @@ pub(crate) struct TreeTopology {
 }
 
 pub(crate) fn build_tree(view: &LiveView) -> TreeTopology {
+    build_tree_rooted(view, None)
+}
+
+/// [`build_tree`] with an optional preferred root (the leader-election
+/// handoff re-roots at the machine that received the checker state); a
+/// dead or absent preference falls back to the lowest live machine.
+pub(crate) fn build_tree_rooted(view: &LiveView, prefer: Option<usize>)
+                                -> TreeTopology {
     let g = view.graph();
     let n = g.len();
     let mut parent = vec![None; n];
     let mut children: Vec<Vec<usize>> = vec![Vec::new(); n];
-    let root = (0..n).find(|&i| view.node_live(i)).unwrap_or(0);
+    let root = prefer
+        .filter(|&m| m < n && view.node_live(m))
+        .unwrap_or_else(|| (0..n).find(|&i| view.node_live(i)).unwrap_or(0));
     let mut seen = vec![false; n];
     seen[root] = true;
     let mut queue = VecDeque::from([root]);

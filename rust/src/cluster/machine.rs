@@ -28,9 +28,9 @@ use std::ops::Range;
 use crate::consensus::LocalSolver;
 use crate::coordinator::ParamArena;
 use crate::graph::{Graph, NodeId};
+use crate::kernel::{DualPolicy, KernelScratch, NodeKernel, SlotView};
 use crate::metrics::StatPartial;
-use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
-                     SchemeParams};
+use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
 use super::partition::MachinePartition;
@@ -54,37 +54,22 @@ pub(crate) enum MPhase {
 }
 
 /// Per-node state owned by exactly one machine (and, within it, one
-/// shard). θ and published η live only in the machine's arena.
+/// shard). θ and published η live only in the machine's arena; λ/η/scheme
+/// state lives in the shared protocol kernel.
 pub(crate) struct MNode<S> {
     /// relabeled global node id
     pub id: NodeId,
     pub solver: S,
-    pub scheme: Box<dyn PenaltyScheme>,
-    /// out-edge penalties η_{i→j}, neighbour-slot order (working copy)
-    pub etas: Vec<f64>,
-    pub lambda: Vec<f64>,
-    pub nbr_mean_prev: Vec<f64>,
+    pub kernel: NodeKernel,
     /// flat η-arena index of the *incoming* penalty η_{j→i} per slot
     pub in_eta_idx: Vec<usize>,
     /// machine of each neighbour slot (own id ⇒ intra-machine edge)
     pub nbr_machine: Vec<usize>,
-    pub f_nb: Vec<f64>,
-    pub f_self_prev: f64,
-    // carried across phases within one round
-    pub eta_sum: f64,
-    /// live-slot count at phase A (η̄ must divide the phase-A η sum by the
-    /// phase-A degree even if a link toggles mid-round)
-    pub live_deg_a: usize,
-    pub f_self: f64,
-    pub primal: f64,
-    pub dual: f64,
 }
 
 /// Per-shard worker scratch, reused across rounds.
 pub(crate) struct ShardScratch {
-    eta_wsum: Vec<f64>,
-    nbr_mean: Vec<f64>,
-    rhos: Vec<Vec<f64>>,
+    kernel: KernelScratch,
     pub partial: StatPartial,
     /// raw Σ‖θ‖² over the shard (gossip mass; separate accumulator so the
     /// centered statistics stay bit-identical to the coordinator's)
@@ -94,12 +79,52 @@ pub(crate) struct ShardScratch {
 impl ShardScratch {
     fn new(dim: usize, max_deg: usize) -> ShardScratch {
         ShardScratch {
-            eta_wsum: vec![0.0; dim],
-            nbr_mean: vec![0.0; dim],
-            rhos: vec![vec![0.0; dim]; max_deg],
+            kernel: KernelScratch::new(dim, max_deg),
             partial: StatPartial::new(dim),
             raw_sq: 0.0,
         }
+    }
+}
+
+/// The cluster's [`SlotView`]: zero-copy parity reads out of the
+/// machine's arena (intra-machine neighbours and driver-materialized
+/// boundary blocks alike), masked by machine-link liveness. Reads are
+/// exact (lag 0): boundary staleness is resolved driver-side *before*
+/// the pool phase runs, with its own accounting.
+///
+/// Safety of the unsafe reads: identical to the coordinator's aliasing
+/// discipline — phase A reads only parity-p θ, phase B reads the
+/// post-join parity-q θ and the stable parity-p η (see [`super`]).
+struct MachineSlots<'a> {
+    arena: &'a ParamArena,
+    nbrs: &'a [NodeId],
+    nbr_machine: &'a [usize],
+    link_live: &'a [bool],
+    mid: usize,
+    theta_parity: usize,
+    eta_parity: usize,
+    in_eta_idx: &'a [usize],
+}
+
+impl SlotView for MachineSlots<'_> {
+    fn live(&self, slot: usize) -> bool {
+        let pm = self.nbr_machine[slot];
+        pm == self.mid || self.link_live[pm]
+    }
+
+    fn theta(&mut self, slot: usize) -> (&[f64], u64) {
+        // Safety: see type docs.
+        (unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }, 0)
+    }
+
+    fn theta_again(&mut self, slot: usize) -> &[f64] {
+        // Safety: see type docs.
+        unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }
+    }
+
+    fn eta_in(&mut self, slot: usize) -> f64 {
+        // Safety: see type docs.
+        unsafe { self.arena.eta(self.eta_parity, self.in_eta_idx[slot]) }
     }
 }
 
@@ -210,12 +235,12 @@ impl<S: LocalSolver + Send> MachineRt<S> {
             let mut rng = Pcg::new(seed, orig as u64 + 1);
             let theta0 = solver.initial_param(&mut rng);
             assert_eq!(theta0.len(), dim);
-            let etas = vec![params.eta0; deg];
+            let kernel = NodeKernel::new(scheme, params, deg, dim);
             // Safety: single-threaded construction; parity 0 is the
             // pre-loop write buffer.
             unsafe {
                 arena.theta_mut(0, i).copy_from_slice(&theta0);
-                arena.eta_out_mut(0, i).copy_from_slice(&etas);
+                arena.eta_out_mut(0, i).copy_from_slice(&kernel.etas);
             }
             let in_eta_idx = graph
                 .neighbors(i)
@@ -230,25 +255,8 @@ impl<S: LocalSolver + Send> MachineRt<S> {
                 .iter()
                 .map(|&j| part.machine_of[j])
                 .collect();
-            let node_scheme = make_scheme(scheme, params, deg);
-            needs_globals |= node_scheme.needs_global_residuals();
-            nodes.push(MNode {
-                id: i,
-                solver,
-                scheme: node_scheme,
-                etas,
-                lambda: vec![0.0; dim],
-                nbr_mean_prev: vec![0.0; dim],
-                in_eta_idx,
-                nbr_machine,
-                f_nb: vec![0.0; deg],
-                f_self_prev: f64::INFINITY,
-                eta_sum: 0.0,
-                live_deg_a: 0,
-                f_self: 0.0,
-                primal: 0.0,
-                dual: 0.0,
-            });
+            needs_globals |= kernel.needs_global_residuals();
+            nodes.push(MNode { id: i, solver, kernel, in_eta_idx, nbr_machine });
         }
 
         // boundary-in indices (sorted ⇒ deterministic cache layout)
@@ -503,22 +511,10 @@ impl<S: LocalSolver + Send> MachineRt<S> {
             // parity-critical: a fully live neighbourhood passes None so
             // the schemes run the exact pre-liveness arithmetic
             let live = if all { None } else { Some(&mask[..]) };
-            let obs = NodeObservation {
-                t: t as usize,
-                primal_norm: st.primal,
-                dual_norm: st.dual,
-                global_primal: globals.0,
-                global_dual: globals.1,
-                f_self: st.f_self,
-                f_self_prev: st.f_self_prev,
-                f_neighbors: &st.f_nb,
-                live,
-            };
-            st.scheme.update(&obs, &mut st.etas);
-            st.f_self_prev = st.f_self;
+            st.kernel.observe(t as usize, globals, live);
             // Safety: we own every local node; parity-q η is the write
             // buffer until the next round's phase B resolves into parity p.
-            unsafe { arena.eta_out_mut(q, st.id) }.copy_from_slice(&st.etas);
+            unsafe { arena.eta_out_mut(q, st.id) }.copy_from_slice(&st.kernel.etas);
         }
         self.eta_parity = q;
     }
@@ -554,6 +550,30 @@ impl<S: LocalSolver + Send> MachineRt<S> {
         self.snapshots.retain(|&r, _| r >= floor);
         self.verdicts.retain(|&r, _| r >= floor);
         self.retries.retain(|&r, _| r >= floor);
+    }
+
+    /// Copy the machine's best round-`r` snapshot (same resolution rule
+    /// as [`MachineRt::snapshot_for`]) straight into per-node slots of
+    /// `out`, keyed by original ids via `order` — the allocation-free
+    /// variant the per-commit app-metric path uses.
+    pub(crate) fn snapshot_read(&self, r: u64, dim: usize, order: &[NodeId],
+                                out: &mut [Vec<f64>]) {
+        let flat = self
+            .snapshots
+            .range(..=r)
+            .next_back()
+            .map(|s| s.1)
+            .or_else(|| self.snapshots.values().next());
+        for (off, i) in self.span.clone().enumerate() {
+            match flat {
+                Some(flat) => out[order[i]]
+                    .copy_from_slice(&flat[off * dim..(off + 1) * dim]),
+                // never ran a round: θ⁰ sits in parity 0.
+                // Safety: driver-side, between pool phases.
+                None => out[order[i]]
+                    .copy_from_slice(unsafe { self.arena.theta(0, i) }),
+            }
+        }
     }
 
     /// The machine's best θ snapshot for round `r` (exact round, else the
@@ -596,16 +616,17 @@ impl<S: LocalSolver + Send> MachineRt<S> {
         let lo = self.span.start;
         self.out_edges[qslot]
             .iter()
-            .map(|&(i, j, slot)| (i, j, self.nodes[i - lo].etas[slot]))
+            .map(|&(i, j, slot)| (i, j, self.nodes[i - lo].kernel.etas[slot]))
             .collect()
     }
 }
 
 // ---------------------------------------------------------------------------
-// Shard phase bodies. Transcribed from `coordinator::shard::worker_main`
-// phases A/B, with a per-slot machine-link mask added: when every link is
-// live the branches never fire and the floating-point stream is identical
-// to the coordinator's (the one-machine bit-parity test pins this).
+// Shard phase bodies. The per-node arithmetic is the shared kernel
+// ([`NodeKernel`]) behind the machine-link-masked [`MachineSlots`] view:
+// when every link is live the mask never fires and the floating-point
+// stream is the coordinator's — now by shared code, with the one-machine
+// bit-parity test still pinning it end to end.
 
 fn shard_phase_a<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
                                  link_live: &[bool], mid: usize,
@@ -613,35 +634,25 @@ fn shard_phase_a<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
                                  t: u64) {
     let p = (t & 1) as usize;
     let q = p ^ 1;
-    let dim = arena.dim();
     for st in nodes {
         // Safety: phase A reads only parity-p θ (local peers' θ^t and the
         // driver-materialized boundary θ) and writes only our parity-q
-        // block — the coordinator's discipline verbatim.
+        // block — the coordinator's discipline verbatim; solve_into fully
+        // overwrites the block.
         let theta_t = unsafe { arena.theta(p, st.id) };
-        let mut eta_sum = 0.0;
-        let mut live_deg = 0usize;
-        sc.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
-        for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
-            let pm = st.nbr_machine[slot];
-            if pm != mid && !link_live[pm] {
-                continue;
-            }
-            live_deg += 1;
-            let e = st.etas[slot];
-            eta_sum += e;
-            let tj = unsafe { arena.theta(p, j) };
-            for k in 0..dim {
-                sc.eta_wsum[k] += e * (theta_t[k] + tj[k]);
-            }
-        }
-        st.eta_sum = eta_sum;
-        st.live_deg_a = live_deg;
-        // Safety: we own st.id; parity q is this phase's write buffer and
-        // solve_into fully overwrites it.
+        let mut view = MachineSlots {
+            arena,
+            nbrs: graph.neighbors(st.id),
+            nbr_machine: &st.nbr_machine,
+            link_live,
+            mid,
+            theta_parity: p,
+            eta_parity: p,
+            in_eta_idx: &st.in_eta_idx,
+        };
         let theta_next = unsafe { arena.theta_mut(q, st.id) };
-        st.solver.solve_into(theta_t, &st.lambda, eta_sum, &sc.eta_wsum,
-                             theta_next);
+        st.kernel.solve_into(&mut st.solver, theta_t, graph.degree(st.id),
+                             &mut view, &mut sc.kernel, theta_next);
     }
 }
 
@@ -660,98 +671,38 @@ fn shard_phase_b<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
         // complete; η parity-p holds the round's penalties (local peers'
         // phase-C publishes from last round + driver-resolved boundary η).
         let th_new = unsafe { arena.theta(q, st.id) };
-
-        // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), fused with the neighbour-mean
-        // accumulation; both accumulators are fed in slot order, so the
-        // floating-point grouping matches the coordinator's two passes.
-        sc.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
-        let mut live_deg = 0usize;
-        for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
-            let pm = st.nbr_machine[slot];
-            if pm != mid && !link_live[pm] {
-                continue;
-            }
-            live_deg += 1;
-            let eta_in = unsafe { arena.eta(p, st.in_eta_idx[slot]) };
-            let eta_bar = 0.5 * (st.etas[slot] + eta_in);
-            let tj = unsafe { arena.theta(q, j) };
-            for k in 0..dim {
-                st.lambda[k] += 0.5 * eta_bar * (th_new[k] - tj[k]);
-                sc.nbr_mean[k] += tj[k];
-            }
-        }
-
-        // local residuals over the live neighbourhood; η̄ divides the
-        // phase-A η sum by the phase-A live count (mid-round link toggles
-        // must not pair one snapshot's sum with the other's degree)
-        let inv_deg = 1.0 / live_deg.max(1) as f64;
-        sc.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
-        let inv_deg_a = 1.0 / st.live_deg_a.max(1) as f64;
-        let eta_bar_node = st.eta_sum * inv_deg_a;
-        let mut r2 = 0.0;
-        let mut s2 = 0.0;
-        for k in 0..dim {
-            let r = th_new[k] - sc.nbr_mean[k];
-            let s = eta_bar_node * (sc.nbr_mean[k] - st.nbr_mean_prev[k]);
-            r2 += r * r;
-            s2 += s * s;
-        }
-        st.nbr_mean_prev.copy_from_slice(&sc.nbr_mean);
-        st.primal = r2.sqrt();
-        st.dual = s2.sqrt();
-
-        // objectives (f at bridge midpoints only if the scheme asks);
-        // dead slots get a placeholder the scheme's mask excludes
-        st.f_self = st.solver.objective(th_new);
-        if st.scheme.needs_neighbor_objectives() {
-            for (slot, &j) in graph.neighbors(st.id).iter().enumerate() {
-                let rho = &mut sc.rhos[slot];
-                let pm = st.nbr_machine[slot];
-                if pm == mid || link_live[pm] {
-                    let tj = unsafe { arena.theta(q, j) };
-                    for k in 0..dim {
-                        rho[k] = 0.5 * (th_new[k] + tj[k]);
-                    }
-                } else {
-                    rho.copy_from_slice(th_new);
-                }
-            }
-            st.solver.objective_batch_into(&sc.rhos[..deg], &mut st.f_nb);
-        } else {
-            st.f_nb.clear();
-            st.f_nb.resize(deg, 0.0);
-        }
+        let mut view = MachineSlots {
+            arena,
+            nbrs: graph.neighbors(st.id),
+            nbr_machine: &st.nbr_machine,
+            link_live,
+            mid,
+            theta_parity: q,
+            eta_parity: p,
+            in_eta_idx: &st.in_eta_idx,
+        };
+        st.kernel.reduce(&mut st.solver, th_new, deg, &mut view,
+                         DualPolicy::exact(), &mut sc.kernel);
 
         // shard-local reduction, node order = sequential order
-        sc.partial.f_sum += st.f_self;
-        sc.partial.max_primal = sc.partial.max_primal.max(st.primal);
-        sc.partial.max_dual = sc.partial.max_dual.max(st.dual);
-        for &e in &st.etas {
-            sc.partial.eta_min = sc.partial.eta_min.min(e);
-            sc.partial.eta_max = sc.partial.eta_max.max(e);
-            sc.partial.eta_sum += e;
-        }
-        sc.partial.eta_count += deg;
-        for k in 0..dim {
-            sc.partial.theta_sum[k] += th_new[k];
-        }
+        sc.partial.absorb_node(st.kernel.f_self, st.kernel.primal,
+                               st.kernel.dual, &st.kernel.etas, th_new);
     }
     // second shard-local pass: spread about the shard mean (the centered
-    // statistic the Chan-style fold needs) + the raw Σ‖θ‖² gossip mass
-    sc.partial.node_count = nodes.len();
-    if !nodes.is_empty() {
-        let inv_count = 1.0 / nodes.len() as f64;
+    // statistic the Chan-style fold needs), then the raw Σ‖θ‖² gossip
+    // mass in a third sweep — separate accumulators, so splitting the
+    // passes keeps both streams bit-identical.
+    // Safety: parity-q θ is stable throughout phase B.
+    sc.partial.finish_centered(
+        nodes.len(),
+        nodes.iter().map(|st| unsafe { arena.theta(q, st.id) }),
+        &mut sc.kernel.nbr_mean,
+    );
+    for st in nodes.iter() {
+        // Safety: as above.
+        let th = unsafe { arena.theta(q, st.id) };
         for k in 0..dim {
-            sc.nbr_mean[k] = sc.partial.theta_sum[k] * inv_count;
-        }
-        for st in nodes.iter() {
-            // Safety: parity-q θ is stable throughout phase B.
-            let th = unsafe { arena.theta(q, st.id) };
-            for k in 0..dim {
-                let d = th[k] - sc.nbr_mean[k];
-                sc.partial.centered_sq += d * d;
-                sc.raw_sq += th[k] * th[k];
-            }
+            sc.raw_sq += th[k] * th[k];
         }
     }
 }

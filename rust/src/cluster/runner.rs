@@ -17,14 +17,14 @@ use crate::consensus::LocalSolver;
 use crate::coordinator::SolverFactory;
 use crate::error::{Error, Result};
 use crate::graph::{rcm_order, relabel_graph, Graph, NodeId, Relabel};
-use crate::metrics::{ConvergenceChecker, IterStats, NetCounters, Recorder,
-                     RunningFold, StatPartial};
+use crate::kernel::{AppMetricHook, StopTracker};
+use crate::metrics::{IterStats, NetCounters, Recorder, RunningFold, StatPartial};
 use crate::net::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TimerKind,
                       TraceEvent, TraceKind};
 use crate::net::{ActivityConfig, TopologyController};
 use crate::penalty::{SchemeKind, SchemeParams};
 
-use super::collective::{build_tree, estimate, subtree, CollectiveKind,
+use super::collective::{build_tree_rooted, estimate, subtree, CollectiveKind,
                         GossipState, TreeState, MASS_COUNT, MASS_ETA,
                         MASS_ETA_CNT, MASS_F, MASS_SQ, MASS_THETA};
 use super::machine::{MPhase, MachineRt};
@@ -69,6 +69,13 @@ pub struct ClusterConfig {
     pub gossip_spacing: Ticks,
     /// Machine-level NAP activity rule over the quotient graph.
     pub activity: Option<ActivityConfig>,
+    /// Scripted leader handoff (tree collective): after the root commits
+    /// round `.0`, re-root the tree at machine `.1` and ship the
+    /// [`crate::kernel::StopSnapshot`] there over the network — the
+    /// leader-election drill the handoff regression test runs with
+    /// faults off (churn-driven handoffs need no script: a departing
+    /// root always serializes to its successor).
+    pub handoff: Option<(u64, usize)>,
     pub tracing: bool,
 }
 
@@ -94,6 +101,7 @@ impl Default for ClusterConfig {
             gossip_ticks: 0,
             gossip_spacing: 4,
             activity: None,
+            handoff: None,
             tracing: true,
         }
     }
@@ -117,18 +125,25 @@ pub struct ClusterReport {
     pub workers_per_machine: usize,
 }
 
-/// Designated-recorder state: the convergence checker and the recorded
-/// curves live with the tree root (tree) or the lowest live machine
-/// (gossip). The simulator halts the run the moment the stop decision is
-/// computed — the broadcast a real deployment would need costs zero extra
-/// rounds here, exactly like the async runner's `Stop` handling.
+/// Designated-recorder state: the shared [`StopTracker`] (checker +
+/// recorder + verdict memory) lives with the tree root (tree) or the
+/// lowest live machine (gossip). Under the tree collective its location
+/// is *protocol state*: `holder` names the machine carrying it, and on a
+/// re-root the old holder serializes a [`crate::kernel::StopSnapshot`]
+/// into a reliable `Checker` message the new root resumes from — the
+/// root refuses to fold while the state is in flight. (Gossip keeps the
+/// older omniscient migration: the lowest live machine simply *is* the
+/// recorder; a real deployment would run the same handoff there.) The
+/// simulator halts the run the moment the stop decision is computed —
+/// the broadcast a real deployment would need costs zero extra rounds
+/// here, exactly like the async runner's `Stop` handling.
 struct RootState {
     cursor: u64,
-    checker: ConvergenceChecker,
-    recorder: Recorder,
-    global_mean_prev: Option<Vec<f64>>,
-    fold: RunningFold,
-    converged: bool,
+    tracker: StopTracker,
+    /// machine currently holding the tracker (tree collective)
+    holder: usize,
+    /// a serialized tracker is in flight to this machine
+    in_flight_to: Option<usize>,
 }
 
 enum Coll {
@@ -149,6 +164,13 @@ pub struct ClusterRunner<S: LocalSolver + Send> {
     machines: Vec<MachineRt<S>>,
     coll: Coll,
     fold: RootState,
+    /// preferred tree root (set by the scripted handoff; cleared if dead)
+    root_prefer: Option<usize>,
+    /// unified app-metric hook, run by the designated recorder per commit
+    metric: Option<Box<dyn AppMetricHook>>,
+    /// reusable app-metric snapshot buffers (original-id keyed)
+    metric_thetas: Vec<Vec<f64>>,
+    metric_live: Vec<bool>,
     pending_wakes: Vec<usize>,
     stopped: bool,
     stop_round: Option<u64>,
@@ -232,17 +254,21 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         };
 
         let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        let initial_root =
+            (0..mcount).find(|&m| ctrl.view().node_live(m)).unwrap_or(0);
         Ok(ClusterRunner {
             fold: RootState {
                 cursor: 0,
-                checker: ConvergenceChecker::new(cfg.tol)
-                    .with_patience(cfg.patience)
-                    .with_warmup(cfg.warmup),
-                recorder: Recorder::with_capacity(cfg.max_iters),
-                global_mean_prev: None,
-                fold: RunningFold::new(dim),
-                converged: false,
+                tracker: StopTracker::new(dim, cfg.tol, cfg.patience,
+                                          cfg.warmup, cfg.max_iters,
+                                          cfg.params.eta0),
+                holder: initial_root,
+                in_flight_to: None,
             },
+            root_prefer: None,
+            metric: None,
+            metric_thetas: Vec::new(),
+            metric_live: Vec::new(),
             pending_wakes: Vec::new(),
             stopped: false,
             stop_round: None,
@@ -258,6 +284,45 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             coll,
             cfg,
         })
+    }
+
+    /// Attach an application-metric hook — the unified
+    /// [`crate::kernel::AppMetricHook`] surface (any
+    /// `FnMut(round, θ, live) -> f64` closure qualifies); its value lands
+    /// in [`IterStats::app_error`] at every committed round. The θ
+    /// snapshot hands each node's newest committed parameters (keyed by
+    /// *original* node ids) with per-node liveness derived from machine
+    /// liveness; like the recorder itself, the snapshot assembly is an
+    /// omniscient-simulator shortcut — a real deployment would ship θ
+    /// with the collective traffic.
+    pub fn with_app_metric(
+        mut self,
+        metric: impl AppMetricHook + 'static,
+    ) -> Self {
+        self.metric = Some(Box::new(metric));
+        self
+    }
+
+    /// Assemble the committed-θ snapshot + liveness for round `r` into
+    /// the reusable buffers and run the hook (no-op 0.0 without one; the
+    /// buffers allocate once, on the first committed round).
+    fn app_metric_value(&mut self, r: u64) -> f64 {
+        let Some(mut hook) = self.metric.take() else { return 0.0 };
+        let n = self.graph.len();
+        if self.metric_thetas.len() != n {
+            self.metric_thetas = vec![vec![0.0; self.dim]; n];
+            self.metric_live = vec![false; n];
+        }
+        for mach in &self.machines {
+            let mach_live = self.ctrl.view().node_live(mach.id);
+            mach.snapshot_read(r, self.dim, &self.order, &mut self.metric_thetas);
+            for i in mach.span.clone() {
+                self.metric_live[self.order[i]] = mach_live;
+            }
+        }
+        let v = hook.measure(r as usize, &self.metric_thetas, &self.metric_live);
+        self.metric = Some(hook);
+        v
     }
 
     /// Drive the cluster to completion and report.
@@ -370,8 +435,8 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             (0..self.machines.len()).map(|m| self.ctrl.view().node_live(m)).collect();
         ClusterReport {
             iterations: self.fold.cursor as usize,
-            converged: self.fold.converged,
-            recorder: self.fold.recorder,
+            converged: self.fold.tracker.converged,
+            recorder: self.fold.tracker.take_recorder(),
             thetas,
             virtual_time: self.sim.now(),
             counters: self.sim.counters,
@@ -627,6 +692,17 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             Payload::Verdict { round, global_primal, global_dual } => {
                 self.on_verdict(dst, round, global_primal, global_dual);
             }
+            Payload::Checker { cursor, snap } => {
+                // the leader-election handoff lands: resume the tracker
+                // here and release any folds the transfer window buffered
+                if self.fold.in_flight_to == Some(dst) {
+                    self.fold.tracker.resume(*snap);
+                    self.fold.cursor = cursor;
+                    self.fold.holder = dst;
+                    self.fold.in_flight_to = None;
+                    self.try_root_folds();
+                }
+            }
             Payload::Gossip { round, mass, weight, maxes } => {
                 self.on_gossip_mass(dst, src, round, mass, weight, maxes);
             }
@@ -636,11 +712,82 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     }
 
     fn on_leave(&mut self, m: usize) {
+        if !self.ctrl.view().node_live(m) {
+            return;
+        }
+        // leader-election handoff: a departing tracker holder serializes
+        // its state to the successor (the machine that will be the new
+        // root) *before* its transport goes dark
+        if matches!(self.cfg.collective, CollectiveKind::Tree)
+            && self.fold.holder == m
+            && self.fold.in_flight_to.is_none()
+        {
+            let successor = (0..self.machines.len())
+                .find(|&p| p != m && self.ctrl.view().node_live(p));
+            if let Some(to) = successor {
+                self.initiate_handoff(m, to);
+            }
+        }
         if !self.ctrl.apply_leave(m, &mut self.sim) {
             return;
         }
         self.machines[m].phase = MPhase::Dead;
+        if self.root_prefer == Some(m) {
+            self.root_prefer = None;
+        }
+        if self.fold.in_flight_to == Some(m) {
+            // the receiver died with the snapshot in flight — resume at
+            // the next root via the omniscient shortcut (a real
+            // deployment would need checkpointed recovery here)
+            self.fold.in_flight_to = None;
+            self.fold.holder = (0..self.machines.len())
+                .find(|&p| self.ctrl.view().node_live(p))
+                .unwrap_or(0);
+            let to = self.fold.holder;
+            self.sim.record(TraceKind::Handoff { from: m, to });
+        }
         self.after_view_change();
+    }
+
+    /// Serialize the tracker at `from` and ship it reliably to `to` (the
+    /// simulated leader-election handoff). The state stays driver-held —
+    /// what travels is the serialized [`crate::kernel::StopSnapshot`] —
+    /// but the root will not fold again until the message lands and
+    /// [`StopTracker::resume`] runs, so the protocol cost is real.
+    fn initiate_handoff(&mut self, from: usize, to: usize) {
+        let snap = self.fold.tracker.snapshot();
+        self.fold.in_flight_to = Some(to);
+        self.sim.record(TraceKind::Handoff { from, to });
+        self.sim.send(from, to,
+                      Payload::Checker { cursor: self.fold.cursor,
+                                         snap: Box::new(snap) },
+                      true);
+    }
+
+    /// Whether the tree root currently holds a resumed tracker (folds and
+    /// commits are gated on this; gossip keeps the omniscient designated
+    /// recorder and never gates).
+    fn tracker_at_root(&mut self) -> bool {
+        if !matches!(self.cfg.collective, CollectiveKind::Tree) {
+            return true;
+        }
+        let root = {
+            let Coll::Tree(tree) = &self.coll else { return true };
+            tree.topo.root
+        };
+        if self.fold.in_flight_to.is_some() {
+            return false;
+        }
+        if self.fold.holder != root {
+            // no transfer in flight and the holder is not the root (the
+            // holder died mid-flight, or a preferred machine vanished):
+            // omniscient migration keeps the run live — counted in the
+            // trace so the shortcut is visible
+            let from = self.fold.holder;
+            self.fold.holder = root;
+            self.sim.record(TraceKind::Handoff { from, to: root });
+        }
+        true
     }
 
     fn on_join(&mut self, m: usize) {
@@ -815,15 +962,54 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
 
     fn tree_refresh(&mut self) {
         let gen = self.ctrl.view().generation();
-        let view = self.ctrl.view();
-        let Coll::Tree(tree) = &mut self.coll else { return };
-        if tree.topo.built_gen == gen {
+        let prefer = self.root_prefer;
+        let Some((old_root, new_root)) = ({
+            let view = self.ctrl.view();
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            if tree.topo.built_gen == gen {
+                None
+            } else {
+                let old_root = tree.topo.root;
+                tree.topo = build_tree_rooted(view, prefer);
+                Some((old_root, tree.topo.root))
+            }
+        }) else {
+            return;
+        };
+        self.after_reroot(old_root, new_root);
+    }
+
+    /// Re-root the tree at `target` without a topology change (the
+    /// scripted handoff drill) and start the tracker transfer.
+    fn force_reroot(&mut self, target: usize) {
+        self.root_prefer = Some(target);
+        let (old_root, new_root) = {
+            let view = self.ctrl.view();
+            let Coll::Tree(tree) = &mut self.coll else { return };
+            let old_root = tree.topo.root;
+            tree.topo = build_tree_rooted(view, Some(target));
+            (old_root, tree.topo.root)
+        };
+        self.after_reroot(old_root, new_root);
+        // in-flight rootward traffic re-routes through the collective
+        // timers (the same recovery machinery churn re-roots rely on);
+        // nudge every running machine so nobody waits a full timeout
+        self.after_view_change();
+    }
+
+    /// Shared re-root tail: trace it and, when the old root still holds a
+    /// live tracker, start the serialize→send→resume handoff toward the
+    /// new root (a dead old root already flushed its state in `on_leave`).
+    fn after_reroot(&mut self, old_root: usize, new_root: usize) {
+        if new_root == old_root {
             return;
         }
-        let old_root = tree.topo.root;
-        tree.topo = build_tree(view);
-        if tree.topo.root != old_root {
-            self.sim.record(TraceKind::Reroot { root: tree.topo.root });
+        self.sim.record(TraceKind::Reroot { root: new_root });
+        if self.fold.holder == old_root
+            && self.fold.in_flight_to.is_none()
+            && self.ctrl.view().node_live(old_root)
+        {
+            self.initiate_handoff(old_root, new_root);
         }
     }
 
@@ -953,6 +1139,12 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             if self.stopped {
                 return;
             }
+            // the root cannot commit while the tracker is in flight (the
+            // leader-election handoff window); inboxes keep buffering and
+            // the Checker delivery re-enters here
+            if !self.tracker_at_root() {
+                return;
+            }
             let r = self.fold.cursor;
             if r >= self.cfg.max_iters as u64 {
                 return;
@@ -981,10 +1173,13 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
 
     /// Fold round `r` at the root: absorb every delivered machine's shard
     /// partials in machine-id order (= node-id order, since machine
-    /// slices ascend) with the coordinator's exact Chan-style
-    /// combination, record the IterStats, run the convergence check and
-    /// start the verdict broadcast.
+    /// slices ascend) through the shared [`StopTracker`] — the Chan-style
+    /// combination, the verdict arithmetic and the stop decision all live
+    /// in [`crate::kernel`] now — then start the verdict broadcast.
     fn root_fold(&mut self, r: u64, forced: bool) {
+        if !self.tracker_at_root() {
+            return;
+        }
         let root = {
             let Coll::Tree(tree) = &self.coll else { return };
             tree.topo.root
@@ -1000,56 +1195,31 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             self.sim
                 .record(TraceKind::CollectiveTimeout { machine: root, round: r });
         }
-        self.fold.fold.reset();
-        for parts in entries.values() {
-            for p in parts {
-                self.fold.fold.absorb(p);
-            }
-        }
-        if self.fold.fold.agg_n == 0 {
+        // nothing to fold (all contributors died) — bail before the
+        // tracker's verdict memory is touched
+        if entries.values().flatten().all(|p| p.node_count == 0) {
             return;
         }
-        let objective = self.fold.fold.objective;
-        let gr2 = self.fold.fold.gr2.max(0.0);
-        // like the engines, the previous global mean starts at zero
-        let gs2 = match &self.fold.global_mean_prev {
-            Some(prev) => self
-                .fold
-                .fold
-                .gmean
-                .iter()
-                .zip(prev)
-                .map(|(a, b)| (a - b) * (a - b))
-                .sum::<f64>(),
-            None => self.fold.fold.gmean.iter().map(|a| a * a).sum(),
-        };
-        let global_primal = gr2.sqrt();
-        let global_dual = self.cfg.params.eta0
-            * (self.fold.fold.agg_n as f64).sqrt()
-            * gs2.sqrt();
-        match self.fold.global_mean_prev.as_mut() {
-            Some(prev) => prev.copy_from_slice(&self.fold.fold.gmean),
-            None => self.fold.global_mean_prev = Some(self.fold.fold.gmean.clone()),
-        }
-        self.fold.recorder.push(IterStats {
+        let g = self
+            .fold
+            .tracker
+            .round_partials(entries.values().flat_map(|parts| parts.iter()));
+        let app_error = self.app_metric_value(r);
+        let stop = self.fold.tracker.commit(r as usize, IterStats {
             iter: r as usize,
-            objective,
-            max_primal: self.fold.fold.max_primal,
-            max_dual: self.fold.fold.max_dual,
-            mean_eta: self.fold.fold.mean_eta(),
-            min_eta: self.fold.fold.min_eta(),
-            max_eta: self.fold.fold.eta_max,
-            app_error: 0.0,
+            objective: g.objective,
+            max_primal: g.max_primal,
+            max_dual: g.max_dual,
+            mean_eta: g.mean_eta,
+            min_eta: g.min_eta,
+            max_eta: g.max_eta,
+            app_error,
         });
         self.fold.cursor = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
-        self.store_verdict(root, r, global_primal, global_dual);
+        self.store_verdict(root, r, g.global_primal, g.global_dual);
 
-        let hit = self.fold.checker.update(objective);
-        if hit {
-            self.fold.converged = true;
-        }
-        if hit || r + 1 == self.cfg.max_iters as u64 {
+        if stop {
             self.stopped = true;
             self.stop_round = Some(r);
             self.sim.record(TraceKind::Stop { rounds: r + 1 });
@@ -1064,10 +1234,20 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                 self.sim.send(root, c,
                               Payload::Verdict {
                                   round: r,
-                                  global_primal,
-                                  global_dual,
+                                  global_primal: g.global_primal,
+                                  global_dual: g.global_dual,
                               },
                               false);
+            }
+        }
+        // the scripted leader-handoff drill fires right after its round
+        // commits: re-root at the target and ship the tracker there
+        if let Some((at, target)) = self.cfg.handoff {
+            if r == at && target != root
+                && matches!(self.cfg.collective, CollectiveKind::Tree)
+                && self.ctrl.view().node_live(target)
+            {
+                self.force_reroot(target);
             }
         }
     }
@@ -1112,6 +1292,9 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             tree.topo.root
         };
         if m == root {
+            if !self.tracker_at_root() {
+                return; // handoff in flight: the Checker delivery resumes
+            }
             let r = self.fold.cursor;
             if r >= self.cfg.max_iters as u64 {
                 return;
@@ -1334,13 +1517,16 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         };
         self.store_verdict(m, round, est.gp, gd);
 
-        // the lowest live machine is the designated recorder
+        // the lowest live machine is the designated recorder (gossip keeps
+        // the omniscient migration — see the RootState docs; the tree
+        // collective is the one running the explicit handoff protocol)
         let designated = (0..self.machines.len())
             .find(|&p| self.ctrl.view().node_live(p))
             .unwrap_or(0);
         if m == designated && round >= self.fold.cursor {
             let objective = est.avg_f * self.n_total as f64;
-            self.fold.recorder.push(IterStats {
+            let app_error = self.app_metric_value(round);
+            let stop = self.fold.tracker.commit(round as usize, IterStats {
                 iter: round as usize,
                 objective,
                 max_primal: est.max_primal,
@@ -1348,15 +1534,11 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                 mean_eta: est.mean_eta,
                 min_eta: est.min_eta,
                 max_eta: est.max_eta,
-                app_error: 0.0,
+                app_error,
             });
             self.fold.cursor = round + 1;
             self.sim.record(TraceKind::Fold { round });
-            let hit = self.fold.checker.update(objective);
-            if hit {
-                self.fold.converged = true;
-            }
-            if hit || round + 1 == self.cfg.max_iters as u64 {
+            if stop {
                 self.stopped = true;
                 self.stop_round = Some(round);
                 self.sim.record(TraceKind::Stop { rounds: round + 1 });

@@ -427,6 +427,108 @@ fn machine_level_activity_rule_runs_to_completion() {
     assert_eq!(offs, report.counters.edges_deactivated);
 }
 
+// -- satellite: checker-state leader-election handoff -------------------------
+
+#[test]
+fn scripted_handoff_matches_no_handoff_bitwise() {
+    // the ROADMAP item made a regression test: a mid-run re-root with the
+    // StopTracker serialized → shipped → resumed at the new root must
+    // produce the same stop iteration and the same recorded curves as the
+    // undisturbed run when faults are off — the handoff moves state, not
+    // arithmetic (partials still fold in machine-id order at whichever
+    // root commits them)
+    for scheme in [SchemeKind::Fixed, SchemeKind::Nap, SchemeKind::Rb] {
+        let run = |handoff: Option<(u64, usize)>| {
+            ClusterRunner::new(
+                Topology::Ring.build(12).unwrap(),
+                ClusterConfig { scheme, tol: 1e-4, max_iters: 80, seed: 23,
+                                machines: 3, workers: 1,
+                                collective: CollectiveKind::Tree, handoff,
+                                ..Default::default() },
+                FaultPlan::none(),
+                quad_factory(12, 2, 41),
+            )
+            .unwrap()
+            .run()
+        };
+        let clean = run(None);
+        // round 5 is always before the earliest possible stop (warmup 5 +
+        // patience 3), so the drill fires mid-run in every scheme
+        let handed = run(Some((5, 2)));
+        // the drill actually ran: re-root + serialized state on the wire
+        assert!(handed
+            .trace
+            .iter()
+            .any(|e| matches!(e.kind, TraceKind::Reroot { root: 2 })),
+            "{scheme:?}: the scripted handoff must re-root at machine 2");
+        assert!(handed
+            .trace
+            .iter()
+            .any(|e| matches!(e.kind,
+                              TraceKind::Deliver { what: "checker", .. })),
+            "{scheme:?}: the StopSnapshot must travel the network");
+        // ... and changed nothing the protocol can observe
+        assert_eq!(clean.iterations, handed.iterations, "{scheme:?}");
+        assert_eq!(clean.converged, handed.converged, "{scheme:?}");
+        assert_eq!(clean.thetas, handed.thetas, "{scheme:?}");
+        assert_eq!(clean.recorder.stats.len(), handed.recorder.stats.len());
+        for (a, b) in clean.recorder.stats.iter().zip(&handed.recorder.stats) {
+            assert_stats_bit_equal(a, b);
+        }
+    }
+}
+
+#[test]
+fn departing_root_hands_checker_to_successor() {
+    // churn-driven handoff: when the root machine leaves, it serializes
+    // the tracker to its successor before going dark; the survivors keep
+    // folding every round and the recorder carries across the transfer
+    let plan = FaultPlan {
+        link: LinkModel { base: 1, jitter: 2, loss: 0.0, dup: 0.0 },
+        partitions: vec![],
+        churn: vec![ChurnEvent::Leave { at: 400, node: 0 }],
+        initially_dormant: vec![],
+    };
+    let report = ClusterRunner::new(
+        Topology::Ring.build(12).unwrap(),
+        ClusterConfig {
+            scheme: SchemeKind::Rb, // FoldWait-gated: verdicts must keep coming
+            tol: 0.0,
+            max_iters: 200,
+            seed: 7,
+            machines: 4,
+            workers: 1,
+            collective: CollectiveKind::Tree,
+            max_staleness: 1,
+            silence_timeout: 8,
+            collective_timeout: 12,
+            fallback_after: 2,
+            ..Default::default()
+        },
+        plan,
+        quad_factory(12, 2, 51),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.counters.leaves, 1);
+    assert!(!report.live_machines[0]);
+    assert!(report
+        .trace
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Handoff { from: 0, to: 1 })),
+        "the departing root must serialize its tracker to machine 1");
+    assert!(report
+        .trace
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Deliver { what: "checker", .. })),
+        "the snapshot must be delivered, not migrated omnisciently");
+    assert_eq!(report.iterations, 200,
+               "the resumed tracker keeps committing every round");
+    let last = report.recorder.stats.last().unwrap();
+    assert!(last.max_primal < 5e-2, "survivor consensus, primal {}",
+            last.max_primal);
+}
+
 #[test]
 fn zero_round_budget_returns_theta0() {
     let sharded = ShardedRunner::new(

@@ -34,12 +34,21 @@
 //! updates followed by neighbour broadcast); [`crate::coordinator`] runs
 //! the same schedule on a sharded worker pool exchanging parameters
 //! through a double-buffered arena.
+//!
+//! The per-node arithmetic itself — solve, dual step, residuals, scheme
+//! update — is the shared [`crate::kernel::NodeKernel`] (one
+//! transcription for all four runtimes); this engine supplies the
+//! trivial policy instance: owned θ vectors, always-live slots, exact
+//! reads, and the flat node-order global fold
+//! ([`crate::kernel::FlatRound`]).
 
 pub mod solvers;
 
-use crate::graph::Graph;
-use crate::metrics::{ConvergenceChecker, IterStats, Recorder};
-use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind, SchemeParams};
+use crate::graph::{Graph, NodeId};
+use crate::kernel::{AppMetricHook, DualPolicy, FlatRound, KernelScratch,
+                    NodeKernel, SlotView, StopTracker};
+use crate::metrics::{IterStats, Recorder};
+use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
 /// A node's local optimization oracle.
@@ -178,38 +187,57 @@ pub struct RunReport {
     pub thetas: Vec<Vec<f64>>,
 }
 
+/// The engine's [`SlotView`]: neighbour θ is an owned `Vec` indexed by
+/// node id, always live, always exact (lag 0); incoming η is prefetched
+/// into a per-node scratch slice (the one place the engine needs
+/// cross-node kernel state while a kernel is mutably borrowed).
+struct EngineSlots<'a> {
+    nbrs: &'a [NodeId],
+    thetas: &'a [Vec<f64>],
+    eta_in: &'a [f64],
+}
+
+impl SlotView for EngineSlots<'_> {
+    fn live(&self, _slot: usize) -> bool {
+        true
+    }
+
+    fn theta(&mut self, slot: usize) -> (&[f64], u64) {
+        (&self.thetas[self.nbrs[slot]], 0)
+    }
+
+    fn theta_again(&mut self, slot: usize) -> &[f64] {
+        &self.thetas[self.nbrs[slot]]
+    }
+
+    fn eta_in(&mut self, slot: usize) -> f64 {
+        self.eta_in[slot]
+    }
+}
+
 /// The consensus engine (see module docs).
 pub struct Engine<S: LocalSolver> {
     graph: Graph,
     solvers: Vec<S>,
     cfg: EngineConfig,
     thetas: Vec<Vec<f64>>,
-    lambdas: Vec<Vec<f64>>,
-    /// per node, per neighbour-slot penalties η_ij
-    etas: Vec<Vec<f64>>,
-    schemes: Vec<Box<dyn PenaltyScheme>>,
+    /// per-node protocol state (λ, η, scheme, residual memory) — the
+    /// shared kernel owns the arithmetic. Crate-visible so the kernel's
+    /// golden-trace tests can diff λ/η bitwise against the frozen
+    /// pre-refactor transcription.
+    pub(crate) kernels: Vec<NodeKernel>,
     /// rev_slot[i][slot] = position of node i in neighbour j's adjacency
     /// list (for the symmetrized dual step; see module docs)
     rev_slot: Vec<Vec<usize>>,
-    nbr_mean_prev: Vec<Vec<f64>>,
-    global_mean_prev: Vec<f64>,
-    f_self_prev: Vec<f64>,
-    // reusable scratch (hot-loop allocation hygiene, see DESIGN.md §Perf):
-    // `step` allocates nothing in steady state
+    /// flat node-order global fold + stop state machine
+    flat: FlatRound,
+    tracker: StopTracker,
+    // reusable scratch (hot-loop allocation hygiene): `step` allocates
+    // nothing in steady state
     scratch_new_thetas: Vec<Vec<f64>>,
-    scratch_eta_wsum: Vec<f64>,
-    /// per-neighbour midpoint buffers, grown to max degree and reused
-    scratch_rhos: Vec<Vec<f64>>,
-    /// Σ_j η_ij per node, carried from the solve to the residual pass (the
-    /// sharded worker computes η̄ from the same sum — the engines must not
-    /// diverge, isolated nodes included)
-    scratch_eta_sums: Vec<f64>,
-    scratch_nbr_mean: Vec<f64>,
-    scratch_global_mean: Vec<f64>,
-    scratch_primal_norms: Vec<f64>,
-    scratch_dual_norms: Vec<f64>,
-    scratch_f_self: Vec<f64>,
-    scratch_f_nb: Vec<f64>,
+    kscratch: KernelScratch,
+    /// prefetched incoming η_{j→i} per slot (phase B)
+    scratch_eta_in: Vec<f64>,
 }
 
 impl<S: LocalSolver> Engine<S> {
@@ -229,11 +257,8 @@ impl<S: LocalSolver> Engine<S> {
             })
             .collect();
         let n = graph.len();
-        let schemes = (0..n)
-            .map(|i| make_scheme(cfg.scheme, cfg.params, graph.degree(i)))
-            .collect();
-        let etas = (0..n)
-            .map(|i| vec![cfg.params.eta0; graph.degree(i)])
+        let kernels = (0..n)
+            .map(|i| NodeKernel::new(cfg.scheme, cfg.params, graph.degree(i), dim))
             .collect();
         let rev_slot = (0..n)
             .map(|i| {
@@ -247,22 +272,13 @@ impl<S: LocalSolver> Engine<S> {
         let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
         Engine {
             rev_slot,
-            lambdas: vec![vec![0.0; dim]; n],
-            nbr_mean_prev: vec![vec![0.0; dim]; n],
-            global_mean_prev: vec![0.0; dim],
-            f_self_prev: vec![f64::INFINITY; n],
+            kernels,
+            flat: FlatRound::new(dim),
+            tracker: StopTracker::new(dim, cfg.tol, cfg.patience, cfg.warmup,
+                                      cfg.max_iters, cfg.params.eta0),
             scratch_new_thetas: vec![vec![0.0; dim]; n],
-            scratch_eta_wsum: vec![0.0; dim],
-            scratch_rhos: vec![vec![0.0; dim]; max_deg],
-            scratch_eta_sums: vec![0.0; n],
-            scratch_nbr_mean: vec![0.0; dim],
-            scratch_global_mean: vec![0.0; dim],
-            scratch_primal_norms: vec![0.0; n],
-            scratch_dual_norms: vec![0.0; n],
-            scratch_f_self: vec![0.0; n],
-            scratch_f_nb: Vec::with_capacity(max_deg),
-            etas,
-            schemes,
+            kscratch: KernelScratch::new(dim, max_deg),
+            scratch_eta_in: vec![0.0; max_deg],
             thetas,
             solvers,
             graph,
@@ -275,9 +291,11 @@ impl<S: LocalSolver> Engine<S> {
         &self.thetas
     }
 
-    /// Current per-node out-edge penalties (neighbour-slot order).
-    pub fn etas(&self) -> &[Vec<f64>] {
-        &self.etas
+    /// Current per-node out-edge penalties (neighbour-slot order), one
+    /// borrowed slice per node — no materialization, the state lives in
+    /// the per-node kernels.
+    pub fn etas(&self) -> impl Iterator<Item = &[f64]> + '_ {
+        self.kernels.iter().map(|kn| kn.etas.as_slice())
     }
 
     pub fn graph(&self) -> &Graph {
@@ -294,192 +312,101 @@ impl<S: LocalSolver> Engine<S> {
     /// [`IterStats::app_error`] (the paper's plotted subspace angle).
     pub fn run_with(&mut self, mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64)
                     -> RunReport {
-        let mut recorder = Recorder::with_capacity(self.cfg.max_iters);
-        let mut checker = ConvergenceChecker::new(self.cfg.tol)
-            .with_patience(self.cfg.patience)
-            .with_warmup(self.cfg.warmup);
-        let mut converged = false;
-        let mut iterations = 0;
+        self.tracker.reset_run();
         for t in 0..self.cfg.max_iters {
             let stats = self.step(t, &mut app_metric);
-            let objective = stats.objective;
-            recorder.push(stats);
-            iterations = t + 1;
-            if checker.update(objective) {
-                converged = true;
+            if self.tracker.commit(t, stats) {
                 break;
             }
         }
         RunReport {
-            iterations,
-            converged,
-            recorder,
+            iterations: self.tracker.iterations,
+            converged: self.tracker.converged,
+            recorder: self.tracker.take_recorder(),
             thetas: self.thetas.clone(),
         }
     }
 
+    /// Run with the unified [`AppMetricHook`] surface (liveness is
+    /// trivially all-true in the synchronous engine).
+    pub fn run_hooked(&mut self, hook: &mut dyn AppMetricHook) -> RunReport {
+        let live = vec![true; self.graph.len()];
+        self.run_with(move |t, thetas| hook.measure(t, thetas, &live))
+    }
+
     /// One full ADMM iteration; public so the benches can drive the hot
-    /// loop directly.
+    /// loop directly. Every block is one kernel call — the engine only
+    /// sequences phases and swaps buffers.
     pub fn step(&mut self, t: usize,
                 app_metric: &mut impl FnMut(usize, &[Vec<f64>]) -> f64) -> IterStats {
         let n = self.graph.len();
-        let dim = self.thetas[0].len();
 
-        // ---- local solves (Jacobi: all nodes see iteration-t neighbours) --
+        // ---- phase A: local solves (Jacobi: all nodes see iteration-t
+        // neighbours); θ^{t+1} lands in the swap buffer ---------------------
         for i in 0..n {
-            let mut eta_sum = 0.0;
-            self.scratch_eta_wsum.iter_mut().for_each(|x| *x = 0.0);
-            for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
-                let eta = self.etas[i][slot];
-                eta_sum += eta;
-                let ti = &self.thetas[i];
-                let tj = &self.thetas[j];
-                for k in 0..dim {
-                    self.scratch_eta_wsum[k] += eta * (ti[k] + tj[k]);
-                }
-            }
-            self.scratch_eta_sums[i] = eta_sum;
-            self.solvers[i].solve_into(
-                &self.thetas[i], &self.lambdas[i], eta_sum,
-                &self.scratch_eta_wsum, &mut self.scratch_new_thetas[i]);
+            let mut view = EngineSlots {
+                nbrs: self.graph.neighbors(i),
+                thetas: &self.thetas,
+                eta_in: &[],
+            };
+            self.kernels[i].solve_into(
+                &mut self.solvers[i], &self.thetas[i], self.graph.degree(i),
+                &mut view, &mut self.kscratch, &mut self.scratch_new_thetas[i]);
         }
 
         // ---- broadcast -----------------------------------------------------
         std::mem::swap(&mut self.thetas, &mut self.scratch_new_thetas);
 
-        // ---- multiplier updates: λ_i += ½ Σ_j η̄_ij (θ_i − θ_j) ------------
-        // (η̄ = edge-mean penalty — see module docs on dual symmetrization)
+        // ---- phase B: symmetrized dual step + residuals + objectives -------
+        // (η̄ = edge-mean penalty — see module docs on dual symmetrization;
+        // the incoming η_{j→i} are prefetched so the kernel borrow stays
+        // node-local)
         for i in 0..n {
+            let deg = self.graph.degree(i);
             for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
-                let eta = 0.5 * (self.etas[i][slot] + self.etas[j][self.rev_slot[i][slot]]);
-                let (ti, tj) = (&self.thetas[i], &self.thetas[j]);
-                let li = &mut self.lambdas[i];
-                for k in 0..dim {
-                    li[k] += 0.5 * eta * (ti[k] - tj[k]);
-                }
+                self.scratch_eta_in[slot] =
+                    self.kernels[j].etas[self.rev_slot[i][slot]];
             }
-        }
-
-        // ---- residuals (paper eq. 5) ---------------------------------------
-        let mut max_primal: f64 = 0.0;
-        let mut max_dual: f64 = 0.0;
-        for i in 0..n {
-            let inv_deg = 1.0 / self.graph.degree(i).max(1) as f64;
-            self.scratch_nbr_mean.iter_mut().for_each(|x| *x = 0.0);
-            for &j in self.graph.neighbors(i) {
-                for k in 0..dim {
-                    self.scratch_nbr_mean[k] += self.thetas[j][k];
-                }
-            }
-            self.scratch_nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
-            // η̄ exactly as the sharded worker derives it (Σ_j η_ij · 1/deg,
-            // hence 0 for an isolated node): the recorded dual-residual
-            // observations must be identical across the two runtimes
-            let eta_bar = self.scratch_eta_sums[i] * inv_deg;
-            let mut r2 = 0.0;
-            let mut s2 = 0.0;
-            for k in 0..dim {
-                let r = self.thetas[i][k] - self.scratch_nbr_mean[k];
-                let s = eta_bar * (self.scratch_nbr_mean[k] - self.nbr_mean_prev[i][k]);
-                r2 += r * r;
-                s2 += s * s;
-            }
-            self.scratch_primal_norms[i] = r2.sqrt();
-            self.scratch_dual_norms[i] = s2.sqrt();
-            max_primal = max_primal.max(self.scratch_primal_norms[i]);
-            max_dual = max_dual.max(self.scratch_dual_norms[i]);
-            self.nbr_mean_prev[i].copy_from_slice(&self.scratch_nbr_mean);
-        }
-
-        // ---- global residuals (for the RB reference scheme) ----------------
-        self.scratch_global_mean.iter_mut().for_each(|x| *x = 0.0);
-        for th in &self.thetas {
-            for k in 0..dim {
-                self.scratch_global_mean[k] += th[k];
-            }
-        }
-        self.scratch_global_mean.iter_mut().for_each(|x| *x /= n as f64);
-        let mut gr2 = 0.0;
-        for th in &self.thetas {
-            for k in 0..dim {
-                let d = th[k] - self.scratch_global_mean[k];
-                gr2 += d * d;
-            }
-        }
-        let mut gs2 = 0.0;
-        for k in 0..dim {
-            let d = self.scratch_global_mean[k] - self.global_mean_prev[k];
-            gs2 += d * d;
-        }
-        let eta_global = self.cfg.params.eta0;
-        let global_primal = gr2.sqrt();
-        let global_dual = eta_global * (n as f64).sqrt() * gs2.sqrt();
-        self.global_mean_prev.copy_from_slice(&self.scratch_global_mean);
-
-        // ---- objectives ------------------------------------------------------
-        let mut objective = 0.0;
-        for i in 0..n {
-            let f = self.solvers[i].objective(&self.thetas[i]);
-            self.scratch_f_self[i] = f;
-            objective += f;
-        }
-
-        // ---- η stats (over the η^t used by this iteration's solves) ---------
-        // computed *before* the scheme updates so the recorded curves mean
-        // the same thing in both runtimes (the sharded leader folds η
-        // statistics in phase B, before phase C updates them)
-        let (mut min_eta, mut max_eta, mut sum_eta, mut cnt) =
-            (f64::INFINITY, 0.0f64, 0.0, 0usize);
-        for e in self.etas.iter().flatten() {
-            min_eta = min_eta.min(*e);
-            max_eta = max_eta.max(*e);
-            sum_eta += *e;
-            cnt += 1;
-        }
-
-        // ---- penalty scheme updates (the paper's contribution) --------------
-        for i in 0..n {
-            self.scratch_f_nb.clear();
-            if self.schemes[i].needs_neighbor_objectives() {
-                // evaluate f_i at every ρ_ij = (θ_i + θ_j)/2 in one batched
-                // call — the paper uses the bridge estimate instead of θ_j
-                // to retain locality
-                let deg = self.graph.degree(i);
-                for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
-                    let rho = &mut self.scratch_rhos[slot];
-                    for k in 0..dim {
-                        rho[k] = 0.5 * (self.thetas[i][k] + self.thetas[j][k]);
-                    }
-                }
-                self.solvers[i]
-                    .objective_batch_into(&self.scratch_rhos[..deg], &mut self.scratch_f_nb);
-            } else {
-                self.scratch_f_nb.resize(self.graph.degree(i), 0.0);
-            }
-            let obs = NodeObservation {
-                t,
-                primal_norm: self.scratch_primal_norms[i],
-                dual_norm: self.scratch_dual_norms[i],
-                global_primal,
-                global_dual,
-                f_self: self.scratch_f_self[i],
-                f_self_prev: self.f_self_prev[i],
-                f_neighbors: &self.scratch_f_nb,
-                live: None,
+            let mut view = EngineSlots {
+                nbrs: self.graph.neighbors(i),
+                thetas: &self.thetas,
+                eta_in: &self.scratch_eta_in,
             };
-            self.schemes[i].update(&obs, &mut self.etas[i]);
-            self.f_self_prev[i] = self.scratch_f_self[i];
+            self.kernels[i].reduce(
+                &mut self.solvers[i], &self.thetas[i], deg, &mut view,
+                DualPolicy::exact(), &mut self.kscratch);
+        }
+
+        // ---- flat global fold (node order — the oracle arithmetic the
+        // async runtime diffs against); η stats cover the η^t used by this
+        // iteration's solves, *before* phase C updates them ------------------
+        self.flat.begin();
+        for kn in &self.kernels {
+            self.flat.add_node(kn.f_self, kn.primal, kn.dual, &kn.etas);
+        }
+        for th in &self.thetas {
+            self.flat.add_theta(th);
+        }
+        self.flat.finish_mean();
+        for th in &self.thetas {
+            self.flat.add_spread(th);
+        }
+        let g = self.tracker.round_flat(&self.flat);
+
+        // ---- phase C: penalty scheme updates (the paper's contribution) ----
+        for i in 0..n {
+            self.kernels[i].observe(t, (g.global_primal, g.global_dual), None);
         }
 
         // ---- stats -----------------------------------------------------------
         IterStats {
             iter: t,
-            objective,
-            max_primal,
-            max_dual,
-            mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
-            min_eta: if cnt == 0 { 0.0 } else { min_eta },
-            max_eta,
+            objective: g.objective,
+            max_primal: g.max_primal,
+            max_dual: g.max_dual,
+            mean_eta: g.mean_eta,
+            min_eta: g.min_eta,
+            max_eta: g.max_eta,
             app_error: app_metric(t, &self.thetas),
         }
     }

@@ -124,7 +124,7 @@ fn multipliers_sum_to_zero_under_fixed_penalty() {
         engine.step(t, &mut |_, _| 0.0);
         let dim = engine.thetas()[0].len();
         for k in 0..dim {
-            let total: f64 = engine.lambdas.iter().map(|l| l[k]).sum();
+            let total: f64 = engine.kernels.iter().map(|kn| kn.lambda[k]).sum();
             assert!(total.abs() < 1e-8, "Σλ[{k}] = {total} at t={t}");
         }
     }

@@ -17,6 +17,7 @@ use super::shard::{worker_main, LeadOutcome, LeadState, ShardPartial, WorkerCtx,
 use crate::consensus::LocalSolver;
 use crate::error::{Error, Result};
 use crate::graph::{rcm_order, relabel_graph, shard_ranges, Graph, NodeId, Relabel};
+use crate::kernel::AppMetricHook;
 use crate::metrics::Recorder;
 use crate::penalty::{SchemeKind, SchemeParams};
 
@@ -130,17 +131,32 @@ impl ShardedRunner {
     /// worker once per iteration with `(iteration, thetas)`; its return
     /// value lands in [`crate::metrics::IterStats::app_error`]. The θ
     /// snapshot is copied into a buffer reused across iterations.
+    /// (Liveness is trivially all-true here; see [`ShardedRunner::run_hooked`]
+    /// for the unified three-argument surface.)
     pub fn run_with<S>(&self, factory: SolverFactory<S>,
                        mut app_metric: impl FnMut(usize, &[Vec<f64>]) -> f64 + Send)
                        -> Result<RunnerReport>
     where
         S: LocalSolver,
     {
-        self.run_impl(factory, Some(&mut app_metric))
+        let mut hook =
+            move |t: usize, thetas: &[Vec<f64>], _live: &[bool]| app_metric(t, thetas);
+        self.run_impl(factory, Some(&mut hook))
+    }
+
+    /// Run with the unified [`AppMetricHook`] surface shared by all four
+    /// runtimes (the leader passes all-true liveness).
+    pub fn run_hooked<S>(&self, factory: SolverFactory<S>,
+                         mut hook: impl AppMetricHook + Send)
+                         -> Result<RunnerReport>
+    where
+        S: LocalSolver,
+    {
+        self.run_impl(factory, Some(&mut hook))
     }
 
     fn run_impl<S>(&self, factory: SolverFactory<S>,
-                   metric: Option<&mut (dyn FnMut(usize, &[Vec<f64>]) -> f64 + Send)>)
+                   metric: Option<&mut (dyn AppMetricHook + Send)>)
                    -> Result<RunnerReport>
     where
         S: LocalSolver,
@@ -194,7 +210,7 @@ impl ShardedRunner {
             cfg: self.cfg,
         };
 
-        let mut lead_slot = Some(LeadState::new(&self.cfg, metric));
+        let mut lead_slot = Some(LeadState::new(&self.cfg, dim, metric));
         let mut results: Vec<std::result::Result<Option<LeadOutcome>, WorkerError>> =
             Vec::with_capacity(workers);
         std::thread::scope(|s| {

@@ -3,8 +3,11 @@
 //! fold → barrier → phase C (penalty-scheme update + η publish).
 //!
 //! See [`super`] (the coordinator module docs) for the full schedule and
-//! the determinism argument. Everything here is crate-private; the public
-//! surface is [`super::runner::ShardedRunner`].
+//! the determinism argument. The per-node arithmetic is the shared
+//! [`crate::kernel::NodeKernel`]; this file supplies the arena-backed
+//! [`SlotView`] (zero-copy parity-disciplined reads), the barrier
+//! schedule, and the per-shard [`StatPartial`] reduction. Everything here
+//! is crate-private; the public surface is [`super::runner::ShardedRunner`].
 
 use std::ops::Range;
 use std::sync::Mutex;
@@ -15,13 +18,13 @@ use super::messages::Verdict;
 use super::runner::{ShardedConfig, SolverFactory};
 use crate::consensus::LocalSolver;
 use crate::graph::{Graph, NodeId};
-use crate::metrics::{ConvergenceChecker, IterStats, Recorder, RunningFold,
-                     StatPartial};
-use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme};
+use crate::kernel::{AppMetricHook, DualPolicy, KernelScratch, NodeKernel,
+                    SlotView, StopTracker};
+use crate::metrics::{IterStats, Recorder, StatPartial};
 use crate::util::rng::Pcg;
 
-/// Application-metric callback threaded into the leader worker.
-pub(crate) type AppMetric<'m> = &'m mut (dyn FnMut(usize, &[Vec<f64>]) -> f64 + Send);
+/// Application-metric hook threaded into the leader worker.
+pub(crate) type AppMetric<'m> = &'m mut (dyn AppMetricHook + Send);
 
 /// Why a worker stopped without a result.
 #[derive(Debug)]
@@ -56,32 +59,24 @@ pub(crate) struct WorkerCtx<'a> {
 /// [`StatPartial`]; this alias keeps the coordinator's vocabulary.
 pub(crate) type ShardPartial = StatPartial;
 
-/// Leader-only state (worker 0): convergence tracking, the recorder, the
-/// global-residual memory and the reusable θ snapshot for the app metric.
+/// Leader-only state (worker 0): the shared stop state machine plus the
+/// reusable θ snapshot for the app metric.
 pub(crate) struct LeadState<'m> {
-    checker: ConvergenceChecker,
-    recorder: Recorder,
-    global_mean_prev: Option<Vec<f64>>,
-    fold: RunningFold,
+    tracker: StopTracker,
     metric: Option<AppMetric<'m>>,
     snapshot: Vec<Vec<f64>>,
-    iterations: usize,
-    converged: bool,
+    live: Vec<bool>,
 }
 
 impl<'m> LeadState<'m> {
-    pub(crate) fn new(cfg: &ShardedConfig, metric: Option<AppMetric<'m>>) -> LeadState<'m> {
+    pub(crate) fn new(cfg: &ShardedConfig, dim: usize,
+                      metric: Option<AppMetric<'m>>) -> LeadState<'m> {
         LeadState {
-            checker: ConvergenceChecker::new(cfg.tol)
-                .with_patience(cfg.patience)
-                .with_warmup(cfg.warmup),
-            recorder: Recorder::with_capacity(cfg.max_iters),
-            global_mean_prev: None,
-            fold: RunningFold::new(0), // gmean sized lazily at first fold
+            tracker: StopTracker::new(dim, cfg.tol, cfg.patience, cfg.warmup,
+                                      cfg.max_iters, cfg.params.eta0),
             metric,
             snapshot: Vec::new(),
-            iterations: 0,
-            converged: false,
+            live: Vec::new(),
         }
     }
 }
@@ -94,33 +89,50 @@ pub(crate) struct LeadOutcome {
 }
 
 /// Per-node state owned by exactly one worker. θ itself lives only in the
-/// arena (zero-copy); everything here is private to the node.
+/// arena (zero-copy); λ/η/scheme state lives in the shared protocol
+/// kernel.
 struct NodeState<S> {
     id: NodeId,
     solver: S,
-    scheme: Box<dyn PenaltyScheme>,
-    /// out-edge penalties η_{i→j}, neighbour-slot order (working copy;
-    /// published to the arena at the end of each iteration)
-    etas: Vec<f64>,
-    lambda: Vec<f64>,
-    nbr_mean_prev: Vec<f64>,
+    kernel: NodeKernel,
     /// flat η-arena index of the *incoming* penalty η_{j→i} per slot
     in_eta_idx: Vec<usize>,
-    /// reused neighbour-objective buffer (AP/NAP schemes)
-    f_nb: Vec<f64>,
-    f_self_prev: f64,
-    // carried from phase A/B to phase C within one iteration
-    eta_sum: f64,
-    f_self: f64,
-    primal: f64,
-    dual: f64,
 }
 
-/// Worker-local scratch, reused across nodes and iterations.
-struct Scratch {
-    eta_wsum: Vec<f64>,
-    nbr_mean: Vec<f64>,
-    rhos: Vec<Vec<f64>>,
+/// The coordinator's [`SlotView`]: always-live slots, exact (lag-0)
+/// zero-copy reads out of the parity-disciplined arena.
+///
+/// Safety of the unsafe reads: phase A reads only parity-`theta_parity`
+/// θ (no writers during the phase) and phase B reads the post-barrier
+/// parity-q θ plus the stable parity-p η — the coordinator's aliasing
+/// discipline, unchanged (see [`super`] module docs).
+struct ArenaSlots<'a> {
+    arena: &'a ParamArena,
+    nbrs: &'a [NodeId],
+    theta_parity: usize,
+    eta_parity: usize,
+    in_eta_idx: &'a [usize],
+}
+
+impl SlotView for ArenaSlots<'_> {
+    fn live(&self, _slot: usize) -> bool {
+        true
+    }
+
+    fn theta(&mut self, slot: usize) -> (&[f64], u64) {
+        // Safety: see type docs.
+        (unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }, 0)
+    }
+
+    fn theta_again(&mut self, slot: usize) -> &[f64] {
+        // Safety: see type docs.
+        unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }
+    }
+
+    fn eta_in(&mut self, slot: usize) -> f64 {
+        // Safety: see type docs.
+        unsafe { self.arena.eta(self.eta_parity, self.in_eta_idx[slot]) }
+    }
 }
 
 /// The worker body. `widx` is the shard index; worker 0 carries the
@@ -149,12 +161,12 @@ pub(crate) fn worker_main<S: LocalSolver>(
         let mut rng = Pcg::new(cfg.seed, orig as u64 + 1);
         let theta0 = solver.initial_param(&mut rng);
         assert_eq!(theta0.len(), dim);
-        let etas = vec![cfg.params.eta0; deg];
+        let kernel = NodeKernel::new(cfg.scheme, cfg.params, deg, dim);
         // Safety: we own node i; parity 0 is the pre-loop write buffer and
         // nobody reads it before the init barrier below.
         unsafe {
             ctx.arena.theta_mut(0, i).copy_from_slice(&theta0);
-            ctx.arena.eta_out_mut(0, i).copy_from_slice(&etas);
+            ctx.arena.eta_out_mut(0, i).copy_from_slice(&kernel.etas);
         }
         let in_eta_idx = ctx
             .graph
@@ -165,27 +177,9 @@ pub(crate) fn worker_main<S: LocalSolver>(
                 ctx.arena.eta_index(j, slot)
             })
             .collect();
-        nodes.push(NodeState {
-            id: i,
-            solver,
-            scheme: make_scheme(cfg.scheme, cfg.params, deg),
-            etas,
-            lambda: vec![0.0; dim],
-            nbr_mean_prev: vec![0.0; dim],
-            in_eta_idx,
-            f_nb: vec![0.0; deg],
-            f_self_prev: f64::INFINITY,
-            eta_sum: 0.0,
-            f_self: 0.0,
-            primal: 0.0,
-            dual: 0.0,
-        });
+        nodes.push(NodeState { id: i, solver, kernel, in_eta_idx });
     }
-    let mut scratch = Scratch {
-        eta_wsum: vec![0.0; dim],
-        nbr_mean: vec![0.0; dim],
-        rhos: vec![vec![0.0; dim]; max_deg],
-    };
+    let mut scratch = KernelScratch::new(dim, max_deg);
     let mut partial = ShardPartial::new(dim);
 
     // everyone's θ⁰/η⁰ must be visible before the first solve
@@ -198,27 +192,21 @@ pub(crate) fn worker_main<S: LocalSolver>(
         // ---- phase A: local solves on epoch-t parameters ------------------
         for st in &mut nodes {
             // Safety: phase A reads only parity-p θ (no writers this phase)
-            // and writes only our own parity-q block.
+            // and writes only our own parity-q block; solve_into overwrites
+            // the block in full, so stale θ^{t−1} contents are never
+            // observable.
             let theta_t = unsafe { ctx.arena.theta(p, st.id) };
-            let mut eta_sum = 0.0;
-            scratch.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
-            for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
-                let e = st.etas[slot];
-                eta_sum += e;
-                let tj = unsafe { ctx.arena.theta(p, j) };
-                for k in 0..dim {
-                    scratch.eta_wsum[k] += e * (theta_t[k] + tj[k]);
-                }
-            }
-            st.eta_sum = eta_sum;
-            // Safety: we own st.id and parity-q is this phase's write
-            // buffer; nobody reads it before the epoch-swap barrier, and
-            // it aliases nothing the solver can see (θ^t lives in the
-            // opposite-parity buffer). solve_into overwrites the block in
-            // full, so stale θ^{t−1} contents are never observable.
+            let mut view = ArenaSlots {
+                arena: ctx.arena,
+                nbrs: ctx.graph.neighbors(st.id),
+                theta_parity: p,
+                eta_parity: p,
+                in_eta_idx: &st.in_eta_idx,
+            };
             let theta_next = unsafe { ctx.arena.theta_mut(q, st.id) };
-            st.solver.solve_into(theta_t, &st.lambda, eta_sum,
-                                 &scratch.eta_wsum, theta_next);
+            st.kernel.solve_into(&mut st.solver, theta_t,
+                                 ctx.graph.degree(st.id), &mut view,
+                                 &mut scratch, theta_next);
         }
         ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // epoch swap
 
@@ -230,87 +218,28 @@ pub(crate) fn worker_main<S: LocalSolver>(
             // and no worker writes θ until the next phase A; η parity-p is
             // stable until phase C writes parity-q.
             let th_new = unsafe { ctx.arena.theta(q, st.id) };
-
-            // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), η̄ the edge-mean penalty
-            for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
-                let eta_in = unsafe { ctx.arena.eta(p, st.in_eta_idx[slot]) };
-                let eta_bar = 0.5 * (st.etas[slot] + eta_in);
-                let tj = unsafe { ctx.arena.theta(q, j) };
-                for k in 0..dim {
-                    st.lambda[k] += 0.5 * eta_bar * (th_new[k] - tj[k]);
-                }
-            }
-
-            // local residuals (paper eq. 5)
-            scratch.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
-            for &j in ctx.graph.neighbors(st.id) {
-                let tj = unsafe { ctx.arena.theta(q, j) };
-                for k in 0..dim {
-                    scratch.nbr_mean[k] += tj[k];
-                }
-            }
-            let inv_deg = 1.0 / deg.max(1) as f64;
-            scratch.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
-            let eta_bar_node = st.eta_sum * inv_deg;
-            let mut r2 = 0.0;
-            let mut s2 = 0.0;
-            for k in 0..dim {
-                let r = th_new[k] - scratch.nbr_mean[k];
-                let s = eta_bar_node * (scratch.nbr_mean[k] - st.nbr_mean_prev[k]);
-                r2 += r * r;
-                s2 += s * s;
-            }
-            st.nbr_mean_prev.copy_from_slice(&scratch.nbr_mean);
-            st.primal = r2.sqrt();
-            st.dual = s2.sqrt();
-
-            // objectives (f at bridge midpoints only if the scheme asks)
-            st.f_self = st.solver.objective(th_new);
-            if st.scheme.needs_neighbor_objectives() {
-                for (slot, &j) in ctx.graph.neighbors(st.id).iter().enumerate() {
-                    let tj = unsafe { ctx.arena.theta(q, j) };
-                    let rho = &mut scratch.rhos[slot];
-                    for k in 0..dim {
-                        rho[k] = 0.5 * (th_new[k] + tj[k]);
-                    }
-                }
-                st.solver.objective_batch_into(&scratch.rhos[..deg], &mut st.f_nb);
-            }
+            let mut view = ArenaSlots {
+                arena: ctx.arena,
+                nbrs: ctx.graph.neighbors(st.id),
+                theta_parity: q,
+                eta_parity: p,
+                in_eta_idx: &st.in_eta_idx,
+            };
+            st.kernel.reduce(&mut st.solver, th_new, deg, &mut view,
+                             DualPolicy::exact(), &mut scratch);
 
             // shard-local reduction, node order = sequential order
-            partial.f_sum += st.f_self;
-            partial.max_primal = partial.max_primal.max(st.primal);
-            partial.max_dual = partial.max_dual.max(st.dual);
-            for &e in &st.etas {
-                partial.eta_min = partial.eta_min.min(e);
-                partial.eta_max = partial.eta_max.max(e);
-                partial.eta_sum += e;
-            }
-            partial.eta_count += deg;
-            for k in 0..dim {
-                partial.theta_sum[k] += th_new[k];
-            }
+            partial.absorb_node(st.kernel.f_self, st.kernel.primal,
+                                st.kernel.dual, &st.kernel.etas, th_new);
         }
         // second shard-local pass over parity-q: spread about the *shard*
-        // mean. Centering here (instead of folding raw Σ‖θ‖²) keeps the
-        // leader's combined global residual accurate at any ‖θ‖ scale —
-        // the subtraction a raw sum-of-squares needs cancels
-        // catastrophically once ‖θ‖² ≫ spread.
-        partial.node_count = nodes.len();
-        if !nodes.is_empty() {
-            let inv_count = 1.0 / nodes.len() as f64;
-            for k in 0..dim {
-                scratch.nbr_mean[k] = partial.theta_sum[k] * inv_count;
-            }
-            for st in &nodes {
-                // Safety: parity-q θ is stable throughout phase B.
-                let th = unsafe { ctx.arena.theta(q, st.id) };
-                for k in 0..dim {
-                    let d = th[k] - scratch.nbr_mean[k];
-                    partial.centered_sq += d * d;
-                }
-            }
-        }
+        // mean (the centered statistic the leader's Chan-style fold needs).
+        // Safety: parity-q θ is stable throughout phase B.
+        partial.finish_centered(
+            nodes.len(),
+            nodes.iter().map(|st| unsafe { ctx.arena.theta(q, st.id) }),
+            &mut scratch.nbr_mean,
+        );
         {
             let mut slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
             partial.store_into(&mut slots[widx]);
@@ -331,79 +260,41 @@ pub(crate) fn worker_main<S: LocalSolver>(
 
         // ---- phase C: penalty-scheme updates + publish η^{t+1} ------------
         for st in &mut nodes {
-            let obs = NodeObservation {
-                t,
-                primal_norm: st.primal,
-                dual_norm: st.dual,
-                global_primal: verdict.global_primal,
-                global_dual: verdict.global_dual,
-                f_self: st.f_self,
-                f_self_prev: st.f_self_prev,
-                f_neighbors: &st.f_nb,
-                live: None,
-            };
-            st.scheme.update(&obs, &mut st.etas);
-            st.f_self_prev = st.f_self;
+            st.kernel.observe(t, (verdict.global_primal, verdict.global_dual),
+                              None);
             // Safety: we own node st.id; parity-q η is the write buffer
             // until the next iteration's post-solve barrier.
-            unsafe { ctx.arena.eta_out_mut(q, st.id) }.copy_from_slice(&st.etas);
+            unsafe { ctx.arena.eta_out_mut(q, st.id) }
+                .copy_from_slice(&st.kernel.etas);
         }
     }
 
-    Ok(lead.map(|l| LeadOutcome {
-        iterations: l.iterations,
-        converged: l.converged,
-        recorder: l.recorder,
+    Ok(lead.map(|l| {
+        let mut tracker = l.tracker;
+        LeadOutcome {
+            iterations: tracker.iterations,
+            converged: tracker.converged,
+            recorder: tracker.take_recorder(),
+        }
     }))
 }
 
-/// The leader's fold: combine the W shard partials (in shard order),
-/// derive global residuals from their sufficient statistics, run the app
-/// metric + convergence check and publish the iteration verdict. Runs
-/// between the post-stats and post-verdict barriers.
-///
-/// O(W·dim + dim) — the fold never touches per-node state. The global
-/// primal residual `Σᵢ‖θᵢ − ḡ‖²` comes from the per-shard *centered*
-/// statistics (n_s, Σθ, Σ‖θ − m_s‖²) combined in shard order with Chan
-/// et al.'s pairwise update, which stays accurate at any ‖θ‖ scale (a
-/// raw Σ‖θ‖² − n‖ḡ‖² subtraction loses all precision once ‖θ‖² ≫
-/// spread). Only the on-demand app-metric snapshot still reads the
-/// parity-`q` arena.
+/// The leader's fold: combine the W shard partials (in shard order)
+/// through the shared [`StopTracker`] — the Chan-style centered
+/// combination and the stop decision both live in [`crate::kernel`] now —
+/// then run the app metric and publish the iteration verdict. Runs
+/// between the post-stats and post-verdict barriers. O(W·dim + dim);
+/// only the on-demand app-metric snapshot still reads the parity-`q`
+/// arena.
 fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
     let n = ctx.graph.len();
     let dim = ctx.arena.dim();
 
-    if lead.fold.gmean.len() != dim {
-        lead.fold.gmean.resize(dim, 0.0);
-    }
-    lead.fold.reset();
-    {
+    let g = {
         let slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
-        for part in slots.iter() {
-            lead.fold.absorb(part);
-        }
-    }
-    debug_assert_eq!(lead.fold.agg_n, n, "every node folded exactly once");
-    let objective = lead.fold.objective;
-    let gr2 = lead.fold.gr2.max(0.0);
-    // like the Engine, the previous global mean starts at zero (so the
-    // t = 0 dual is finite and the Rb trajectory matches the oracle)
-    let gs2 = match &lead.global_mean_prev {
-        Some(prev) => lead
-            .fold
-            .gmean
-            .iter()
-            .zip(prev)
-            .map(|(a, b)| (a - b) * (a - b))
-            .sum::<f64>(),
-        None => lead.fold.gmean.iter().map(|a| a * a).sum::<f64>(),
+        lead.tracker.round_partials(slots.iter())
     };
-    let global_dual = ctx.cfg.params.eta0 * (n as f64).sqrt() * gs2.sqrt();
-    if let Some(prev) = lead.global_mean_prev.as_mut() {
-        prev.copy_from_slice(&lead.fold.gmean);
-    } else {
-        lead.global_mean_prev = Some(lead.fold.gmean.clone());
-    }
+    debug_assert_eq!(g.folded_nodes, n, "every node folded exactly once");
 
     // app metric: θ materialized (into a reused snapshot) only on demand,
     // indexed by *original* node id so relabeling stays invisible
@@ -412,6 +303,9 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
             if lead.snapshot.len() != n {
                 lead.snapshot = vec![vec![0.0; dim]; n];
             }
+            if lead.live.len() != n {
+                lead.live = vec![true; n];
+            }
             // Safety: between the post-stats and post-verdict barriers no
             // worker writes parity-q θ.
             let all = unsafe { ctx.arena.theta_all(q) };
@@ -419,33 +313,25 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
                 lead.snapshot[ctx.order[i]]
                     .copy_from_slice(&all[i * dim..(i + 1) * dim]);
             }
-            metric(t, &lead.snapshot)
+            metric.measure(t, &lead.snapshot, &lead.live)
         }
         None => 0.0,
     };
 
-    lead.recorder.push(IterStats {
+    let stop = lead.tracker.commit(t, IterStats {
         iter: t,
-        objective,
-        max_primal: lead.fold.max_primal,
-        max_dual: lead.fold.max_dual,
-        mean_eta: lead.fold.mean_eta(),
-        min_eta: lead.fold.min_eta(),
-        max_eta: lead.fold.eta_max,
+        objective: g.objective,
+        max_primal: g.max_primal,
+        max_dual: g.max_dual,
+        mean_eta: g.mean_eta,
+        min_eta: g.min_eta,
+        max_eta: g.max_eta,
         app_error,
     });
-    lead.iterations = t + 1;
-    // Engine semantics: converged iff the checker fired, even when that
-    // happens exactly on the final iteration
-    let hit = lead.checker.update(objective);
-    if hit {
-        lead.converged = true;
-    }
-    let stop = hit || t + 1 == ctx.cfg.max_iters;
     *ctx.verdict.lock().unwrap_or_else(|e| e.into_inner()) = Verdict {
         t,
         stop,
-        global_primal: gr2.sqrt(),
-        global_dual,
+        global_primal: g.global_primal,
+        global_dual: g.global_dual,
     };
 }

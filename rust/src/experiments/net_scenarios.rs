@@ -38,6 +38,8 @@ pub struct Scenario {
     pub silence_timeout: u64,
     /// lag-aware λ damping (the `stale3_damped` comparison cell)
     pub lag_damping: bool,
+    /// skip-λ-on-fallback (the `stale3_skip` comparison cell)
+    pub skip_lambda: bool,
 }
 
 /// Sweep configuration.
@@ -87,6 +89,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 0,
             silence_timeout: 64,
             lag_damping: false,
+            skip_lambda: false,
         },
         Scenario {
             name: "latency",
@@ -97,6 +100,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 1,
             silence_timeout: 32,
             lag_damping: false,
+            skip_lambda: false,
         },
         Scenario {
             name: "loss10",
@@ -104,6 +108,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 1,
             silence_timeout: 16,
             lag_damping: false,
+            skip_lambda: false,
         },
         Scenario {
             name: "loss30",
@@ -111,6 +116,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 1,
             silence_timeout: 16,
             lag_damping: false,
+            skip_lambda: false,
         },
         // deliberately past the stability boundary: three rounds of
         // systematic read lag destabilize the dual accumulation (the
@@ -124,6 +130,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 3,
             silence_timeout: 16,
             lag_damping: false,
+            skip_lambda: false,
         },
         // the same over-budget cell with lag-aware λ damping: each stale
         // dual step is scaled by 1/(1+lag), so the comparison against
@@ -135,6 +142,20 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 3,
             silence_timeout: 16,
             lag_damping: true,
+            skip_lambda: false,
+        },
+        // ... and with the *complementary* policy: λ increments from
+        // forced fallback reads (lag past the budget) are skipped
+        // outright while within-budget stale steps stay untouched — the
+        // `stale3` → `stale3_damped` → `stale3_skip` triple measures
+        // shrink-vs-drop on the same over-budget cell
+        Scenario {
+            name: "stale3_skip",
+            plan: FaultPlan { link: lossy(0.10), ..FaultPlan::none() },
+            max_staleness: 3,
+            silence_timeout: 16,
+            lag_damping: false,
+            skip_lambda: true,
         },
         Scenario {
             name: "partition",
@@ -150,6 +171,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 1,
             silence_timeout: 8,
             lag_damping: false,
+            skip_lambda: false,
         },
         Scenario {
             name: "churn",
@@ -165,6 +187,7 @@ pub fn scenario_matrix(n: usize) -> Vec<Scenario> {
             max_staleness: 1,
             silence_timeout: 16,
             lag_damping: false,
+            skip_lambda: false,
         },
     ]
 }
@@ -179,6 +202,7 @@ pub fn plan_scenario(plan: FaultPlan) -> Scenario {
         max_staleness: 1,
         silence_timeout: 16,
         lag_damping: false,
+        skip_lambda: false,
     }
 }
 
@@ -231,6 +255,7 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
                     max_staleness: scenario.max_staleness,
                     silence_timeout: scenario.silence_timeout,
                     lag_damping: scenario.lag_damping,
+                    skip_lambda_on_fallback: scenario.skip_lambda,
                     tracing: false,
                     ..Default::default()
                 }, scenario.plan.clone());

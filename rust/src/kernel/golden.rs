@@ -1,0 +1,332 @@
+//! Golden-trace property tests: the kernel transitions are bit-identical
+//! to the **pre-refactor** `Engine::step`.
+//!
+//! [`GoldenEngine`] below is a frozen, verbatim transcription of the
+//! sequential engine as it existed before the kernel extraction (PR 5) —
+//! separate λ/η/scheme vectors, the un-fused dual and residual passes,
+//! the flat global fold, the trailing scheme-update pass. It is test-only
+//! reference code and must never be "cleaned up" to call the kernel: its
+//! whole value is being an independent transcription of the same
+//! arithmetic. The tests drive it in lock-step with the kernel-backed
+//! [`Engine`] on seeded Ring/Star problems for all seven schemes and
+//! assert θ, λ, η and every recorded statistic equal **to the bit** at
+//! every iteration — pinning the refactor's parity at the kernel
+//! boundary instead of only end-to-end.
+
+use crate::consensus::solvers::QuadraticNode;
+use crate::consensus::{Engine, EngineConfig, LocalSolver};
+use crate::graph::{Graph, Topology};
+use crate::metrics::IterStats;
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
+                     SchemeParams};
+use crate::util::rng::Pcg;
+
+/// The pre-refactor engine, frozen (see module docs).
+struct GoldenEngine<S: LocalSolver> {
+    graph: Graph,
+    solvers: Vec<S>,
+    cfg: EngineConfig,
+    thetas: Vec<Vec<f64>>,
+    lambdas: Vec<Vec<f64>>,
+    etas: Vec<Vec<f64>>,
+    schemes: Vec<Box<dyn PenaltyScheme>>,
+    rev_slot: Vec<Vec<usize>>,
+    nbr_mean_prev: Vec<Vec<f64>>,
+    global_mean_prev: Vec<f64>,
+    f_self_prev: Vec<f64>,
+    scratch_new_thetas: Vec<Vec<f64>>,
+    scratch_eta_wsum: Vec<f64>,
+    scratch_rhos: Vec<Vec<f64>>,
+    scratch_eta_sums: Vec<f64>,
+    scratch_nbr_mean: Vec<f64>,
+    scratch_global_mean: Vec<f64>,
+    scratch_primal_norms: Vec<f64>,
+    scratch_dual_norms: Vec<f64>,
+    scratch_f_self: Vec<f64>,
+    scratch_f_nb: Vec<f64>,
+}
+
+impl<S: LocalSolver> GoldenEngine<S> {
+    fn new(graph: Graph, mut solvers: Vec<S>, cfg: EngineConfig) -> Self {
+        assert_eq!(graph.len(), solvers.len());
+        let dim = solvers[0].dim();
+        let mut rng = Pcg::new(cfg.seed, 0xE191E);
+        let thetas: Vec<Vec<f64>> = solvers
+            .iter_mut()
+            .map(|s| s.initial_param(&mut rng))
+            .collect();
+        let n = graph.len();
+        let schemes = (0..n)
+            .map(|i| make_scheme(cfg.scheme, cfg.params, graph.degree(i)))
+            .collect();
+        let etas = (0..n)
+            .map(|i| vec![cfg.params.eta0; graph.degree(i)])
+            .collect();
+        let rev_slot = (0..n)
+            .map(|i| {
+                graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&j| graph.edge_slot(j, i).expect("graph symmetry"))
+                    .collect()
+            })
+            .collect();
+        let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
+        GoldenEngine {
+            rev_slot,
+            lambdas: vec![vec![0.0; dim]; n],
+            nbr_mean_prev: vec![vec![0.0; dim]; n],
+            global_mean_prev: vec![0.0; dim],
+            f_self_prev: vec![f64::INFINITY; n],
+            scratch_new_thetas: vec![vec![0.0; dim]; n],
+            scratch_eta_wsum: vec![0.0; dim],
+            scratch_rhos: vec![vec![0.0; dim]; max_deg],
+            scratch_eta_sums: vec![0.0; n],
+            scratch_nbr_mean: vec![0.0; dim],
+            scratch_global_mean: vec![0.0; dim],
+            scratch_primal_norms: vec![0.0; n],
+            scratch_dual_norms: vec![0.0; n],
+            scratch_f_self: vec![0.0; n],
+            scratch_f_nb: Vec::with_capacity(max_deg),
+            etas,
+            schemes,
+            thetas,
+            solvers,
+            graph,
+            cfg,
+        }
+    }
+
+    /// Verbatim pre-refactor `Engine::step`.
+    fn step(&mut self, t: usize) -> IterStats {
+        let n = self.graph.len();
+        let dim = self.thetas[0].len();
+
+        for i in 0..n {
+            let mut eta_sum = 0.0;
+            self.scratch_eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+            for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                let eta = self.etas[i][slot];
+                eta_sum += eta;
+                let ti = &self.thetas[i];
+                let tj = &self.thetas[j];
+                for k in 0..dim {
+                    self.scratch_eta_wsum[k] += eta * (ti[k] + tj[k]);
+                }
+            }
+            self.scratch_eta_sums[i] = eta_sum;
+            self.solvers[i].solve_into(
+                &self.thetas[i], &self.lambdas[i], eta_sum,
+                &self.scratch_eta_wsum, &mut self.scratch_new_thetas[i]);
+        }
+
+        std::mem::swap(&mut self.thetas, &mut self.scratch_new_thetas);
+
+        for i in 0..n {
+            for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                let eta = 0.5 * (self.etas[i][slot] + self.etas[j][self.rev_slot[i][slot]]);
+                let (ti, tj) = (&self.thetas[i], &self.thetas[j]);
+                let li = &mut self.lambdas[i];
+                for k in 0..dim {
+                    li[k] += 0.5 * eta * (ti[k] - tj[k]);
+                }
+            }
+        }
+
+        let mut max_primal: f64 = 0.0;
+        let mut max_dual: f64 = 0.0;
+        for i in 0..n {
+            let inv_deg = 1.0 / self.graph.degree(i).max(1) as f64;
+            self.scratch_nbr_mean.iter_mut().for_each(|x| *x = 0.0);
+            for &j in self.graph.neighbors(i) {
+                for k in 0..dim {
+                    self.scratch_nbr_mean[k] += self.thetas[j][k];
+                }
+            }
+            self.scratch_nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+            let eta_bar = self.scratch_eta_sums[i] * inv_deg;
+            let mut r2 = 0.0;
+            let mut s2 = 0.0;
+            for k in 0..dim {
+                let r = self.thetas[i][k] - self.scratch_nbr_mean[k];
+                let s = eta_bar * (self.scratch_nbr_mean[k] - self.nbr_mean_prev[i][k]);
+                r2 += r * r;
+                s2 += s * s;
+            }
+            self.scratch_primal_norms[i] = r2.sqrt();
+            self.scratch_dual_norms[i] = s2.sqrt();
+            max_primal = max_primal.max(self.scratch_primal_norms[i]);
+            max_dual = max_dual.max(self.scratch_dual_norms[i]);
+            self.nbr_mean_prev[i].copy_from_slice(&self.scratch_nbr_mean);
+        }
+
+        self.scratch_global_mean.iter_mut().for_each(|x| *x = 0.0);
+        for th in &self.thetas {
+            for k in 0..dim {
+                self.scratch_global_mean[k] += th[k];
+            }
+        }
+        self.scratch_global_mean.iter_mut().for_each(|x| *x /= n as f64);
+        let mut gr2 = 0.0;
+        for th in &self.thetas {
+            for k in 0..dim {
+                let d = th[k] - self.scratch_global_mean[k];
+                gr2 += d * d;
+            }
+        }
+        let mut gs2 = 0.0;
+        for k in 0..dim {
+            let d = self.scratch_global_mean[k] - self.global_mean_prev[k];
+            gs2 += d * d;
+        }
+        let eta_global = self.cfg.params.eta0;
+        let global_primal = gr2.sqrt();
+        let global_dual = eta_global * (n as f64).sqrt() * gs2.sqrt();
+        self.global_mean_prev.copy_from_slice(&self.scratch_global_mean);
+
+        let mut objective = 0.0;
+        for i in 0..n {
+            let f = self.solvers[i].objective(&self.thetas[i]);
+            self.scratch_f_self[i] = f;
+            objective += f;
+        }
+
+        let (mut min_eta, mut max_eta, mut sum_eta, mut cnt) =
+            (f64::INFINITY, 0.0f64, 0.0, 0usize);
+        for e in self.etas.iter().flatten() {
+            min_eta = min_eta.min(*e);
+            max_eta = max_eta.max(*e);
+            sum_eta += *e;
+            cnt += 1;
+        }
+
+        for i in 0..n {
+            self.scratch_f_nb.clear();
+            if self.schemes[i].needs_neighbor_objectives() {
+                let deg = self.graph.degree(i);
+                for (slot, &j) in self.graph.neighbors(i).iter().enumerate() {
+                    let rho = &mut self.scratch_rhos[slot];
+                    for k in 0..dim {
+                        rho[k] = 0.5 * (self.thetas[i][k] + self.thetas[j][k]);
+                    }
+                }
+                self.solvers[i]
+                    .objective_batch_into(&self.scratch_rhos[..deg], &mut self.scratch_f_nb);
+            } else {
+                self.scratch_f_nb.resize(self.graph.degree(i), 0.0);
+            }
+            let obs = NodeObservation {
+                t,
+                primal_norm: self.scratch_primal_norms[i],
+                dual_norm: self.scratch_dual_norms[i],
+                global_primal,
+                global_dual,
+                f_self: self.scratch_f_self[i],
+                f_self_prev: self.f_self_prev[i],
+                f_neighbors: &self.scratch_f_nb,
+                live: None,
+            };
+            self.schemes[i].update(&obs, &mut self.etas[i]);
+            self.f_self_prev[i] = self.scratch_f_self[i];
+        }
+
+        IterStats {
+            iter: t,
+            objective,
+            max_primal,
+            max_dual,
+            mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
+            min_eta: if cnt == 0 { 0.0 } else { min_eta },
+            max_eta,
+            app_error: 0.0,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn quad_nodes(n: usize, dim: usize, seed: u64) -> Vec<QuadraticNode> {
+    let mut rng = Pcg::seed(seed);
+    (0..n).map(|_| QuadraticNode::random(dim, &mut rng)).collect()
+}
+
+fn assert_stats_bits(a: &IterStats, b: &IterStats, ctx: &str) {
+    assert_eq!(a.iter, b.iter, "{ctx}");
+    assert_eq!(a.objective.to_bits(), b.objective.to_bits(), "{ctx} objective");
+    assert_eq!(a.max_primal.to_bits(), b.max_primal.to_bits(), "{ctx} max_primal");
+    assert_eq!(a.max_dual.to_bits(), b.max_dual.to_bits(), "{ctx} max_dual");
+    assert_eq!(a.mean_eta.to_bits(), b.mean_eta.to_bits(), "{ctx} mean_eta");
+    assert_eq!(a.min_eta.to_bits(), b.min_eta.to_bits(), "{ctx} min_eta");
+    assert_eq!(a.max_eta.to_bits(), b.max_eta.to_bits(), "{ctx} max_eta");
+}
+
+/// Drive the kernel-backed engine and the golden pre-refactor engine in
+/// lock-step and diff the full per-node state bitwise every iteration.
+fn assert_golden_parity(graph: Graph, scheme: SchemeKind, seed: u64,
+                        data_seed: u64, iters: usize, ctx: &str) {
+    let n = graph.len();
+    let dim = 3;
+    let cfg = EngineConfig { scheme, tol: 0.0, max_iters: iters, seed,
+                             ..Default::default() };
+    let mut engine = Engine::new(graph.clone(), quad_nodes(n, dim, data_seed), cfg);
+    let mut golden = GoldenEngine::new(graph, quad_nodes(n, dim, data_seed), cfg);
+
+    assert_eq!(engine.thetas(), &golden.thetas[..], "{ctx}: θ⁰ seeding");
+    for t in 0..iters {
+        let a = engine.step(t, &mut |_, _| 0.0);
+        let b = golden.step(t);
+        let ctx = format!("{ctx} iter {t}");
+        assert_stats_bits(&a, &b, &ctx);
+        assert_eq!(engine.thetas(), &golden.thetas[..], "{ctx}: θ");
+        for i in 0..n {
+            assert_eq!(engine.kernels[i].lambda, golden.lambdas[i], "{ctx}: λ[{i}]");
+            assert_eq!(engine.kernels[i].etas, golden.etas[i], "{ctx}: η[{i}]");
+            assert_eq!(engine.kernels[i].nbr_mean_prev, golden.nbr_mean_prev[i],
+                       "{ctx}: θ̄_prev[{i}]");
+        }
+    }
+}
+
+#[test]
+fn kernel_golden_trace_ring_all_schemes() {
+    // the satellite bar: NodeKernel transitions ≡ pre-refactor
+    // Engine::step bit-for-bit, every scheme, on the sparse cycle
+    for scheme in SchemeKind::ALL {
+        assert_golden_parity(Topology::Ring.build(6).unwrap(), scheme, 11, 5,
+                             30, &format!("ring/{scheme:?}"));
+    }
+}
+
+#[test]
+fn kernel_golden_trace_star_all_schemes() {
+    // ... and on the hub topology (heterogeneous degrees: the η̄ and
+    // rev-slot paths see asymmetric neighbourhoods)
+    for scheme in SchemeKind::ALL {
+        assert_golden_parity(Topology::Star.build(6).unwrap(), scheme, 23, 9,
+                             30, &format!("star/{scheme:?}"));
+    }
+}
+
+#[test]
+fn kernel_golden_trace_seed_sweep() {
+    // property flavour: a seed sweep over (topology, scheme, seed) cells
+    // on the adaptive schemes, so the parity claim is not one lucky seed
+    for (s, scheme) in [(1u64, SchemeKind::Ap), (2, SchemeKind::Nap),
+                        (3, SchemeKind::VpAp), (4, SchemeKind::Rb),
+                        (5, SchemeKind::VpNap)] {
+        for topo in [Topology::Ring, Topology::Star] {
+            assert_golden_parity(topo.build(5).unwrap(), scheme, s, 100 + s,
+                                 20, &format!("{topo:?}/{scheme:?}/seed{s}"));
+        }
+    }
+}
+
+#[test]
+fn kernel_golden_trace_isolated_node() {
+    // degree-0 node: the shared η̄ = 0 isolated-node rule must hold at
+    // the kernel boundary too
+    for scheme in SchemeKind::ALL {
+        assert_golden_parity(Graph::new(1, &[]).unwrap(), scheme, 9, 9, 15,
+                             &format!("isolated/{scheme:?}"));
+    }
+}

@@ -1,0 +1,72 @@
+//! The shared ADMM protocol kernel: **one** transcription of the paper's
+//! per-node iteration, one stop state machine, one app-metric surface.
+//!
+//! The paper's contribution is a *protocol* — the adaptive per-edge
+//! penalty update riding on the bridge-variable-eliminated consensus
+//! ADMM — yet this repo grew four runtimes (sequential
+//! [`crate::consensus::Engine`], sharded [`crate::coordinator`], async
+//! [`crate::net`], hybrid [`crate::cluster`]) that each re-transcribed
+//! the θ-solve → η̄-average → λ-step → scheme-update → residual-fold
+//! sequence, with bit-parity held together only by cross-runtime tests.
+//! This module collapses the duplication: runtimes now supply transport,
+//! scheduling and staleness *policy*, and call here for the arithmetic,
+//! so the parity contracts are consequences of shared code instead of
+//! maintained coincidences — and a new λ policy or stop rule is one
+//! change, not four.
+//!
+//! ## Method ↔ paper equation map
+//!
+//! | kernel method | paper | computation |
+//! |---|---|---|
+//! | [`NodeKernel::solve_into`] | eq. (3) primal step | `θ_i^{t+1} = argmin f_i(θ) + 2λ_iᵀθ + Σ_j η_ij ‖θ − ρ_ij‖²` via `Σ_j η_ij`, `Σ_j η_ij (θ_i + θ_j)` and [`crate::consensus::LocalSolver::solve_into`] |
+//! | [`NodeKernel::reduce`] | eq. (3) dual step + eq. (5) | `λ_i += ½ Σ_j η̄_ij (θ_i^{t+1} − θ_j^{t+1})` with the edge-mean η̄_ij = ½(η_ij + η_ji); local residuals `‖r_i‖`, `‖s_i‖`; f_i at the ρ_ij bridge estimates for AP/NAP |
+//! | [`NodeKernel::eta_bar`] | eq. (5) normalization | `η̄_i = Σ_j η_ij / max(deg_i, 1)` — the shared isolated-node rule (degree 0 ⇒ η̄ = 0 ⇒ zero dual residual) |
+//! | [`NodeKernel::observe`] | §3 (eqs. 4, 6–12) | the masked per-node scheme update — the paper's contribution, one [`crate::penalty::PenaltyScheme`] call |
+//! | [`StopTracker::round_partials`] / [`StopTracker::round_flat`] | eq. (5) global | global primal `√Σ‖θ − ḡ‖²` and dual `η⁰√n‖ḡ − ḡ_prev‖`, via Chan-combined centered partials or flat node-order sums |
+//! | [`StopTracker::commit`] | §5 stop rule | relative objective-change checker (patience/warmup) + recorder + stop decision |
+//!
+//! ## Which runtime supplies which policy knob
+//!
+//! | knob | engine | coordinator | net | cluster |
+//! |---|---|---|---|---|
+//! | θ storage ([`SlotView`] resolution) | owned `Vec`s | arena parity block | stamp cache per slot | arena + boundary stamp cache |
+//! | slot liveness ([`SlotView::live`]) | always live | always live | [`crate::graph::LiveView`] mask | machine-link mask |
+//! | read staleness (lag fed to [`DualPolicy`]) | 0 | 0 | bounded by `max_staleness`, forced by `silence_timeout` | same, at machine granularity |
+//! | dual policy | exact | exact | `lag_damping` / `skip_lambda_on_fallback` | exact (boundary resolution is driver-side) |
+//! | fold flavour | flat, node order | partials, shard order | flat, node order | partials via tree/gossip collective |
+//! | verdict transport | in-step | barrier + shared slot | omniscient fold cursor | `Verdict` messages / push-sum estimate |
+//! | stop state location | the engine | leader worker 0 | fold cursor | designated machine, handed off on churn ([`StopSnapshot`]) |
+//!
+//! ## App metrics
+//!
+//! [`AppMetricHook`] is the one application-metric surface: a per-round
+//! callback over `(round, θ per node in original ids, per-node liveness)`
+//! whose value lands in [`crate::metrics::IterStats::app_error`]. The
+//! synchronous runtimes pass all-true liveness; the async/cluster
+//! runtimes pass the committed snapshot plus the live mask, so metrics
+//! like the D-PPCA subspace angle run under loss and churn without
+//! knowing the protocol.
+
+mod node;
+mod stop;
+
+pub use node::{DualPolicy, KernelScratch, NodeKernel, SlotView};
+pub use stop::{FlatRound, GlobalRound, StopSnapshot, StopTracker};
+
+/// The unified application-metric surface (see module docs). Implemented
+/// for any `FnMut(usize, &[Vec<f64>], &[bool]) -> f64` closure.
+pub trait AppMetricHook {
+    /// Observe one committed round: `(round, θ per node keyed by original
+    /// id, per-node liveness)`. The return value is recorded as
+    /// [`crate::metrics::IterStats::app_error`].
+    fn measure(&mut self, round: usize, thetas: &[Vec<f64>], live: &[bool]) -> f64;
+}
+
+impl<F: FnMut(usize, &[Vec<f64>], &[bool]) -> f64> AppMetricHook for F {
+    fn measure(&mut self, round: usize, thetas: &[Vec<f64>], live: &[bool]) -> f64 {
+        self(round, thetas, live)
+    }
+}
+
+#[cfg(test)]
+mod golden;

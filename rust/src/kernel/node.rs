@@ -1,0 +1,325 @@
+//! The per-node protocol kernel: one transcription of the paper's
+//! per-iteration transitions, shared by every runtime.
+//!
+//! A [`NodeKernel`] owns exactly the state the *protocol* assigns to one
+//! node — λ_i, the out-edge penalties η_{i→·}, the penalty-scheme
+//! instance, and the residual memory — while θ stays wherever the host
+//! runtime keeps it (an owned `Vec`, a parity block of the coordinator's
+//! arena, …) and is passed in by reference. Neighbour access goes through
+//! the [`SlotView`] trait so each runtime supplies its own *resolution*
+//! (in-place slice, zero-copy arena read, stamp-indexed cache with
+//! staleness accounting) without ever re-transcribing the arithmetic.
+//!
+//! Bit-parity contract: for a fully live neighbourhood with exact (lag-0)
+//! reads, every method reproduces the pre-refactor `Engine::step`
+//! floating-point stream exactly — same loops, same accumulation order,
+//! same parenthesization. The golden-trace tests in [`super::golden`]
+//! pin this at the kernel boundary for all seven schemes.
+
+use crate::consensus::LocalSolver;
+use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
+                     SchemeParams};
+
+/// Per-phase view of one node's neighbourhood, supplied by the runtime.
+///
+/// The kernel dictates *what* is read (which slots, in slot order, at
+/// which point of the arithmetic); the implementation dictates *how*
+/// (direct slice, arena parity block, bounded-staleness cache) and owns
+/// any staleness accounting side effects, which must happen inside
+/// [`SlotView::theta`] / [`SlotView::eta_in`] so counters and traces
+/// keep their pre-refactor order.
+pub trait SlotView {
+    /// Whether the slot participates in this phase (synchronous runtimes:
+    /// always true; dynamic topologies: the live mask).
+    fn live(&self, slot: usize) -> bool;
+
+    /// Resolve the slot's θ at this phase's ideal stamp, with the
+    /// runtime's staleness accounting. Returns the parameter slice and
+    /// the read's lag in rounds (0 = exact; synchronous runtimes always
+    /// return 0).
+    fn theta(&mut self, slot: usize) -> (&[f64], u64);
+
+    /// Re-touch the θ already resolved by [`SlotView::theta`] this phase
+    /// (the ρ-midpoint pass) — no staleness accounting.
+    fn theta_again(&mut self, slot: usize) -> &[f64];
+
+    /// Resolve the slot's incoming penalty η_{j→i} at this phase's ideal
+    /// stamp (phase B only), with accounting.
+    fn eta_in(&mut self, slot: usize) -> f64;
+}
+
+/// How the dual step treats reads that resolved stale — the one-line
+/// policy layer on top of the kernel (both shipped policies are
+/// bit-transparent whenever every read is exact):
+///
+/// * `lag_damping` — scale a slot's λ increment by `1/(1+lag)`
+///   ([`crate::net::NetConfig::lag_damping`]): stale dual steps are the
+///   positive feedback behind the staleness ≥ 2 divergence, and damping
+///   shrinks exactly those steps.
+/// * `skip_beyond` — drop the λ increment entirely for reads past the
+///   staleness budget (the forced silent-neighbour fallback,
+///   [`crate::net::NetConfig::skip_lambda_on_fallback`]): a fallback
+///   read's generation mismatch is unbounded, so its dual step carries
+///   more noise than signal. The θ still feeds the neighbour mean — only
+///   the multiplier is protected.
+///
+/// The two compose: with both enabled, fallback reads are skipped and
+/// within-budget stale reads are damped.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DualPolicy {
+    /// Scale stale λ increments by `1/(1 + lag)`.
+    pub lag_damping: bool,
+    /// Skip the λ increment when `lag > budget` (a forced fallback read).
+    pub skip_beyond: Option<u64>,
+}
+
+impl DualPolicy {
+    /// The synchronous runtimes' policy: every read is exact, so both
+    /// knobs are inert — kept explicit for the call sites' readability.
+    pub fn exact() -> DualPolicy {
+        DualPolicy::default()
+    }
+}
+
+/// Worker- or engine-level scratch reused across nodes and iterations
+/// (the hot loop allocates nothing in steady state).
+pub struct KernelScratch {
+    /// Σ_j η_ij (θ_i + θ_j), accumulated per solve
+    pub eta_wsum: Vec<f64>,
+    /// neighbour mean θ̄_i, accumulated per reduce
+    pub nbr_mean: Vec<f64>,
+    /// ρ_ij midpoint buffers, sized to the max degree served
+    pub rhos: Vec<Vec<f64>>,
+}
+
+impl KernelScratch {
+    pub fn new(dim: usize, max_deg: usize) -> KernelScratch {
+        KernelScratch {
+            eta_wsum: vec![0.0; dim],
+            nbr_mean: vec![0.0; dim],
+            rhos: vec![vec![0.0; dim]; max_deg],
+        }
+    }
+}
+
+/// One node's protocol state and transitions (see module docs and the
+/// equation map in [`super`]).
+pub struct NodeKernel {
+    /// the paper's contribution: the per-node penalty scheduler
+    pub scheme: Box<dyn PenaltyScheme>,
+    /// out-edge penalties η_{i→j}, neighbour-slot order (the working
+    /// copy; arena-based runtimes publish it after phase C)
+    pub etas: Vec<f64>,
+    /// the multiplier λ_i
+    pub lambda: Vec<f64>,
+    /// previous neighbour mean (dual-residual memory, paper eq. 5)
+    pub nbr_mean_prev: Vec<f64>,
+    /// f_i at the ρ_ij bridge estimates (AP/NAP), slot order
+    pub f_nb: Vec<f64>,
+    pub f_self_prev: f64,
+    // -- carried from solve to reduce/observe within one iteration --------
+    /// Σ_j η_ij over the slots live at phase A
+    pub eta_sum: f64,
+    /// live-slot count at phase A — η̄ must divide the phase-A η sum by
+    /// the phase-A degree even if liveness changes mid-round
+    pub live_deg_a: usize,
+    pub f_self: f64,
+    /// ‖r_i‖ (local primal residual norm)
+    pub primal: f64,
+    /// ‖s_i‖ (local dual residual norm)
+    pub dual: f64,
+}
+
+impl NodeKernel {
+    /// Protocol state for one node of the given degree: η⁰ on every
+    /// slot, λ = 0, and a fresh scheme instance.
+    pub fn new(kind: SchemeKind, params: SchemeParams, deg: usize, dim: usize)
+               -> NodeKernel {
+        NodeKernel {
+            scheme: make_scheme(kind, params, deg),
+            etas: vec![params.eta0; deg],
+            lambda: vec![0.0; dim],
+            nbr_mean_prev: vec![0.0; dim],
+            f_nb: vec![0.0; deg],
+            f_self_prev: f64::INFINITY,
+            eta_sum: 0.0,
+            live_deg_a: 0,
+            f_self: 0.0,
+            primal: 0.0,
+            dual: 0.0,
+        }
+    }
+
+    /// Whether this node's scheme scores neighbour estimates (AP/NAP).
+    pub fn needs_neighbor_objectives(&self) -> bool {
+        self.scheme.needs_neighbor_objectives()
+    }
+
+    /// Whether this node's scheme reads folded global residuals (RB) —
+    /// the runtime must then gate phase C on the round's verdict.
+    pub fn needs_global_residuals(&self) -> bool {
+        self.scheme.needs_global_residuals()
+    }
+
+    /// The node-mean penalty η̄_i = (Σ_j η_ij) / deg with the shared
+    /// isolated-node rule: the divisor is `max(live degree at phase A, 1)`,
+    /// so a degree-0 node gets η̄ = 0 (and hence a zero dual residual) in
+    /// every runtime identically.
+    pub fn eta_bar(&self) -> f64 {
+        self.eta_sum * (1.0 / self.live_deg_a.max(1) as f64)
+    }
+
+    /// **Phase A** — the penalized local solve (paper eq. alignment in
+    /// [`super`]): accumulate `Σ_j η_ij` and `Σ_j η_ij (θ_i + θ_j)` over
+    /// the live slots in slot order, then hand the argmin to the solver,
+    /// landing θ_i^{t+1} in `out` (an arena block or an owned buffer —
+    /// the solver's `solve_into` contract keeps it allocation-free).
+    pub fn solve_into<S: LocalSolver + ?Sized>(
+        &mut self,
+        solver: &mut S,
+        theta_t: &[f64],
+        deg: usize,
+        view: &mut dyn SlotView,
+        scratch: &mut KernelScratch,
+        out: &mut [f64],
+    ) {
+        let dim = theta_t.len();
+        let mut eta_sum = 0.0;
+        let mut live_deg = 0usize;
+        scratch.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
+        for slot in 0..deg {
+            if !view.live(slot) {
+                continue;
+            }
+            live_deg += 1;
+            let e = self.etas[slot];
+            eta_sum += e;
+            let (tj, _) = view.theta(slot);
+            for k in 0..dim {
+                scratch.eta_wsum[k] += e * (theta_t[k] + tj[k]);
+            }
+        }
+        self.eta_sum = eta_sum;
+        self.live_deg_a = live_deg;
+        solver.solve_into(theta_t, &self.lambda, eta_sum, &scratch.eta_wsum, out);
+    }
+
+    /// **Phase B** — the round-`t` reduce: the symmetrized dual step
+    /// `λ_i += ½ Σ_j η̄_ij (θ_i − θ_j)` fused with the neighbour-mean
+    /// accumulation (independent accumulators, each fed in slot order —
+    /// the fusion never changes a per-accumulator floating-point
+    /// grouping), then the local residuals (paper eq. 5) and the
+    /// objective evaluations the scheme will observe in phase C.
+    ///
+    /// `theta_new` is θ_i^{t+1}; the view resolves neighbour θ^{t+1} and
+    /// incoming η^t. Results land in [`NodeKernel::primal`] /
+    /// [`NodeKernel::dual`] / [`NodeKernel::f_self`] / [`NodeKernel::f_nb`].
+    pub fn reduce<S: LocalSolver + ?Sized>(
+        &mut self,
+        solver: &mut S,
+        theta_new: &[f64],
+        deg: usize,
+        view: &mut dyn SlotView,
+        policy: DualPolicy,
+        scratch: &mut KernelScratch,
+    ) {
+        let dim = theta_new.len();
+
+        // ---- dual step + neighbour mean, slot order ----------------------
+        scratch.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
+        let mut live_deg = 0usize;
+        for slot in 0..deg {
+            if !view.live(slot) {
+                continue;
+            }
+            live_deg += 1;
+            let eta_in = view.eta_in(slot);
+            let eta_bar = 0.5 * (self.etas[slot] + eta_in);
+            let (tj, lag) = view.theta(slot);
+            if policy.skip_beyond.is_some_and(|budget| lag > budget) {
+                // skip-λ-on-fallback: the θ still feeds the mean
+                for k in 0..dim {
+                    scratch.nbr_mean[k] += tj[k];
+                }
+            } else if policy.lag_damping && lag > 0 {
+                let damp = 1.0 / (1.0 + lag as f64);
+                for k in 0..dim {
+                    self.lambda[k] += damp * (0.5 * eta_bar * (theta_new[k] - tj[k]));
+                    scratch.nbr_mean[k] += tj[k];
+                }
+            } else {
+                // the exact-read branch is kept verbatim so the default
+                // is literally the pre-policy arithmetic
+                for k in 0..dim {
+                    self.lambda[k] += 0.5 * eta_bar * (theta_new[k] - tj[k]);
+                    scratch.nbr_mean[k] += tj[k];
+                }
+            }
+        }
+
+        // ---- local residuals (paper eq. 5) -------------------------------
+        // The mean divides by the phase-B live count (it must match the
+        // sum just accumulated) while η̄ divides the phase-A η sum by the
+        // phase-A count — mid-round liveness changes must not pair one
+        // snapshot's sum with the other's degree. At a stable topology
+        // both counts are equal.
+        let inv_deg = 1.0 / live_deg.max(1) as f64;
+        scratch.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
+        let eta_bar_node = self.eta_bar();
+        let mut r2 = 0.0;
+        let mut s2 = 0.0;
+        for k in 0..dim {
+            let r = theta_new[k] - scratch.nbr_mean[k];
+            let s = eta_bar_node * (scratch.nbr_mean[k] - self.nbr_mean_prev[k]);
+            r2 += r * r;
+            s2 += s * s;
+        }
+        self.nbr_mean_prev.copy_from_slice(&scratch.nbr_mean);
+        self.primal = r2.sqrt();
+        self.dual = s2.sqrt();
+
+        // ---- objectives (f at the ρ bridge midpoints only if the scheme
+        // asks; dead slots get a placeholder the scheme's mask excludes) --
+        self.f_self = solver.objective(theta_new);
+        if self.scheme.needs_neighbor_objectives() {
+            for slot in 0..deg {
+                let rho = &mut scratch.rhos[slot];
+                if view.live(slot) {
+                    let tj = view.theta_again(slot);
+                    for k in 0..dim {
+                        rho[k] = 0.5 * (theta_new[k] + tj[k]);
+                    }
+                } else {
+                    rho.copy_from_slice(theta_new);
+                }
+            }
+            solver.objective_batch_into(&scratch.rhos[..deg], &mut self.f_nb);
+        } else {
+            self.f_nb.clear();
+            self.f_nb.resize(deg, 0.0);
+        }
+    }
+
+    /// **Phase C** — the masked scheme update (the paper's contribution):
+    /// build the [`NodeObservation`] from this round's reduce products
+    /// and the runtime-supplied global residual verdict, let the scheme
+    /// rewrite η in place, and roll the objective memory forward.
+    ///
+    /// `live = None` (what synchronous runtimes pass for a fully live
+    /// neighbourhood) is bit-identical to the pre-liveness behaviour.
+    pub fn observe(&mut self, t: usize, globals: (f64, f64), live: Option<&[bool]>) {
+        let obs = NodeObservation {
+            t,
+            primal_norm: self.primal,
+            dual_norm: self.dual,
+            global_primal: globals.0,
+            global_dual: globals.1,
+            f_self: self.f_self,
+            f_self_prev: self.f_self_prev,
+            f_neighbors: &self.f_nb,
+            live,
+        };
+        self.scheme.update(&obs, &mut self.etas);
+        self.f_self_prev = self.f_self;
+    }
+}

@@ -1,0 +1,306 @@
+//! The shared stop state machine: per-round global-statistics fold →
+//! primal/dual residual verdict → recorder/convergence commit.
+//!
+//! Two fold *flavours* feed the same commit path, preserving each
+//! runtime family's exact floating-point stream:
+//!
+//! * **partials** ([`StopTracker::round_partials`]) — the sharded
+//!   coordinator's leader and the cluster tree root absorb per-shard
+//!   centered [`StatPartial`]s in shard order with the Chan-style
+//!   [`RunningFold`] (O(W·dim), accurate at any ‖θ‖ scale);
+//! * **flat** ([`FlatRound`] + [`StopTracker::round_flat`]) — the
+//!   sequential engine and the async per-node runtime accumulate flat
+//!   sums over whole-node contributions in node-id order (the oracle
+//!   arithmetic the zero-fault parity tests diff against).
+//!
+//! Both flavours derive the verdict identically: global primal
+//! `√Σ‖θ − ḡ‖²`, global dual `η⁰ √n ‖ḡ − ḡ_prev‖` with ḡ_prev starting
+//! at zero (bit-equal to the legacy `Option<Vec>`/`None` handling, since
+//! `(a − 0)² ≡ a·a` in IEEE arithmetic), and
+//! [`StopTracker::commit`] runs the one relative-change
+//! [`ConvergenceChecker`] + [`Recorder`] + stop decision every runtime
+//! used to re-implement.
+//!
+//! The whole tracker state is serializable ([`StopTracker::snapshot`] /
+//! [`StopTracker::resume`]) so the cluster runtime can hand the
+//! checker/recorder duty over the simulated network on leader churn
+//! instead of migrating it omnisciently.
+
+use crate::metrics::{CheckerState, ConvergenceChecker, IterStats, Recorder,
+                     RunningFold, StatPartial};
+
+/// One round's folded global statistics — the verdict the RB scheme and
+/// the stop rule consume, plus the recorder-facing aggregates.
+#[derive(Debug, Clone, Copy)]
+pub struct GlobalRound {
+    /// Σ_i f_i(θ_i)
+    pub objective: f64,
+    /// √Σ‖θ − ḡ‖² — the global primal residual
+    pub global_primal: f64,
+    /// η⁰ √n ‖ḡ − ḡ_prev‖ — the global dual residual
+    pub global_dual: f64,
+    pub max_primal: f64,
+    pub max_dual: f64,
+    pub mean_eta: f64,
+    pub min_eta: f64,
+    pub max_eta: f64,
+    /// nodes folded into this round
+    pub folded_nodes: usize,
+}
+
+/// Flat per-round accumulator (the engine/async flavour): every
+/// statistic is a plain sum/max over whole-node contributions, fed in
+/// node-id order, with the mean divided (not reciprocal-multiplied) —
+/// the sequential engine's exact arithmetic.
+#[derive(Debug, Clone)]
+pub struct FlatRound {
+    pub objective: f64,
+    pub max_primal: f64,
+    pub max_dual: f64,
+    pub min_eta: f64,
+    pub max_eta: f64,
+    pub sum_eta: f64,
+    pub eta_count: usize,
+    /// Σθ during accumulation; the mean after [`FlatRound::finish_mean`]
+    pub gmean: Vec<f64>,
+    /// contributions folded (the divisor for the mean)
+    pub count: usize,
+    /// Σ‖θ − ḡ‖², accumulated by [`FlatRound::add_spread`]
+    pub gr2: f64,
+}
+
+impl FlatRound {
+    pub fn new(dim: usize) -> FlatRound {
+        FlatRound {
+            objective: 0.0,
+            max_primal: 0.0,
+            max_dual: 0.0,
+            min_eta: f64::INFINITY,
+            max_eta: 0.0,
+            sum_eta: 0.0,
+            eta_count: 0,
+            gmean: vec![0.0; dim],
+            count: 0,
+            gr2: 0.0,
+        }
+    }
+
+    /// Zero every accumulator for a new round.
+    pub fn begin(&mut self) {
+        self.objective = 0.0;
+        self.max_primal = 0.0;
+        self.max_dual = 0.0;
+        self.min_eta = f64::INFINITY;
+        self.max_eta = 0.0;
+        self.sum_eta = 0.0;
+        self.eta_count = 0;
+        self.gmean.iter_mut().for_each(|x| *x = 0.0);
+        self.count = 0;
+        self.gr2 = 0.0;
+    }
+
+    /// Fold one node's scalar statistics (objective, residual norms, the
+    /// η stream over its out-edges).
+    pub fn add_node(&mut self, f_self: f64, primal: f64, dual: f64, etas: &[f64]) {
+        self.objective += f_self;
+        self.max_primal = self.max_primal.max(primal);
+        self.max_dual = self.max_dual.max(dual);
+        for &e in etas {
+            self.min_eta = self.min_eta.min(e);
+            self.max_eta = self.max_eta.max(e);
+            self.sum_eta += e;
+        }
+        self.eta_count += etas.len();
+    }
+
+    /// Accumulate one node's θ into the global sum.
+    pub fn add_theta(&mut self, theta: &[f64]) {
+        for (k, &x) in theta.iter().enumerate() {
+            self.gmean[k] += x;
+        }
+        self.count += 1;
+    }
+
+    /// Turn the θ sum into the mean (plain division — parity-critical).
+    pub fn finish_mean(&mut self) {
+        let n = self.count as f64;
+        self.gmean.iter_mut().for_each(|x| *x /= n);
+    }
+
+    /// Second pass: accumulate one node's spread about the mean.
+    pub fn add_spread(&mut self, theta: &[f64]) {
+        for (k, &x) in theta.iter().enumerate() {
+            let d = x - self.gmean[k];
+            self.gr2 += d * d;
+        }
+    }
+
+    fn mean_eta(&self) -> f64 {
+        if self.eta_count == 0 { 0.0 } else { self.sum_eta / self.eta_count as f64 }
+    }
+
+    fn min_eta_or_zero(&self) -> f64 {
+        if self.eta_count == 0 { 0.0 } else { self.min_eta }
+    }
+}
+
+/// Serialized [`StopTracker`] state — what travels in the cluster's
+/// leader-election handoff message (plain data; the simulated network
+/// clones it like any payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StopSnapshot {
+    pub checker: CheckerState,
+    pub stats: Vec<IterStats>,
+    pub gmean_prev: Vec<f64>,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+/// The stop state machine (see module docs). One per recording surface:
+/// the engine, the sharded leader, the async fold cursor, the cluster's
+/// designated machine.
+pub struct StopTracker {
+    max_iters: usize,
+    eta0: f64,
+    checker: ConvergenceChecker,
+    pub recorder: Recorder,
+    /// previous round's global mean (starts at zero, like the engines)
+    gmean_prev: Vec<f64>,
+    /// Chan-fold scratch for the partials flavour
+    fold: RunningFold,
+    pub iterations: usize,
+    pub converged: bool,
+}
+
+impl StopTracker {
+    pub fn new(dim: usize, tol: f64, patience: usize, warmup: usize,
+               max_iters: usize, eta0: f64) -> StopTracker {
+        StopTracker {
+            max_iters,
+            eta0,
+            checker: ConvergenceChecker::new(tol)
+                .with_patience(patience)
+                .with_warmup(warmup),
+            recorder: Recorder::with_capacity(max_iters),
+            gmean_prev: vec![0.0; dim],
+            fold: RunningFold::new(dim),
+            iterations: 0,
+            converged: false,
+        }
+    }
+
+    /// Fresh checker/recorder for a new run. Fold memory (`gmean_prev`)
+    /// deliberately persists: a caller driving raw steps across runs keeps
+    /// the legacy engine's continuation semantics.
+    pub fn reset_run(&mut self) {
+        self.checker.reset();
+        self.recorder = Recorder::with_capacity(self.max_iters);
+        self.iterations = 0;
+        self.converged = false;
+    }
+
+    /// Derive the verdict from a mean + spread pair — shared tail of both
+    /// flavours: `gs2 = ‖ḡ − ḡ_prev‖²`, dual `= η⁰ √n √gs2`, then roll
+    /// the mean memory forward.
+    fn verdict(&mut self, gmean: &[f64], gr2: f64, n: usize) -> (f64, f64) {
+        let mut gs2 = 0.0;
+        for (k, &g) in gmean.iter().enumerate() {
+            let d = g - self.gmean_prev[k];
+            gs2 += d * d;
+        }
+        let global_primal = gr2.sqrt();
+        let global_dual = self.eta0 * (n as f64).sqrt() * gs2.sqrt();
+        self.gmean_prev.copy_from_slice(gmean);
+        (global_primal, global_dual)
+    }
+
+    /// Fold a completed flat round (engine/async flavour) into the round
+    /// verdict. The caller has already run `begin → add_node/add_theta →
+    /// finish_mean → add_spread`.
+    pub fn round_flat(&mut self, flat: &FlatRound) -> GlobalRound {
+        let (global_primal, global_dual) =
+            self.verdict(&flat.gmean, flat.gr2, flat.count);
+        GlobalRound {
+            objective: flat.objective,
+            global_primal,
+            global_dual,
+            max_primal: flat.max_primal,
+            max_dual: flat.max_dual,
+            mean_eta: flat.mean_eta(),
+            min_eta: flat.min_eta_or_zero(),
+            max_eta: flat.max_eta,
+            folded_nodes: flat.count,
+        }
+    }
+
+    /// Fold per-shard centered partials (coordinator/cluster flavour) in
+    /// the order the iterator yields them — callers fold in shard /
+    /// machine-id (= node-id) order for reproducibility. The Chan
+    /// combination itself lives in [`RunningFold`].
+    pub fn round_partials<'a, I>(&mut self, parts: I) -> GlobalRound
+    where
+        I: IntoIterator<Item = &'a StatPartial>,
+    {
+        self.fold.reset();
+        for p in parts {
+            self.fold.absorb(p);
+        }
+        let gr2 = self.fold.gr2.max(0.0);
+        let n = self.fold.agg_n;
+        // the borrow checker will not let `verdict` take &self.fold.gmean;
+        // swap it out for the call (no allocation, no copy)
+        let gmean = std::mem::take(&mut self.fold.gmean);
+        let (global_primal, global_dual) = self.verdict(&gmean, gr2, n);
+        self.fold.gmean = gmean;
+        GlobalRound {
+            objective: self.fold.objective,
+            global_primal,
+            global_dual,
+            max_primal: self.fold.max_primal,
+            max_dual: self.fold.max_dual,
+            mean_eta: self.fold.mean_eta(),
+            min_eta: self.fold.min_eta(),
+            max_eta: self.fold.eta_max,
+            folded_nodes: n,
+        }
+    }
+
+    /// Commit a recorded round: push the stats, advance the iteration
+    /// count, run the convergence check. Returns `true` when the run
+    /// should stop (converged, or the round budget is spent).
+    pub fn commit(&mut self, t: usize, stats: IterStats) -> bool {
+        let objective = stats.objective;
+        self.recorder.push(stats);
+        self.iterations = t + 1;
+        let hit = self.checker.update(objective);
+        if hit {
+            self.converged = true;
+        }
+        hit || t + 1 >= self.max_iters
+    }
+
+    /// Move the recorded curves out (end of run).
+    pub fn take_recorder(&mut self) -> Recorder {
+        std::mem::take(&mut self.recorder)
+    }
+
+    /// Serialize the full tracker state (cluster leader handoff).
+    pub fn snapshot(&self) -> StopSnapshot {
+        StopSnapshot {
+            checker: self.checker.snapshot(),
+            stats: self.recorder.stats.clone(),
+            gmean_prev: self.gmean_prev.clone(),
+            iterations: self.iterations,
+            converged: self.converged,
+        }
+    }
+
+    /// Resume from a serialized tracker state (the receiving leader).
+    pub fn resume(&mut self, snap: StopSnapshot) {
+        self.checker.restore(&snap.checker);
+        self.recorder = Recorder { stats: snap.stats };
+        self.gmean_prev = snap.gmean_prev;
+        self.iterations = snap.iterations;
+        self.converged = snap.converged;
+    }
+}

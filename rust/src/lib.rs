@@ -32,6 +32,7 @@ pub mod dppca;
 pub mod error;
 pub mod experiments;
 pub mod graph;
+pub mod kernel;
 pub mod linalg;
 pub mod metrics;
 pub mod net;

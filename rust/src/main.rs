@@ -53,6 +53,8 @@ SUBCOMMANDS
                 --schemes a,b,...  --collectives tree,gossip
                 --loss a,b,... (default 0,0.1,0.3)  --out DIR
                 --plan file.json  replay a recorded machine-level FaultPlan
+                --dppca  run the D-PPCA cell instead (4 machines @ 10% loss,
+                         subspace-angle hook vs the single-box oracle)
   run         --config cfg.json          one consensus run, prints summary
   check-artifacts   validate manifest and compile one artifact set
   help        this text
@@ -69,7 +71,7 @@ fn main() {
 }
 
 fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
-    let args = CliArgs::parse(raw, &["describe", "verbose"])?;
+    let args = CliArgs::parse(raw, &["describe", "verbose", "dppca"])?;
     match args.subcommand.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -228,6 +230,17 @@ where
 }
 
 fn cmd_cluster(args: &CliArgs) -> fadmm::Result<()> {
+    if args.has_flag("dppca") {
+        // the D-PPCA cell: 4 machines, 10% loss, subspace-angle hook vs
+        // the single-box oracle (ROADMAP open item)
+        let out = out_dir(args);
+        let max_iters = args.get_usize("max-iters", 200)?;
+        eprintln!("cluster --dppca: 4 machines @ 10% loss, {} iters, out {}",
+                  max_iters, out.display());
+        let row = cluster_scenarios::run_dppca(max_iters, &out)?;
+        cluster_scenarios::print_dppca(&row);
+        return Ok(());
+    }
     let cfg = cluster_scenarios::ClusterScenarioConfig {
         nodes: args.get_usize("nodes", 24)?,
         machines_list: parse_list(args.get("machines"), vec![2, 4],

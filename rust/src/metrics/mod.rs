@@ -30,6 +30,18 @@ pub struct ConvergenceChecker {
     seen: usize,
 }
 
+/// Serialized [`ConvergenceChecker`] state — plain data, so the cluster
+/// runtime's leader handoff can ship the checker over its simulated
+/// network ([`crate::kernel::StopSnapshot`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckerState {
+    pub prev: Option<f64>,
+    pub f_min: f64,
+    pub f_max: f64,
+    pub streak: usize,
+    pub seen: usize,
+}
+
 impl ConvergenceChecker {
     pub fn new(tol: f64) -> Self {
         ConvergenceChecker {
@@ -87,10 +99,31 @@ impl ConvergenceChecker {
         self.streak = 0;
         self.seen = 0;
     }
+
+    /// Serialize the mutable state (tol/patience/warmup are configuration
+    /// and stay with the receiving checker).
+    pub fn snapshot(&self) -> CheckerState {
+        CheckerState {
+            prev: self.prev,
+            f_min: self.f_min,
+            f_max: self.f_max,
+            streak: self.streak,
+            seen: self.seen,
+        }
+    }
+
+    /// Restore serialized state into this checker.
+    pub fn restore(&mut self, s: &CheckerState) {
+        self.prev = s.prev;
+        self.f_min = s.f_min;
+        self.f_max = s.f_max;
+        self.streak = s.streak;
+        self.seen = s.seen;
+    }
 }
 
 /// One iteration's engine-level statistics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct IterStats {
     pub iter: usize,
     /// Σ_i f_i(θ_i)
@@ -166,6 +199,55 @@ impl StatPartial {
         self.theta_sum.iter_mut().for_each(|x| *x = 0.0);
         self.node_count = 0;
         self.centered_sq = 0.0;
+    }
+
+    /// Fold one node's contribution (objective, residual norms, the η
+    /// stream over its out-edges, Σθ) — the single transcription of the
+    /// per-node statistics accumulation the sharded coordinator and the
+    /// cluster machines share. Callers feed nodes in sequential id order
+    /// so combining partials in shard order reproduces a flat sweep.
+    pub fn absorb_node(&mut self, f_self: f64, primal: f64, dual: f64,
+                       etas: &[f64], theta: &[f64]) {
+        self.f_sum += f_self;
+        self.max_primal = self.max_primal.max(primal);
+        self.max_dual = self.max_dual.max(dual);
+        for &e in etas {
+            self.eta_min = self.eta_min.min(e);
+            self.eta_max = self.eta_max.max(e);
+            self.eta_sum += e;
+        }
+        self.eta_count += etas.len();
+        for (k, &x) in theta.iter().enumerate() {
+            self.theta_sum[k] += x;
+        }
+    }
+
+    /// The centered second pass: spread about the partial's *own* mean
+    /// (`m_s = theta_sum / count`, written into `mean_scratch`), visiting
+    /// the same θ slices in the same order as the absorb pass. Centering
+    /// here — instead of folding raw Σ‖θ‖² — keeps the combined global
+    /// residual accurate at any ‖θ‖ scale (the subtraction a raw
+    /// sum-of-squares needs cancels catastrophically once ‖θ‖² ≫ spread).
+    pub fn finish_centered<'a, I>(&mut self, count: usize, thetas: I,
+                                  mean_scratch: &mut [f64])
+    where
+        I: IntoIterator<Item = &'a [f64]>,
+    {
+        self.node_count = count;
+        if count == 0 {
+            return;
+        }
+        let dim = self.theta_sum.len();
+        let inv_count = 1.0 / count as f64;
+        for k in 0..dim {
+            mean_scratch[k] = self.theta_sum[k] * inv_count;
+        }
+        for th in thetas {
+            for k in 0..dim {
+                let d = th[k] - mean_scratch[k];
+                self.centered_sq += d * d;
+            }
+        }
     }
 
     /// Copy into a pre-sized slot without reallocating its `theta_sum`.

@@ -57,9 +57,10 @@ use std::collections::BTreeMap;
 
 use crate::consensus::LocalSolver;
 use crate::graph::{Graph, LiveView, NodeId};
-use crate::metrics::{ConvergenceChecker, IterStats, NetCounters, Recorder};
-use crate::penalty::{make_scheme, NodeObservation, PenaltyScheme, SchemeKind,
-                     SchemeParams};
+use crate::kernel::{DualPolicy, FlatRound, KernelScratch, NodeKernel, SlotView,
+                    StopTracker};
+use crate::metrics::{IterStats, NetCounters, Recorder};
+use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
 use super::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TraceEvent, TraceKind};
@@ -101,6 +102,15 @@ pub struct NetConfig {
     /// read lags (zero faults, or `max_staleness = 0` without forced
     /// fallbacks).
     pub lag_damping: bool,
+    /// The complementary kernel policy: *skip* the λ increment entirely
+    /// for a slot whose θ^{t+1} read was a forced fallback (resolved more
+    /// than `max_staleness` rounds stale) — the θ still feeds the
+    /// neighbour mean, only the multiplier is protected from the
+    /// unbounded generation mismatch. Off by default and bit-identical
+    /// whenever no read falls back; composes with `lag_damping` (skipped
+    /// beyond the budget, damped within it). See the module docs'
+    /// "Stability boundary" for the tradeoff against damping.
+    pub skip_lambda_on_fallback: bool,
     /// Record the replayable event trace (tests/debugging; counters are
     /// always kept).
     pub tracing: bool,
@@ -120,7 +130,18 @@ impl Default for NetConfig {
             silence_timeout: 64,
             activity: None,
             lag_damping: false,
+            skip_lambda_on_fallback: false,
             tracing: true,
+        }
+    }
+}
+
+impl NetConfig {
+    /// The kernel [`DualPolicy`] this configuration selects.
+    fn dual_policy(&self) -> DualPolicy {
+        DualPolicy {
+            lag_damping: self.lag_damping,
+            skip_beyond: self.skip_lambda_on_fallback.then_some(self.max_staleness),
         }
     }
 }
@@ -169,19 +190,29 @@ impl SlotCache {
         self.eta.range(ideal.saturating_sub(stale)..).next().is_some()
     }
 
-    /// Resolve a θ read (see type docs). Caller guarantees non-emptiness.
-    fn read_theta(&mut self, ideal: u64) -> (u64, &[f64]) {
+    /// Resolve a θ read to its stamp (see type docs), pruning older
+    /// entries. Caller guarantees non-emptiness; pair with
+    /// [`SlotCache::theta_at`] to borrow the value (the two-step shape
+    /// lets the staleness accounting run between resolve and use).
+    fn resolve_theta(&mut self, ideal: u64) -> u64 {
         let best = self.theta.range(..=ideal).next_back().map(|(&s, _)| s);
         match best {
             Some(s) => {
                 self.theta.retain(|&k, _| k >= s);
-                (s, self.theta.get(&s).expect("retained").as_slice())
+                s
             }
-            None => {
-                let (&s, v) = self.theta.iter().next().expect("cache checked nonempty");
-                (s, v.as_slice())
-            }
+            None => *self.theta.keys().next().expect("cache checked nonempty"),
         }
+    }
+
+    fn theta_at(&self, stamp: u64) -> &[f64] {
+        self.theta.get(&stamp).expect("resolved").as_slice()
+    }
+
+    /// Resolve a θ read (see type docs). Caller guarantees non-emptiness.
+    fn read_theta(&mut self, ideal: u64) -> (u64, &[f64]) {
+        let s = self.resolve_theta(ideal);
+        (s, self.theta.get(&s).expect("resolved").as_slice())
     }
 
     fn read_eta(&mut self, ideal: u64) -> (u64, f64) {
@@ -217,32 +248,19 @@ enum Phase {
 
 struct NodeRt<S> {
     solver: S,
-    scheme: Box<dyn PenaltyScheme>,
+    /// λ/η/scheme/residual state — the shared protocol kernel
+    kernel: NodeKernel,
     /// θ^t before phase A of round t; θ^{t+1} after
     theta: Vec<f64>,
     theta_next: Vec<f64>,
-    lambda: Vec<f64>,
-    /// out-edge penalties η^t_{i→·}, neighbour-slot order (full degree)
-    etas: Vec<f64>,
-    nbr_mean_prev: Vec<f64>,
-    f_self_prev: f64,
     t: u64,
     phase: Phase,
     caches: Vec<SlotCache>,
-    f_nb: Vec<f64>,
-    // carried across phases within a round (mirrors Engine scratch)
-    eta_sum: f64,
-    primal: f64,
-    dual: f64,
-    f_self: f64,
     // silence-timeout bookkeeping
     wake_epoch: u64,
     timeout_armed: bool,
     /// first round this node participates in (u64::MAX while dormant)
     start_round: u64,
-    /// live-slot count at phase A — η̄ must divide the phase-A η sum by
-    /// the phase-A degree even if churn shrinks the live set mid-round
-    live_deg_a: usize,
     /// the scheme reads folded global residuals (RB) → phase C must wait
     /// for the round's fold
     needs_globals: bool,
@@ -264,33 +282,25 @@ struct FoldState {
     /// round → per-node contribution slots
     pending: BTreeMap<u64, Vec<Option<Contribution>>>,
     next_fold: u64,
-    /// zeros at start, like the engine's `global_mean_prev`
-    global_mean_prev: Vec<f64>,
-    gmean: Vec<f64>,
-    checker: ConvergenceChecker,
-    recorder: Recorder,
+    /// flat node-order round accumulator (the engine's oracle arithmetic)
+    flat: FlatRound,
+    /// the shared stop state machine (checker + recorder + verdict memory)
+    tracker: StopTracker,
     /// θ each node carried at the last fold it contributed to
     latest_committed: Vec<Vec<f64>>,
     /// latest folded (global_primal, global_dual) — what RB observes
     globals: (f64, f64),
-    converged: bool,
-}
-
-struct Scratch {
-    eta_wsum: Vec<f64>,
-    nbr_mean: Vec<f64>,
-    rhos: Vec<Vec<f64>>,
-    mask: Vec<bool>,
 }
 
 /// Application-metric hook invoked at every completed fold with
-/// `(round, latest committed θ per node, per-node liveness)`. The θ
+/// `(round, latest committed θ per node, per-node liveness)` — the
+/// unified [`crate::kernel::AppMetricHook`] surface, boxed. The θ
 /// snapshot is *async-friendly*: a dead, dormant or lagging node's slot
 /// holds the last value it committed (θ⁰ if it never ran), and the
 /// liveness slice says which slots are current — so metrics like the
 /// D-PPCA subspace angle can run under loss and churn without the hook
 /// having to know the protocol.
-pub type AppMetricHook = Box<dyn FnMut(usize, &[Vec<f64>], &[bool]) -> f64>;
+pub type AppMetricHook = Box<dyn crate::kernel::AppMetricHook>;
 
 /// The asynchronous runner (see module docs).
 pub struct AsyncRunner<S: LocalSolver> {
@@ -298,7 +308,9 @@ pub struct AsyncRunner<S: LocalSolver> {
     ctrl: TopologyController,
     sim: NetSim,
     nodes: Vec<NodeRt<S>>,
-    scratch: Scratch,
+    scratch: KernelScratch,
+    /// per-slot liveness mask scratch (phase C observations)
+    mask_scratch: Vec<bool>,
     fold: FoldState,
     /// deferred wake-ups (topology toggles, fold completions)
     pending_wakes: Vec<NodeId>,
@@ -358,53 +370,35 @@ impl<S: LocalSolver> AsyncRunner<S> {
             } else {
                 Phase::Solve
             };
-            let scheme = make_scheme(cfg.scheme, cfg.params, deg);
-            let needs_globals = scheme.needs_global_residuals();
+            let kernel = NodeKernel::new(cfg.scheme, cfg.params, deg, dim);
+            let needs_globals = kernel.needs_global_residuals();
             nodes.push(NodeRt {
                 solver,
-                scheme,
+                kernel,
                 theta,
                 theta_next: vec![0.0; dim],
-                lambda: vec![0.0; dim],
-                etas: vec![cfg.params.eta0; deg],
-                nbr_mean_prev: vec![0.0; dim],
-                f_self_prev: f64::INFINITY,
                 t: 0,
                 phase,
                 caches: (0..deg).map(|_| SlotCache::default()).collect(),
-                f_nb: Vec::with_capacity(deg),
-                eta_sum: 0.0,
-                primal: 0.0,
-                dual: 0.0,
-                f_self: 0.0,
                 wake_epoch: 0,
                 timeout_armed: false,
                 start_round: if is_dormant { u64::MAX } else { 0 },
-                live_deg_a: 0,
                 needs_globals,
             });
         }
         let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
         let latest_committed = nodes.iter().map(|nd| nd.theta.clone()).collect();
         AsyncRunner {
-            scratch: Scratch {
-                eta_wsum: vec![0.0; dim],
-                nbr_mean: vec![0.0; dim],
-                rhos: vec![vec![0.0; dim]; max_deg],
-                mask: Vec::with_capacity(max_deg),
-            },
+            scratch: KernelScratch::new(dim, max_deg),
+            mask_scratch: Vec::with_capacity(max_deg),
             fold: FoldState {
                 pending: BTreeMap::new(),
                 next_fold: 0,
-                global_mean_prev: vec![0.0; dim],
-                gmean: vec![0.0; dim],
-                checker: ConvergenceChecker::new(cfg.tol)
-                    .with_patience(cfg.patience)
-                    .with_warmup(cfg.warmup),
-                recorder: Recorder::with_capacity(cfg.max_iters),
+                flat: FlatRound::new(dim),
+                tracker: StopTracker::new(dim, cfg.tol, cfg.patience, cfg.warmup,
+                                          cfg.max_iters, cfg.params.eta0),
                 latest_committed,
                 globals: (f64::INFINITY, f64::INFINITY),
-                converged: false,
             },
             pending_wakes: Vec::new(),
             foldwait_dirty: false,
@@ -417,11 +411,13 @@ impl<S: LocalSolver> AsyncRunner<S> {
         }
     }
 
-    /// Attach an application-metric hook (see [`AppMetricHook`]); its
-    /// value lands in [`IterStats::app_error`] per completed fold.
+    /// Attach an application-metric hook — the unified
+    /// [`crate::kernel::AppMetricHook`] surface (any
+    /// `FnMut(round, θ, live) -> f64` closure qualifies); its value lands
+    /// in [`IterStats::app_error`] per completed fold.
     pub fn with_app_metric(
         mut self,
-        metric: impl FnMut(usize, &[Vec<f64>], &[bool]) -> f64 + 'static,
+        metric: impl crate::kernel::AppMetricHook + 'static,
     ) -> Self {
         self.metric = Some(Box::new(metric));
         self
@@ -491,7 +487,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
             }
             let j = self.ctrl.view().graph().neighbors(i)[slot];
             let theta = self.nodes[i].theta.clone();
-            let eta = self.nodes[i].etas[slot];
+            let eta = self.nodes[i].kernel.etas[slot];
             self.sim.send(i, j, Payload::Theta { stamp: ts, theta }, true);
             self.sim.send(i, j, Payload::Eta { stamp: es, eta }, true);
         }
@@ -578,7 +574,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
                 .edge_slot(j, node)
                 .expect("graph symmetry");
             let theta = self.nodes[j].theta.clone();
-            let eta = self.nodes[j].etas[rev];
+            let eta = self.nodes[j].kernel.etas[rev];
             self.sim.send(j, node, Payload::Theta { stamp: ts, theta }, true);
             self.sim.send(j, node, Payload::Eta { stamp: es, eta }, true);
             self.pending_wakes.push(j);
@@ -656,7 +652,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
                     let toggled = phase_c(&mut self.nodes[i], i, &mut self.ctrl,
                                           &mut self.sim, &self.cfg,
                                           self.fold.globals,
-                                          &mut self.scratch.mask);
+                                          &mut self.mask_scratch);
                     for (a, b) in toggled {
                         self.pending_wakes.push(a);
                         self.pending_wakes.push(b);
@@ -756,56 +752,23 @@ impl<S: LocalSolver> AsyncRunner<S> {
     }
 
     /// Combine a completed round in node-id order with the sequential
-    /// engine's exact accumulation order (flat sums — no per-shard
-    /// regrouping), push the [`IterStats`], run the convergence check.
+    /// engine's exact accumulation order (the kernel's flat
+    /// [`FlatRound`] — no per-shard regrouping), derive the verdict and
+    /// commit through the shared [`StopTracker`].
     fn do_fold(&mut self, r: u64, slots: Vec<Option<Contribution>>) {
-        let dim = self.fold.gmean.len();
-
-        let mut objective = 0.0;
-        let mut max_primal: f64 = 0.0;
-        let mut max_dual: f64 = 0.0;
-        let mut min_eta = f64::INFINITY;
-        let mut max_eta: f64 = 0.0;
-        let mut sum_eta = 0.0;
-        let mut cnt = 0usize;
-        let mut m = 0usize;
-        self.fold.gmean.iter_mut().for_each(|x| *x = 0.0);
+        self.fold.flat.begin();
         for c in slots.iter().flatten() {
-            objective += c.f_self;
-            max_primal = max_primal.max(c.primal);
-            max_dual = max_dual.max(c.dual);
-            for &e in &c.etas {
-                min_eta = min_eta.min(e);
-                max_eta = max_eta.max(e);
-                sum_eta += e;
-                cnt += 1;
-            }
-            for k in 0..dim {
-                self.fold.gmean[k] += c.theta[k];
-            }
-            m += 1;
+            self.fold.flat.add_node(c.f_self, c.primal, c.dual, &c.etas);
+            self.fold.flat.add_theta(&c.theta);
         }
-        if m == 0 {
+        if self.fold.flat.count == 0 {
             return; // nothing to fold (all contributors died)
         }
-        self.fold.gmean.iter_mut().for_each(|x| *x /= m as f64);
-        let mut gr2 = 0.0;
+        self.fold.flat.finish_mean();
         for c in slots.iter().flatten() {
-            for k in 0..dim {
-                let d = c.theta[k] - self.fold.gmean[k];
-                gr2 += d * d;
-            }
+            self.fold.flat.add_spread(&c.theta);
         }
-        let mut gs2 = 0.0;
-        for k in 0..dim {
-            let d = self.fold.gmean[k] - self.fold.global_mean_prev[k];
-            gs2 += d * d;
-        }
-        let global_primal = gr2.sqrt();
-        let global_dual = self.cfg.params.eta0 * (m as f64).sqrt() * gs2.sqrt();
-        self.fold
-            .global_mean_prev
-            .copy_from_slice(&self.fold.gmean);
+        let g = self.fold.tracker.round_flat(&self.fold.flat);
 
         for (i, c) in slots.into_iter().enumerate() {
             if let Some(c) = c {
@@ -820,31 +783,27 @@ impl<S: LocalSolver> AsyncRunner<S> {
                 let n = self.fold.latest_committed.len();
                 let live: Vec<bool> =
                     (0..n).map(|i| self.ctrl.view().node_live(i)).collect();
-                metric(r as usize, &self.fold.latest_committed, &live)
+                metric.measure(r as usize, &self.fold.latest_committed, &live)
             }
             None => 0.0,
         };
 
-        self.fold.recorder.push(IterStats {
+        let stop = self.fold.tracker.commit(r as usize, IterStats {
             iter: r as usize,
-            objective,
-            max_primal,
-            max_dual,
-            mean_eta: if cnt == 0 { 0.0 } else { sum_eta / cnt as f64 },
-            min_eta: if cnt == 0 { 0.0 } else { min_eta },
-            max_eta,
+            objective: g.objective,
+            max_primal: g.max_primal,
+            max_dual: g.max_dual,
+            mean_eta: g.mean_eta,
+            min_eta: g.min_eta,
+            max_eta: g.max_eta,
             app_error,
         });
-        self.fold.globals = (global_primal, global_dual);
+        self.fold.globals = (g.global_primal, g.global_dual);
         self.fold.next_fold = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
         self.foldwait_dirty = true;
 
-        let hit = self.fold.checker.update(objective);
-        if hit {
-            self.fold.converged = true;
-        }
-        if hit || r + 1 == self.cfg.max_iters as u64 {
+        if stop {
             self.stopped = true;
             self.sim.record(TraceKind::Stop { rounds: r + 1 });
         }
@@ -855,8 +814,8 @@ impl<S: LocalSolver> AsyncRunner<S> {
         let live = (0..n).map(|i| self.ctrl.view().node_live(i)).collect();
         NetReport {
             iterations: self.fold.next_fold as usize,
-            converged: self.fold.converged,
-            recorder: self.fold.recorder,
+            converged: self.fold.tracker.converged,
+            recorder: self.fold.tracker.take_recorder(),
             thetas: self.fold.latest_committed,
             virtual_time: self.sim.now(),
             counters: self.sim.counters,
@@ -867,9 +826,11 @@ impl<S: LocalSolver> AsyncRunner<S> {
 }
 
 // ---------------------------------------------------------------------------
-// Phase bodies. Free functions over disjoint runner fields; each mirrors
-// the corresponding block of `Engine::step` exactly (same loops, same
-// accumulation order) so the zero-fault run is bit-identical.
+// Phase bodies. Free functions over disjoint runner fields; the per-node
+// arithmetic is the shared kernel ([`NodeKernel`]), so the zero-fault
+// bit-parity with `Engine::step` is shared code, not a maintained
+// transcription. This file supplies only the cache-backed [`SlotView`]
+// (stamp resolution + staleness accounting) and the message flow.
 
 /// Check readiness of every live slot of node `i` for a phase. Forced
 /// progress still requires a non-empty cache per live slot (guaranteed
@@ -896,43 +857,70 @@ fn slots_ready<S: LocalSolver>(node: &NodeRt<S>, i: NodeId, view: &LiveView,
     true
 }
 
-/// Count a resolved read's staleness; trace forced fallbacks (shared
-/// accounting — see [`NetSim::note_stale_read`]).
-fn note_read(sim: &mut NetSim, node: NodeId, nbr: NodeId, ideal: u64, used: u64,
-             stale: u64) {
-    sim.note_stale_read(node, nbr, ideal, used, stale);
+/// The async runtime's [`SlotView`]: stamp-indexed bounded-staleness
+/// cache reads with the shared staleness accounting
+/// ([`NetSim::note_stale_read`]) run inside each resolve, so counters and
+/// traces keep their pre-refactor order.
+struct CacheSlots<'a> {
+    caches: &'a mut [SlotCache],
+    view: &'a LiveView,
+    sim: &'a mut NetSim,
+    node: NodeId,
+    nbrs: &'a [NodeId],
+    theta_ideal: u64,
+    eta_ideal: u64,
+    stale: u64,
+}
+
+impl SlotView for CacheSlots<'_> {
+    fn live(&self, slot: usize) -> bool {
+        self.view.slot_live(self.node, slot)
+    }
+
+    fn theta(&mut self, slot: usize) -> (&[f64], u64) {
+        let used = self.caches[slot].resolve_theta(self.theta_ideal);
+        self.sim.note_stale_read(self.node, self.nbrs[slot], self.theta_ideal,
+                                 used, self.stale);
+        (self.caches[slot].theta_at(used), self.theta_ideal.saturating_sub(used))
+    }
+
+    fn theta_again(&mut self, slot: usize) -> &[f64] {
+        let (_, th) = self.caches[slot].read_theta(self.theta_ideal);
+        th
+    }
+
+    fn eta_in(&mut self, slot: usize) -> f64 {
+        let (used, eta) = self.caches[slot].read_eta(self.eta_ideal);
+        self.sim.note_stale_read(self.node, self.nbrs[slot], self.eta_ideal,
+                                 used, self.stale);
+        eta
+    }
 }
 
 /// Phase A: the local solve on (ideally) epoch-`t` neighbour parameters.
 fn phase_a<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
-                           scratch: &mut Scratch, sim: &mut NetSim,
+                           scratch: &mut KernelScratch, sim: &mut NetSim,
                            cfg: &NetConfig, force: bool) -> bool {
     let t = node.t;
     if !slots_ready(node, i, view, t, None, cfg.max_staleness, force) {
         return false;
     }
     let graph = view.graph();
-    let dim = node.theta.len();
-    let mut eta_sum = 0.0;
-    let mut live_deg = 0usize;
-    scratch.eta_wsum.iter_mut().for_each(|x| *x = 0.0);
-    for (slot, &j) in graph.neighbors(i).iter().enumerate() {
-        if !view.slot_live(i, slot) {
-            continue;
-        }
-        live_deg += 1;
-        let e = node.etas[slot];
-        eta_sum += e;
-        let (used, tj) = node.caches[slot].read_theta(t);
-        for k in 0..dim {
-            scratch.eta_wsum[k] += e * (node.theta[k] + tj[k]);
-        }
-        note_read(sim, i, j, t, used, cfg.max_staleness);
+    let deg = graph.degree(i);
+    {
+        let NodeRt { solver, kernel, theta, theta_next, caches, .. } = node;
+        let mut slots = CacheSlots {
+            caches,
+            view,
+            sim: &mut *sim,
+            node: i,
+            nbrs: graph.neighbors(i),
+            theta_ideal: t,
+            eta_ideal: t,
+            stale: cfg.max_staleness,
+        };
+        kernel.solve_into(solver, theta, deg, &mut slots, scratch, theta_next);
     }
-    node.eta_sum = eta_sum;
-    node.live_deg_a = live_deg;
-    node.solver.solve_into(&node.theta, &node.lambda, eta_sum,
-                           &scratch.eta_wsum, &mut node.theta_next);
     std::mem::swap(&mut node.theta, &mut node.theta_next);
 
     // broadcast θ^{t+1}
@@ -946,103 +934,38 @@ fn phase_a<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
     true
 }
 
-/// Phase B: λ update, residuals, objectives — the round-`t` reduce.
+/// Phase B: λ update, residuals, objectives — the round-`t` reduce. The
+/// λ staleness policies (lag damping, skip-on-fallback) are the kernel's
+/// [`DualPolicy`], selected by [`NetConfig::dual_policy`].
 fn phase_b<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
-                           scratch: &mut Scratch, sim: &mut NetSim,
+                           scratch: &mut KernelScratch, sim: &mut NetSim,
                            cfg: &NetConfig, force: bool) -> Option<Contribution> {
     let t = node.t;
     if !slots_ready(node, i, view, t + 1, Some(t), cfg.max_staleness, force) {
         return None;
     }
     let graph = view.graph();
-    let dim = node.theta.len();
     let deg = graph.degree(i);
-
-    // λ_i += ½ Σ_j η̄_ij (θ_i − θ_j), η̄ the edge-mean penalty, fused with
-    // the neighbour-mean accumulation so each slot's θ^{t+1} is resolved
-    // once. λ and nbr_mean are independent accumulators, each still fed
-    // in slot order — the floating-point grouping (and hence zero-fault
-    // bit-parity with the engine's two separate passes) is unchanged.
-    scratch.nbr_mean.iter_mut().for_each(|x| *x = 0.0);
-    let mut live_deg = 0usize;
-    for (slot, &j) in graph.neighbors(i).iter().enumerate() {
-        if !view.slot_live(i, slot) {
-            continue;
-        }
-        live_deg += 1;
-        let (used_e, eta_in) = node.caches[slot].read_eta(t);
-        note_read(sim, i, j, t, used_e, cfg.max_staleness);
-        let eta_bar = 0.5 * (node.etas[slot] + eta_in);
-        let (used_t, tj) = node.caches[slot].read_theta(t + 1);
-        // lag-aware damping (opt-in): a dual step computed from a θ^{t+1}
-        // read that resolved `lag` rounds stale is scaled by 1/(1+lag) —
-        // stale steps are exactly the positive-feedback term behind the
-        // staleness ≥ 2 divergence. The undamped branch is kept verbatim
-        // so the default stays literally the pre-damping arithmetic.
-        let lag = (t + 1).saturating_sub(used_t);
-        if cfg.lag_damping && lag > 0 {
-            let damp = 1.0 / (1.0 + lag as f64);
-            for k in 0..dim {
-                node.lambda[k] += damp * (0.5 * eta_bar * (node.theta[k] - tj[k]));
-                scratch.nbr_mean[k] += tj[k];
-            }
-        } else {
-            for k in 0..dim {
-                node.lambda[k] += 0.5 * eta_bar * (node.theta[k] - tj[k]);
-                scratch.nbr_mean[k] += tj[k];
-            }
-        }
-        note_read(sim, i, j, t + 1, used_t, cfg.max_staleness);
-    }
-
-    // local residuals (paper eq. 5) over the live neighbourhood. The
-    // neighbour mean divides by the phase-B live count (it must match the
-    // sum just accumulated), while η̄ divides the phase-A η sum by the
-    // phase-A live count — mid-round churn must not inflate the dual
-    // residual by pairing one snapshot's sum with the other's degree. At
-    // a stable topology both counts are equal (and engine-bit-identical).
-    let inv_deg = 1.0 / live_deg.max(1) as f64;
-    scratch.nbr_mean.iter_mut().for_each(|x| *x *= inv_deg);
-    let inv_deg_a = 1.0 / node.live_deg_a.max(1) as f64;
-    let eta_bar_node = node.eta_sum * inv_deg_a;
-    let mut r2 = 0.0;
-    let mut s2 = 0.0;
-    for k in 0..dim {
-        let r = node.theta[k] - scratch.nbr_mean[k];
-        let s = eta_bar_node * (scratch.nbr_mean[k] - node.nbr_mean_prev[k]);
-        r2 += r * r;
-        s2 += s * s;
-    }
-    node.nbr_mean_prev.copy_from_slice(&scratch.nbr_mean);
-    node.primal = r2.sqrt();
-    node.dual = s2.sqrt();
-
-    // objectives (f at bridge midpoints only if the scheme asks)
-    node.f_self = node.solver.objective(&node.theta);
-    node.f_nb.clear();
-    if node.scheme.needs_neighbor_objectives() {
-        for slot in 0..deg {
-            let rho = &mut scratch.rhos[slot];
-            if view.slot_live(i, slot) {
-                let (_, tj) = node.caches[slot].read_theta(t + 1);
-                for k in 0..dim {
-                    rho[k] = 0.5 * (node.theta[k] + tj[k]);
-                }
-            } else {
-                // dead slot: placeholder the scheme will mask out
-                rho.copy_from_slice(&node.theta);
-            }
-        }
-        node.solver.objective_batch_into(&scratch.rhos[..deg], &mut node.f_nb);
-    } else {
-        node.f_nb.resize(deg, 0.0);
+    {
+        let NodeRt { solver, kernel, theta, caches, .. } = node;
+        let mut slots = CacheSlots {
+            caches,
+            view,
+            sim: &mut *sim,
+            node: i,
+            nbrs: graph.neighbors(i),
+            theta_ideal: t + 1,
+            eta_ideal: t,
+            stale: cfg.max_staleness,
+        };
+        kernel.reduce(solver, theta, deg, &mut slots, cfg.dual_policy(), scratch);
     }
 
     Some(Contribution {
-        f_self: node.f_self,
-        primal: node.primal,
-        dual: node.dual,
-        etas: node.etas.clone(),
+        f_self: node.kernel.f_self,
+        primal: node.kernel.primal,
+        dual: node.kernel.dual,
+        etas: node.kernel.etas.clone(),
         theta: node.theta.clone(),
     })
 }
@@ -1066,19 +989,7 @@ fn phase_c<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId,
     // engines and the zero-fault async run construct identical
     // observations
     let live = if all_live { None } else { Some(&mask_scratch[..]) };
-    let obs = NodeObservation {
-        t: t as usize,
-        primal_norm: node.primal,
-        dual_norm: node.dual,
-        global_primal: globals.0,
-        global_dual: globals.1,
-        f_self: node.f_self,
-        f_self_prev: node.f_self_prev,
-        f_neighbors: &node.f_nb,
-        live,
-    };
-    node.scheme.update(&obs, &mut node.etas);
-    node.f_self_prev = node.f_self;
+    node.kernel.observe(t as usize, globals, live);
 
     // broadcast η^{t+1} (one scalar per neighbour — the directed penalty
     // the receiver needs for its symmetrized dual step)
@@ -1086,8 +997,9 @@ fn phase_c<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId,
         if !ctrl.view().slot_live(i, slot) {
             continue;
         }
-        sim.send(i, j, Payload::Eta { stamp: t + 1, eta: node.etas[slot] }, false);
+        sim.send(i, j, Payload::Eta { stamp: t + 1, eta: node.kernel.etas[slot] },
+                 false);
     }
 
-    ctrl.observe_etas(i, &node.etas, sim)
+    ctrl.observe_etas(i, &node.kernel.etas, sim)
 }

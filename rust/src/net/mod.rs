@@ -52,6 +52,27 @@
 //! the async fixed point (consensus still holds — all nodes agree — but
 //! the agreed point shifts slightly from the synchronous optimum).
 //!
+//! **Stale-dual policies.** Two complementary one-line kernel policies
+//! ([`crate::kernel::DualPolicy`]) blunt the stale-λ feedback without
+//! touching the exact-read arithmetic:
+//!
+//! * [`NetConfig::lag_damping`] *shrinks* every stale dual step by
+//!   `1/(1+lag)` — graceful degradation proportional to how stale the
+//!   read was, at the cost of slowing the dual on *every* lagged edge,
+//!   including mildly stale ones that were still informative;
+//! * [`NetConfig::skip_lambda_on_fallback`] *drops* the dual step only
+//!   for forced fallback reads (lag past the `max_staleness` budget),
+//!   where the generation mismatch is unbounded and the step is mostly
+//!   noise — within-budget stale steps keep their full magnitude, so
+//!   convergence speed is preserved when the budget holds, but a long
+//!   outage freezes λ on the silent edge entirely (the bias parks
+//!   instead of drifting).
+//!
+//! Both are bit-transparent when no read lags; together they skip beyond
+//! the budget and damp within it. The `stale3` / `stale3_damped` /
+//! `stale3_skip` scenario cells measure the raw / shrink / drop variants
+//! of the same over-budget regime side by side.
+//!
 //! ## NAP → topology mapping (summary)
 //!
 //! The paper's NAP budgets starve adaptation on edges whose τ stream

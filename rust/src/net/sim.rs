@@ -20,6 +20,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::graph::NodeId;
+use crate::kernel::StopSnapshot;
 use crate::metrics::{NetCounters, StatPartial};
 use crate::util::rng::Pcg;
 
@@ -143,6 +144,11 @@ pub enum Payload {
     /// plus the max-gossip statistics `[max_primal, max_dual, max_eta,
     /// −min_eta]`.
     Gossip { round: u64, mass: Vec<f64>, weight: f64, maxes: [f64; 4] },
+    /// Cluster leader-election handoff: the departing (or demoted) root
+    /// serializes its [`StopSnapshot`] — checker, recorder, verdict
+    /// memory — and ships it to the machine resuming the recorder duty;
+    /// `cursor` is the next round the receiver will fold.
+    Checker { cursor: u64, snap: Box<StopSnapshot> },
 }
 
 impl Payload {
@@ -155,6 +161,7 @@ impl Payload {
             Payload::Part { round, .. }
             | Payload::Verdict { round, .. }
             | Payload::Gossip { round, .. } => round,
+            Payload::Checker { cursor, .. } => cursor,
         }
     }
 
@@ -167,6 +174,7 @@ impl Payload {
             Payload::Part { .. } => "part",
             Payload::Verdict { .. } => "verdict",
             Payload::Gossip { .. } => "gossip",
+            Payload::Checker { .. } => "checker",
         }
     }
 }
@@ -230,6 +238,9 @@ pub enum TraceKind {
     FallbackVerdict { machine: NodeId, round: u64 },
     /// the collective spanning tree was rebuilt with a new root
     Reroot { root: NodeId },
+    /// the checker/recorder state was serialized and sent `from → to`
+    /// (cluster leader-election handoff)
+    Handoff { from: NodeId, to: NodeId },
 }
 
 /// Heap entry: ordered by (time, seq) via the derived lexicographic Ord,

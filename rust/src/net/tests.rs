@@ -409,6 +409,75 @@ fn lag_damping_tames_the_over_budget_staleness_cell() {
             "damping must not be worse than the raw stale3 cell: {pd} vs {pu}");
 }
 
+// -- satellite: skip-λ-on-fallback (the complementary kernel policy) ---------
+
+#[test]
+fn skip_lambda_is_bit_identical_when_no_read_falls_back() {
+    // zero faults + lock-step: no read is ever forced past the budget, so
+    // the skip branch never fires and the flag is bit-transparent
+    let run = |skip: bool| {
+        AsyncRunner::new(
+            Topology::Ring.build(6).unwrap(),
+            quad_nodes(6, 3, 5),
+            NetConfig {
+                scheme: SchemeKind::Nap,
+                tol: 1e-4,
+                max_iters: 60,
+                seed: 11,
+                skip_lambda_on_fallback: skip,
+                ..Default::default()
+            },
+            FaultPlan::none(),
+        )
+        .run()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.thetas, on.thetas);
+    assert_eq!(off.iterations, on.iterations);
+    assert_eq!(off.recorder.stats.len(), on.recorder.stats.len());
+    for (a, b) in off.recorder.stats.iter().zip(&on.recorder.stats) {
+        assert_stats_bit_equal(a, b);
+    }
+}
+
+#[test]
+fn skip_lambda_tames_the_over_budget_staleness_cell() {
+    // the stale3 regime again (cf. the damping test): dropping the λ
+    // increments of forced fallback reads must leave the run no worse
+    // than the raw over-budget cell — and finite
+    let run = |skip: bool| {
+        AsyncRunner::new(
+            Topology::Ring.build(8).unwrap(),
+            quad_nodes(8, 2, 33),
+            NetConfig {
+                scheme: SchemeKind::Fixed,
+                tol: 0.0,
+                max_iters: 300,
+                seed: 5,
+                max_staleness: 3,
+                silence_timeout: 16,
+                skip_lambda_on_fallback: skip,
+                tracing: false,
+                ..Default::default()
+            },
+            FaultPlan {
+                link: LinkModel { base: 2, jitter: 4, loss: 0.10, dup: 0.02 },
+                ..FaultPlan::none()
+            },
+        )
+        .run()
+    };
+    let raw = run(false);
+    let skipped = run(true);
+    assert!(skipped.counters.stale_reads > 0, "budget must actually be used");
+    let pr = raw.recorder.stats.last().unwrap().max_primal;
+    let ps = skipped.recorder.stats.last().unwrap().max_primal;
+    assert!(ps.is_finite(), "skip run must stay finite");
+    assert!(ps < pr || ps < 1e-2,
+            "skipping must not be worse than the raw stale3 cell: {ps} vs {pr}");
+}
+
 // -- satellite: async-friendly app-metric hook -------------------------------
 
 #[test]
