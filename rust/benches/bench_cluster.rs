@@ -13,6 +13,7 @@ use fadmm::experiments::common::quad_problem_factory;
 use fadmm::graph::Topology;
 use fadmm::net::{FaultPlan, LinkModel};
 use fadmm::penalty::SchemeKind;
+use fadmm::pool::ExecMode;
 use fadmm::util::bench::{black_box, Bencher};
 use fadmm::util::json::{num, obj, s, Json};
 
@@ -131,6 +132,67 @@ fn main() {
         }
     }
 
+    println!("== pool vs scoped execution (link latency 2, overlap win) ==");
+    // deterministic link delay with zero loss: every boundary batch is in
+    // flight when a machine reaches its phase-A barrier, so pool mode must
+    // overlap the interior solves with the wait; scoped mode stalls whole
+    const POOL_ROUNDS: usize = 80;
+    let mut pool_fields: Vec<(&str, Json)> = Vec::new();
+    for dim in [3usize, 32] {
+        let run_exec = |exec| {
+            ClusterRunner::new(
+                Topology::Ring.build(N).unwrap(),
+                ClusterConfig {
+                    scheme: SchemeKind::Ap,
+                    tol: 0.0,
+                    max_iters: POOL_ROUNDS,
+                    seed: 5,
+                    machines: MACHINES,
+                    workers: 2,
+                    exec,
+                    tracing: false,
+                    ..Default::default()
+                },
+                FaultPlan {
+                    link: LinkModel { base: 2, jitter: 0, loss: 0.0, dup: 0.0 },
+                    ..FaultPlan::none()
+                },
+                quad_problem_factory(N, dim, 77),
+            )
+            .unwrap()
+            .run()
+        };
+        let pool_name = format!("cluster pool dim {dim} x {POOL_ROUNDS} rounds");
+        let scoped_name = format!("cluster scoped dim {dim} x {POOL_ROUNDS} rounds");
+        let mut last_report = None;
+        b.bench(&pool_name, || {
+            last_report = Some(run_exec(ExecMode::Pool));
+        });
+        let pool_report = last_report.expect("bench ran at least once");
+        b.bench(&scoped_name, || {
+            black_box(run_exec(ExecMode::Scoped));
+        });
+        let pool_ns = b.result(&pool_name).unwrap().mean_ns / POOL_ROUNDS as f64;
+        let scoped_ns = b.result(&scoped_name).unwrap().mean_ns / POOL_ROUNDS as f64;
+        let overlaps = pool_report.counters.overlap_dispatches;
+        assert!(overlaps > 0,
+                "latency plan must drive interior overlap (got {overlaps})");
+        println!("  dim={dim}: pool {pool_ns:.0}ns/iter vs scoped {scoped_ns:.0}ns/iter \
+                  ({}); overlap dispatches {overlaps}",
+                 if pool_ns <= scoped_ns { "pool wins" } else { "scoped wins" });
+        let key = if dim == 3 { "dim_3" } else { "dim_32" };
+        pool_fields.push((key, obj(vec![
+            ("pool_ns_per_iter", num(pool_ns)),
+            ("scoped_ns_per_iter", num(scoped_ns)),
+            ("pool_win", Json::Bool(pool_ns <= scoped_ns)),
+            ("overlap_dispatches", num(overlaps as f64)),
+        ])));
+    }
+    pool_fields.push(("rounds", num(POOL_ROUNDS as f64)));
+    pool_fields.push(("crossover_note", s(
+        "the overlap win scales with interior solve cost: marginal at dim 3, \
+         larger at dim 32 where hidden compute per boundary wait grows")));
+
     let scenario = obj(scenario_fields
         .iter()
         .map(|(k, v)| (k.as_str(), v.clone()))
@@ -141,6 +203,7 @@ fn main() {
         ("machines", num(MACHINES as f64)),
         ("topology", s("ring")),
         ("scenario", scenario),
+        ("pool", obj(pool_fields)),
     ];
     match b.write_json("cluster", extra) {
         Ok(path) => println!("wrote {}", path.display()),

@@ -21,8 +21,10 @@ use std::sync::Arc;
 use fadmm::consensus::solvers::QuadraticNode;
 use fadmm::consensus::{Engine, EngineConfig, LocalSolver};
 use fadmm::coordinator::{ShardedConfig, ShardedRunner, SolverFactory};
+use fadmm::experiments::common::quad_problem_factory;
 use fadmm::graph::Topology;
 use fadmm::penalty::SchemeKind;
+use fadmm::pool::{threads_spawned, ExecMode};
 use fadmm::util::bench::{black_box, Bencher};
 use fadmm::util::json::{num, obj, s, Json};
 use fadmm::util::rng::Pcg;
@@ -216,6 +218,75 @@ fn main() {
         "thread-per-node baseline skipped at scale: it needs one OS thread \
          plus per-neighbour Vec clones per node per iteration")));
     extra.push(("scale", obj(scale_fields)));
+
+    println!("== persistent pool vs scoped spawns (ring 64, ADMM-AP) ==");
+    const POOL_WORKERS: usize = 4;
+    const POOL_ITERS: usize = 60;
+    const SPAWN_RUNS: u64 = 5;
+    let mut pool_fields: Vec<(&str, Json)> = Vec::new();
+    for dim in [3usize, 32] {
+        let cfg = |exec| ShardedConfig {
+            scheme: SchemeKind::Ap,
+            tol: 0.0,
+            max_iters: POOL_ITERS,
+            workers: POOL_WORKERS,
+            exec,
+            ..Default::default()
+        };
+        let factory = quad_problem_factory(64, dim, 9);
+        let pool_runner =
+            ShardedRunner::new(Topology::Ring.build(64).unwrap(), cfg(ExecMode::Pool));
+        let scoped_runner =
+            ShardedRunner::new(Topology::Ring.build(64).unwrap(), cfg(ExecMode::Scoped));
+
+        // spawn accounting over a fixed run count, outside the timed loop:
+        // the pool pays its workers once per runner lifetime, the scoped
+        // baseline pays them again on every run
+        let before = threads_spawned();
+        for _ in 0..SPAWN_RUNS {
+            black_box(pool_runner.run(factory.clone()).unwrap());
+        }
+        let pool_spawns = threads_spawned() - before;
+        let before = threads_spawned();
+        for _ in 0..SPAWN_RUNS {
+            black_box(scoped_runner.run(factory.clone()).unwrap());
+        }
+        let scoped_spawns = threads_spawned() - before;
+        assert!(pool_spawns <= POOL_WORKERS as u64,
+                "pool spawns must be O(workers) per runner, got {pool_spawns}");
+        assert_eq!(scoped_spawns, SPAWN_RUNS * POOL_WORKERS as u64,
+                   "scoped baseline spawns one thread per worker per run");
+
+        let pool_name = format!("pool dim {dim} ring 64 x {POOL_ITERS} iters");
+        let scoped_name = format!("scoped dim {dim} ring 64 x {POOL_ITERS} iters");
+        b.bench(&pool_name, || {
+            black_box(pool_runner.run(factory.clone()).unwrap());
+        });
+        b.bench(&scoped_name, || {
+            black_box(scoped_runner.run(factory.clone()).unwrap());
+        });
+        let pool_ns = b.result(&pool_name).unwrap().mean_ns / POOL_ITERS as f64;
+        let scoped_ns = b.result(&scoped_name).unwrap().mean_ns / POOL_ITERS as f64;
+        println!("  dim={dim}: pool {pool_ns:.0}ns/iter vs scoped {scoped_ns:.0}ns/iter \
+                  ({}); spawns over {SPAWN_RUNS} runs: pool {pool_spawns}, \
+                  scoped {scoped_spawns}",
+                 if pool_ns <= scoped_ns { "pool wins" } else { "scoped wins" });
+        let key = if dim == 3 { "dim_3" } else { "dim_32" };
+        pool_fields.push((key, obj(vec![
+            ("pool_ns_per_iter", num(pool_ns)),
+            ("scoped_ns_per_iter", num(scoped_ns)),
+            ("pool_win", Json::Bool(pool_ns <= scoped_ns)),
+            ("threads_spawned_pool", num(pool_spawns as f64)),
+            ("threads_spawned_scoped", num(scoped_spawns as f64)),
+        ])));
+    }
+    pool_fields.push(("workers", num(POOL_WORKERS as f64)));
+    pool_fields.push(("spawn_runs", num(SPAWN_RUNS as f64)));
+    pool_fields.push(("crossover_note", s(
+        "spawn amortization dominates at dim 3 where solves are cheap; at \
+         dim 32 the solve cost hides synchronization and the two modes \
+         converge — the crossover sits between those dims")));
+    extra.push(("pool", obj(pool_fields)));
 
     let path = b.write_json("coordinator", extra).expect("write bench json");
     println!("wrote {}", path.display());

@@ -8,6 +8,12 @@
 # compares every future smoke run against the numbers written here. The
 # full budget (no FADMM_BENCH_FAST) writes BENCH_<target>.json at the
 # repo root, replacing any provisional envelope baseline.
+#
+# Both gated targets now carry persistent-pool cells: bench_coordinator
+# reports spawn amortization (threads spawned per runner vs per run) and
+# bench_cluster reports the overlap win (pool vs scoped ns/iter under
+# link latency). Refresh with --all so the committed BENCH_cluster.json
+# pool envelope tracks measured numbers, not the provisional bound.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."

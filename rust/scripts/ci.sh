@@ -181,6 +181,72 @@ print(f"cluster gate: OK ({len(cells)} cells)")
 PY
   fi
 
+  # ---- pool gates ----------------------------------------------------
+  # Two machine-speed-tolerant checks on the persistent worker pool:
+  #  * overlap win (cluster): the fresh pool_ns_per_iter cell may not
+  #    exceed scoped_ns_per_iter by more than FADMM_POOL_GATE_FACTOR
+  #    (default 1.5 — smoke numbers are noisy; the committed envelope and
+  #    full-budget runs hold pool <= scoped), and the latency cells must
+  #    actually have overlapped (overlap_dispatches > 0);
+  #  * spawn amortization (coordinator): thread spawns per runner must be
+  #    O(workers), not O(runs x workers) — the scoped baseline count
+  #    doubles as the pattern-rot guard for the instrumentation.
+  echo "== pool gates (overlap win + spawn amortization) =="
+  if ! command -v python3 >/dev/null 2>&1; then
+    echo "pool gates: python3 unavailable; skipping"
+  else
+    python3 - "$smoke_dir/BENCH_cluster.json" \
+              "$smoke_dir/BENCH_coordinator.json" \
+              "${FADMM_POOL_GATE_FACTOR:-1.5}" <<'PY'
+import json, sys
+
+cluster = json.load(open(sys.argv[1]))
+coord = json.load(open(sys.argv[2]))
+factor = float(sys.argv[3])
+failures = []
+
+cpool = cluster.get("pool", {})
+for key in ("dim_3", "dim_32"):
+    cell = cpool.get(key)
+    if not isinstance(cell, dict):
+        failures.append(f"cluster pool.{key}: cell missing from fresh JSON")
+        continue
+    p, s = cell.get("pool_ns_per_iter"), cell.get("scoped_ns_per_iter")
+    if p is None or s is None or s <= 0:
+        failures.append(f"cluster pool.{key}: ns/iter fields missing")
+        continue
+    print(f"pool gate: cluster {key}: pool {p:.0f}ns/iter vs scoped {s:.0f}ns/iter "
+          f"(x{p / s:.2f})")
+    if p > s * factor:
+        failures.append(f"cluster pool.{key}: pool {p:.0f}ns > {factor} x scoped {s:.0f}ns")
+    if cell.get("overlap_dispatches", 0) <= 0:
+        failures.append(f"cluster pool.{key}: no interior overlap dispatched")
+
+kpool = coord.get("pool", {})
+workers = kpool.get("workers")
+runs = kpool.get("spawn_runs")
+for key in ("dim_3", "dim_32"):
+    cell = kpool.get(key)
+    if not isinstance(cell, dict) or workers is None or runs is None:
+        failures.append(f"coordinator pool.{key}: spawn cell missing from fresh JSON")
+        continue
+    pooled, scoped = cell.get("threads_spawned_pool"), cell.get("threads_spawned_scoped")
+    if pooled is not None and scoped is not None:
+        print(f"pool gate: coordinator {key}: spawns over {runs:.0f} runs: "
+              f"pool {pooled:.0f}, scoped {scoped:.0f} ({workers:.0f} workers)")
+    if pooled is None or pooled > workers:
+        failures.append(f"coordinator pool.{key}: pool spawned {pooled} threads, "
+                        f"want <= {workers:.0f} per runner")
+    if scoped is None or scoped != runs * workers:
+        failures.append(f"coordinator pool.{key}: scoped spawn count {scoped} != "
+                        f"runs x workers {runs * workers:.0f} (instrumentation rot?)")
+
+if failures:
+    sys.exit("pool gates: " + "; ".join(failures))
+print("pool gates: OK")
+PY
+  fi
+
   # ---- bench regression gate -----------------------------------------
   # Compare the freshly measured per-iteration coordination overhead
   # against the committed BENCH_coordinator.json at the repo root. Fails

@@ -20,19 +20,23 @@
 //!   the cluster.
 //! * **Gossip** ([`GossipRound`]): every machine starts a push-sum
 //!   instance per round — mass vector `[node count, Σf, Σ‖θ‖², Ση,
-//!   η-count, Σθ…]` and weight 1 — and repeatedly halves-and-pushes to a
-//!   deterministically rotating live neighbour. *Cumulative* per-link
-//!   mass makes the exchange loss-robust (a dropped message's mass rides
-//!   on the next one), and max-gossip fields carry the max/min
+//!   η-count, ones, Σθ…]` and weight 1 — and repeatedly halves-and-pushes
+//!   to a deterministically rotating live neighbour. *Cumulative*
+//!   per-link mass makes the exchange loss-robust (a dropped message's
+//!   mass rides on the next one), and max-gossip fields carry the max/min
 //!   statistics. After a fixed tick budget each machine reads ratio
 //!   estimates: ratios of mass components converge to ratios of the true
 //!   totals over the machine's live component, so the estimates
 //!   *renormalize* over whatever subset of the cluster is reachable — no
-//!   membership oracle needed. Residuals are therefore reported
-//!   per-node-normalized (`√(avg‖θ‖² − ‖θ̄‖²)` and `η⁰‖θ̄ − θ̄_prev‖`);
-//!   the RB balance test compares their *ratio*, from which the √n scale
-//!   cancels, so RB under gossip is the paper's rule fed by a truly
-//!   decentralized estimator.
+//!   membership oracle needed. The `ones` slot is the live-count
+//!   estimator: the designated recorder deposits exactly one unit per
+//!   round, so `count/ones` estimates the live node cardinality `n̂`, and
+//!   the runner restores the true `√n̂` residual scale (and `Σf ≈ avg_f·n̂`
+//!   objective) from the per-node-normalized base estimates
+//!   (`√(avg‖θ‖² − ‖θ̄‖²)` and `η⁰‖θ̄ − θ̄_prev‖`). Both residuals carry
+//!   the same factor, so the RB balance *ratio* — and hence every RB
+//!   decision — is invariant to it; a component that never reaches the
+//!   designated machine reads `n̂ = 0` and keeps the normalized scale.
 //!
 //! The driver (`cluster::runner`) owns all message flow; this module owns
 //! the data structures and the pure arithmetic.
@@ -163,7 +167,11 @@ pub(crate) const MASS_F: usize = 1;
 pub(crate) const MASS_SQ: usize = 2;
 pub(crate) const MASS_ETA: usize = 3;
 pub(crate) const MASS_ETA_CNT: usize = 4;
-pub(crate) const MASS_THETA: usize = 5;
+/// live-count estimator mass: exactly one unit deposited per round by the
+/// designated recorder, so `x[MASS_COUNT] / x[MASS_ONE]` estimates the
+/// live node cardinality of the component
+pub(crate) const MASS_ONE: usize = 5;
+pub(crate) const MASS_THETA: usize = 6;
 
 /// One machine's push-sum instance for one round.
 pub(crate) struct GossipRound {
@@ -263,6 +271,9 @@ pub(crate) struct GossipEstimate {
     pub max_eta: f64,
     pub max_primal: f64,
     pub max_dual: f64,
+    /// estimated live node count (`count/ones` ratio); `0.0` when the
+    /// component holds no ones mass (designated machine unreachable)
+    pub n_live: f64,
 }
 
 pub(crate) fn estimate(round: &GossipRound, dim: usize) -> GossipEstimate {
@@ -284,6 +295,8 @@ pub(crate) fn estimate(round: &GossipRound, dim: usize) -> GossipEstimate {
     } else {
         (0.0, 0.0)
     };
+    let ones = round.x[MASS_ONE];
+    let n_live = if ones > 1e-300 { count / ones } else { 0.0 };
     GossipEstimate {
         gmean,
         avg_f,
@@ -293,6 +306,7 @@ pub(crate) fn estimate(round: &GossipRound, dim: usize) -> GossipEstimate {
         max_eta: round.maxes[2],
         max_primal: round.maxes[0],
         max_dual: round.maxes[1],
+        n_live,
     }
 }
 
@@ -405,8 +419,9 @@ mod tests {
     fn estimate_reads_ratio_statistics() {
         let mut gr = GossipRound::new(MASS_THETA + 2);
         // 4 nodes total, Σf = 8, Σ‖θ‖² = 20, Ση = 12 over 6 edges,
+        // ones = 2 (mixing halved the unit twice against count),
         // Σθ = (4, 8)
-        let mass = [4.0, 8.0, 20.0, 12.0, 6.0, 4.0, 8.0];
+        let mass = [4.0, 8.0, 20.0, 12.0, 6.0, 2.0, 4.0, 8.0];
         gr.add_own(&mass, [0.5, 0.25, 3.0, -1.0]);
         let est = estimate(&gr, 2);
         assert_eq!(est.avg_f, 2.0);
@@ -418,6 +433,52 @@ mod tests {
         assert_eq!(est.max_eta, 3.0);
         assert_eq!(est.max_primal, 0.5);
         assert_eq!(est.max_dual, 0.25);
+        assert_eq!(est.n_live, 2.0, "count/ones ratio");
+    }
+
+    #[test]
+    fn live_count_estimator_renormalizes_under_churn() {
+        // full cluster: machines hold [2, 3, 4] nodes; machine 0 is the
+        // designated recorder and deposits one unit of ones mass. After
+        // all-pairs mixing every machine's count/ones ratio reads the
+        // true cardinality 9.
+        let run = |counts: &[f64], designated_present: bool| -> Vec<f64> {
+            let n = counts.len();
+            let mut rounds: Vec<GossipRound> =
+                counts.iter().map(|_| GossipRound::new(MASS_THETA)).collect();
+            for (m, gr) in rounds.iter_mut().enumerate() {
+                let mut mass = vec![0.0; MASS_THETA];
+                mass[MASS_COUNT] = counts[m];
+                if m == 0 && designated_present {
+                    mass[MASS_ONE] = 1.0;
+                }
+                gr.add_own(&mass, [0.0, 0.0, 0.0, f64::NEG_INFINITY]);
+            }
+            for _ in 0..24 {
+                for src in 0..n {
+                    let dst = (src + 1) % n;
+                    let (mass, w) = rounds[src].push_half(dst);
+                    let maxes = rounds[src].maxes;
+                    rounds[dst].absorb(src, &mass, w, maxes);
+                }
+            }
+            rounds.iter().map(|gr| estimate(gr, 0).n_live).collect()
+        };
+
+        for est in run(&[2.0, 3.0, 4.0], true) {
+            assert!((est - 9.0).abs() < 1e-6, "full cluster n̂ = {est}");
+        }
+        // churn: the 4-node machine left — the surviving component's
+        // ratio renormalizes to 5 with no membership oracle
+        for est in run(&[2.0, 3.0], true) {
+            assert!((est - 5.0).abs() < 1e-6, "post-churn n̂ = {est}");
+        }
+        // partitioned away from the designated machine: no ones mass, the
+        // estimate degrades to the sentinel 0 (callers keep the
+        // per-node-normalized scale)
+        for est in run(&[3.0, 4.0], false) {
+            assert_eq!(est, 0.0, "no designated ⇒ sentinel");
+        }
     }
 
     #[test]

@@ -9,11 +9,31 @@
 //! [`crate::consensus::LocalSolver::solve_into`] hot path writing θ^{t+1}
 //! straight into the parity-`q` block, and per-shard
 //! [`StatPartial`]s with centered second-pass statistics, accumulated in
-//! node order. Shards execute on scoped worker threads (one spawn per
-//! phase — the join is the phase barrier) or inline when the machine has
-//! a single shard; either way the arithmetic is identical because all
-//! cross-shard data flows through the parity-disciplined arena and the
-//! partials combine in shard order.
+//! node order. Shards execute as one job set on the cluster's persistent
+//! [`PhasePool`] (workers spawned once per run and fed per-phase jobs —
+//! the set join is the phase barrier), as scoped spawns under
+//! [`ExecMode::Scoped`] (the seed behaviour, kept as the bit-parity
+//! baseline), or inline when the machine has a single shard. All three
+//! paths share one dispatch helper ([`run_shards`]) so the spawn/inline
+//! decision lives in exactly one place, and they are
+//! arithmetic-identical because all cross-shard data flows through the
+//! parity-disciplined arena and the partials combine in shard order.
+//!
+//! ## Interior vs boundary slices (the overlap contract)
+//!
+//! Each shard's nodes are split once at build time into *interior*
+//! (every neighbour on this machine) and *boundary* (≥ 1 cross-machine
+//! edge) index lists. Phase A is per-node independent, so while a
+//! machine still waits for boundary θ/η batches in flight the driver may
+//! dispatch the interior slice to the pool asynchronously
+//! ([`MachineRt::dispatch_interior`]) and keep processing network
+//! events; once the boundary caches are ready it joins the ticket,
+//! resolves the caches, and completes only the boundary slice
+//! ([`MachineRt::run_phase_a_boundary`]). Interior solves read only
+//! local parity-p state — their liveness mask short-circuits on the
+//! own-machine test, so they never touch the link mask — which keeps
+//! the split bit-exact and race-free. Phase B is *never* split: its
+//! [`StatPartial`] absorption order is part of the bit contract.
 //!
 //! The *driver* (the cluster runner's single-threaded event loop) owns
 //! everything between phases: it resolves boundary θ/η reads from the
@@ -31,6 +51,7 @@ use crate::graph::{Graph, NodeId};
 use crate::kernel::{DualPolicy, KernelScratch, NodeKernel, SlotView};
 use crate::metrics::StatPartial;
 use crate::penalty::{SchemeKind, SchemeParams};
+use crate::pool::{note_thread_spawn, ExecMode, PhasePool, Ticket};
 use crate::util::rng::Pcg;
 
 use super::partition::MachinePartition;
@@ -134,6 +155,13 @@ pub(crate) struct MachineRt<S> {
     /// this machine's contiguous slice of (relabeled) node ids
     pub span: Range<usize>,
     pub shards: Vec<Range<usize>>,
+    /// per shard: chunk-local indices of nodes whose every neighbour is
+    /// on this machine (safe to solve while boundary batches are in
+    /// flight)
+    pub interior: Vec<Vec<usize>>,
+    /// per shard: chunk-local indices of nodes with ≥ 1 cross-machine
+    /// edge (the slice the phase barrier is really about)
+    pub boundary: Vec<Vec<usize>>,
     pub arena: ParamArena,
     pub nodes: Vec<MNode<S>>,
     pub scratch: Vec<ShardScratch>,
@@ -301,6 +329,27 @@ impl<S: LocalSolver + Send> MachineRt<S> {
             }
         }
 
+        // interior/boundary split per shard (chunk-local indices): a node
+        // is interior iff every neighbour lives on this machine, so its
+        // phase-A solve touches no boundary cache and no link mask
+        let lo = span.start;
+        let mut interior: Vec<Vec<usize>> = Vec::with_capacity(shards.len());
+        let mut boundary: Vec<Vec<usize>> = Vec::with_capacity(shards.len());
+        for shard in &shards {
+            let mut ins = Vec::new();
+            let mut outs = Vec::new();
+            for i in shard.clone() {
+                let k = i - shard.start;
+                if nodes[i - lo].nbr_machine.iter().all(|&pm| pm == id) {
+                    ins.push(k);
+                } else {
+                    outs.push(k);
+                }
+            }
+            interior.push(ins);
+            boundary.push(outs);
+        }
+
         let workers_used = shards.len();
         MachineRt {
             id,
@@ -342,6 +391,8 @@ impl<S: LocalSolver + Send> MachineRt<S> {
             out_edges,
             span,
             shards,
+            interior,
+            boundary,
             arena,
             nodes,
         }
@@ -426,61 +477,103 @@ impl<S: LocalSolver + Send> MachineRt<S> {
 
     /// Phase A over all shards: local solves on epoch-`t` parameters,
     /// θ^{t+1} written into the parity-`q` arena blocks.
-    pub(crate) fn run_phase_a(&mut self, graph: &Graph, t: u64) {
+    pub(crate) fn run_phase_a(&mut self, graph: &Graph, t: u64,
+                              pool: &PhasePool, mode: ExecMode) {
         let mid = self.id;
-        let arena = &self.arena;
+        let arena: &ParamArena = &self.arena;
         let link_live = &self.link_live[..];
-        if self.shards.len() == 1 {
-            shard_phase_a(graph, arena, link_live, mid, &mut self.nodes,
-                          &mut self.scratch[0], t);
-        } else {
-            let shards = &self.shards;
-            let mut node_rest: &mut [MNode<S>] = &mut self.nodes;
-            let mut sc_rest: &mut [ShardScratch] = &mut self.scratch;
-            std::thread::scope(|s| {
-                for shard in shards {
-                    let len = shard.end - shard.start;
-                    let (nchunk, tail) = node_rest.split_at_mut(len);
-                    node_rest = tail;
-                    let (schunk, stail) = sc_rest.split_at_mut(1);
-                    sc_rest = stail;
-                    s.spawn(move || {
-                        shard_phase_a(graph, arena, link_live, mid, nchunk,
-                                      &mut schunk[0], t);
-                    });
-                }
-            });
-        }
+        run_shards(&self.shards, &mut self.nodes, &mut self.scratch, pool, mode,
+                   |_w, nodes, sc| {
+                       shard_phase_a(graph, arena, link_live, mid, nodes, sc, t);
+                   });
         self.theta_parity = ((t & 1) ^ 1) as usize;
     }
 
-    /// Phase B over all shards: duals, residuals, objectives, per-shard
-    /// partial reduction (and the raw Σ‖θ‖² gossip mass).
-    pub(crate) fn run_phase_b(&mut self, graph: &Graph, t: u64) {
+    /// Complete phase A for the boundary slices only — the tail of an
+    /// overlapped round whose interior slices already ran via
+    /// [`MachineRt::dispatch_interior`]. Bit-exact vs the unsplit phase:
+    /// phase A is per-node independent and every node runs exactly once
+    /// on the same parity-p inputs.
+    pub(crate) fn run_phase_a_boundary(&mut self, graph: &Graph, t: u64,
+                                       pool: &PhasePool, mode: ExecMode) {
         let mid = self.id;
-        let arena = &self.arena;
+        let arena: &ParamArena = &self.arena;
         let link_live = &self.link_live[..];
-        if self.shards.len() == 1 {
-            shard_phase_b(graph, arena, link_live, mid, &mut self.nodes,
-                          &mut self.scratch[0], t);
-        } else {
-            let shards = &self.shards;
-            let mut node_rest: &mut [MNode<S>] = &mut self.nodes;
-            let mut sc_rest: &mut [ShardScratch] = &mut self.scratch;
-            std::thread::scope(|s| {
-                for shard in shards {
-                    let len = shard.end - shard.start;
-                    let (nchunk, tail) = node_rest.split_at_mut(len);
-                    node_rest = tail;
-                    let (schunk, stail) = sc_rest.split_at_mut(1);
-                    sc_rest = stail;
-                    s.spawn(move || {
-                        shard_phase_b(graph, arena, link_live, mid, nchunk,
-                                      &mut schunk[0], t);
-                    });
-                }
-            });
+        let boundary = &self.boundary;
+        run_shards(&self.shards, &mut self.nodes, &mut self.scratch, pool, mode,
+                   |w, nodes, sc| {
+                       shard_phase_a_subset(graph, arena, link_live, mid, nodes,
+                                            &boundary[w], sc, t);
+                   });
+        self.theta_parity = ((t & 1) ^ 1) as usize;
+    }
+
+    /// Dispatch the interior slices of phase A to the pool *without
+    /// waiting* — the overlap path, taken while boundary θ/η batches are
+    /// still in flight. Returns `None` when every shard's interior list
+    /// is empty (nothing worth overlapping).
+    ///
+    /// # Safety
+    ///
+    /// The jobs capture raw pointers into this machine's `nodes`,
+    /// `scratch`, `interior` and `link_live` buffers, its `arena`, and
+    /// the runner's `graph`. The caller must join (or drop — both block)
+    /// the returned ticket before anything reads or writes those
+    /// buffers again, and must not mutate the graph meanwhile. The
+    /// driver honours this by only touching the stamp-indexed boundary
+    /// caches and timers (plain `MachineRt` fields, disjoint
+    /// allocations) between dispatch and join.
+    pub(crate) unsafe fn dispatch_interior(&mut self, graph: &Graph,
+                                           pool: &PhasePool, t: u64)
+                                           -> Option<Ticket> {
+        if self.interior.iter().all(|ix| ix.is_empty()) {
+            return None;
         }
+        let nodes_base = self.nodes.as_mut_ptr();
+        let sc_base = self.scratch.as_mut_ptr();
+        let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+            Vec::with_capacity(self.shards.len());
+        for (w, shard) in self.shards.iter().enumerate() {
+            let ix = &self.interior[w];
+            if ix.is_empty() {
+                continue;
+            }
+            let job = InteriorJob::<S> {
+                graph: graph as *const Graph,
+                arena: &self.arena as *const ParamArena,
+                link_live: self.link_live.as_ptr(),
+                link_len: self.link_live.len(),
+                mid: self.id,
+                // Safety: shard chunks partition the nodes buffer; one
+                // scratch slot per shard.
+                nodes: unsafe { nodes_base.add(shard.start - self.span.start) },
+                nodes_len: shard.end - shard.start,
+                idx: ix.as_ptr(),
+                idx_len: ix.len(),
+                sc: unsafe { sc_base.add(w) },
+                t,
+            };
+            // Safety: forwarded to the caller (see the doc contract).
+            jobs.push(Box::new(move || unsafe { job.run() }));
+        }
+        // Safety: the jobs only capture raw pointers; the borrow contract
+        // is the documented one above, discharged by the Ticket.
+        Some(unsafe { pool.dispatch(jobs) })
+    }
+
+    /// Phase B over all shards: duals, residuals, objectives, per-shard
+    /// partial reduction (and the raw Σ‖θ‖² gossip mass). Never split
+    /// into interior/boundary slices — the partial absorption order is
+    /// bit-sensitive.
+    pub(crate) fn run_phase_b(&mut self, graph: &Graph, t: u64,
+                              pool: &PhasePool, mode: ExecMode) {
+        let mid = self.id;
+        let arena: &ParamArena = &self.arena;
+        let link_live = &self.link_live[..];
+        run_shards(&self.shards, &mut self.nodes, &mut self.scratch, pool, mode,
+                   |_w, nodes, sc| {
+                       shard_phase_b(graph, arena, link_live, mid, nodes, sc, t);
+                   });
         // fold products out of the scratch (shard order)
         self.raw_sq = 0.0;
         for w in 0..self.scratch.len() {
@@ -622,37 +715,152 @@ impl<S: LocalSolver + Send> MachineRt<S> {
 }
 
 // ---------------------------------------------------------------------------
-// Shard phase bodies. The per-node arithmetic is the shared kernel
-// ([`NodeKernel`]) behind the machine-link-masked [`MachineSlots`] view:
-// when every link is live the mask never fires and the floating-point
-// stream is the coordinator's — now by shared code, with the one-machine
-// bit-parity test still pinning it end to end.
+// Shard dispatch + phase bodies. The per-node arithmetic is the shared
+// kernel ([`NodeKernel`]) behind the machine-link-masked [`MachineSlots`]
+// view: when every link is live the mask never fires and the
+// floating-point stream is the coordinator's — now by shared code, with
+// the one-machine bit-parity test still pinning it end to end.
+
+/// Run one phase body over every shard: inline for a single shard, as a
+/// job set on the persistent pool, or on scoped spawns (the seed
+/// behaviour). The spawn/inline decision for *both* phases lives here —
+/// callers only supply the per-shard body `f(shard_index, chunk,
+/// scratch)`.
+fn run_shards<S, F>(shards: &[Range<usize>], nodes: &mut [MNode<S>],
+                    scratch: &mut [ShardScratch], pool: &PhasePool,
+                    mode: ExecMode, f: F)
+where
+    S: LocalSolver + Send,
+    F: Fn(usize, &mut [MNode<S>], &mut ShardScratch) + Sync,
+{
+    if shards.len() == 1 {
+        f(0, nodes, &mut scratch[0]);
+        return;
+    }
+    match mode {
+        ExecMode::Scoped => {
+            let mut node_rest: &mut [MNode<S>] = nodes;
+            let mut sc_rest: &mut [ShardScratch] = scratch;
+            std::thread::scope(|s| {
+                for (w, shard) in shards.iter().enumerate() {
+                    let len = shard.end - shard.start;
+                    let (nchunk, tail) = node_rest.split_at_mut(len);
+                    node_rest = tail;
+                    let (schunk, stail) = sc_rest.split_at_mut(1);
+                    sc_rest = stail;
+                    let fr = &f;
+                    note_thread_spawn();
+                    s.spawn(move || fr(w, nchunk, &mut schunk[0]));
+                }
+            });
+        }
+        ExecMode::Pool => {
+            let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                Vec::with_capacity(shards.len());
+            let mut node_rest: &mut [MNode<S>] = nodes;
+            let mut sc_rest: &mut [ShardScratch] = scratch;
+            for (w, shard) in shards.iter().enumerate() {
+                let len = shard.end - shard.start;
+                let (nchunk, tail) = node_rest.split_at_mut(len);
+                node_rest = tail;
+                let (schunk, stail) = sc_rest.split_at_mut(1);
+                sc_rest = stail;
+                let fr = &f;
+                jobs.push(Box::new(move || fr(w, nchunk, &mut schunk[0])));
+            }
+            if let Err(p) = pool.run(jobs) {
+                // scoped spawns propagate a shard panic onto the driver
+                // thread at the join; keep that contract under the pool
+                panic!("{}", p.message);
+            }
+        }
+    }
+}
+
+/// Raw-pointer captures for one overlapped interior phase-A job. See
+/// [`MachineRt::dispatch_interior`] for the lifetime/aliasing contract.
+struct InteriorJob<S> {
+    graph: *const Graph,
+    arena: *const ParamArena,
+    link_live: *const bool,
+    link_len: usize,
+    mid: usize,
+    nodes: *mut MNode<S>,
+    nodes_len: usize,
+    idx: *const usize,
+    idx_len: usize,
+    sc: *mut ShardScratch,
+    t: u64,
+}
+
+// Safety: the pointers target this machine's heap buffers (plus the
+// runner-owned, never-mutated graph); nothing else reads or writes them
+// between dispatch and the ticket join, which synchronizes-with the
+// job's completion through the pool latch.
+unsafe impl<S> Send for InteriorJob<S> {}
+
+impl<S: LocalSolver> InteriorJob<S> {
+    /// Safety: per the [`MachineRt::dispatch_interior`] contract.
+    unsafe fn run(self) {
+        let graph = unsafe { &*self.graph };
+        let arena = unsafe { &*self.arena };
+        let link_live =
+            unsafe { std::slice::from_raw_parts(self.link_live, self.link_len) };
+        let nodes =
+            unsafe { std::slice::from_raw_parts_mut(self.nodes, self.nodes_len) };
+        let idx = unsafe { std::slice::from_raw_parts(self.idx, self.idx_len) };
+        let sc = unsafe { &mut *self.sc };
+        shard_phase_a_subset(graph, arena, link_live, self.mid, nodes, idx, sc,
+                             self.t);
+    }
+}
+
+/// One node's phase-A solve (shared by the full-shard sweep and the
+/// interior/boundary subset sweeps; the split changes only visit order,
+/// which phase A is insensitive to — every node reads parity-p state
+/// and writes its own parity-q block exactly once).
+fn phase_a_node<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
+                                link_live: &[bool], mid: usize,
+                                st: &mut MNode<S>, sc: &mut ShardScratch,
+                                t: u64) {
+    let p = (t & 1) as usize;
+    let q = p ^ 1;
+    // Safety: phase A reads only parity-p θ (local peers' θ^t and the
+    // driver-materialized boundary θ) and writes only our parity-q
+    // block — the coordinator's discipline verbatim; solve_into fully
+    // overwrites the block.
+    let theta_t = unsafe { arena.theta(p, st.id) };
+    let mut view = MachineSlots {
+        arena,
+        nbrs: graph.neighbors(st.id),
+        nbr_machine: &st.nbr_machine,
+        link_live,
+        mid,
+        theta_parity: p,
+        eta_parity: p,
+        in_eta_idx: &st.in_eta_idx,
+    };
+    let theta_next = unsafe { arena.theta_mut(q, st.id) };
+    st.kernel.solve_into(&mut st.solver, theta_t, graph.degree(st.id),
+                         &mut view, &mut sc.kernel, theta_next);
+}
 
 fn shard_phase_a<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
                                  link_live: &[bool], mid: usize,
                                  nodes: &mut [MNode<S>], sc: &mut ShardScratch,
                                  t: u64) {
-    let p = (t & 1) as usize;
-    let q = p ^ 1;
     for st in nodes {
-        // Safety: phase A reads only parity-p θ (local peers' θ^t and the
-        // driver-materialized boundary θ) and writes only our parity-q
-        // block — the coordinator's discipline verbatim; solve_into fully
-        // overwrites the block.
-        let theta_t = unsafe { arena.theta(p, st.id) };
-        let mut view = MachineSlots {
-            arena,
-            nbrs: graph.neighbors(st.id),
-            nbr_machine: &st.nbr_machine,
-            link_live,
-            mid,
-            theta_parity: p,
-            eta_parity: p,
-            in_eta_idx: &st.in_eta_idx,
-        };
-        let theta_next = unsafe { arena.theta_mut(q, st.id) };
-        st.kernel.solve_into(&mut st.solver, theta_t, graph.degree(st.id),
-                             &mut view, &mut sc.kernel, theta_next);
+        phase_a_node(graph, arena, link_live, mid, st, sc, t);
+    }
+}
+
+/// Phase A over the chunk-local subset `idx` of one shard's nodes.
+fn shard_phase_a_subset<S: LocalSolver>(graph: &Graph, arena: &ParamArena,
+                                        link_live: &[bool], mid: usize,
+                                        nodes: &mut [MNode<S>], idx: &[usize],
+                                        sc: &mut ShardScratch, t: u64) {
+    for &k in idx {
+        phase_a_node(graph, arena, link_live, mid, &mut nodes[k], sc, t);
     }
 }
 

@@ -31,6 +31,26 @@
 //! messages, with the async runtime's bounded-staleness and
 //! silence-timeout semantics at machine granularity.
 //!
+//! **Execution and overlap.** The runner owns one persistent
+//! [`crate::pool::PhasePool`] (sized to the widest machine's shard
+//! count, created once per runner), and every machine feeds it per-phase
+//! job sets ([`ClusterConfig::exec`]; `ExecMode::Scoped` keeps the
+//! spawn-per-phase baseline). Because phase A is per-node independent,
+//! a machine whose boundary batches are still in flight dispatches the
+//! *interior* slice of each shard — nodes with no cross-machine edge,
+//! the majority under RCM relabeling — to the pool and returns to the
+//! event loop; once the boundary state lands, only the boundary slice
+//! remains, so the phase barrier falls on that slice alone. Phase B
+//! absorbs statistic partials in a bit-sensitive order and is never
+//! split. The split is bit-invisible (same fold order, same StatPartial
+//! absorption order, same kernel observation sequence — pinned by
+//! `cluster::tests`), and driver code may not read a machine's node
+//! state while its interior ticket is outstanding: overlap-window reads
+//! are restricted to boundary caches, timers and the snapshot ring;
+//! every other path joins the ticket first
+//! ([`crate::metrics::NetCounters::overlap_dispatches`] counts the
+//! overlap wins).
+//!
 //! **Collectives.** The oracle fold is replaced by a pluggable reduction
 //! ([`CollectiveKind`]) over the live machine quotient graph:
 //!
@@ -38,7 +58,7 @@
 //! |-------------|----------------------------------|----------------------|
 //! | oracle (PR 3) | exact, node-id order           | physically unrealizable |
 //! | `tree`      | **exact**: partial lists concatenate rootward and the root absorbs them in machine-id (= node-id) order with the coordinator's Chan-style fold | 2·depth hops latency per round; root bottleneck; timeout-retransmit under loss; detached machines fall back to local folds |
-//! | `gossip`    | approximate: loss-robust push-sum ratio estimates + max-gossip, per-node-normalized residuals | fully decentralized; renormalizes over the live component; accuracy ∝ tick budget; estimates bias RB and the stop rule |
+//! | `gossip`    | approximate: loss-robust push-sum ratio estimates + max-gossip; a ones-mass live-count estimator n̂ restores the true √n̂ residual scale and the Σf ≈ avg_f·n̂ objective | fully decentralized; renormalizes over the live component (n̂ tracks churn); accuracy ∝ tick budget; estimates bias RB and the stop rule |
 //!
 //! The `cluster_scenarios` experiment measures the *extra rounds per
 //! scheme* each collective costs against the oracle fold under loss —

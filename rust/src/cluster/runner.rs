@@ -23,10 +23,11 @@ use crate::net::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TimerKind,
                       TraceEvent, TraceKind};
 use crate::net::{ActivityConfig, TopologyController};
 use crate::penalty::{SchemeKind, SchemeParams};
+use crate::pool::{ExecMode, PhasePool, Ticket};
 
 use super::collective::{build_tree_rooted, estimate, subtree, CollectiveKind,
                         GossipState, TreeState, MASS_COUNT, MASS_ETA,
-                        MASS_ETA_CNT, MASS_F, MASS_SQ, MASS_THETA};
+                        MASS_ETA_CNT, MASS_F, MASS_ONE, MASS_SQ, MASS_THETA};
 use super::machine::{MPhase, MachineRt};
 use super::partition::MachinePartition;
 
@@ -77,6 +78,11 @@ pub struct ClusterConfig {
     /// root always serializes to its successor).
     pub handoff: Option<(u64, usize)>,
     pub tracing: bool,
+    /// How per-phase shard jobs execute: the persistent [`PhasePool`]
+    /// (default; also enables interior/boundary phase-A overlap while
+    /// boundary batches are in flight) or seed-style scoped spawns (the
+    /// bit-parity baseline).
+    pub exec: ExecMode,
 }
 
 impl Default for ClusterConfig {
@@ -103,6 +109,7 @@ impl Default for ClusterConfig {
             activity: None,
             handoff: None,
             tracing: true,
+            exec: ExecMode::Pool,
         }
     }
 }
@@ -153,6 +160,16 @@ enum Coll {
 
 /// The hybrid cluster runner (see [`super`] and the module docs).
 pub struct ClusterRunner<S: LocalSolver + Send> {
+    /// Outstanding overlapped interior-dispatch tickets, one slot per
+    /// machine. Declared *first*: a [`Ticket`]'s `Drop` blocks until its
+    /// jobs finish, and fields drop in declaration order, so even on an
+    /// unwind the jobs complete before `machines`/`graph` (whose buffers
+    /// they point into) are freed.
+    overlap: Vec<Option<(u64, Ticket)>>,
+    /// Persistent per-run worker pool shared by every machine (sized to
+    /// the widest machine's shard count; machines run their phases one
+    /// at a time under the single-threaded driver).
+    pool: PhasePool,
     cfg: ClusterConfig,
     /// relabeled node graph
     graph: Graph,
@@ -256,7 +273,12 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
         let initial_root =
             (0..mcount).find(|&m| ctrl.view().node_live(m)).unwrap_or(0);
+        let pool = PhasePool::new(
+            machines.iter().map(|mm| mm.shards.len()).max().unwrap_or(1),
+        );
         Ok(ClusterRunner {
+            overlap: (0..mcount).map(|_| None).collect(),
+            pool,
             fold: RootState {
                 cursor: 0,
                 tracker: StopTracker::new(dim, cfg.tol, cfg.patience,
@@ -420,6 +442,12 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     }
 
     fn finish(mut self) -> ClusterReport {
+        // a stop decision can land while another machine's overlapped
+        // interior slice is still in flight; join everything before the
+        // final θ assembly reads the arenas
+        for m in 0..self.machines.len() {
+            self.join_overlap(m);
+        }
         let n = self.graph.len();
         let dim = self.dim;
         let target = self.stop_round.unwrap_or(u64::MAX);
@@ -462,13 +490,25 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                         return; // woken when the verdict horizon advances
                     }
                     if !self.ready_a(m, force) {
+                        // boundary batches still in flight: overlap the
+                        // interior solves with the wait, so the phase
+                        // barrier falls on the boundary slice only
+                        self.begin_overlap(m);
                         self.arm_silence(m);
                         return;
                     }
+                    let overlapped = self.join_overlap(m) == Some(t);
                     self.resolve_a(m);
                     {
+                        let graph = &self.graph;
+                        let pool = &self.pool;
+                        let exec = self.cfg.exec;
                         let mach = &mut self.machines[m];
-                        mach.run_phase_a(&self.graph, t);
+                        if overlapped {
+                            mach.run_phase_a_boundary(graph, t, pool, exec);
+                        } else {
+                            mach.run_phase_a(graph, t, pool, exec);
+                        }
                         mach.snapshot(t);
                         mach.phase = MPhase::Reduce;
                     }
@@ -481,7 +521,12 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                     }
                     self.resolve_b(m);
                     let t = self.machines[m].t;
-                    self.machines[m].run_phase_b(&self.graph, t);
+                    {
+                        let graph = &self.graph;
+                        let pool = &self.pool;
+                        let exec = self.cfg.exec;
+                        self.machines[m].run_phase_b(graph, t, pool, exec);
+                    }
                     self.machines[m].phase = MPhase::FoldWait;
                     self.collective_ready(m, t);
                     if self.stopped {
@@ -518,6 +563,50 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             mach.timeout_armed = false;
             force = false;
         }
+    }
+
+    // -- overlapped interior dispatch ---------------------------------------
+
+    /// While machine `m` waits on boundary input for its current round,
+    /// start its interior phase-A solves on the pool (idempotent per
+    /// round; pool mode and multi-machine runs only — a single machine
+    /// has no boundary and is always ready). The driver keeps processing
+    /// network events while the jobs run; [`Self::join_overlap`] is the
+    /// barrier.
+    fn begin_overlap(&mut self, m: usize) {
+        if self.cfg.exec != ExecMode::Pool
+            || self.machines.len() <= 1
+            || self.overlap[m].is_some()
+        {
+            return;
+        }
+        let t = self.machines[m].t;
+        let ticket = {
+            let graph = &self.graph;
+            let pool = &self.pool;
+            let mach = &mut self.machines[m];
+            // Safety: the ticket is joined before the driver touches this
+            // machine's nodes/scratch/arena again (the Solve arm after
+            // ready_a, on_leave, finish); until then the driver only
+            // reads/writes its boundary caches and timers, which are
+            // disjoint allocations.
+            unsafe { mach.dispatch_interior(graph, pool, t) }
+        };
+        if let Some(ticket) = ticket {
+            self.sim.counters.overlap_dispatches += 1;
+            self.overlap[m] = Some((t, ticket));
+        }
+    }
+
+    /// Join machine `m`'s outstanding interior ticket, if any; returns
+    /// the round it was dispatched for. A job panic propagates like a
+    /// scoped-spawn panic would.
+    fn join_overlap(&mut self, m: usize) -> Option<u64> {
+        let (t, ticket) = self.overlap[m].take()?;
+        if let Err(p) = ticket.join() {
+            panic!("{}", p.message);
+        }
+        Some(t)
     }
 
     fn drain(&mut self) {
@@ -715,6 +804,9 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         if !self.ctrl.view().node_live(m) {
             return;
         }
+        // a departing machine may have an overlapped interior slice in
+        // flight; complete it before the state machine transitions
+        self.join_overlap(m);
         // leader-election handoff: a departing tracker holder serializes
         // its state to the successor (the machine that will be the new
         // root) *before* its transport goes dark
@@ -828,6 +920,9 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         // an empty cache
         self.send_state(m, start, start);
         for (_, p) in self.live_neighbors(m) {
+            // honor the dispatch_interior contract: never read a machine's
+            // boundary state while it has an interior overlap in flight
+            self.join_overlap(p);
             let (ts, es) = self.current_stamps(p);
             let rev = self
                 .part
@@ -900,7 +995,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                     }
                     let mut s = 0.0;
                     for &(i, _j, slot) in edges {
-                        s += mach.nodes[i - lo].etas[slot];
+                        s += mach.nodes[i - lo].kernel.etas[slot];
                     }
                     s / edges.len() as f64
                 })
@@ -1354,11 +1449,24 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     fn gossip_start(&mut self, m: usize, round: u64) {
         self.refresh_links(m);
         let dim = self.dim;
+        // live-count estimator: the designated recorder seeds exactly one
+        // unit of "ones" mass per round, so the push-sum ratio
+        // count/ones estimates the *live* node cardinality n̂ (consumed
+        // in gossip_complete). A designated change mid-round can
+        // transiently double the ones mass; the RB balance ratio is
+        // scale-invariant, so only the committed objective wobbles for
+        // those rounds.
+        let designated = (0..self.machines.len())
+            .find(|&p| self.ctrl.view().node_live(p))
+            .unwrap_or(0);
         let (mass, maxes) = {
             let mach = &self.machines[m];
             let mut mass = vec![0.0; MASS_THETA + dim];
             mass[MASS_COUNT] = mach.local_len() as f64;
             mass[MASS_SQ] = mach.raw_sq;
+            if m == designated {
+                mass[MASS_ONE] = 1.0;
+            }
             let mut maxes = [0.0, 0.0, 0.0, f64::NEG_INFINITY];
             for p in &mach.partials {
                 mass[MASS_F] += p.f_sum;
@@ -1504,7 +1612,15 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         // this round's tick chain just ended; keep other pending rounds
         // ticking (see gossip_kick)
         self.gossip_kick(m);
-        // per-machine RB verdict from the per-node-normalized estimates
+        // true-√n̂ verdict scale from the live-count estimator: n̂ targets
+        // an integer cardinality, so snap it — the committed objective
+        // scale then stays piecewise-constant instead of wobbling with
+        // per-round mixing error. A component that never saw the
+        // designated machine has zero ones mass (n̂ = 0): it keeps the
+        // per-node-normalized verdict, which the RB balance ratio is
+        // insensitive to either way (both sides scale together).
+        let n_hat = if est.n_live > 0.5 { est.n_live.round() } else { 1.0 };
+        let scale = n_hat.sqrt();
         let gd = {
             let mach = &mut self.machines[m];
             let mut gs2 = 0.0;
@@ -1513,9 +1629,9 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                 gs2 += d * d;
             }
             mach.coll_mean_prev.copy_from_slice(&est.gmean);
-            self.cfg.params.eta0 * gs2.sqrt()
+            self.cfg.params.eta0 * scale * gs2.sqrt()
         };
-        self.store_verdict(m, round, est.gp, gd);
+        self.store_verdict(m, round, est.gp * scale, gd);
 
         // the lowest live machine is the designated recorder (gossip keeps
         // the omniscient migration — see the RootState docs; the tree
@@ -1524,7 +1640,10 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             .find(|&p| self.ctrl.view().node_live(p))
             .unwrap_or(0);
         if m == designated && round >= self.fold.cursor {
-            let objective = est.avg_f * self.n_total as f64;
+            // Σf over the live component: mean-per-node f × estimated
+            // live count (replaces the static full-graph node count,
+            // which overcounted after churn)
+            let objective = est.avg_f * n_hat;
             let app_error = self.app_metric_value(round);
             let stop = self.fold.tracker.commit(round as usize, IterStats {
                 iter: round as usize,

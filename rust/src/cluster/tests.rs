@@ -11,6 +11,7 @@ use crate::graph::Topology;
 use crate::metrics::IterStats;
 use crate::net::{ChurnEvent, FaultPlan, LinkModel, Partition, TraceKind};
 use crate::penalty::SchemeKind;
+use crate::pool::ExecMode;
 
 fn assert_stats_bit_equal(a: &IterStats, b: &IterStats) {
     assert_eq!(a.iter, b.iter);
@@ -549,6 +550,97 @@ fn zero_round_budget_returns_theta0() {
     assert_eq!(cluster.iterations, 0);
     assert!(!cluster.converged);
     assert_eq!(cluster.thetas, sharded.thetas, "θ⁰ seeding is runner-identical");
+}
+
+// -- satellite: persistent pool vs scoped spawns ------------------------------
+
+#[test]
+fn pool_and_scoped_cluster_runs_are_bit_identical() {
+    // the tentpole parity matrix at cluster level: pool execution
+    // (interior/boundary overlap included) vs the seed's scoped spawns
+    // must agree on everything observable — θ, stats, the full event
+    // trace, and every counter except overlap_dispatches (scoped never
+    // overlaps by construction)
+    for lossy_links in [false, true] {
+        for scheme in [SchemeKind::Ap, SchemeKind::Rb] {
+            let run = |exec| {
+                let plan = if lossy_links {
+                    FaultPlan {
+                        link: LinkModel { base: 2, jitter: 3, loss: 0.1, dup: 0.02 },
+                        ..FaultPlan::none()
+                    }
+                } else {
+                    FaultPlan::none()
+                };
+                ClusterRunner::new(
+                    Topology::Ring.build(12).unwrap(),
+                    ClusterConfig { scheme, tol: 0.0, max_iters: 60, seed: 5,
+                                    machines: 3, workers: 2,
+                                    max_staleness: 1, silence_timeout: 8,
+                                    collective_timeout: 16, fallback_after: 2,
+                                    exec, tracing: true,
+                                    ..Default::default() },
+                    plan,
+                    quad_factory(12, 2, 37),
+                )
+                .unwrap()
+                .run()
+            };
+            let pool = run(ExecMode::Pool);
+            let scoped = run(ExecMode::Scoped);
+            let tag = if lossy_links { "lossy" } else { "clean" };
+            assert_eq!(pool.thetas, scoped.thetas, "{tag}/{scheme:?}");
+            assert_eq!(pool.iterations, scoped.iterations, "{tag}/{scheme:?}");
+            assert_eq!(pool.virtual_time, scoped.virtual_time, "{tag}/{scheme:?}");
+            assert_eq!(pool.trace, scoped.trace,
+                       "{tag}/{scheme:?}: overlap must not change the event flow");
+            assert_eq!(pool.recorder.stats.len(), scoped.recorder.stats.len());
+            for (a, b) in pool.recorder.stats.iter().zip(&scoped.recorder.stats) {
+                assert_stats_bit_equal(a, b);
+            }
+            assert_eq!(scoped.counters.overlap_dispatches, 0, "{tag}/{scheme:?}");
+            let mut pc = pool.counters;
+            let mut sc = scoped.counters;
+            pc.overlap_dispatches = 0;
+            sc.overlap_dispatches = 0;
+            assert_eq!(pc, sc, "{tag}/{scheme:?}: network books must agree");
+        }
+    }
+}
+
+#[test]
+fn delayed_boundary_batches_stall_only_boundary_slices() {
+    // the overlap-specific bar: with every boundary batch delayed by link
+    // latency, a pool-mode machine must start its interior solves while
+    // it waits (the phase barrier falls on the boundary slice only) — and
+    // the split must be invisible in the results
+    let run = |exec| {
+        ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 40,
+                            seed: 3, machines: 3, workers: 1, exec,
+                            ..Default::default() },
+            FaultPlan {
+                link: LinkModel { base: 3, jitter: 0, loss: 0.0, dup: 0.0 },
+                ..FaultPlan::none()
+            },
+            quad_factory(12, 2, 7),
+        )
+        .unwrap()
+        .run()
+    };
+    let pool = run(ExecMode::Pool);
+    let scoped = run(ExecMode::Scoped);
+    assert!(pool.counters.overlap_dispatches > 0,
+            "delayed boundary batches must trigger interior overlap");
+    assert_eq!(scoped.counters.overlap_dispatches, 0);
+    assert_eq!(pool.thetas, scoped.thetas,
+               "overlapped interior slices must be bit-invisible");
+    assert_eq!(pool.iterations, scoped.iterations);
+    assert_eq!(pool.recorder.stats.len(), scoped.recorder.stats.len());
+    for (a, b) in pool.recorder.stats.iter().zip(&scoped.recorder.stats) {
+        assert_stats_bit_equal(a, b);
+    }
 }
 
 #[test]

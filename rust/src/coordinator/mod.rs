@@ -85,6 +85,23 @@
 //! up last-ulp grouping differences across worker counts. Repeated runs
 //! at the same configuration are bit-identical in full for all schemes.
 //!
+//! ## Execution modes: persistent pool vs scoped spawns
+//!
+//! The runner executes its worker bodies in one of two modes
+//! ([`ShardedConfig::exec`], [`crate::pool::ExecMode`]). The default
+//! `Pool` mode lazily creates one [`crate::pool::PhasePool`] per runner:
+//! `W` pinned workers spawned once and reused by every later `run()`
+//! call, fed whole-run jobs through per-worker queues — thread spawns
+//! are O(W) per runner lifetime, not O(runs · W) (`bench_coordinator`
+//! reports the amortization; `ci.sh` gates the spawn counts). `Scoped`
+//! is the original spawn-per-run `std::thread::scope` baseline, kept as
+//! the measurement control. Both modes run the identical `worker_main`
+//! body and collect results in worker order, so they are bit-identical
+//! (pinned by the runner tests); a worker panic poisons the phase
+//! barrier in either mode and surfaces as `Err`, never a deadlock — the
+//! pool generalizes the poisonable-barrier design instead of replacing
+//! it.
+//!
 //! PJRT handles are not `Send`, so each worker constructs the solvers
 //! for its own shard through the [`SolverFactory`]; sharded runs default
 //! to the native backend (identical numbers, see

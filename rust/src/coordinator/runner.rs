@@ -1,11 +1,20 @@
 //! The sharded worker-pool runner: public API + orchestration.
 //!
-//! Spawns `W = min(nodes, cores)` scoped worker threads (overridable via
+//! Runs `W = min(nodes, cores)` workers (overridable via
 //! [`ShardedConfig::workers`]), each running the shard program in
 //! [`super::shard`] over a contiguous node range from
 //! [`crate::graph::shard_ranges`]. Parameters travel through the
 //! double-buffered [`super::arena::ParamArena`]; worker panics poison the
 //! phase barrier and surface as an `Err` instead of a deadlock.
+//!
+//! Execution is selected by [`ShardedConfig::exec`]: the default
+//! [`ExecMode::Pool`] submits the `W` run-long worker jobs to a
+//! persistent [`PhasePool`] created once per runner and reused across
+//! `run` calls (thread spawns are O(W) per runner, not O(runs·W));
+//! [`ExecMode::Scoped`] keeps the original spawn-per-run
+//! `std::thread::scope` block as the bit-parity baseline. Both paths run
+//! the identical shard program — same barrier schedule, same fold order —
+//! so their outputs are bit-identical.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -20,6 +29,7 @@ use crate::graph::{rcm_order, relabel_graph, shard_ranges, Graph, NodeId, Relabe
 use crate::kernel::AppMetricHook;
 use crate::metrics::Recorder;
 use crate::penalty::{SchemeKind, SchemeParams};
+use crate::pool::{note_thread_spawn, ExecMode, PhasePool};
 
 /// Builds one node's solver inside its worker thread (backends need not
 /// be `Send`; only the factory crosses threads).
@@ -43,6 +53,9 @@ pub struct ShardedConfig {
     /// Transparent to callers: factories, metrics and reported θ all use
     /// the original node ids regardless.
     pub relabel: Relabel,
+    /// Worker execution: persistent pool (default) or the scoped-spawn
+    /// baseline. Bit-transparent — see the module docs.
+    pub exec: ExecMode,
 }
 
 /// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
@@ -61,6 +74,7 @@ impl Default for ShardedConfig {
             seed: 0,
             workers: 0,
             relabel: Relabel::default(),
+            exec: ExecMode::default(),
         }
     }
 }
@@ -89,6 +103,11 @@ pub struct ShardedRunner {
     /// (ROADMAP open item). Dynamic graphs invalidate through
     /// [`crate::graph::LiveView::generation`] instead.
     rcm_cache: OnceLock<Vec<NodeId>>,
+    /// Persistent worker pool (pool mode), created lazily on the first
+    /// run and reused by every later one — the spawn-amortization half of
+    /// the perf story. Sized to [`ShardedRunner::workers`], which is
+    /// fixed for a runner's lifetime.
+    pool: OnceLock<PhasePool>,
 }
 
 /// Backward-compatible name for [`ShardedRunner`].
@@ -96,7 +115,7 @@ pub type ThreadedRunner = ShardedRunner;
 
 impl ShardedRunner {
     pub fn new(graph: Graph, cfg: ShardedConfig) -> Self {
-        ShardedRunner { graph, cfg, rcm_cache: OnceLock::new() }
+        ShardedRunner { graph, cfg, rcm_cache: OnceLock::new(), pool: OnceLock::new() }
     }
 
     /// The cached RCM permutation, if a relabeled run has computed it
@@ -213,32 +232,81 @@ impl ShardedRunner {
         let mut lead_slot = Some(LeadState::new(&self.cfg, dim, metric));
         let mut results: Vec<std::result::Result<Option<LeadOutcome>, WorkerError>> =
             Vec::with_capacity(workers);
-        std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(workers);
-            for (w, range) in ranges.iter().cloned().enumerate() {
-                let factory = Arc::clone(&factory);
-                let lead = if w == 0 { lead_slot.take() } else { None };
-                let ctx_ref = &ctx;
-                handles.push(s.spawn(move || {
-                    match catch_unwind(AssertUnwindSafe(|| {
-                        worker_main(ctx_ref, w, range, factory, lead)
-                    })) {
-                        Ok(r) => r,
-                        Err(payload) => {
-                            // release peers blocked on the barrier, then
-                            // report the panic itself
-                            ctx_ref.barrier.poison();
-                            Err(WorkerError::Panicked(panic_message(&payload)))
+        match self.cfg.exec {
+            ExecMode::Scoped => std::thread::scope(|s| {
+                let mut handles = Vec::with_capacity(workers);
+                for (w, range) in ranges.iter().cloned().enumerate() {
+                    let factory = Arc::clone(&factory);
+                    let lead = if w == 0 { lead_slot.take() } else { None };
+                    let ctx_ref = &ctx;
+                    note_thread_spawn();
+                    handles.push(s.spawn(move || {
+                        match catch_unwind(AssertUnwindSafe(|| {
+                            worker_main(ctx_ref, w, range, factory, lead)
+                        })) {
+                            Ok(r) => r,
+                            Err(payload) => {
+                                // release peers blocked on the barrier, then
+                                // report the panic itself
+                                ctx_ref.barrier.poison();
+                                Err(WorkerError::Panicked(panic_message(&payload)))
+                            }
                         }
-                    }
-                }));
+                    }));
+                }
+                for h in handles {
+                    results.push(h.join().unwrap_or_else(|payload| {
+                        Err(WorkerError::Panicked(panic_message(&payload)))
+                    }));
+                }
+            }),
+            ExecMode::Pool => {
+                // exactly `workers` jobs on a `workers`-sized pool: the
+                // whole-set enqueue places one job per pool worker, so the
+                // run-long jobs are co-scheduled and the phase barrier
+                // inside `worker_main` can always complete
+                let pool = self.pool.get_or_init(|| PhasePool::new(workers));
+                debug_assert_eq!(pool.size(), workers);
+                let slots: Vec<Mutex<Option<
+                    std::result::Result<Option<LeadOutcome>, WorkerError>>>> =
+                    (0..workers).map(|_| Mutex::new(None)).collect();
+                let mut jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                    Vec::with_capacity(workers);
+                for (w, range) in ranges.iter().cloned().enumerate() {
+                    let factory = Arc::clone(&factory);
+                    let lead = if w == 0 { lead_slot.take() } else { None };
+                    let ctx_ref = &ctx;
+                    let slot = &slots[w];
+                    jobs.push(Box::new(move || {
+                        let r = match catch_unwind(AssertUnwindSafe(|| {
+                            worker_main(ctx_ref, w, range, factory, lead)
+                        })) {
+                            Ok(r) => r,
+                            Err(payload) => {
+                                // same contract as scoped mode: free the
+                                // peers, then report
+                                ctx_ref.barrier.poison();
+                                Err(WorkerError::Panicked(panic_message(&payload)))
+                            }
+                        };
+                        *slot.lock().unwrap() = Some(r);
+                    }));
+                }
+                if let Err(p) = pool.run(jobs) {
+                    // jobs catch their own panics, so this only fires if
+                    // the result store itself panicked
+                    return Err(Error::Config(format!(
+                        "sharded runner: worker panicked: {}", p.message)));
+                }
+                // slot order == spawn order: the fold below sees results
+                // in the same sequence as the scoped join loop
+                for slot in &slots {
+                    results.push(slot.lock().unwrap().take().unwrap_or_else(|| {
+                        Err(WorkerError::Panicked("worker produced no result".into()))
+                    }));
+                }
             }
-            for h in handles {
-                results.push(h.join().unwrap_or_else(|payload| {
-                    Err(WorkerError::Panicked(panic_message(&payload)))
-                }));
-            }
-        });
+        }
 
         let mut outcome: Option<LeadOutcome> = None;
         let mut panic_msg: Option<String> = None;
@@ -682,17 +750,76 @@ mod tests {
 
     #[test]
     fn panicking_solver_reports_error_not_deadlock() {
-        let factory: SolverFactory<QuadraticNode> = Arc::new(|i| {
-            if i == 3 {
-                panic!("solver construction failed on purpose");
+        // both execution modes share the catch_unwind + barrier-poison
+        // contract: a worker panic surfaces as Err, never a hang
+        for exec in [ExecMode::Pool, ExecMode::Scoped] {
+            let factory: SolverFactory<QuadraticNode> = Arc::new(|i| {
+                if i == 3 {
+                    panic!("solver construction failed on purpose");
+                }
+                let mut rng = Pcg::seed(1 + i as u64);
+                QuadraticNode::random(2, &mut rng)
+            });
+            let runner = ShardedRunner::new(Topology::Ring.build(6).unwrap(),
+                                            ShardedConfig { max_iters: 50, workers: 3,
+                                                            exec,
+                                                            ..Default::default() });
+            let err = runner.run(factory).unwrap_err();
+            assert!(err.to_string().contains("panicked"), "{exec:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn pool_and_scoped_execution_are_bit_identical() {
+        // the tentpole parity matrix: every scheme (including the folded
+        // Rb reference — the worker count is the same on both sides, so
+        // even fold-grouping-sensitive schemes must agree exactly), two
+        // topologies, θ and every recorded IterStats field bitwise equal
+        for topo in [Topology::Ring, Topology::Star] {
+            for scheme in SchemeKind::ALL {
+                let run = |exec| {
+                    let (factory, _) = quad_factory(8, 3, 19);
+                    ShardedRunner::new(
+                        topo.build(8).unwrap(),
+                        ShardedConfig { scheme, tol: 0.0, max_iters: 40,
+                                        workers: 3, exec,
+                                        ..Default::default() },
+                    )
+                    .run(factory)
+                    .unwrap()
+                };
+                let pool = run(ExecMode::Pool);
+                let scoped = run(ExecMode::Scoped);
+                assert_eq!(pool.thetas, scoped.thetas, "{topo:?}/{scheme:?}");
+                assert_eq!(pool.iterations, scoped.iterations, "{topo:?}/{scheme:?}");
+                assert_eq!(pool.workers, scoped.workers);
+                assert_eq!(pool.recorder.stats, scoped.recorder.stats,
+                           "{topo:?}/{scheme:?}: IterStats streams diverge");
             }
-            let mut rng = Pcg::seed(1 + i as u64);
-            QuadraticNode::random(2, &mut rng)
-        });
-        let runner = ShardedRunner::new(Topology::Ring.build(6).unwrap(),
-                                        ShardedConfig { max_iters: 50, workers: 3,
-                                                        ..Default::default() });
-        let err = runner.run(factory).unwrap_err();
-        assert!(err.to_string().contains("panicked"), "{err}");
+        }
+    }
+
+    #[test]
+    fn pool_worker_count_invariance_matches_scoped() {
+        // worker-count invariance (decentralized scheme, fixed budget)
+        // holds under the pool exactly as it does under scoped spawning
+        let run = |workers: usize, exec| {
+            let (factory, _) = quad_factory(7, 3, 13);
+            ShardedRunner::new(
+                Topology::Ring.build(7).unwrap(),
+                ShardedConfig { scheme: SchemeKind::Ap, tol: 0.0, max_iters: 60,
+                                workers, exec, ..Default::default() },
+            )
+            .run(factory)
+            .unwrap()
+        };
+        let p1 = run(1, ExecMode::Pool);
+        let p3 = run(3, ExecMode::Pool);
+        let p7 = run(7, ExecMode::Pool);
+        let s3 = run(3, ExecMode::Scoped);
+        assert_eq!(p1.thetas, p3.thetas);
+        assert_eq!(p1.thetas, p7.thetas);
+        assert_eq!(p3.thetas, s3.thetas);
+        assert_eq!(p3.recorder.stats, s3.recorder.stats);
     }
 }

@@ -37,6 +37,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod net;
 pub mod penalty;
+pub mod pool;
 pub mod runtime;
 pub mod sfm;
 pub mod util;

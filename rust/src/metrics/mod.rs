@@ -409,6 +409,9 @@ pub struct NetCounters {
     pub collective_retries: u64,
     /// cluster gossip: push-sum exchange ticks performed
     pub gossip_ticks: u64,
+    /// cluster overlap: interior phase-A job sets dispatched to the pool
+    /// while boundary batches were still in flight
+    pub overlap_dispatches: u64,
 }
 
 impl NetCounters {
@@ -433,6 +436,7 @@ impl NetCounters {
             ("collective_fallbacks", num(self.collective_fallbacks as f64)),
             ("collective_retries", num(self.collective_retries as f64)),
             ("gossip_ticks", num(self.gossip_ticks as f64)),
+            ("overlap_dispatches", num(self.overlap_dispatches as f64)),
         ])
     }
 
