@@ -1,11 +1,14 @@
 //! Hybrid cluster-runtime cost: wall-clock of the machine-level
 //! discrete-event loop, plus the scenario metrics the ROADMAP tracks —
 //! rounds to consensus, extra rounds vs the oracle fold, and virtual time
-//! — for the tree and gossip collectives under a clean link vs 10% loss.
+//! — for the tree and gossip collectives under a clean link vs 10% loss,
+//! and the per-round cost of the simulated driver vs the in-process
+//! thread transport (same protocol, different `Transport` backend).
 //! Writes the machine-readable `BENCH_cluster.json` (same layout contract
 //! as `BENCH_net.json`: a `results` array from the Bencher plus a derived
 //! `scenario` object for gates/dashboards).
 
+use fadmm::cluster::inproc::run_inproc;
 use fadmm::cluster::{ClusterConfig, ClusterReport, ClusterRunner, CollectiveKind};
 use fadmm::consensus::solvers::QuadraticNode;
 use fadmm::coordinator::{ShardedConfig, ShardedRunner, SolverFactory};
@@ -193,6 +196,69 @@ fn main() {
         "the overlap win scales with interior solve cost: marginal at dim 3, \
          larger at dim 32 where hidden compute per boundary wait grows")));
 
+    println!("== transport: simulated driver vs in-process threads ==");
+    // same protocol, two Transport backends: the deterministic
+    // single-threaded simulator vs one OS thread per machine over a
+    // channel mesh. The iteration-count equality is the zero-fault
+    // transport contract from `cluster::inproc`, re-checked on the
+    // bench configuration; the ns/iter gap prices real scheduling +
+    // channel hops against simulated delivery.
+    const TRANSPORT_ROUNDS: usize = 60;
+    let transport_cfg = ClusterConfig {
+        scheme: SchemeKind::Ap,
+        tol: 0.0,
+        max_iters: TRANSPORT_ROUNDS,
+        seed: 5,
+        machines: MACHINES,
+        workers: 1,
+        collective: CollectiveKind::Tree,
+        // wall ms on the channel transport, virtual ticks in the sim —
+        // unreachable either way at zero faults
+        silence_timeout: 5_000,
+        collective_timeout: 5_000,
+        tracing: false,
+        ..Default::default()
+    };
+    let mut sim_iters = 0usize;
+    b.bench("transport sim 60 rounds", || {
+        let report = ClusterRunner::new(
+            Topology::Ring.build(N).unwrap(),
+            transport_cfg,
+            FaultPlan::none(),
+            factory(77),
+        )
+        .unwrap()
+        .run();
+        sim_iters = report.iterations;
+    });
+    let mut inproc_iters = 0usize;
+    b.bench("transport inproc 60 rounds", || {
+        let reports = run_inproc(&Topology::Ring.build(N).unwrap(),
+                                 transport_cfg, factory(77))
+            .unwrap();
+        inproc_iters = reports
+            .iter()
+            .find(|r| r.is_holder)
+            .map(|r| r.iterations)
+            .unwrap_or(0);
+    });
+    assert_eq!(sim_iters, inproc_iters,
+               "transport contract: same committed iteration count on \
+                both backends");
+    let sim_ns = b.result("transport sim 60 rounds").unwrap().mean_ns
+        / TRANSPORT_ROUNDS as f64;
+    let inproc_ns = b.result("transport inproc 60 rounds").unwrap().mean_ns
+        / TRANSPORT_ROUNDS as f64;
+    println!("  sim {sim_ns:.0}ns/iter vs in-process threads \
+              {inproc_ns:.0}ns/iter; both committed {sim_iters} rounds");
+    let transport = obj(vec![
+        ("rounds", num(TRANSPORT_ROUNDS as f64)),
+        ("sim_ns_per_iter", num(sim_ns)),
+        ("inproc_ns_per_iter", num(inproc_ns)),
+        ("iterations", num(sim_iters as f64)),
+        ("iteration_counts_equal", Json::Bool(sim_iters == inproc_iters)),
+    ]);
+
     let scenario = obj(scenario_fields
         .iter()
         .map(|(k, v)| (k.as_str(), v.clone()))
@@ -204,6 +270,7 @@ fn main() {
         ("topology", s("ring")),
         ("scenario", scenario),
         ("pool", obj(pool_fields)),
+        ("transport", transport),
     ];
     match b.write_json("cluster", extra) {
         Ok(path) => println!("wrote {}", path.display()),

@@ -55,6 +55,35 @@ echo "grep gate: OK (λ step only in kernel/, Chan fold only in metrics/)"
 echo "== kernel golden-trace parity (pre-refactor Engine::step, bitwise) =="
 cargo test -q --release kernel::golden
 
+echo "== transport seam grep gate =="
+# The Transport extraction (PR 7) holds only if the simulator stays one
+# impl of the seam: the protocol layers (machine/node/collective) and
+# the real backends (inproc/proc) must be simulator-blind. NetSim may
+# appear in cluster::runner only because its sim-pinned constructor
+# builds one — the protocol body is generic over T: Transport.
+if ! grep -q "impl Transport for NetSim" src/net/transport.rs; then
+  echo "transport gate: NetSim no longer implements the Transport seam" >&2
+  exit 1
+fi
+if grep -rn "NetSim" src/cluster/machine.rs src/cluster/node.rs \
+    src/cluster/collective.rs src/cluster/inproc.rs src/cluster/proc.rs; then
+  echo "transport gate: protocol layer references the simulator concretely" >&2
+  exit 1
+fi
+if ! grep -q "impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T>" \
+    src/cluster/runner.rs; then
+  echo "transport gate: ClusterRunner protocol body is no longer generic over Transport (update ci.sh if the signature moved)" >&2
+  exit 1
+fi
+echo "transport gate: OK (protocol layers are simulator-blind)"
+
+echo "== cross-transport parity (sim vs threads vs processes) =="
+# The zero-fault contract: identical committed iteration counts on all
+# three backends. The proc suite spawns real fadmm-node child processes
+# and skips itself (with a stderr note) where children cannot spawn.
+cargo test -q --release cluster::inproc
+cargo test -q --release --test proc_transport
+
 # clippy: warning-clean, modulo the two idioms this codebase uses on
 # purpose (index-based math loops; wide arg lists in the actor plumbing)
 if cargo clippy --version >/dev/null 2>&1; then

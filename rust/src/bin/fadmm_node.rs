@@ -1,0 +1,9 @@
+//! One cluster machine as an OS process: reads an init line on stdin,
+//! runs the ADMM machine protocol over line-delimited JSON, writes a
+//! done line on stdout. Spawned and routed by
+//! [`fadmm::cluster::proc::ProcCluster`]; wire format documented in
+//! [`fadmm::cluster::proc`].
+
+fn main() {
+    std::process::exit(fadmm::cluster::proc::node_main());
+}

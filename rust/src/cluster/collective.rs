@@ -143,6 +143,11 @@ pub(crate) struct TreeState {
     /// `inbox[m][round][origin] = origin's shard partials` — m's
     /// accumulated view of its subtree for each in-flight round
     pub inbox: Vec<BTreeMap<u64, BTreeMap<usize, Vec<StatPartial>>>>,
+    /// `theta_inbox[m][round][origin] = origin's flat committed θ^{round+1}
+    /// span` — populated only when the run carries an app-metric hook
+    /// (the snapshots ride the rootward `Part` traffic so the recorder's
+    /// metric assembly needs no remote reads)
+    pub theta_inbox: Vec<BTreeMap<u64, BTreeMap<usize, Vec<f64>>>>,
     /// rounds machine m has already forwarded rootward
     pub sent_up: Vec<BTreeSet<u64>>,
 }
@@ -153,6 +158,7 @@ impl TreeState {
         TreeState {
             topo: build_tree(view),
             inbox: (0..n).map(|_| BTreeMap::new()).collect(),
+            theta_inbox: (0..n).map(|_| BTreeMap::new()).collect(),
             sent_up: (0..n).map(|_| BTreeSet::new()).collect(),
         }
     }

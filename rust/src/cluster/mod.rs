@@ -95,13 +95,39 @@
 //! machine-level live graph (RB waits on the round's collective verdict;
 //! the activity rule masks machine links whose mean cross-cut η̄
 //! collapses).
+//!
+//! **Transports.** The whole protocol above is generic over the
+//! [`crate::net::Transport`] seam. Three backends run it (full matrix in
+//! [`crate::net`]):
+//!
+//! * [`ClusterRunner`] over [`crate::net::NetSim`] — the omniscient
+//!   single-threaded driver on the deterministic simulator; every parity
+//!   suite and fault study pins this configuration.
+//! * [`inproc`] — one OS thread per machine over an in-process channel
+//!   mesh ([`crate::net::channel_mesh`]); each machine is a self-driving
+//!   [`NodeRuntime`]. Real scheduler interleavings, graceful-leave fault
+//!   injection from the harness.
+//! * [`proc`] — one OS *process* per machine: the `fadmm-node` binary
+//!   speaks line-delimited JSON over stdio through a star router, and
+//!   machine death is a real `SIGKILL`.
+//!
+//! At zero faults the real transports commit *identical iteration
+//! counts* to the simulated driver (the fold is order-insensitive by
+//! construction: machine-id-ordered absorption out of a `BTreeMap`),
+//! which `inproc::tests` and the `proc_transport` integration suite
+//! assert scheme by scheme.
 
 mod collective;
 mod machine;
+mod node;
 mod partition;
 mod runner;
 
+pub mod inproc;
+pub mod proc;
+
 pub use collective::CollectiveKind;
+pub use node::{NodeReport, NodeRuntime};
 pub use partition::MachinePartition;
 pub use runner::{factory_of, ClusterConfig, ClusterReport, ClusterRunner};
 

@@ -1,0 +1,944 @@
+//! One machine of the cluster protocol as a *self-driving* runtime.
+//!
+//! [`super::runner::ClusterRunner`] is an omniscient single-threaded
+//! driver: it owns every [`MachineRt`], pops one shared event queue and
+//! advances whichever machine an event addresses. A real deployment has
+//! no such driver — each machine owns exactly its own state and learns
+//! about the rest of the cluster only through its [`Transport`].
+//! [`NodeRuntime`] is that machine: the same `Solve → Reduce → FoldWait`
+//! state machine, the same boundary-cache protocol, and the same
+//! tree-collective fold/verdict/retransmit machinery, but scoped to one
+//! machine and driven by its own event loop. The in-process backend
+//! ([`super::inproc`]) runs one per thread over a channel mesh; the
+//! process backend ([`super::proc`]) runs one per OS process over stdio.
+//!
+//! ## Deltas vs the simulated driver (documented, deliberate)
+//!
+//! * **Tree collective only.** Push-sum gossip, the machine-level
+//!   activity rule, scripted handoffs and dormant starts are
+//!   simulator-study features; [`NodeRuntime::new`] rejects them.
+//! * **No interior/boundary phase overlap.** The overlap exists to keep
+//!   a single driver thread busy; here every machine already runs on its
+//!   own thread/process, so phases run unsplit (bit-identical by the
+//!   overlap parity tests).
+//! * **Explicit stop flood.** The simulator halts the instant the stop
+//!   rule fires; here the tracker holder broadcasts [`Payload::Stop`] to
+//!   every live machine and each receiver re-floods once before exiting,
+//!   so termination is a protocol event with a real cost.
+//! * **Explicit tracker recovery.** A gracefully departing holder
+//!   serializes the [`crate::kernel::StopSnapshot`] to its successor
+//!   (the same `Checker` message the simulator ships). After a *kill*
+//!   (SIGKILL, dead thread) there is nothing to ship: the survivors
+//!   re-root and the new root adopts a **fresh** tracker whose cursor
+//!   starts at its oldest buffered round — recorded curves restart, the
+//!   run still terminates. Zero-fault runs never take either path.
+//!
+//! At zero faults with timeouts too generous to fire, the protocol
+//! schedule is message-driven and identical to the simulator's, so the
+//! per-round arithmetic — and therefore the committed iteration count —
+//! matches the [`ClusterRunner`] oracle exactly; the transport suites
+//! assert that.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::ops::Range;
+
+use crate::consensus::LocalSolver;
+use crate::error::{Error, Result};
+use crate::graph::{rcm_order, relabel_graph, Graph, NodeId, Relabel};
+use crate::kernel::StopTracker;
+use crate::metrics::{IterStats, NetCounters, RunningFold, StatPartial};
+use crate::net::sim::{Event, Payload, TimerKind, TraceKind};
+use crate::net::transport::Transport;
+use crate::net::TopologyController;
+use crate::pool::PhasePool;
+
+use super::collective::{build_tree_rooted, subtree, CollectiveKind, TreeTopology};
+use super::machine::{MPhase, MachineRt};
+use super::partition::MachinePartition;
+use super::runner::ClusterConfig;
+
+/// What one machine knows when its run ends.
+#[derive(Debug)]
+pub struct NodeReport {
+    pub machine: usize,
+    /// Committed rounds — authoritative only on the tracker holder
+    /// (elsewhere it echoes the stop flood's round count).
+    pub iterations: usize,
+    pub converged: bool,
+    /// Whether this machine held the [`StopTracker`] at exit.
+    pub is_holder: bool,
+    /// Tree root as this machine last saw it.
+    pub final_root: usize,
+    /// This machine's (relabeled) node slice.
+    pub span: Range<usize>,
+    /// Flat `span.len() × dim` θ at the stop round.
+    pub thetas_flat: Vec<f64>,
+    pub dim: usize,
+    pub counters: NetCounters,
+}
+
+/// One machine of the cluster protocol over a real transport (see
+/// module docs).
+pub struct NodeRuntime<S: LocalSolver + Send, T: Transport> {
+    cfg: ClusterConfig,
+    /// relabeled node graph (every machine derives the identical one)
+    graph: Graph,
+    part: MachinePartition,
+    /// local belief about peer liveness (updated by `Leave` events)
+    ctrl: TopologyController,
+    net: T,
+    pool: PhasePool,
+    mach: MachineRt<S>,
+    me: usize,
+    topo: TreeTopology,
+    /// rootward partials buffered at this machine, per round
+    inbox: BTreeMap<u64, BTreeMap<usize, Vec<StatPartial>>>,
+    sent_up: BTreeSet<u64>,
+    /// the designated-recorder state, present iff this machine holds it
+    tracker: Option<StopTracker>,
+    cursor: u64,
+    pending_wake: bool,
+    stopped: bool,
+    stop_round: Option<u64>,
+    flood_converged: bool,
+    dim: usize,
+}
+
+impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
+    /// Build machine `me` of an `cfg.machines`-way split of `graph`.
+    /// Every participant must construct from identical `(graph, cfg)` —
+    /// the partition, relabeling and θ⁰ seeding are pure functions of
+    /// them, which is what lets a process rebuild its slice from a tiny
+    /// init message.
+    pub fn new(graph: Graph, cfg: ClusterConfig, me: usize, net: T,
+               factory: &(dyn Fn(NodeId) -> S + Send + Sync))
+               -> Result<NodeRuntime<S, T>> {
+        if !matches!(cfg.collective, CollectiveKind::Tree) {
+            return Err(Error::Config(
+                "node runtime: only the tree collective is supported".into(),
+            ));
+        }
+        if cfg.activity.is_some() || cfg.handoff.is_some() {
+            return Err(Error::Config(
+                "node runtime: activity rule / scripted handoff are \
+                 simulator-only features".into(),
+            ));
+        }
+        let n = graph.len();
+        if n == 0 {
+            return Err(Error::Config("node runtime: empty graph".into()));
+        }
+        let dim = factory(0).dim();
+        let order: Vec<NodeId> = match cfg.relabel {
+            Relabel::Identity => (0..n).collect(),
+            Relabel::Rcm => rcm_order(&graph),
+        };
+        let relabeled = match cfg.relabel {
+            Relabel::Identity => graph,
+            Relabel::Rcm => relabel_graph(&graph, &order)?,
+        };
+        let part = MachinePartition::new(&relabeled, cfg.machines.max(1))?;
+        let mcount = part.len();
+        if me >= mcount {
+            return Err(Error::Config(format!(
+                "node runtime: machine {me} out of range (machines: {mcount})"
+            )));
+        }
+        let workers = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1)
+        };
+        let mach = MachineRt::build(&relabeled, &part, me, workers, &order,
+                                    factory, dim, cfg.scheme, cfg.params,
+                                    cfg.seed, false, cfg.max_iters);
+        let pool = PhasePool::new(mach.shards.len().max(1));
+        let ctrl = TopologyController::new(part.quotient.clone(), None);
+        let topo = build_tree_rooted(ctrl.view(), None);
+        let tracker = (topo.root == me).then(|| {
+            StopTracker::new(dim, cfg.tol, cfg.patience, cfg.warmup,
+                             cfg.max_iters, cfg.params.eta0)
+        });
+        Ok(NodeRuntime {
+            cfg,
+            graph: relabeled,
+            part,
+            ctrl,
+            net,
+            pool,
+            mach,
+            me,
+            topo,
+            inbox: BTreeMap::new(),
+            sent_up: BTreeSet::new(),
+            tracker,
+            cursor: 0,
+            pending_wake: false,
+            stopped: false,
+            stop_round: None,
+            flood_converged: false,
+            dim,
+        })
+    }
+
+    /// Drive this machine to termination: stop flood received/sent,
+    /// round budget exhausted at the holder, or transport closed.
+    pub fn run(mut self) -> NodeReport {
+        // reliable boundary handshake, exactly like the driver's
+        self.send_state(0, 0);
+        self.try_advance(false);
+        self.try_finish_holder();
+        while !self.stopped {
+            let Some((_at, event)) = self.net.pop() else { break };
+            match &event {
+                Event::Wake { node: _, epoch } => {
+                    if *epoch != self.mach.wake_epoch || !self.mach.running() {
+                        continue;
+                    }
+                }
+                Event::Timer { kind: TimerKind::Collective, epoch, .. } => {
+                    if *epoch != self.mach.coll_epoch
+                        || matches!(self.mach.phase, MPhase::Dormant | MPhase::Dead)
+                    {
+                        continue;
+                    }
+                }
+                _ => {}
+            }
+            match event {
+                Event::Deliver { src, dst: _, payload, dup: _ } => {
+                    self.on_deliver(src, payload);
+                }
+                Event::Wake { .. } => {
+                    self.net.counters().timeouts += 1;
+                    self.mach.timeout_armed = false;
+                    self.try_advance(true);
+                }
+                Event::Timer { kind: TimerKind::Collective, .. } => {
+                    self.on_coll_timer();
+                }
+                // gossip timers / joins never occur on this runtime
+                Event::Timer { kind: TimerKind::Gossip, .. } => {}
+                Event::Join { .. } => {}
+                Event::Leave { node } => self.on_leave(node),
+            }
+            if self.pending_wake {
+                self.pending_wake = false;
+                if self.mach.running() {
+                    self.try_advance(false);
+                }
+            }
+            self.try_finish_holder();
+        }
+        self.finish()
+    }
+
+    fn finish(self) -> NodeReport {
+        let target = self.stop_round.unwrap_or(u64::MAX);
+        let iterations = match &self.tracker {
+            Some(tr) => tr.iterations.max(self.cursor as usize),
+            None => self.stop_round.map(|r| r as usize + 1).unwrap_or(0),
+        };
+        let converged = self
+            .tracker
+            .as_ref()
+            .map(|tr| tr.converged)
+            .unwrap_or(self.flood_converged);
+        NodeReport {
+            machine: self.me,
+            iterations,
+            converged,
+            is_holder: self.tracker.is_some(),
+            final_root: self.topo.root,
+            span: self.mach.span.clone(),
+            thetas_flat: self.mach.snapshot_for(target, self.dim),
+            dim: self.dim,
+            counters: self.net.counters_snapshot(),
+        }
+    }
+
+    // -- the machine state machine (mirrors the driver's try_advance) -------
+
+    fn try_advance(&mut self, mut force: bool) {
+        loop {
+            if self.stopped {
+                return;
+            }
+            match self.mach.phase {
+                MPhase::Dormant | MPhase::Dead | MPhase::Done => return,
+                MPhase::Solve => {
+                    let t = self.mach.t;
+                    if t > self.mach.horizon + self.cfg.pipeline {
+                        return; // woken when the verdict horizon advances
+                    }
+                    if !self.ready_a(force) {
+                        self.arm_silence();
+                        return;
+                    }
+                    self.resolve_a();
+                    self.mach.run_phase_a(&self.graph, t, &self.pool,
+                                          self.cfg.exec);
+                    self.mach.snapshot(t);
+                    self.mach.phase = MPhase::Reduce;
+                    self.send_boundary_theta(t + 1);
+                }
+                MPhase::Reduce => {
+                    if !self.ready_b(force) {
+                        self.arm_silence();
+                        return;
+                    }
+                    self.resolve_b();
+                    let t = self.mach.t;
+                    self.mach.run_phase_b(&self.graph, t, &self.pool,
+                                          self.cfg.exec);
+                    self.mach.phase = MPhase::FoldWait;
+                    self.tree_deposit(t);
+                    if self.stopped {
+                        return;
+                    }
+                }
+                MPhase::FoldWait => {
+                    let t = self.mach.t;
+                    let verdict = self.mach.verdicts.get(&t).copied();
+                    if self.mach.needs_globals && verdict.is_none() {
+                        return; // woken by the verdict (or its fallback)
+                    }
+                    let globals = verdict.unwrap_or(self.mach.latest_globals);
+                    self.refresh_links();
+                    self.mach.run_phase_c(&self.graph, t, globals);
+                    self.send_boundary_eta(t + 1);
+                    self.mach.t += 1;
+                    self.mach.phase = if self.mach.t >= self.cfg.max_iters as u64 {
+                        MPhase::Done
+                    } else {
+                        MPhase::Solve
+                    };
+                }
+            }
+            self.mach.wake_epoch = self.mach.wake_epoch.wrapping_add(1);
+            self.mach.timeout_armed = false;
+            force = false;
+        }
+    }
+
+    fn arm_silence(&mut self) {
+        let timeout = self.cfg.silence_timeout;
+        if timeout == 0 || self.mach.timeout_armed {
+            return;
+        }
+        self.mach.timeout_armed = true;
+        let epoch = self.mach.wake_epoch;
+        let at = self.net.now() + timeout;
+        self.net.schedule(at, Event::Wake { node: self.me, epoch });
+    }
+
+    fn refresh_links(&mut self) {
+        let gen = self.ctrl.view().generation();
+        if self.mach.link_gen == gen {
+            return;
+        }
+        let mcount = self.part.len();
+        let mut live = vec![false; mcount];
+        live[self.me] = true;
+        {
+            let view = self.ctrl.view();
+            for (qslot, &p) in
+                self.part.quotient.neighbors(self.me).iter().enumerate()
+            {
+                live[p] = view.slot_live(self.me, qslot);
+            }
+        }
+        self.mach.link_live = live;
+        self.mach.link_gen = gen;
+    }
+
+    // -- boundary readiness / resolution (verbatim driver ports) ------------
+
+    fn ready_a(&mut self, force: bool) -> bool {
+        self.refresh_links();
+        let mach = &self.mach;
+        let t = mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..mach.in_nodes.len() {
+            let p = mach.in_node_machine[idx];
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_theta_ready(idx, t, stale, force) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn resolve_a(&mut self) {
+        let t = self.mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..self.mach.in_nodes.len() {
+            let p = self.mach.in_node_machine[idx];
+            if !self.mach.link_live[p] {
+                continue;
+            }
+            let used = self.mach.resolve_in_theta(idx, t);
+            self.net.note_stale_read(self.me, p, t, used, stale);
+        }
+    }
+
+    fn ready_b(&mut self, force: bool) -> bool {
+        self.refresh_links();
+        let mach = &self.mach;
+        let t = mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..mach.in_nodes.len() {
+            let p = mach.in_node_machine[idx];
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_theta_ready(idx, t + 1, stale, force) {
+                return false;
+            }
+        }
+        for idx in 0..mach.in_eta_edges.len() {
+            let p = mach.in_eta_edges[idx].2;
+            if !mach.link_live[p] {
+                continue;
+            }
+            if !mach.in_eta_ready(idx, t, stale, force) {
+                return false;
+            }
+        }
+        true
+    }
+
+    fn resolve_b(&mut self) {
+        let t = self.mach.t;
+        let stale = self.cfg.max_staleness;
+        for idx in 0..self.mach.in_nodes.len() {
+            let p = self.mach.in_node_machine[idx];
+            if !self.mach.link_live[p] {
+                continue;
+            }
+            let used = self.mach.resolve_in_theta(idx, t + 1);
+            self.net.note_stale_read(self.me, p, t + 1, used, stale);
+        }
+        for idx in 0..self.mach.in_eta_edges.len() {
+            let p = self.mach.in_eta_edges[idx].2;
+            if !self.mach.link_live[p] {
+                continue;
+            }
+            let used = self.mach.resolve_in_eta(idx, t);
+            self.net.note_stale_read(self.me, p, t, used, stale);
+        }
+    }
+
+    // -- boundary sends -----------------------------------------------------
+
+    /// Quotient slots whose link currently carries traffic.
+    fn live_neighbors(&self) -> Vec<(usize, usize)> {
+        let view = self.ctrl.view();
+        self.part
+            .quotient
+            .neighbors(self.me)
+            .iter()
+            .enumerate()
+            .filter(|&(qslot, _)| view.slot_live(self.me, qslot))
+            .map(|(qslot, &p)| (qslot, p))
+            .collect()
+    }
+
+    fn send_state(&mut self, ts: u64, es: u64) {
+        for (qslot, p) in self.live_neighbors() {
+            let nodes = self.mach.boundary_theta(qslot, ts);
+            let edges = self.mach.boundary_eta(qslot);
+            self.net.send(self.me, p,
+                          Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.net.send(self.me, p,
+                          Payload::BoundaryEta { stamp: es, edges }, true);
+        }
+    }
+
+    fn send_boundary_theta(&mut self, stamp: u64) {
+        for (qslot, p) in self.live_neighbors() {
+            let nodes = self.mach.boundary_theta(qslot, stamp);
+            self.net.send(self.me, p,
+                          Payload::BoundaryTheta { stamp, nodes }, false);
+        }
+    }
+
+    fn send_boundary_eta(&mut self, stamp: u64) {
+        for (qslot, p) in self.live_neighbors() {
+            let edges = self.mach.boundary_eta(qslot);
+            self.net.send(self.me, p,
+                          Payload::BoundaryEta { stamp, edges }, false);
+        }
+    }
+
+    // -- event handlers -----------------------------------------------------
+
+    fn on_deliver(&mut self, src: usize, payload: Payload) {
+        self.net.note_delivered(src, self.me, &payload);
+        match payload {
+            Payload::BoundaryTheta { stamp, nodes } => {
+                for (node, th) in nodes {
+                    let idx = self
+                        .mach
+                        .in_nodes
+                        .binary_search(&node)
+                        .expect("boundary node known to the receiver");
+                    self.mach.in_theta[idx].insert(stamp, th);
+                }
+                self.try_advance(false);
+            }
+            Payload::BoundaryEta { stamp, edges } => {
+                for (i, j, eta) in edges {
+                    let idx = *self
+                        .mach
+                        .in_eta_index
+                        .get(&(i, j))
+                        .expect("cross edge known to the receiver");
+                    self.mach.in_eta[idx].insert(stamp, eta);
+                }
+                self.try_advance(false);
+            }
+            Payload::Part { round, entries, thetas: _ } => {
+                self.on_part(src, round, entries);
+            }
+            Payload::Verdict { round, global_primal, global_dual } => {
+                self.on_verdict(round, global_primal, global_dual);
+            }
+            Payload::Checker { cursor, snap } => {
+                // adopt unless we already carry a further-along tracker
+                // (a freshly-adopted one racing a graceful handoff)
+                if self.tracker.is_none() || cursor >= self.cursor {
+                    let mut tr = StopTracker::new(
+                        self.dim, self.cfg.tol, self.cfg.patience,
+                        self.cfg.warmup, self.cfg.max_iters,
+                        self.cfg.params.eta0,
+                    );
+                    tr.resume(*snap);
+                    self.tracker = Some(tr);
+                    self.cursor = cursor;
+                    self.try_root_folds();
+                }
+            }
+            Payload::Stop { round, converged } => {
+                if !self.stopped {
+                    self.stopped = true;
+                    self.stop_round = Some(round);
+                    self.flood_converged = converged;
+                    // re-flood once so the broadcast survives the
+                    // sender dying right after its first send
+                    let mcount = self.part.len();
+                    for p in 0..mcount {
+                        if p != self.me && p != src
+                            && self.ctrl.view().node_live(p)
+                        {
+                            self.net.send(self.me, p,
+                                          Payload::Stop { round, converged },
+                                          true);
+                        }
+                    }
+                }
+            }
+            // per-node payloads / gossip never travel to this runtime
+            Payload::Theta { .. } | Payload::Eta { .. }
+            | Payload::Gossip { .. } => {}
+        }
+    }
+
+    /// A peer (or this machine) left. Self-leave is the graceful-exit
+    /// drill: hand the tracker off if we hold it, then terminate.
+    fn on_leave(&mut self, node: usize) {
+        if node == self.me {
+            if self.tracker.is_some() {
+                let successor = (0..self.part.len())
+                    .find(|&p| p != self.me && self.ctrl.view().node_live(p));
+                if let Some(to) = successor {
+                    let snap = self.tracker.as_ref().unwrap().snapshot();
+                    self.net.record(TraceKind::Handoff { from: self.me, to });
+                    self.net.send(self.me, to,
+                                  Payload::Checker {
+                                      cursor: self.cursor,
+                                      snap: Box::new(snap),
+                                  },
+                                  true);
+                    self.tracker = None;
+                }
+            }
+            self.stopped = true;
+            return;
+        }
+        if !self.ctrl.view().node_live(node) {
+            return;
+        }
+        self.ctrl.apply_leave(node, &mut self.net);
+        self.mach.wake_epoch = self.mach.wake_epoch.wrapping_add(1);
+        self.mach.timeout_armed = false;
+        self.tree_refresh();
+        // expectations shrank: re-evaluate buffered collective rounds
+        let pending: Vec<u64> = self.inbox.keys().copied().collect();
+        for r in pending {
+            if self.stopped {
+                return;
+            }
+            self.tree_progress(r);
+        }
+        self.pending_wake = true;
+    }
+
+    // -- tree collective ----------------------------------------------------
+
+    fn tree_refresh(&mut self) {
+        let gen = self.ctrl.view().generation();
+        if self.topo.built_gen == gen {
+            return;
+        }
+        let old_root = self.topo.root;
+        self.topo = build_tree_rooted(self.ctrl.view(), None);
+        let new_root = self.topo.root;
+        if new_root == old_root {
+            return;
+        }
+        self.net.record(TraceKind::Reroot { root: new_root });
+        if new_root == self.me && self.tracker.is_none() {
+            // the old holder is gone and nothing arrived from it: adopt
+            // a fresh tracker (kill recovery — see module docs). Start
+            // at the oldest round still buffered here so every
+            // commit has its partials.
+            self.tracker = Some(StopTracker::new(
+                self.dim, self.cfg.tol, self.cfg.patience, self.cfg.warmup,
+                self.cfg.max_iters, self.cfg.params.eta0,
+            ));
+            self.cursor = self
+                .inbox
+                .keys()
+                .next()
+                .copied()
+                .unwrap_or(self.mach.t)
+                .max(self.cursor);
+        } else if new_root != self.me && self.tracker.is_some() {
+            // we hold the tracker but lost the root role (e.g. a leave
+            // notification reordered against a handoff): ship it over
+            let snap = self.tracker.as_ref().unwrap().snapshot();
+            self.net.record(TraceKind::Handoff { from: self.me, to: new_root });
+            self.net.send(self.me, new_root,
+                          Payload::Checker {
+                              cursor: self.cursor,
+                              snap: Box::new(snap),
+                          },
+                          true);
+            self.tracker = None;
+        }
+    }
+
+    /// Whether peer `p` owes a contribution to round `r` (no dormant
+    /// machines here: everyone starts at round 0).
+    fn expects(&self, p: usize, r: u64) -> bool {
+        self.ctrl.view().node_live(p) && self.mach.start_round <= r
+    }
+
+    fn tree_deposit(&mut self, round: u64) {
+        let entry = self.mach.partials.clone();
+        self.inbox.entry(round).or_default().insert(self.me, entry);
+        self.tree_progress(round);
+    }
+
+    fn tree_progress(&mut self, round: u64) {
+        self.tree_refresh();
+        if self.topo.root == self.me {
+            self.try_root_folds();
+            return;
+        }
+        let (complete, own) = self.subtree_status(round);
+        if !complete {
+            if own {
+                self.arm_coll();
+            }
+            return;
+        }
+        self.tree_forward(round);
+    }
+
+    /// (subtree complete for `round`, own entry present).
+    fn subtree_status(&self, round: u64) -> (bool, bool) {
+        let present = self.inbox.get(&round);
+        let own = present.is_some_and(|map| map.contains_key(&self.me));
+        let members = subtree(&self.topo, self.me);
+        let complete = members.iter().all(|&p| {
+            !self.expects(p, round)
+                || present.is_some_and(|map| map.contains_key(&p))
+        });
+        (complete, own)
+    }
+
+    fn tree_forward(&mut self, round: u64) {
+        let Some(map) = self.inbox.get(&round) else { return };
+        let entries: Vec<(usize, Vec<StatPartial>)> =
+            map.iter().map(|(&k, v)| (k, v.clone())).collect();
+        self.sent_up.insert(round);
+        if let Some(p) = self.topo.parent[self.me] {
+            self.net.send(self.me, p,
+                          Payload::Part { round, entries, thetas: Vec::new() },
+                          false);
+        }
+        self.arm_coll();
+    }
+
+    fn on_part(&mut self, src: usize, round: u64,
+               entries: Vec<(usize, Vec<StatPartial>)>) {
+        // straggler for an already-verdicted round: answer directly
+        if let Some(&(gp, gd)) = self.mach.verdicts.get(&round) {
+            self.net.send(self.me, src,
+                          Payload::Verdict { round, global_primal: gp,
+                                             global_dual: gd },
+                          false);
+            return;
+        }
+        let map = self.inbox.entry(round).or_default();
+        for (mid, parts) in entries {
+            map.insert(mid, parts);
+        }
+        self.tree_progress(round);
+    }
+
+    fn on_verdict(&mut self, round: u64, gp: f64, gd: f64) {
+        if !self.store_verdict(round, gp, gd) {
+            return;
+        }
+        let settled = &self.mach.verdicts;
+        self.inbox.retain(|&r, _| r > round || !settled.contains_key(&r));
+        self.sent_up.retain(|&r| r > round || !settled.contains_key(&r));
+        for c in self.topo.children[self.me].clone() {
+            if self.ctrl.view().node_live(c) {
+                self.net.send(self.me, c,
+                              Payload::Verdict { round, global_primal: gp,
+                                                 global_dual: gd },
+                              false);
+            }
+        }
+        self.tree_rearm();
+    }
+
+    fn store_verdict(&mut self, r: u64, gp: f64, gd: f64) -> bool {
+        let mach = &mut self.mach;
+        if mach.verdicts.insert(r, (gp, gd)).is_some() {
+            return false;
+        }
+        if r + 1 > mach.horizon {
+            mach.horizon = r + 1;
+            mach.latest_globals = (gp, gd);
+        }
+        mach.retries.remove(&r);
+        mach.coll_armed = false;
+        mach.coll_epoch = mach.coll_epoch.wrapping_add(1);
+        self.pending_wake = true;
+        true
+    }
+
+    fn arm_coll(&mut self) {
+        let timeout = self.cfg.collective_timeout;
+        if timeout == 0 || self.mach.coll_armed {
+            return;
+        }
+        self.mach.coll_armed = true;
+        let epoch = self.mach.coll_epoch;
+        let at = self.net.now() + timeout;
+        self.net.schedule(at, Event::Timer {
+            node: self.me,
+            kind: TimerKind::Collective,
+            epoch,
+        });
+    }
+
+    fn tree_rearm(&mut self) {
+        let outstanding = self.inbox.iter().any(|(r, map)| {
+            map.contains_key(&self.me) && !self.mach.verdicts.contains_key(r)
+        });
+        if outstanding {
+            self.arm_coll();
+        }
+    }
+
+    // -- root folds / stop flood --------------------------------------------
+
+    fn try_root_folds(&mut self) {
+        loop {
+            if self.stopped || self.topo.root != self.me || self.tracker.is_none()
+            {
+                return;
+            }
+            let r = self.cursor;
+            if r >= self.cfg.max_iters as u64 {
+                return; // try_finish_holder floods the budget exit
+            }
+            let (complete, own) = self.subtree_status(r);
+            if !complete {
+                if own {
+                    self.arm_coll();
+                }
+                return;
+            }
+            if !self.inbox.contains_key(&r) {
+                return;
+            }
+            self.root_fold(r, false);
+        }
+    }
+
+    fn root_fold(&mut self, r: u64, forced: bool) {
+        let Some(map) = self.inbox.remove(&r) else { return };
+        self.sent_up.remove(&r);
+        if forced {
+            self.net.counters().collective_timeouts += 1;
+            self.net
+                .record(TraceKind::CollectiveTimeout { machine: self.me, round: r });
+        }
+        if map.values().flatten().all(|p| p.node_count == 0) {
+            return; // nothing to fold: every contributor died
+        }
+        let Some(tracker) = self.tracker.as_mut() else { return };
+        let g = tracker.round_partials(map.values().flat_map(|parts| parts.iter()));
+        let stop = tracker.commit(r as usize, IterStats {
+            iter: r as usize,
+            objective: g.objective,
+            max_primal: g.max_primal,
+            max_dual: g.max_dual,
+            mean_eta: g.mean_eta,
+            min_eta: g.min_eta,
+            max_eta: g.max_eta,
+            app_error: 0.0,
+        });
+        self.cursor = r + 1;
+        self.net.record(TraceKind::Fold { round: r });
+        self.store_verdict(r, g.global_primal, g.global_dual);
+        if stop {
+            // `commit` also fires on a spent budget — report what the
+            // checker actually concluded, not the flood itself
+            let converged = self.tracker.as_ref().unwrap().converged;
+            self.flood_stop(r, converged);
+            return;
+        }
+        for c in self.topo.children[self.me].clone() {
+            if self.ctrl.view().node_live(c) {
+                self.net.send(self.me, c,
+                              Payload::Verdict {
+                                  round: r,
+                                  global_primal: g.global_primal,
+                                  global_dual: g.global_dual,
+                              },
+                              false);
+            }
+        }
+    }
+
+    /// Budget exit at the holder: every round committed and the local
+    /// machine finished — flood the stop and terminate.
+    fn try_finish_holder(&mut self) {
+        if self.stopped || self.tracker.is_none() {
+            return;
+        }
+        if self.cursor >= self.cfg.max_iters as u64
+            && !matches!(self.mach.phase, MPhase::Solve | MPhase::Reduce
+                         | MPhase::FoldWait)
+        {
+            let round = self.cursor.saturating_sub(1);
+            let converged = self.tracker.as_ref().unwrap().converged;
+            self.flood_stop(round, converged);
+        }
+    }
+
+    fn flood_stop(&mut self, round: u64, converged: bool) {
+        self.stopped = true;
+        self.stop_round = Some(round);
+        self.flood_converged = converged;
+        self.net.record(TraceKind::Stop { rounds: round + 1 });
+        for p in 0..self.part.len() {
+            if p != self.me && self.ctrl.view().node_live(p) {
+                self.net
+                    .send(self.me, p, Payload::Stop { round, converged }, true);
+            }
+        }
+    }
+
+    // -- collective timer (straggler recovery) ------------------------------
+
+    fn on_coll_timer(&mut self) {
+        self.mach.coll_armed = false;
+        self.mach.coll_epoch = self.mach.coll_epoch.wrapping_add(1);
+        self.tree_refresh();
+        if self.topo.root == self.me {
+            if self.tracker.is_none() {
+                return; // handoff in flight: the Checker delivery resumes
+            }
+            let r = self.cursor;
+            if r >= self.cfg.max_iters as u64 {
+                return;
+            }
+            let (_, own) = self.subtree_status(r);
+            if own {
+                self.root_fold(r, true);
+                if !self.stopped {
+                    self.try_root_folds();
+                }
+            }
+            return;
+        }
+        // oldest outstanding round with our own entry and no verdict
+        let cand = self
+            .inbox
+            .iter()
+            .filter(|(r, map)| {
+                map.contains_key(&self.me) && !self.mach.verdicts.contains_key(r)
+            })
+            .map(|(&r, _)| r)
+            .next();
+        let Some(next) = cand else { return };
+        if !self.sent_up.contains(&next) {
+            self.net.counters().collective_timeouts += 1;
+            self.net
+                .record(TraceKind::CollectiveTimeout { machine: self.me,
+                                                       round: next });
+            self.tree_forward(next);
+            return;
+        }
+        let retries = {
+            let e = self.mach.retries.entry(next).or_insert(0);
+            *e += 1;
+            *e
+        };
+        if retries > self.cfg.fallback_after {
+            let (gp, gd) = self.local_fold(next);
+            self.net.counters().collective_fallbacks += 1;
+            self.net
+                .record(TraceKind::FallbackVerdict { machine: self.me,
+                                                     round: next });
+            self.store_verdict(next, gp, gd);
+            self.tree_rearm();
+        } else {
+            self.net.counters().collective_retries += 1;
+            self.tree_forward(next);
+        }
+    }
+
+    /// Local substitute fold over whatever this subtree delivered for
+    /// `round` (detached-survivor path; same arithmetic as the driver).
+    fn local_fold(&mut self, round: u64) -> (f64, f64) {
+        let mut rf = RunningFold::new(self.dim);
+        if let Some(map) = self.inbox.get(&round) {
+            for parts in map.values() {
+                for p in parts {
+                    rf.absorb(p);
+                }
+            }
+        }
+        let gp = rf.global_primal();
+        let mut gs2 = 0.0;
+        for k in 0..self.dim {
+            let d = rf.gmean[k] - self.mach.coll_mean_prev[k];
+            gs2 += d * d;
+        }
+        self.mach.coll_mean_prev.copy_from_slice(&rf.gmean);
+        let gd = self.cfg.params.eta0 * (rf.agg_n as f64).sqrt() * gs2.sqrt();
+        (gp, gd)
+    }
+}

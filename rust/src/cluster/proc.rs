@@ -1,0 +1,765 @@
+//! Process transport: every machine is an OS process (`fadmm-node`)
+//! speaking line-delimited JSON over stdin/stdout, Maelstrom-style.
+//!
+//! The last rung of the deployment ladder (transport matrix in
+//! [`crate::net`]): machine death is a real `SIGKILL` — no goodbye
+//! message, no destructor, the socket just goes quiet — which is the one
+//! failure mode neither the simulator (scripted [`Event::Leave`]) nor
+//! the thread backend (injected leave, graceful exit) can produce.
+//!
+//! ## Wire protocol (one JSON document per line)
+//!
+//! | direction | line | meaning |
+//! |---|---|---|
+//! | driver → node (first) | `{"init":{…}}` | full run config; see [`ProcInit`] |
+//! | node → node (via driver) | `{"src":m,"dst":p,"body":…}` | routed protocol message; `body` is the [`codec`] payload encoding |
+//! | driver → node | `{"ctrl":"leave","machine":m}` | peer `m` is gone (the driver's death notice after a kill) |
+//! | driver → node | `{"ctrl":"shutdown"}` | drain and exit |
+//! | node → driver (last) | `{"done":{…}}` | final report; see [`ProcDone`] |
+//!
+//! The driver ([`ProcCluster`]) is a star router, not a participant: it
+//! forwards `src/dst` lines verbatim and never inspects `body`. Nodes
+//! rebuild the *entire* deterministic problem — graph, partition,
+//! relabeling, θ⁰ — from the init line alone (everything downstream of
+//! `(topology, nodes, dim, problem_seed)` is a pure function), so the
+//! init message stays a few hundred bytes no matter the problem size.
+//!
+//! A killed node's in-flight lines die with its pipes; survivors see
+//! silence, the driver broadcasts the `leave` notice, and the tree
+//! re-roots exactly as under simulated churn ([`super::node`] module
+//! docs cover the fresh-tracker recovery semantics).
+
+use std::io::{BufRead, Write};
+use std::process::{Child, ChildStdin, Command, Stdio};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::consensus::solvers::QuadraticNode;
+use crate::error::{Error, Result};
+use crate::graph::{NodeId, Topology};
+use crate::metrics::NetCounters;
+use crate::net::codec::{payload_from_json, payload_to_json};
+use crate::net::sim::{Event, Payload, Ticks, TraceEvent, TraceKind};
+use crate::net::transport::Transport;
+use crate::penalty::SchemeKind;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::node::NodeRuntime;
+use super::runner::ClusterConfig;
+
+// -- wire helpers ------------------------------------------------------------
+
+fn req_u64(v: &Json, key: &str) -> Result<u64> {
+    let x = v.req(key)?.as_f64().ok_or_else(|| {
+        Error::Config(format!("proc wire: '{key}' is not a number"))
+    })?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(Error::Config(format!("proc wire: '{key}' is not a u64")));
+    }
+    Ok(x as u64)
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.req(key)?
+        .as_usize()
+        .ok_or_else(|| Error::Config(format!("proc wire: '{key}' is not a usize")))
+}
+
+fn req_f64(v: &Json, key: &str) -> Result<f64> {
+    v.req(key)?
+        .as_f64()
+        .ok_or_else(|| Error::Config(format!("proc wire: '{key}' is not a number")))
+}
+
+// -- init line ---------------------------------------------------------------
+
+/// Everything a node process needs to reconstruct its machine: the
+/// deterministic problem family (quadratic consensus,
+/// [`crate::experiments::common::quad_problem_factory`]) keyed by
+/// `(nodes, dim, problem_seed)`, the topology by name, and the cluster
+/// knobs that must agree across every participant.
+#[derive(Debug, Clone)]
+pub struct ProcInit {
+    pub machine: usize,
+    pub machines: usize,
+    pub nodes: usize,
+    pub dim: usize,
+    pub problem_seed: u64,
+    pub topology: Topology,
+    pub scheme: SchemeKind,
+    pub tol: f64,
+    pub patience: usize,
+    pub warmup: usize,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub workers: usize,
+    pub max_staleness: u64,
+    /// wall milliseconds (real transport)
+    pub silence_timeout: Ticks,
+    pub collective_timeout: Ticks,
+    pub fallback_after: u32,
+    pub pipeline: u64,
+}
+
+impl ProcInit {
+    pub fn to_json(&self) -> Json {
+        obj(vec![("init", obj(vec![
+            ("machine", num(self.machine as f64)),
+            ("machines", num(self.machines as f64)),
+            ("nodes", num(self.nodes as f64)),
+            ("dim", num(self.dim as f64)),
+            ("problem_seed", num(self.problem_seed as f64)),
+            ("topology", s(self.topology.name())),
+            ("scheme", s(self.scheme.name())),
+            ("tol", num(self.tol)),
+            ("patience", num(self.patience as f64)),
+            ("warmup", num(self.warmup as f64)),
+            ("max_iters", num(self.max_iters as f64)),
+            ("seed", num(self.seed as f64)),
+            ("workers", num(self.workers as f64)),
+            ("max_staleness", num(self.max_staleness as f64)),
+            ("silence_timeout", num(self.silence_timeout as f64)),
+            ("collective_timeout", num(self.collective_timeout as f64)),
+            ("fallback_after", num(self.fallback_after as f64)),
+            ("pipeline", num(self.pipeline as f64)),
+        ]))])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ProcInit> {
+        let b = v.req("init")?;
+        let topology = Topology::parse(
+            b.req("topology")?.as_str().ok_or_else(|| {
+                Error::Config("proc wire: 'topology' is not a string".into())
+            })?,
+        )?;
+        let scheme = SchemeKind::parse(b.req("scheme")?.as_str().ok_or_else(
+            || Error::Config("proc wire: 'scheme' is not a string".into()),
+        )?)?;
+        Ok(ProcInit {
+            machine: req_usize(b, "machine")?,
+            machines: req_usize(b, "machines")?,
+            nodes: req_usize(b, "nodes")?,
+            dim: req_usize(b, "dim")?,
+            problem_seed: req_u64(b, "problem_seed")?,
+            topology,
+            scheme,
+            tol: req_f64(b, "tol")?,
+            patience: req_usize(b, "patience")?,
+            warmup: req_usize(b, "warmup")?,
+            max_iters: req_usize(b, "max_iters")?,
+            seed: req_u64(b, "seed")?,
+            workers: req_usize(b, "workers")?,
+            max_staleness: req_u64(b, "max_staleness")?,
+            silence_timeout: req_u64(b, "silence_timeout")?,
+            collective_timeout: req_u64(b, "collective_timeout")?,
+            fallback_after: req_u64(b, "fallback_after")? as u32,
+            pipeline: req_u64(b, "pipeline")?,
+        })
+    }
+
+    pub fn cluster_config(&self) -> ClusterConfig {
+        ClusterConfig {
+            scheme: self.scheme,
+            tol: self.tol,
+            patience: self.patience,
+            warmup: self.warmup,
+            max_iters: self.max_iters,
+            seed: self.seed,
+            machines: self.machines,
+            workers: self.workers,
+            max_staleness: self.max_staleness,
+            silence_timeout: self.silence_timeout,
+            collective_timeout: self.collective_timeout,
+            fallback_after: self.fallback_after,
+            pipeline: self.pipeline,
+            tracing: false,
+            ..Default::default()
+        }
+    }
+}
+
+// -- done line ---------------------------------------------------------------
+
+/// A node's final report line.
+#[derive(Debug, Clone)]
+pub struct ProcDone {
+    pub machine: usize,
+    pub iterations: usize,
+    pub converged: bool,
+    pub is_holder: bool,
+    pub final_root: usize,
+    /// `[start, end)` of this machine's relabeled node span.
+    pub span: (usize, usize),
+    /// flat `span-len × dim` θ at the stop round
+    pub thetas: Vec<f64>,
+}
+
+impl ProcDone {
+    fn to_json(&self) -> Json {
+        obj(vec![("done", obj(vec![
+            ("machine", num(self.machine as f64)),
+            ("iterations", num(self.iterations as f64)),
+            ("converged", Json::Bool(self.converged)),
+            ("is_holder", Json::Bool(self.is_holder)),
+            ("root", num(self.final_root as f64)),
+            ("span", arr(vec![num(self.span.0 as f64), num(self.span.1 as f64)])),
+            ("thetas", arr(self.thetas.iter().map(|&x| num(x)).collect())),
+        ]))])
+    }
+
+    fn from_json(v: &Json) -> Result<ProcDone> {
+        let b = v.req("done")?;
+        let span = b.req("span")?.as_arr().ok_or_else(|| {
+            Error::Config("proc wire: 'span' is not an array".into())
+        })?;
+        if span.len() != 2 {
+            return Err(Error::Config("proc wire: 'span' is not a pair".into()));
+        }
+        let thetas = b
+            .req("thetas")?
+            .as_arr()
+            .ok_or_else(|| Error::Config("proc wire: 'thetas' is not an array".into()))?
+            .iter()
+            .map(|x| {
+                x.as_f64().ok_or_else(|| {
+                    Error::Config("proc wire: non-numeric theta".into())
+                })
+            })
+            .collect::<Result<Vec<f64>>>()?;
+        Ok(ProcDone {
+            machine: req_usize(b, "machine")?,
+            iterations: req_usize(b, "iterations")?,
+            converged: b.req("converged")?.as_bool().ok_or_else(|| {
+                Error::Config("proc wire: 'converged' is not a bool".into())
+            })?,
+            is_holder: b.req("is_holder")?.as_bool().ok_or_else(|| {
+                Error::Config("proc wire: 'is_holder' is not a bool".into())
+            })?,
+            final_root: req_usize(b, "root")?,
+            span: (
+                span[0].as_usize().ok_or_else(|| {
+                    Error::Config("proc wire: bad span start".into())
+                })?,
+                span[1].as_usize().ok_or_else(|| {
+                    Error::Config("proc wire: bad span end".into())
+                })?,
+            ),
+            thetas,
+        })
+    }
+}
+
+// -- the node-side transport -------------------------------------------------
+
+/// [`Transport`] over the process's own stdin/stdout. A background
+/// thread turns stdin lines into [`Event`]s on a channel; sends encode
+/// through [`crate::net::codec`] and write-and-flush one line. Timer
+/// logic is identical to the in-process channel transport: arrived
+/// traffic first, then the earliest due timer, blocking with a timeout
+/// derived from the next deadline. Stdin EOF (driver gone, or we were
+/// orphaned by a kill) disconnects the channel; a final timer drain
+/// lets fallback paths finish before `pop` returns `None`.
+pub struct StdioTransport {
+    id: NodeId,
+    epoch: Instant,
+    rx: Receiver<Event>,
+    timers: Vec<(Ticks, u64, Event)>,
+    seq: u64,
+    counters: NetCounters,
+}
+
+impl StdioTransport {
+    /// Wrap this process's stdio; `rx` must be fed by
+    /// [`spawn_stdin_reader`].
+    fn new(id: NodeId, rx: Receiver<Event>) -> StdioTransport {
+        StdioTransport {
+            id,
+            epoch: Instant::now(),
+            rx,
+            timers: Vec::new(),
+            seq: 0,
+            counters: NetCounters::default(),
+        }
+    }
+
+    fn next_timer(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, t) in self.timers.iter().enumerate() {
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if (t.0, t.1) < (self.timers[b].0, self.timers[b].1) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    fn pop_after_disconnect(&mut self) -> Option<(Ticks, Event)> {
+        let i = self.next_timer()?;
+        let due = self.timers[i].0;
+        let now = self.now();
+        if due > now {
+            std::thread::sleep(Duration::from_millis(due - now));
+        }
+        let (_, _, event) = self.timers.remove(i);
+        Some((self.now(), event))
+    }
+}
+
+impl Transport for StdioTransport {
+    fn now(&self) -> Ticks {
+        self.epoch.elapsed().as_millis() as Ticks
+    }
+
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool) {
+        self.counters.sent += 1;
+        let line = obj(vec![
+            ("src", num(src as f64)),
+            ("dst", num(dst as f64)),
+            ("body", payload_to_json(&payload)),
+        ])
+        .to_string();
+        let out = std::io::stdout();
+        let mut h = out.lock();
+        // a broken pipe means the driver died — the run is over anyway,
+        // and stdin EOF will end the event loop; don't panic mid-send
+        let _ = writeln!(h, "{line}");
+        let _ = h.flush();
+    }
+
+    fn schedule(&mut self, at: Ticks, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.timers.push((at.max(self.now()), seq, event));
+    }
+
+    fn pop(&mut self) -> Option<(Ticks, Event)> {
+        loop {
+            match self.rx.try_recv() {
+                Ok(ev) => return Some((self.now(), ev)),
+                Err(TryRecvError::Disconnected) => return self.pop_after_disconnect(),
+                Err(TryRecvError::Empty) => {}
+            }
+            match self.next_timer() {
+                Some(i) if self.timers[i].0 <= self.now() => {
+                    let (_, _, event) = self.timers.remove(i);
+                    return Some((self.now(), event));
+                }
+                Some(i) => {
+                    // saturating: the clock may tick past the deadline
+                    // between the guard above and this read
+                    let wait = self.timers[i].0.saturating_sub(self.now());
+                    match self.rx.recv_timeout(Duration::from_millis(wait)) {
+                        Ok(ev) => return Some((self.now(), ev)),
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return self.pop_after_disconnect()
+                        }
+                    }
+                }
+                None => match self.rx.recv() {
+                    Ok(ev) => return Some((self.now(), ev)),
+                    Err(_) => return None,
+                },
+            }
+        }
+    }
+
+    fn advance_to(&mut self, _at: Ticks) {}
+
+    // process nodes keep counters but no trace (nobody collects it)
+    fn record(&mut self, _kind: TraceKind) {}
+
+    fn note_stale_read(&mut self, _node: NodeId, _nbr: NodeId, ideal: u64,
+                       used: u64, stale: u64) {
+        if used < ideal {
+            self.counters.stale_reads += 1;
+            if used + stale < ideal {
+                self.counters.fallback_reads += 1;
+            }
+        }
+    }
+
+    fn note_delivered(&mut self, _src: NodeId, _dst: NodeId, _payload: &Payload) {
+        self.counters.delivered += 1;
+    }
+
+    fn note_dead_delivery(&mut self, _src: NodeId, _dst: NodeId, _payload: &Payload) {
+        self.counters.dropped_dead += 1;
+    }
+
+    fn counters(&mut self) -> &mut NetCounters {
+        &mut self.counters
+    }
+
+    fn counters_snapshot(&self) -> NetCounters {
+        self.counters
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
+    }
+}
+
+/// Feed stdin lines into the transport's event channel until EOF or an
+/// explicit shutdown ctrl line. Runs on its own thread because the main
+/// thread blocks in [`Transport::pop`].
+fn spawn_stdin_reader(me: usize, tx: Sender<Event>) {
+    std::thread::Builder::new()
+        .name(format!("fadmm-stdin-{me}"))
+        .spawn(move || {
+            let stdin = std::io::stdin();
+            for line in stdin.lock().lines() {
+                let Ok(line) = line else { break };
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                let Some(event) = parse_wire_line(line) else {
+                    eprintln!("fadmm-node {me}: unparseable line skipped");
+                    continue;
+                };
+                let shutdown = matches!(event, Event::Join { node } if node == SHUTDOWN);
+                if shutdown || tx.send(event).is_err() {
+                    break;
+                }
+            }
+            // tx drops here → the transport's channel disconnects
+        })
+        .expect("spawn stdin reader");
+}
+
+/// Sentinel for the shutdown ctrl line (never a valid machine id —
+/// the reader exits instead of forwarding it).
+const SHUTDOWN: usize = usize::MAX;
+
+/// Parse one driver → node line into an [`Event`] (`None` = malformed).
+fn parse_wire_line(line: &str) -> Option<Event> {
+    let v = Json::parse(line).ok()?;
+    if let Some(ctrl) = v.get("ctrl").and_then(|c| c.as_str()) {
+        return match ctrl {
+            "leave" => Some(Event::Leave { node: v.get("machine")?.as_usize()? }),
+            "shutdown" => Some(Event::Join { node: SHUTDOWN }),
+            _ => None,
+        };
+    }
+    let src = v.get("src")?.as_usize()?;
+    let dst = v.get("dst")?.as_usize()?;
+    let payload = payload_from_json(v.get("body")?).ok()?;
+    Some(Event::Deliver { src, dst, payload, dup: false })
+}
+
+/// The `fadmm-node` binary body: read the init line, run one machine to
+/// termination, emit the done line. Returns the process exit code.
+pub fn node_main() -> i32 {
+    let mut first = String::new();
+    if std::io::stdin().read_line(&mut first).is_err() || first.trim().is_empty() {
+        eprintln!("fadmm-node: missing init line");
+        return 2;
+    }
+    let init = match Json::parse(first.trim()).and_then(|v| ProcInit::from_json(&v)) {
+        Ok(i) => i,
+        Err(e) => {
+            eprintln!("fadmm-node: bad init line: {e}");
+            return 2;
+        }
+    };
+    let graph = match init.topology.build(init.nodes) {
+        Ok(g) => g,
+        Err(e) => {
+            eprintln!("fadmm-node: bad topology: {e}");
+            return 2;
+        }
+    };
+    let factory = crate::experiments::common::quad_problem_factory(
+        init.nodes, init.dim, init.problem_seed,
+    );
+    let (tx, rx) = std::sync::mpsc::channel();
+    let net = StdioTransport::new(init.machine, rx);
+    let rt: NodeRuntime<QuadraticNode, StdioTransport> = match NodeRuntime::new(
+        graph, init.cluster_config(), init.machine, net, &*factory,
+    ) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("fadmm-node: config rejected: {e}");
+            return 2;
+        }
+    };
+    spawn_stdin_reader(init.machine, tx);
+    let report = rt.run();
+    let done = ProcDone {
+        machine: report.machine,
+        iterations: report.iterations,
+        converged: report.converged,
+        is_holder: report.is_holder,
+        final_root: report.final_root,
+        span: (report.span.start, report.span.end),
+        thetas: report.thetas_flat.clone(),
+    };
+    println!("{}", done.to_json().to_string());
+    let _ = std::io::stdout().flush();
+    0
+}
+
+// -- the driver --------------------------------------------------------------
+
+/// Star router over `fadmm-node` child processes: spawns them, writes
+/// their init lines, forwards routed messages, records done lines, and
+/// can SIGKILL a machine mid-run.
+pub struct ProcCluster {
+    children: Vec<Child>,
+    stdins: Vec<Option<ChildStdin>>,
+    from_children: Receiver<(usize, String)>,
+    alive: Vec<bool>,
+    pub done: Vec<Option<ProcDone>>,
+    /// routed (node → node) lines forwarded so far — tests use it as a
+    /// progress proxy for "mid-run"
+    pub routed: u64,
+}
+
+impl ProcCluster {
+    /// Spawn one `fadmm-node` per init and deliver the init lines.
+    /// `bin` is the node binary path (tests use
+    /// `env!("CARGO_BIN_EXE_fadmm-node")`).
+    pub fn spawn(bin: &str, inits: &[ProcInit]) -> std::io::Result<ProcCluster> {
+        let n = inits.len();
+        let (tx, from_children) = std::sync::mpsc::channel::<(usize, String)>();
+        let mut children = Vec::with_capacity(n);
+        let mut stdins = Vec::with_capacity(n);
+        for (m, init) in inits.iter().enumerate() {
+            let mut child = Command::new(bin)
+                .stdin(Stdio::piped())
+                .stdout(Stdio::piped())
+                .stderr(Stdio::inherit())
+                .spawn()?;
+            let mut stdin = child.stdin.take().expect("piped stdin");
+            let stdout = child.stdout.take().expect("piped stdout");
+            writeln!(stdin, "{}", init.to_json().to_string())?;
+            stdin.flush()?;
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name(format!("fadmm-route-{m}"))
+                .spawn(move || {
+                    let reader = std::io::BufReader::new(stdout);
+                    for line in reader.lines() {
+                        let Ok(line) = line else { break };
+                        if tx.send((m, line)).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawn route reader");
+            children.push(child);
+            stdins.push(Some(stdin));
+        }
+        Ok(ProcCluster {
+            children,
+            stdins,
+            from_children,
+            alive: vec![true; n],
+            done: vec![None; n],
+            routed: 0,
+        })
+    }
+
+    fn write_line(&mut self, m: usize, line: &str) {
+        if let Some(stdin) = self.stdins[m].as_mut() {
+            // a dead child's pipe errors; that's equivalent to a lost
+            // message to a dead machine — drop it
+            let _ = writeln!(stdin, "{line}");
+            let _ = stdin.flush();
+        }
+    }
+
+    /// SIGKILL machine `m` and broadcast its death notice to survivors.
+    pub fn kill(&mut self, m: usize) {
+        if !self.alive[m] {
+            return;
+        }
+        let _ = self.children[m].kill();
+        let _ = self.children[m].wait();
+        self.alive[m] = false;
+        self.stdins[m] = None;
+        let notice =
+            obj(vec![("ctrl", s("leave")), ("machine", num(m as f64))]).to_string();
+        for p in 0..self.alive.len() {
+            if self.alive[p] {
+                self.write_line(p, &notice);
+            }
+        }
+    }
+
+    /// Route until every live machine has reported done (or its pipe
+    /// closed), or `deadline` passes. Returns `true` on a clean finish.
+    pub fn route_until_done(&mut self, deadline: Duration) -> bool {
+        let t0 = Instant::now();
+        loop {
+            let finished = (0..self.alive.len())
+                .all(|m| !self.alive[m] || self.done[m].is_some());
+            if finished {
+                return true;
+            }
+            if t0.elapsed() > deadline {
+                return false;
+            }
+            let msg = match self.from_children.recv_timeout(Duration::from_millis(200)) {
+                Ok(msg) => msg,
+                Err(RecvTimeoutError::Timeout) => continue,
+                // every reader thread gone: nothing more will arrive
+                Err(RecvTimeoutError::Disconnected) => {
+                    return (0..self.alive.len())
+                        .all(|m| !self.alive[m] || self.done[m].is_some());
+                }
+            };
+            self.handle_line(msg.0, &msg.1);
+        }
+    }
+
+    /// Route lines until `self.routed >= target` routed messages have
+    /// been forwarded (a progress proxy), or the deadline passes.
+    pub fn route_until_traffic(&mut self, target: u64, deadline: Duration) -> bool {
+        let t0 = Instant::now();
+        while self.routed < target {
+            if t0.elapsed() > deadline {
+                return false;
+            }
+            match self.from_children.recv_timeout(Duration::from_millis(200)) {
+                Ok((m, line)) => self.handle_line(m, &line),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return false,
+            }
+        }
+        true
+    }
+
+    fn handle_line(&mut self, from: usize, line: &str) {
+        let Ok(v) = Json::parse(line) else {
+            eprintln!("proc driver: machine {from} wrote an unparseable line");
+            return;
+        };
+        if v.get("done").is_some() {
+            match ProcDone::from_json(&v) {
+                Ok(d) => self.done[from] = Some(d),
+                Err(e) => eprintln!("proc driver: bad done line from {from}: {e}"),
+            }
+            return;
+        }
+        let Some(dst) = v.get("dst").and_then(|d| d.as_usize()) else {
+            eprintln!("proc driver: machine {from} wrote a routable line \
+                       with no dst");
+            return;
+        };
+        if dst < self.alive.len() && self.alive[dst] {
+            self.write_line(dst, line);
+            self.routed += 1;
+        }
+    }
+
+    /// Send every survivor a shutdown ctrl, close pipes and reap.
+    pub fn shutdown(mut self) -> Vec<Option<ProcDone>> {
+        let bye = obj(vec![("ctrl", s("shutdown"))]).to_string();
+        for m in 0..self.alive.len() {
+            if self.alive[m] {
+                self.write_line(m, &bye);
+            }
+        }
+        self.stdins.clear(); // EOF for anyone ignoring the ctrl line
+        for (m, mut child) in self.children.drain(..).enumerate() {
+            if self.alive[m] {
+                let _ = child.wait();
+            }
+        }
+        self.done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn init(machine: usize) -> ProcInit {
+        ProcInit {
+            machine,
+            machines: 3,
+            nodes: 12,
+            dim: 2,
+            problem_seed: 41,
+            topology: Topology::Ring,
+            scheme: SchemeKind::Rb,
+            tol: 1e-4,
+            patience: 3,
+            warmup: 5,
+            max_iters: 60,
+            seed: 11,
+            workers: 1,
+            max_staleness: 0,
+            silence_timeout: 5_000,
+            collective_timeout: 5_000,
+            fallback_after: 3,
+            pipeline: 2,
+        }
+    }
+
+    #[test]
+    fn init_line_round_trips() {
+        let a = init(1);
+        let b = ProcInit::from_json(&Json::parse(&a.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(a.machine, b.machine);
+        assert_eq!(a.machines, b.machines);
+        assert_eq!(a.nodes, b.nodes);
+        assert_eq!(a.dim, b.dim);
+        assert_eq!(a.problem_seed, b.problem_seed);
+        assert_eq!(a.topology, b.topology);
+        assert_eq!(a.scheme, b.scheme);
+        assert_eq!(a.tol, b.tol);
+        assert_eq!(a.max_iters, b.max_iters);
+        assert_eq!(a.silence_timeout, b.silence_timeout);
+        assert_eq!(a.fallback_after, b.fallback_after);
+    }
+
+    #[test]
+    fn done_line_round_trips() {
+        let d = ProcDone {
+            machine: 2,
+            iterations: 37,
+            converged: true,
+            is_holder: false,
+            final_root: 1,
+            span: (8, 12),
+            thetas: vec![1.5, -0.25, 0.0, 3.0e-7, -2.0, 8.0, 1.0, -1.0],
+        };
+        let r = ProcDone::from_json(&Json::parse(&d.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(d.machine, r.machine);
+        assert_eq!(d.iterations, r.iterations);
+        assert_eq!(d.converged, r.converged);
+        assert_eq!(d.is_holder, r.is_holder);
+        assert_eq!(d.final_root, r.final_root);
+        assert_eq!(d.span, r.span);
+        assert_eq!(d.thetas, r.thetas);
+    }
+
+    #[test]
+    fn wire_lines_parse_into_events() {
+        let leave = parse_wire_line(r#"{"ctrl":"leave","machine":2}"#).unwrap();
+        assert_eq!(leave, Event::Leave { node: 2 });
+        let routed = obj(vec![
+            ("src", num(0.0)),
+            ("dst", num(1.0)),
+            ("body", payload_to_json(&Payload::Stop { round: 9, converged: true })),
+        ])
+        .to_string();
+        match parse_wire_line(&routed).unwrap() {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+                assert_eq!(payload, Payload::Stop { round: 9, converged: true });
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(parse_wire_line("not json").is_none());
+        assert!(parse_wire_line(r#"{"ctrl":"warp"}"#).is_none());
+    }
+}

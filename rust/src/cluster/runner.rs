@@ -1,13 +1,18 @@
 //! The cluster driver: a single-threaded discrete-event loop over the
-//! machine-level simulated network.
+//! machine-level transport.
 //!
 //! Each machine is a state machine (`Solve → Reduce → FoldWait → …`)
 //! advanced by message arrivals and timers popped from the shared
-//! [`NetSim`] queue, exactly like the per-node [`crate::net::AsyncRunner`]
-//! — but one step of a machine executes a whole barrier-synchronous
-//! worker-pool iteration over its local node slice
-//! ([`super::machine`]), and the global fold travels through the chosen
-//! collective ([`super::collective`]) instead of an omniscient oracle.
+//! [`Transport`] queue, exactly like the per-node
+//! [`crate::net::AsyncRunner`] — but one step of a machine executes a
+//! whole barrier-synchronous worker-pool iteration over its local node
+//! slice ([`super::machine`]), and the global fold travels through the
+//! chosen collective ([`super::collective`]) instead of an omniscient
+//! oracle. The runner is generic over the transport seam
+//! ([`crate::net::Transport`]); [`ClusterRunner::new`] instantiates it
+//! over the deterministic [`NetSim`], which is the configuration every
+//! parity suite pins. The real transports drive the same protocol one
+//! machine per thread/process through [`super::node::NodeRuntime`].
 //! See the [`super`] module docs for the full protocol and the parity
 //! contracts.
 
@@ -21,6 +26,7 @@ use crate::kernel::{AppMetricHook, StopTracker};
 use crate::metrics::{IterStats, NetCounters, Recorder, RunningFold, StatPartial};
 use crate::net::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TimerKind,
                       TraceEvent, TraceKind};
+use crate::net::transport::Transport;
 use crate::net::{ActivityConfig, TopologyController};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::pool::{ExecMode, PhasePool, Ticket};
@@ -134,16 +140,18 @@ pub struct ClusterReport {
 
 /// Designated-recorder state: the shared [`StopTracker`] (checker +
 /// recorder + verdict memory) lives with the tree root (tree) or the
-/// lowest live machine (gossip). Under the tree collective its location
-/// is *protocol state*: `holder` names the machine carrying it, and on a
-/// re-root the old holder serializes a [`crate::kernel::StopSnapshot`]
-/// into a reliable `Checker` message the new root resumes from — the
-/// root refuses to fold while the state is in flight. (Gossip keeps the
-/// older omniscient migration: the lowest live machine simply *is* the
-/// recorder; a real deployment would run the same handoff there.) The
+/// lowest live machine (gossip). Either way its location is *protocol
+/// state*: `holder` names the machine carrying it, and on a re-root or
+/// a holder departure the old holder serializes a
+/// [`crate::kernel::StopSnapshot`] into a reliable `Checker` message
+/// the successor resumes from — the tree root refuses to fold while
+/// the state is in flight, and a gossip holder skips its commits (the
+/// catch-up replay commits them once the snapshot lands). The
 /// simulator halts the run the moment the stop decision is computed —
 /// the broadcast a real deployment would need costs zero extra rounds
-/// here, exactly like the async runner's `Stop` handling.
+/// here, exactly like the async runner's `Stop` handling; the real
+/// transports run that broadcast as an explicit [`Payload::Stop`]
+/// flood.
 struct RootState {
     cursor: u64,
     tracker: StopTracker,
@@ -158,8 +166,9 @@ enum Coll {
     Gossip(GossipState),
 }
 
-/// The hybrid cluster runner (see [`super`] and the module docs).
-pub struct ClusterRunner<S: LocalSolver + Send> {
+/// The hybrid cluster runner (see [`super`] and the module docs),
+/// generic over the machine-level transport (default: the simulator).
+pub struct ClusterRunner<S: LocalSolver + Send, T: Transport = NetSim> {
     /// Outstanding overlapped interior-dispatch tickets, one slot per
     /// machine. Declared *first*: a [`Ticket`]'s `Drop` blocks until its
     /// jobs finish, and fields drop in declaration order, so even on an
@@ -177,7 +186,7 @@ pub struct ClusterRunner<S: LocalSolver + Send> {
     order: Vec<NodeId>,
     part: MachinePartition,
     ctrl: TopologyController,
-    sim: NetSim,
+    sim: T,
     machines: Vec<MachineRt<S>>,
     coll: Coll,
     fold: RootState,
@@ -196,9 +205,10 @@ pub struct ClusterRunner<S: LocalSolver + Send> {
     workers_used: usize,
 }
 
-impl<S: LocalSolver + Send> ClusterRunner<S> {
-    /// Build a runner. Solver construction and θ⁰ seeding are keyed by
-    /// *original* node ids through the factory, exactly like
+impl<S: LocalSolver + Send> ClusterRunner<S, NetSim> {
+    /// Build a runner over the deterministic simulator. Solver
+    /// construction and θ⁰ seeding are keyed by *original* node ids
+    /// through the factory, exactly like
     /// [`crate::coordinator::ShardedRunner`].
     pub fn new(graph: Graph, cfg: ClusterConfig, plan: FaultPlan,
                factory: SolverFactory<S>) -> Result<ClusterRunner<S>> {
@@ -307,16 +317,21 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             cfg,
         })
     }
+}
 
+impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
     /// Attach an application-metric hook — the unified
     /// [`crate::kernel::AppMetricHook`] surface (any
     /// `FnMut(round, θ, live) -> f64` closure qualifies); its value lands
     /// in [`IterStats::app_error`] at every committed round. The θ
     /// snapshot hands each node's newest committed parameters (keyed by
     /// *original* node ids) with per-node liveness derived from machine
-    /// liveness; like the recorder itself, the snapshot assembly is an
-    /// omniscient-simulator shortcut — a real deployment would ship θ
-    /// with the collective traffic.
+    /// liveness. Under the tree collective the snapshot travels *with*
+    /// the rootward `Part` traffic (each machine attaches its committed
+    /// θ^{r+1} span), so the recorder assembles it from delivered
+    /// messages; only machines whose span never arrived (forced folds,
+    /// stragglers) fall back to the omniscient driver-side read. Gossip
+    /// keeps the older omniscient assembly.
     pub fn with_app_metric(
         mut self,
         metric: impl AppMetricHook + 'static,
@@ -338,6 +353,40 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         for mach in &self.machines {
             let mach_live = self.ctrl.view().node_live(mach.id);
             mach.snapshot_read(r, self.dim, &self.order, &mut self.metric_thetas);
+            for i in mach.span.clone() {
+                self.metric_live[self.order[i]] = mach_live;
+            }
+        }
+        let v = hook.measure(r as usize, &self.metric_thetas, &self.metric_live);
+        self.metric = Some(hook);
+        v
+    }
+
+    /// Tree-collective metric assembly: machines whose committed θ span
+    /// arrived with the round's `Part` traffic are read from `shipped`
+    /// (byte-identical clones of the same snapshots the omniscient read
+    /// would return — pinned by the θ-ship parity test); the rest fall
+    /// back to the driver-side snapshot read.
+    fn app_metric_value_tree(&mut self, r: u64,
+                             shipped: &std::collections::BTreeMap<usize, Vec<f64>>)
+                             -> f64 {
+        let Some(mut hook) = self.metric.take() else { return 0.0 };
+        let n = self.graph.len();
+        if self.metric_thetas.len() != n {
+            self.metric_thetas = vec![vec![0.0; self.dim]; n];
+            self.metric_live = vec![false; n];
+        }
+        let dim = self.dim;
+        for mach in &self.machines {
+            let mach_live = self.ctrl.view().node_live(mach.id);
+            if let Some(flat) = shipped.get(&mach.id) {
+                for (off, i) in mach.span.clone().enumerate() {
+                    self.metric_thetas[self.order[i]]
+                        .copy_from_slice(&flat[off * dim..(off + 1) * dim]);
+                }
+            } else {
+                mach.snapshot_read(r, dim, &self.order, &mut self.metric_thetas);
+            }
             for i in mach.span.clone() {
                 self.metric_live[self.order[i]] = mach_live;
             }
@@ -385,7 +434,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                     self.on_deliver(src, dst, payload);
                 }
                 Event::Wake { node, epoch: _ } => {
-                    self.sim.counters.timeouts += 1;
+                    self.sim.counters().timeouts += 1;
                     self.machines[node].timeout_armed = false;
                     self.try_advance(node, true);
                 }
@@ -467,8 +516,8 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             recorder: self.fold.tracker.take_recorder(),
             thetas,
             virtual_time: self.sim.now(),
-            counters: self.sim.counters,
-            trace: std::mem::take(&mut self.sim.trace),
+            counters: self.sim.counters_snapshot(),
+            trace: self.sim.take_trace(),
             machines: self.machines.len(),
             live_machines,
             workers_per_machine: self.workers_used,
@@ -593,7 +642,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             unsafe { mach.dispatch_interior(graph, pool, t) }
         };
         if let Some(ticket) = ticket {
-            self.sim.counters.overlap_dispatches += 1;
+            self.sim.counters().overlap_dispatches += 1;
             self.overlap[m] = Some((t, ticket));
         }
     }
@@ -777,7 +826,9 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                 }
                 self.try_advance(dst, false);
             }
-            Payload::Part { round, entries } => self.on_part(dst, src, round, entries),
+            Payload::Part { round, entries, thetas } => {
+                self.on_part(dst, src, round, entries, thetas);
+            }
             Payload::Verdict { round, global_primal, global_dual } => {
                 self.on_verdict(dst, round, global_primal, global_dual);
             }
@@ -790,13 +841,16 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
                     self.fold.holder = dst;
                     self.fold.in_flight_to = None;
                     self.try_root_folds();
+                    self.gossip_catch_up(dst);
                 }
             }
             Payload::Gossip { round, mass, weight, maxes } => {
                 self.on_gossip_mass(dst, src, round, mass, weight, maxes);
             }
-            // per-node payloads never travel the machine-level transport
-            Payload::Theta { .. } | Payload::Eta { .. } => {}
+            // per-node payloads never travel the machine-level transport,
+            // and the stop flood only exists on real transports (the
+            // simulated driver halts the run directly)
+            Payload::Theta { .. } | Payload::Eta { .. } | Payload::Stop { .. } => {}
         }
     }
 
@@ -808,12 +862,10 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         // flight; complete it before the state machine transitions
         self.join_overlap(m);
         // leader-election handoff: a departing tracker holder serializes
-        // its state to the successor (the machine that will be the new
-        // root) *before* its transport goes dark
-        if matches!(self.cfg.collective, CollectiveKind::Tree)
-            && self.fold.holder == m
-            && self.fold.in_flight_to.is_none()
-        {
+        // its state to the successor *before* its transport goes dark —
+        // the new tree root, or gossip's next designated recorder (the
+        // lowest live survivor, which the same `find` yields)
+        if self.fold.holder == m && self.fold.in_flight_to.is_none() {
             let successor = (0..self.machines.len())
                 .find(|&p| p != m && self.ctrl.view().node_live(p));
             if let Some(to) = successor {
@@ -857,8 +909,8 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     }
 
     /// Whether the tree root currently holds a resumed tracker (folds and
-    /// commits are gated on this; gossip keeps the omniscient designated
-    /// recorder and never gates).
+    /// commits are gated on this; gossip gates its commits directly on
+    /// `fold.holder` inside [`Self::gossip_complete`]).
     fn tracker_at_root(&mut self) -> bool {
         if !matches!(self.cfg.collective, CollectiveKind::Tree) {
             return true;
@@ -1111,8 +1163,19 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     fn tree_deposit(&mut self, m: usize, round: u64) {
         {
             let entry = self.machines[m].partials.clone();
+            // app-metric runs only: ship the committed θ^{round+1} span
+            // with the rootward traffic so the recorder's snapshot
+            // assembly needs no remote reads
+            let snap = if self.metric.is_some() {
+                self.machines[m].snapshots.get(&round).cloned()
+            } else {
+                None
+            };
             let Coll::Tree(tree) = &mut self.coll else { return };
             tree.inbox[m].entry(round).or_default().insert(m, entry);
+            if let Some(s) = snap {
+                tree.theta_inbox[m].entry(round).or_default().insert(m, s);
+            }
         }
         self.tree_progress(m, round);
     }
@@ -1153,22 +1216,27 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
     /// Send machine `m`'s accumulated round entries rootward (or mark
     /// them forwarded when detached) and await the verdict.
     fn tree_forward(&mut self, m: usize, round: u64, parent: Option<usize>) {
-        let entries = {
+        let (entries, thetas) = {
             let Coll::Tree(tree) = &mut self.coll else { return };
             let Some(map) = tree.inbox[m].get(&round) else { return };
             let e: Vec<(usize, Vec<StatPartial>)> =
                 map.iter().map(|(&k, v)| (k, v.clone())).collect();
+            let th: Vec<(usize, Vec<f64>)> = tree.theta_inbox[m]
+                .get(&round)
+                .map(|map| map.iter().map(|(&k, v)| (k, v.clone())).collect())
+                .unwrap_or_default();
             tree.sent_up[m].insert(round);
-            e
+            (e, th)
         };
         if let Some(p) = parent {
-            self.sim.send(m, p, Payload::Part { round, entries }, false);
+            self.sim.send(m, p, Payload::Part { round, entries, thetas }, false);
         }
         self.arm_coll(m);
     }
 
     fn on_part(&mut self, dst: usize, src: usize, round: u64,
-               entries: Vec<(usize, Vec<StatPartial>)>) {
+               entries: Vec<(usize, Vec<StatPartial>)>,
+               thetas: Vec<(usize, Vec<f64>)>) {
         // straggler for an already-verdicted round: answer directly
         if let Some(&(gp, gd)) = self.machines[dst].verdicts.get(&round) {
             self.sim.send(dst, src,
@@ -1181,6 +1249,12 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             let map = tree.inbox[dst].entry(round).or_default();
             for (mid, parts) in entries {
                 map.insert(mid, parts);
+            }
+            if !thetas.is_empty() {
+                let tmap = tree.theta_inbox[dst].entry(round).or_default();
+                for (mid, flat) in thetas {
+                    tmap.insert(mid, flat);
+                }
             }
         }
         self.tree_progress(dst, round);
@@ -1199,6 +1273,8 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             // below re-arms for exactly those survivors)
             let settled = &self.machines[dst].verdicts;
             tree.inbox[dst]
+                .retain(|&r, _| r > round || !settled.contains_key(&r));
+            tree.theta_inbox[dst]
                 .retain(|&r, _| r > round || !settled.contains_key(&r));
             tree.sent_up[dst]
                 .retain(|&r| r > round || !settled.contains_key(&r));
@@ -1279,14 +1355,15 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             let Coll::Tree(tree) = &self.coll else { return };
             tree.topo.root
         };
-        let entries = {
+        let (entries, shipped) = {
             let Coll::Tree(tree) = &mut self.coll else { return };
             let Some(map) = tree.inbox[root].remove(&r) else { return };
             tree.sent_up[root].remove(&r);
-            map
+            let shipped = tree.theta_inbox[root].remove(&r).unwrap_or_default();
+            (map, shipped)
         };
         if forced {
-            self.sim.counters.collective_timeouts += 1;
+            self.sim.counters().collective_timeouts += 1;
             self.sim
                 .record(TraceKind::CollectiveTimeout { machine: root, round: r });
         }
@@ -1299,7 +1376,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             .fold
             .tracker
             .round_partials(entries.values().flat_map(|parts| parts.iter()));
-        let app_error = self.app_metric_value(r);
+        let app_error = self.app_metric_value_tree(r, &shipped);
         let stop = self.fold.tracker.commit(r as usize, IterStats {
             iter: r as usize,
             objective: g.objective,
@@ -1420,7 +1497,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         };
         if !forwarded {
             // straggling children: forward what we have
-            self.sim.counters.collective_timeouts += 1;
+            self.sim.counters().collective_timeouts += 1;
             self.sim
                 .record(TraceKind::CollectiveTimeout { machine: m, round: next });
             self.tree_forward(m, next, parent);
@@ -1433,13 +1510,13 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         };
         if retries > self.cfg.fallback_after {
             let (gp, gd) = self.local_fold(m, next);
-            self.sim.counters.collective_fallbacks += 1;
+            self.sim.counters().collective_fallbacks += 1;
             self.sim
                 .record(TraceKind::FallbackVerdict { machine: m, round: next });
             self.store_verdict(m, next, gp, gd);
             self.tree_rearm(m);
         } else {
-            self.sim.counters.collective_retries += 1;
+            self.sim.counters().collective_retries += 1;
             self.tree_forward(m, next, parent);
         }
     }
@@ -1525,7 +1602,7 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
             }
         }
         if let Some((dst, mass, weight, maxes)) = outgoing {
-            self.sim.counters.gossip_ticks += 1;
+            self.sim.counters().gossip_ticks += 1;
             self.sim
                 .send(m, dst, Payload::Gossip { round, mass, weight, maxes }, false);
         }
@@ -1633,35 +1710,74 @@ impl<S: LocalSolver + Send> ClusterRunner<S> {
         };
         self.store_verdict(m, round, est.gp * scale, gd);
 
-        // the lowest live machine is the designated recorder (gossip keeps
-        // the omniscient migration — see the RootState docs; the tree
-        // collective is the one running the explicit handoff protocol)
-        let designated = (0..self.machines.len())
-            .find(|&p| self.ctrl.view().node_live(p))
-            .unwrap_or(0);
-        if m == designated && round >= self.fold.cursor {
-            // Σf over the live component: mean-per-node f × estimated
-            // live count (replaces the static full-graph node count,
-            // which overcounted after churn)
-            let objective = est.avg_f * n_hat;
-            let app_error = self.app_metric_value(round);
-            let stop = self.fold.tracker.commit(round as usize, IterStats {
-                iter: round as usize,
-                objective,
-                max_primal: est.max_primal,
-                max_dual: est.max_dual,
-                mean_eta: est.mean_eta,
-                min_eta: est.min_eta,
-                max_eta: est.max_eta,
-                app_error,
-            });
-            self.fold.cursor = round + 1;
-            self.sim.record(TraceKind::Fold { round });
-            if stop {
-                self.stopped = true;
-                self.stop_round = Some(round);
-                self.sim.record(TraceKind::Stop { rounds: round + 1 });
+        // the tracker holder commits — the same serialize→send→resume
+        // Checker handoff the tree runs migrates it on churn (see
+        // on_leave); rounds estimated while the snapshot is in flight
+        // are replayed by gossip_catch_up when it lands
+        if self.fold.holder == m
+            && self.fold.in_flight_to.is_none()
+            && round >= self.fold.cursor
+        {
+            self.gossip_commit(round, &est);
+        }
+    }
+
+    /// Commit one completed gossip round's estimate at the tracker
+    /// holder: Σf over the live component is mean-per-node f × the
+    /// estimated live count (replacing the static full-graph node
+    /// count, which overcounted after churn).
+    fn gossip_commit(&mut self, round: u64, est: &super::collective::GossipEstimate) {
+        let n_hat = if est.n_live > 0.5 { est.n_live.round() } else { 1.0 };
+        let objective = est.avg_f * n_hat;
+        let app_error = self.app_metric_value(round);
+        let stop = self.fold.tracker.commit(round as usize, IterStats {
+            iter: round as usize,
+            objective,
+            max_primal: est.max_primal,
+            max_dual: est.max_dual,
+            mean_eta: est.mean_eta,
+            min_eta: est.min_eta,
+            max_eta: est.max_eta,
+            app_error,
+        });
+        self.fold.cursor = round + 1;
+        self.sim.record(TraceKind::Fold { round });
+        if stop {
+            self.stopped = true;
+            self.stop_round = Some(round);
+            self.sim.record(TraceKind::Stop { rounds: round + 1 });
+        }
+    }
+
+    /// After a gossip-side Checker handoff lands at `m`: rounds this
+    /// machine finished estimating while the snapshot was in flight were
+    /// never committed (the holder gate was closed) — replay them in
+    /// ascending order from the retained [`super::collective::GossipRound`]s
+    /// ([`estimate`] is a pure read of a completed round). Rounds pruned
+    /// by the 16-round retention window are lost, exactly like verdicts
+    /// that age out elsewhere.
+    fn gossip_catch_up(&mut self, m: usize) {
+        if !matches!(self.cfg.collective, CollectiveKind::Gossip) {
+            return;
+        }
+        loop {
+            if self.stopped {
+                return;
             }
+            let next = {
+                let Coll::Gossip(g) = &self.coll else { return };
+                g.rounds[m]
+                    .iter()
+                    .filter(|&(&r, gr)| gr.done && r >= self.fold.cursor)
+                    .map(|(&r, _)| r)
+                    .next()
+            };
+            let Some(round) = next else { return };
+            let est = {
+                let Coll::Gossip(g) = &self.coll else { return };
+                estimate(&g.rounds[m][&round], self.dim)
+            };
+            self.gossip_commit(round, &est);
         }
     }
 }

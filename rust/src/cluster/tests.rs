@@ -531,6 +531,112 @@ fn departing_root_hands_checker_to_successor() {
 }
 
 #[test]
+fn departing_gossip_holder_hands_checker_to_successor() {
+    // regression for the gossip-side handoff port: the push-sum recorder
+    // used to be omniscient (the driver re-designated the lowest live
+    // machine for free). Now the departing holder must serialize the
+    // tracker and ship it like the tree does — and the successor must
+    // replay rounds it finished estimating while the snapshot was in
+    // flight, or the commit cursor stalls forever
+    let plan = FaultPlan {
+        link: LinkModel { base: 1, jitter: 2, loss: 0.0, dup: 0.0 },
+        partitions: vec![],
+        churn: vec![ChurnEvent::Leave { at: 400, node: 0 }],
+        initially_dormant: vec![],
+    };
+    let report = ClusterRunner::new(
+        Topology::Ring.build(12).unwrap(),
+        ClusterConfig {
+            scheme: SchemeKind::Rb, // FoldWait-gated: verdicts must keep coming
+            tol: 0.0,
+            max_iters: 200,
+            seed: 7,
+            machines: 4,
+            workers: 1,
+            collective: CollectiveKind::Gossip,
+            max_staleness: 1,
+            silence_timeout: 8,
+            ..Default::default()
+        },
+        plan,
+        quad_factory(12, 2, 51),
+    )
+    .unwrap()
+    .run();
+    assert_eq!(report.counters.leaves, 1);
+    assert!(!report.live_machines[0]);
+    assert!(report
+        .trace
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Handoff { from: 0, to: 1 })),
+        "the departing gossip holder must hand the tracker to machine 1");
+    assert!(report
+        .trace
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Deliver { what: "checker", .. })),
+        "the snapshot must travel the network, not migrate omnisciently");
+    assert_eq!(report.iterations, 200,
+               "the resumed holder commits every estimated round");
+    let last = report.recorder.stats.last().unwrap();
+    assert!(last.max_primal < 5e-2, "survivor consensus, primal {}",
+            last.max_primal);
+}
+
+// -- satellite: θ snapshots ride the tree's Part traffic ----------------------
+
+#[test]
+fn tree_app_metric_from_shipped_thetas_matches_sharded_hook_bitwise() {
+    // with an app-metric hook installed, each machine attaches its
+    // committed θ^{r+1} span to the rootward Part message and the
+    // recorder assembles the snapshot from delivered payloads; the
+    // hook's input — and hence the recorded app_error stream — must
+    // stay bit-identical to the omniscient sharded leader's
+    let hook = |_r: usize, thetas: &[Vec<f64>], live: &[bool]| {
+        let mut acc = 0.0;
+        for (th, &l) in thetas.iter().zip(live) {
+            if l {
+                for &x in th {
+                    acc += x * x;
+                }
+            }
+        }
+        acc
+    };
+    for scheme in [SchemeKind::Fixed, SchemeKind::Rb, SchemeKind::VpNap] {
+        let sharded = ShardedRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ShardedConfig { scheme, tol: 1e-4, max_iters: 80, seed: 23,
+                            workers: 3, ..Default::default() },
+        )
+        .run_hooked(quad_factory(12, 2, 41), hook)
+        .unwrap();
+
+        let cluster = ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig { scheme, tol: 1e-4, max_iters: 80, seed: 23,
+                            machines: 3, workers: 1,
+                            collective: CollectiveKind::Tree,
+                            ..Default::default() },
+            FaultPlan::none(),
+            quad_factory(12, 2, 41),
+        )
+        .unwrap()
+        .with_app_metric(hook)
+        .run();
+
+        assert_eq!(sharded.iterations, cluster.iterations, "{scheme:?}");
+        assert_eq!(sharded.thetas, cluster.thetas, "{scheme:?}");
+        assert_eq!(sharded.recorder.stats.len(), cluster.recorder.stats.len());
+        for (a, b) in sharded.recorder.stats.iter().zip(&cluster.recorder.stats) {
+            assert_stats_bit_equal(a, b);
+            assert_eq!(a.app_error.to_bits(), b.app_error.to_bits(),
+                       "{scheme:?} iter {}: shipped-θ hook input must be \
+                        bit-identical to the omniscient assembly", a.iter);
+        }
+    }
+}
+
+#[test]
 fn zero_round_budget_returns_theta0() {
     let sharded = ShardedRunner::new(
         Topology::Ring.build(9).unwrap(),

@@ -1,0 +1,577 @@
+//! Hand-rolled JSON codec for the machine-level protocol messages — the
+//! process transport's wire format, in the `net/plan.rs` discipline
+//! (explicit field validation, [`Error::Config`] with context on every
+//! mismatch; serde is unavailable offline).
+//!
+//! Every [`Payload`] variant (and the [`StopSnapshot`] the `Checker`
+//! handoff carries) round-trips *exactly*: finite f64 fields ride as
+//! JSON numbers (the emitter's shortest-round-trip formatting is
+//! value-exact), while the four values JSON numbers cannot carry —
+//! `inf`, `-inf`, `nan`, `-0` (the emitter's integer fast path drops
+//! the sign of negative zero) — ride as those literal strings. The
+//! fresh-state sentinels make this load-bearing, not cosmetic: a new
+//! checker starts at `f_min = +inf, f_max = -inf`, and a machine's
+//! `latest_globals` starts at `(inf, inf)`.
+
+use crate::error::{Error, Result};
+use crate::graph::NodeId;
+use crate::kernel::StopSnapshot;
+use crate::metrics::{CheckerState, IterStats, StatPartial};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::sim::Payload;
+
+// -- f64 with non-finite sentinels ------------------------------------------
+
+fn fnum(x: f64) -> Json {
+    if x.is_nan() {
+        s("nan")
+    } else if x == f64::INFINITY {
+        s("inf")
+    } else if x == f64::NEG_INFINITY {
+        s("-inf")
+    } else if x == 0.0 && x.is_sign_negative() {
+        s("-0")
+    } else {
+        num(x)
+    }
+}
+
+fn f64_of(v: &Json, what: &str) -> Result<f64> {
+    match v {
+        Json::Num(x) => Ok(*x),
+        Json::Str(t) => match t.as_str() {
+            "nan" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            "-0" => Ok(-0.0),
+            _ => Err(Error::Config(format!("codec: {what}: bad f64 sentinel '{t}'"))),
+        },
+        _ => Err(Error::Config(format!("codec: {what}: expected number"))),
+    }
+}
+
+fn req_f64(v: &Json, key: &str, what: &str) -> Result<f64> {
+    let field = v
+        .get(key)
+        .ok_or_else(|| Error::Config(format!("codec: {what}: missing '{key}'")))?;
+    f64_of(field, key)
+}
+
+fn req_u64(v: &Json, key: &str, what: &str) -> Result<u64> {
+    let x = v
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Config(format!("codec: {what}: missing count '{key}'")))?;
+    if x < 0.0 || x.fract() != 0.0 {
+        return Err(Error::Config(format!("codec: {what}: '{key}' not a count")));
+    }
+    Ok(x as u64)
+}
+
+fn req_usize(v: &Json, key: &str, what: &str) -> Result<usize> {
+    Ok(req_u64(v, key, what)? as usize)
+}
+
+fn req_bool(v: &Json, key: &str, what: &str) -> Result<bool> {
+    v.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| Error::Config(format!("codec: {what}: missing bool '{key}'")))
+}
+
+fn req_arr<'a>(v: &'a Json, key: &str, what: &str) -> Result<&'a [Json]> {
+    v.get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config(format!("codec: {what}: missing array '{key}'")))
+}
+
+fn f64s(xs: &[f64]) -> Json {
+    arr(xs.iter().map(|&x| fnum(x)).collect())
+}
+
+fn f64s_of(v: &Json, key: &str, what: &str) -> Result<Vec<f64>> {
+    req_arr(v, key, what)?.iter().map(|x| f64_of(x, key)).collect()
+}
+
+// -- component structs -------------------------------------------------------
+
+fn stat_partial_to_json(p: &StatPartial) -> Json {
+    obj(vec![
+        ("f_sum", fnum(p.f_sum)),
+        ("max_primal", fnum(p.max_primal)),
+        ("max_dual", fnum(p.max_dual)),
+        ("eta_min", fnum(p.eta_min)),
+        ("eta_max", fnum(p.eta_max)),
+        ("eta_sum", fnum(p.eta_sum)),
+        ("eta_count", num(p.eta_count as f64)),
+        ("theta_sum", f64s(&p.theta_sum)),
+        ("node_count", num(p.node_count as f64)),
+        ("centered_sq", fnum(p.centered_sq)),
+    ])
+}
+
+fn stat_partial_from_json(v: &Json) -> Result<StatPartial> {
+    const W: &str = "partial";
+    Ok(StatPartial {
+        f_sum: req_f64(v, "f_sum", W)?,
+        max_primal: req_f64(v, "max_primal", W)?,
+        max_dual: req_f64(v, "max_dual", W)?,
+        eta_min: req_f64(v, "eta_min", W)?,
+        eta_max: req_f64(v, "eta_max", W)?,
+        eta_sum: req_f64(v, "eta_sum", W)?,
+        eta_count: req_usize(v, "eta_count", W)?,
+        theta_sum: f64s_of(v, "theta_sum", W)?,
+        node_count: req_usize(v, "node_count", W)?,
+        centered_sq: req_f64(v, "centered_sq", W)?,
+    })
+}
+
+fn iter_stats_to_json(st: &IterStats) -> Json {
+    obj(vec![
+        ("iter", num(st.iter as f64)),
+        ("objective", fnum(st.objective)),
+        ("max_primal", fnum(st.max_primal)),
+        ("max_dual", fnum(st.max_dual)),
+        ("mean_eta", fnum(st.mean_eta)),
+        ("min_eta", fnum(st.min_eta)),
+        ("max_eta", fnum(st.max_eta)),
+        ("app_error", fnum(st.app_error)),
+    ])
+}
+
+fn iter_stats_from_json(v: &Json) -> Result<IterStats> {
+    const W: &str = "iter_stats";
+    Ok(IterStats {
+        iter: req_usize(v, "iter", W)?,
+        objective: req_f64(v, "objective", W)?,
+        max_primal: req_f64(v, "max_primal", W)?,
+        max_dual: req_f64(v, "max_dual", W)?,
+        mean_eta: req_f64(v, "mean_eta", W)?,
+        min_eta: req_f64(v, "min_eta", W)?,
+        max_eta: req_f64(v, "max_eta", W)?,
+        app_error: req_f64(v, "app_error", W)?,
+    })
+}
+
+fn checker_to_json(c: &CheckerState) -> Json {
+    obj(vec![
+        ("prev", match c.prev {
+            None => Json::Null,
+            Some(x) => fnum(x),
+        }),
+        ("f_min", fnum(c.f_min)),
+        ("f_max", fnum(c.f_max)),
+        ("streak", num(c.streak as f64)),
+        ("seen", num(c.seen as f64)),
+    ])
+}
+
+fn checker_from_json(v: &Json) -> Result<CheckerState> {
+    const W: &str = "checker";
+    let prev = match v
+        .get("prev")
+        .ok_or_else(|| Error::Config(format!("codec: {W}: missing 'prev'")))?
+    {
+        Json::Null => None,
+        other => Some(f64_of(other, "prev")?),
+    };
+    Ok(CheckerState {
+        prev,
+        f_min: req_f64(v, "f_min", W)?,
+        f_max: req_f64(v, "f_max", W)?,
+        streak: req_usize(v, "streak", W)?,
+        seen: req_usize(v, "seen", W)?,
+    })
+}
+
+/// Encode a [`StopSnapshot`] (the leader-election handoff state).
+pub fn snapshot_to_json(snap: &StopSnapshot) -> Json {
+    obj(vec![
+        ("checker", checker_to_json(&snap.checker)),
+        ("stats", arr(snap.stats.iter().map(iter_stats_to_json).collect())),
+        ("gmean_prev", f64s(&snap.gmean_prev)),
+        ("iterations", num(snap.iterations as f64)),
+        ("converged", Json::Bool(snap.converged)),
+    ])
+}
+
+/// Decode a [`StopSnapshot`].
+pub fn snapshot_from_json(v: &Json) -> Result<StopSnapshot> {
+    const W: &str = "snapshot";
+    Ok(StopSnapshot {
+        checker: checker_from_json(v.req("checker")?)?,
+        stats: req_arr(v, "stats", W)?
+            .iter()
+            .map(iter_stats_from_json)
+            .collect::<Result<Vec<_>>>()?,
+        gmean_prev: f64s_of(v, "gmean_prev", W)?,
+        iterations: req_usize(v, "iterations", W)?,
+        converged: req_bool(v, "converged", W)?,
+    })
+}
+
+// -- payload -----------------------------------------------------------------
+
+fn node_vec_to_json(nodes: &[(NodeId, Vec<f64>)]) -> Json {
+    arr(nodes
+        .iter()
+        .map(|(id, th)| arr(vec![num(*id as f64), f64s(th)]))
+        .collect())
+}
+
+fn node_vec_from_json(v: &Json, key: &str, what: &str)
+                      -> Result<Vec<(NodeId, Vec<f64>)>> {
+    req_arr(v, key, what)?
+        .iter()
+        .map(|pair| {
+            let items = pair.as_arr().ok_or_else(|| {
+                Error::Config(format!("codec: {what}: '{key}' entry not a pair"))
+            })?;
+            if items.len() != 2 {
+                return Err(Error::Config(format!(
+                    "codec: {what}: '{key}' entry not a pair"
+                )));
+            }
+            let id = items[0].as_usize().ok_or_else(|| {
+                Error::Config(format!("codec: {what}: bad node id in '{key}'"))
+            })?;
+            let th: Vec<f64> = items[1]
+                .as_arr()
+                .ok_or_else(|| {
+                    Error::Config(format!("codec: {what}: bad θ in '{key}'"))
+                })?
+                .iter()
+                .map(|x| f64_of(x, key))
+                .collect::<Result<Vec<_>>>()?;
+            Ok((id, th))
+        })
+        .collect()
+}
+
+/// Encode a machine-level protocol message as a JSON value (one line of
+/// the process transport's wire format once `to_string()`-ed).
+pub fn payload_to_json(p: &Payload) -> Json {
+    match p {
+        Payload::Theta { stamp, theta } => obj(vec![
+            ("kind", s("theta")),
+            ("stamp", num(*stamp as f64)),
+            ("theta", f64s(theta)),
+        ]),
+        Payload::Eta { stamp, eta } => obj(vec![
+            ("kind", s("eta")),
+            ("stamp", num(*stamp as f64)),
+            ("eta", fnum(*eta)),
+        ]),
+        Payload::BoundaryTheta { stamp, nodes } => obj(vec![
+            ("kind", s("btheta")),
+            ("stamp", num(*stamp as f64)),
+            ("nodes", node_vec_to_json(nodes)),
+        ]),
+        Payload::BoundaryEta { stamp, edges } => obj(vec![
+            ("kind", s("beta")),
+            ("stamp", num(*stamp as f64)),
+            ("edges", arr(edges
+                .iter()
+                .map(|(i, j, e)| {
+                    arr(vec![num(*i as f64), num(*j as f64), fnum(*e)])
+                })
+                .collect())),
+        ]),
+        Payload::Part { round, entries, thetas } => obj(vec![
+            ("kind", s("part")),
+            ("round", num(*round as f64)),
+            ("entries", arr(entries
+                .iter()
+                .map(|(mid, parts)| {
+                    arr(vec![
+                        num(*mid as f64),
+                        arr(parts.iter().map(stat_partial_to_json).collect()),
+                    ])
+                })
+                .collect())),
+            ("thetas", node_vec_to_json(thetas)),
+        ]),
+        Payload::Verdict { round, global_primal, global_dual } => obj(vec![
+            ("kind", s("verdict")),
+            ("round", num(*round as f64)),
+            ("gp", fnum(*global_primal)),
+            ("gd", fnum(*global_dual)),
+        ]),
+        Payload::Gossip { round, mass, weight, maxes } => obj(vec![
+            ("kind", s("gossip")),
+            ("round", num(*round as f64)),
+            ("mass", f64s(mass)),
+            ("weight", fnum(*weight)),
+            ("maxes", f64s(&maxes[..])),
+        ]),
+        Payload::Checker { cursor, snap } => obj(vec![
+            ("kind", s("checker")),
+            ("cursor", num(*cursor as f64)),
+            ("snap", snapshot_to_json(snap)),
+        ]),
+        Payload::Stop { round, converged } => obj(vec![
+            ("kind", s("stop")),
+            ("round", num(*round as f64)),
+            ("converged", Json::Bool(*converged)),
+        ]),
+    }
+}
+
+/// Decode a machine-level protocol message.
+pub fn payload_from_json(v: &Json) -> Result<Payload> {
+    let kind = v
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Config("codec: payload: missing 'kind'".into()))?;
+    match kind {
+        "theta" => Ok(Payload::Theta {
+            stamp: req_u64(v, "stamp", "theta")?,
+            theta: f64s_of(v, "theta", "theta")?,
+        }),
+        "eta" => Ok(Payload::Eta {
+            stamp: req_u64(v, "stamp", "eta")?,
+            eta: req_f64(v, "eta", "eta")?,
+        }),
+        "btheta" => Ok(Payload::BoundaryTheta {
+            stamp: req_u64(v, "stamp", "btheta")?,
+            nodes: node_vec_from_json(v, "nodes", "btheta")?,
+        }),
+        "beta" => {
+            let edges = req_arr(v, "edges", "beta")?
+                .iter()
+                .map(|t| {
+                    let items = t.as_arr().filter(|a| a.len() == 3).ok_or_else(|| {
+                        Error::Config("codec: beta: edge not a triple".into())
+                    })?;
+                    let i = items[0].as_usize().ok_or_else(|| {
+                        Error::Config("codec: beta: bad node id".into())
+                    })?;
+                    let j = items[1].as_usize().ok_or_else(|| {
+                        Error::Config("codec: beta: bad node id".into())
+                    })?;
+                    Ok((i, j, f64_of(&items[2], "edges")?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Payload::BoundaryEta { stamp: req_u64(v, "stamp", "beta")?, edges })
+        }
+        "part" => {
+            let entries = req_arr(v, "entries", "part")?
+                .iter()
+                .map(|pair| {
+                    let items = pair.as_arr().filter(|a| a.len() == 2).ok_or_else(|| {
+                        Error::Config("codec: part: entry not a pair".into())
+                    })?;
+                    let mid = items[0].as_usize().ok_or_else(|| {
+                        Error::Config("codec: part: bad machine id".into())
+                    })?;
+                    let parts = items[1]
+                        .as_arr()
+                        .ok_or_else(|| {
+                            Error::Config("codec: part: partial list missing".into())
+                        })?
+                        .iter()
+                        .map(stat_partial_from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((mid, parts))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Payload::Part {
+                round: req_u64(v, "round", "part")?,
+                entries,
+                thetas: node_vec_from_json(v, "thetas", "part")?,
+            })
+        }
+        "verdict" => Ok(Payload::Verdict {
+            round: req_u64(v, "round", "verdict")?,
+            global_primal: req_f64(v, "gp", "verdict")?,
+            global_dual: req_f64(v, "gd", "verdict")?,
+        }),
+        "gossip" => {
+            let maxes_v = f64s_of(v, "maxes", "gossip")?;
+            let maxes: [f64; 4] = maxes_v.try_into().map_err(|_| {
+                Error::Config("codec: gossip: 'maxes' must have 4 entries".into())
+            })?;
+            Ok(Payload::Gossip {
+                round: req_u64(v, "round", "gossip")?,
+                mass: f64s_of(v, "mass", "gossip")?,
+                weight: req_f64(v, "weight", "gossip")?,
+                maxes,
+            })
+        }
+        "checker" => Ok(Payload::Checker {
+            cursor: req_u64(v, "cursor", "checker")?,
+            snap: Box::new(snapshot_from_json(v.req("snap")?)?),
+        }),
+        "stop" => Ok(Payload::Stop {
+            round: req_u64(v, "round", "stop")?,
+            converged: req_bool(v, "converged", "stop")?,
+        }),
+        other => Err(Error::Config(format!("codec: unknown payload kind '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::Recorder;
+
+    /// Tricky f64s: signed zeros, subnormals, shortest-round-trip
+    /// stressors, huge/tiny magnitudes, and the three non-finites.
+    const HARD: [f64; 12] = [
+        0.0, -0.0, 1.5, 0.1, 1e-17, 1e300, -2.5e-300, 5e-324,
+        f64::MAX, f64::MIN_POSITIVE, f64::INFINITY, f64::NEG_INFINITY,
+    ];
+
+    fn partial(k: usize) -> StatPartial {
+        StatPartial {
+            f_sum: HARD[k % HARD.len()],
+            max_primal: 0.25,
+            max_dual: HARD[(k + 1) % HARD.len()],
+            eta_min: f64::INFINITY,
+            eta_max: f64::NEG_INFINITY,
+            eta_sum: 7.75,
+            eta_count: k,
+            theta_sum: vec![1.0, HARD[(k + 2) % HARD.len()]],
+            node_count: 3 + k,
+            centered_sq: 1e-30,
+        }
+    }
+
+    fn snap() -> StopSnapshot {
+        StopSnapshot {
+            checker: CheckerState {
+                prev: Some(-0.0),
+                f_min: f64::INFINITY,
+                f_max: f64::NEG_INFINITY,
+                streak: 2,
+                seen: 9,
+            },
+            stats: vec![IterStats {
+                iter: 4,
+                objective: 12.125,
+                max_primal: 1e-9,
+                max_dual: 3.0,
+                mean_eta: 0.1,
+                min_eta: 0.05,
+                max_eta: 0.2,
+                app_error: f64::NAN,
+            }],
+            gmean_prev: HARD.to_vec(),
+            iterations: 5,
+            converged: false,
+        }
+    }
+
+    fn all_payloads() -> Vec<Payload> {
+        vec![
+            Payload::Theta { stamp: 3, theta: HARD.to_vec() },
+            Payload::Eta { stamp: 0, eta: -0.0 },
+            Payload::BoundaryTheta {
+                stamp: 7,
+                nodes: vec![(0, vec![1.5, -0.0]), (41, HARD.to_vec())],
+            },
+            Payload::BoundaryEta {
+                stamp: 2,
+                edges: vec![(1, 2, 0.5), (9, 0, f64::INFINITY)],
+            },
+            Payload::Part {
+                round: 11,
+                entries: vec![(0, vec![partial(0), partial(1)]), (2, vec![])],
+                thetas: vec![(0, vec![0.5; 4]), (2, vec![-0.0, 1e300])],
+            },
+            Payload::Verdict {
+                round: 6,
+                global_primal: f64::INFINITY,
+                global_dual: 5e-324,
+            },
+            Payload::Gossip {
+                round: 1,
+                mass: vec![4.0, 0.0, 17.25, 0.5, 8.0, 1.0, -3.5],
+                weight: 0.0078125,
+                maxes: [0.1, 0.2, 0.3, f64::NEG_INFINITY],
+            },
+            Payload::Checker { cursor: 5, snap: Box::new(snap()) },
+            Payload::Stop { round: 250, converged: true },
+        ]
+    }
+
+    #[test]
+    fn every_variant_round_trips_exactly() {
+        for p in all_payloads() {
+            let line = payload_to_json(&p).to_string();
+            let back = payload_from_json(&Json::parse(&line).unwrap()).unwrap();
+            // byte-identical re-serialization covers NaN fields, which
+            // PartialEq cannot
+            assert_eq!(payload_to_json(&back).to_string(), line,
+                       "re-encode mismatch for {line}");
+        }
+    }
+
+    #[test]
+    fn nan_free_variants_compare_equal_after_round_trip() {
+        for p in all_payloads() {
+            if matches!(p, Payload::Checker { .. }) {
+                continue; // carries the NaN app_error above
+            }
+            let line = payload_to_json(&p).to_string();
+            let back = payload_from_json(&Json::parse(&line).unwrap()).unwrap();
+            assert_eq!(back, p, "value mismatch for {line}");
+        }
+    }
+
+    #[test]
+    fn signed_zero_and_nonfinites_survive_bit_level() {
+        let p = Payload::Theta {
+            stamp: 1,
+            theta: vec![-0.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY],
+        };
+        let line = payload_to_json(&p).to_string();
+        let Payload::Theta { theta, .. } =
+            payload_from_json(&Json::parse(&line).unwrap()).unwrap()
+        else {
+            panic!("kind changed");
+        };
+        assert!(theta[0] == 0.0 && theta[0].is_sign_negative());
+        assert!(theta[1].is_nan());
+        assert_eq!(theta[2], f64::INFINITY);
+        assert_eq!(theta[3], f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn snapshot_resumes_a_tracker_identically() {
+        // the handoff contract end-to-end: snapshot → JSON → resume
+        use crate::kernel::StopTracker;
+        let snap = snap();
+        let encoded = snapshot_to_json(&snap).to_string();
+        let back = snapshot_from_json(&Json::parse(&encoded).unwrap()).unwrap();
+        let mut a = StopTracker::new(2, 1e-3, 3, 5, 100, 1.0);
+        let mut b = StopTracker::new(2, 1e-3, 3, 5, 100, 1.0);
+        a.resume(snap);
+        b.resume(back);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.converged, b.converged);
+        let ra: &Recorder = &a.recorder;
+        let rb: &Recorder = &b.recorder;
+        assert_eq!(ra.stats.len(), rb.stats.len());
+        // IterStats contains a NaN app_error: compare through re-encode
+        assert_eq!(
+            arr(ra.stats.iter().map(iter_stats_to_json).collect()).to_string(),
+            arr(rb.stats.iter().map(iter_stats_to_json).collect()).to_string(),
+        );
+    }
+
+    #[test]
+    fn decode_rejects_malformed_documents() {
+        for bad in [
+            r#"{"stamp":1}"#,
+            r#"{"kind":"theta"}"#,
+            r#"{"kind":"theta","stamp":1.5,"theta":[]}"#,
+            r#"{"kind":"gossip","round":0,"mass":[],"weight":1,"maxes":[1,2,3]}"#,
+            r#"{"kind":"eta","stamp":1,"eta":"huge"}"#,
+            r#"{"kind":"warp","stamp":1}"#,
+        ] {
+            let v = Json::parse(bad).unwrap();
+            assert!(payload_from_json(&v).is_err(), "accepted {bad}");
+        }
+    }
+}

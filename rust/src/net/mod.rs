@@ -95,17 +95,38 @@
 //! realism costs; the per-node runtime here keeps the oracle fold as the
 //! trusted reference. Fault scenarios for both runtimes can be recorded
 //! and replayed as JSON [`FaultPlan`]s (see [`plan`]).
+//!
+//! ## Transports
+//!
+//! The machine-level surface the cluster runtime drives (send, event
+//! drain, timers, delivery accounting) is the [`Transport`] trait; the
+//! simulator is merely its reference implementation. The matrix:
+//!
+//! | transport | clock | determinism | fault model | role |
+//! |---|---|---|---|---|
+//! | [`NetSim`] | virtual ticks | bit-exact per seed | scripted [`FaultPlan`] | oracle + fault studies |
+//! | [`ChannelTransport`] | wall (ms since start) | real thread interleavings | injected `Leave` events | in-process stress |
+//! | `StdioTransport` (in [`crate::cluster::proc`]) | wall (ms since start) | real processes | `SIGKILL` mid-run | end-to-end deployment drill |
+//!
+//! The real transports speak the hand-rolled JSON wire format in
+//! [`codec`]; the simulator clones payloads in memory and never
+//! serializes.
 
 mod async_runner;
+pub mod codec;
 pub mod plan;
 pub mod sim;
 mod topology;
+pub mod transport;
 
 pub use async_runner::{AppMetricHook, AsyncRunner, NetConfig, NetReport};
+pub use codec::{payload_from_json, payload_to_json, snapshot_from_json,
+                snapshot_to_json};
 pub use plan::{load_plan, plan_from_json, plan_to_json};
 pub use sim::{ChurnEvent, Event, FaultPlan, LinkModel, NetSim, Partition, Payload,
               Ticks, TimerKind, TraceEvent, TraceKind};
 pub use topology::{ActivityConfig, TopologyController};
+pub use transport::{channel_mesh, ChannelTransport, Transport};
 
 #[cfg(test)]
 mod tests;

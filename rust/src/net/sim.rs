@@ -135,8 +135,15 @@ pub enum Payload {
     BoundaryEta { stamp: u64, edges: Vec<(NodeId, NodeId, f64)> },
     /// Tree collective, rootward: per-machine statistic partials for one
     /// round, concatenated along the tree (machine id, that machine's
-    /// shard partials in shard order).
-    Part { round: u64, entries: Vec<(NodeId, Vec<StatPartial>)> },
+    /// shard partials in shard order). When the run carries an
+    /// application metric, `thetas` additionally ships each machine's
+    /// flat committed θ^{round+1} span so the root can assemble the
+    /// global parameter without reading remote state.
+    Part {
+        round: u64,
+        entries: Vec<(NodeId, Vec<StatPartial>)>,
+        thetas: Vec<(NodeId, Vec<f64>)>,
+    },
     /// Tree collective, leafward: the folded round verdict.
     Verdict { round: u64, global_primal: f64, global_dual: f64 },
     /// Gossip collective: cumulative push-sum mass for one round (robust
@@ -149,6 +156,11 @@ pub enum Payload {
     /// memory — and ships it to the machine resuming the recorder duty;
     /// `cursor` is the next round the receiver will fold.
     Checker { cursor: u64, snap: Box<StopSnapshot> },
+    /// Real-transport stop flood: the checker holder announces that the
+    /// run ended after folding `round` (converged or out of budget) so
+    /// every peer process can exit. Never sent on the simulated
+    /// transport, where the driver sees the stop directly.
+    Stop { round: u64, converged: bool },
 }
 
 impl Payload {
@@ -160,12 +172,13 @@ impl Payload {
             | Payload::BoundaryEta { stamp, .. } => stamp,
             Payload::Part { round, .. }
             | Payload::Verdict { round, .. }
-            | Payload::Gossip { round, .. } => round,
+            | Payload::Gossip { round, .. }
+            | Payload::Stop { round, .. } => round,
             Payload::Checker { cursor, .. } => cursor,
         }
     }
 
-    fn kind_name(&self) -> &'static str {
+    pub(crate) fn kind_name(&self) -> &'static str {
         match self {
             Payload::Theta { .. } => "theta",
             Payload::Eta { .. } => "eta",
@@ -175,6 +188,7 @@ impl Payload {
             Payload::Verdict { .. } => "verdict",
             Payload::Gossip { .. } => "gossip",
             Payload::Checker { .. } => "checker",
+            Payload::Stop { .. } => "stop",
         }
     }
 }

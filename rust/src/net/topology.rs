@@ -33,7 +33,8 @@
 
 use crate::graph::{Graph, LiveView, NodeId};
 
-use super::sim::{NetSim, TraceKind};
+use super::sim::TraceKind;
+use super::transport::Transport;
 
 /// Hysteresis thresholds for the NAP effective-topology mapping. All
 /// ratios are relative to the mean symmetrized penalty over eligible
@@ -111,7 +112,7 @@ impl TopologyController {
 
     /// Apply a scripted join. Returns false if the node was already live
     /// (the event is then a no-op the caller should skip).
-    pub fn apply_join(&mut self, node: NodeId, sim: &mut NetSim) -> bool {
+    pub fn apply_join<T: Transport>(&mut self, node: NodeId, net: &mut T) -> bool {
         if self.view.node_live(node) {
             return false;
         }
@@ -128,19 +129,19 @@ impl TopologyController {
                 self.view.set_edge(a, b, false);
             }
         }
-        sim.counters.joins += 1;
-        sim.record(TraceKind::Join { node });
+        net.counters().joins += 1;
+        net.record(TraceKind::Join { node });
         true
     }
 
     /// Apply a scripted leave. Returns false if the node was already dead.
-    pub fn apply_leave(&mut self, node: NodeId, sim: &mut NetSim) -> bool {
+    pub fn apply_leave<T: Transport>(&mut self, node: NodeId, net: &mut T) -> bool {
         if !self.view.node_live(node) {
             return false;
         }
         self.view.set_node(node, false);
-        sim.counters.leaves += 1;
-        sim.record(TraceKind::Leave { node });
+        net.counters().leaves += 1;
+        net.record(TraceKind::Leave { node });
         true
     }
 
@@ -148,7 +149,7 @@ impl TopologyController {
     /// activity rule is enabled, re-evaluate the influence of its incident
     /// edges. Returns the edges toggled this call (endpoint pairs), so the
     /// runner can wake blocked neighbours.
-    pub fn observe_etas(&mut self, i: NodeId, etas: &[f64], sim: &mut NetSim)
+    pub fn observe_etas<T: Transport>(&mut self, i: NodeId, etas: &[f64], net: &mut T)
                         -> Vec<(NodeId, NodeId)> {
         debug_assert_eq!(etas.len(), self.eta_dir[i].len());
         self.eta_dir[i].copy_from_slice(etas);
@@ -198,8 +199,8 @@ impl TopologyController {
                     self.activity_masked[eid] = false;
                     self.below_streak[eid] = 0;
                     self.view.set_edge(a, b, true);
-                    sim.counters.edges_reactivated += 1;
-                    sim.record(TraceKind::EdgeOn { a, b });
+                    net.counters().edges_reactivated += 1;
+                    net.record(TraceKind::EdgeOn { a, b });
                     toggled.push((a, b));
                 }
             } else if influence < cfg.off_below {
@@ -212,8 +213,8 @@ impl TopologyController {
                 {
                     self.activity_masked[eid] = true;
                     self.view.set_edge(a, b, false);
-                    sim.counters.edges_deactivated += 1;
-                    sim.record(TraceKind::EdgeOff { a, b });
+                    net.counters().edges_deactivated += 1;
+                    net.record(TraceKind::EdgeOff { a, b });
                     toggled.push((a, b));
                 }
             } else {
@@ -236,7 +237,7 @@ impl TopologyController {
 mod tests {
     use super::*;
     use crate::graph::Topology;
-    use crate::net::sim::FaultPlan;
+    use crate::net::sim::{FaultPlan, NetSim};
 
     fn sim() -> NetSim {
         NetSim::new(0, FaultPlan::none(), false)

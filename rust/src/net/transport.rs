@@ -1,0 +1,420 @@
+//! The cluster transport seam: one trait over "send a [`Payload`], pop
+//! the next [`Event`], keep time", with three implementations.
+//!
+//! | transport | clock | determinism | fault model | role |
+//! |-----------|-------|-------------|-------------|------|
+//! | [`NetSim`] (`net::sim`) | virtual ticks | bit-exact replay per seed | scripted loss/jitter/dup/partition/churn | oracle: parity suites pin the protocol against it |
+//! | [`ChannelTransport`] (in-process) | real (`Instant`, ms) | real interleavings, convergence-level checks only | none intrinsic; the harness injects [`Event::Leave`] | one OS thread per machine, `mpsc` mesh |
+//! | `StdioTransport` (`cluster::proc`) | real (`Instant`, ms) | real interleavings + real process death | SIGKILL by the driver; leave/join ctrl lines | one OS *process* per machine, line-delimited JSON via `fadmm-node` |
+//!
+//! The protocol code ([`crate::cluster`]) is generic over [`Transport`]
+//! and cannot tell which one it runs on: the simulator path is pinned
+//! bit-identical to the pre-trait code by the existing parity suites,
+//! and the real transports assert convergence-within-tolerance plus
+//! identical iteration counts at zero faults.
+//!
+//! Real transports have no virtual clock, so [`Transport::advance_to`]
+//! is a no-op and [`Transport::now`] reads wall time in milliseconds —
+//! tick-valued config timeouts (silence, collective patience, gossip
+//! spacing) become millisecond timeouts. A consumer that wants
+//! iteration-count parity at zero faults therefore configures timeouts
+//! generously enough that they never fire spuriously under scheduler
+//! noise.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::{Duration, Instant};
+
+use crate::graph::NodeId;
+use crate::metrics::NetCounters;
+
+use super::sim::{Event, NetSim, Payload, Ticks, TraceEvent, TraceKind};
+
+/// The machine-level send/deliver/clock surface the cluster runtime
+/// needs. Extracted verbatim from [`NetSim`]'s public API so the
+/// simulator implementation is pure forwarding.
+pub trait Transport {
+    /// Current time: virtual ticks (sim) or elapsed wall milliseconds
+    /// (real transports).
+    fn now(&self) -> Ticks;
+
+    /// Send a protocol message. The sim applies its fault plan unless
+    /// `reliable`; real transports deliver best-effort (a dead peer
+    /// just never reads it) and ignore the flag.
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool);
+
+    /// Schedule a consumer timer ([`Event::Wake`] / [`Event::Timer`])
+    /// at absolute time `at`.
+    fn schedule(&mut self, at: Ticks, event: Event);
+
+    /// Pop the next event without advancing the clock (sim) /
+    /// block until traffic or a due timer (real). `None` means the run
+    /// is over: queue exhausted (sim) or all peers hung up with no
+    /// timer pending (real).
+    fn pop(&mut self) -> Option<(Ticks, Event)>;
+
+    /// Advance the virtual clock (no-op on real transports — wall time
+    /// advances itself).
+    fn advance_to(&mut self, at: Ticks);
+
+    /// Append a consumer-side trace entry at the current time.
+    fn record(&mut self, kind: TraceKind);
+
+    /// Bookkeeping for a resolved stale read (see
+    /// [`NetSim::note_stale_read`]).
+    fn note_stale_read(&mut self, node: NodeId, nbr: NodeId, ideal: u64,
+                       used: u64, stale: u64);
+
+    /// Bookkeeping for a delivery the consumer accepted.
+    fn note_delivered(&mut self, src: NodeId, dst: NodeId, payload: &Payload);
+
+    /// Bookkeeping for a delivery whose destination was dead.
+    fn note_dead_delivery(&mut self, src: NodeId, dst: NodeId, payload: &Payload);
+
+    /// The live counter block (consumer-maintained counters increment
+    /// through this).
+    fn counters(&mut self) -> &mut NetCounters;
+
+    /// Copy of the counters for reports.
+    fn counters_snapshot(&self) -> NetCounters;
+
+    /// Take the accumulated trace for the final report.
+    fn take_trace(&mut self) -> Vec<TraceEvent>;
+}
+
+/// The simulator *is* the first transport: pure forwarding, so the
+/// pre-trait behaviour is bit-identical (pinned by `cluster::tests`).
+impl Transport for NetSim {
+    fn now(&self) -> Ticks {
+        NetSim::now(self)
+    }
+
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool) {
+        NetSim::send(self, src, dst, payload, reliable);
+    }
+
+    fn schedule(&mut self, at: Ticks, event: Event) {
+        NetSim::schedule(self, at, event);
+    }
+
+    fn pop(&mut self) -> Option<(Ticks, Event)> {
+        NetSim::pop(self)
+    }
+
+    fn advance_to(&mut self, at: Ticks) {
+        NetSim::advance_to(self, at);
+    }
+
+    fn record(&mut self, kind: TraceKind) {
+        NetSim::record(self, kind);
+    }
+
+    fn note_stale_read(&mut self, node: NodeId, nbr: NodeId, ideal: u64,
+                       used: u64, stale: u64) {
+        NetSim::note_stale_read(self, node, nbr, ideal, used, stale);
+    }
+
+    fn note_delivered(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        NetSim::note_delivered(self, src, dst, payload);
+    }
+
+    fn note_dead_delivery(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        NetSim::note_dead_delivery(self, src, dst, payload);
+    }
+
+    fn counters(&mut self) -> &mut NetCounters {
+        &mut self.counters
+    }
+
+    fn counters_snapshot(&self) -> NetCounters {
+        self.counters
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+/// In-process real transport: every machine is an OS thread, messages
+/// travel over an all-to-all [`std::sync::mpsc`] mesh, and the clock is
+/// shared wall time in milliseconds. There is no virtual event queue —
+/// [`Transport::pop`] blocks on the channel with a timeout derived from
+/// the earliest armed timer, so real scheduler interleavings (the thing
+/// the simulator cannot produce) drive the protocol.
+pub struct ChannelTransport {
+    id: NodeId,
+    epoch: Instant,
+    rx: Receiver<Event>,
+    peers: Vec<Sender<Event>>,
+    /// armed consumer timers: (due, seq, event); linear min-scan (the
+    /// runner keeps at most a handful armed per machine)
+    timers: Vec<(Ticks, u64, Event)>,
+    seq: u64,
+    tracing: bool,
+    pub trace: Vec<TraceEvent>,
+    pub counters: NetCounters,
+}
+
+/// Build an all-to-all in-process mesh for `machines` endpoints.
+/// Returns one transport per machine plus the raw senders, which a
+/// harness can use to inject events from outside (e.g. an
+/// [`Event::Leave`] broadcast standing in for a machine kill).
+///
+/// Each endpoint's *own* slot in its peer list is a pre-disconnected
+/// sender: the protocol never self-sends, and holding one's own sender
+/// would keep the receive side alive forever — the disconnect path
+/// (every other endpoint and the harness senders gone) is what lets a
+/// lone survivor drain its timers and terminate.
+pub fn channel_mesh(machines: usize, tracing: bool)
+    -> (Vec<ChannelTransport>, Vec<Sender<Event>>)
+{
+    let epoch = Instant::now();
+    let mut txs = Vec::with_capacity(machines);
+    let mut rxs = Vec::with_capacity(machines);
+    for _ in 0..machines {
+        let (tx, rx) = std::sync::mpsc::channel();
+        txs.push(tx);
+        rxs.push(rx);
+    }
+    let transports = rxs
+        .into_iter()
+        .enumerate()
+        .map(|(id, rx)| {
+            let mut peers = txs.clone();
+            peers[id] = {
+                let (tx, _dropped_rx) = std::sync::mpsc::channel();
+                tx
+            };
+            ChannelTransport {
+                id,
+                epoch,
+                rx,
+                peers,
+                timers: Vec::new(),
+                seq: 0,
+                tracing,
+                trace: Vec::new(),
+                counters: NetCounters::default(),
+            }
+        })
+        .collect();
+    (transports, txs)
+}
+
+impl ChannelTransport {
+    /// This endpoint's machine id.
+    pub fn id(&self) -> NodeId {
+        self.id
+    }
+
+    /// Index of the earliest armed timer by (due, seq).
+    fn next_timer(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, t) in self.timers.iter().enumerate() {
+            match best {
+                None => best = Some(i),
+                Some(b) => {
+                    if (t.0, t.1) < (self.timers[b].0, self.timers[b].1) {
+                        best = Some(i);
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// All peers hung up: sleep out the earliest timer (so a detached
+    /// survivor can still drive local-fold fallbacks to completion)
+    /// instead of firing it early.
+    fn pop_after_disconnect(&mut self) -> Option<(Ticks, Event)> {
+        let i = self.next_timer()?;
+        let due = self.timers[i].0;
+        let now = self.now();
+        if due > now {
+            std::thread::sleep(Duration::from_millis(due - now));
+        }
+        let (_, _, event) = self.timers.remove(i);
+        Some((self.now(), event))
+    }
+}
+
+impl Transport for ChannelTransport {
+    fn now(&self) -> Ticks {
+        self.epoch.elapsed().as_millis() as Ticks
+    }
+
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool) {
+        self.counters.sent += 1;
+        let stamp = payload.stamp();
+        let what = payload.kind_name();
+        if self.tracing {
+            self.trace.push(TraceEvent { at: self.now(), kind: TraceKind::Send { src, dst, what, stamp } });
+        }
+        let ev = Event::Deliver { src, dst, payload, dup: false };
+        if self.peers[dst].send(ev).is_err() {
+            // peer thread exited — the real-world analogue of a dead
+            // destination
+            self.counters.dropped_dead += 1;
+            if self.tracing {
+                self.trace.push(TraceEvent { at: self.now(), kind: TraceKind::DropDead { src, dst, stamp } });
+            }
+        }
+    }
+
+    fn schedule(&mut self, at: Ticks, event: Event) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.timers.push((at.max(self.now()), seq, event));
+    }
+
+    fn pop(&mut self) -> Option<(Ticks, Event)> {
+        loop {
+            // arrived traffic first: a due timer must not outrace
+            // messages that are already in the queue, or generous
+            // timeouts would still fire spuriously under load
+            match self.rx.try_recv() {
+                Ok(ev) => return Some((self.now(), ev)),
+                Err(TryRecvError::Disconnected) => return self.pop_after_disconnect(),
+                Err(TryRecvError::Empty) => {}
+            }
+            match self.next_timer() {
+                Some(i) if self.timers[i].0 <= self.now() => {
+                    let (_, _, event) = self.timers.remove(i);
+                    return Some((self.now(), event));
+                }
+                Some(i) => {
+                    // saturating: the clock may tick past the deadline
+                    // between the guard above and this read
+                    let wait = self.timers[i].0.saturating_sub(self.now());
+                    match self.rx.recv_timeout(Duration::from_millis(wait)) {
+                        Ok(ev) => return Some((self.now(), ev)),
+                        Err(RecvTimeoutError::Timeout) => continue,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            return self.pop_after_disconnect()
+                        }
+                    }
+                }
+                None => match self.rx.recv() {
+                    Ok(ev) => return Some((self.now(), ev)),
+                    Err(_) => return None,
+                },
+            }
+        }
+    }
+
+    fn advance_to(&mut self, _at: Ticks) {}
+
+    fn record(&mut self, kind: TraceKind) {
+        if self.tracing {
+            self.trace.push(TraceEvent { at: self.now(), kind });
+        }
+    }
+
+    fn note_stale_read(&mut self, node: NodeId, nbr: NodeId, ideal: u64,
+                       used: u64, stale: u64) {
+        if used < ideal {
+            self.counters.stale_reads += 1;
+            if used + stale < ideal {
+                self.counters.fallback_reads += 1;
+                self.record(TraceKind::Fallback { node, nbr, ideal, used });
+            }
+        }
+    }
+
+    fn note_delivered(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        self.counters.delivered += 1;
+        if self.tracing {
+            let kind = TraceKind::Deliver {
+                src,
+                dst,
+                what: payload.kind_name(),
+                stamp: payload.stamp(),
+            };
+            self.trace.push(TraceEvent { at: self.now(), kind });
+        }
+    }
+
+    fn note_dead_delivery(&mut self, src: NodeId, dst: NodeId, payload: &Payload) {
+        self.counters.dropped_dead += 1;
+        self.record(TraceKind::DropDead { src, dst, stamp: payload.stamp() });
+    }
+
+    fn counters(&mut self) -> &mut NetCounters {
+        &mut self.counters
+    }
+
+    fn counters_snapshot(&self) -> NetCounters {
+        self.counters
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        std::mem::take(&mut self.trace)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // exercise the sim exclusively through the trait, as the generic
+    // runner does
+    fn drive<T: Transport>(t: &mut T) -> NetCounters {
+        t.send(0, 1, Payload::Eta { stamp: 3, eta: 0.5 }, false);
+        t.schedule(7, Event::Wake { node: 0, epoch: 0 });
+        let (at, ev) = t.pop().unwrap();
+        t.advance_to(at);
+        match ev {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+                t.note_delivered(0, 1, &payload);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let (at, ev) = t.pop().unwrap();
+        assert_eq!(ev, Event::Wake { node: 0, epoch: 0 });
+        t.advance_to(at);
+        t.counters_snapshot()
+    }
+
+    #[test]
+    fn sim_forwards_through_the_trait() {
+        use super::super::sim::FaultPlan;
+        let mut sim = NetSim::new(1, FaultPlan::none(), true);
+        let c = drive(&mut sim);
+        assert_eq!((c.sent, c.delivered), (1, 1));
+        assert_eq!(NetSim::now(&sim), 7, "trait advance moved the virtual clock");
+        assert!(!sim.take_trace().is_empty());
+    }
+
+    #[test]
+    fn channel_mesh_routes_between_endpoints() {
+        let (mut mesh, _txs) = channel_mesh(2, true);
+        let mut b = mesh.pop().unwrap();
+        let mut a = mesh.pop().unwrap();
+        assert_eq!((a.id(), b.id()), (0, 1));
+        a.send(0, 1, Payload::Eta { stamp: 9, eta: 1.5 }, false);
+        let (_, ev) = b.pop().unwrap();
+        match ev {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+                assert_eq!(payload, Payload::Eta { stamp: 9, eta: 1.5 });
+                b.note_delivered(0, 1, &payload);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(b.counters_snapshot().delivered, 1);
+        assert_eq!(a.counters_snapshot().sent, 1);
+    }
+
+    #[test]
+    fn channel_timers_fire_in_due_order() {
+        let (mut mesh, txs) = channel_mesh(1, false);
+        let mut t = mesh.pop().unwrap();
+        drop(txs); // nothing will ever send — pure timer path
+        let now = t.now();
+        t.schedule(now + 20, Event::Wake { node: 0, epoch: 1 });
+        t.schedule(now + 5, Event::Wake { node: 0, epoch: 0 });
+        let (_, first) = t.pop().unwrap();
+        let (_, second) = t.pop().unwrap();
+        assert_eq!(first, Event::Wake { node: 0, epoch: 0 });
+        assert_eq!(second, Event::Wake { node: 0, epoch: 1 });
+        assert!(t.pop().is_none(), "no peers, no timers: run over");
+    }
+}
