@@ -184,6 +184,59 @@ fn main() {
         ])));
     }
 
+    println!("== obs instrumentation (zero-alloc with spans on, overhead vs baseline) ==");
+    {
+        let obs_run = |obs: bool, iters: usize| {
+            let runner =
+                ShardedRunner::new(Topology::Ring.build(64).unwrap(), ShardedConfig {
+                    scheme: SchemeKind::Ap,
+                    tol: 0.0,
+                    max_iters: iters,
+                    obs,
+                    ..Default::default()
+                });
+            runner.run(quad_factory()).unwrap()
+        };
+
+        // steady state with spans live must stay allocation-free: span()
+        // is one clock read, end() one clock read plus an index into a
+        // histogram registered at run start — same 40/80 delta method as
+        // the uninstrumented check above
+        let run_allocs =
+            |iters: usize| allocs_during(|| { black_box(obs_run(true, iters)); });
+        let _ = run_allocs(8); // warm-up run (first-touch effects)
+        let base = run_allocs(40);
+        let doubled = run_allocs(80);
+        let per_iter = (doubled as f64 - base as f64) / 40.0;
+        println!("  obs-on steady state: {per_iter:.2} allocations per iteration \
+                  (40-iter run: {base}, 80-iter run: {doubled})");
+        assert_eq!(per_iter, 0.0,
+                   "an instrumented steady-state iteration must be allocation-free");
+
+        // instrumented vs baseline wall time, identical configuration —
+        // ci.sh gates overhead_pct at FADMM_OBS_GATE_PCT (default 2%)
+        let report = obs_run(true, 8);
+        let solve = report.obs.hist_by_name("fadmm_phase_solve_ns")
+            .expect("instrumented run registers the solve span");
+        assert!(solve.count > 0, "obs-on run must record solve spans");
+        let base_name = format!("sharded 64 ring x {ITERS} iters obs-off");
+        let obs_name = format!("sharded 64 ring x {ITERS} iters obs-on");
+        b.bench(&base_name, || { black_box(obs_run(false, ITERS)); });
+        b.bench(&obs_name, || { black_box(obs_run(true, ITERS)); });
+        let base_ns = b.result(&base_name).unwrap().mean_ns;
+        let obs_ns = b.result(&obs_name).unwrap().mean_ns;
+        let overhead_pct = (obs_ns - base_ns) / base_ns * 100.0;
+        println!("  obs overhead: {overhead_pct:+.2}% \
+                  (instrumented {obs_ns:.0}ns vs baseline {base_ns:.0}ns per run)");
+        extra.push(("obs", obj(vec![
+            ("steady_state_allocs_per_iter_obs_on", num(per_iter)),
+            ("baseline_mean_ns", num(base_ns)),
+            ("instrumented_mean_ns", num(obs_ns)),
+            ("overhead_pct", num(overhead_pct)),
+            ("solve_spans_in_8_iter_run", num(solve.count as f64)),
+        ])));
+    }
+
     println!("== scale (ring, ADMM-AP — thread-per-node could not run these) ==");
     let mut scale_fields: Vec<(&str, Json)> = Vec::new();
     for n in [256usize, 1024] {

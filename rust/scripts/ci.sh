@@ -77,6 +77,28 @@ if ! grep -q "impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T>" \
 fi
 echo "transport gate: OK (protocol layers are simulator-blind)"
 
+echo "== obs timing-source grep gate =="
+# The unified telemetry layer (PR 8) holds only if wall-clock reads in
+# the protocol layers go through obs spans — src/obs owns the metric
+# clock. Exceptions: net/transport.rs and cluster/proc.rs are the
+# real-time transports (virtual-clock epoch, stdio routing deadlines)
+# and read the wall clock for transport, not metric, purposes.
+if grep -rn "Instant::now" \
+    src/kernel src/consensus src/coordinator src/cluster src/net src/metrics \
+    --include='*.rs' \
+    | grep -v "^src/net/transport\.rs" \
+    | grep -v "^src/cluster/proc\.rs"; then
+  echo "obs gate: stray Instant::now in a protocol layer (time through crate::obs spans)" >&2
+  exit 1
+fi
+# pattern-rot guard: the one sanctioned metric clock read (Span start)
+# must still match, or the gate is silently vacuous
+if ! grep -q "Instant::now" src/obs/registry.rs; then
+  echo "obs gate: obs span clock read no longer matches the gate pattern (update ci.sh)" >&2
+  exit 1
+fi
+echo "obs gate: OK (protocol layers read time only through obs spans)"
+
 echo "== cross-transport parity (sim vs threads vs processes) =="
 # The zero-fault contract: identical committed iteration counts on all
 # three backends. The proc suite spawns real fadmm-node child processes
@@ -273,6 +295,47 @@ for key in ("dim_3", "dim_32"):
 if failures:
     sys.exit("pool gates: " + "; ".join(failures))
 print("pool gates: OK")
+PY
+  fi
+
+  # ---- obs overhead gate ---------------------------------------------
+  # The instrumented sharded run may not cost more than FADMM_OBS_GATE_PCT
+  # percent (default 2) over the identical obs-off run, and an obs-on
+  # steady-state iteration must stay allocation-free. Both numbers come
+  # from the fresh BENCH_coordinator.json obs cell; the bench itself
+  # asserts the zero-alloc claim at runtime, so the JSON check doubles as
+  # the instrumentation-rot guard. Fast-mode numbers are noisy — raise
+  # the env knob on shared machines, tighten for full-budget runs.
+  echo "== obs overhead gate =="
+  if ! command -v python3 >/dev/null 2>&1; then
+    echo "obs overhead gate: python3 unavailable; skipping"
+  else
+    python3 - "$smoke_dir/BENCH_coordinator.json" \
+              "${FADMM_OBS_GATE_PCT:-2}" <<'PY'
+import json, sys
+
+coord = json.load(open(sys.argv[1]))
+pct = float(sys.argv[2])
+cell = coord.get("obs")
+if not isinstance(cell, dict):
+    sys.exit("obs overhead gate: obs cell missing from fresh BENCH_coordinator.json "
+             "(instrumentation rot?)")
+failures = []
+allocs = cell.get("steady_state_allocs_per_iter_obs_on")
+if allocs != 0:
+    failures.append(f"obs-on steady state allocates ({allocs} per iter, want 0)")
+overhead = cell.get("overhead_pct")
+if overhead is None:
+    failures.append("overhead_pct field missing")
+else:
+    print(f"obs overhead gate: instrumented run {overhead:+.2f}% vs baseline "
+          f"(gate {pct:.0f}%)")
+    if overhead > pct:
+        failures.append(f"obs overhead {overhead:.2f}% > gate {pct:.0f}% "
+                        "(FADMM_OBS_GATE_PCT)")
+if failures:
+    sys.exit("obs overhead gate: " + "; ".join(failures))
+print("obs overhead gate: OK")
 PY
   fi
 

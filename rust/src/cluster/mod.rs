@@ -127,7 +127,7 @@ pub mod inproc;
 pub mod proc;
 
 pub use collective::CollectiveKind;
-pub use node::{NodeReport, NodeRuntime};
+pub use node::{aggregate_obs, NodeReport, NodeRuntime};
 pub use partition::MachinePartition;
 pub use runner::{factory_of, ClusterConfig, ClusterReport, ClusterRunner};
 

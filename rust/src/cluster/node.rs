@@ -75,6 +75,23 @@ pub struct NodeReport {
     pub thetas_flat: Vec<f64>,
     pub dim: usize,
     pub counters: NetCounters,
+    /// This machine's metric registry (phase spans, transport counters,
+    /// trace accounting). The backends merge one per machine into the
+    /// cluster-wide aggregate.
+    pub obs: crate::obs::MetricsRegistry,
+}
+
+/// Merge every machine's registry into one cluster-wide view: counters
+/// and histograms add across machines, gauges are last-wins (the
+/// outcome gauges agree across machines at zero faults — everyone
+/// echoes the same stop flood). Both real-transport backends and the
+/// `repro cluster --obs` report path aggregate through this.
+pub fn aggregate_obs(reports: &[NodeReport]) -> crate::obs::MetricsRegistry {
+    let mut agg = crate::obs::MetricsRegistry::new(false);
+    for rep in reports {
+        agg.merge(&rep.obs);
+    }
+    agg
 }
 
 /// One machine of the cluster protocol over a real transport (see
@@ -102,6 +119,8 @@ pub struct NodeRuntime<S: LocalSolver + Send, T: Transport> {
     stop_round: Option<u64>,
     flood_converged: bool,
     dim: usize,
+    obs: crate::obs::MetricsRegistry,
+    probes: crate::obs::RuntimeProbes,
 }
 
 impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
@@ -159,6 +178,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             StopTracker::new(dim, cfg.tol, cfg.patience, cfg.warmup,
                              cfg.max_iters, cfg.params.eta0)
         });
+        let mut obs = crate::obs::MetricsRegistry::new(
+            cfg.obs || crate::obs::global_spans_enabled(),
+        );
+        let probes = crate::obs::RuntimeProbes::register(&mut obs);
         Ok(NodeRuntime {
             cfg,
             graph: relabeled,
@@ -178,6 +201,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             stop_round: None,
             flood_converged: false,
             dim,
+            obs,
+            probes,
         })
     }
 
@@ -233,7 +258,7 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         self.finish()
     }
 
-    fn finish(self) -> NodeReport {
+    fn finish(mut self) -> NodeReport {
         let target = self.stop_round.unwrap_or(u64::MAX);
         let iterations = match &self.tracker {
             Some(tr) => tr.iterations.max(self.cursor as usize),
@@ -244,6 +269,18 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             .as_ref()
             .map(|tr| tr.converged)
             .unwrap_or(self.flood_converged);
+        // take_trace first: draining stamps `trace_dropped` into the
+        // transport's counters before we snapshot them
+        let trace = self.net.take_trace();
+        let counters = self.net.counters_snapshot();
+        self.obs.set_gauge(self.probes.iterations, iterations as f64);
+        self.obs
+            .set_gauge(self.probes.converged, if converged { 1.0 } else { 0.0 });
+        let machines = self.obs.gauge("fadmm_machines");
+        self.obs.set_gauge(machines, self.part.len() as f64);
+        self.obs.absorb_net(&counters);
+        self.obs.absorb_trace(trace.len(), counters.trace_dropped);
+        crate::obs::global_merge(&self.obs);
         NodeReport {
             machine: self.me,
             iterations,
@@ -253,7 +290,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             span: self.mach.span.clone(),
             thetas_flat: self.mach.snapshot_for(target, self.dim),
             dim: self.dim,
-            counters: self.net.counters_snapshot(),
+            counters,
+            obs: self.obs,
         }
     }
 
@@ -276,11 +314,15 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                         return;
                     }
                     self.resolve_a();
+                    let span = self.obs.span();
                     self.mach.run_phase_a(&self.graph, t, &self.pool,
                                           self.cfg.exec);
                     self.mach.snapshot(t);
+                    self.obs.end(self.probes.solve, span);
                     self.mach.phase = MPhase::Reduce;
+                    let io = self.obs.span();
                     self.send_boundary_theta(t + 1);
+                    self.obs.end(self.probes.boundary_io, io);
                 }
                 MPhase::Reduce => {
                     if !self.ready_b(force) {
@@ -289,8 +331,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                     }
                     self.resolve_b();
                     let t = self.mach.t;
+                    let span = self.obs.span();
                     self.mach.run_phase_b(&self.graph, t, &self.pool,
                                           self.cfg.exec);
+                    self.obs.end(self.probes.reduce, span);
                     self.mach.phase = MPhase::FoldWait;
                     self.tree_deposit(t);
                     if self.stopped {
@@ -305,8 +349,12 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                     }
                     let globals = verdict.unwrap_or(self.mach.latest_globals);
                     self.refresh_links();
+                    let span = self.obs.span();
                     self.mach.run_phase_c(&self.graph, t, globals);
+                    self.obs.end(self.probes.observe, span);
+                    let io = self.obs.span();
                     self.send_boundary_eta(t + 1);
+                    self.obs.end(self.probes.boundary_io, io);
                     self.mach.t += 1;
                     self.mach.phase = if self.mach.t >= self.cfg.max_iters as u64 {
                         MPhase::Done
@@ -796,6 +844,7 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         if map.values().flatten().all(|p| p.node_count == 0) {
             return; // nothing to fold: every contributor died
         }
+        let span = self.obs.span();
         let Some(tracker) = self.tracker.as_mut() else { return };
         let g = tracker.round_partials(map.values().flat_map(|parts| parts.iter()));
         let stop = tracker.commit(r as usize, IterStats {
@@ -810,6 +859,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         });
         self.cursor = r + 1;
         self.net.record(TraceKind::Fold { round: r });
+        self.obs.end(self.probes.collective_fold, span);
+        self.obs.inc(self.probes.rounds, 1);
         self.store_verdict(r, g.global_primal, g.global_dual);
         if stop {
             // `commit` also fires on a spent budget — report what the

@@ -15,6 +15,7 @@
 //! | node → node (via driver) | `{"src":m,"dst":p,"body":…}` | routed protocol message; `body` is the [`codec`] payload encoding |
 //! | driver → node | `{"ctrl":"leave","machine":m}` | peer `m` is gone (the driver's death notice after a kill) |
 //! | driver → node | `{"ctrl":"shutdown"}` | drain and exit |
+//! | node → driver | `{"metrics":{"machine":m,"registry":…}}` | this machine's [`crate::obs::MetricsRegistry`] snapshot, emitted right before `done`; the driver's [`ProcCluster::aggregate_obs`] merges them |
 //! | node → driver (last) | `{"done":{…}}` | final report; see [`ProcDone`] |
 //!
 //! The driver ([`ProcCluster`]) is a star router, not a participant: it
@@ -99,6 +100,9 @@ pub struct ProcInit {
     pub collective_timeout: Ticks,
     pub fallback_after: u32,
     pub pipeline: u64,
+    /// enable phase spans in the node (absent on the wire = `false`, so
+    /// old drivers and old nodes interoperate)
+    pub obs: bool,
 }
 
 impl ProcInit {
@@ -122,6 +126,7 @@ impl ProcInit {
             ("collective_timeout", num(self.collective_timeout as f64)),
             ("fallback_after", num(self.fallback_after as f64)),
             ("pipeline", num(self.pipeline as f64)),
+            ("obs", Json::Bool(self.obs)),
         ]))])
     }
 
@@ -154,6 +159,7 @@ impl ProcInit {
             collective_timeout: req_u64(b, "collective_timeout")?,
             fallback_after: req_u64(b, "fallback_after")? as u32,
             pipeline: req_u64(b, "pipeline")?,
+            obs: b.get("obs").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 
@@ -173,6 +179,7 @@ impl ProcInit {
             fallback_after: self.fallback_after,
             pipeline: self.pipeline,
             tracing: false,
+            obs: self.obs,
             ..Default::default()
         }
     }
@@ -490,6 +497,13 @@ pub fn node_main() -> i32 {
     };
     spawn_stdin_reader(init.machine, tx);
     let report = rt.run();
+    // metric snapshot first, done line last: the driver treats `done`
+    // as this machine's terminal line
+    let metrics = obj(vec![("metrics", obj(vec![
+        ("machine", num(report.machine as f64)),
+        ("registry", report.obs.to_json()),
+    ]))]);
+    println!("{}", metrics.to_string());
     let done = ProcDone {
         machine: report.machine,
         iterations: report.iterations,
@@ -515,6 +529,9 @@ pub struct ProcCluster {
     from_children: Receiver<(usize, String)>,
     alive: Vec<bool>,
     pub done: Vec<Option<ProcDone>>,
+    /// per-machine metric snapshots (the `metrics` wire line); a killed
+    /// machine's slot stays `None`
+    pub metrics: Vec<Option<crate::obs::MetricsRegistry>>,
     /// routed (node → node) lines forwarded so far — tests use it as a
     /// progress proxy for "mid-run"
     pub routed: u64,
@@ -561,6 +578,7 @@ impl ProcCluster {
             from_children,
             alive: vec![true; n],
             done: vec![None; n],
+            metrics: vec![None; n],
             routed: 0,
         })
     }
@@ -647,6 +665,17 @@ impl ProcCluster {
             }
             return;
         }
+        if let Some(m) = v.get("metrics") {
+            match m.req("registry")
+                .and_then(crate::obs::MetricsRegistry::from_json)
+            {
+                Ok(reg) => self.metrics[from] = Some(reg),
+                Err(e) => {
+                    eprintln!("proc driver: bad metrics line from {from}: {e}")
+                }
+            }
+            return;
+        }
         let Some(dst) = v.get("dst").and_then(|d| d.as_usize()) else {
             eprintln!("proc driver: machine {from} wrote a routable line \
                        with no dst");
@@ -656,6 +685,18 @@ impl ProcCluster {
             self.write_line(dst, line);
             self.routed += 1;
         }
+    }
+
+    /// Merge every reporting machine's metric snapshot into one
+    /// cluster-wide registry — the process-transport twin of
+    /// [`super::node::aggregate_obs`]. Counters and histograms add
+    /// across machines; killed machines simply contribute nothing.
+    pub fn aggregate_obs(&self) -> crate::obs::MetricsRegistry {
+        let mut agg = crate::obs::MetricsRegistry::new(false);
+        for reg in self.metrics.iter().flatten() {
+            agg.merge(reg);
+        }
+        agg
     }
 
     /// Send every survivor a shutdown ctrl, close pipes and reap.
@@ -700,6 +741,7 @@ mod tests {
             collective_timeout: 5_000,
             fallback_after: 3,
             pipeline: 2,
+            obs: false,
         }
     }
 

@@ -84,6 +84,12 @@ pub struct ClusterConfig {
     /// root always serializes to its successor).
     pub handoff: Option<(u64, usize)>,
     pub tracing: bool,
+    /// Flight-recorder capacity when tracing (0 = keep nothing, count
+    /// every event as dropped).
+    pub trace_capacity: usize,
+    /// enable phase-span timing ([`crate::obs`]); counters/gauges are
+    /// always recorded
+    pub obs: bool,
     /// How per-phase shard jobs execute: the persistent [`PhasePool`]
     /// (default; also enables interior/boundary phase-A overlap while
     /// boundary batches are in flight) or seed-style scoped spawns (the
@@ -115,6 +121,8 @@ impl Default for ClusterConfig {
             activity: None,
             handoff: None,
             tracing: true,
+            trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            obs: false,
             exec: ExecMode::Pool,
         }
     }
@@ -136,6 +144,9 @@ pub struct ClusterReport {
     pub live_machines: Vec<bool>,
     /// Resolved per-machine worker-pool target.
     pub workers_per_machine: usize,
+    /// unified telemetry ([`crate::obs`]): per-phase histograms (when
+    /// `cfg.obs`), absorbed net counters and trace retention stats
+    pub obs: crate::obs::MetricsRegistry,
 }
 
 /// Designated-recorder state: the shared [`StopTracker`] (checker +
@@ -203,6 +214,10 @@ pub struct ClusterRunner<S: LocalSolver + Send, T: Transport = NetSim> {
     dim: usize,
     n_total: usize,
     workers_used: usize,
+    /// unified telemetry: registered at construction, recorded via
+    /// `Copy` ids on the hot path (clock reads only when `cfg.obs`)
+    obs: crate::obs::MetricsRegistry,
+    probes: crate::obs::RuntimeProbes,
 }
 
 impl<S: LocalSolver + Send> ClusterRunner<S, NetSim> {
@@ -280,13 +295,22 @@ impl<S: LocalSolver + Send> ClusterRunner<S, NetSim> {
             }
         };
 
-        let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        let mut sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        if cfg.tracing {
+            sim.set_trace_capacity(cfg.trace_capacity);
+        }
         let initial_root =
             (0..mcount).find(|&m| ctrl.view().node_live(m)).unwrap_or(0);
         let pool = PhasePool::new(
             machines.iter().map(|mm| mm.shards.len()).max().unwrap_or(1),
         );
+        let mut obs = crate::obs::MetricsRegistry::new(
+            cfg.obs || crate::obs::global_spans_enabled(),
+        );
+        let probes = crate::obs::RuntimeProbes::register(&mut obs);
         Ok(ClusterRunner {
+            obs,
+            probes,
             overlap: (0..mcount).map(|_| None).collect(),
             pool,
             fold: RootState {
@@ -510,17 +534,30 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         }
         let live_machines =
             (0..self.machines.len()).map(|m| self.ctrl.view().node_live(m)).collect();
+        let trace = self.sim.take_trace();
+        let counters = self.sim.counters_snapshot();
+        self.obs.set_gauge(self.probes.iterations, self.fold.cursor as f64);
+        self.obs.set_gauge(self.probes.converged,
+                           if self.fold.tracker.converged { 1.0 } else { 0.0 });
+        let vt = self.obs.gauge("fadmm_virtual_time");
+        self.obs.set_gauge(vt, self.sim.now() as f64);
+        let mg = self.obs.gauge("fadmm_machines");
+        self.obs.set_gauge(mg, self.machines.len() as f64);
+        self.obs.absorb_net(&counters);
+        self.obs.absorb_trace(trace.len(), counters.trace_dropped);
+        crate::obs::global_merge(&self.obs);
         ClusterReport {
             iterations: self.fold.cursor as usize,
             converged: self.fold.tracker.converged,
             recorder: self.fold.tracker.take_recorder(),
             thetas,
             virtual_time: self.sim.now(),
-            counters: self.sim.counters_snapshot(),
-            trace: self.sim.take_trace(),
+            counters,
+            trace,
             machines: self.machines.len(),
             live_machines,
             workers_per_machine: self.workers_used,
+            obs: self.obs,
         }
     }
 
@@ -548,6 +585,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                     }
                     let overlapped = self.join_overlap(m) == Some(t);
                     self.resolve_a(m);
+                    let span = self.obs.span();
                     {
                         let graph = &self.graph;
                         let pool = &self.pool;
@@ -561,7 +599,10 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                         mach.snapshot(t);
                         mach.phase = MPhase::Reduce;
                     }
+                    self.obs.end(self.probes.solve, span);
+                    let span = self.obs.span();
                     self.send_boundary_theta(m, t + 1);
+                    self.obs.end(self.probes.boundary_io, span);
                 }
                 MPhase::Reduce => {
                     if !self.ready_b(m, force) {
@@ -570,12 +611,14 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                     }
                     self.resolve_b(m);
                     let t = self.machines[m].t;
+                    let span = self.obs.span();
                     {
                         let graph = &self.graph;
                         let pool = &self.pool;
                         let exec = self.cfg.exec;
                         self.machines[m].run_phase_b(graph, t, pool, exec);
                     }
+                    self.obs.end(self.probes.reduce, span);
                     self.machines[m].phase = MPhase::FoldWait;
                     self.collective_ready(m, t);
                     if self.stopped {
@@ -591,8 +634,12 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                     let globals =
                         verdict.unwrap_or(self.machines[m].latest_globals);
                     self.refresh_links(m);
+                    let span = self.obs.span();
                     self.machines[m].run_phase_c(&self.graph, t, globals);
+                    self.obs.end(self.probes.observe, span);
+                    let span = self.obs.span();
                     self.send_boundary_eta(m, t + 1);
+                    self.obs.end(self.probes.boundary_io, span);
                     self.observe_machine_etas(m);
                     if self.stopped {
                         return;
@@ -1372,6 +1419,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         if entries.values().flatten().all(|p| p.node_count == 0) {
             return;
         }
+        let span = self.obs.span();
         let g = self
             .fold
             .tracker
@@ -1389,6 +1437,8 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         });
         self.fold.cursor = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
+        self.obs.end(self.probes.collective_fold, span);
+        self.obs.inc(self.probes.rounds, 1);
         self.store_verdict(root, r, g.global_primal, g.global_dual);
 
         if stop {
@@ -1727,6 +1777,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
     /// estimated live count (replacing the static full-graph node
     /// count, which overcounted after churn).
     fn gossip_commit(&mut self, round: u64, est: &super::collective::GossipEstimate) {
+        let span = self.obs.span();
         let n_hat = if est.n_live > 0.5 { est.n_live.round() } else { 1.0 };
         let objective = est.avg_f * n_hat;
         let app_error = self.app_metric_value(round);
@@ -1742,6 +1793,8 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         });
         self.fold.cursor = round + 1;
         self.sim.record(TraceKind::Fold { round });
+        self.obs.end(self.probes.collective_fold, span);
+        self.obs.inc(self.probes.rounds, 1);
         if stop {
             self.stopped = true;
             self.stop_round = Some(round);

@@ -207,6 +207,65 @@ fn same_seed_identical_trace_both_collectives() {
     }
 }
 
+#[test]
+fn obs_instrumentation_is_bit_transparent() {
+    // the obs hard contract: turning instrumentation on may not change a
+    // single protocol bit — same θ, same trace, same counters, same
+    // recorded curves — even under faults and with tracing live
+    let run = |obs: bool| {
+        let plan = FaultPlan {
+            link: LinkModel { base: 2, jitter: 5, loss: 0.15, dup: 0.05 },
+            partitions: vec![Partition { start: 40, end: 160, group: vec![3] }],
+            ..FaultPlan::none()
+        };
+        ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig {
+                scheme: SchemeKind::Nap,
+                tol: 0.0,
+                max_iters: 60,
+                seed: 3,
+                machines: 4,
+                workers: 1,
+                collective: CollectiveKind::Tree,
+                max_staleness: 1,
+                silence_timeout: 8,
+                collective_timeout: 16,
+                fallback_after: 2,
+                tracing: true,
+                obs,
+                ..Default::default()
+            },
+            plan,
+            quad_factory(12, 2, 21),
+        )
+        .unwrap()
+        .run()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.thetas, on.thetas, "obs must not perturb θ");
+    assert_eq!(off.iterations, on.iterations);
+    assert_eq!(off.converged, on.converged);
+    assert_eq!(off.virtual_time, on.virtual_time);
+    assert_eq!(off.counters, on.counters);
+    assert_eq!(off.trace, on.trace, "obs must not perturb the event trace");
+    for (a, b) in off.recorder.stats.iter().zip(on.recorder.stats.iter()) {
+        assert_stats_bit_equal(a, b);
+    }
+    // and the instrumented run actually measured something
+    assert!(on.obs.hist_by_name("fadmm_phase_solve_ns").unwrap().count > 0);
+    assert!(on.obs.counter_by_name("fadmm_rounds_total").unwrap() > 0);
+    // counters flow into the registry identically on both runs — only
+    // the wall-clock spans are gated on `obs`
+    assert_eq!(
+        off.obs.counter_by_name("fadmm_net_sent_total"),
+        on.obs.counter_by_name("fadmm_net_sent_total"),
+    );
+    assert_eq!(off.obs.counter_by_name("fadmm_trace_events_total"),
+               on.obs.counter_by_name("fadmm_trace_events_total"));
+}
+
 // -- fault scenarios ----------------------------------------------------------
 
 #[test]

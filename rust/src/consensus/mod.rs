@@ -48,6 +48,7 @@ use crate::graph::{Graph, NodeId};
 use crate::kernel::{AppMetricHook, DualPolicy, FlatRound, KernelScratch,
                     NodeKernel, SlotView, StopTracker};
 use crate::metrics::{IterStats, Recorder};
+use crate::obs::{MetricsRegistry, RuntimeProbes};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
@@ -161,6 +162,9 @@ pub struct EngineConfig {
     pub warmup: usize,
     pub max_iters: usize,
     pub seed: u64,
+    /// enable phase-span timing ([`crate::obs`]); counters/gauges are
+    /// always recorded
+    pub obs: bool,
 }
 
 impl Default for EngineConfig {
@@ -173,6 +177,7 @@ impl Default for EngineConfig {
             warmup: 5,
             max_iters: 1000,
             seed: 0,
+            obs: false,
         }
     }
 }
@@ -185,6 +190,9 @@ pub struct RunReport {
     pub recorder: Recorder,
     /// final parameters per node
     pub thetas: Vec<Vec<f64>>,
+    /// unified telemetry ([`crate::obs`]); phase-span histograms only
+    /// when `cfg.obs` is set
+    pub obs: MetricsRegistry,
 }
 
 /// The engine's [`SlotView`]: neighbour θ is an owned `Vec` indexed by
@@ -238,6 +246,10 @@ pub struct Engine<S: LocalSolver> {
     kscratch: KernelScratch,
     /// prefetched incoming η_{j→i} per slot (phase B)
     scratch_eta_in: Vec<f64>,
+    /// unified telemetry: registered once at construction, recorded via
+    /// `Copy` ids in `step` (zero-alloc; clock reads only when `cfg.obs`)
+    obs: MetricsRegistry,
+    probes: RuntimeProbes,
 }
 
 impl<S: LocalSolver> Engine<S> {
@@ -270,7 +282,12 @@ impl<S: LocalSolver> Engine<S> {
             })
             .collect();
         let max_deg = (0..n).map(|i| graph.degree(i)).max().unwrap_or(0);
+        let mut obs =
+            MetricsRegistry::new(cfg.obs || crate::obs::global_spans_enabled());
+        let probes = RuntimeProbes::register(&mut obs);
         Engine {
+            obs,
+            probes,
             rev_slot,
             kernels,
             flat: FlatRound::new(dim),
@@ -319,11 +336,20 @@ impl<S: LocalSolver> Engine<S> {
                 break;
             }
         }
+        self.obs.set_gauge(self.probes.iterations, self.tracker.iterations as f64);
+        self.obs.set_gauge(self.probes.converged,
+                           if self.tracker.converged { 1.0 } else { 0.0 });
+        // the sink adds whole registries; the CLI builds one engine per
+        // run, so the engine's cumulative-across-runs registry is a
+        // single run's worth of data on that path
+        crate::obs::global_merge(&self.obs);
         RunReport {
             iterations: self.tracker.iterations,
             converged: self.tracker.converged,
             recorder: self.tracker.take_recorder(),
             thetas: self.thetas.clone(),
+            // clone, not take: ids stay valid for repeated runs
+            obs: self.obs.clone(),
         }
     }
 
@@ -343,6 +369,7 @@ impl<S: LocalSolver> Engine<S> {
 
         // ---- phase A: local solves (Jacobi: all nodes see iteration-t
         // neighbours); θ^{t+1} lands in the swap buffer ---------------------
+        let span = self.obs.span();
         for i in 0..n {
             let mut view = EngineSlots {
                 nbrs: self.graph.neighbors(i),
@@ -353,8 +380,10 @@ impl<S: LocalSolver> Engine<S> {
                 &mut self.solvers[i], &self.thetas[i], self.graph.degree(i),
                 &mut view, &mut self.kscratch, &mut self.scratch_new_thetas[i]);
         }
+        self.obs.end(self.probes.solve, span);
 
         // ---- broadcast -----------------------------------------------------
+        let span = self.obs.span();
         std::mem::swap(&mut self.thetas, &mut self.scratch_new_thetas);
 
         // ---- phase B: symmetrized dual step + residuals + objectives -------
@@ -376,10 +405,12 @@ impl<S: LocalSolver> Engine<S> {
                 &mut self.solvers[i], &self.thetas[i], deg, &mut view,
                 DualPolicy::exact(), &mut self.kscratch);
         }
+        self.obs.end(self.probes.reduce, span);
 
         // ---- flat global fold (node order — the oracle arithmetic the
         // async runtime diffs against); η stats cover the η^t used by this
         // iteration's solves, *before* phase C updates them ------------------
+        let span = self.obs.span();
         self.flat.begin();
         for kn in &self.kernels {
             self.flat.add_node(kn.f_self, kn.primal, kn.dual, &kn.etas);
@@ -397,6 +428,8 @@ impl<S: LocalSolver> Engine<S> {
         for i in 0..n {
             self.kernels[i].observe(t, (g.global_primal, g.global_dual), None);
         }
+        self.obs.end(self.probes.observe, span);
+        self.obs.inc(self.probes.rounds, 1);
 
         // ---- stats -----------------------------------------------------------
         IterStats {

@@ -56,6 +56,9 @@ pub struct ShardedConfig {
     /// Worker execution: persistent pool (default) or the scoped-spawn
     /// baseline. Bit-transparent — see the module docs.
     pub exec: ExecMode,
+    /// enable phase-span timing ([`crate::obs`]); counters/gauges are
+    /// always recorded
+    pub obs: bool,
 }
 
 /// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
@@ -75,6 +78,7 @@ impl Default for ShardedConfig {
             workers: 0,
             relabel: Relabel::default(),
             exec: ExecMode::default(),
+            obs: false,
         }
     }
 }
@@ -89,6 +93,10 @@ pub struct RunnerReport {
     /// resolved worker-pool size (reduction grouping is deterministic
     /// given this value; record it to reproduce a run exactly)
     pub workers: usize,
+    /// unified telemetry ([`crate::obs`]): driver-side dispatch span,
+    /// spawn counters and outcome gauges (worker internals stay
+    /// untouched to preserve bit-parity)
+    pub obs: crate::obs::MetricsRegistry,
 }
 
 /// Backward-compatible name for [`RunnerReport`].
@@ -229,6 +237,19 @@ impl ShardedRunner {
             cfg: self.cfg,
         };
 
+        // per-run registry (the runner is `&self`-reusable, so telemetry
+        // cannot live on the runner itself); spans cover the driver side
+        // only — instrumenting `worker_main` would need a shared-state
+        // registry inside the bit-parity-pinned shard program
+        let mut obs = crate::obs::MetricsRegistry::new(
+            self.cfg.obs || crate::obs::global_spans_enabled(),
+        );
+        let probes = crate::obs::RuntimeProbes::register(&mut obs);
+        let spawn_counter = obs.counter("fadmm_threads_spawned_total");
+        let workers_gauge = obs.gauge("fadmm_workers");
+        let spawned_before = crate::pool::threads_spawned();
+        let dispatch_span = obs.span();
+
         let mut lead_slot = Some(LeadState::new(&self.cfg, dim, metric));
         let mut results: Vec<std::result::Result<Option<LeadOutcome>, WorkerError>> =
             Vec::with_capacity(workers);
@@ -308,6 +329,10 @@ impl ShardedRunner {
             }
         }
 
+        obs.end(probes.pool_dispatch, dispatch_span);
+        obs.inc(spawn_counter, crate::pool::threads_spawned() - spawned_before);
+        obs.set_gauge(workers_gauge, workers as f64);
+
         let mut outcome: Option<LeadOutcome> = None;
         let mut panic_msg: Option<String> = None;
         let mut poisoned = false;
@@ -340,12 +365,17 @@ impl ShardedRunner {
             // Safety: every worker has been joined; no concurrent access.
             thetas[orig].copy_from_slice(unsafe { arena.theta(parity, i) });
         }
+        obs.inc(probes.rounds, lead.iterations as u64);
+        obs.set_gauge(probes.iterations, lead.iterations as f64);
+        obs.set_gauge(probes.converged, if lead.converged { 1.0 } else { 0.0 });
+        crate::obs::global_merge(&obs);
         Ok(RunnerReport {
             iterations: lead.iterations,
             converged: lead.converged,
             recorder: lead.recorder,
             thetas,
             workers,
+            obs,
         })
     }
 }

@@ -146,6 +146,7 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
     }
 
     let mut rows = Vec::new();
+    let mut counter_rows = Vec::new();
     for &machines in &cfg.machines_list {
         for (scenario_name, plan) in scenarios {
             let faulty = plan.link.loss > 0.0
@@ -199,6 +200,19 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
                         dropped.push(report.counters.dropped_total() as f64);
                         ctimeouts.push(report.counters.collective_timeouts as f64);
                         gticks.push(report.counters.gossip_ticks as f64);
+                        // full counter surface, one row per run, through
+                        // the single NetCounters::summary_json path
+                        {
+                            use crate::util::json::{num, obj, s};
+                            counter_rows.push(obj(vec![
+                                ("machines", num(machines as f64)),
+                                ("collective", s(collective.name())),
+                                ("scheme", s(scheme.name())),
+                                ("scenario", s(scenario_name)),
+                                ("seed", num(seed as f64)),
+                                ("counters", report.counters.summary_json()),
+                            ]));
+                        }
                         if report.converged {
                             converged += 1;
                         }
@@ -248,6 +262,12 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
         ])?;
     }
     w.finish()?;
+    let counters_path = out_dir.join("cluster_counters.json");
+    std::fs::write(&counters_path,
+                   crate::util::json::arr(counter_rows).to_string())
+        .map_err(|e| crate::error::Error::io(
+            format!("writing {}", counters_path.display()), e,
+        ))?;
     Ok(rows)
 }
 
@@ -471,6 +491,7 @@ mod tests {
         // machines × scenarios × collectives × schemes
         assert_eq!(rows.len(), 2 * 2 * 2);
         assert!(dir.join("cluster_scenarios.csv").exists());
+        assert!(dir.join("cluster_counters.json").exists());
         for r in &rows {
             assert!(r.median_rounds > 0.0, "{:?}", r);
             assert!(r.median_oracle_rounds > 0.0, "{:?}", r);

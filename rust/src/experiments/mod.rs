@@ -14,6 +14,39 @@
 //! * [`cluster_scenarios`] — machines × loss × collective × scheme matrix
 //!   over the hybrid cluster runtime, reporting extra rounds vs the
 //!   oracle fold (ours; [`crate::cluster`]).
+//!
+//! ## How to read a run report (`repro <cmd> --obs report.json`)
+//!
+//! Any subcommand accepts `--obs FILE`; the launcher arms the global
+//! telemetry sink ([`crate::obs`]) and, after the experiment finishes,
+//! writes the merged registry of every run as JSON to `FILE` and
+//! Prometheus text to `FILE.prom`. Reading the JSON:
+//!
+//! * `counters` — monotone totals, *summed across every run in the
+//!   sweep*. `fadmm_rounds_total` is the committed-iteration total;
+//!   `fadmm_net_*_total` mirror [`crate::metrics::NetCounters`]
+//!   (`sent`/`delivered`/`dropped_*` tell you the fault load);
+//!   `fadmm_trace_events_total` vs `fadmm_trace_dropped_total` say how
+//!   much of the flight recorder survived its capacity bound.
+//! * `gauges` — last-run snapshots (`fadmm_iterations`,
+//!   `fadmm_converged`, `fadmm_virtual_time`, `fadmm_machines`,
+//!   `fadmm_workers`): useful for single runs, last-writer-wins in
+//!   sweeps.
+//! * `histograms` — power-of-two-bucketed wall-clock nanoseconds per
+//!   phase (`fadmm_phase_{solve,reduce,observe}_ns`,
+//!   `fadmm_boundary_io_ns`, `fadmm_collective_fold_ns`,
+//!   `fadmm_pool_dispatch_ns`). `count` is the number of spans, `sum`
+//!   total ns; bucket `i` holds durations in `[2^(i-1), 2^i)` ns. A
+//!   solve/fold `sum` ratio far from the sharded baseline is the first
+//!   place to look when a distributed run is slow.
+//!
+//! Wall-clock spans make the report non-deterministic across hosts;
+//! every counter is deterministic for a fixed seed (instrumentation is
+//! bit-transparent — the cluster parity tests pin that). The fault
+//! sweeps additionally write per-run counter rows to
+//! `net_counters.json` / `cluster_counters.json` in `--out`, keyed by
+//! scenario cell, via the single
+//! [`crate::metrics::NetCounters::summary_json`] path.
 
 pub mod ablations;
 pub mod caltech;

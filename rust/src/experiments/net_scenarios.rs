@@ -234,7 +234,9 @@ pub fn run_plan(cfg: &NetScenarioConfig, plan: FaultPlan, out_dir: &Path)
 
 fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
                  out_dir: &Path) -> Result<Vec<NetScenarioRow>> {
+    use crate::util::json::{arr, num, obj, s};
     let mut rows = Vec::new();
+    let mut counter_rows = Vec::new();
     for scenario in scenarios {
         let churn = !scenario.plan.churn.is_empty();
         for &scheme in &cfg.schemes {
@@ -270,6 +272,14 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
                     .unwrap_or(f64::NAN));
                 dropped.push(report.counters.dropped_total() as f64);
                 stale.push(report.counters.stale_reads as f64);
+                // the full counter surface, one row per run, through the
+                // single NetCounters::summary_json path
+                counter_rows.push(obj(vec![
+                    ("scenario", s(scenario.name)),
+                    ("scheme", s(scheme.name())),
+                    ("seed", num(seed as f64)),
+                    ("counters", report.counters.summary_json()),
+                ]));
                 if report.converged {
                     converged += 1;
                 }
@@ -305,6 +315,12 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
         ])?;
     }
     w.finish()?;
+    let counters_path = out_dir.join("net_counters.json");
+    std::fs::write(&counters_path, arr(counter_rows).to_string()).map_err(
+        |e| crate::error::Error::io(
+            format!("writing {}", counters_path.display()), e,
+        ),
+    )?;
     Ok(rows)
 }
 
@@ -338,6 +354,12 @@ mod tests {
         let rows = run(&cfg, &dir).unwrap();
         assert_eq!(rows.len(), scenario_matrix(6).len() * 2);
         assert!(dir.join("net_scenarios.csv").exists());
+        // the uniform counter surface: one JSON row per run, parseable
+        let raw = std::fs::read_to_string(dir.join("net_counters.json")).unwrap();
+        let v = crate::util::json::Json::parse(&raw).unwrap();
+        let rows_json = v.as_arr().unwrap();
+        assert_eq!(rows_json.len(), rows.len()); // seeds == 1
+        assert!(rows_json[0].get("counters").and_then(|c| c.get("sent")).is_some());
         for r in &rows {
             assert!(r.median_rounds > 0.0, "{}/{:?}", r.scenario, r.scheme);
             // the stale3 cells are the scripted over-budget demonstration;

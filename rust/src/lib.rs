@@ -36,6 +36,7 @@ pub mod kernel;
 pub mod linalg;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod penalty;
 pub mod pool;
 pub mod runtime;

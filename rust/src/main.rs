@@ -59,6 +59,19 @@ SUBCOMMANDS
   check-artifacts   validate manifest and compile one artifact set
   help        this text
 
+Every subcommand also accepts
+  --obs FILE  write the run's merged telemetry registry (phase spans,
+              transport counters, trace accounting — see the obs module)
+              as JSON to FILE and Prometheus text to FILE.prom
+
+cluster additionally accepts
+  --transport sim|threads|procs   (default sim)
+              sim runs the scenario matrix on the simulated driver;
+              threads/procs run ONE configuration (--nodes, --machines M,
+              first --schemes entry, --max-iters, ring topology) over the
+              in-process thread mesh or real fadmm-node child processes
+              and print the per-machine reports
+
 All experiments are seeded and deterministic; CSVs land in --out.
 ";
 
@@ -72,7 +85,13 @@ fn main() {
 
 fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
     let args = CliArgs::parse(raw, &["describe", "verbose", "dppca"])?;
-    match args.subcommand.as_str() {
+    // --obs FILE: arm the global telemetry sink before anything runs;
+    // every runtime merges its finished registry into it
+    let obs_path = args.get("obs").map(PathBuf::from);
+    if obs_path.is_some() {
+        fadmm::obs::enable_global();
+    }
+    let result = match args.subcommand.as_str() {
         "" | "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -88,7 +107,28 @@ fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
         other => Err(fadmm::Error::Config(format!(
             "unknown subcommand '{other}' (try `repro help`)"
         ))),
+    };
+    if result.is_ok() {
+        if let Some(path) = obs_path {
+            write_obs(&path)?;
+        }
     }
+    result
+}
+
+/// Drain the global telemetry sink and write the JSON + Prometheus
+/// report files next to each other.
+fn write_obs(path: &std::path::Path) -> fadmm::Result<()> {
+    let reg = fadmm::obs::take_global().unwrap_or_default();
+    std::fs::write(path, reg.to_json().to_string()).map_err(|e| {
+        fadmm::Error::io(format!("writing obs report {}", path.display()), e)
+    })?;
+    let prom = PathBuf::from(format!("{}.prom", path.display()));
+    std::fs::write(&prom, reg.to_prometheus()).map_err(|e| {
+        fadmm::Error::io(format!("writing obs report {}", prom.display()), e)
+    })?;
+    eprintln!("obs: wrote {} and {}", path.display(), prom.display());
+    Ok(())
 }
 
 fn out_dir(args: &CliArgs) -> PathBuf {
@@ -230,6 +270,16 @@ where
 }
 
 fn cmd_cluster(args: &CliArgs) -> fadmm::Result<()> {
+    match args.get_or("transport", "sim").as_str() {
+        "sim" => {}
+        "threads" => return cmd_cluster_threads(args),
+        "procs" => return cmd_cluster_procs(args),
+        other => {
+            return Err(fadmm::Error::Config(format!(
+                "--transport: '{other}' is not sim|threads|procs"
+            )))
+        }
+    }
     if args.has_flag("dppca") {
         // the D-PPCA cell: 4 machines, 10% loss, subspace-angle hook vs
         // the single-box oracle (ROADMAP open item)
@@ -275,6 +325,134 @@ fn cmd_cluster(args: &CliArgs) -> fadmm::Result<()> {
         }
     };
     cluster_scenarios::print_summary(&rows);
+    Ok(())
+}
+
+/// The single cluster configuration the real-transport paths run: ring
+/// topology, the quadratic consensus problem keyed by `(nodes, 2, 41)`,
+/// first scheme of the list, generous wall-clock timeouts.
+fn real_transport_shape(args: &CliArgs)
+    -> fadmm::Result<(usize, usize, fadmm::penalty::SchemeKind, usize, f64)> {
+    let nodes = args.get_usize("nodes", 24)?;
+    let machines = parse_list(args.get("machines"), vec![3],
+                              str::parse::<usize>)?
+        .first()
+        .copied()
+        .unwrap_or(3);
+    let scheme = args
+        .schemes()?
+        .first()
+        .copied()
+        .unwrap_or(fadmm::penalty::SchemeKind::Fixed);
+    let max_iters = args.get_usize("max-iters", 60)?;
+    let tol = args.get_f64("tol", 1e-4)?;
+    Ok((nodes, machines, scheme, max_iters, tol))
+}
+
+fn print_node_report(machine: usize, span: (usize, usize), iterations: usize,
+                     converged: bool, holder: bool) {
+    println!(
+        "machine={machine} span={}..{} iterations={iterations} \
+         converged={converged} holder={holder}",
+        span.0, span.1
+    );
+}
+
+fn cmd_cluster_threads(args: &CliArgs) -> fadmm::Result<()> {
+    let (nodes, machines, scheme, max_iters, tol) = real_transport_shape(args)?;
+    eprintln!("cluster --transport threads: {nodes} nodes on {machines} \
+               machines, scheme {}", scheme.name());
+    let cfg = fadmm::cluster::ClusterConfig {
+        scheme,
+        tol,
+        max_iters,
+        seed: args.get_usize("seed", 11)? as u64,
+        machines,
+        workers: 1,
+        collective: CollectiveKind::Tree,
+        silence_timeout: 5_000,
+        collective_timeout: 5_000,
+        obs: fadmm::obs::global_spans_enabled(),
+        ..Default::default()
+    };
+    let graph = fadmm::graph::Topology::Ring.build(nodes)?;
+    let reports = fadmm::cluster::inproc::run_inproc(
+        &graph, cfg, common::quad_problem_factory(nodes, 2, 41),
+    )?;
+    for rep in &reports {
+        print_node_report(rep.machine, (rep.span.start, rep.span.end),
+                          rep.iterations, rep.converged, rep.is_holder);
+    }
+    let agg = fadmm::cluster::aggregate_obs(&reports);
+    println!(
+        "cluster rounds={} sent={} delivered={}",
+        agg.counter_by_name("fadmm_rounds_total").unwrap_or(0),
+        agg.counter_by_name("fadmm_net_sent_total").unwrap_or(0),
+        agg.counter_by_name("fadmm_net_delivered_total").unwrap_or(0),
+    );
+    Ok(())
+}
+
+fn cmd_cluster_procs(args: &CliArgs) -> fadmm::Result<()> {
+    use fadmm::cluster::proc::{ProcCluster, ProcInit};
+    let (nodes, machines, scheme, max_iters, tol) = real_transport_shape(args)?;
+    let exe = std::env::current_exe()
+        .map_err(|e| fadmm::Error::io("locating the repro binary", e))?;
+    let bin = exe.with_file_name("fadmm-node");
+    let bin = bin.to_str().ok_or_else(|| {
+        fadmm::Error::Config("non-UTF-8 path to fadmm-node".into())
+    })?;
+    eprintln!("cluster --transport procs: {nodes} nodes on {machines} \
+               fadmm-node processes ({bin}), scheme {}", scheme.name());
+    let inits: Vec<ProcInit> = (0..machines)
+        .map(|m| ProcInit {
+            machine: m,
+            machines,
+            nodes,
+            dim: 2,
+            problem_seed: 41,
+            topology: fadmm::graph::Topology::Ring,
+            scheme,
+            tol,
+            patience: 3,
+            warmup: 5,
+            max_iters,
+            seed: 11,
+            workers: 1,
+            max_staleness: 0,
+            silence_timeout: 5_000,
+            collective_timeout: 5_000,
+            fallback_after: 3,
+            pipeline: 2,
+            obs: fadmm::obs::global_spans_enabled(),
+        })
+        .collect();
+    let mut cluster = ProcCluster::spawn(bin, &inits).map_err(|e| {
+        fadmm::Error::io(
+            "spawning fadmm-node (build it with `cargo build --bin fadmm-node`)",
+            e,
+        )
+    })?;
+    if !cluster.route_until_done(std::time::Duration::from_secs(600)) {
+        return Err(fadmm::Error::Config(
+            "proc cluster did not finish within 600s".into(),
+        ));
+    }
+    // the child processes can't reach this process's sink; bridge the
+    // driver-side aggregate of their metrics lines into it
+    let agg = cluster.aggregate_obs();
+    fadmm::obs::global_merge(&agg);
+    let done = cluster.shutdown();
+    for d in done.iter().flatten() {
+        print_node_report(d.machine, d.span, d.iterations, d.converged,
+                          d.is_holder);
+    }
+    println!(
+        "cluster rounds={} sent={} delivered={}",
+        agg.counter_by_name("fadmm_rounds_total").unwrap_or(0),
+        agg.counter_by_name("fadmm_net_sent_total").unwrap_or(0),
+        agg.counter_by_name("fadmm_net_delivered_total").unwrap_or(0),
+    );
     Ok(())
 }
 

@@ -412,6 +412,10 @@ pub struct NetCounters {
     /// cluster overlap: interior phase-A job sets dispatched to the pool
     /// while boundary batches were still in flight
     pub overlap_dispatches: u64,
+    /// trace events evicted from the bounded flight recorder
+    /// ([`crate::obs::FlightRecorder`]); never serialized on the proc
+    /// wire — each side maintains its own recorder
+    pub trace_dropped: u64,
 }
 
 impl NetCounters {
@@ -437,6 +441,7 @@ impl NetCounters {
             ("collective_retries", num(self.collective_retries as f64)),
             ("gossip_ticks", num(self.gossip_ticks as f64)),
             ("overlap_dispatches", num(self.overlap_dispatches as f64)),
+            ("trace_dropped", num(self.trace_dropped as f64)),
         ])
     }
 

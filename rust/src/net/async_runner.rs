@@ -60,6 +60,7 @@ use crate::graph::{Graph, LiveView, NodeId};
 use crate::kernel::{DualPolicy, FlatRound, KernelScratch, NodeKernel, SlotView,
                     StopTracker};
 use crate::metrics::{IterStats, NetCounters, Recorder};
+use crate::obs::{MetricsRegistry, RuntimeProbes};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
@@ -114,6 +115,12 @@ pub struct NetConfig {
     /// Record the replayable event trace (tests/debugging; counters are
     /// always kept).
     pub tracing: bool,
+    /// Flight-recorder capacity when tracing (0 = keep nothing, count
+    /// every event as dropped).
+    pub trace_capacity: usize,
+    /// enable phase-span timing ([`crate::obs`]); counters/gauges are
+    /// always recorded
+    pub obs: bool,
 }
 
 impl Default for NetConfig {
@@ -132,6 +139,8 @@ impl Default for NetConfig {
             lag_damping: false,
             skip_lambda_on_fallback: false,
             tracing: true,
+            trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
+            obs: false,
         }
     }
 }
@@ -163,6 +172,9 @@ pub struct NetReport {
     pub trace: Vec<TraceEvent>,
     /// Final liveness per node.
     pub live: Vec<bool>,
+    /// unified telemetry ([`crate::obs`]): per-phase histograms (when
+    /// `cfg.obs`), absorbed net counters and trace retention stats
+    pub obs: MetricsRegistry,
 }
 
 // ---------------------------------------------------------------------------
@@ -317,6 +329,10 @@ pub struct AsyncRunner<S: LocalSolver> {
     foldwait_dirty: bool,
     stopped: bool,
     metric: Option<AppMetricHook>,
+    /// unified telemetry: registered at construction, recorded via
+    /// `Copy` ids on the hot path (clock reads only when `cfg.obs`)
+    obs: MetricsRegistry,
+    probes: RuntimeProbes,
 }
 
 impl<S: LocalSolver> AsyncRunner<S> {
@@ -386,9 +402,17 @@ impl<S: LocalSolver> AsyncRunner<S> {
                 needs_globals,
             });
         }
-        let sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        let mut sim = NetSim::new(cfg.seed, plan, cfg.tracing);
+        if cfg.tracing {
+            sim.set_trace_capacity(cfg.trace_capacity);
+        }
+        let mut obs =
+            MetricsRegistry::new(cfg.obs || crate::obs::global_spans_enabled());
+        let probes = RuntimeProbes::register(&mut obs);
         let latest_committed = nodes.iter().map(|nd| nd.theta.clone()).collect();
         AsyncRunner {
+            obs,
+            probes,
             scratch: KernelScratch::new(dim, max_deg),
             mask_scratch: Vec::with_capacity(max_deg),
             fold: FoldState {
@@ -618,9 +642,11 @@ impl<S: LocalSolver> AsyncRunner<S> {
             match self.nodes[i].phase {
                 Phase::Dormant | Phase::Dead | Phase::Done => return,
                 Phase::Solve => {
+                    let span = self.obs.span();
                     let ok = phase_a(&mut self.nodes[i], i, self.ctrl.view(),
                                      &mut self.scratch, &mut self.sim, &self.cfg,
                                      force);
+                    self.obs.end(self.probes.solve, span);
                     if !ok {
                         self.arm_timeout(i);
                         return;
@@ -628,9 +654,11 @@ impl<S: LocalSolver> AsyncRunner<S> {
                     self.nodes[i].phase = Phase::Reduce;
                 }
                 Phase::Reduce => {
+                    let span = self.obs.span();
                     let contrib = phase_b(&mut self.nodes[i], i, self.ctrl.view(),
                                           &mut self.scratch, &mut self.sim,
                                           &self.cfg, force);
+                    self.obs.end(self.probes.reduce, span);
                     let Some(contrib) = contrib else {
                         self.arm_timeout(i);
                         return;
@@ -649,10 +677,12 @@ impl<S: LocalSolver> AsyncRunner<S> {
                         return; // woken by the fold (no timeout: folds
                                 // complete as peers progress)
                     }
+                    let span = self.obs.span();
                     let toggled = phase_c(&mut self.nodes[i], i, &mut self.ctrl,
                                           &mut self.sim, &self.cfg,
                                           self.fold.globals,
                                           &mut self.mask_scratch);
+                    self.obs.end(self.probes.observe, span);
                     for (a, b) in toggled {
                         self.pending_wakes.push(a);
                         self.pending_wakes.push(b);
@@ -756,6 +786,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
     /// [`FlatRound`] — no per-shard regrouping), derive the verdict and
     /// commit through the shared [`StopTracker`].
     fn do_fold(&mut self, r: u64, slots: Vec<Option<Contribution>>) {
+        let span = self.obs.span();
         self.fold.flat.begin();
         for c in slots.iter().flatten() {
             self.fold.flat.add_node(c.f_self, c.primal, c.dual, &c.etas);
@@ -801,6 +832,8 @@ impl<S: LocalSolver> AsyncRunner<S> {
         self.fold.globals = (g.global_primal, g.global_dual);
         self.fold.next_fold = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
+        self.obs.end(self.probes.collective_fold, span);
+        self.obs.inc(self.probes.rounds, 1);
         self.foldwait_dirty = true;
 
         if stop {
@@ -812,6 +845,15 @@ impl<S: LocalSolver> AsyncRunner<S> {
     fn finish(mut self) -> NetReport {
         let n = self.nodes.len();
         let live = (0..n).map(|i| self.ctrl.view().node_live(i)).collect();
+        let trace = self.sim.take_trace();
+        self.obs.set_gauge(self.probes.iterations, self.fold.next_fold as f64);
+        self.obs.set_gauge(self.probes.converged,
+                           if self.fold.tracker.converged { 1.0 } else { 0.0 });
+        let vt = self.obs.gauge("fadmm_virtual_time");
+        self.obs.set_gauge(vt, self.sim.now() as f64);
+        self.obs.absorb_net(&self.sim.counters);
+        self.obs.absorb_trace(trace.len(), self.sim.counters.trace_dropped);
+        crate::obs::global_merge(&self.obs);
         NetReport {
             iterations: self.fold.next_fold as usize,
             converged: self.fold.tracker.converged,
@@ -819,8 +861,9 @@ impl<S: LocalSolver> AsyncRunner<S> {
             thetas: self.fold.latest_committed,
             virtual_time: self.sim.now(),
             counters: self.sim.counters,
-            trace: std::mem::take(&mut self.sim.trace),
+            trace,
             live,
+            obs: self.obs,
         }
     }
 }

@@ -23,7 +23,7 @@ use super::sim::Payload;
 
 // -- f64 with non-finite sentinels ------------------------------------------
 
-fn fnum(x: f64) -> Json {
+pub(crate) fn fnum(x: f64) -> Json {
     if x.is_nan() {
         s("nan")
     } else if x == f64::INFINITY {
@@ -37,7 +37,7 @@ fn fnum(x: f64) -> Json {
     }
 }
 
-fn f64_of(v: &Json, what: &str) -> Result<f64> {
+pub(crate) fn f64_of(v: &Json, what: &str) -> Result<f64> {
     match v {
         Json::Num(x) => Ok(*x),
         Json::Str(t) => match t.as_str() {

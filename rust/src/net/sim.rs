@@ -5,9 +5,12 @@
 //! in schedule order — total determinism even at zero latency), a seeded
 //! [`Pcg`] stream for every stochastic decision (per-message latency
 //! jitter, Bernoulli loss, duplication), scripted transient partitions and
-//! node join/leave schedules, and an append-only event trace. Two runs
-//! with the same seed and plan produce bit-identical traces; the
-//! determinism test in `net::tests` asserts exactly that.
+//! node join/leave schedules, and a bounded event trace (an
+//! [`crate::obs::FlightRecorder`]: oldest-first eviction past capacity,
+//! evictions counted in `counters.trace_dropped`). Two runs with the
+//! same seed and plan produce bit-identical traces — the full log under
+//! the capacity, the newest suffix plus an identical drop count above
+//! it; the determinism tests in `net::tests` assert exactly that.
 //!
 //! The simulator is pure transport + clock: it knows which messages exist
 //! and when they arrive, but nothing about ADMM. The consumer
@@ -22,6 +25,7 @@ use std::collections::BinaryHeap;
 use crate::graph::NodeId;
 use crate::kernel::StopSnapshot;
 use crate::metrics::{NetCounters, StatPartial};
+use crate::obs::FlightRecorder;
 use crate::util::rng::Pcg;
 
 /// Virtual time in ticks (dimensionless; latency/timeout parameters give
@@ -291,12 +295,13 @@ pub struct NetSim {
     rng: Pcg,
     plan: FaultPlan,
     tracing: bool,
-    pub trace: Vec<TraceEvent>,
+    trace: FlightRecorder<TraceEvent>,
     pub counters: NetCounters,
 }
 
 impl NetSim {
     pub fn new(seed: u64, plan: FaultPlan, tracing: bool) -> NetSim {
+        let cap = if tracing { crate::obs::DEFAULT_TRACE_CAPACITY } else { 0 };
         let mut sim = NetSim {
             now: 0,
             seq: 0,
@@ -306,7 +311,7 @@ impl NetSim {
             rng: Pcg::new(seed, 0x5E7),
             plan,
             tracing,
-            trace: Vec::new(),
+            trace: FlightRecorder::new(cap),
             counters: NetCounters::default(),
         };
         // churn is part of the plan; schedule it up-front so the queue is
@@ -331,11 +336,34 @@ impl NetSim {
     }
 
     /// Append a consumer-side trace entry (fallback reads, folds, topology
-    /// decisions) at the current virtual time.
+    /// decisions) at the current virtual time. The flight recorder is
+    /// bounded: past capacity the oldest entry is evicted and
+    /// `counters.trace_dropped` advances.
     pub fn record(&mut self, kind: TraceKind) {
         if self.tracing {
             self.trace.push(TraceEvent { at: self.now, kind });
+            self.counters.trace_dropped = self.trace.dropped();
         }
+    }
+
+    /// Resize the flight recorder (run setup only — discards anything
+    /// already recorded). Capacity 0 with tracing on counts every event
+    /// as dropped.
+    pub fn set_trace_capacity(&mut self, cap: usize) {
+        self.trace = FlightRecorder::new(cap);
+    }
+
+    /// Retained trace events so far (≤ the recorder's capacity).
+    pub fn trace_len(&self) -> usize {
+        self.trace.len()
+    }
+
+    /// Take the retained trace in chronological order, leaving the
+    /// recorder empty. The eviction count stays in
+    /// `counters.trace_dropped`.
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        self.counters.trace_dropped = self.trace.dropped();
+        self.trace.drain()
     }
 
     /// Schedule an event at absolute time `at` (clamped to now).
@@ -587,11 +615,39 @@ mod tests {
                 sim.send((k % 3) as usize, ((k + 1) % 3) as usize, theta(k), false);
             }
             while sim.pop_advance().is_some() {}
-            (sim.trace.clone(), sim.counters)
+            let trace = sim.take_trace();
+            (trace, sim.counters)
         };
         let (t1, c1) = run();
         let (t2, c2) = run();
         assert_eq!(t1, t2);
         assert_eq!(c1, c2);
+        assert_eq!(c1.trace_dropped, 0, "scenario stays under the default cap");
+    }
+
+    #[test]
+    fn bounded_trace_evicts_deterministically() {
+        let run = || {
+            let plan = FaultPlan {
+                link: LinkModel { base: 2, jitter: 5, loss: 0.2, dup: 0.1 },
+                ..FaultPlan::none()
+            };
+            let mut sim = NetSim::new(42, plan, true);
+            sim.set_trace_capacity(64); // force eviction: ~400 events ahead
+            for k in 0..200 {
+                sim.send((k % 3) as usize, ((k + 1) % 3) as usize, theta(k), false);
+            }
+            while sim.pop_advance().is_some() {}
+            let trace = sim.take_trace();
+            (trace, sim.counters)
+        };
+        let (t1, c1) = run();
+        let (t2, c2) = run();
+        assert_eq!(t1.len(), 64, "retained exactly the capacity");
+        assert!(c1.trace_dropped > 0, "overflow must be accounted");
+        assert_eq!(t1, t2, "evicted trace still replays identically");
+        assert_eq!(c1, c2);
+        // the retained suffix is chronological
+        assert!(t1.windows(2).all(|w| w[0].at <= w[1].at));
     }
 }

@@ -26,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::graph::NodeId;
 use crate::metrics::NetCounters;
+use crate::obs::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
 
 use super::sim::{Event, NetSim, Payload, Ticks, TraceEvent, TraceKind};
 
@@ -130,7 +131,7 @@ impl Transport for NetSim {
     }
 
     fn take_trace(&mut self) -> Vec<TraceEvent> {
-        std::mem::take(&mut self.trace)
+        NetSim::take_trace(self)
     }
 }
 
@@ -150,7 +151,7 @@ pub struct ChannelTransport {
     timers: Vec<(Ticks, u64, Event)>,
     seq: u64,
     tracing: bool,
-    pub trace: Vec<TraceEvent>,
+    trace: FlightRecorder<TraceEvent>,
     pub counters: NetCounters,
 }
 
@@ -192,7 +193,7 @@ pub fn channel_mesh(machines: usize, tracing: bool)
                 timers: Vec::new(),
                 seq: 0,
                 tracing,
-                trace: Vec::new(),
+                trace: FlightRecorder::new(if tracing { DEFAULT_TRACE_CAPACITY } else { 0 }),
                 counters: NetCounters::default(),
             }
         })
@@ -204,6 +205,17 @@ impl ChannelTransport {
     /// This endpoint's machine id.
     pub fn id(&self) -> NodeId {
         self.id
+    }
+
+    /// Resize the flight recorder (setup only — discards anything
+    /// already recorded).
+    pub fn set_trace_capacity(&mut self, cap: usize) {
+        self.trace = FlightRecorder::new(cap);
+    }
+
+    fn trace_push(&mut self, ev: TraceEvent) {
+        self.trace.push(ev);
+        self.counters.trace_dropped = self.trace.dropped();
     }
 
     /// Index of the earliest armed timer by (due, seq).
@@ -247,7 +259,7 @@ impl Transport for ChannelTransport {
         let stamp = payload.stamp();
         let what = payload.kind_name();
         if self.tracing {
-            self.trace.push(TraceEvent { at: self.now(), kind: TraceKind::Send { src, dst, what, stamp } });
+            self.trace_push(TraceEvent { at: self.now(), kind: TraceKind::Send { src, dst, what, stamp } });
         }
         let ev = Event::Deliver { src, dst, payload, dup: false };
         if self.peers[dst].send(ev).is_err() {
@@ -255,7 +267,7 @@ impl Transport for ChannelTransport {
             // destination
             self.counters.dropped_dead += 1;
             if self.tracing {
-                self.trace.push(TraceEvent { at: self.now(), kind: TraceKind::DropDead { src, dst, stamp } });
+                self.trace_push(TraceEvent { at: self.now(), kind: TraceKind::DropDead { src, dst, stamp } });
             }
         }
     }
@@ -305,7 +317,7 @@ impl Transport for ChannelTransport {
 
     fn record(&mut self, kind: TraceKind) {
         if self.tracing {
-            self.trace.push(TraceEvent { at: self.now(), kind });
+            self.trace_push(TraceEvent { at: self.now(), kind });
         }
     }
 
@@ -329,7 +341,7 @@ impl Transport for ChannelTransport {
                 what: payload.kind_name(),
                 stamp: payload.stamp(),
             };
-            self.trace.push(TraceEvent { at: self.now(), kind });
+            self.trace_push(TraceEvent { at: self.now(), kind });
         }
     }
 
@@ -347,7 +359,8 @@ impl Transport for ChannelTransport {
     }
 
     fn take_trace(&mut self) -> Vec<TraceEvent> {
-        std::mem::take(&mut self.trace)
+        self.counters.trace_dropped = self.trace.dropped();
+        self.trace.drain()
     }
 }
 

@@ -1,0 +1,264 @@
+//! Registry export: per-run JSON report, Prometheus-style text
+//! exposition, and the JSON → registry parse used to ship per-machine
+//! snapshots over the `fadmm-node` stdio line protocol.
+//!
+//! JSON numbers carry every `u64` this repo actually produces (counts
+//! and nanosecond sums stay far below 2^53 for any run we can drive),
+//! and gauges reuse the `net/codec.rs` non-finite sentinels (`"nan"`,
+//! `"inf"`, `"-inf"`, `"-0"`) so the round-trip is exact for the same
+//! reason the proc wire format is. The Prometheus text form follows the
+//! exposition conventions: cumulative `_bucket{le="..."}` series per
+//! histogram with a terminal `le="+Inf"`, plus `_sum` and `_count`.
+
+use crate::error::{Error, Result};
+use crate::net::codec::{f64_of, fnum};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::registry::{Hist, MetricsRegistry, HIST_BUCKETS};
+
+fn hist_to_json(h: &Hist) -> Json {
+    obj(vec![
+        ("count", num(h.count as f64)),
+        ("sum", num(h.sum as f64)),
+        ("min", num(h.min_or_zero() as f64)),
+        ("max", num(h.max as f64)),
+        ("buckets", arr(h.buckets.iter().map(|&b| num(b as f64)).collect())),
+    ])
+}
+
+fn hist_from_json(v: &Json, name: &str) -> Result<Hist> {
+    let mut h = Hist::default();
+    let u = |key: &str| -> Result<u64> {
+        v.get(key)
+            .and_then(Json::as_f64)
+            .map(|x| x as u64)
+            .ok_or_else(|| Error::Config(format!("obs: histogram '{name}': missing '{key}'")))
+    };
+    h.count = u("count")?;
+    h.sum = u("sum")?;
+    h.max = u("max")?;
+    h.min = if h.count == 0 { u64::MAX } else { u("min")? };
+    let buckets = v
+        .get("buckets")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| Error::Config(format!("obs: histogram '{name}': missing 'buckets'")))?;
+    if buckets.len() != HIST_BUCKETS {
+        return Err(Error::Config(format!(
+            "obs: histogram '{name}': expected {HIST_BUCKETS} buckets, got {}",
+            buckets.len()
+        )));
+    }
+    for (slot, b) in h.buckets.iter_mut().zip(buckets) {
+        *slot = b
+            .as_f64()
+            .ok_or_else(|| Error::Config(format!("obs: histogram '{name}': non-numeric bucket")))?
+            as u64;
+    }
+    Ok(h)
+}
+
+impl MetricsRegistry {
+    /// The registry as a JSON object — the obs report body, the proc
+    /// transport's `metrics` line payload, and the input to
+    /// [`MetricsRegistry::from_json`].
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters_iter()
+            .map(|(n, v)| (n.to_string(), num(v as f64)))
+            .collect::<Vec<_>>();
+        let gauges = self
+            .gauges_iter()
+            .map(|(n, v)| (n.to_string(), fnum(v)))
+            .collect::<Vec<_>>();
+        let hists = self
+            .hists_iter()
+            .map(|(n, h)| (n.to_string(), hist_to_json(h)))
+            .collect::<Vec<_>>();
+        let own = |pairs: Vec<(String, Json)>| {
+            obj(pairs.iter().map(|(n, v)| (n.as_str(), v.clone())).collect())
+        };
+        obj(vec![
+            ("counters", own(counters)),
+            ("gauges", own(gauges)),
+            ("histograms", own(hists)),
+        ])
+    }
+
+    /// Parse a registry back from [`MetricsRegistry::to_json`] output.
+    /// The result is a data-only registry (spans disabled); merge it
+    /// into an aggregate or export it onward.
+    pub fn from_json(v: &Json) -> Result<MetricsRegistry> {
+        let section = |key: &str| -> Result<Vec<(String, Json)>> {
+            match v.req(key)? {
+                Json::Obj(pairs) => Ok(pairs.clone()),
+                _ => Err(Error::Config(format!("obs: '{key}' must be an object"))),
+            }
+        };
+        let mut reg = MetricsRegistry::new(false);
+        for (name, val) in section("counters")? {
+            let raw = val
+                .as_f64()
+                .ok_or_else(|| Error::Config(format!("obs: counter '{name}': not a number")))?;
+            let id = reg.counter(&name);
+            reg.inc(id, raw as u64);
+        }
+        for (name, val) in section("gauges")? {
+            let x = f64_of(&val, &name)?;
+            let id = reg.gauge(&name);
+            reg.set_gauge(id, x);
+        }
+        for (name, val) in section("histograms")? {
+            let h = hist_from_json(&val, &name)?;
+            let id = reg.hist(&name);
+            reg.merge_hist(id, &h);
+        }
+        Ok(reg)
+    }
+
+    /// Prometheus text exposition of the registry (see module docs).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in self.counters_iter() {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+        }
+        for (name, v) in self.gauges_iter() {
+            let val = if v.is_nan() {
+                "NaN".to_string()
+            } else if v == f64::INFINITY {
+                "+Inf".to_string()
+            } else if v == f64::NEG_INFINITY {
+                "-Inf".to_string()
+            } else {
+                format!("{v}")
+            };
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {val}\n"));
+        }
+        for (name, h) in self.hists_iter() {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, &b) in h.buckets.iter().enumerate() {
+                cum += b;
+                match Hist::bucket_upper(i) {
+                    // suppress interior all-zero prefixes? No: exposition
+                    // format wants every boundary, but 64 lines × every
+                    // histogram is noise — emit only buckets that move
+                    // the cumulative count, plus the terminal +Inf.
+                    Some(le) if b > 0 => {
+                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
+                    }
+                    _ => {}
+                }
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
+            out.push_str(&format!("{name}_sum {}\n", h.sum));
+            out.push_str(&format!("{name}_count {}\n", h.count));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> MetricsRegistry {
+        let mut r = MetricsRegistry::new(false);
+        let c = r.counter("fadmm_rounds_total");
+        r.inc(c, 42);
+        let c2 = r.counter("fadmm_net_sent_total");
+        r.inc(c2, 1000);
+        let g = r.gauge("fadmm_iterations");
+        r.set_gauge(g, 37.0);
+        let h = r.hist("fadmm_phase_solve_ns");
+        for v in [0u64, 3, 900, 65_536, 1 << 40] {
+            let id = h;
+            r.record(id, v);
+        }
+        r
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let reg = sample();
+        let j = reg.to_json();
+        let back = MetricsRegistry::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.counter_by_name("fadmm_rounds_total"), Some(42));
+        assert_eq!(back.counter_by_name("fadmm_net_sent_total"), Some(1000));
+        assert_eq!(back.gauge_by_name("fadmm_iterations"), Some(37.0));
+        let h = back.hist_by_name("fadmm_phase_solve_ns").unwrap();
+        let orig = reg.hist_by_name("fadmm_phase_solve_ns").unwrap();
+        assert_eq!(h, orig, "histogram survives the wire bit-for-bit");
+    }
+
+    #[test]
+    fn non_finite_gauges_use_codec_sentinels() {
+        let mut r = MetricsRegistry::new(false);
+        for (name, v) in [
+            ("g_nan", f64::NAN),
+            ("g_inf", f64::INFINITY),
+            ("g_ninf", f64::NEG_INFINITY),
+            ("g_nzero", -0.0),
+        ] {
+            let id = r.gauge(name);
+            r.set_gauge(id, v);
+        }
+        let text = r.to_json().to_string();
+        let back = MetricsRegistry::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.gauge_by_name("g_nan").unwrap().is_nan());
+        assert_eq!(back.gauge_by_name("g_inf"), Some(f64::INFINITY));
+        assert_eq!(back.gauge_by_name("g_ninf"), Some(f64::NEG_INFINITY));
+        let nz = back.gauge_by_name("g_nzero").unwrap();
+        assert_eq!(nz, 0.0);
+        assert!(nz.is_sign_negative(), "-0 sign survives");
+    }
+
+    #[test]
+    fn empty_hist_round_trips_without_min_sentinel_loss() {
+        let mut r = MetricsRegistry::new(false);
+        r.hist("fadmm_empty_ns");
+        let back =
+            MetricsRegistry::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        let h = back.hist_by_name("fadmm_empty_ns").unwrap();
+        assert_eq!(h.count, 0);
+        assert_eq!(h.min, u64::MAX, "empty-hist sentinel restored on parse");
+        // …so merging a real observation still computes the true min
+        let mut live = MetricsRegistry::new(false);
+        let id = live.hist("fadmm_empty_ns");
+        live.record(id, 7);
+        let mut agg = back.clone();
+        agg.merge(&live);
+        assert_eq!(agg.hist_by_name("fadmm_empty_ns").unwrap().min, 7);
+    }
+
+    #[test]
+    fn prometheus_text_has_cumulative_buckets_and_totals() {
+        let reg = sample();
+        let text = reg.to_prometheus();
+        assert!(text.contains("# TYPE fadmm_rounds_total counter"));
+        assert!(text.contains("fadmm_rounds_total 42"));
+        assert!(text.contains("# TYPE fadmm_iterations gauge"));
+        assert!(text.contains("# TYPE fadmm_phase_solve_ns histogram"));
+        assert!(text.contains("fadmm_phase_solve_ns_bucket{le=\"+Inf\"} 5"));
+        assert!(text.contains("fadmm_phase_solve_ns_count 5"));
+        // cumulative: the le-series is non-decreasing
+        let mut last = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("fadmm_phase_solve_ns_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "bucket series must be cumulative: {line}");
+            last = v;
+        }
+        assert_eq!(last, 5);
+    }
+
+    #[test]
+    fn prometheus_non_finite_gauges_render_inf_nan() {
+        let mut r = MetricsRegistry::new(false);
+        let a = r.gauge("g_inf");
+        r.set_gauge(a, f64::INFINITY);
+        let b = r.gauge("g_nan");
+        r.set_gauge(b, f64::NAN);
+        let text = r.to_prometheus();
+        assert!(text.contains("g_inf +Inf"));
+        assert!(text.contains("g_nan NaN"));
+    }
+}

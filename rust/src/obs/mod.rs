@@ -1,0 +1,179 @@
+//! Unified observability layer: one metrics registry, phase spans, and
+//! a bounded flight recorder shared by all four runtimes and all three
+//! transports.
+//!
+//! Before this module, telemetry was runtime-specific fragments:
+//! [`crate::metrics::NetCounters`], `NetSim`'s unbounded trace log,
+//! `pool::threads_spawned()`, and ad-hoc bench JSON. Everything now
+//! funnels into a [`MetricsRegistry`] carried by each run report, with
+//! one JSON + Prometheus export path (`repro … --obs <path>`) and one
+//! cross-machine aggregation rule ([`MetricsRegistry::merge`] — used by
+//! the in-process cluster at join and by `ProcCluster` over the stdio
+//! `metrics` line).
+//!
+//! # Hard contracts
+//!
+//! - **Bit-transparent**: instrumentation never touches protocol state,
+//!   RNG draws, or float arithmetic; an instrumented run is bitwise
+//!   identical to an uninstrumented one (asserted in `cluster::tests`).
+//! - **Zero-alloc steady state**: registries, histograms, and the
+//!   flight recorder preallocate at registration/run setup; the per-
+//!   iteration hot path performs only array indexing (asserted with the
+//!   counting allocator in `bench_coordinator`, obs *on*).
+//! - **Cheap when off**: `obs: false` still counts deterministic events
+//!   (counters/gauges) but never reads the wall clock —
+//!   [`MetricsRegistry::span`] returns a no-op [`Span`].
+//!
+//! # Instrumentation points
+//!
+//! | runtime | phase | metric |
+//! |---|---|---|
+//! | `consensus::Engine` | A: local solve | `fadmm_phase_solve_ns` |
+//! | `consensus::Engine` | B: exchange + reduce | `fadmm_phase_reduce_ns` |
+//! | `consensus::Engine` | C: duals + observe/stop | `fadmm_phase_observe_ns` |
+//! | `coordinator::ShardedRunner` | barrier-phase dispatch (scoped or pool) | `fadmm_pool_dispatch_ns`, `fadmm_threads_spawned_total` |
+//! | `net::AsyncRunner` | per-node Solve / Reduce / Observe steps | `fadmm_phase_{solve,reduce,observe}_ns` |
+//! | `net::AsyncRunner` | oracle global fold | `fadmm_collective_fold_ns`, `fadmm_rounds_total` |
+//! | `cluster::ClusterRunner` | machine phase A (+ overlap) / B / C | `fadmm_phase_{solve,reduce,observe}_ns` |
+//! | `cluster::ClusterRunner` | boundary θ/η batches | `fadmm_boundary_io_ns` |
+//! | `cluster::ClusterRunner` | tree root fold / gossip commit | `fadmm_collective_fold_ns`, `fadmm_rounds_total` |
+//! | `cluster::NodeRuntime` | same as `ClusterRunner`, per machine | same names (merged at join / over stdio) |
+//! | all transports | counters at finish | `fadmm_net_*_total` (from [`NetCounters`]) |
+//! | all transports | flight recorder at finish | `fadmm_trace_events_total`, `fadmm_trace_dropped_total` |
+//! | all runtimes | outcome gauges | `fadmm_iterations`, `fadmm_converged` |
+//!
+//! Timing in protocol layers goes through [`MetricsRegistry::span`]
+//! exclusively — ci.sh greps those layers for stray `Instant::now`.
+
+mod export;
+mod registry;
+mod ring;
+mod sink;
+
+pub use registry::{CounterId, GaugeId, Hist, HistId, MetricsRegistry, Span, HIST_BUCKETS};
+pub use ring::FlightRecorder;
+pub use sink::{enable_global, global_merge, global_spans_enabled, take_global};
+
+use crate::metrics::NetCounters;
+
+/// Default flight-recorder capacity when tracing is enabled (events, not
+/// bytes). Large enough that every existing test scenario stays under it
+/// (bit-identical traces); bounded so ROADMAP-scale runs cannot OOM.
+pub const DEFAULT_TRACE_CAPACITY: usize = 1 << 16;
+
+/// The standard per-runtime probe set (see the module table). Each
+/// runtime registers this once at run setup and records through the
+/// `Copy` ids on the hot path.
+#[derive(Debug, Clone, Copy)]
+pub struct RuntimeProbes {
+    pub solve: HistId,
+    pub reduce: HistId,
+    pub observe: HistId,
+    pub boundary_io: HistId,
+    pub collective_fold: HistId,
+    pub pool_dispatch: HistId,
+    pub rounds: CounterId,
+    pub iterations: GaugeId,
+    pub converged: GaugeId,
+}
+
+impl RuntimeProbes {
+    pub fn register(reg: &mut MetricsRegistry) -> RuntimeProbes {
+        RuntimeProbes {
+            solve: reg.hist("fadmm_phase_solve_ns"),
+            reduce: reg.hist("fadmm_phase_reduce_ns"),
+            observe: reg.hist("fadmm_phase_observe_ns"),
+            boundary_io: reg.hist("fadmm_boundary_io_ns"),
+            collective_fold: reg.hist("fadmm_collective_fold_ns"),
+            pool_dispatch: reg.hist("fadmm_pool_dispatch_ns"),
+            rounds: reg.counter("fadmm_rounds_total"),
+            iterations: reg.gauge("fadmm_iterations"),
+            converged: reg.gauge("fadmm_converged"),
+        }
+    }
+}
+
+impl MetricsRegistry {
+    /// Absorb a transport's [`NetCounters`] snapshot as
+    /// `fadmm_net_<field>_total` counters (additive, so repeated calls
+    /// from multiple machines aggregate).
+    pub fn absorb_net(&mut self, c: &NetCounters) {
+        for (name, v) in [
+            ("fadmm_net_sent_total", c.sent),
+            ("fadmm_net_delivered_total", c.delivered),
+            ("fadmm_net_dropped_loss_total", c.dropped_loss),
+            ("fadmm_net_dropped_partition_total", c.dropped_partition),
+            ("fadmm_net_dropped_dead_total", c.dropped_dead),
+            ("fadmm_net_duplicated_total", c.duplicated),
+            ("fadmm_net_stale_reads_total", c.stale_reads),
+            ("fadmm_net_fallback_reads_total", c.fallback_reads),
+            ("fadmm_net_timeouts_total", c.timeouts),
+            ("fadmm_net_joins_total", c.joins),
+            ("fadmm_net_leaves_total", c.leaves),
+            ("fadmm_net_edges_deactivated_total", c.edges_deactivated),
+            ("fadmm_net_edges_reactivated_total", c.edges_reactivated),
+            ("fadmm_net_collective_timeouts_total", c.collective_timeouts),
+            ("fadmm_net_collective_fallbacks_total", c.collective_fallbacks),
+            ("fadmm_net_collective_retries_total", c.collective_retries),
+            ("fadmm_net_gossip_ticks_total", c.gossip_ticks),
+            ("fadmm_net_overlap_dispatches_total", c.overlap_dispatches),
+        ] {
+            let id = self.counter(name);
+            self.inc(id, v);
+        }
+    }
+
+    /// Absorb a flight recorder's retention stats (retained event count
+    /// and drops) as counters.
+    pub fn absorb_trace(&mut self, retained: usize, dropped: u64) {
+        let ev = self.counter("fadmm_trace_events_total");
+        self.inc(ev, retained as u64);
+        let dr = self.counter("fadmm_trace_dropped_total");
+        self.inc(dr, dropped);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probes_register_the_documented_names() {
+        let mut reg = MetricsRegistry::new(true);
+        let p = RuntimeProbes::register(&mut reg);
+        reg.inc(p.rounds, 3);
+        reg.set_gauge(p.iterations, 12.0);
+        let sp = reg.span();
+        reg.end(p.solve, sp);
+        assert_eq!(reg.counter_by_name("fadmm_rounds_total"), Some(3));
+        assert_eq!(reg.gauge_by_name("fadmm_iterations"), Some(12.0));
+        assert_eq!(reg.hist_by_name("fadmm_phase_solve_ns").unwrap().count, 1);
+        // re-registering is a lookup, not a duplicate
+        let p2 = RuntimeProbes::register(&mut reg);
+        assert_eq!(p.rounds, p2.rounds);
+    }
+
+    #[test]
+    fn absorb_net_is_additive_across_machines() {
+        let mut reg = MetricsRegistry::new(false);
+        let a = NetCounters { sent: 10, delivered: 8, ..Default::default() };
+        let b = NetCounters { sent: 5, delivered: 5, ..Default::default() };
+        reg.absorb_net(&a);
+        reg.absorb_net(&b);
+        assert_eq!(reg.counter_by_name("fadmm_net_sent_total"), Some(15));
+        assert_eq!(reg.counter_by_name("fadmm_net_delivered_total"), Some(13));
+        assert_eq!(reg.counter_by_name("fadmm_net_gossip_ticks_total"), Some(0));
+    }
+
+    #[test]
+    fn absorb_trace_counts_retained_and_dropped() {
+        let mut reg = MetricsRegistry::new(false);
+        let mut ring = FlightRecorder::new(2);
+        for k in 0..5 {
+            ring.push(k);
+        }
+        reg.absorb_trace(ring.len(), ring.dropped());
+        assert_eq!(reg.counter_by_name("fadmm_trace_events_total"), Some(2));
+        assert_eq!(reg.counter_by_name("fadmm_trace_dropped_total"), Some(3));
+    }
+}

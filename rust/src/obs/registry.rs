@@ -1,0 +1,392 @@
+//! The metrics registry: named counters, gauges and log-bucketed
+//! histograms behind index-typed handles.
+//!
+//! Registration (run setup) returns a small `Copy` id; recording (the
+//! hot path) is a plain array index — no hashing, no string compare, no
+//! allocation. All storage is preallocated at registration time, so the
+//! steady-state zero-allocation contract of the runtimes holds with
+//! observability enabled (asserted by `bench_coordinator`).
+//!
+//! Instrumentation is **bit-transparent** by construction: nothing in
+//! this module feeds back into the optimization (no RNG draws, no
+//! float arithmetic on protocol state), and the only wall-clock reads
+//! ([`MetricsRegistry::span`]) are gated on the `enabled` flag — a
+//! disabled registry never touches the clock.
+
+use std::time::Instant;
+
+/// Handle to a registered counter (monotone `u64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CounterId(pub(crate) usize);
+
+/// Handle to a registered gauge (last-written `f64`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GaugeId(pub(crate) usize);
+
+/// Handle to a registered histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistId(pub(crate) usize);
+
+/// Number of log₂ buckets per histogram. Bucket 0 holds exact zeros;
+/// bucket `i ≥ 1` holds values in `[2^(i-1), 2^i)`; the last bucket
+/// absorbs everything from `2^62` up.
+pub const HIST_BUCKETS: usize = 64;
+
+/// HDR-style log₂-bucketed histogram of `u64` observations
+/// (nanoseconds, byte counts, …). Fixed-size inline storage: recording
+/// is one shift, one index, five adds.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Hist {
+    pub buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    /// saturating Σ of observed values
+    pub sum: u64,
+    /// `u64::MAX` while empty
+    pub min: u64,
+    pub max: u64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Hist {
+            buckets: [0; HIST_BUCKETS],
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+}
+
+impl Hist {
+    /// Bucket index for a value (see [`HIST_BUCKETS`]).
+    pub fn bucket_index(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+        }
+    }
+
+    /// Smallest value landing in bucket `i`.
+    pub fn bucket_lower(i: usize) -> u64 {
+        if i == 0 { 0 } else { 1u64 << (i - 1) }
+    }
+
+    /// Largest value landing in bucket `i`, or `None` for the open-ended
+    /// last bucket (Prometheus `le="+Inf"`).
+    pub fn bucket_upper(i: usize) -> Option<u64> {
+        if i + 1 >= HIST_BUCKETS {
+            None
+        } else {
+            Some((1u64 << i) - 1)
+        }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.buckets[Self::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// `min` with the empty-histogram sentinel mapped to 0 (for export).
+    pub fn min_or_zero(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.min }
+    }
+
+    /// Fold another histogram into this one (bucket-wise sum, min/max
+    /// fold) — the cross-machine / cross-run aggregation primitive.
+    pub fn merge(&mut self, other: &Hist) {
+        for (b, o) in self.buckets.iter_mut().zip(&other.buckets) {
+            *b += o;
+        }
+        self.count += other.count;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// An in-flight phase span. `None` inside means observability was
+/// disabled when the span started — ending it is free and touches no
+/// clock. `Copy`, so spans move through the state machines without
+/// borrow gymnastics.
+#[derive(Debug, Clone, Copy)]
+pub struct Span(pub(crate) Option<Instant>);
+
+impl Span {
+    /// A span that records nothing when ended.
+    pub fn noop() -> Span {
+        Span(None)
+    }
+}
+
+/// The unified metrics registry (see module docs and [`crate::obs`]).
+///
+/// Also serves as the inert *data* form: reports carry a registry by
+/// value, [`MetricsRegistry::merge`] folds per-machine/per-run
+/// registries into an aggregate, and the export module round-trips it
+/// through JSON for the proc transport's `metrics` wire line.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    counters: Vec<(String, u64)>,
+    gauges: Vec<(String, f64)>,
+    hists: Vec<(String, Hist)>,
+}
+
+impl MetricsRegistry {
+    /// `enabled` gates only the wall-clock span reads; counters and
+    /// gauges always record (they are deterministic and cheap).
+    pub fn new(enabled: bool) -> MetricsRegistry {
+        MetricsRegistry { enabled, ..Default::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.hists.is_empty()
+    }
+
+    // -- registration (run setup; allocates) --------------------------------
+
+    /// Register (or look up) a counter by name. Idempotent: the same
+    /// name always yields the same id.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|(n, _)| n == name) {
+            return CounterId(i);
+        }
+        self.counters.push((name.to_string(), 0));
+        CounterId(self.counters.len() - 1)
+    }
+
+    /// Register (or look up) a gauge by name.
+    pub fn gauge(&mut self, name: &str) -> GaugeId {
+        if let Some(i) = self.gauges.iter().position(|(n, _)| n == name) {
+            return GaugeId(i);
+        }
+        self.gauges.push((name.to_string(), 0.0));
+        GaugeId(self.gauges.len() - 1)
+    }
+
+    /// Register (or look up) a histogram by name.
+    pub fn hist(&mut self, name: &str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|(n, _)| n == name) {
+            return HistId(i);
+        }
+        self.hists.push((name.to_string(), Hist::default()));
+        HistId(self.hists.len() - 1)
+    }
+
+    // -- recording (hot path; never allocates) ------------------------------
+
+    pub fn inc(&mut self, id: CounterId, by: u64) {
+        self.counters[id.0].1 += by;
+    }
+
+    pub fn set_gauge(&mut self, id: GaugeId, v: f64) {
+        self.gauges[id.0].1 = v;
+    }
+
+    pub fn record(&mut self, id: HistId, v: u64) {
+        self.hists[id.0].1.record(v);
+    }
+
+    /// Start a phase span. Disabled registries return a no-op span
+    /// without reading the clock.
+    pub fn span(&self) -> Span {
+        Span(if self.enabled { Some(Instant::now()) } else { None })
+    }
+
+    /// End a span, recording its elapsed nanoseconds into `id`.
+    pub fn end(&mut self, id: HistId, span: Span) {
+        if let Some(start) = span.0 {
+            self.hists[id.0].1.record(start.elapsed().as_nanos() as u64);
+        }
+    }
+
+    // -- reads --------------------------------------------------------------
+
+    pub fn counter_value(&self, id: CounterId) -> u64 {
+        self.counters[id.0].1
+    }
+
+    pub fn gauge_value(&self, id: GaugeId) -> f64 {
+        self.gauges[id.0].1
+    }
+
+    pub fn hist_value(&self, id: HistId) -> &Hist {
+        &self.hists[id.0].1
+    }
+
+    pub fn counter_by_name(&self, name: &str) -> Option<u64> {
+        self.counters.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn gauge_by_name(&self, name: &str) -> Option<f64> {
+        self.gauges.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+
+    pub fn hist_by_name(&self, name: &str) -> Option<&Hist> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+
+    pub(crate) fn counters_iter(&self) -> impl Iterator<Item = (&str, u64)> {
+        self.counters.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    pub(crate) fn gauges_iter(&self) -> impl Iterator<Item = (&str, f64)> {
+        self.gauges.iter().map(|(n, v)| (n.as_str(), *v))
+    }
+
+    pub(crate) fn hists_iter(&self) -> impl Iterator<Item = (&str, &Hist)> {
+        self.hists.iter().map(|(n, v)| (n.as_str(), v))
+    }
+
+    // -- aggregation --------------------------------------------------------
+
+    /// Fold a standalone [`Hist`] into the histogram behind `id` (used
+    /// by the JSON parse and the transport absorbers).
+    pub(crate) fn merge_hist(&mut self, id: HistId, h: &Hist) {
+        self.hists[id.0].1.merge(h);
+    }
+
+    /// Fold another registry into this one: counters add, gauges take
+    /// the other's value (last-wins; per-machine gauges that must not
+    /// collide should aggregate as counters or histograms instead),
+    /// histograms merge bucket-wise. Names absent here are registered.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (name, v) in other.counters.clone() {
+            let id = self.counter(&name);
+            self.inc(id, v);
+        }
+        for (name, v) in other.gauges.clone() {
+            let id = self.gauge(&name);
+            self.set_gauge(id, v);
+        }
+        for (name, h) in &other.hists {
+            let id = self.hist(name);
+            self.hists[id.0].1.merge(h);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_and_ids_are_stable() {
+        let mut r = MetricsRegistry::new(true);
+        let a = r.counter("a_total");
+        let b = r.counter("b_total");
+        assert_ne!(a, b);
+        assert_eq!(r.counter("a_total"), a);
+        r.inc(a, 3);
+        r.inc(a, 2);
+        assert_eq!(r.counter_value(a), 5);
+        assert_eq!(r.counter_by_name("a_total"), Some(5));
+        assert_eq!(r.counter_by_name("missing"), None);
+    }
+
+    #[test]
+    fn disabled_spans_record_nothing() {
+        let mut r = MetricsRegistry::new(false);
+        let h = r.hist("phase_ns");
+        let sp = r.span();
+        assert!(sp.0.is_none(), "disabled registry never reads the clock");
+        r.end(h, sp);
+        assert_eq!(r.hist_value(h).count, 0);
+    }
+
+    #[test]
+    fn enabled_spans_record_elapsed_time() {
+        let mut r = MetricsRegistry::new(true);
+        let h = r.hist("phase_ns");
+        let sp = r.span();
+        r.end(h, sp);
+        assert_eq!(r.hist_value(h).count, 1);
+    }
+
+    #[test]
+    fn hist_bucket_boundaries_are_exact() {
+        // property sweep: every power of two starts a new bucket; the
+        // value one below it still lands in the previous one
+        for i in 1..63usize {
+            let lo = Hist::bucket_lower(i);
+            assert_eq!(Hist::bucket_index(lo), i, "2^{} starts bucket {i}", i - 1);
+            assert_eq!(Hist::bucket_index(lo - 1),
+                       if i == 1 { 0 } else { i - 1 },
+                       "value below 2^{} stays in bucket {}", i - 1, i - 1);
+            if let Some(hi) = Hist::bucket_upper(i) {
+                assert_eq!(Hist::bucket_index(hi), i);
+                assert_eq!(hi + 1, Hist::bucket_lower(i + 1),
+                           "buckets tile the axis with no gaps");
+            }
+        }
+        assert_eq!(Hist::bucket_index(0), 0);
+        assert_eq!(Hist::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        assert_eq!(Hist::bucket_upper(HIST_BUCKETS - 1), None, "last bucket open");
+    }
+
+    #[test]
+    fn hist_records_and_merges() {
+        let mut a = Hist::default();
+        for v in [0u64, 1, 7, 1024] {
+            a.record(v);
+        }
+        assert_eq!(a.count, 4);
+        assert_eq!(a.sum, 1032);
+        assert_eq!((a.min, a.max), (0, 1024));
+        assert_eq!(a.buckets[0], 1);
+        assert_eq!(a.buckets[Hist::bucket_index(7)], 1);
+
+        let mut b = Hist::default();
+        b.record(5000);
+        a.merge(&b);
+        assert_eq!(a.count, 5);
+        assert_eq!(a.max, 5000);
+        assert_eq!(a.min, 0);
+        let total: u64 = a.buckets.iter().sum();
+        assert_eq!(total, a.count, "every observation lands in one bucket");
+    }
+
+    #[test]
+    fn empty_hist_merge_keeps_min_sentinel_out_of_exports() {
+        let mut a = Hist::default();
+        a.merge(&Hist::default());
+        assert_eq!(a.count, 0);
+        assert_eq!(a.min_or_zero(), 0, "export never sees the u64::MAX sentinel");
+    }
+
+    #[test]
+    fn merge_adds_counters_and_folds_hists() {
+        let mut a = MetricsRegistry::new(false);
+        let c = a.counter("sent_total");
+        a.inc(c, 2);
+        let h = a.hist("ns");
+        a.record(h, 10);
+
+        let mut b = MetricsRegistry::new(false);
+        let c2 = b.counter("sent_total");
+        b.inc(c2, 5);
+        let only_b = b.counter("b_only_total");
+        b.inc(only_b, 1);
+        let h2 = b.hist("ns");
+        b.record(h2, 1000);
+        let g = b.gauge("iterations");
+        b.set_gauge(g, 40.0);
+
+        a.merge(&b);
+        assert_eq!(a.counter_by_name("sent_total"), Some(7));
+        assert_eq!(a.counter_by_name("b_only_total"), Some(1));
+        assert_eq!(a.gauge_by_name("iterations"), Some(40.0));
+        let m = a.hist_by_name("ns").unwrap();
+        assert_eq!(m.count, 2);
+        assert_eq!((m.min, m.max), (10, 1000));
+    }
+}

@@ -1,0 +1,140 @@
+//! Bounded flight recorder: a preallocated ring buffer with drop
+//! accounting.
+//!
+//! Replaces the unbounded `Vec<TraceEvent>` trace logs: the buffer is
+//! allocated once at construction (capacity is a config knob), pushes
+//! past capacity overwrite the *oldest* entry and count a drop, and
+//! [`FlightRecorder::drain`] returns the retained events in
+//! chronological order. Runs that stay under the capacity keep the exact
+//! same-seed ⇒ bit-identical-trace guarantee as the unbounded log;
+//! runs that overflow keep a bit-identical *suffix* plus an exact
+//! dropped count (asserted by the determinism tests in `net::tests`).
+//!
+//! Generic over the event type so the `net`/`cluster` trace machinery
+//! and any future event stream share one eviction policy.
+
+/// A bounded ring of `T` with oldest-first eviction (see module docs).
+/// A capacity of 0 records nothing and counts every push as dropped.
+#[derive(Debug, Clone, Default)]
+pub struct FlightRecorder<T> {
+    buf: Vec<T>,
+    /// index of the oldest retained entry once the buffer is full
+    head: usize,
+    dropped: u64,
+    cap: usize,
+}
+
+impl<T> FlightRecorder<T> {
+    /// A recorder holding at most `cap` events. The buffer is allocated
+    /// here, in full, so steady-state pushes never allocate.
+    pub fn new(cap: usize) -> FlightRecorder<T> {
+        FlightRecorder { buf: Vec::with_capacity(cap), head: 0, dropped: 0, cap }
+    }
+
+    /// Append an event; evicts the oldest entry (and counts a drop) once
+    /// the buffer is full.
+    pub fn push(&mut self, ev: T) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else if self.cap > 0 {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        } else {
+            self.dropped += 1;
+        }
+    }
+
+    /// Retained event count (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Events evicted (or refused, at capacity 0) so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Take the retained events in chronological (oldest → newest)
+    /// order, leaving the recorder empty but keeping its drop count.
+    pub fn drain(&mut self) -> Vec<T> {
+        let head = self.head;
+        self.head = 0;
+        let mut v = std::mem::take(&mut self.buf);
+        v.rotate_left(head);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn under_capacity_keeps_everything_in_order() {
+        let mut r = FlightRecorder::new(8);
+        for k in 0..5 {
+            r.push(k);
+        }
+        assert_eq!(r.len(), 5);
+        assert_eq!(r.dropped(), 0);
+        assert_eq!(r.drain(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(r.len(), 0, "drain empties the ring");
+        assert_eq!(r.dropped(), 0, "drain keeps the drop count");
+    }
+
+    #[test]
+    fn overflow_evicts_oldest_and_counts_drops() {
+        let mut r = FlightRecorder::new(4);
+        for k in 0..10 {
+            r.push(k);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.dropped(), 6, "10 pushes into 4 slots drop 6");
+        assert_eq!(r.drain(), vec![6, 7, 8, 9], "newest suffix, in order");
+    }
+
+    #[test]
+    fn exact_capacity_boundary_drops_nothing() {
+        let mut r = FlightRecorder::new(3);
+        for k in 0..3 {
+            r.push(k);
+        }
+        assert_eq!((r.len(), r.dropped()), (3, 0));
+        r.push(3); // first eviction
+        assert_eq!((r.len(), r.dropped()), (3, 1));
+        assert_eq!(r.drain(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_capacity_refuses_and_counts() {
+        let mut r = FlightRecorder::new(0);
+        for k in 0..7 {
+            r.push(k);
+        }
+        assert_eq!(r.len(), 0);
+        assert_eq!(r.dropped(), 7);
+        assert!(r.drain().is_empty());
+    }
+
+    #[test]
+    fn drain_after_multiple_wraps_is_chronological() {
+        let mut r = FlightRecorder::new(3);
+        for k in 0..11 {
+            r.push(k);
+        }
+        // 11 pushes, 3 slots: head has wrapped 2.67 times
+        assert_eq!(r.drain(), vec![8, 9, 10]);
+        // reusable after drain
+        r.push(99);
+        assert_eq!(r.drain(), vec![99]);
+    }
+}

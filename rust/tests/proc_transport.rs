@@ -50,6 +50,7 @@ fn init(machine: usize, scheme: SchemeKind, tol: f64, max_iters: usize)
         collective_timeout: 5_000,
         fallback_after: 3,
         pipeline: 2,
+        obs: false,
     }
 }
 
@@ -137,6 +138,70 @@ fn three_machine_ring_matches_sim_iteration_count() {
             }
         }
     }
+}
+
+#[test]
+fn metrics_lines_aggregate_to_the_inproc_registry() {
+    // obs smoke over real processes: every node ships its registry as a
+    // `metrics` line before `done`, and the driver-side aggregate agrees
+    // with the in-process transport's aggregate on the *deterministic*
+    // subset — committed rounds and trace accounting. (Message counts
+    // depend on where the stop flood lands in each machine's queue, so
+    // they only get sanity bounds.)
+    let inits: Vec<ProcInit> = (0..3)
+        .map(|m| {
+            let mut i = init(m, SchemeKind::Fixed, 1e-4, 60);
+            i.obs = true;
+            i
+        })
+        .collect();
+    let Some(mut cluster) = spawn_or_skip(&inits) else { return };
+    assert!(
+        cluster.route_until_done(Duration::from_secs(120)),
+        "obs smoke: process cluster did not finish in time"
+    );
+    let agg = cluster.aggregate_obs();
+    let reported = cluster.metrics.iter().flatten().count();
+    let done = cluster.shutdown();
+    assert_eq!(reported, 3, "every machine shipped a metrics line");
+
+    let holder = done
+        .iter()
+        .flatten()
+        .find(|d| d.is_holder)
+        .expect("zero-fault run has a holder");
+
+    // the same run over the thread transport, aggregated in-process
+    let mut cfg = inits[0].cluster_config();
+    cfg.obs = true;
+    let reports = fadmm::cluster::inproc::run_inproc(
+        &Topology::Ring.build(12).unwrap(),
+        cfg,
+        quad_problem_factory(12, 2, 41),
+    )
+    .unwrap();
+    let inproc_agg = fadmm::cluster::aggregate_obs(&reports);
+
+    // committed rounds: only the holder folds, so the cluster-wide sum
+    // is the committed iteration count — identical across transports
+    let rounds = agg.counter_by_name("fadmm_rounds_total").unwrap();
+    assert_eq!(rounds, holder.iterations as u64);
+    assert_eq!(
+        rounds,
+        inproc_agg.counter_by_name("fadmm_rounds_total").unwrap(),
+        "committed rounds disagree between proc and inproc aggregates"
+    );
+    // neither transport traces here, so nothing may be dropped
+    assert_eq!(agg.counter_by_name("fadmm_trace_dropped_total"), Some(0));
+    assert_eq!(agg.counter_by_name("fadmm_trace_events_total"), Some(0));
+    // traffic sanity: the cluster really exchanged messages
+    let sent = agg.counter_by_name("fadmm_net_sent_total").unwrap();
+    let delivered = agg.counter_by_name("fadmm_net_delivered_total").unwrap();
+    assert!(sent > 0 && delivered > 0, "no traffic in the obs aggregate");
+    assert!(delivered <= sent, "delivered {delivered} > sent {sent}");
+    // phase spans were live on every machine (obs = true)
+    let solve = agg.hist_by_name("fadmm_phase_solve_ns").unwrap();
+    assert!(solve.count > 0, "no solve spans recorded with obs on");
 }
 
 #[test]
