@@ -237,6 +237,48 @@ fn main() {
         ])));
     }
 
+    println!("== timeline + series recording (zero-alloc steady state) ==");
+    {
+        let tl_run = |iters: usize| {
+            let mut rng = Pcg::seed(3);
+            let nodes: Vec<QuadraticNode> =
+                (0..64).map(|_| QuadraticNode::random(DIM, &mut rng)).collect();
+            let mut engine =
+                Engine::new(Topology::Ring.build(64).unwrap(), nodes, EngineConfig {
+                    scheme: SchemeKind::Ap,
+                    tol: 0.0,
+                    max_iters: iters,
+                    obs: true,
+                    timeline: true,
+                    series: true,
+                    ..Default::default()
+                });
+            engine.run()
+        };
+        // with recording live the event ring and row buffer were
+        // preallocated at construction, so the 40/80 delta must stay
+        // zero exactly like the spans-only cell above
+        let run_allocs =
+            |iters: usize| allocs_during(|| { black_box(tl_run(iters)); });
+        let _ = run_allocs(8); // warm-up run (first-touch effects)
+        let base = run_allocs(40);
+        let doubled = run_allocs(80);
+        let per_iter = (doubled as f64 - base as f64) / 40.0;
+        println!("  recording-on steady state: {per_iter:.2} allocations per \
+                  iteration (40-iter run: {base}, 80-iter run: {doubled})");
+        assert_eq!(per_iter, 0.0,
+                   "a recorded steady-state iteration must be allocation-free");
+        let report = tl_run(8);
+        assert_eq!(report.series.len(), 8, "one series row per iteration");
+        assert!(report.timeline.len() >= 8 * 4,
+                "phase + commit events every iteration");
+        extra.push(("timeline", obj(vec![
+            ("steady_state_allocs_per_iter_recording_on", num(per_iter)),
+            ("events_in_8_iter_run", num(report.timeline.len() as f64)),
+            ("series_rows_in_8_iter_run", num(report.series.len() as f64)),
+        ])));
+    }
+
     println!("== scale (ring, ADMM-AP — thread-per-node could not run these) ==");
     let mut scale_fields: Vec<(&str, Json)> = Vec::new();
     for n in [256usize, 1024] {

@@ -1,0 +1,147 @@
+#!/usr/bin/env python3
+"""Check the repro binary's trace/series exports (stdlib only).
+
+  check_trace.py validate TRACE.json
+  check_trace.py compare A_TRACE B_TRACE A_SERIES B_SERIES
+
+`validate` checks the Chrome trace-event schema that chrome://tracing
+and Perfetto expect of a --trace export: a `traceEvents` array whose
+records carry name/ph/pid/tid, complete slices ("X") carrying a
+duration, flow records ("s"/"f") carrying a shared `machine:seq` id,
+and every flow finish paired with a recorded flow start.
+
+`compare` takes two recordings of the same seeded run and requires
+everything driven by the virtual transport clock — event order, trace
+contexts on the wire, timestamps, committed round statistics — to be
+identical. Only the wall-clock span fields (slice `dur`, `args.dur_ns`,
+the `*_ns` series columns) may differ between the two runs.
+"""
+
+import json
+import sys
+
+ALLOWED_PH = {"M", "X", "i", "s", "f"}
+FLOW_WALLCLOCK_KEYS = ("dur",)
+
+
+def fail(msg):
+    sys.exit(f"check_trace: {msg}")
+
+
+def load_events(path):
+    with open(path) as f:
+        doc = json.load(f)
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: no traceEvents array")
+    events = doc["traceEvents"]
+    if not isinstance(events, list) or not events:
+        fail(f"{path}: traceEvents empty or not an array")
+    return doc, events
+
+
+def validate(path):
+    doc, events = load_events(path)
+    if doc.get("displayTimeUnit") != "ms":
+        fail(f"{path}: displayTimeUnit missing or not 'ms'")
+    flow_starts, flow_finishes = set(), []
+    counts = {ph: 0 for ph in ALLOWED_PH}
+    for i, ev in enumerate(events):
+        where = f"{path}: traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            fail(f"{where}: not an object")
+        ph = ev.get("ph")
+        if ph not in ALLOWED_PH:
+            fail(f"{where}: ph {ph!r} not in {sorted(ALLOWED_PH)}")
+        counts[ph] += 1
+        if not isinstance(ev.get("name"), str):
+            fail(f"{where}: name missing or not a string")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), (int, float)):
+                fail(f"{where}: {key} missing or not numeric")
+        if ph != "M" and not isinstance(ev.get("ts"), (int, float)):
+            fail(f"{where}: ts missing on a timed record")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur <= 0:
+                fail(f"{where}: complete slice without a positive dur")
+        if ph in ("s", "f"):
+            fid = ev.get("id")
+            if not isinstance(fid, str) or ":" not in fid:
+                fail(f"{where}: flow record without a machine:seq id")
+            if ph == "s":
+                flow_starts.add(fid)
+            else:
+                flow_finishes.append((i, fid))
+    for i, fid in flow_finishes:
+        if fid not in flow_starts:
+            fail(f"{path}: traceEvents[{i}]: flow finish {fid} has no start")
+    for ph, label in (("X", "slice"), ("i", "commit instant"),
+                      ("M", "track metadata")):
+        if counts[ph] == 0:
+            fail(f"{path}: no {label} records")
+    print(f"check_trace: {path}: OK ({len(events)} events, "
+          f"{counts['s']} flow starts, {counts['f']} flow finishes, "
+          f"{counts['i']} commits)")
+
+
+def canon_trace(path):
+    """Events with the wall-clock-derived fields stripped."""
+    _, events = load_events(path)
+    out = []
+    for ev in events:
+        ev = dict(ev)
+        for key in FLOW_WALLCLOCK_KEYS:
+            ev.pop(key, None)
+        args = ev.get("args")
+        if isinstance(args, dict):
+            args = dict(args)
+            args.pop("dur_ns", None)
+            ev["args"] = args
+        out.append(ev)
+    return out
+
+
+def canon_series(path):
+    """CSV rows with the *_ns (wall-clock span) columns dropped."""
+    with open(path) as f:
+        lines = [ln.rstrip("\n") for ln in f if ln.strip()]
+    if not lines:
+        fail(f"{path}: empty series CSV")
+    header = lines[0].split(",")
+    keep = [i for i, col in enumerate(header) if not col.endswith("_ns")]
+    if len(keep) == len(header):
+        fail(f"{path}: no *_ns columns in header (schema rot? update "
+             "check_trace.py)")
+    return [[row.split(",")[i] for i in keep] for row in lines]
+
+
+def compare(trace_a, trace_b, series_a, series_b):
+    a, b = canon_trace(trace_a), canon_trace(trace_b)
+    if len(a) != len(b):
+        fail(f"trace event counts differ: {trace_a} has {len(a)}, "
+             f"{trace_b} has {len(b)}")
+    for i, (ea, eb) in enumerate(zip(a, b)):
+        if ea != eb:
+            fail(f"traces diverge at traceEvents[{i}] (after stripping "
+                 f"wall-clock fields):\n  {trace_a}: {json.dumps(ea)}\n"
+                 f"  {trace_b}: {json.dumps(eb)}")
+    sa, sb = canon_series(series_a), canon_series(series_b)
+    if sa != sb:
+        fail(f"series CSVs diverge (after dropping *_ns columns): "
+             f"{series_a} vs {series_b}")
+    print(f"check_trace: deterministic ({len(a)} trace events, "
+          f"{len(sa) - 1} series rows agree across both runs)")
+
+
+def main(argv):
+    if len(argv) >= 3 and argv[1] == "validate":
+        for path in argv[2:]:
+            validate(path)
+    elif len(argv) == 6 and argv[1] == "compare":
+        compare(*argv[2:])
+    else:
+        sys.exit(__doc__.strip())
+
+
+if __name__ == "__main__":
+    main(sys.argv)

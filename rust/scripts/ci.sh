@@ -173,6 +173,46 @@ if [[ ! -f "$cluster_dir/cluster_dppca.csv" ]]; then
 fi
 rm -rf "$cluster_dir"
 
+echo "== trace determinism + schema gate =="
+# Two recordings of the same seeded run must agree on everything the
+# virtual transport clock drives: event order, trace contexts on the
+# wire, timestamps, and committed round statistics. Only the wall-clock
+# span fields (slice dur, args.dur_ns, the *_ns series columns) may
+# differ. The checker also validates the Chrome trace-event schema so
+# the export stays loadable in chrome://tracing / Perfetto.
+if ! command -v python3 >/dev/null 2>&1; then
+  echo "trace gate: python3 unavailable; skipping"
+else
+  trace_dir="$(mktemp -d)"
+  for run in a b; do
+    cargo run --release --quiet --bin repro -- cluster \
+      --nodes 12 --machines 2 --seeds 1 --max-iters 80 \
+      --schemes admm --loss 0.1 \
+      --trace "$trace_dir/$run.trace.json" \
+      --series "$trace_dir/$run.series.csv" \
+      --out "$trace_dir/$run"
+  done
+  for side in "$trace_dir/a" "$trace_dir/b"; do
+    for f in "$side.trace.json" "$side.trace.json.critical_path.json" \
+             "$side.series.csv" "$side.series.csv.json"; do
+      if [[ ! -f "$f" ]]; then
+        echo "trace gate: expected output $f missing" >&2
+        exit 1
+      fi
+    done
+    # the armed sweep also interleaves series rows into its cell outputs
+    if [[ ! -f "$side/cluster_series.csv" ]]; then
+      echo "trace gate: $side/cluster_series.csv missing (sweep series rows)" >&2
+      exit 1
+    fi
+  done
+  python3 scripts/check_trace.py validate "$trace_dir/a.trace.json"
+  python3 scripts/check_trace.py compare \
+    "$trace_dir/a.trace.json" "$trace_dir/b.trace.json" \
+    "$trace_dir/a.series.csv" "$trace_dir/b.series.csv"
+  rm -rf "$trace_dir"
+fi
+
 if [[ "${1:-}" != "--no-bench" ]]; then
   echo "== bench smoke (FADMM_BENCH_FAST=1) =="
   # fast-mode numbers are noisy: keep the smoke's BENCH_*.json out of the
@@ -301,11 +341,13 @@ PY
   # ---- obs overhead gate ---------------------------------------------
   # The instrumented sharded run may not cost more than FADMM_OBS_GATE_PCT
   # percent (default 2) over the identical obs-off run, and an obs-on
-  # steady-state iteration must stay allocation-free. Both numbers come
-  # from the fresh BENCH_coordinator.json obs cell; the bench itself
-  # asserts the zero-alloc claim at runtime, so the JSON check doubles as
-  # the instrumentation-rot guard. Fast-mode numbers are noisy — raise
-  # the env knob on shared machines, tighten for full-budget runs.
+  # steady-state iteration must stay allocation-free — the same bound
+  # holds with the timeline + series recorders armed (the bench's
+  # timeline cell). All numbers come from the fresh BENCH_coordinator.json;
+  # the bench itself asserts the zero-alloc claims at runtime, so the
+  # JSON checks double as the instrumentation-rot guard. Fast-mode
+  # numbers are noisy — raise the env knob on shared machines, tighten
+  # for full-budget runs.
   echo "== obs overhead gate =="
   if ! command -v python3 >/dev/null 2>&1; then
     echo "obs overhead gate: python3 unavailable; skipping"
@@ -333,6 +375,23 @@ else:
     if overhead > pct:
         failures.append(f"obs overhead {overhead:.2f}% > gate {pct:.0f}% "
                         "(FADMM_OBS_GATE_PCT)")
+tl = coord.get("timeline")
+if not isinstance(tl, dict):
+    failures.append("timeline cell missing from fresh BENCH_coordinator.json "
+                    "(instrumentation rot?)")
+else:
+    tl_allocs = tl.get("steady_state_allocs_per_iter_recording_on")
+    if tl_allocs != 0:
+        failures.append(f"recording-on steady state allocates ({tl_allocs} "
+                        "per iter, want 0)")
+    if tl.get("events_in_8_iter_run", 0) <= 0:
+        failures.append("timeline recorded no events")
+    if tl.get("series_rows_in_8_iter_run", 0) <= 0:
+        failures.append("series recorded no rows")
+    else:
+        print("obs overhead gate: timeline+series recording steady state "
+              f"allocation-free ({tl['events_in_8_iter_run']:.0f} events, "
+              f"{tl['series_rows_in_8_iter_run']:.0f} rows in probe run)")
 if failures:
     sys.exit("obs overhead gate: " + "; ".join(failures))
 print("obs overhead gate: OK")

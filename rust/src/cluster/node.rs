@@ -48,8 +48,9 @@ use crate::graph::{rcm_order, relabel_graph, Graph, NodeId, Relabel};
 use crate::kernel::StopTracker;
 use crate::metrics::{IterStats, NetCounters, RunningFold, StatPartial};
 use crate::net::sim::{Event, Payload, TimerKind, TraceKind};
-use crate::net::transport::Transport;
+use crate::net::transport::{send_traced, Transport};
 use crate::net::TopologyController;
+use crate::obs::{Phase, RoundRow};
 use crate::pool::PhasePool;
 
 use super::collective::{build_tree_rooted, subtree, CollectiveKind, TreeTopology};
@@ -79,6 +80,16 @@ pub struct NodeReport {
     /// trace accounting). The backends merge one per machine into the
     /// cluster-wide aggregate.
     pub obs: crate::obs::MetricsRegistry,
+    /// This machine's slice of the causal round timeline (empty unless
+    /// enabled). The backends concatenate the per-machine slices — the
+    /// Chrome export keys tracks by `machine`, so order between
+    /// machines is irrelevant.
+    pub timeline: Vec<crate::obs::TlEvent>,
+    pub timeline_dropped: u64,
+    /// Per-round convergence series — non-empty only on the tracker
+    /// holder (commits happen there).
+    pub series: Vec<crate::obs::RoundRow>,
+    pub series_dropped: u64,
 }
 
 /// Merge every machine's registry into one cluster-wide view: counters
@@ -121,6 +132,8 @@ pub struct NodeRuntime<S: LocalSolver + Send, T: Transport> {
     dim: usize,
     obs: crate::obs::MetricsRegistry,
     probes: crate::obs::RuntimeProbes,
+    timeline: crate::obs::Timeline,
+    series: crate::obs::RoundSeries,
 }
 
 impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
@@ -182,6 +195,12 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             cfg.obs || crate::obs::global_spans_enabled(),
         );
         let probes = crate::obs::RuntimeProbes::register(&mut obs);
+        let timeline = crate::obs::Timeline::new(
+            cfg.timeline || crate::obs::global_timeline_enabled(),
+        );
+        let series = crate::obs::RoundSeries::new(
+            cfg.series || crate::obs::global_series_enabled(),
+        );
         Ok(NodeRuntime {
             cfg,
             graph: relabeled,
@@ -203,6 +222,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             dim,
             obs,
             probes,
+            timeline,
+            series,
         })
     }
 
@@ -214,7 +235,7 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         self.try_advance(false);
         self.try_finish_holder();
         while !self.stopped {
-            let Some((_at, event)) = self.net.pop() else { break };
+            let Some((at, event)) = self.net.pop() else { break };
             match &event {
                 Event::Wake { node: _, epoch } => {
                     if *epoch != self.mach.wake_epoch || !self.mach.running() {
@@ -231,7 +252,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                 _ => {}
             }
             match event {
-                Event::Deliver { src, dst: _, payload, dup: _ } => {
+                Event::Deliver { src, dst: _, payload, dup: _, ctx } => {
+                    if self.timeline.enabled() {
+                        self.timeline.recv(at, self.me, ctx, payload.kind_name());
+                    }
                     self.on_deliver(src, payload);
                 }
                 Event::Wake { .. } => {
@@ -280,7 +304,19 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         self.obs.set_gauge(machines, self.part.len() as f64);
         self.obs.absorb_net(&counters);
         self.obs.absorb_trace(trace.len(), counters.trace_dropped);
+        let timeline = self.timeline.drain();
+        let timeline_dropped = self.timeline.dropped();
+        let series = self.series.drain();
+        let series_dropped = self.series.dropped();
+        self.obs.absorb_timeline(timeline.len(), timeline_dropped,
+                                 series.len(), series_dropped);
         crate::obs::global_merge(&self.obs);
+        if crate::obs::global_timeline_enabled() {
+            crate::obs::global_timeline_merge(timeline.clone());
+        }
+        if crate::obs::global_series_enabled() {
+            crate::obs::global_series_merge(series.clone(), series_dropped);
+        }
         NodeReport {
             machine: self.me,
             iterations,
@@ -292,6 +328,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             dim: self.dim,
             counters,
             obs: self.obs,
+            timeline,
+            timeline_dropped,
+            series,
+            series_dropped,
         }
     }
 
@@ -318,11 +358,19 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                     self.mach.run_phase_a(&self.graph, t, &self.pool,
                                           self.cfg.exec);
                     self.mach.snapshot(t);
-                    self.obs.end(self.probes.solve, span);
+                    let ns = self.obs.end(self.probes.solve, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.net.now(), self.me, t, Phase::Solve, ns);
+                    }
                     self.mach.phase = MPhase::Reduce;
                     let io = self.obs.span();
                     self.send_boundary_theta(t + 1);
-                    self.obs.end(self.probes.boundary_io, io);
+                    let ns = self.obs.end(self.probes.boundary_io, io);
+                    if self.timeline.enabled() {
+                        self.timeline.phase(self.net.now(), self.me, t,
+                                            Phase::BoundaryIo, ns);
+                    }
                 }
                 MPhase::Reduce => {
                     if !self.ready_b(force) {
@@ -334,7 +382,11 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                     let span = self.obs.span();
                     self.mach.run_phase_b(&self.graph, t, &self.pool,
                                           self.cfg.exec);
-                    self.obs.end(self.probes.reduce, span);
+                    let ns = self.obs.end(self.probes.reduce, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.net.now(), self.me, t, Phase::Reduce, ns);
+                    }
                     self.mach.phase = MPhase::FoldWait;
                     self.tree_deposit(t);
                     if self.stopped {
@@ -351,10 +403,18 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                     self.refresh_links();
                     let span = self.obs.span();
                     self.mach.run_phase_c(&self.graph, t, globals);
-                    self.obs.end(self.probes.observe, span);
+                    let ns = self.obs.end(self.probes.observe, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.net.now(), self.me, t, Phase::Observe, ns);
+                    }
                     let io = self.obs.span();
                     self.send_boundary_eta(t + 1);
-                    self.obs.end(self.probes.boundary_io, io);
+                    let ns = self.obs.end(self.probes.boundary_io, io);
+                    if self.timeline.enabled() {
+                        self.timeline.phase(self.net.now(), self.me, t,
+                                            Phase::BoundaryIo, ns);
+                    }
                     self.mach.t += 1;
                     self.mach.phase = if self.mach.t >= self.cfg.max_iters as u64 {
                         MPhase::Done
@@ -494,30 +554,33 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             .collect()
     }
 
+    /// Send through the transport and record the minted
+    /// [`crate::obs::TraceCtx`] on the timeline (no-op when disabled).
+    fn tsend(&mut self, dst: usize, payload: Payload, reliable: bool) {
+        send_traced(&mut self.net, &mut self.timeline, self.me, dst, payload,
+                    reliable);
+    }
+
     fn send_state(&mut self, ts: u64, es: u64) {
         for (qslot, p) in self.live_neighbors() {
             let nodes = self.mach.boundary_theta(qslot, ts);
             let edges = self.mach.boundary_eta(qslot);
-            self.net.send(self.me, p,
-                          Payload::BoundaryTheta { stamp: ts, nodes }, true);
-            self.net.send(self.me, p,
-                          Payload::BoundaryEta { stamp: es, edges }, true);
+            self.tsend(p, Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.tsend(p, Payload::BoundaryEta { stamp: es, edges }, true);
         }
     }
 
     fn send_boundary_theta(&mut self, stamp: u64) {
         for (qslot, p) in self.live_neighbors() {
             let nodes = self.mach.boundary_theta(qslot, stamp);
-            self.net.send(self.me, p,
-                          Payload::BoundaryTheta { stamp, nodes }, false);
+            self.tsend(p, Payload::BoundaryTheta { stamp, nodes }, false);
         }
     }
 
     fn send_boundary_eta(&mut self, stamp: u64) {
         for (qslot, p) in self.live_neighbors() {
             let edges = self.mach.boundary_eta(qslot);
-            self.net.send(self.me, p,
-                          Payload::BoundaryEta { stamp, edges }, false);
+            self.tsend(p, Payload::BoundaryEta { stamp, edges }, false);
         }
     }
 
@@ -581,9 +644,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                         if p != self.me && p != src
                             && self.ctrl.view().node_live(p)
                         {
-                            self.net.send(self.me, p,
-                                          Payload::Stop { round, converged },
-                                          true);
+                            self.tsend(p, Payload::Stop { round, converged },
+                                       true);
                         }
                     }
                 }
@@ -604,12 +666,12 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                 if let Some(to) = successor {
                     let snap = self.tracker.as_ref().unwrap().snapshot();
                     self.net.record(TraceKind::Handoff { from: self.me, to });
-                    self.net.send(self.me, to,
-                                  Payload::Checker {
-                                      cursor: self.cursor,
-                                      snap: Box::new(snap),
-                                  },
-                                  true);
+                    self.tsend(to,
+                               Payload::Checker {
+                                   cursor: self.cursor,
+                                   snap: Box::new(snap),
+                               },
+                               true);
                     self.tracker = None;
                 }
             }
@@ -669,12 +731,12 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             // notification reordered against a handoff): ship it over
             let snap = self.tracker.as_ref().unwrap().snapshot();
             self.net.record(TraceKind::Handoff { from: self.me, to: new_root });
-            self.net.send(self.me, new_root,
-                          Payload::Checker {
-                              cursor: self.cursor,
-                              snap: Box::new(snap),
-                          },
-                          true);
+            self.tsend(new_root,
+                       Payload::Checker {
+                           cursor: self.cursor,
+                           snap: Box::new(snap),
+                       },
+                       true);
             self.tracker = None;
         }
     }
@@ -725,9 +787,8 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             map.iter().map(|(&k, v)| (k, v.clone())).collect();
         self.sent_up.insert(round);
         if let Some(p) = self.topo.parent[self.me] {
-            self.net.send(self.me, p,
-                          Payload::Part { round, entries, thetas: Vec::new() },
-                          false);
+            self.tsend(p, Payload::Part { round, entries, thetas: Vec::new() },
+                       false);
         }
         self.arm_coll();
     }
@@ -736,10 +797,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
                entries: Vec<(usize, Vec<StatPartial>)>) {
         // straggler for an already-verdicted round: answer directly
         if let Some(&(gp, gd)) = self.mach.verdicts.get(&round) {
-            self.net.send(self.me, src,
-                          Payload::Verdict { round, global_primal: gp,
-                                             global_dual: gd },
-                          false);
+            self.tsend(src,
+                       Payload::Verdict { round, global_primal: gp,
+                                          global_dual: gd },
+                       false);
             return;
         }
         let map = self.inbox.entry(round).or_default();
@@ -758,10 +819,10 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         self.sent_up.retain(|&r| r > round || !settled.contains_key(&r));
         for c in self.topo.children[self.me].clone() {
             if self.ctrl.view().node_live(c) {
-                self.net.send(self.me, c,
-                              Payload::Verdict { round, global_primal: gp,
-                                                 global_dual: gd },
-                              false);
+                self.tsend(c,
+                           Payload::Verdict { round, global_primal: gp,
+                                              global_dual: gd },
+                           false);
             }
         }
         self.tree_rearm();
@@ -847,7 +908,7 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         let span = self.obs.span();
         let Some(tracker) = self.tracker.as_mut() else { return };
         let g = tracker.round_partials(map.values().flat_map(|parts| parts.iter()));
-        let stop = tracker.commit(r as usize, IterStats {
+        let stats = IterStats {
             iter: r as usize,
             objective: g.objective,
             max_primal: g.max_primal,
@@ -856,11 +917,13 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
             min_eta: g.min_eta,
             max_eta: g.max_eta,
             app_error: 0.0,
-        });
+        };
+        let stop = tracker.commit(r as usize, stats);
         self.cursor = r + 1;
         self.net.record(TraceKind::Fold { round: r });
-        self.obs.end(self.probes.collective_fold, span);
+        let fold_ns = self.obs.end(self.probes.collective_fold, span);
         self.obs.inc(self.probes.rounds, 1);
+        self.record_commit(r, stats, fold_ns);
         self.store_verdict(r, g.global_primal, g.global_dual);
         if stop {
             // `commit` also fires on a spent budget — report what the
@@ -871,14 +934,42 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         }
         for c in self.topo.children[self.me].clone() {
             if self.ctrl.view().node_live(c) {
-                self.net.send(self.me, c,
-                              Payload::Verdict {
-                                  round: r,
-                                  global_primal: g.global_primal,
-                                  global_dual: g.global_dual,
-                              },
-                              false);
+                self.tsend(c,
+                           Payload::Verdict {
+                               round: r,
+                               global_primal: g.global_primal,
+                               global_dual: g.global_dual,
+                           },
+                           false);
             }
+        }
+    }
+
+    /// Record round `r`'s commit on the timeline and push its series row
+    /// (holder only — commits happen here). `live_nodes` counts nodes on
+    /// machines this holder *believes* live; `live_edges` counts live
+    /// machine links of the quotient graph.
+    fn record_commit(&mut self, r: u64, stats: IterStats, fold_ns: u64) {
+        if self.timeline.enabled() {
+            let now = self.net.now();
+            self.timeline.phase(now, self.me, r, Phase::CollectiveFold, fold_ns);
+            self.timeline.commit(now, self.me, r);
+        }
+        if self.series.enabled() {
+            let view = self.ctrl.view();
+            let live_nodes = (0..self.part.len())
+                .filter(|&p| view.node_live(p))
+                .map(|p| self.part.ranges[p].len())
+                .sum::<usize>() as u64;
+            let row = RoundRow {
+                round: r,
+                at: self.net.now(),
+                stats,
+                live_nodes,
+                live_edges: view.live_edge_count() as u64,
+                phase_ns: self.timeline.phase_ns(r),
+            };
+            self.series.push(row);
         }
     }
 
@@ -905,8 +996,7 @@ impl<S: LocalSolver + Send, T: Transport> NodeRuntime<S, T> {
         self.net.record(TraceKind::Stop { rounds: round + 1 });
         for p in 0..self.part.len() {
             if p != self.me && self.ctrl.view().node_live(p) {
-                self.net
-                    .send(self.me, p, Payload::Stop { round, converged }, true);
+                self.tsend(p, Payload::Stop { round, converged }, true);
             }
         }
     }

@@ -39,9 +39,10 @@ use crate::consensus::solvers::QuadraticNode;
 use crate::error::{Error, Result};
 use crate::graph::{NodeId, Topology};
 use crate::metrics::NetCounters;
-use crate::net::codec::{payload_from_json, payload_to_json};
+use crate::net::codec::{ctx_from_json, ctx_to_json, payload_from_json, payload_to_json};
 use crate::net::sim::{Event, Payload, Ticks, TraceEvent, TraceKind};
 use crate::net::transport::Transport;
+use crate::obs::TraceCtx;
 use crate::penalty::SchemeKind;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -103,6 +104,14 @@ pub struct ProcInit {
     /// enable phase spans in the node (absent on the wire = `false`, so
     /// old drivers and old nodes interoperate)
     pub obs: bool,
+    /// enable the causal round timeline in the node (absent = `false`).
+    /// Per-process timelines surface through the aggregated
+    /// `fadmm_timeline_*` retention counters on the metrics line; the
+    /// full event stream stays in-process (sim/inproc export it).
+    pub timeline: bool,
+    /// enable the per-round convergence series in the node (absent =
+    /// `false`; rows accumulate only at the tracker holder)
+    pub series: bool,
 }
 
 impl ProcInit {
@@ -127,6 +136,8 @@ impl ProcInit {
             ("fallback_after", num(self.fallback_after as f64)),
             ("pipeline", num(self.pipeline as f64)),
             ("obs", Json::Bool(self.obs)),
+            ("timeline", Json::Bool(self.timeline)),
+            ("series", Json::Bool(self.series)),
         ]))])
     }
 
@@ -160,6 +171,8 @@ impl ProcInit {
             fallback_after: req_u64(b, "fallback_after")? as u32,
             pipeline: req_u64(b, "pipeline")?,
             obs: b.get("obs").and_then(|x| x.as_bool()).unwrap_or(false),
+            timeline: b.get("timeline").and_then(|x| x.as_bool()).unwrap_or(false),
+            series: b.get("series").and_then(|x| x.as_bool()).unwrap_or(false),
         })
     }
 
@@ -180,6 +193,8 @@ impl ProcInit {
             pipeline: self.pipeline,
             tracing: false,
             obs: self.obs,
+            timeline: self.timeline,
+            series: self.series,
             ..Default::default()
         }
     }
@@ -272,6 +287,8 @@ pub struct StdioTransport {
     rx: Receiver<Event>,
     timers: Vec<(Ticks, u64, Event)>,
     seq: u64,
+    /// frames minted so far (the next [`TraceCtx::seq`])
+    frames: u64,
     counters: NetCounters,
 }
 
@@ -285,6 +302,7 @@ impl StdioTransport {
             rx,
             timers: Vec::new(),
             seq: 0,
+            frames: 0,
             counters: NetCounters::default(),
         }
     }
@@ -321,11 +339,16 @@ impl Transport for StdioTransport {
         self.epoch.elapsed().as_millis() as Ticks
     }
 
-    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool) {
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool)
+        -> TraceCtx
+    {
         self.counters.sent += 1;
+        let ctx = TraceCtx { round: payload.stamp(), machine: src, seq: self.frames };
+        self.frames += 1;
         let line = obj(vec![
             ("src", num(src as f64)),
             ("dst", num(dst as f64)),
+            ("ctx", ctx_to_json(ctx)),
             ("body", payload_to_json(&payload)),
         ])
         .to_string();
@@ -335,6 +358,7 @@ impl Transport for StdioTransport {
         // and stdin EOF will end the event loop; don't panic mid-send
         let _ = writeln!(h, "{line}");
         let _ = h.flush();
+        ctx
     }
 
     fn schedule(&mut self, at: Ticks, event: Event) {
@@ -456,7 +480,9 @@ fn parse_wire_line(line: &str) -> Option<Event> {
     let src = v.get("src")?.as_usize()?;
     let dst = v.get("dst")?.as_usize()?;
     let payload = payload_from_json(v.get("body")?).ok()?;
-    Some(Event::Deliver { src, dst, payload, dup: false })
+    // absent ctx (old peer) decodes to the zero context, not a parse error
+    let ctx = ctx_from_json(v.get("ctx")).ok()?;
+    Some(Event::Deliver { src, dst, payload, dup: false, ctx })
 }
 
 /// The `fadmm-node` binary body: read the init line, run one machine to
@@ -474,6 +500,14 @@ pub fn node_main() -> i32 {
             return 2;
         }
     };
+    // telemetry-on runs get a crash snapshot: a panicking node writes
+    // its global-sink state next to the process before dying, so a
+    // wedged cluster leaves per-machine forensics behind
+    if init.obs {
+        crate::obs::install_crash_hook(std::path::PathBuf::from(format!(
+            "fadmm-node.{}.crash.json", init.machine,
+        )));
+    }
     let graph = match init.topology.build(init.nodes) {
         Ok(g) => g,
         Err(e) => {
@@ -742,6 +776,8 @@ mod tests {
             fallback_after: 3,
             pipeline: 2,
             obs: false,
+            timeline: false,
+            series: false,
         }
     }
 
@@ -789,6 +825,7 @@ mod tests {
     fn wire_lines_parse_into_events() {
         let leave = parse_wire_line(r#"{"ctrl":"leave","machine":2}"#).unwrap();
         assert_eq!(leave, Event::Leave { node: 2 });
+        // ctx absent: an old peer's line still parses, with the zero ctx
         let routed = obj(vec![
             ("src", num(0.0)),
             ("dst", num(1.0)),
@@ -796,8 +833,23 @@ mod tests {
         ])
         .to_string();
         match parse_wire_line(&routed).unwrap() {
-            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false, ctx } => {
                 assert_eq!(payload, Payload::Stop { round: 9, converged: true });
+                assert_eq!(ctx, TraceCtx::default());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        // ctx present: carried through verbatim
+        let traced = obj(vec![
+            ("src", num(0.0)),
+            ("dst", num(1.0)),
+            ("ctx", ctx_to_json(TraceCtx { round: 9, machine: 0, seq: 42 })),
+            ("body", payload_to_json(&Payload::Stop { round: 9, converged: true })),
+        ])
+        .to_string();
+        match parse_wire_line(&traced).unwrap() {
+            Event::Deliver { ctx, .. } => {
+                assert_eq!(ctx, TraceCtx { round: 9, machine: 0, seq: 42 });
             }
             other => panic!("unexpected {other:?}"),
         }

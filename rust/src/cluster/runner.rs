@@ -26,8 +26,9 @@ use crate::kernel::{AppMetricHook, StopTracker};
 use crate::metrics::{IterStats, NetCounters, Recorder, RunningFold, StatPartial};
 use crate::net::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TimerKind,
                       TraceEvent, TraceKind};
-use crate::net::transport::Transport;
+use crate::net::transport::{send_traced, Transport};
 use crate::net::{ActivityConfig, TopologyController};
+use crate::obs::{Phase, RoundRow};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::pool::{ExecMode, PhasePool, Ticket};
 
@@ -90,6 +91,16 @@ pub struct ClusterConfig {
     /// enable phase-span timing ([`crate::obs`]); counters/gauges are
     /// always recorded
     pub obs: bool,
+    /// record the causal round timeline ([`crate::obs::Timeline`]):
+    /// per-frame send/recv events with [`crate::obs::TraceCtx`], phase
+    /// attributions and round commits — the feed for the Chrome trace
+    /// export and the critical-path analysis
+    pub timeline: bool,
+    /// record the per-round convergence series
+    /// ([`crate::obs::RoundSeries`]): one row per committed round with
+    /// the committed [`IterStats`] verbatim plus live node/edge counts
+    /// and the round's phase durations
+    pub series: bool,
     /// How per-phase shard jobs execute: the persistent [`PhasePool`]
     /// (default; also enables interior/boundary phase-A overlap while
     /// boundary batches are in flight) or seed-style scoped spawns (the
@@ -123,6 +134,8 @@ impl Default for ClusterConfig {
             tracing: true,
             trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
             obs: false,
+            timeline: false,
+            series: false,
             exec: ExecMode::Pool,
         }
     }
@@ -147,6 +160,17 @@ pub struct ClusterReport {
     /// unified telemetry ([`crate::obs`]): per-phase histograms (when
     /// `cfg.obs`), absorbed net counters and trace retention stats
     pub obs: crate::obs::MetricsRegistry,
+    /// causal round timeline (empty unless `cfg.timeline` or the global
+    /// timeline sink was enabled); feed for [`crate::obs::chrome`] and
+    /// [`crate::obs::critical_path`]
+    pub timeline: Vec<crate::obs::TlEvent>,
+    /// events the bounded timeline ring overwrote
+    pub timeline_dropped: u64,
+    /// per-round convergence series (empty unless `cfg.series` or the
+    /// global series sink was enabled)
+    pub series: Vec<crate::obs::RoundRow>,
+    /// rows the series decimation dropped
+    pub series_dropped: u64,
 }
 
 /// Designated-recorder state: the shared [`StopTracker`] (checker +
@@ -218,6 +242,12 @@ pub struct ClusterRunner<S: LocalSolver + Send, T: Transport = NetSim> {
     /// `Copy` ids on the hot path (clock reads only when `cfg.obs`)
     obs: crate::obs::MetricsRegistry,
     probes: crate::obs::RuntimeProbes,
+    /// causal round timeline (no-op unless enabled; `at` stamps come
+    /// from the transport clock, durations from the `obs` span ends —
+    /// the timeline itself never reads a wall clock)
+    timeline: crate::obs::Timeline,
+    /// per-round convergence series (no-op unless enabled)
+    series: crate::obs::RoundSeries,
 }
 
 impl<S: LocalSolver + Send> ClusterRunner<S, NetSim> {
@@ -308,9 +338,17 @@ impl<S: LocalSolver + Send> ClusterRunner<S, NetSim> {
             cfg.obs || crate::obs::global_spans_enabled(),
         );
         let probes = crate::obs::RuntimeProbes::register(&mut obs);
+        let timeline = crate::obs::Timeline::new(
+            cfg.timeline || crate::obs::global_timeline_enabled(),
+        );
+        let series = crate::obs::RoundSeries::new(
+            cfg.series || crate::obs::global_series_enabled(),
+        );
         Ok(ClusterRunner {
             obs,
             probes,
+            timeline,
+            series,
             overlap: (0..mcount).map(|_| None).collect(),
             pool,
             fold: RootState {
@@ -454,7 +492,10 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             }
             self.sim.advance_to(at);
             match event {
-                Event::Deliver { src, dst, payload, dup: _ } => {
+                Event::Deliver { src, dst, payload, dup: _, ctx } => {
+                    if self.timeline.enabled() {
+                        self.timeline.recv(at, dst, ctx, payload.kind_name());
+                    }
                     self.on_deliver(src, dst, payload);
                 }
                 Event::Wake { node, epoch: _ } => {
@@ -503,14 +544,20 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             .collect()
     }
 
+    /// Send through the transport and record the minted
+    /// [`crate::obs::TraceCtx`] on the timeline (no-op when disabled).
+    fn tsend(&mut self, src: usize, dst: usize, payload: Payload, reliable: bool) {
+        send_traced(&mut self.sim, &mut self.timeline, src, dst, payload, reliable);
+    }
+
     /// Reliably send machine `m`'s boundary θ (stamped `ts`) and η
     /// (stamped `es`) to every live neighbour machine.
     fn send_state(&mut self, m: usize, ts: u64, es: u64) {
         for (qslot, p) in self.live_neighbors(m) {
             let nodes = self.machines[m].boundary_theta(qslot, ts);
             let edges = self.machines[m].boundary_eta(qslot);
-            self.sim.send(m, p, Payload::BoundaryTheta { stamp: ts, nodes }, true);
-            self.sim.send(m, p, Payload::BoundaryEta { stamp: es, edges }, true);
+            self.tsend(m, p, Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.tsend(m, p, Payload::BoundaryEta { stamp: es, edges }, true);
         }
     }
 
@@ -545,7 +592,19 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         self.obs.set_gauge(mg, self.machines.len() as f64);
         self.obs.absorb_net(&counters);
         self.obs.absorb_trace(trace.len(), counters.trace_dropped);
+        let timeline = self.timeline.drain();
+        let timeline_dropped = self.timeline.dropped();
+        let series = self.series.drain();
+        let series_dropped = self.series.dropped();
+        self.obs.absorb_timeline(timeline.len(), timeline_dropped,
+                                 series.len(), series_dropped);
         crate::obs::global_merge(&self.obs);
+        if crate::obs::global_timeline_enabled() {
+            crate::obs::global_timeline_merge(timeline.clone());
+        }
+        if crate::obs::global_series_enabled() {
+            crate::obs::global_series_merge(series.clone(), series_dropped);
+        }
         ClusterReport {
             iterations: self.fold.cursor as usize,
             converged: self.fold.tracker.converged,
@@ -558,6 +617,10 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             live_machines,
             workers_per_machine: self.workers_used,
             obs: self.obs,
+            timeline,
+            timeline_dropped,
+            series,
+            series_dropped,
         }
     }
 
@@ -599,10 +662,17 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                         mach.snapshot(t);
                         mach.phase = MPhase::Reduce;
                     }
-                    self.obs.end(self.probes.solve, span);
+                    let ns = self.obs.end(self.probes.solve, span);
+                    if self.timeline.enabled() {
+                        self.timeline.phase(self.sim.now(), m, t, Phase::Solve, ns);
+                    }
                     let span = self.obs.span();
                     self.send_boundary_theta(m, t + 1);
-                    self.obs.end(self.probes.boundary_io, span);
+                    let ns = self.obs.end(self.probes.boundary_io, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.sim.now(), m, t, Phase::BoundaryIo, ns);
+                    }
                 }
                 MPhase::Reduce => {
                     if !self.ready_b(m, force) {
@@ -618,7 +688,10 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                         let exec = self.cfg.exec;
                         self.machines[m].run_phase_b(graph, t, pool, exec);
                     }
-                    self.obs.end(self.probes.reduce, span);
+                    let ns = self.obs.end(self.probes.reduce, span);
+                    if self.timeline.enabled() {
+                        self.timeline.phase(self.sim.now(), m, t, Phase::Reduce, ns);
+                    }
                     self.machines[m].phase = MPhase::FoldWait;
                     self.collective_ready(m, t);
                     if self.stopped {
@@ -636,10 +709,17 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                     self.refresh_links(m);
                     let span = self.obs.span();
                     self.machines[m].run_phase_c(&self.graph, t, globals);
-                    self.obs.end(self.probes.observe, span);
+                    let ns = self.obs.end(self.probes.observe, span);
+                    if self.timeline.enabled() {
+                        self.timeline.phase(self.sim.now(), m, t, Phase::Observe, ns);
+                    }
                     let span = self.obs.span();
                     self.send_boundary_eta(m, t + 1);
-                    self.obs.end(self.probes.boundary_io, span);
+                    let ns = self.obs.end(self.probes.boundary_io, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.sim.now(), m, t, Phase::BoundaryIo, ns);
+                    }
                     self.observe_machine_etas(m);
                     if self.stopped {
                         return;
@@ -833,14 +913,14 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
     fn send_boundary_theta(&mut self, m: usize, stamp: u64) {
         for (qslot, p) in self.live_neighbors(m) {
             let nodes = self.machines[m].boundary_theta(qslot, stamp);
-            self.sim.send(m, p, Payload::BoundaryTheta { stamp, nodes }, false);
+            self.tsend(m, p, Payload::BoundaryTheta { stamp, nodes }, false);
         }
     }
 
     fn send_boundary_eta(&mut self, m: usize, stamp: u64) {
         for (qslot, p) in self.live_neighbors(m) {
             let edges = self.machines[m].boundary_eta(qslot);
-            self.sim.send(m, p, Payload::BoundaryEta { stamp, edges }, false);
+            self.tsend(m, p, Payload::BoundaryEta { stamp, edges }, false);
         }
     }
 
@@ -949,10 +1029,10 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         let snap = self.fold.tracker.snapshot();
         self.fold.in_flight_to = Some(to);
         self.sim.record(TraceKind::Handoff { from, to });
-        self.sim.send(from, to,
-                      Payload::Checker { cursor: self.fold.cursor,
-                                         snap: Box::new(snap) },
-                      true);
+        self.tsend(from, to,
+                   Payload::Checker { cursor: self.fold.cursor,
+                                      snap: Box::new(snap) },
+                   true);
     }
 
     /// Whether the tree root currently holds a resumed tracker (folds and
@@ -1030,8 +1110,8 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                 .expect("quotient symmetry");
             let nodes = self.machines[p].boundary_theta(rev, ts);
             let edges = self.machines[p].boundary_eta(rev);
-            self.sim.send(p, m, Payload::BoundaryTheta { stamp: ts, nodes }, true);
-            self.sim.send(p, m, Payload::BoundaryEta { stamp: es, edges }, true);
+            self.tsend(p, m, Payload::BoundaryTheta { stamp: ts, nodes }, true);
+            self.tsend(p, m, Payload::BoundaryEta { stamp: es, edges }, true);
             self.pending_wakes.push(p);
         }
         self.after_view_change();
@@ -1276,7 +1356,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             (e, th)
         };
         if let Some(p) = parent {
-            self.sim.send(m, p, Payload::Part { round, entries, thetas }, false);
+            self.tsend(m, p, Payload::Part { round, entries, thetas }, false);
         }
         self.arm_coll(m);
     }
@@ -1286,9 +1366,9 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
                thetas: Vec<(usize, Vec<f64>)>) {
         // straggler for an already-verdicted round: answer directly
         if let Some(&(gp, gd)) = self.machines[dst].verdicts.get(&round) {
-            self.sim.send(dst, src,
-                          Payload::Verdict { round, global_primal: gp, global_dual: gd },
-                          false);
+            self.tsend(dst, src,
+                       Payload::Verdict { round, global_primal: gp, global_dual: gd },
+                       false);
             return;
         }
         {
@@ -1329,9 +1409,9 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         };
         for c in children {
             if self.ctrl.view().node_live(c) {
-                self.sim.send(dst, c,
-                              Payload::Verdict { round, global_primal: gp, global_dual: gd },
-                              false);
+                self.tsend(dst, c,
+                           Payload::Verdict { round, global_primal: gp, global_dual: gd },
+                           false);
             }
         }
         self.tree_rearm(dst);
@@ -1389,6 +1469,39 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         }
     }
 
+    /// Record round `r`'s commit on the timeline and push its series row
+    /// (no-ops when both recorders are off). `m` is the committing
+    /// machine — the tree root or the gossip tracker holder. The row's
+    /// `live_nodes` counts underlying nodes hosted on live machines;
+    /// `live_edges` counts live *machine* links of the quotient graph,
+    /// the inter-machine topology this protocol actually routes over.
+    fn record_commit(&mut self, m: usize, r: u64, stats: IterStats, fold_ns: u64) {
+        if self.timeline.enabled() {
+            let now = self.sim.now();
+            self.timeline.phase(now, m, r, Phase::CollectiveFold, fold_ns);
+            self.timeline.commit(now, m, r);
+        }
+        if self.series.enabled() {
+            let view = self.ctrl.view();
+            let live_nodes = self
+                .machines
+                .iter()
+                .enumerate()
+                .filter(|&(j, _)| view.node_live(j))
+                .map(|(_, mm)| mm.span.len())
+                .sum::<usize>() as u64;
+            let row = RoundRow {
+                round: r,
+                at: self.sim.now(),
+                stats,
+                live_nodes,
+                live_edges: view.live_edge_count() as u64,
+                phase_ns: self.timeline.phase_ns(r),
+            };
+            self.series.push(row);
+        }
+    }
+
     /// Fold round `r` at the root: absorb every delivered machine's shard
     /// partials in machine-id order (= node-id order, since machine
     /// slices ascend) through the shared [`StopTracker`] — the Chan-style
@@ -1425,7 +1538,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             .tracker
             .round_partials(entries.values().flat_map(|parts| parts.iter()));
         let app_error = self.app_metric_value_tree(r, &shipped);
-        let stop = self.fold.tracker.commit(r as usize, IterStats {
+        let stats = IterStats {
             iter: r as usize,
             objective: g.objective,
             max_primal: g.max_primal,
@@ -1434,11 +1547,13 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             min_eta: g.min_eta,
             max_eta: g.max_eta,
             app_error,
-        });
+        };
+        let stop = self.fold.tracker.commit(r as usize, stats);
         self.fold.cursor = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
-        self.obs.end(self.probes.collective_fold, span);
+        let fold_ns = self.obs.end(self.probes.collective_fold, span);
         self.obs.inc(self.probes.rounds, 1);
+        self.record_commit(root, r, stats, fold_ns);
         self.store_verdict(root, r, g.global_primal, g.global_dual);
 
         if stop {
@@ -1453,13 +1568,13 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         };
         for c in children {
             if self.ctrl.view().node_live(c) {
-                self.sim.send(root, c,
-                              Payload::Verdict {
-                                  round: r,
-                                  global_primal: g.global_primal,
-                                  global_dual: g.global_dual,
-                              },
-                              false);
+                self.tsend(root, c,
+                           Payload::Verdict {
+                               round: r,
+                               global_primal: g.global_primal,
+                               global_dual: g.global_dual,
+                           },
+                           false);
             }
         }
         // the scripted leader-handoff drill fires right after its round
@@ -1653,8 +1768,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         }
         if let Some((dst, mass, weight, maxes)) = outgoing {
             self.sim.counters().gossip_ticks += 1;
-            self.sim
-                .send(m, dst, Payload::Gossip { round, mass, weight, maxes }, false);
+            self.tsend(m, dst, Payload::Gossip { round, mass, weight, maxes }, false);
         }
         if finished {
             self.gossip_complete(m, round);
@@ -1781,7 +1895,7 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
         let n_hat = if est.n_live > 0.5 { est.n_live.round() } else { 1.0 };
         let objective = est.avg_f * n_hat;
         let app_error = self.app_metric_value(round);
-        let stop = self.fold.tracker.commit(round as usize, IterStats {
+        let stats = IterStats {
             iter: round as usize,
             objective,
             max_primal: est.max_primal,
@@ -1790,11 +1904,14 @@ impl<S: LocalSolver + Send, T: Transport> ClusterRunner<S, T> {
             min_eta: est.min_eta,
             max_eta: est.max_eta,
             app_error,
-        });
+        };
+        let stop = self.fold.tracker.commit(round as usize, stats);
         self.fold.cursor = round + 1;
         self.sim.record(TraceKind::Fold { round });
-        self.obs.end(self.probes.collective_fold, span);
+        let fold_ns = self.obs.end(self.probes.collective_fold, span);
         self.obs.inc(self.probes.rounds, 1);
+        let holder = self.fold.holder;
+        self.record_commit(holder, round, stats, fold_ns);
         if stop {
             self.stopped = true;
             self.stop_round = Some(round);

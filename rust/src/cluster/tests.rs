@@ -266,6 +266,80 @@ fn obs_instrumentation_is_bit_transparent() {
                on.obs.counter_by_name("fadmm_trace_events_total"));
 }
 
+#[test]
+fn timeline_and_series_are_bit_transparent() {
+    // the same hard contract extended to the causal timeline and the
+    // round series: recording may not change a single protocol bit, and
+    // the recorded rows must carry the committed stats verbatim
+    let run = |rec: bool| {
+        let plan = FaultPlan {
+            link: LinkModel { base: 2, jitter: 5, loss: 0.15, dup: 0.05 },
+            partitions: vec![Partition { start: 40, end: 160, group: vec![3] }],
+            ..FaultPlan::none()
+        };
+        ClusterRunner::new(
+            Topology::Ring.build(12).unwrap(),
+            ClusterConfig {
+                scheme: SchemeKind::Nap,
+                tol: 0.0,
+                max_iters: 60,
+                seed: 3,
+                machines: 4,
+                workers: 1,
+                collective: CollectiveKind::Tree,
+                max_staleness: 1,
+                silence_timeout: 8,
+                collective_timeout: 16,
+                fallback_after: 2,
+                tracing: true,
+                timeline: rec,
+                series: rec,
+                ..Default::default()
+            },
+            plan,
+            quad_factory(12, 2, 21),
+        )
+        .unwrap()
+        .run()
+    };
+    let off = run(false);
+    let on = run(true);
+    assert_eq!(off.thetas, on.thetas, "recording must not perturb θ");
+    assert_eq!(off.iterations, on.iterations);
+    assert_eq!(off.converged, on.converged);
+    assert_eq!(off.virtual_time, on.virtual_time);
+    assert_eq!(off.counters, on.counters);
+    assert_eq!(off.trace, on.trace, "recording must not perturb the trace");
+    for (a, b) in off.recorder.stats.iter().zip(on.recorder.stats.iter()) {
+        assert_stats_bit_equal(a, b);
+    }
+    // disabled recorders stay empty (and count nothing as dropped)
+    assert!(off.timeline.is_empty() && off.series.is_empty());
+    assert_eq!((off.timeline_dropped, off.series_dropped), (0, 0));
+    // one series row per committed round, stats bit-for-bit from the
+    // recorder stream
+    assert_eq!(on.series.len(), on.recorder.stats.len());
+    for (row, s) in on.series.iter().zip(on.recorder.stats.iter()) {
+        assert_eq!(row.round as usize, s.iter);
+        assert_stats_bit_equal(&row.stats, s);
+        assert!(row.live_nodes > 0, "round {}: live nodes", row.round);
+        assert!(row.live_edges > 0, "round {}: live edges", row.round);
+    }
+    // the timeline captured the full event vocabulary, and every
+    // delivery's causal ctx names a sender the trace knows about
+    use crate::obs::TlKind;
+    assert!(on.timeline.iter().any(|e| matches!(e.kind, TlKind::Send { .. })));
+    assert!(on.timeline.iter().any(|e| matches!(e.kind, TlKind::Phase { .. })));
+    assert!(on.timeline.iter().any(|e| matches!(e.kind, TlKind::Commit)));
+    let machines = 4usize;
+    for ev in &on.timeline {
+        if let TlKind::Recv { src, .. } = ev.kind {
+            assert!(src < machines, "ctx src within the mesh");
+            assert!(ev.machine < machines);
+        }
+    }
+}
+
 // -- fault scenarios ----------------------------------------------------------
 
 #[test]

@@ -48,7 +48,8 @@ use crate::graph::{Graph, NodeId};
 use crate::kernel::{AppMetricHook, DualPolicy, FlatRound, KernelScratch,
                     NodeKernel, SlotView, StopTracker};
 use crate::metrics::{IterStats, Recorder};
-use crate::obs::{MetricsRegistry, RuntimeProbes};
+use crate::obs::{MetricsRegistry, Phase as ObsPhase, RoundRow, RoundSeries,
+                 RuntimeProbes, Timeline};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
@@ -165,6 +166,14 @@ pub struct EngineConfig {
     /// enable phase-span timing ([`crate::obs`]); counters/gauges are
     /// always recorded
     pub obs: bool,
+    /// record the causal round timeline ([`crate::obs::Timeline`]). The
+    /// synchronous engine has no transport clock, so event timestamps
+    /// are the round index itself (one track, machine 0)
+    pub timeline: bool,
+    /// record the per-round convergence series
+    /// ([`crate::obs::RoundSeries`]): one row of committed [`IterStats`]
+    /// per iteration
+    pub series: bool,
 }
 
 impl Default for EngineConfig {
@@ -178,6 +187,8 @@ impl Default for EngineConfig {
             max_iters: 1000,
             seed: 0,
             obs: false,
+            timeline: false,
+            series: false,
         }
     }
 }
@@ -193,6 +204,16 @@ pub struct RunReport {
     /// unified telemetry ([`crate::obs`]); phase-span histograms only
     /// when `cfg.obs` is set
     pub obs: MetricsRegistry,
+    /// causal timeline events (empty unless `cfg.timeline` or the global
+    /// timeline sink was enabled); timestamps are round indices
+    pub timeline: Vec<crate::obs::TlEvent>,
+    /// ring-overwritten timeline events (capacity pressure)
+    pub timeline_dropped: u64,
+    /// per-iteration committed-stats rows (empty unless `cfg.series` or
+    /// the global series sink was enabled)
+    pub series: Vec<RoundRow>,
+    /// series rows lost to decimation/capping
+    pub series_dropped: u64,
 }
 
 /// The engine's [`SlotView`]: neighbour θ is an owned `Vec` indexed by
@@ -250,6 +271,10 @@ pub struct Engine<S: LocalSolver> {
     /// `Copy` ids in `step` (zero-alloc; clock reads only when `cfg.obs`)
     obs: MetricsRegistry,
     probes: RuntimeProbes,
+    /// causal round timeline (bounded ring; no-op when disabled)
+    timeline: Timeline,
+    /// per-iteration committed-stats series (no-op when disabled)
+    series: RoundSeries,
 }
 
 impl<S: LocalSolver> Engine<S> {
@@ -285,9 +310,15 @@ impl<S: LocalSolver> Engine<S> {
         let mut obs =
             MetricsRegistry::new(cfg.obs || crate::obs::global_spans_enabled());
         let probes = RuntimeProbes::register(&mut obs);
+        let timeline =
+            Timeline::new(cfg.timeline || crate::obs::global_timeline_enabled());
+        let series =
+            RoundSeries::new(cfg.series || crate::obs::global_series_enabled());
         Engine {
             obs,
             probes,
+            timeline,
+            series,
             rev_slot,
             kernels,
             flat: FlatRound::new(dim),
@@ -332,17 +363,32 @@ impl<S: LocalSolver> Engine<S> {
         self.tracker.reset_run();
         for t in 0..self.cfg.max_iters {
             let stats = self.step(t, &mut app_metric);
-            if self.tracker.commit(t, stats) {
+            let stop = self.tracker.commit(t, stats);
+            self.record_commit(t as u64, stats);
+            if stop {
                 break;
             }
         }
         self.obs.set_gauge(self.probes.iterations, self.tracker.iterations as f64);
         self.obs.set_gauge(self.probes.converged,
                            if self.tracker.converged { 1.0 } else { 0.0 });
+        // drain, not clone: repeated runs each report their own rows
+        let timeline = self.timeline.drain();
+        let timeline_dropped = self.timeline.dropped();
+        let series = self.series.drain();
+        let series_dropped = self.series.dropped();
+        self.obs.absorb_timeline(timeline.len(), timeline_dropped,
+                                 series.len(), series_dropped);
         // the sink adds whole registries; the CLI builds one engine per
         // run, so the engine's cumulative-across-runs registry is a
         // single run's worth of data on that path
         crate::obs::global_merge(&self.obs);
+        if crate::obs::global_timeline_enabled() {
+            crate::obs::global_timeline_merge(timeline.clone());
+        }
+        if crate::obs::global_series_enabled() {
+            crate::obs::global_series_merge(series.clone(), series_dropped);
+        }
         RunReport {
             iterations: self.tracker.iterations,
             converged: self.tracker.converged,
@@ -350,6 +396,30 @@ impl<S: LocalSolver> Engine<S> {
             thetas: self.thetas.clone(),
             // clone, not take: ids stay valid for repeated runs
             obs: self.obs.clone(),
+            timeline,
+            timeline_dropped,
+            series,
+            series_dropped,
+        }
+    }
+
+    /// Timeline + series bookkeeping for a committed iteration. The
+    /// synchronous engine has no transport clock, so timeline timestamps
+    /// are the round index itself, and every event lands on machine 0.
+    fn record_commit(&mut self, t: u64, stats: IterStats) {
+        if self.timeline.enabled() {
+            self.timeline.commit(t, 0, t);
+        }
+        if self.series.enabled() {
+            let row = RoundRow {
+                round: t,
+                at: t,
+                stats,
+                live_nodes: self.graph.len() as u64,
+                live_edges: self.graph.edge_count() as u64,
+                phase_ns: self.timeline.phase_ns(t),
+            };
+            self.series.push(row);
         }
     }
 
@@ -380,7 +450,10 @@ impl<S: LocalSolver> Engine<S> {
                 &mut self.solvers[i], &self.thetas[i], self.graph.degree(i),
                 &mut view, &mut self.kscratch, &mut self.scratch_new_thetas[i]);
         }
-        self.obs.end(self.probes.solve, span);
+        let ns = self.obs.end(self.probes.solve, span);
+        if self.timeline.enabled() {
+            self.timeline.phase(t as u64, 0, t as u64, ObsPhase::Solve, ns);
+        }
 
         // ---- broadcast -----------------------------------------------------
         let span = self.obs.span();
@@ -405,7 +478,10 @@ impl<S: LocalSolver> Engine<S> {
                 &mut self.solvers[i], &self.thetas[i], deg, &mut view,
                 DualPolicy::exact(), &mut self.kscratch);
         }
-        self.obs.end(self.probes.reduce, span);
+        let ns = self.obs.end(self.probes.reduce, span);
+        if self.timeline.enabled() {
+            self.timeline.phase(t as u64, 0, t as u64, ObsPhase::Reduce, ns);
+        }
 
         // ---- flat global fold (node order — the oracle arithmetic the
         // async runtime diffs against); η stats cover the η^t used by this
@@ -428,7 +504,10 @@ impl<S: LocalSolver> Engine<S> {
         for i in 0..n {
             self.kernels[i].observe(t, (g.global_primal, g.global_dual), None);
         }
-        self.obs.end(self.probes.observe, span);
+        let ns = self.obs.end(self.probes.observe, span);
+        if self.timeline.enabled() {
+            self.timeline.phase(t as u64, 0, t as u64, ObsPhase::Observe, ns);
+        }
         self.obs.inc(self.probes.rounds, 1);
 
         // ---- stats -----------------------------------------------------------

@@ -59,6 +59,12 @@ pub struct ShardedConfig {
     /// enable phase-span timing ([`crate::obs`]); counters/gauges are
     /// always recorded
     pub obs: bool,
+    /// record the per-round convergence series
+    /// ([`crate::obs::RoundSeries`]). Rows are derived post-hoc from the
+    /// leader's committed stats — `worker_main` is bit-parity pinned, so
+    /// nothing is instrumented inside the shard program (no per-round
+    /// phase durations; no timeline: the arena has no wire)
+    pub series: bool,
 }
 
 /// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
@@ -79,6 +85,7 @@ impl Default for ShardedConfig {
             relabel: Relabel::default(),
             exec: ExecMode::default(),
             obs: false,
+            series: false,
         }
     }
 }
@@ -97,6 +104,12 @@ pub struct RunnerReport {
     /// spawn counters and outcome gauges (worker internals stay
     /// untouched to preserve bit-parity)
     pub obs: crate::obs::MetricsRegistry,
+    /// per-iteration committed-stats rows (empty unless `cfg.series` or
+    /// the global series sink was enabled); derived post-hoc from the
+    /// recorder, so `phase_ns` is all-zero on this runtime
+    pub series: Vec<crate::obs::RoundRow>,
+    /// series rows lost to decimation/capping
+    pub series_dropped: u64,
 }
 
 /// Backward-compatible name for [`RunnerReport`].
@@ -368,7 +381,33 @@ impl ShardedRunner {
         obs.inc(probes.rounds, lead.iterations as u64);
         obs.set_gauge(probes.iterations, lead.iterations as f64);
         obs.set_gauge(probes.converged, if lead.converged { 1.0 } else { 0.0 });
+
+        // convergence series, derived from the leader's committed stats
+        // (post-hoc: the shard program itself stays untouched). Timestamps
+        // are round indices — the arena runtime has no transport clock.
+        let mut series = crate::obs::RoundSeries::new(
+            self.cfg.series || crate::obs::global_series_enabled(),
+        );
+        if series.enabled() {
+            let live_edges = self.graph.edge_count() as u64;
+            for s in &lead.recorder.stats {
+                series.push(crate::obs::RoundRow {
+                    round: s.iter as u64,
+                    at: s.iter as u64,
+                    stats: *s,
+                    live_nodes: n as u64,
+                    live_edges,
+                    phase_ns: [0; crate::obs::NPHASES],
+                });
+            }
+        }
+        let series_rows = series.drain();
+        let series_dropped = series.dropped();
+        obs.absorb_timeline(0, 0, series_rows.len(), series_dropped);
         crate::obs::global_merge(&obs);
+        if crate::obs::global_series_enabled() {
+            crate::obs::global_series_merge(series_rows.clone(), series_dropped);
+        }
         Ok(RunnerReport {
             iterations: lead.iterations,
             converged: lead.converged,
@@ -376,6 +415,8 @@ impl ShardedRunner {
             thetas,
             workers,
             obs,
+            series: series_rows,
+            series_dropped,
         })
     }
 }

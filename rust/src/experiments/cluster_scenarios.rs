@@ -147,6 +147,10 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
 
     let mut rows = Vec::new();
     let mut counter_rows = Vec::new();
+    // per-round series rows, scenario-cell-prefixed; populated only when
+    // series recording is armed (e.g. `--series`), so the default sweep
+    // output set is unchanged
+    let mut series_rows: Vec<Vec<String>> = Vec::new();
     for &machines in &cfg.machines_list {
         for (scenario_name, plan) in scenarios {
             let faulty = plan.link.loss > 0.0
@@ -213,6 +217,15 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
                                 ("counters", report.counters.summary_json()),
                             ]));
                         }
+                        for sr in &report.series {
+                            let mut row = vec![machines.to_string(),
+                                               collective.name().to_string(),
+                                               scheme.name().to_string(),
+                                               scenario_name.clone(),
+                                               seed.to_string()];
+                            row.extend(crate::obs::series_csv_row(sr));
+                            series_rows.push(row);
+                        }
                         if report.converged {
                             converged += 1;
                         }
@@ -268,6 +281,16 @@ fn run_scenarios(cfg: &ClusterScenarioConfig,
         .map_err(|e| crate::error::Error::io(
             format!("writing {}", counters_path.display()), e,
         ))?;
+    if !series_rows.is_empty() {
+        let mut hdr = vec!["machines", "collective", "scheme", "scenario",
+                           "seed"];
+        hdr.extend(crate::obs::SERIES_CSV_HEADER);
+        let mut w = CsvWriter::create(out_dir.join("cluster_series.csv"), &hdr)?;
+        for r in &series_rows {
+            w.row(r)?;
+        }
+        w.finish()?;
+    }
     Ok(rows)
 }
 

@@ -47,6 +47,15 @@
 //! `net_counters.json` / `cluster_counters.json` in `--out`, keyed by
 //! scenario cell, via the single
 //! [`crate::metrics::NetCounters::summary_json`] path.
+//!
+//! The metrics report is one of three run artifacts — `--trace FILE`
+//! adds a Chrome/Perfetto trace with per-round critical-path
+//! attribution, and `--series FILE` a per-committed-round convergence
+//! CSV; see the observability guide in [`crate::obs`] for how to read
+//! each. When `--series` (or `--trace`) arms the sweeps, the fault
+//! matrices also interleave per-round series rows into
+//! `net_series.csv` / `cluster_series.csv` next to the counter files,
+//! prefixed with the same scenario-cell key columns.
 
 pub mod ablations;
 pub mod caltech;

@@ -237,6 +237,10 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
     use crate::util::json::{arr, num, obj, s};
     let mut rows = Vec::new();
     let mut counter_rows = Vec::new();
+    // per-round series rows, scenario-cell-prefixed; populated only when
+    // series recording is armed (e.g. `--series`), so the default sweep
+    // output set is unchanged
+    let mut series_rows: Vec<Vec<String>> = Vec::new();
     for scenario in scenarios {
         let churn = !scenario.plan.churn.is_empty();
         for &scheme in &cfg.schemes {
@@ -280,6 +284,13 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
                     ("seed", num(seed as f64)),
                     ("counters", report.counters.summary_json()),
                 ]));
+                for sr in &report.series {
+                    let mut row = vec![scenario.name.to_string(),
+                                       scheme.name().to_string(),
+                                       seed.to_string()];
+                    row.extend(crate::obs::series_csv_row(sr));
+                    series_rows.push(row);
+                }
                 if report.converged {
                     converged += 1;
                 }
@@ -321,6 +332,15 @@ fn run_scenarios(cfg: &NetScenarioConfig, scenarios: Vec<Scenario>,
             format!("writing {}", counters_path.display()), e,
         ),
     )?;
+    if !series_rows.is_empty() {
+        let mut hdr = vec!["scenario", "scheme", "seed"];
+        hdr.extend(crate::obs::SERIES_CSV_HEADER);
+        let mut w = CsvWriter::create(out_dir.join("net_series.csv"), &hdr)?;
+        for r in &series_rows {
+            w.row(r)?;
+        }
+        w.finish()?;
+    }
     Ok(rows)
 }
 

@@ -82,6 +82,16 @@ impl LiveView {
         self.node_live.iter().filter(|&&l| l).count()
     }
 
+    /// Number of live undirected edges. Slots stay symmetric under every
+    /// mutation, so halving the live directed-slot count is exact.
+    pub fn live_edge_count(&self) -> usize {
+        self.slot_live
+            .iter()
+            .map(|slots| slots.iter().filter(|&&l| l).count())
+            .sum::<usize>()
+            / 2
+    }
+
     /// Activate/deactivate a node. Deactivation also masks every incident
     /// edge (both directions); activation restores edges only toward
     /// neighbours that are themselves live.
@@ -219,6 +229,7 @@ mod tests {
         assert_eq!(v.live_count(), 5);
         assert!((0..5).all(|i| v.all_slots_live(i)));
         assert_eq!(v.live_degree(0), 2);
+        assert_eq!(v.live_edge_count(), 5, "a 5-ring has 5 undirected edges");
         assert!(v.live_connected());
         assert_eq!(v.generation(), 0);
     }
@@ -229,6 +240,7 @@ mod tests {
         v.set_node(2, false);
         assert!(!v.node_live(2));
         assert_eq!(v.live_degree(2), 0);
+        assert_eq!(v.live_edge_count(), 3, "both edges of node 2 masked");
         assert_eq!(v.live_degree(1), 1, "edge 1-2 masked from node 1's side");
         assert_eq!(v.live_degree(3), 1);
         assert!(v.live_connected(), "ring minus one node is a live path");

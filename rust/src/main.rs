@@ -62,7 +62,17 @@ SUBCOMMANDS
 Every subcommand also accepts
   --obs FILE  write the run's merged telemetry registry (phase spans,
               transport counters, trace accounting — see the obs module)
-              as JSON to FILE and Prometheus text to FILE.prom
+              as JSON to FILE and Prometheus text to FILE.prom; also arms
+              a panic hook that flushes the registry collected so far to
+              FILE.crash.json if the run dies
+  --trace FILE  record the causal round timeline on every runtime and
+              write it as Chrome trace-event JSON to FILE (open in
+              chrome://tracing or Perfetto; one track per machine,
+              send→deliver flow arrows) plus per-round critical-path
+              attribution to FILE.critical_path.json
+  --series FILE  record the per-round convergence series (committed
+              IterStats, live node/edge counts, phase durations) and
+              write CSV to FILE plus a JSON mirror to FILE.json
 
 cluster additionally accepts
   --transport sim|threads|procs   (default sim)
@@ -86,10 +96,25 @@ fn main() {
 fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
     let args = CliArgs::parse(raw, &["describe", "verbose", "dppca"])?;
     // --obs FILE: arm the global telemetry sink before anything runs;
-    // every runtime merges its finished registry into it
+    // every runtime merges its finished registry into it. The crash hook
+    // flushes whatever was merged so far if the run panics.
     let obs_path = args.get("obs").map(PathBuf::from);
-    if obs_path.is_some() {
+    if let Some(path) = &obs_path {
         fadmm::obs::enable_global();
+        fadmm::obs::install_crash_hook(PathBuf::from(format!(
+            "{}.crash.json",
+            path.display()
+        )));
+    }
+    // --trace FILE / --series FILE: arm the timeline / series sinks the
+    // same way; runtimes feed them only while armed (bit-transparent off)
+    let trace_path = args.get("trace").map(PathBuf::from);
+    if trace_path.is_some() {
+        fadmm::obs::enable_global_timeline();
+    }
+    let series_path = args.get("series").map(PathBuf::from);
+    if series_path.is_some() {
+        fadmm::obs::enable_global_series();
     }
     let result = match args.subcommand.as_str() {
         "" | "help" | "--help" | "-h" => {
@@ -112,6 +137,12 @@ fn dispatch(raw: Vec<String>) -> fadmm::Result<()> {
         if let Some(path) = obs_path {
             write_obs(&path)?;
         }
+        if let Some(path) = trace_path {
+            write_trace(&path)?;
+        }
+        if let Some(path) = series_path {
+            write_series(&path)?;
+        }
     }
     result
 }
@@ -128,6 +159,36 @@ fn write_obs(path: &std::path::Path) -> fadmm::Result<()> {
         fadmm::Error::io(format!("writing obs report {}", prom.display()), e)
     })?;
     eprintln!("obs: wrote {} and {}", path.display(), prom.display());
+    Ok(())
+}
+
+/// Drain the global timeline sink: Chrome trace-event JSON at `path`,
+/// per-round critical-path attribution next to it, and a terse stderr
+/// table of the slowest rounds.
+fn write_trace(path: &std::path::Path) -> fadmm::Result<()> {
+    let events = fadmm::obs::take_global_timeline().unwrap_or_default();
+    fadmm::obs::chrome::write_chrome_trace(path, "repro", &events)?;
+    let paths = fadmm::obs::critical_path::analyze(&events, 5);
+    let cp = PathBuf::from(format!("{}.critical_path.json", path.display()));
+    let doc = fadmm::obs::critical_path::critical_path_json(&paths, events.len());
+    std::fs::write(&cp, doc.to_string()).map_err(|e| {
+        fadmm::Error::io(format!("writing critical path {}", cp.display()), e)
+    })?;
+    eprintln!("trace: wrote {} and {} ({} events)", path.display(),
+              cp.display(), events.len());
+    eprint!("{}", fadmm::obs::critical_path::critical_path_text(&paths));
+    Ok(())
+}
+
+/// Drain the global series sink: per-round CSV at `path` plus a JSON
+/// mirror (with drop accounting) next to it.
+fn write_series(path: &std::path::Path) -> fadmm::Result<()> {
+    let (rows, dropped) = fadmm::obs::take_global_series().unwrap_or_default();
+    fadmm::obs::write_series_csv(path, &rows)?;
+    let json = PathBuf::from(format!("{}.json", path.display()));
+    fadmm::obs::write_series_json(&json, &rows, dropped)?;
+    eprintln!("series: wrote {} and {} ({} rows, {} dropped)", path.display(),
+              json.display(), rows.len(), dropped);
     Ok(())
 }
 
@@ -373,6 +434,8 @@ fn cmd_cluster_threads(args: &CliArgs) -> fadmm::Result<()> {
         silence_timeout: 5_000,
         collective_timeout: 5_000,
         obs: fadmm::obs::global_spans_enabled(),
+        timeline: fadmm::obs::global_timeline_enabled(),
+        series: fadmm::obs::global_series_enabled(),
         ..Default::default()
     };
     let graph = fadmm::graph::Topology::Ring.build(nodes)?;
@@ -425,6 +488,8 @@ fn cmd_cluster_procs(args: &CliArgs) -> fadmm::Result<()> {
             fallback_after: 3,
             pipeline: 2,
             obs: fadmm::obs::global_spans_enabled(),
+            timeline: fadmm::obs::global_timeline_enabled(),
+            series: fadmm::obs::global_series_enabled(),
         })
         .collect();
     let mut cluster = ProcCluster::spawn(bin, &inits).map_err(|e| {

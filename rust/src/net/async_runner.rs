@@ -60,12 +60,14 @@ use crate::graph::{Graph, LiveView, NodeId};
 use crate::kernel::{DualPolicy, FlatRound, KernelScratch, NodeKernel, SlotView,
                     StopTracker};
 use crate::metrics::{IterStats, NetCounters, Recorder};
-use crate::obs::{MetricsRegistry, RuntimeProbes};
+use crate::obs::{MetricsRegistry, Phase as ObsPhase, RoundRow, RoundSeries,
+                 RuntimeProbes, Timeline};
 use crate::penalty::{SchemeKind, SchemeParams};
 use crate::util::rng::Pcg;
 
 use super::sim::{Event, FaultPlan, NetSim, Payload, Ticks, TraceEvent, TraceKind};
 use super::topology::{ActivityConfig, TopologyController};
+use super::transport::send_traced;
 
 #[cfg(doc)]
 use crate::consensus::Engine;
@@ -121,6 +123,13 @@ pub struct NetConfig {
     /// enable phase-span timing ([`crate::obs`]); counters/gauges are
     /// always recorded
     pub obs: bool,
+    /// record the causal round timeline ([`crate::obs::Timeline`]):
+    /// per-frame send/deliver events, per-phase durations, fold commits
+    pub timeline: bool,
+    /// record the per-round convergence series
+    /// ([`crate::obs::RoundSeries`]): committed [`IterStats`] plus live
+    /// node/edge counts, one row per fold
+    pub series: bool,
 }
 
 impl Default for NetConfig {
@@ -141,6 +150,8 @@ impl Default for NetConfig {
             tracing: true,
             trace_capacity: crate::obs::DEFAULT_TRACE_CAPACITY,
             obs: false,
+            timeline: false,
+            series: false,
         }
     }
 }
@@ -170,6 +181,16 @@ pub struct NetReport {
     pub counters: NetCounters,
     /// Replayable event trace (empty when `tracing` was off).
     pub trace: Vec<TraceEvent>,
+    /// Causal timeline events (empty unless `cfg.timeline` or the global
+    /// timeline sink was enabled).
+    pub timeline: Vec<crate::obs::TlEvent>,
+    /// Ring-overwritten timeline events (capacity pressure).
+    pub timeline_dropped: u64,
+    /// Per-round committed-stats rows (empty unless `cfg.series` or the
+    /// global series sink was enabled).
+    pub series: Vec<RoundRow>,
+    /// Series rows lost to decimation/capping.
+    pub series_dropped: u64,
     /// Final liveness per node.
     pub live: Vec<bool>,
     /// unified telemetry ([`crate::obs`]): per-phase histograms (when
@@ -333,6 +354,10 @@ pub struct AsyncRunner<S: LocalSolver> {
     /// `Copy` ids on the hot path (clock reads only when `cfg.obs`)
     obs: MetricsRegistry,
     probes: RuntimeProbes,
+    /// causal round timeline (bounded ring; no-op when disabled)
+    timeline: Timeline,
+    /// per-round committed-stats series (no-op when disabled)
+    series: RoundSeries,
 }
 
 impl<S: LocalSolver> AsyncRunner<S> {
@@ -409,10 +434,16 @@ impl<S: LocalSolver> AsyncRunner<S> {
         let mut obs =
             MetricsRegistry::new(cfg.obs || crate::obs::global_spans_enabled());
         let probes = RuntimeProbes::register(&mut obs);
+        let timeline =
+            Timeline::new(cfg.timeline || crate::obs::global_timeline_enabled());
+        let series =
+            RoundSeries::new(cfg.series || crate::obs::global_series_enabled());
         let latest_committed = nodes.iter().map(|nd| nd.theta.clone()).collect();
         AsyncRunner {
             obs,
             probes,
+            timeline,
+            series,
             scratch: KernelScratch::new(dim, max_deg),
             mask_scratch: Vec::with_capacity(max_deg),
             fold: FoldState {
@@ -470,7 +501,10 @@ impl<S: LocalSolver> AsyncRunner<S> {
             }
             self.sim.advance_to(at);
             match event {
-                Event::Deliver { src, dst, payload, dup: _ } => {
+                Event::Deliver { src, dst, payload, dup: _, ctx } => {
+                    if self.timeline.enabled() {
+                        self.timeline.recv(at, dst, ctx, payload.kind_name());
+                    }
                     self.on_deliver(src, dst, payload);
                 }
                 Event::Wake { node, epoch: _ } => {
@@ -512,8 +546,10 @@ impl<S: LocalSolver> AsyncRunner<S> {
             let j = self.ctrl.view().graph().neighbors(i)[slot];
             let theta = self.nodes[i].theta.clone();
             let eta = self.nodes[i].kernel.etas[slot];
-            self.sim.send(i, j, Payload::Theta { stamp: ts, theta }, true);
-            self.sim.send(i, j, Payload::Eta { stamp: es, eta }, true);
+            send_traced(&mut self.sim, &mut self.timeline, i, j,
+                        Payload::Theta { stamp: ts, theta }, true);
+            send_traced(&mut self.sim, &mut self.timeline, i, j,
+                        Payload::Eta { stamp: es, eta }, true);
         }
     }
 
@@ -599,8 +635,10 @@ impl<S: LocalSolver> AsyncRunner<S> {
                 .expect("graph symmetry");
             let theta = self.nodes[j].theta.clone();
             let eta = self.nodes[j].kernel.etas[rev];
-            self.sim.send(j, node, Payload::Theta { stamp: ts, theta }, true);
-            self.sim.send(j, node, Payload::Eta { stamp: es, eta }, true);
+            send_traced(&mut self.sim, &mut self.timeline, j, node,
+                        Payload::Theta { stamp: ts, theta }, true);
+            send_traced(&mut self.sim, &mut self.timeline, j, node,
+                        Payload::Eta { stamp: es, eta }, true);
             self.pending_wakes.push(j);
         }
         self.try_advance(node, false);
@@ -644,12 +682,17 @@ impl<S: LocalSolver> AsyncRunner<S> {
                 Phase::Solve => {
                     let span = self.obs.span();
                     let ok = phase_a(&mut self.nodes[i], i, self.ctrl.view(),
-                                     &mut self.scratch, &mut self.sim, &self.cfg,
-                                     force);
-                    self.obs.end(self.probes.solve, span);
+                                     &mut self.scratch, &mut self.sim,
+                                     &mut self.timeline, &self.cfg, force);
+                    let ns = self.obs.end(self.probes.solve, span);
                     if !ok {
                         self.arm_timeout(i);
                         return;
+                    }
+                    if self.timeline.enabled() {
+                        let t = self.nodes[i].t;
+                        self.timeline
+                            .phase(self.sim.now(), i, t, ObsPhase::Solve, ns);
                     }
                     self.nodes[i].phase = Phase::Reduce;
                 }
@@ -658,12 +701,16 @@ impl<S: LocalSolver> AsyncRunner<S> {
                     let contrib = phase_b(&mut self.nodes[i], i, self.ctrl.view(),
                                           &mut self.scratch, &mut self.sim,
                                           &self.cfg, force);
-                    self.obs.end(self.probes.reduce, span);
+                    let ns = self.obs.end(self.probes.reduce, span);
                     let Some(contrib) = contrib else {
                         self.arm_timeout(i);
                         return;
                     };
                     let t = self.nodes[i].t;
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.sim.now(), i, t, ObsPhase::Reduce, ns);
+                    }
                     self.nodes[i].phase = Phase::FoldWait;
                     self.record_contribution(t, i, contrib);
                     self.try_folds();
@@ -679,10 +726,14 @@ impl<S: LocalSolver> AsyncRunner<S> {
                     }
                     let span = self.obs.span();
                     let toggled = phase_c(&mut self.nodes[i], i, &mut self.ctrl,
-                                          &mut self.sim, &self.cfg,
-                                          self.fold.globals,
+                                          &mut self.sim, &mut self.timeline,
+                                          &self.cfg, self.fold.globals,
                                           &mut self.mask_scratch);
-                    self.obs.end(self.probes.observe, span);
+                    let ns = self.obs.end(self.probes.observe, span);
+                    if self.timeline.enabled() {
+                        self.timeline
+                            .phase(self.sim.now(), i, t, ObsPhase::Observe, ns);
+                    }
                     for (a, b) in toggled {
                         self.pending_wakes.push(a);
                         self.pending_wakes.push(b);
@@ -819,7 +870,7 @@ impl<S: LocalSolver> AsyncRunner<S> {
             None => 0.0,
         };
 
-        let stop = self.fold.tracker.commit(r as usize, IterStats {
+        let stats = IterStats {
             iter: r as usize,
             objective: g.objective,
             max_primal: g.max_primal,
@@ -828,17 +879,44 @@ impl<S: LocalSolver> AsyncRunner<S> {
             min_eta: g.min_eta,
             max_eta: g.max_eta,
             app_error,
-        });
+        };
+        let stop = self.fold.tracker.commit(r as usize, stats);
         self.fold.globals = (g.global_primal, g.global_dual);
         self.fold.next_fold = r + 1;
         self.sim.record(TraceKind::Fold { round: r });
-        self.obs.end(self.probes.collective_fold, span);
+        let fold_ns = self.obs.end(self.probes.collective_fold, span);
         self.obs.inc(self.probes.rounds, 1);
+        self.record_commit(r, stats, fold_ns);
         self.foldwait_dirty = true;
 
         if stop {
             self.stopped = true;
             self.sim.record(TraceKind::Stop { rounds: r + 1 });
+        }
+    }
+
+    /// Timeline + series bookkeeping for a committed fold. The fold runs
+    /// in the omniscient oracle (no owning node), so its timeline events
+    /// land on a synthetic track one past the last node id.
+    fn record_commit(&mut self, r: u64, stats: IterStats, fold_ns: u64) {
+        let oracle = self.nodes.len();
+        if self.timeline.enabled() {
+            let now = self.sim.now();
+            self.timeline
+                .phase(now, oracle, r, ObsPhase::CollectiveFold, fold_ns);
+            self.timeline.commit(now, oracle, r);
+        }
+        if self.series.enabled() {
+            let view = self.ctrl.view();
+            let row = RoundRow {
+                round: r,
+                at: self.sim.now(),
+                stats,
+                live_nodes: view.live_count() as u64,
+                live_edges: view.live_edge_count() as u64,
+                phase_ns: self.timeline.phase_ns(r),
+            };
+            self.series.push(row);
         }
     }
 
@@ -853,7 +931,19 @@ impl<S: LocalSolver> AsyncRunner<S> {
         self.obs.set_gauge(vt, self.sim.now() as f64);
         self.obs.absorb_net(&self.sim.counters);
         self.obs.absorb_trace(trace.len(), self.sim.counters.trace_dropped);
+        let timeline = self.timeline.drain();
+        let timeline_dropped = self.timeline.dropped();
+        let series = self.series.drain();
+        let series_dropped = self.series.dropped();
+        self.obs.absorb_timeline(timeline.len(), timeline_dropped,
+                                 series.len(), series_dropped);
         crate::obs::global_merge(&self.obs);
+        if crate::obs::global_timeline_enabled() {
+            crate::obs::global_timeline_merge(timeline.clone());
+        }
+        if crate::obs::global_series_enabled() {
+            crate::obs::global_series_merge(series.clone(), series_dropped);
+        }
         NetReport {
             iterations: self.fold.next_fold as usize,
             converged: self.fold.tracker.converged,
@@ -862,6 +952,10 @@ impl<S: LocalSolver> AsyncRunner<S> {
             virtual_time: self.sim.now(),
             counters: self.sim.counters,
             trace,
+            timeline,
+            timeline_dropped,
+            series,
+            series_dropped,
             live,
             obs: self.obs,
         }
@@ -943,7 +1037,8 @@ impl SlotView for CacheSlots<'_> {
 /// Phase A: the local solve on (ideally) epoch-`t` neighbour parameters.
 fn phase_a<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
                            scratch: &mut KernelScratch, sim: &mut NetSim,
-                           cfg: &NetConfig, force: bool) -> bool {
+                           tl: &mut Timeline, cfg: &NetConfig, force: bool)
+                           -> bool {
     let t = node.t;
     if !slots_ready(node, i, view, t, None, cfg.max_staleness, force) {
         return false;
@@ -971,8 +1066,9 @@ fn phase_a<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
         if !view.slot_live(i, slot) {
             continue;
         }
-        sim.send(i, j, Payload::Theta { stamp: t + 1, theta: node.theta.clone() },
-                 false);
+        send_traced(sim, tl, i, j,
+                    Payload::Theta { stamp: t + 1, theta: node.theta.clone() },
+                    false);
     }
     true
 }
@@ -1016,8 +1112,8 @@ fn phase_b<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId, view: &LiveView,
 /// Phase C: penalty-scheme update, η broadcast, topology observation.
 fn phase_c<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId,
                            ctrl: &mut TopologyController, sim: &mut NetSim,
-                           cfg: &NetConfig, globals: (f64, f64),
-                           mask_scratch: &mut Vec<bool>)
+                           tl: &mut Timeline, cfg: &NetConfig,
+                           globals: (f64, f64), mask_scratch: &mut Vec<bool>)
                            -> Vec<(NodeId, NodeId)> {
     let t = node.t;
     let deg = ctrl.view().graph().degree(i);
@@ -1040,8 +1136,9 @@ fn phase_c<S: LocalSolver>(node: &mut NodeRt<S>, i: NodeId,
         if !ctrl.view().slot_live(i, slot) {
             continue;
         }
-        sim.send(i, j, Payload::Eta { stamp: t + 1, eta: node.kernel.etas[slot] },
-                 false);
+        send_traced(sim, tl, i, j,
+                    Payload::Eta { stamp: t + 1, eta: node.kernel.etas[slot] },
+                    false);
     }
 
     ctrl.observe_etas(i, &node.kernel.etas, sim)

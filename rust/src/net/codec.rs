@@ -17,6 +17,7 @@ use crate::error::{Error, Result};
 use crate::graph::NodeId;
 use crate::kernel::StopSnapshot;
 use crate::metrics::{CheckerState, IterStats, StatPartial};
+use crate::obs::TraceCtx;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::sim::Payload;
@@ -91,6 +92,34 @@ fn f64s(xs: &[f64]) -> Json {
 
 fn f64s_of(v: &Json, key: &str, what: &str) -> Result<Vec<f64>> {
     req_arr(v, key, what)?.iter().map(|x| f64_of(x, key)).collect()
+}
+
+// -- trace context ------------------------------------------------------------
+
+/// Encode a frame's [`TraceCtx`] for the process wire — the `"ctx"` key
+/// on the *routed line* (next to `"src"`/`"dst"`/`"body"`), not inside
+/// the payload body, so payload round-trips stay byte-identical to the
+/// pre-tracing wire.
+pub(crate) fn ctx_to_json(ctx: TraceCtx) -> Json {
+    obj(vec![
+        ("m", num(ctx.machine as f64)),
+        ("r", num(ctx.round as f64)),
+        ("s", num(ctx.seq as f64)),
+    ])
+}
+
+/// Decode an optional wire trace context. Absent → [`TraceCtx::default`]
+/// — the same interop trick as `ProcInit.obs`: a peer built before this
+/// field simply produces frames with the zero context.
+pub(crate) fn ctx_from_json(v: Option<&Json>) -> Result<TraceCtx> {
+    match v {
+        None => Ok(TraceCtx::default()),
+        Some(c) => Ok(TraceCtx {
+            round: req_u64(c, "r", "ctx")?,
+            machine: req_usize(c, "m", "ctx")?,
+            seq: req_u64(c, "s", "ctx")?,
+        }),
+    }
 }
 
 // -- component structs -------------------------------------------------------
@@ -558,6 +587,19 @@ mod tests {
             arr(ra.stats.iter().map(iter_stats_to_json).collect()).to_string(),
             arr(rb.stats.iter().map(iter_stats_to_json).collect()).to_string(),
         );
+    }
+
+    #[test]
+    fn trace_ctx_round_trips_and_defaults_when_absent() {
+        let ctx = TraceCtx { round: 41, machine: 3, seq: 1027 };
+        let line = ctx_to_json(ctx).to_string();
+        let back = ctx_from_json(Some(&Json::parse(&line).unwrap())).unwrap();
+        assert_eq!(back, ctx);
+        // absent on the wire (old peer) → zero context, not an error
+        assert_eq!(ctx_from_json(None).unwrap(), TraceCtx::default());
+        // present but malformed is still an error
+        let bad = Json::parse(r#"{"r":1,"m":2}"#).unwrap();
+        assert!(ctx_from_json(Some(&bad)).is_err());
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::collections::BinaryHeap;
 use crate::graph::NodeId;
 use crate::kernel::StopSnapshot;
 use crate::metrics::{NetCounters, StatPartial};
-use crate::obs::FlightRecorder;
+use crate::obs::{FlightRecorder, TraceCtx};
 use crate::util::rng::Pcg;
 
 /// Virtual time in ticks (dimensionless; latency/timeout parameters give
@@ -210,8 +210,11 @@ pub enum TimerKind {
 /// What the consumer sees when it pops the queue.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Event {
-    /// A message arrival. `dup` marks duplicated copies (for the trace).
-    Deliver { src: NodeId, dst: NodeId, payload: Payload, dup: bool },
+    /// A message arrival. `dup` marks duplicated copies (for the trace);
+    /// `ctx` is the sender-minted trace context (both copies of a
+    /// duplicated frame share the original's, so the timeline draws two
+    /// arrows from one send).
+    Deliver { src: NodeId, dst: NodeId, payload: Payload, dup: bool, ctx: TraceCtx },
     /// A silence-timeout wakeup armed by the consumer; `epoch` lets the
     /// consumer discard wakeups that a later advance made stale.
     Wake { node: NodeId, epoch: u64 },
@@ -291,6 +294,12 @@ impl Eq for Event {}
 pub struct NetSim {
     now: Ticks,
     seq: u64,
+    /// Frames minted so far — the `seq` of the next [`TraceCtx`].
+    /// Independent of the scheduler's `seq` tie-break so minting can
+    /// never perturb event ordering; advances for dropped frames too
+    /// (a drop still *was* a send, and the counter must not depend on
+    /// fault outcomes differently than the rng stream already does).
+    frames: u64,
     queue: BinaryHeap<Reverse<Scheduled>>,
     rng: Pcg,
     plan: FaultPlan,
@@ -305,6 +314,7 @@ impl NetSim {
         let mut sim = NetSim {
             now: 0,
             seq: 0,
+            frames: 0,
             queue: BinaryHeap::new(),
             // dedicated stream so network randomness never perturbs the
             // optimization seeds
@@ -377,22 +387,28 @@ impl NetSim {
     /// Send a protocol message, applying the fault plan. `reliable`
     /// bypasses loss/duplication/partitions (used for the one-shot join
     /// handshake, so a node that ever had a live neighbour also has a
-    /// cache entry for it); latency still applies.
-    pub fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool) {
+    /// cache entry for it); latency still applies. Returns the frame's
+    /// minted [`TraceCtx`] (also stamped on the eventual `Deliver`
+    /// event) — minting is one integer increment on a counter disjoint
+    /// from the scheduler tie-break and the rng stream, so it is
+    /// identical whether or not anyone records the returned context.
+    pub fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool) -> TraceCtx {
         self.counters.sent += 1;
         let stamp = payload.stamp();
         let what = payload.kind_name();
+        let ctx = TraceCtx { round: stamp, machine: src, seq: self.frames };
+        self.frames += 1;
         self.record(TraceKind::Send { src, dst, what, stamp });
         if !reliable {
             if self.plan.partitioned(self.now, src, dst) {
                 self.counters.dropped_partition += 1;
                 self.record(TraceKind::DropPartition { src, dst, stamp });
-                return;
+                return ctx;
             }
             if self.plan.link.loss > 0.0 && self.rng.f64() < self.plan.link.loss {
                 self.counters.dropped_loss += 1;
                 self.record(TraceKind::DropLoss { src, dst, stamp });
-                return;
+                return ctx;
             }
         }
         let copies = if !reliable && self.plan.link.dup > 0.0
@@ -411,8 +427,10 @@ impl NetSim {
                 dst,
                 payload: payload.clone(),
                 dup: copy > 0,
+                ctx,
             });
         }
+        ctx
     }
 
     fn sample_latency(&mut self) -> Ticks {
@@ -513,7 +531,7 @@ mod tests {
         let mut got = 0;
         while let Some(ev) = sim.pop_advance() {
             match ev {
-                Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+                Event::Deliver { src: 0, dst: 1, payload, dup: false, ctx: _ } => {
                     assert_eq!(payload.stamp(), got, "FIFO at fixed latency");
                     got += 1;
                 }

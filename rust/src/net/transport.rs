@@ -26,7 +26,7 @@ use std::time::{Duration, Instant};
 
 use crate::graph::NodeId;
 use crate::metrics::NetCounters;
-use crate::obs::{FlightRecorder, DEFAULT_TRACE_CAPACITY};
+use crate::obs::{FlightRecorder, Timeline, TraceCtx, DEFAULT_TRACE_CAPACITY};
 
 use super::sim::{Event, NetSim, Payload, Ticks, TraceEvent, TraceKind};
 
@@ -40,8 +40,12 @@ pub trait Transport {
 
     /// Send a protocol message. The sim applies its fault plan unless
     /// `reliable`; real transports deliver best-effort (a dead peer
-    /// just never reads it) and ignore the flag.
-    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool);
+    /// just never reads it) and ignore the flag. Returns the frame's
+    /// minted [`TraceCtx`] — one integer increment per send, on every
+    /// transport, whether or not a timeline records it (so the wire is
+    /// identical with tracing on and off).
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool)
+        -> TraceCtx;
 
     /// Schedule a consumer timer ([`Event::Wake`] / [`Event::Timer`])
     /// at absolute time `at`.
@@ -82,6 +86,28 @@ pub trait Transport {
     fn take_trace(&mut self) -> Vec<TraceEvent>;
 }
 
+/// [`Transport::send`] + [`Timeline::send`] in one call with disjoint
+/// borrows (the runtimes hold the transport and the timeline as sibling
+/// fields, so a `&mut self` method can't do this). The clock read is
+/// gated on the timeline being live: a timeline-off run performs
+/// *exactly* the sends the pre-timeline code did — same wire frames,
+/// same counters, no extra `now()` (which is a wall read on real
+/// transports).
+pub fn send_traced<T: Transport>(
+    net: &mut T,
+    tl: &mut Timeline,
+    src: NodeId,
+    dst: NodeId,
+    payload: Payload,
+    reliable: bool,
+) {
+    let what = payload.kind_name();
+    let ctx = net.send(src, dst, payload, reliable);
+    if tl.enabled() {
+        tl.send(net.now(), ctx, dst, what);
+    }
+}
+
 /// The simulator *is* the first transport: pure forwarding, so the
 /// pre-trait behaviour is bit-identical (pinned by `cluster::tests`).
 impl Transport for NetSim {
@@ -89,8 +115,10 @@ impl Transport for NetSim {
         NetSim::now(self)
     }
 
-    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool) {
-        NetSim::send(self, src, dst, payload, reliable);
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, reliable: bool)
+        -> TraceCtx
+    {
+        NetSim::send(self, src, dst, payload, reliable)
     }
 
     fn schedule(&mut self, at: Ticks, event: Event) {
@@ -150,6 +178,9 @@ pub struct ChannelTransport {
     /// runner keeps at most a handful armed per machine)
     timers: Vec<(Ticks, u64, Event)>,
     seq: u64,
+    /// frames minted so far (the next [`TraceCtx::seq`]); disjoint from
+    /// the timer tie-break `seq`
+    frames: u64,
     tracing: bool,
     trace: FlightRecorder<TraceEvent>,
     pub counters: NetCounters,
@@ -192,6 +223,7 @@ pub fn channel_mesh(machines: usize, tracing: bool)
                 peers,
                 timers: Vec::new(),
                 seq: 0,
+                frames: 0,
                 tracing,
                 trace: FlightRecorder::new(if tracing { DEFAULT_TRACE_CAPACITY } else { 0 }),
                 counters: NetCounters::default(),
@@ -254,14 +286,18 @@ impl Transport for ChannelTransport {
         self.epoch.elapsed().as_millis() as Ticks
     }
 
-    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool) {
+    fn send(&mut self, src: NodeId, dst: NodeId, payload: Payload, _reliable: bool)
+        -> TraceCtx
+    {
         self.counters.sent += 1;
         let stamp = payload.stamp();
         let what = payload.kind_name();
+        let ctx = TraceCtx { round: stamp, machine: src, seq: self.frames };
+        self.frames += 1;
         if self.tracing {
             self.trace_push(TraceEvent { at: self.now(), kind: TraceKind::Send { src, dst, what, stamp } });
         }
-        let ev = Event::Deliver { src, dst, payload, dup: false };
+        let ev = Event::Deliver { src, dst, payload, dup: false, ctx };
         if self.peers[dst].send(ev).is_err() {
             // peer thread exited — the real-world analogue of a dead
             // destination
@@ -270,6 +306,7 @@ impl Transport for ChannelTransport {
                 self.trace_push(TraceEvent { at: self.now(), kind: TraceKind::DropDead { src, dst, stamp } });
             }
         }
+        ctx
     }
 
     fn schedule(&mut self, at: Ticks, event: Event) {
@@ -376,7 +413,8 @@ mod tests {
         let (at, ev) = t.pop().unwrap();
         t.advance_to(at);
         match ev {
-            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false, ctx } => {
+                assert_eq!(ctx.machine, 0, "ctx is minted by the sender");
                 t.note_delivered(0, 1, &payload);
             }
             other => panic!("unexpected {other:?}"),
@@ -406,8 +444,13 @@ mod tests {
         a.send(0, 1, Payload::Eta { stamp: 9, eta: 1.5 }, false);
         let (_, ev) = b.pop().unwrap();
         match ev {
-            Event::Deliver { src: 0, dst: 1, payload, dup: false } => {
+            Event::Deliver { src: 0, dst: 1, payload, dup: false, ctx } => {
                 assert_eq!(payload, Payload::Eta { stamp: 9, eta: 1.5 });
+                assert_eq!(
+                    ctx,
+                    TraceCtx { round: 9, machine: 0, seq: 0 },
+                    "first frame from machine 0 carries (round=stamp, seq=0)"
+                );
                 b.note_delivered(0, 1, &payload);
             }
             other => panic!("unexpected {other:?}"),

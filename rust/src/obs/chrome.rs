@@ -1,0 +1,204 @@
+//! Chrome trace-event JSON export of a [`Timeline`] — open the file in
+//! `chrome://tracing` or <https://ui.perfetto.dev>.
+//!
+//! Layout: one process (`pid` 1, named after the run), one track
+//! (`tid` = machine id) per machine, with a `thread_name` metadata
+//! record per track. Events map as:
+//!
+//! | timeline event | trace event |
+//! |---|---|
+//! | [`TlKind::Phase`] | `"X"` complete slice (`dur` from the span ns) |
+//! | [`TlKind::Send`] | 1 µs `"X"` slice + `"s"` flow start |
+//! | [`TlKind::Recv`] | 1 µs `"X"` slice + `"f"` flow finish |
+//! | [`TlKind::Commit`] | `"i"` instant (thread scope) |
+//!
+//! Flow ids are the frame's `"machine:seq"` context key, so every
+//! delivered frame draws a send→deliver arrow between machine tracks —
+//! including duplicated deliveries, which share the send's id. `ts` is
+//! transport ticks converted to µs (ticks are ms on every transport:
+//! virtual ms on the simulator, wall ms on the real backends), so the
+//! horizontal axis is the transport clock, not the host clock.
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::timeline::{TlEvent, TlKind};
+
+/// Ticks (ms) → trace-event `ts` (µs).
+fn ts_us(at: u64) -> f64 {
+    (at as f64) * 1000.0
+}
+
+fn base(name: &str, ph: &str, machine: usize, at: u64) -> Vec<(&'static str, Json)> {
+    vec![
+        ("name", s(name)),
+        ("ph", s(ph)),
+        ("pid", num(1.0)),
+        ("tid", num(machine as f64)),
+        ("ts", num(ts_us(at))),
+        ("cat", s("fadmm")),
+    ]
+}
+
+/// Build the trace-event document for a drained timeline. `run` names
+/// the process track (e.g. the repro subcommand).
+pub fn chrome_trace_json(run: &str, events: &[TlEvent]) -> Json {
+    let mut out: Vec<Json> = Vec::new();
+
+    // one metadata record per machine track, emitted for every machine
+    // that appears anywhere in the event stream
+    let mut machines: Vec<usize> = events.iter().map(|e| e.machine).collect();
+    machines.sort_unstable();
+    machines.dedup();
+    out.push(obj(vec![
+        ("name", s("process_name")),
+        ("ph", s("M")),
+        ("pid", num(1.0)),
+        ("tid", num(0.0)),
+        ("args", obj(vec![("name", s(run))])),
+    ]));
+    for &m in &machines {
+        out.push(obj(vec![
+            ("name", s("thread_name")),
+            ("ph", s("M")),
+            ("pid", num(1.0)),
+            ("tid", num(m as f64)),
+            ("args", obj(vec![("name", s(format!("machine {m}")))])),
+        ]));
+    }
+
+    for ev in events {
+        let round_arg = ("round", num(ev.round as f64));
+        match ev.kind {
+            TlKind::Phase { phase, dur_ns } => {
+                let mut e = base(phase.name(), "X", ev.machine, ev.at);
+                // a slice needs a visible duration; spans-off runs
+                // record 0 ns, rendered as the 1 µs minimum
+                e.push(("dur", num(((dur_ns / 1000).max(1)) as f64)));
+                e.push(("args", obj(vec![round_arg, ("dur_ns", num(dur_ns as f64))])));
+                out.push(obj(e));
+            }
+            TlKind::Send { seq, dst, what } => {
+                let id = format!("{}:{}", ev.machine, seq);
+                let mut slice = base(&format!("send {what}"), "X", ev.machine, ev.at);
+                slice.push(("dur", num(1.0)));
+                slice.push(("args", obj(vec![round_arg, ("dst", num(dst as f64))])));
+                out.push(obj(slice));
+                let mut flow = base(what, "s", ev.machine, ev.at);
+                flow.push(("id", s(id)));
+                out.push(obj(flow));
+            }
+            TlKind::Recv { seq, src, what } => {
+                let id = format!("{src}:{seq}");
+                let mut slice = base(&format!("recv {what}"), "X", ev.machine, ev.at);
+                slice.push(("dur", num(1.0)));
+                slice.push(("args", obj(vec![round_arg, ("src", num(src as f64))])));
+                out.push(obj(slice));
+                let mut flow = base(what, "f", ev.machine, ev.at);
+                flow.push(("id", s(id)));
+                // bind to the enclosing (recv) slice rather than the next
+                flow.push(("bp", s("e")));
+                out.push(obj(flow));
+            }
+            TlKind::Commit => {
+                let mut e = base(&format!("commit r{}", ev.round), "i", ev.machine, ev.at);
+                e.push(("s", s("t")));
+                e.push(("args", obj(vec![round_arg])));
+                out.push(obj(e));
+            }
+        }
+    }
+
+    obj(vec![
+        ("traceEvents", arr(out)),
+        ("displayTimeUnit", s("ms")),
+    ])
+}
+
+/// Write the trace-event document to `path`.
+pub fn write_chrome_trace(path: &Path, run: &str, events: &[TlEvent]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .map_err(|e| Error::io(format!("mkdir {}", dir.display()), e))?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json(run, events).to_string())
+        .map_err(|e| Error::io(format!("write {}", path.display()), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeline::{Phase, TraceCtx, Timeline};
+
+    fn sample_events() -> Vec<TlEvent> {
+        let mut tl = Timeline::new(true);
+        let ctx = TraceCtx { round: 3, machine: 0, seq: 17 };
+        tl.phase(10, 0, 3, Phase::Solve, 2_500_000);
+        tl.send(11, ctx, 1, "theta");
+        tl.recv(14, 1, ctx, "theta");
+        tl.commit(15, 1, 3);
+        tl.drain()
+    }
+
+    fn events_of(j: &Json) -> Vec<Json> {
+        j.get("traceEvents").unwrap().as_arr().unwrap().to_vec()
+    }
+
+    #[test]
+    fn tracks_and_flows_are_emitted() {
+        let j = chrome_trace_json("test", &sample_events());
+        let evs = events_of(&j);
+        // process_name + two thread_name records (machines 0 and 1)
+        let meta: Vec<&Json> = evs
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 3);
+        assert!(meta.iter().any(|e| {
+            e.get("args").unwrap().get("name").unwrap().as_str() == Some("machine 1")
+        }));
+        // the send→deliver flow shares one id across "s" and "f"
+        let flow_s = evs
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("s"))
+            .expect("flow start");
+        let flow_f = evs
+            .iter()
+            .find(|e| e.get("ph").unwrap().as_str() == Some("f"))
+            .expect("flow finish");
+        assert_eq!(flow_s.get("id"), flow_f.get("id"));
+        assert_eq!(flow_s.get("id").unwrap().as_str(), Some("0:17"));
+        assert_eq!(flow_s.get("tid").unwrap().as_f64(), Some(0.0));
+        assert_eq!(flow_f.get("tid").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn phase_slices_carry_duration_and_round() {
+        let j = chrome_trace_json("test", &sample_events());
+        let evs = events_of(&j);
+        let solve = evs
+            .iter()
+            .find(|e| e.get("name").unwrap().as_str() == Some("solve"))
+            .expect("solve slice");
+        assert_eq!(solve.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(solve.get("dur").unwrap().as_f64(), Some(2500.0), "ns → µs");
+        assert_eq!(solve.get("ts").unwrap().as_f64(), Some(10_000.0), "ms → µs");
+        assert_eq!(
+            solve.get("args").unwrap().get("round").unwrap().as_f64(),
+            Some(3.0)
+        );
+    }
+
+    #[test]
+    fn document_parses_and_has_display_unit() {
+        let j = chrome_trace_json("test", &sample_events());
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+        assert!(!events_of(&back).is_empty());
+    }
+}

@@ -1,0 +1,319 @@
+//! Per-round critical-path attribution over the causal timeline.
+//!
+//! [`analyze`] walks a drained [`Timeline`] event stream and, for every
+//! round that committed, attributes the round's wall time to:
+//!
+//! * the five protocol phases (max across machines per phase — the
+//!   slowest machine is the one the commit waited on),
+//! * **network** — the slowest matched send→deliver frame latency of
+//!   the round (transport ticks; on the simulator this is virtual link
+//!   latency, on the real transports wall ms),
+//! * **straggler_wait** — whatever remains of the commit-to-commit wall
+//!   gap after phases and network are accounted, clamped at zero. Large
+//!   values mean the round sat waiting on something the timeline did
+//!   not see (a stalled peer, collective retries, host scheduling).
+//!
+//! Phase durations are span nanoseconds (host clock); wall and network
+//! come from transport ticks (ms). The two clocks agree on the real
+//! backends; on the simulator compute-ns are host time while the wall
+//! is virtual, which still ranks rounds correctly (ticks dominate) and
+//! is documented in the run-report guide. A round's `dominant` bucket
+//! is the largest of the seven attributions on a common ns scale.
+//!
+//! The report ([`critical_path_json`] / [`critical_path_text`]) lists
+//! the top-k slowest rounds — the "why was round 412 slow?" answer.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::timeline::{Phase, TlEvent, TlKind, NPHASES};
+
+/// Ticks (ms) expressed as nanoseconds, for comparing against span ns.
+fn ticks_ns(t: u64) -> u64 {
+    t.saturating_mul(1_000_000)
+}
+
+/// One analyzed round.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RoundPath {
+    pub round: u64,
+    /// Commit-to-previous-commit gap, in transport ticks (ms).
+    pub wall_ticks: u64,
+    /// Per-phase span ns, max across machines (ordered by
+    /// [`Phase::index`]).
+    pub phase_ns: [u64; NPHASES],
+    /// Slowest matched frame latency in the round, in ticks.
+    pub network_ticks: u64,
+    /// Frames of the round observed sent / delivered.
+    pub frames_sent: u64,
+    pub frames_delivered: u64,
+    /// Unattributed remainder of the wall gap, in ns (clamped ≥ 0).
+    pub straggler_wait_ns: u64,
+    /// The largest attribution bucket.
+    pub dominant: &'static str,
+}
+
+impl RoundPath {
+    pub fn wall_ns(&self) -> u64 {
+        ticks_ns(self.wall_ticks)
+    }
+}
+
+/// Scratch per-round accumulation keyed by round id.
+#[derive(Debug, Default, Clone)]
+struct RoundAcc {
+    /// phase ns summed per (machine, phase), folded to a max in finish
+    per_machine: Vec<(usize, [u64; NPHASES])>,
+    /// open sends of this round: (machine, seq, at)
+    sends: Vec<(usize, u64, u64)>,
+    max_latency: u64,
+    frames_sent: u64,
+    frames_delivered: u64,
+    commit_at: Option<u64>,
+}
+
+impl RoundAcc {
+    fn machine_slot(&mut self, machine: usize) -> &mut [u64; NPHASES] {
+        if let Some(i) = self.per_machine.iter().position(|(m, _)| *m == machine) {
+            return &mut self.per_machine[i].1;
+        }
+        self.per_machine.push((machine, [0; NPHASES]));
+        &mut self.per_machine.last_mut().unwrap().1
+    }
+}
+
+/// Analyze a drained timeline: one [`RoundPath`] per committed round,
+/// sorted by descending wall time, truncated to `top_k` (0 = keep all).
+pub fn analyze(events: &[TlEvent], top_k: usize) -> Vec<RoundPath> {
+    // group events by round id (rounds are few and mostly ordered, so a
+    // linear-probed Vec beats a map here and keeps ordering stable)
+    let mut rounds: Vec<(u64, RoundAcc)> = Vec::new();
+    let acc = |rounds: &mut Vec<(u64, RoundAcc)>, r: u64| -> usize {
+        if let Some(i) = rounds.iter().position(|(k, _)| *k == r) {
+            return i;
+        }
+        rounds.push((r, RoundAcc::default()));
+        rounds.len() - 1
+    };
+
+    for ev in events {
+        let i = acc(&mut rounds, ev.round);
+        let a = &mut rounds[i].1;
+        match ev.kind {
+            TlKind::Phase { phase, dur_ns } => {
+                a.machine_slot(ev.machine)[phase.index()] += dur_ns;
+            }
+            TlKind::Send { seq, .. } => {
+                a.frames_sent += 1;
+                a.sends.push((ev.machine, seq, ev.at));
+            }
+            TlKind::Recv { seq, src, .. } => {
+                a.frames_delivered += 1;
+                if let Some(p) = a.sends.iter().position(|&(m, q, _)| m == src && q == seq)
+                {
+                    let sent_at = a.sends[p].2;
+                    a.max_latency = a.max_latency.max(ev.at.saturating_sub(sent_at));
+                }
+            }
+            TlKind::Commit => {
+                // keep the latest commit timestamp (gossip can re-commit)
+                a.commit_at = Some(a.commit_at.map_or(ev.at, |c| c.max(ev.at)));
+            }
+        }
+    }
+
+    // wall time per round = gap between consecutive commit timestamps;
+    // the first committed round measures from the earliest event seen
+    let t0 = events.iter().map(|e| e.at).min().unwrap_or(0);
+    let mut committed: Vec<(u64, u64)> = rounds
+        .iter()
+        .filter_map(|(r, a)| a.commit_at.map(|at| (*r, at)))
+        .collect();
+    committed.sort_unstable_by_key(|&(_, at)| at);
+
+    let mut out: Vec<RoundPath> = Vec::with_capacity(committed.len());
+    let mut prev_at = t0;
+    for (r, at) in committed {
+        let a = &rounds.iter().find(|(k, _)| *k == r).unwrap().1;
+        let wall_ticks = at.saturating_sub(prev_at);
+        prev_at = at;
+
+        let mut phase_ns = [0u64; NPHASES];
+        for (_, ns) in &a.per_machine {
+            for (slot, &v) in phase_ns.iter_mut().zip(ns.iter()) {
+                *slot = (*slot).max(v);
+            }
+        }
+        let network_ns = ticks_ns(a.max_latency);
+        let accounted: u64 = phase_ns.iter().sum::<u64>() + network_ns;
+        let straggler_wait_ns = ticks_ns(wall_ticks).saturating_sub(accounted);
+
+        let mut dominant = "network";
+        let mut best = network_ns;
+        for p in Phase::ALL {
+            if phase_ns[p.index()] > best {
+                best = phase_ns[p.index()];
+                dominant = p.name();
+            }
+        }
+        if straggler_wait_ns > best {
+            dominant = "straggler_wait";
+        }
+
+        out.push(RoundPath {
+            round: r,
+            wall_ticks,
+            phase_ns,
+            network_ticks: a.max_latency,
+            frames_sent: a.frames_sent,
+            frames_delivered: a.frames_delivered,
+            straggler_wait_ns,
+            dominant,
+        });
+    }
+
+    out.sort_by(|a, b| {
+        b.wall_ticks.cmp(&a.wall_ticks).then(a.round.cmp(&b.round))
+    });
+    if top_k > 0 {
+        out.truncate(top_k);
+    }
+    out
+}
+
+/// The critical-path report as JSON (`<trace>.critical_path.json`).
+pub fn critical_path_json(paths: &[RoundPath], analyzed_events: usize) -> Json {
+    let items = paths
+        .iter()
+        .map(|p| {
+            obj(vec![
+                ("round", num(p.round as f64)),
+                ("wall_ticks", num(p.wall_ticks as f64)),
+                ("network_ticks", num(p.network_ticks as f64)),
+                ("frames_sent", num(p.frames_sent as f64)),
+                ("frames_delivered", num(p.frames_delivered as f64)),
+                ("straggler_wait_ns", num(p.straggler_wait_ns as f64)),
+                ("dominant", s(p.dominant)),
+                (
+                    "phase_ns",
+                    obj(Phase::ALL
+                        .iter()
+                        .map(|ph| (ph.name(), num(p.phase_ns[ph.index()] as f64)))
+                        .collect()),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("rounds", arr(items)),
+        ("analyzed_events", num(analyzed_events as f64)),
+    ])
+}
+
+/// One-line-per-round human summary for stderr.
+pub fn critical_path_text(paths: &[RoundPath]) -> String {
+    let mut out = String::from(
+        "critical path (slowest rounds): round  wall_ms  dominant  net_ms  straggler_ms\n",
+    );
+    for p in paths {
+        out.push_str(&format!(
+            "  r{:<6} {:>8} {:>14} {:>7} {:>12.3}\n",
+            p.round,
+            p.wall_ticks,
+            p.dominant,
+            p.network_ticks,
+            p.straggler_wait_ns as f64 / 1e6,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::timeline::{Timeline, TraceCtx};
+
+    /// Two rounds: round 0 commits at t=10 dominated by a slow solve,
+    /// round 1 commits at t=50 dominated by a 30-tick frame latency.
+    fn two_round_timeline() -> Vec<TlEvent> {
+        let mut tl = Timeline::new(true);
+        // round 0: solve takes 8 ms (8e6 ns) of the 10-tick wall
+        tl.phase(8, 0, 0, Phase::Solve, 8_000_000);
+        tl.phase(9, 0, 0, Phase::CollectiveFold, 100_000);
+        tl.commit(10, 0, 0);
+        // round 1: a frame sent at 15 lands at 45 (30 ticks in flight)
+        let ctx = TraceCtx { round: 1, machine: 1, seq: 42 };
+        tl.phase(14, 1, 1, Phase::Solve, 1_000_000);
+        tl.send(15, ctx, 0, "theta");
+        tl.recv(45, 0, ctx, "theta");
+        tl.commit(50, 0, 1);
+        tl.drain()
+    }
+
+    #[test]
+    fn attributes_solve_and_network_dominance() {
+        let paths = analyze(&two_round_timeline(), 0);
+        assert_eq!(paths.len(), 2);
+        // sorted slowest-first: round 1 (wall 40) before round 0 (wall 2:
+        // commit at 10 minus first event at 8)
+        assert_eq!(paths[0].round, 1);
+        assert_eq!(paths[0].wall_ticks, 40);
+        assert_eq!(paths[0].network_ticks, 30);
+        assert_eq!(paths[0].dominant, "network");
+        assert_eq!(paths[0].frames_sent, 1);
+        assert_eq!(paths[0].frames_delivered, 1);
+
+        let r0 = &paths[1];
+        assert_eq!(r0.round, 0);
+        assert_eq!(r0.wall_ticks, 2);
+        assert_eq!(r0.phase_ns[Phase::Solve.index()], 8_000_000);
+        assert_eq!(r0.dominant, "solve", "8 ms solve beats the 2-tick wall");
+        assert_eq!(r0.network_ticks, 0, "no frames in round 0");
+    }
+
+    #[test]
+    fn straggler_wait_absorbs_unattributed_wall() {
+        let mut tl = Timeline::new(true);
+        // 100-tick wall with only 1 ms of recorded work
+        tl.phase(1, 0, 0, Phase::Solve, 1_000_000);
+        tl.commit(100, 0, 0);
+        let paths = analyze(&tl.drain(), 0);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(paths[0].wall_ticks, 99);
+        assert_eq!(paths[0].dominant, "straggler_wait");
+        assert_eq!(paths[0].straggler_wait_ns, 99_000_000 - 1_000_000);
+    }
+
+    #[test]
+    fn top_k_truncates_after_sorting() {
+        let paths = analyze(&two_round_timeline(), 1);
+        assert_eq!(paths.len(), 1);
+        assert_eq!(paths[0].round, 1, "keeps the slowest round");
+    }
+
+    #[test]
+    fn json_report_round_trips() {
+        let paths = analyze(&two_round_timeline(), 0);
+        let j = critical_path_json(&paths, 9);
+        let back = Json::parse(&j.to_string()).unwrap();
+        let rounds = back.get("rounds").unwrap().as_arr().unwrap();
+        assert_eq!(rounds.len(), 2);
+        assert_eq!(rounds[0].get("dominant").unwrap().as_str(), Some("network"));
+        assert_eq!(
+            rounds[0].get("phase_ns").unwrap().get("solve").unwrap().as_f64(),
+            Some(1_000_000.0)
+        );
+        assert_eq!(back.get("analyzed_events").unwrap().as_f64(), Some(9.0));
+        let text = critical_path_text(&paths);
+        assert!(text.contains("r1"));
+        assert!(text.contains("network"));
+    }
+
+    #[test]
+    fn uncommitted_rounds_are_ignored() {
+        let mut tl = Timeline::new(true);
+        tl.phase(1, 0, 7, Phase::Solve, 5);
+        // no commit event for round 7
+        let paths = analyze(&tl.drain(), 0);
+        assert!(paths.is_empty());
+    }
+}

@@ -115,11 +115,19 @@ impl MetricsRegistry {
         Ok(reg)
     }
 
-    /// Prometheus text exposition of the registry (see module docs).
+    /// Prometheus text exposition of the registry (see module docs):
+    /// `# HELP` + `# TYPE` per metric, and the *full* cumulative
+    /// `le`-labelled bucket series per histogram — every boundary is
+    /// emitted (not just occupied ones) so scrapes from different runs
+    /// always expose the same series set and quantile math over the
+    /// buckets never sees gaps.
     pub fn to_prometheus(&self) -> String {
         let mut out = String::new();
         for (name, v) in self.counters_iter() {
-            out.push_str(&format!("# TYPE {name} counter\n{name} {v}\n"));
+            out.push_str(&format!(
+                "# HELP {name} {}\n# TYPE {name} counter\n{name} {v}\n",
+                help_for(name)
+            ));
         }
         for (name, v) in self.gauges_iter() {
             let val = if v.is_nan() {
@@ -131,22 +139,21 @@ impl MetricsRegistry {
             } else {
                 format!("{v}")
             };
-            out.push_str(&format!("# TYPE {name} gauge\n{name} {val}\n"));
+            out.push_str(&format!(
+                "# HELP {name} {}\n# TYPE {name} gauge\n{name} {val}\n",
+                help_for(name)
+            ));
         }
         for (name, h) in self.hists_iter() {
-            out.push_str(&format!("# TYPE {name} histogram\n"));
+            out.push_str(&format!(
+                "# HELP {name} {}\n# TYPE {name} histogram\n",
+                help_for(name)
+            ));
             let mut cum = 0u64;
             for (i, &b) in h.buckets.iter().enumerate() {
                 cum += b;
-                match Hist::bucket_upper(i) {
-                    // suppress interior all-zero prefixes? No: exposition
-                    // format wants every boundary, but 64 lines × every
-                    // histogram is noise — emit only buckets that move
-                    // the cumulative count, plus the terminal +Inf.
-                    Some(le) if b > 0 => {
-                        out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
-                    }
-                    _ => {}
+                if let Some(le) = Hist::bucket_upper(i) {
+                    out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {cum}\n"));
                 }
             }
             out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count));
@@ -154,6 +161,53 @@ impl MetricsRegistry {
             out.push_str(&format!("{name}_count {}\n", h.count));
         }
         out
+    }
+}
+
+/// Static help text for the exposition format. Known `fadmm_*` names
+/// get specific text; anything else a structural description, so the
+/// `# HELP` line is always present (some scrapers warn on its absence).
+fn help_for(name: &str) -> &'static str {
+    match name {
+        "fadmm_rounds_total" => "Committed protocol rounds",
+        "fadmm_iterations" => "Iterations at run end",
+        "fadmm_converged" => "1 when the run converged, else 0",
+        "fadmm_virtual_time" => "Transport clock at run end (ticks)",
+        "fadmm_machines" => "Cluster machines in the run",
+        "fadmm_phase_solve_ns" => "Phase A local-solve span durations (ns)",
+        "fadmm_phase_reduce_ns" => "Phase B exchange/reduce span durations (ns)",
+        "fadmm_phase_observe_ns" => "Phase C dual/observe span durations (ns)",
+        "fadmm_boundary_io_ns" => "Boundary theta/eta batch I/O span durations (ns)",
+        "fadmm_collective_fold_ns" => "Collective stop-fold span durations (ns)",
+        "fadmm_pool_dispatch_ns" => "Worker-pool dispatch span durations (ns)",
+        "fadmm_threads_spawned_total" => "OS threads spawned by worker pools",
+        "fadmm_trace_events_total" => "Flight-recorder events retained at finish",
+        "fadmm_trace_dropped_total" => "Flight-recorder events evicted past capacity",
+        "fadmm_timeline_events_total" => "Timeline events retained at finish",
+        "fadmm_timeline_dropped_total" => "Timeline events evicted past capacity",
+        "fadmm_series_rows_total" => "Convergence-series rows retained at finish",
+        "fadmm_series_dropped_total" => "Convergence-series rows decimated away",
+        "fadmm_net_sent_total" => "Frames handed to the transport",
+        "fadmm_net_delivered_total" => "Frames delivered",
+        "fadmm_net_dropped_loss_total" => "Frames dropped by simulated loss",
+        "fadmm_net_dropped_partition_total" => "Frames dropped by partitions",
+        "fadmm_net_dropped_dead_total" => "Frames dropped to dead endpoints",
+        "fadmm_net_duplicated_total" => "Frames duplicated by the fault plan",
+        "fadmm_net_stale_reads_total" => "Neighbour reads beyond the staleness budget",
+        "fadmm_net_fallback_reads_total" => "Silence-timeout fallback reads",
+        "fadmm_net_timeouts_total" => "Protocol timer expiries",
+        "fadmm_net_joins_total" => "Machine joins",
+        "fadmm_net_leaves_total" => "Machine leaves",
+        "fadmm_net_edges_deactivated_total" => "Edges masked by NAP/churn",
+        "fadmm_net_edges_reactivated_total" => "Edges unmasked",
+        "fadmm_net_collective_timeouts_total" => "Collective fold timeouts",
+        "fadmm_net_collective_fallbacks_total" => "Collective local-fallback verdicts",
+        "fadmm_net_collective_retries_total" => "Collective retransmits",
+        "fadmm_net_gossip_ticks_total" => "Gossip all-reduce ticks",
+        "fadmm_net_overlap_dispatches_total" => "Interior solves overlapped with boundary I/O",
+        n if n.ends_with("_total") => "Monotone event count",
+        n if n.ends_with("_ns") => "Span durations (ns)",
+        _ => "Run outcome value",
     }
 }
 
@@ -248,6 +302,58 @@ mod tests {
             last = v;
         }
         assert_eq!(last, 5);
+    }
+
+    #[test]
+    fn prometheus_emits_help_and_full_bucket_series() {
+        let reg = sample();
+        let text = reg.to_prometheus();
+        // every metric family gets a # HELP line directly above # TYPE
+        for name in [
+            "fadmm_rounds_total",
+            "fadmm_net_sent_total",
+            "fadmm_iterations",
+            "fadmm_phase_solve_ns",
+        ] {
+            let help = format!("# HELP {name} ");
+            assert!(text.contains(&help), "missing help for {name}");
+            let lines: Vec<&str> = text.lines().collect();
+            let hi = lines
+                .iter()
+                .position(|l| l.starts_with(&help))
+                .unwrap();
+            assert!(
+                lines[hi + 1].starts_with(&format!("# TYPE {name} ")),
+                "HELP must be immediately followed by TYPE for {name}"
+            );
+        }
+        // the full cumulative series: every finite boundary plus +Inf,
+        // even though only 5 observations landed in 5 buckets
+        let bucket_lines: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("fadmm_phase_solve_ns_bucket"))
+            .collect();
+        assert_eq!(bucket_lines.len(), HIST_BUCKETS, "63 finite les + +Inf");
+        // boundaries are the log2 uppers, ascending, ending at +Inf
+        assert!(bucket_lines[0].contains("le=\"0\""));
+        assert!(bucket_lines[1].contains("le=\"1\""));
+        assert!(bucket_lines[2].contains("le=\"3\""));
+        assert!(bucket_lines[HIST_BUCKETS - 1].contains("le=\"+Inf\""));
+        // cumulative counts are non-decreasing and reach the total
+        let mut last = 0u64;
+        for line in &bucket_lines {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "cumulative series must be non-decreasing: {line}");
+            last = v;
+        }
+        assert_eq!(last, 5);
+        // unknown names still get a generic help line
+        let mut r = MetricsRegistry::new(false);
+        let c = r.counter("custom_thing_total");
+        r.inc(c, 1);
+        assert!(r
+            .to_prometheus()
+            .contains("# HELP custom_thing_total Monotone event count"));
     }
 
     #[test]

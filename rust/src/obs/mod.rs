@@ -44,15 +44,68 @@
 //!
 //! Timing in protocol layers goes through [`MetricsRegistry::span`]
 //! exclusively — ci.sh greps those layers for stray `Instant::now`.
+//!
+//! # Observability guide: the three artifacts
+//!
+//! Every `repro` subcommand can emit three run artifacts; all are
+//! written by the launcher from the process-global sink after the run:
+//!
+//! 1. **Metrics** (`--obs FILE`) — the merged [`MetricsRegistry`] as
+//!    JSON (`FILE`) and Prometheus text exposition (`FILE.prom`).
+//!    Counters are `_total`-suffixed monotone sums, gauges last-run
+//!    outcomes, histograms log₂-bucketed with full cumulative
+//!    `_bucket{le="…"}` series plus `_sum`/`_count` — scrapeable
+//!    as-is or `curl`-diffable between runs.
+//! 2. **Convergence series** (`--series FILE`) — one CSV row per
+//!    committed round ([`RoundRow`]): the committed [`IterStats`]
+//!    (residuals, objective, per-scheme ρ min/mean/max — bit-for-bit
+//!    the recorder stream), live node/edge counts from the effective
+//!    topology, and per-phase span nanoseconds. A sibling `FILE.json`
+//!    carries the same rows plus decimation drop accounting. Plot
+//!    `max_primal`/`max_dual`/`mean_eta` against `round` to see *when*
+//!    an adaptive scheme moved ρ.
+//! 3. **Causal trace** (`--trace FILE`) — Chrome trace-event JSON of
+//!    the [`Timeline`]: one track per machine, phase slices,
+//!    send→deliver flow arrows, commit instants. Open it in
+//!    `chrome://tracing` or drag it into <https://ui.perfetto.dev>
+//!    (both read the JSON directly; in Perfetto use "Open trace file").
+//!    The launcher also writes `FILE.critical_path.json` — the top-k
+//!    slowest rounds with wall time attributed to
+//!    solve/reduce/observe/boundary-io/collective-fold/network/
+//!    straggler-wait (see [`critical_path`]) — and prints the summary
+//!    table to stderr. Read it as: `wall_ticks` is the commit-to-commit
+//!    gap, `dominant` names the bucket that consumed it; a large
+//!    `straggler_wait` means the round waited on something outside the
+//!    instrumented phases (a slow peer, collective retries).
+//!
+//! A crashing run (panic in the launcher or a `fadmm-node` process)
+//! leaves `<obs-file>.crash.json` behind with the partial metrics and
+//! timeline via the panic hook installed by the launchers
+//! ([`install_crash_hook`]).
+//!
+//! [`IterStats`]: crate::metrics::IterStats
 
+pub mod chrome;
+pub mod critical_path;
 mod export;
 mod registry;
 mod ring;
 mod sink;
+mod timeline;
 
 pub use registry::{CounterId, GaugeId, Hist, HistId, MetricsRegistry, Span, HIST_BUCKETS};
 pub use ring::FlightRecorder;
-pub use sink::{enable_global, global_merge, global_spans_enabled, take_global};
+pub use sink::{
+    enable_global, enable_global_series, enable_global_timeline, global_merge,
+    global_series_enabled, global_series_merge, global_spans_enabled,
+    global_timeline_enabled, global_timeline_merge, install_crash_hook, take_global,
+    take_global_series, take_global_timeline,
+};
+pub use timeline::{
+    series_csv_row, series_to_json, write_series_csv, write_series_json, Phase,
+    RoundRow, RoundSeries, Timeline, TlEvent, TlKind, TraceCtx,
+    DEFAULT_SERIES_CAPACITY, DEFAULT_TIMELINE_CAPACITY, NPHASES, SERIES_CSV_HEADER,
+};
 
 use crate::metrics::NetCounters;
 
@@ -130,6 +183,20 @@ impl MetricsRegistry {
         self.inc(ev, retained as u64);
         let dr = self.counter("fadmm_trace_dropped_total");
         self.inc(dr, dropped);
+    }
+
+    /// Absorb a [`Timeline`] + [`RoundSeries`] retention snapshot as
+    /// counters (retained totals plus ring-overwrite / decimation drops).
+    pub fn absorb_timeline(&mut self, events: usize, ev_dropped: u64, rows: usize, row_dropped: u64) {
+        for (name, v) in [
+            ("fadmm_timeline_events_total", events as u64),
+            ("fadmm_timeline_dropped_total", ev_dropped),
+            ("fadmm_series_rows_total", rows as u64),
+            ("fadmm_series_dropped_total", row_dropped),
+        ] {
+            let id = self.counter(name);
+            self.inc(id, v);
+        }
     }
 }
 

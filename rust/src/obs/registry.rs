@@ -202,10 +202,18 @@ impl MetricsRegistry {
         Span(if self.enabled { Some(Instant::now()) } else { None })
     }
 
-    /// End a span, recording its elapsed nanoseconds into `id`.
-    pub fn end(&mut self, id: HistId, span: Span) {
-        if let Some(start) = span.0 {
-            self.hists[id.0].1.record(start.elapsed().as_nanos() as u64);
+    /// End a span, recording its elapsed nanoseconds into `id`. Returns
+    /// the recorded duration (0 for a no-op span) so callers can feed
+    /// the same measurement into per-round attribution
+    /// ([`crate::obs::Timeline`]) without a second clock read.
+    pub fn end(&mut self, id: HistId, span: Span) -> u64 {
+        match span.0 {
+            Some(start) => {
+                let ns = start.elapsed().as_nanos() as u64;
+                self.hists[id.0].1.record(ns);
+                ns
+            }
+            None => 0,
         }
     }
 
@@ -361,6 +369,104 @@ mod tests {
         a.merge(&Hist::default());
         assert_eq!(a.count, 0);
         assert_eq!(a.min_or_zero(), 0, "export never sees the u64::MAX sentinel");
+    }
+
+    /// Two registries agree on every counter and histogram (gauges are
+    /// last-wins by contract, so the merge algebra below excludes them).
+    fn assert_counters_hists_equiv(a: &MetricsRegistry, b: &MetricsRegistry) {
+        for (name, v) in a.counters_iter() {
+            assert_eq!(b.counter_by_name(name), Some(v), "counter {name}");
+        }
+        for (name, _) in b.counters_iter() {
+            assert!(a.counter_by_name(name).is_some(), "counter {name} missing");
+        }
+        for (name, h) in a.hists_iter() {
+            assert_eq!(b.hist_by_name(name), Some(h), "hist {name}");
+        }
+        for (name, _) in b.hists_iter() {
+            assert!(a.hist_by_name(name).is_some(), "hist {name} missing");
+        }
+    }
+
+    /// A registry with seeded-random counter bumps and histogram
+    /// observations over a shared name pool (so merges genuinely
+    /// overlap on some names and not others).
+    fn random_registry(rng: &mut crate::util::rng::Pcg) -> MetricsRegistry {
+        const NAMES: [&str; 5] =
+            ["a_total", "b_total", "c_total", "x_ns", "y_ns"];
+        let mut r = MetricsRegistry::new(false);
+        for _ in 0..(2 + rng.below(8)) {
+            let name = NAMES[rng.below(NAMES.len())];
+            if name.ends_with("_total") {
+                let id = r.counter(name);
+                r.inc(id, rng.next_u64() % 1000);
+            } else {
+                let id = r.hist(name);
+                r.record(id, rng.next_u64() % (1 << 40));
+            }
+        }
+        r
+    }
+
+    #[test]
+    fn merge_is_commutative_on_counters_and_hists() {
+        let mut rng = crate::util::rng::Pcg::seed(0xC0FFEE);
+        for _ in 0..50 {
+            let a = random_registry(&mut rng);
+            let b = random_registry(&mut rng);
+            let mut ab = a.clone();
+            ab.merge(&b);
+            let mut ba = b.clone();
+            ba.merge(&a);
+            assert_counters_hists_equiv(&ab, &ba);
+        }
+    }
+
+    #[test]
+    fn merge_is_associative() {
+        let mut rng = crate::util::rng::Pcg::seed(0xA550C);
+        for _ in 0..50 {
+            let a = random_registry(&mut rng);
+            let b = random_registry(&mut rng);
+            let c = random_registry(&mut rng);
+            // ((a·b)·c)
+            let mut left = a.clone();
+            left.merge(&b);
+            left.merge(&c);
+            // (a·(b·c))
+            let mut bc = b.clone();
+            bc.merge(&c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_counters_hists_equiv(&left, &right);
+        }
+    }
+
+    #[test]
+    fn machine_sharded_merge_equals_single_registry_run() {
+        // the proc-transport aggregation contract: recording a stream of
+        // events sharded across per-machine registries and merging must
+        // equal recording the whole stream into one registry
+        let mut rng = crate::util::rng::Pcg::seed(77);
+        let events: Vec<(usize, u64)> =
+            (0..300).map(|_| (rng.below(3), rng.next_u64() % (1 << 30))).collect();
+
+        let mut single = MetricsRegistry::new(false);
+        let mut shards: Vec<MetricsRegistry> =
+            (0..3).map(|_| MetricsRegistry::new(false)).collect();
+        for &(machine, v) in &events {
+            for r in [&mut single, &mut shards[machine]] {
+                let c = r.counter("events_total");
+                r.inc(c, 1);
+                let h = r.hist("value_ns");
+                r.record(h, v);
+            }
+        }
+        let mut agg = MetricsRegistry::new(false);
+        for s in &shards {
+            agg.merge(s);
+        }
+        assert_counters_hists_equiv(&agg, &single);
     }
 
     #[test]

@@ -15,18 +15,35 @@
 //! never touches this path. The precedent for a process-global counter
 //! is [`crate::pool::threads_spawned`].
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
+use super::timeline::{RoundRow, TlEvent};
 use super::MetricsRegistry;
 
 static SPANS: AtomicBool = AtomicBool::new(false);
 static SINK: Mutex<Option<MetricsRegistry>> = Mutex::new(None);
 
+static TIMELINE_ON: AtomicBool = AtomicBool::new(false);
+static TIMELINE_SINK: Mutex<Option<Vec<TlEvent>>> = Mutex::new(None);
+
+static SERIES_ON: AtomicBool = AtomicBool::new(false);
+/// retained rows + decimation-dropped count, summed across merged runs
+static SERIES_SINK: Mutex<Option<(Vec<RoundRow>, u64)>> = Mutex::new(None);
+
 fn sink() -> std::sync::MutexGuard<'static, Option<MetricsRegistry>> {
     // a panicking merger cannot corrupt a registry (merge is additive),
     // so recover from poison instead of propagating it
     SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn timeline_sink() -> std::sync::MutexGuard<'static, Option<Vec<TlEvent>>> {
+    TIMELINE_SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+fn series_sink() -> std::sync::MutexGuard<'static, Option<(Vec<RoundRow>, u64)>> {
+    SERIES_SINK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
 }
 
 /// Turn the global sink on: spans go live in every subsequently built
@@ -59,6 +76,114 @@ pub fn global_merge(reg: &MetricsRegistry) {
 /// Drain the aggregate (leaves the sink empty but spans still live).
 pub fn take_global() -> Option<MetricsRegistry> {
     sink().take()
+}
+
+/// Turn the global timeline sink on (`repro … --trace`): every
+/// subsequently built runtime records a live [`crate::obs::Timeline`]
+/// and appends its drained events here at finish. Idempotent.
+pub fn enable_global_timeline() {
+    TIMELINE_ON.store(true, Ordering::Relaxed);
+    let mut g = timeline_sink();
+    if g.is_none() {
+        *g = Some(Vec::new());
+    }
+}
+
+/// Whether [`enable_global_timeline`] has been called. Runtimes OR this
+/// into their config's `timeline` knob.
+pub fn global_timeline_enabled() -> bool {
+    TIMELINE_ON.load(Ordering::Relaxed)
+}
+
+/// Append a finished run's drained timeline events (no-op while the
+/// timeline sink is disabled).
+pub fn global_timeline_merge(events: Vec<TlEvent>) {
+    if let Some(agg) = timeline_sink().as_mut() {
+        agg.extend(events);
+    }
+}
+
+/// Drain the accumulated timeline events.
+pub fn take_global_timeline() -> Option<Vec<TlEvent>> {
+    timeline_sink().take()
+}
+
+/// Turn the global series sink on (`repro … --series`). Idempotent.
+pub fn enable_global_series() {
+    SERIES_ON.store(true, Ordering::Relaxed);
+    let mut g = series_sink();
+    if g.is_none() {
+        *g = Some((Vec::new(), 0));
+    }
+}
+
+/// Whether [`enable_global_series`] has been called. Runtimes OR this
+/// into their config's `series` knob.
+pub fn global_series_enabled() -> bool {
+    SERIES_ON.load(Ordering::Relaxed)
+}
+
+/// Append a finished run's series rows and decimation drop count
+/// (no-op while the series sink is disabled).
+pub fn global_series_merge(rows: Vec<RoundRow>, dropped: u64) {
+    if let Some((agg, drops)) = series_sink().as_mut() {
+        agg.extend(rows);
+        *drops += dropped;
+    }
+}
+
+/// Drain the accumulated series rows and drop count.
+pub fn take_global_series() -> Option<(Vec<RoundRow>, u64)> {
+    series_sink().take()
+}
+
+/// Install a panic hook that flushes a best-effort crash snapshot to
+/// `path` before unwinding: the panic message and location, whatever
+/// the metrics sink has aggregated so far, and the timeline event
+/// count. Chains the previous hook (so the default backtrace still
+/// prints). SIGKILL leaves nothing — this covers panics; the proc
+/// transport's SIGKILL scenarios get their evidence from the *other*
+/// machines' hooks and the driver's snapshot.
+pub fn install_crash_hook(path: PathBuf) {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        write_crash_snapshot(&path, info);
+        prev(info);
+    }));
+}
+
+fn write_crash_snapshot(path: &std::path::Path, info: &std::panic::PanicHookInfo<'_>) {
+    use crate::util::json::{num, obj, s};
+    let msg = if let Some(m) = info.payload().downcast_ref::<&str>() {
+        (*m).to_string()
+    } else if let Some(m) = info.payload().downcast_ref::<String>() {
+        m.clone()
+    } else {
+        "non-string panic payload".to_string()
+    };
+    let location = info
+        .location()
+        .map(|l| format!("{}:{}:{}", l.file(), l.line(), l.column()))
+        .unwrap_or_else(|| "unknown".to_string());
+    // clone rather than take: the snapshot must not consume state the
+    // normal (caught-panic) reporting path still wants to write
+    let metrics = sink()
+        .as_ref()
+        .map(|r| r.to_json())
+        .unwrap_or_else(|| obj(vec![]));
+    let timeline_events =
+        timeline_sink().as_ref().map(|v| v.len()).unwrap_or(0);
+    let series_rows =
+        series_sink().as_ref().map(|(v, _)| v.len()).unwrap_or(0);
+    let doc = obj(vec![
+        ("panic", s(msg)),
+        ("location", s(location)),
+        ("metrics", metrics),
+        ("timeline_events", num(timeline_events as f64)),
+        ("series_rows", num(series_rows as f64)),
+    ]);
+    // best-effort by design: a failing write must not abort the unwind
+    let _ = std::fs::write(path, doc.to_string());
 }
 
 #[cfg(test)]

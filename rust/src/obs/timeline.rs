@@ -1,0 +1,585 @@
+//! Per-round structured event layer: causal trace context, the bounded
+//! machine-timeline recorder, and the convergence time-series.
+//!
+//! Three pieces, all following the PR 8 instrumentation contract
+//! (bit-transparent, allocation-free in steady state, no clock reads of
+//! their own):
+//!
+//! * [`TraceCtx`] — a compact causal context minted by every
+//!   [`crate::net::Transport::send`] and carried on the frame through
+//!   delivery (and, for the proc transport, on the wire — absent fields
+//!   keep old driver/node interop). `(machine, seq)` uniquely names a
+//!   frame; `round` is the payload's stamp. Minting is unconditional and
+//!   costs one counter increment, so the wire bytes and event schedule
+//!   are identical whether recording is on or off.
+//! * [`Timeline`] — a bounded [`FlightRecorder`] of [`TlEvent`]s (sends,
+//!   deliveries, phase durations, commits) plus a fixed-size per-round
+//!   phase-duration window. Timestamps come from the transport clock
+//!   (`Transport::now()` ticks); durations come from the value
+//!   [`crate::obs::MetricsRegistry::end`] already measured — the
+//!   timeline itself never touches a clock, which is what keeps the
+//!   ci.sh `Instant::now` containment gate honest.
+//! * [`RoundSeries`] — the per-committed-round convergence time-series:
+//!   one [`RoundRow`] per commit carrying the [`IterStats`] verbatim
+//!   (so CSV columns match the recorder stream bit-for-bit), liveness
+//!   counts, and the round's accumulated phase durations. Bounded like
+//!   the flight recorder, but with *stride-doubling decimation* instead
+//!   of oldest-first eviction: past capacity the series keeps every
+//!   2nd, then 4th, … row, preserving whole-run coverage with exact
+//!   drop accounting.
+//!
+//! Export paths: [`write_series_csv`] / [`series_to_json`] here,
+//! Chrome trace-event JSON in [`crate::obs::chrome`], and the per-round
+//! wall-time attribution in [`crate::obs::critical_path`].
+
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::metrics::IterStats;
+use crate::util::csv::{fnum, CsvWriter};
+use crate::util::json::{arr, num, obj, Json};
+
+use super::ring::FlightRecorder;
+
+/// Default timeline event capacity (matches the net trace recorder).
+pub const DEFAULT_TIMELINE_CAPACITY: usize = 1 << 16;
+
+/// Default bound on retained series rows before decimation begins.
+pub const DEFAULT_SERIES_CAPACITY: usize = 1 << 14;
+
+/// Causal context stamped on every transport frame (see module docs).
+/// `Default` is the "absent on the wire" value for old-peer interop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    /// The frame's protocol round (its payload stamp; 0 when stampless).
+    pub round: u64,
+    /// Sending endpoint (machine id on the cluster transports).
+    pub machine: usize,
+    /// Per-transport monotone frame counter. `(machine, seq)` names the
+    /// frame uniquely within a run, keying send→deliver flow edges.
+    pub seq: u64,
+}
+
+/// Protocol phases attributed per round. Indices are stable (they order
+/// [`RoundRow::phase_ns`] and the series CSV columns).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Solve,
+    Reduce,
+    Observe,
+    BoundaryIo,
+    CollectiveFold,
+}
+
+/// Number of attributed phases (the length of [`RoundRow::phase_ns`]).
+pub const NPHASES: usize = 5;
+
+impl Phase {
+    pub const ALL: [Phase; NPHASES] = [
+        Phase::Solve,
+        Phase::Reduce,
+        Phase::Observe,
+        Phase::BoundaryIo,
+        Phase::CollectiveFold,
+    ];
+
+    pub fn index(self) -> usize {
+        match self {
+            Phase::Solve => 0,
+            Phase::Reduce => 1,
+            Phase::Observe => 2,
+            Phase::BoundaryIo => 3,
+            Phase::CollectiveFold => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Solve => "solve",
+            Phase::Reduce => "reduce",
+            Phase::Observe => "observe",
+            Phase::BoundaryIo => "boundary_io",
+            Phase::CollectiveFold => "collective_fold",
+        }
+    }
+}
+
+/// One timeline event. `at` is transport ticks (virtual ms on the
+/// simulator, wall ms on the real transports); `machine` is the track
+/// the event belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TlEvent {
+    pub at: u64,
+    pub machine: usize,
+    pub round: u64,
+    pub kind: TlKind,
+}
+
+/// Event payloads. Flow edges pair a `Send` with the `Recv` carrying
+/// the same `(machine→src, seq)` context.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TlKind {
+    /// A phase finished on this machine; `dur_ns` is the span
+    /// measurement (0 when obs spans are disabled — the event sequence
+    /// stays deterministic, only the duration field is wall-clock).
+    Phase { phase: Phase, dur_ns: u64 },
+    /// Frame handed to the transport (`machine` = sender).
+    Send { seq: u64, dst: usize, what: &'static str },
+    /// Frame delivered (`machine` = receiver, `src` from the ctx).
+    Recv { seq: u64, src: usize, what: &'static str },
+    /// A round committed on this machine (the fold holder).
+    Commit,
+}
+
+/// Per-round phase-duration accumulation window. Fixed size: rounds in
+/// flight never span more than a few commits, so a 64-slot ring indexed
+/// by `round % 64` is exact for every live round and self-cleaning.
+const PHASE_WINDOW: usize = 64;
+
+#[derive(Debug, Clone, Copy, Default)]
+struct PhaseSlot {
+    round: u64,
+    ns: [u64; NPHASES],
+    used: bool,
+}
+
+/// Bounded per-run timeline recorder (see module docs). Capacity 0 (the
+/// disabled state) makes every recording method a cheap no-op.
+#[derive(Debug)]
+pub struct Timeline {
+    events: FlightRecorder<TlEvent>,
+    window: [PhaseSlot; PHASE_WINDOW],
+}
+
+impl Timeline {
+    /// Enabled timelines get [`DEFAULT_TIMELINE_CAPACITY`]; disabled
+    /// ones record nothing (capacity 0).
+    pub fn new(enabled: bool) -> Timeline {
+        Timeline::with_capacity(if enabled { DEFAULT_TIMELINE_CAPACITY } else { 0 })
+    }
+
+    /// The buffer is allocated here, in full — steady-state recording
+    /// never allocates.
+    pub fn with_capacity(cap: usize) -> Timeline {
+        Timeline {
+            events: FlightRecorder::new(cap),
+            window: [PhaseSlot::default(); PHASE_WINDOW],
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.events.capacity() > 0
+    }
+
+    /// Record a frame handed to the transport. `ctx` is the context the
+    /// send minted; `what` is the payload kind name.
+    pub fn send(&mut self, at: u64, ctx: TraceCtx, dst: usize, what: &'static str) {
+        if !self.enabled() {
+            return;
+        }
+        self.events.push(TlEvent {
+            at,
+            machine: ctx.machine,
+            round: ctx.round,
+            kind: TlKind::Send { seq: ctx.seq, dst, what },
+        });
+    }
+
+    /// Record a frame delivery on `machine` (the receiver).
+    pub fn recv(&mut self, at: u64, machine: usize, ctx: TraceCtx, what: &'static str) {
+        if !self.enabled() {
+            return;
+        }
+        self.events.push(TlEvent {
+            at,
+            machine,
+            round: ctx.round,
+            kind: TlKind::Recv { seq: ctx.seq, src: ctx.machine, what },
+        });
+    }
+
+    /// Record a finished phase and accumulate its duration into the
+    /// round's window slot (read back by [`Timeline::phase_ns`] at
+    /// commit time).
+    pub fn phase(&mut self, at: u64, machine: usize, round: u64, phase: Phase,
+                 dur_ns: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.events.push(TlEvent {
+            at,
+            machine,
+            round,
+            kind: TlKind::Phase { phase, dur_ns },
+        });
+        let slot = &mut self.window[(round as usize) % PHASE_WINDOW];
+        if !slot.used || slot.round != round {
+            *slot = PhaseSlot { round, ns: [0; NPHASES], used: true };
+        }
+        slot.ns[phase.index()] += dur_ns;
+    }
+
+    /// Record a round commit on `machine`.
+    pub fn commit(&mut self, at: u64, machine: usize, round: u64) {
+        if !self.enabled() {
+            return;
+        }
+        self.events.push(TlEvent { at, machine, round, kind: TlKind::Commit });
+    }
+
+    /// The phase durations accumulated for `round` so far (zeros when
+    /// the slot was recycled or the timeline is disabled).
+    pub fn phase_ns(&self, round: u64) -> [u64; NPHASES] {
+        let slot = &self.window[(round as usize) % PHASE_WINDOW];
+        if slot.used && slot.round == round { slot.ns } else { [0; NPHASES] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Events evicted past capacity.
+    pub fn dropped(&self) -> u64 {
+        self.events.dropped()
+    }
+
+    /// Take the retained events (oldest → newest), leaving the recorder
+    /// empty but keeping its drop count.
+    pub fn drain(&mut self) -> Vec<TlEvent> {
+        self.events.drain()
+    }
+}
+
+/// One committed round of the convergence time-series. `stats` is the
+/// [`IterStats`] the runtime committed, copied verbatim — the CSV
+/// residual/ρ columns are bit-for-bit the recorder stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RoundRow {
+    pub round: u64,
+    /// Transport ticks at commit (round index on the clockless
+    /// sequential/sharded runtimes).
+    pub at: u64,
+    pub stats: IterStats,
+    pub live_nodes: u64,
+    /// Live edges in the effective (NAP-masked, churned) topology.
+    pub live_edges: u64,
+    /// Accumulated per-phase durations for the round, ordered by
+    /// [`Phase::index`]; zeros where spans were off or not attributed.
+    pub phase_ns: [u64; NPHASES],
+}
+
+/// Bounded convergence time-series with stride-doubling decimation (see
+/// module docs). Capacity 0 = disabled (pushes are no-ops).
+#[derive(Debug)]
+pub struct RoundSeries {
+    rows: Vec<RoundRow>,
+    cap: usize,
+    stride: u64,
+    seen: u64,
+    dropped: u64,
+}
+
+impl RoundSeries {
+    pub fn new(enabled: bool) -> RoundSeries {
+        RoundSeries::with_capacity(if enabled { DEFAULT_SERIES_CAPACITY } else { 0 })
+    }
+
+    /// Rows are preallocated here (capacity is clamped to ≥ 2 when
+    /// enabled so decimation can always halve), and the buffer never
+    /// grows — steady-state pushes are allocation-free.
+    pub fn with_capacity(cap: usize) -> RoundSeries {
+        let cap = if cap == 0 { 0 } else { cap.max(2) };
+        RoundSeries { rows: Vec::with_capacity(cap), cap, stride: 1, seen: 0, dropped: 0 }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cap > 0
+    }
+
+    /// Record a committed round. Under capacity this keeps every row;
+    /// past it, retained rows are exactly those whose 0-based commit
+    /// index is a multiple of the current stride (which doubles on each
+    /// compaction), so coverage always spans the whole run.
+    pub fn push(&mut self, row: RoundRow) {
+        if self.cap == 0 {
+            return;
+        }
+        self.seen += 1;
+        if (self.seen - 1) % self.stride != 0 {
+            self.dropped += 1;
+            return;
+        }
+        if self.rows.len() == self.cap {
+            // compact in place: keep even positions (index multiples of
+            // the doubled stride), count the rest as dropped
+            let mut w = 0;
+            for r in (0..self.rows.len()).step_by(2) {
+                self.rows[w] = self.rows[r];
+                w += 1;
+            }
+            self.dropped += (self.rows.len() - w) as u64;
+            self.rows.truncate(w);
+            self.stride *= 2;
+            if (self.seen - 1) % self.stride != 0 {
+                self.dropped += 1;
+                return;
+            }
+        }
+        self.rows.push(row);
+    }
+
+    pub fn rows(&self) -> &[RoundRow] {
+        &self.rows
+    }
+
+    /// Rows ever pushed (retained + dropped).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Rows decimated away (exact accounting).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Current decimation stride (1 until the first compaction).
+    pub fn stride(&self) -> u64 {
+        self.stride
+    }
+
+    /// Take the retained rows, keeping the drop accounting.
+    pub fn drain(&mut self) -> Vec<RoundRow> {
+        std::mem::take(&mut self.rows)
+    }
+}
+
+/// Column order of the series CSV. The `iter..app_error` block is the
+/// [`IterStats`] layout, formatted through the same [`fnum`] path as
+/// [`crate::metrics::Recorder::write_csv`] so the two files agree
+/// bit-for-bit on shared columns.
+pub const SERIES_CSV_HEADER: [&str; 17] = [
+    "round", "at", "iter", "objective", "max_primal", "max_dual",
+    "mean_eta", "min_eta", "max_eta", "app_error", "live_nodes",
+    "live_edges", "solve_ns", "reduce_ns", "observe_ns", "boundary_io_ns",
+    "collective_fold_ns",
+];
+
+/// Write series rows as CSV (see [`SERIES_CSV_HEADER`]).
+pub fn write_series_csv(path: &Path, rows: &[RoundRow]) -> Result<()> {
+    let mut w = CsvWriter::create(path, &SERIES_CSV_HEADER)?;
+    for r in rows {
+        w.row(&series_csv_row(r))?;
+    }
+    w.finish()
+}
+
+/// One CSV row for a series entry (shared with the fault-sweep writers,
+/// which prepend their own scenario-cell columns).
+pub fn series_csv_row(r: &RoundRow) -> Vec<String> {
+    vec![
+        r.round.to_string(),
+        r.at.to_string(),
+        r.stats.iter.to_string(),
+        fnum(r.stats.objective),
+        fnum(r.stats.max_primal),
+        fnum(r.stats.max_dual),
+        fnum(r.stats.mean_eta),
+        fnum(r.stats.min_eta),
+        fnum(r.stats.max_eta),
+        fnum(r.stats.app_error),
+        r.live_nodes.to_string(),
+        r.live_edges.to_string(),
+        r.phase_ns[0].to_string(),
+        r.phase_ns[1].to_string(),
+        r.phase_ns[2].to_string(),
+        r.phase_ns[3].to_string(),
+        r.phase_ns[4].to_string(),
+    ]
+}
+
+/// Series rows + drop accounting as JSON (the `--series FILE` sibling
+/// artifact, `FILE.json`). Non-finite residuals use the codec sentinels
+/// so the document stays parseable.
+pub fn series_to_json(rows: &[RoundRow], dropped: u64) -> Json {
+    let jnum = crate::net::codec::fnum;
+    let items = rows
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("round", num(r.round as f64)),
+                ("at", num(r.at as f64)),
+                ("iter", num(r.stats.iter as f64)),
+                ("objective", jnum(r.stats.objective)),
+                ("max_primal", jnum(r.stats.max_primal)),
+                ("max_dual", jnum(r.stats.max_dual)),
+                ("mean_eta", jnum(r.stats.mean_eta)),
+                ("min_eta", jnum(r.stats.min_eta)),
+                ("max_eta", jnum(r.stats.max_eta)),
+                ("app_error", jnum(r.stats.app_error)),
+                ("live_nodes", num(r.live_nodes as f64)),
+                ("live_edges", num(r.live_edges as f64)),
+                ("phase_ns",
+                 arr(r.phase_ns.iter().map(|&n| num(n as f64)).collect())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("rows", arr(items)),
+        ("retained", num(rows.len() as f64)),
+        ("dropped", num(dropped as f64)),
+    ])
+}
+
+/// Write the series JSON artifact.
+pub fn write_series_json(path: &Path, rows: &[RoundRow], dropped: u64) -> Result<()> {
+    std::fs::write(path, series_to_json(rows, dropped).to_string())
+        .map_err(|e| Error::io(format!("write {}", path.display()), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(iter: usize) -> IterStats {
+        IterStats {
+            iter,
+            objective: 1.5 * iter as f64,
+            max_primal: 0.25,
+            max_dual: 0.125,
+            mean_eta: 10.0,
+            min_eta: 5.0,
+            max_eta: 20.0,
+            app_error: 0.0,
+        }
+    }
+
+    fn row(round: u64) -> RoundRow {
+        RoundRow {
+            round,
+            at: round * 3,
+            stats: stats(round as usize),
+            live_nodes: 12,
+            live_edges: 12,
+            phase_ns: [0; NPHASES],
+        }
+    }
+
+    #[test]
+    fn disabled_timeline_records_nothing() {
+        let mut tl = Timeline::new(false);
+        tl.send(1, TraceCtx { round: 0, machine: 0, seq: 1 }, 1, "theta");
+        tl.phase(2, 0, 0, Phase::Solve, 100);
+        tl.commit(3, 0, 0);
+        assert!(!tl.enabled());
+        assert!(tl.is_empty());
+        assert_eq!(tl.dropped(), 0, "disabled timelines do not count drops");
+        assert_eq!(tl.phase_ns(0), [0; NPHASES]);
+    }
+
+    #[test]
+    fn phase_window_accumulates_and_recycles() {
+        let mut tl = Timeline::new(true);
+        tl.phase(1, 0, 7, Phase::Solve, 100);
+        tl.phase(2, 1, 7, Phase::Solve, 50);
+        tl.phase(3, 0, 7, Phase::CollectiveFold, 9);
+        let ns = tl.phase_ns(7);
+        assert_eq!(ns[Phase::Solve.index()], 150);
+        assert_eq!(ns[Phase::CollectiveFold.index()], 9);
+        assert_eq!(ns[Phase::Reduce.index()], 0);
+        // the slot 64 rounds later reuses the same window index
+        tl.phase(4, 0, 7 + PHASE_WINDOW as u64, Phase::Solve, 1);
+        assert_eq!(tl.phase_ns(7), [0; NPHASES], "recycled slot reads zero");
+        assert_eq!(tl.phase_ns(7 + PHASE_WINDOW as u64)[0], 1);
+    }
+
+    #[test]
+    fn timeline_events_drain_in_order() {
+        let mut tl = Timeline::new(true);
+        let ctx = TraceCtx { round: 2, machine: 1, seq: 9 };
+        tl.send(5, ctx, 0, "theta");
+        tl.recv(7, 0, ctx, "theta");
+        tl.commit(8, 0, 2);
+        let evs = tl.drain();
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0], TlEvent {
+            at: 5,
+            machine: 1,
+            round: 2,
+            kind: TlKind::Send { seq: 9, dst: 0, what: "theta" },
+        });
+        assert_eq!(evs[1].kind, TlKind::Recv { seq: 9, src: 1, what: "theta" });
+        assert_eq!(evs[2].kind, TlKind::Commit);
+        assert!(tl.is_empty(), "drain empties the recorder");
+    }
+
+    #[test]
+    fn series_under_capacity_keeps_every_row_verbatim() {
+        let mut s = RoundSeries::with_capacity(16);
+        for r in 0..10 {
+            s.push(row(r));
+        }
+        assert_eq!(s.rows().len(), 10);
+        assert_eq!(s.dropped(), 0);
+        assert_eq!(s.stride(), 1);
+        assert_eq!(s.rows()[3].stats, stats(3), "stats are copied verbatim");
+    }
+
+    #[test]
+    fn series_decimation_doubles_stride_and_accounts_drops() {
+        let mut s = RoundSeries::with_capacity(4);
+        for r in 0..32 {
+            s.push(row(r));
+        }
+        assert_eq!(s.seen(), 32);
+        assert_eq!(s.dropped() + s.rows().len() as u64, 32,
+                   "every pushed row is retained or counted dropped");
+        assert!(s.rows().len() <= 4);
+        // retained rounds are multiples of the final stride, covering
+        // the whole run rather than just a suffix
+        let stride = s.stride();
+        assert!(stride >= 4, "32 rows through 4 slots forces stride ≥ 4");
+        for w in s.rows() {
+            assert_eq!(w.round % stride, 0, "round {} vs stride {stride}", w.round);
+        }
+        assert_eq!(s.rows()[0].round, 0, "first row always survives");
+    }
+
+    #[test]
+    fn series_csv_matches_recorder_formatting() {
+        let dir = std::env::temp_dir().join("fadmm_series_csv_test");
+        let path = dir.join("s.csv");
+        let mut s = RoundSeries::with_capacity(4);
+        s.push(row(0));
+        s.push(row(1));
+        write_series_csv(&path, s.rows()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let mut lines = text.lines();
+        assert_eq!(lines.next().unwrap().split(',').count(),
+                   SERIES_CSV_HEADER.len());
+        let first: Vec<&str> = lines.next().unwrap().split(',').collect();
+        // the IterStats block is formatted through the same fnum path as
+        // Recorder::write_csv: integral floats compact, others %.6e
+        assert_eq!(first[3], fnum(0.0), "objective");
+        assert_eq!(first[4], fnum(0.25), "max_primal");
+        assert_eq!(first[6], fnum(10.0), "mean_eta");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn series_json_round_trips_counts() {
+        let mut s = RoundSeries::with_capacity(2);
+        for r in 0..5 {
+            s.push(row(r));
+        }
+        let j = series_to_json(s.rows(), s.dropped());
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), s.rows().len());
+        assert_eq!(parsed.get("dropped").unwrap().as_f64().unwrap(),
+                   s.dropped() as f64);
+    }
+}
