@@ -1,0 +1,176 @@
+//! Million-node scale envelope: iterations/sec, bytes/node and peak RSS
+//! for the sharded runner on ring and power-law graphs at 1e4–1e6 nodes,
+//! in both parameter precisions.
+//!
+//! Tiers (driven by env vars, matching `ci.sh` / `bench_baseline.sh`):
+//!
+//! * `FADMM_BENCH_FAST=1` — smoke: the 1e4 ring cell only (the tier
+//!   `ci.sh` runs and gates bytes/node + the f32/f64 param ratio on).
+//! * default — 1e4 and 1e5, ring + power-law.
+//! * `FADMM_BENCH_SCALE_FULL=1` — adds the 1e6 cells (minutes, not CI).
+//!
+//! Per cell it builds the CSR graph, accounts the arena layout *without*
+//! running (both precisions — the f32/f64 `param_bytes` ratio must be
+//! exactly 0.5 because shard padding rounds to the same 64-byte
+//! boundaries), then times fixed-iteration runs at each precision and
+//! reports the max final-θ divergence between them. Peak RSS is the
+//! process high-water mark (`VmHWM`), so it is monotone across cells;
+//! cells run smallest-first so the first exceedance is attributable.
+//! Writes the machine-readable `BENCH_scale.json` at the repo root.
+
+use std::sync::Arc;
+
+use fadmm::consensus::solvers::QuadraticNode;
+use fadmm::coordinator::{ParamArena, Precision, ShardedConfig, ShardedRunner,
+                         SolverFactory};
+use fadmm::graph::{shard_ranges, Topology};
+use fadmm::penalty::SchemeKind;
+use fadmm::util::bench::Bencher;
+use fadmm::util::json::{arr, num, obj, s, Json};
+use fadmm::util::rng::Pcg;
+
+const DIM: usize = 4;
+
+fn quad_factory() -> SolverFactory<QuadraticNode> {
+    // lazy per-node construction: no O(n) precompute that would dominate
+    // the 1e6 cells' footprint before the arena is even built
+    Arc::new(|i| {
+        let mut rng = Pcg::seed(11 + i as u64);
+        QuadraticNode::random(DIM, &mut rng)
+    })
+}
+
+/// Process peak-RSS high-water mark in KiB (0.0 where /proc is absent).
+fn peak_rss_kb() -> f64 {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()
+        .and_then(|status| {
+            status.lines().find(|l| l.starts_with("VmHWM:")).and_then(|l| {
+                l.split_whitespace().nth(1).and_then(|v| v.parse::<f64>().ok())
+            })
+        })
+        .unwrap_or(0.0)
+}
+
+fn iters_for(n: usize) -> usize {
+    match n {
+        0..=10_000 => 20,
+        10_001..=100_000 => 5,
+        _ => 2,
+    }
+}
+
+fn main() {
+    let fast = std::env::var("FADMM_BENCH_FAST").is_ok();
+    let full = std::env::var("FADMM_BENCH_SCALE_FULL").is_ok();
+    let mut b = Bencher::from_env();
+
+    let sizes: &[usize] = if fast {
+        &[10_000]
+    } else if full {
+        &[10_000, 100_000, 1_000_000]
+    } else {
+        &[10_000, 100_000]
+    };
+    let topos: &[Topology] =
+        if fast { &[Topology::Ring] } else { &[Topology::Ring, Topology::PowerLaw] };
+
+    let mut cells: Vec<Json> = Vec::new();
+    for &n in sizes {
+        for &topo in topos {
+            let iters = iters_for(n);
+            let g = topo.build(n).unwrap();
+            let cell = format!("{} {n}", topo.name());
+
+            // -- layout accounting (no run needed): graph + both arenas
+            // over the same shard split the runner would use
+            let workers = std::thread::available_parallelism()
+                .map(|c| c.get())
+                .unwrap_or(1)
+                .min(n);
+            let ranges = shard_ranges(&g, workers);
+            let arena64: ParamArena = ParamArena::new_sharded(&g, DIM, &ranges);
+            let arena32: ParamArena<f32> = ParamArena::new_sharded(&g, DIM, &ranges);
+            let bytes_node_f64 =
+                (g.heap_bytes() + arena64.heap_bytes()) as f64 / n as f64;
+            let bytes_node_f32 =
+                (g.heap_bytes() + arena32.heap_bytes()) as f64 / n as f64;
+            let param_ratio =
+                arena32.param_bytes() as f64 / arena64.param_bytes() as f64;
+            assert!(param_ratio <= 0.5 + 1e-12,
+                    "f32 params must cost at most half of f64 (got {param_ratio})");
+            drop((arena64, arena32)); // release before the timed runs
+
+            // -- timed fixed-iteration runs, both precisions
+            let mut per_precision: Vec<(&str, f64, Vec<Vec<f64>>)> = Vec::new();
+            for (tag, precision) in
+                [("f64", Precision::F64), ("f32", Precision::F32)]
+            {
+                let runner =
+                    ShardedRunner::new(topo.build(n).unwrap(), ShardedConfig {
+                        scheme: SchemeKind::Ap,
+                        tol: 0.0,
+                        max_iters: iters,
+                        precision,
+                        ..Default::default()
+                    });
+                let factory = quad_factory();
+                let name = format!("{cell} x {iters} iters {tag}");
+                let mut last = None;
+                b.bench(&name, || {
+                    last = Some(runner.run(factory.clone()).unwrap());
+                });
+                let report = last.expect("bench ran at least once");
+                assert_eq!(report.iterations, iters, "scale run must complete");
+                let mean_ns = b.result(&name).unwrap().mean_ns;
+                let iters_per_sec = iters as f64 * 1e9 / mean_ns;
+                per_precision.push((tag, iters_per_sec, report.thetas));
+            }
+            let (_, ips64, thetas64) = &per_precision[0];
+            let (_, ips32, thetas32) = &per_precision[1];
+            // f32 storage must not change what the run computes: same
+            // trajectory up to accumulated rounding
+            let theta_max_dev = thetas64
+                .iter()
+                .zip(thetas32.iter())
+                .flat_map(|(a, b)| a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()))
+                .fold(0.0, f64::max);
+            assert!(theta_max_dev.is_finite() && theta_max_dev < 1e-1,
+                    "f32 and f64 trajectories diverged: {theta_max_dev}");
+
+            let rss = peak_rss_kb();
+            println!(
+                "  {cell}: {:.1} B/node f64, {:.1} B/node f32 (param ratio \
+                 {param_ratio:.3}), {ips64:.1} it/s f64, {ips32:.1} it/s f32, \
+                 θ dev {theta_max_dev:.2e}, peak RSS {rss:.0} KiB",
+                bytes_node_f64, bytes_node_f32
+            );
+            cells.push(obj(vec![
+                ("name", s(cell.as_str())),
+                ("topology", s(topo.name())),
+                ("nodes", num(n as f64)),
+                ("dim", num(DIM as f64)),
+                ("iters", num(iters as f64)),
+                ("workers", num(workers as f64)),
+                ("bytes_per_node_f64", num(bytes_node_f64)),
+                ("bytes_per_node_f32", num(bytes_node_f32)),
+                ("f32_param_ratio", num(param_ratio)),
+                ("iters_per_sec_f64", num(*ips64)),
+                ("iters_per_sec_f32", num(*ips32)),
+                ("theta_max_dev_f32_vs_f64", num(theta_max_dev)),
+                ("peak_rss_kb", num(rss)),
+            ]));
+        }
+    }
+
+    let tier = if fast { "fast" } else if full { "full" } else { "default" };
+    let extra = vec![
+        ("tier", s(tier)),
+        ("cells", arr(cells)),
+        ("peak_rss_note", s(
+            "VmHWM is a process high-water mark: monotone across cells, \
+             which run smallest-first")),
+    ];
+    let path = b.write_json("scale", extra).expect("write bench json");
+    println!("wrote {}", path.display());
+}

@@ -14,6 +14,12 @@
 # bench_cluster reports the overlap win (pool vs scoped ns/iter under
 # link latency). Refresh with --all so the committed BENCH_cluster.json
 # pool envelope tracks measured numbers, not the provisional bound.
+#
+# --all also runs bench_scale at its default tier (1e4 + 1e5, ring +
+# power-law, both precisions). Set FADMM_BENCH_SCALE_FULL=1 first to
+# include the 1e6 cells (minutes of wall time, gigabyte-scale RSS) when
+# refreshing the committed BENCH_scale.json envelope — the ci.sh scale
+# memory gate only reads the 1e4 ring cell, which every tier includes.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -26,6 +32,8 @@ if [[ "${1:-}" == "--all" ]]; then
   cargo bench --bench bench_net
   echo "== full-budget bench_cluster (writes ../BENCH_cluster.json) =="
   cargo bench --bench bench_cluster
+  echo "== full-budget bench_scale (writes ../BENCH_scale.json) =="
+  cargo bench --bench bench_scale
 fi
 
 echo "baseline refreshed; commit the updated BENCH_*.json"

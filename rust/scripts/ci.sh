@@ -234,6 +234,54 @@ if [[ "${1:-}" != "--no-bench" ]]; then
     echo "bench smoke: bench_cluster wrote no BENCH_cluster.json" >&2
     exit 1
   fi
+  FADMM_BENCH_FAST=1 FADMM_BENCH_DIR="$smoke_dir" \
+    cargo bench --bench bench_scale
+  if [[ ! -f "$smoke_dir/BENCH_scale.json" ]]; then
+    echo "bench smoke: bench_scale wrote no BENCH_scale.json" >&2
+    exit 1
+  fi
+
+  # ---- scale memory gate ---------------------------------------------
+  # The 1e4-ring smoke cell must stay inside the layout envelope: CSR
+  # graph + padded f64 arena at dim 4 is ~150 bytes/node, gated at
+  # FADMM_SCALE_GATE_BYTES (default 256 — headroom for Vec capacity
+  # overshoot and per-shard padding on many-core machines), and the f32
+  # parameter buffers must cost at most 0.55x the f64 ones (layout math
+  # says exactly 0.5x; the slack covers only future metadata drift).
+  # Machine-speed independent, so it holds for smoke runs too.
+  echo "== scale memory gate =="
+  if ! command -v python3 >/dev/null 2>&1; then
+    echo "scale gate: python3 unavailable; skipping"
+  else
+    python3 - "$smoke_dir/BENCH_scale.json" \
+              "${FADMM_SCALE_GATE_BYTES:-256}" <<'PY'
+import json, sys
+
+doc = json.load(open(sys.argv[1]))
+max_bytes = float(sys.argv[2])
+cells = doc.get("cells", [])
+ring = next((c for c in cells
+             if c.get("topology") == "ring" and c.get("nodes") == 10000), None)
+if ring is None:
+    sys.exit("scale gate: 1e4 ring cell missing from fresh BENCH_scale.json")
+failures = []
+b64, b32 = ring.get("bytes_per_node_f64"), ring.get("bytes_per_node_f32")
+ratio = ring.get("f32_param_ratio")
+if b64 is None or b64 > max_bytes:
+    failures.append(f"bytes/node f64 {b64} > gate {max_bytes:.0f} "
+                    "(FADMM_SCALE_GATE_BYTES)")
+if b32 is None or b64 is None or b32 >= b64:
+    failures.append(f"bytes/node f32 {b32} not below f64 {b64}")
+if ratio is None or ratio > 0.55:
+    failures.append(f"f32/f64 param ratio {ratio} > 0.55")
+if ring.get("iters_per_sec_f64", 0) <= 0:
+    failures.append("f64 cell recorded no throughput")
+if failures:
+    sys.exit("scale gate: " + "; ".join(failures))
+print(f"scale gate: OK (1e4 ring: {b64:.1f} B/node f64, {b32:.1f} B/node f32, "
+      f"param ratio {ratio:.3f})")
+PY
+  fi
 
   # ---- cluster baseline gate -----------------------------------------
   # Check the fresh bench_cluster scenario metrics against the committed

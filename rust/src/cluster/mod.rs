@@ -25,7 +25,15 @@
 //! graph is split into `M` contiguous machine slices by the same
 //! degree-weighted splitter the pool uses for shards
 //! ([`MachinePartition`]), and each machine splits its slice again into
-//! `W` worker shards. Intra-machine neighbour reads go through the
+//! `W` worker shards. For large graphs the documented construction path
+//! is the *two-level* ordering [`hierarchical_partition`]: global RCM
+//! picks the machine cut (few cross-machine edges), then RCM re-runs
+//! *inside* each machine's range so per-machine arena reads stay dense
+//! too — at 10^6 nodes build the graph (`graph` module docs put the CSR
+//! itself at ~72 MB for mean degree 4), call
+//! `hierarchical_partition(&g, machines)`, and hand the returned graph +
+//! partition to the cluster runner; the returned `order[new_id] =
+//! original_id` maps results back to caller ids. Intra-machine neighbour reads go through the
 //! machine's arena exactly as in the coordinator; cross-machine edges
 //! read stamp-indexed boundary caches filled by [`crate::net::sim`]
 //! messages, with the async runtime's bounded-staleness and
@@ -128,7 +136,7 @@ pub mod proc;
 
 pub use collective::CollectiveKind;
 pub use node::{aggregate_obs, NodeReport, NodeRuntime};
-pub use partition::MachinePartition;
+pub use partition::{hierarchical_order, hierarchical_partition, MachinePartition};
 pub use runner::{factory_of, ClusterConfig, ClusterReport, ClusterRunner};
 
 #[cfg(test)]

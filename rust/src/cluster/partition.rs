@@ -18,8 +18,9 @@
 
 use std::ops::Range;
 
-use crate::error::Result;
-use crate::graph::{shard_ranges, Graph, NodeId};
+use crate::error::{Error, Result};
+use crate::graph::{rcm_order, rcm_order_in, relabel_graph, shard_ranges, Graph,
+                   NodeId};
 
 /// A machine partition of a node graph (see module docs).
 #[derive(Debug, Clone)]
@@ -36,7 +37,28 @@ pub struct MachinePartition {
 impl MachinePartition {
     /// Partition `graph` into at most `machines` contiguous slices.
     pub fn new(graph: &Graph, machines: usize) -> Result<MachinePartition> {
-        let ranges = shard_ranges(graph, machines);
+        MachinePartition::from_ranges(graph, shard_ranges(graph, machines))
+    }
+
+    /// Build a partition from an explicit set of contiguous ranges (the
+    /// hierarchical path hands the splitter's output back in after
+    /// reordering nodes *within* each range). Ranges must be ascending,
+    /// non-empty, and cover `0..graph.len()` exactly.
+    pub fn from_ranges(graph: &Graph, ranges: Vec<Range<usize>>)
+                       -> Result<MachinePartition> {
+        let mut expect = 0usize;
+        for r in &ranges {
+            if r.start != expect || r.end <= r.start {
+                return Err(Error::Config(format!(
+                    "partition: range {r:?} breaks contiguous coverage at {expect}")));
+            }
+            expect = r.end;
+        }
+        if expect != graph.len() {
+            return Err(Error::Config(format!(
+                "partition: ranges cover 0..{expect}, graph has {} nodes",
+                graph.len())));
+        }
         let m = ranges.len();
         let mut machine_of = vec![0usize; graph.len()];
         for (mid, r) in ranges.iter().enumerate() {
@@ -65,6 +87,51 @@ impl MachinePartition {
     pub fn is_empty(&self) -> bool {
         self.ranges.is_empty()
     }
+}
+
+/// Two-level hierarchical ordering — the documented construction path
+/// for 10^6-node cluster runs.
+///
+/// Level one is global RCM (cross-machine locality: the contiguous
+/// machine split cuts few edges), level two re-runs RCM *inside each
+/// machine's range* ([`rcm_order_in`]) so every machine's in-range
+/// neighbourhoods are also bandwidth-minimized — that is what keeps each
+/// per-machine worker pool's arena reads dense once the machine shards
+/// its own slice with `shard_ranges_in`. Local reordering permutes ids
+/// only within their range, so the machine ranges (and the quotient
+/// graph) are exactly the level-one split.
+///
+/// Returns `order[new_id] = original_id` over the whole graph plus the
+/// machine ranges in new-id space. Compose with [`relabel_graph`] and
+/// [`MachinePartition::from_ranges`] — or call
+/// [`hierarchical_partition`], which does all three.
+///
+/// At `machines = 1` the result degenerates to a flat double-RCM pass
+/// (level two sees the full span), so the hierarchy adds nothing on one
+/// machine — by construction, not by special case.
+pub fn hierarchical_order(graph: &Graph, machines: usize)
+                          -> Result<(Vec<NodeId>, Vec<Range<usize>>)> {
+    let global = rcm_order(graph);
+    let relabeled = relabel_graph(graph, &global)?;
+    let ranges = shard_ranges(&relabeled, machines);
+    let mut order = Vec::with_capacity(graph.len());
+    for r in &ranges {
+        for &local in rcm_order_in(&relabeled, r.clone()).iter() {
+            order.push(global[local]);
+        }
+    }
+    Ok((order, ranges))
+}
+
+/// [`hierarchical_order`] + relabel + partition in one call: the graph a
+/// cluster run should execute on, the permutation back to the caller's
+/// ids (`order[new_id] = original_id`), and the machine partition.
+pub fn hierarchical_partition(graph: &Graph, machines: usize)
+                              -> Result<(Graph, Vec<NodeId>, MachinePartition)> {
+    let (order, ranges) = hierarchical_order(graph, machines)?;
+    let relabeled = relabel_graph(graph, &order)?;
+    let partition = MachinePartition::from_ranges(&relabeled, ranges)?;
+    Ok((relabeled, order, partition))
 }
 
 #[cfg(test)]
@@ -116,5 +183,101 @@ mod tests {
         let g = Topology::Star.build(21).unwrap();
         let p = MachinePartition::new(&g, 3).unwrap();
         assert_eq!(p.ranges, shard_ranges(&g, 3));
+    }
+
+    #[test]
+    fn from_ranges_rejects_bad_coverage() {
+        let g = Topology::Ring.build(8).unwrap();
+        // gap
+        assert!(MachinePartition::from_ranges(&g, vec![0..3, 4..8]).is_err());
+        // overlap
+        assert!(MachinePartition::from_ranges(&g, vec![0..5, 4..8]).is_err());
+        // empty range
+        assert!(MachinePartition::from_ranges(&g, vec![0..4, 4..4, 4..8]).is_err());
+        // short coverage
+        assert!(MachinePartition::from_ranges(&g, vec![0..7]).is_err());
+        // exact coverage is fine and matches the direct constructor
+        let p = MachinePartition::from_ranges(&g, vec![0..4, 4..8]).unwrap();
+        let q = MachinePartition::new(&g, 2).unwrap();
+        assert_eq!(p.ranges, q.ranges);
+        assert_eq!(p.machine_of, q.machine_of);
+        assert_eq!(p.quotient.edge_count(), q.quotient.edge_count());
+    }
+
+    /// A ring whose ids were deliberately scrambled: the two-level path
+    /// must (a) return a true permutation, (b) keep the level-one machine
+    /// ranges, and (c) recover ring-like machine locality — each machine
+    /// borders at most its two neighbours, instead of the near-complete
+    /// quotient the scrambled labels would produce.
+    #[test]
+    fn hierarchical_partition_recovers_ring_locality() {
+        use crate::graph::{bandwidth, relabel_graph};
+        let ring = Topology::Ring.build(40).unwrap();
+        // stride-scramble: new id i held original node (i * 17) % 40
+        let scramble: Vec<usize> = (0..40).map(|i| (i * 17) % 40).collect();
+        let g = relabel_graph(&ring, &scramble).unwrap();
+        assert!(bandwidth(&g) > 10, "scramble must actually destroy locality");
+
+        let (relabeled, order, part) = hierarchical_partition(&g, 4).unwrap();
+
+        // (a) permutation over 0..40
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        // structure is preserved: still a connected 2-regular ring
+        assert_eq!(relabeled.len(), 40);
+        assert_eq!(relabeled.edge_count(), g.edge_count());
+        assert!(relabeled.is_connected());
+        assert!((0..40).all(|i| relabeled.degree(i) == 2));
+
+        // (b) ranges are the level-one split of the level-one relabeling
+        let (order2, ranges2) = hierarchical_order(&g, 4).unwrap();
+        assert_eq!(order2, order, "construction is deterministic");
+        assert_eq!(part.ranges, ranges2);
+
+        // (c) locality: each machine borders ≤ 2 others, and the
+        // node-level bandwidth collapsed versus the scrambled labels
+        assert_eq!(part.len(), 4);
+        assert!((0..4).all(|m| part.quotient.degree(m) <= 2));
+        assert!(bandwidth(&relabeled) < bandwidth(&g));
+    }
+
+    /// One machine degenerates to a flat RCM pass: same range set as the
+    /// direct constructor and a valid permutation — no special-casing.
+    #[test]
+    fn hierarchical_single_machine_is_flat() {
+        let g = Topology::Star.build(9).unwrap();
+        let (relabeled, order, part) = hierarchical_partition(&g, 1).unwrap();
+        assert_eq!(part.ranges, vec![0..9]);
+        assert_eq!(part.quotient.len(), 1);
+        let mut seen = order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..9).collect::<Vec<_>>());
+        assert_eq!(relabeled.edge_count(), g.edge_count());
+    }
+
+    /// Power-law graphs exercise the degree-skew shard cap underneath the
+    /// hierarchy: the partition must still be contiguous/exhaustive and
+    /// the quotient connected whenever the node graph is.
+    #[test]
+    fn hierarchical_partition_handles_power_law() {
+        use crate::graph::power_law;
+        use crate::util::rng::Pcg;
+        let mut rng = Pcg::new(7, 7);
+        let g = power_law(300, 2, &mut rng).unwrap();
+        let (relabeled, order, part) = hierarchical_partition(&g, 8).unwrap();
+        let mut expect = 0;
+        for r in &part.ranges {
+            assert_eq!(r.start, expect);
+            assert!(r.end > r.start);
+            expect = r.end;
+        }
+        assert_eq!(expect, 300);
+        assert!(part.len() >= 2 && part.len() <= 8);
+        assert!(relabeled.is_connected());
+        assert!(part.quotient.is_connected());
+        let mut seen = order;
+        seen.sort_unstable();
+        assert_eq!(seen, (0..300).collect::<Vec<_>>());
     }
 }

@@ -1,10 +1,46 @@
 //! Zero-copy double-buffered parameter arena + the phase barrier.
 //!
-//! The worker pool exchanges neighbour parameters through two flat `f64`
-//! buffers per quantity (θ and the directed-edge penalties η) indexed by
-//! *epoch parity*: iteration `t` reads the `t % 2` buffer and writes the
-//! `(t + 1) % 2` buffer, so a broadcast is just the owner writing its own
-//! block — no `Vec` clones, no channels, no staging maps.
+//! The worker pool exchanges neighbour parameters through two flat
+//! scalar buffers per quantity (θ and the directed-edge penalties η)
+//! indexed by *epoch parity*: iteration `t` reads the `t % 2` buffer and
+//! writes the `(t + 1) % 2` buffer, so a broadcast is just the owner
+//! writing its own block — no `Vec` clones, no channels, no staging maps.
+//!
+//! ## Struct-of-arrays layout and the alignment contract
+//!
+//! Each quantity is one flat array (struct-of-arrays: all θ together,
+//! all η together), addressed through per-node offsets:
+//!
+//! ```text
+//! θ buffer (one of two parities)
+//! ┌─ shard 0 ────────────────┐pad┌─ shard 1 ───────────┐pad┌─ …
+//! │ θ_0 │ θ_1 │ … │ θ_{k−1}  │▒▒▒│ θ_k │ θ_{k+1} │ …   │▒▒▒│
+//! └──────────────────────────┘   └─────────────────────┘
+//! 64B-aligned ↑                  64B-aligned ↑
+//! ```
+//!
+//! Buffers are allocated 64-byte aligned ([`RawBuf`]), and
+//! [`ParamArena::new_sharded`] pads each *shard's* θ and η block up to
+//! the next cache line. Phase A writes are therefore confined to cache
+//! lines wholly owned by one worker: two workers never store to the same
+//! line (no false sharing), which is what lets the phase-A store
+//! bandwidth scale with the worker count at 10^5–10^6 nodes. Padding
+//! changes addresses only — never values, never iteration order — so the
+//! padded f64 arena is bit-identical to the unpadded one.
+//! [`ParamArena::new`] is the single-shard (pad-free) layout the cluster
+//! runtime's per-machine arenas use.
+//!
+//! ## Reduced-precision storage ([`ArenaScalar`])
+//!
+//! The arena is generic over its storage scalar `P` (default `f64`).
+//! With `P = f32` the θ/η *storage* halves, while every kernel operation
+//! still runs in f64: blocks are widened on read into per-worker scratch
+//! and narrowed on write ([`ArenaScalar::widen`] /
+//! [`ArenaScalar::write_through`]). The f64 instantiation compiles to
+//! the exact pre-generic code — `widen` returns the arena slice itself
+//! and `write_through` hands the solver the arena block — so the default
+//! path stays zero-copy and bit-identical. See
+//! [`super::runner::Precision`] for when (not) to use f32.
 //!
 //! ## Safety discipline (why the raw pointers are sound)
 //!
@@ -22,38 +58,163 @@
 //! The accessors are still `unsafe fn`s: the *caller* (the shard loop in
 //! [`super::shard`]) is responsible for upholding the schedule.
 
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::ops::Range;
 use std::sync::{Condvar, Mutex};
 
 use crate::graph::{Graph, NodeId};
 
-/// A fixed-size heap buffer of `f64` shared across workers through raw
-/// pointers (see the module docs for the aliasing discipline).
-struct RawBuf {
-    ptr: *mut f64,
+/// Cache-line size the arena aligns and pads to.
+pub const CACHE_LINE: usize = 64;
+
+fn align_up(x: usize, unit: usize) -> usize {
+    x.div_ceil(unit) * unit
+}
+
+/// Storage scalar for [`ParamArena`]: `f64` (default, bit-identical,
+/// zero-copy) or `f32` (half the parameter footprint; kernel arithmetic
+/// stays f64 through widen/narrow at the arena boundary).
+///
+/// Contract: the all-zero *bit pattern* must equal `ZERO` (the arena
+/// allocates zeroed pages), and `widen`/`store`/`write_through` must be
+/// elementwise `to_f64`/`from_f64` so the two instantiations differ only
+/// in storage rounding.
+pub trait ArenaScalar: Copy + Send + Sync + 'static {
+    /// Additive identity; must be the all-zero bit pattern.
+    const ZERO: Self;
+
+    fn from_f64(x: f64) -> Self;
+    fn to_f64(self) -> f64;
+
+    /// Widen a stored block for kernel arithmetic. The `f64` impl
+    /// returns `src` itself — no copy, bit-identical; `f32` converts
+    /// into `scratch` (caller-provided, ≥ `src.len()`).
+    fn widen<'a>(src: &'a [Self], scratch: &'a mut [f64]) -> &'a [f64];
+
+    /// Narrow-store kernel-produced f64 values into a stored block.
+    fn store(dst: &mut [Self], src: &[f64]);
+
+    /// Run `write` on an f64 view of `block` and persist the result.
+    /// The `f64` impl passes `block` directly (in place, zero-copy);
+    /// `f32` routes through `scratch` and narrows after. `write` must
+    /// fully overwrite its argument — pre-existing contents are
+    /// unspecified.
+    fn write_through(block: &mut [Self], scratch: &mut [f64],
+                     write: impl FnOnce(&mut [f64]));
+}
+
+impl ArenaScalar for f64 {
+    const ZERO: f64 = 0.0;
+
+    #[inline]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+
+    #[inline]
+    fn widen<'a>(src: &'a [f64], _scratch: &'a mut [f64]) -> &'a [f64] {
+        src
+    }
+
+    #[inline]
+    fn store(dst: &mut [f64], src: &[f64]) {
+        dst.copy_from_slice(src);
+    }
+
+    #[inline]
+    fn write_through(block: &mut [f64], _scratch: &mut [f64],
+                     write: impl FnOnce(&mut [f64])) {
+        write(block);
+    }
+}
+
+impl ArenaScalar for f32 {
+    const ZERO: f32 = 0.0;
+
+    #[inline]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+
+    #[inline]
+    fn widen<'a>(src: &'a [f32], scratch: &'a mut [f64]) -> &'a [f64] {
+        let out = &mut scratch[..src.len()];
+        for (o, &x) in out.iter_mut().zip(src) {
+            *o = x as f64;
+        }
+        out
+    }
+
+    #[inline]
+    fn store(dst: &mut [f32], src: &[f64]) {
+        debug_assert_eq!(dst.len(), src.len());
+        for (o, &x) in dst.iter_mut().zip(src) {
+            *o = x as f32;
+        }
+    }
+
+    #[inline]
+    fn write_through(block: &mut [f32], scratch: &mut [f64],
+                     write: impl FnOnce(&mut [f64])) {
+        let tmp = &mut scratch[..block.len()];
+        write(tmp);
+        for (o, &x) in block.iter_mut().zip(&*tmp) {
+            *o = x as f32;
+        }
+    }
+}
+
+/// A fixed-size 64-byte-aligned heap buffer of `P` shared across workers
+/// through raw pointers (see the module docs for the aliasing
+/// discipline). Allocated zeroed — `ArenaScalar` requires the all-zero
+/// pattern to be `P::ZERO`.
+struct RawBuf<P> {
+    ptr: *mut P,
     len: usize,
 }
 
 // Safety: all access goes through the unsafe accessors below, whose
 // contract (owner-writes / parity / barrier) excludes data races.
-unsafe impl Send for RawBuf {}
-unsafe impl Sync for RawBuf {}
+unsafe impl<P: Send> Send for RawBuf<P> {}
+unsafe impl<P: Sync> Sync for RawBuf<P> {}
 
-impl RawBuf {
-    fn new(len: usize) -> RawBuf {
-        let boxed: Box<[f64]> = vec![0.0; len].into_boxed_slice();
-        RawBuf { ptr: Box::into_raw(boxed) as *mut f64, len }
+impl<P: ArenaScalar> RawBuf<P> {
+    fn new(len: usize) -> RawBuf<P> {
+        if len == 0 {
+            // no allocation; the pointer is never dereferenced
+            return RawBuf { ptr: std::ptr::NonNull::dangling().as_ptr(), len: 0 };
+        }
+        let layout = Layout::from_size_align(len * std::mem::size_of::<P>(),
+                                             CACHE_LINE)
+            .expect("arena: layout overflow");
+        // Safety: layout has non-zero size; zeroed bytes are P::ZERO by
+        // the ArenaScalar contract.
+        let ptr = unsafe { alloc_zeroed(layout) } as *mut P;
+        assert!(!ptr.is_null(), "arena: allocation of {} bytes failed",
+                layout.size());
+        RawBuf { ptr, len }
     }
 
     /// # Safety
     /// `[lo, hi)` must be in bounds and free of concurrent writers.
-    unsafe fn read(&self, lo: usize, hi: usize) -> &[f64] {
+    unsafe fn read(&self, lo: usize, hi: usize) -> &[P] {
         debug_assert!(lo <= hi && hi <= self.len);
         std::slice::from_raw_parts(self.ptr.add(lo), hi - lo)
     }
 
     /// # Safety
     /// `idx` must be in bounds and free of concurrent writers.
-    unsafe fn get(&self, idx: usize) -> f64 {
+    unsafe fn get(&self, idx: usize) -> P {
         debug_assert!(idx < self.len);
         *self.ptr.add(idx)
     }
@@ -62,52 +223,94 @@ impl RawBuf {
     /// `[lo, hi)` must be in bounds and accessed by no other thread for
     /// the lifetime of the returned slice (exclusive ownership).
     #[allow(clippy::mut_from_ref)]
-    unsafe fn write(&self, lo: usize, hi: usize) -> &mut [f64] {
+    unsafe fn write(&self, lo: usize, hi: usize) -> &mut [P] {
         debug_assert!(lo <= hi && hi <= self.len);
         std::slice::from_raw_parts_mut(self.ptr.add(lo), hi - lo)
     }
 }
 
-impl Drop for RawBuf {
+impl<P> Drop for RawBuf<P> {
     fn drop(&mut self) {
-        // Safety: ptr/len came from Box::into_raw of a Box<[f64]> of
-        // exactly this length, and Drop runs with exclusive access.
-        unsafe {
-            drop(Box::from_raw(std::ptr::slice_from_raw_parts_mut(self.ptr, self.len)));
+        if self.len > 0 {
+            // Safety: same layout as the alloc_zeroed in `new`; Drop runs
+            // with exclusive access.
+            unsafe {
+                dealloc(self.ptr as *mut u8,
+                        Layout::from_size_align_unchecked(
+                            self.len * std::mem::size_of::<P>(), CACHE_LINE));
+            }
         }
     }
 }
 
 /// Double-buffered θ / η storage for one run (see module docs).
 ///
-/// Layout: node `i`'s parameters live at `[i·dim, (i+1)·dim)` in each θ
-/// buffer; its out-edge penalties (neighbour-slot order, matching
-/// `Graph::neighbors(i)`) live at `[edge_off[i], edge_off[i+1])` in each
-/// η buffer, so η_{i→j} for `j` at slot `s` sits at `edge_off[i] + s`.
-pub struct ParamArena {
+/// Layout: node `i`'s parameters live at `[theta_off[i],
+/// theta_off[i] + dim)` in each θ buffer; its out-edge penalties
+/// (neighbour-slot order, matching `Graph::neighbors(i)`) live at
+/// `[eta_off[i], eta_off[i] + degree(i))` in each η buffer, so η_{i→j}
+/// for `j` at slot `s` sits at `eta_index(i, s) = eta_off[i] + s`.
+/// Offsets are consecutive except at shard starts, which
+/// [`ParamArena::new_sharded`] rounds up to a cache line.
+pub struct ParamArena<P: ArenaScalar = f64> {
     dim: usize,
     n: usize,
-    theta: [RawBuf; 2],
-    eta: [RawBuf; 2],
-    edge_off: Vec<usize>,
+    theta: [RawBuf<P>; 2],
+    eta: [RawBuf<P>; 2],
+    theta_off: Vec<usize>,
+    eta_off: Vec<usize>,
+    deg: Vec<usize>,
 }
 
-impl ParamArena {
-    pub fn new(graph: &Graph, dim: usize) -> ParamArena {
+impl<P: ArenaScalar> ParamArena<P> {
+    /// Single-shard layout: dense, no padding (node `i`'s θ at
+    /// `i · dim`). Used by the cluster runtime's per-machine arenas,
+    /// whose phase-A writers are partitioned by `shard_ranges_in` over
+    /// disjoint line-aligned-enough machine slices already.
+    pub fn new(graph: &Graph, dim: usize) -> ParamArena<P> {
+        Self::new_sharded(graph, dim, &[0..graph.len()])
+    }
+
+    /// Shard-aware layout: each range in `ranges` starts on a 64-byte
+    /// boundary in both the θ and η buffers, so phase-A/phase-C writes by
+    /// different workers never share a cache line. `ranges` must be the
+    /// shard partition the run will use (`shard_ranges`' output:
+    /// ascending, disjoint). Padding affects addresses only — values and
+    /// visit order are unchanged, so this is bit-transparent.
+    pub fn new_sharded(graph: &Graph, dim: usize,
+                       ranges: &[Range<usize>]) -> ParamArena<P> {
         let n = graph.len();
-        let mut edge_off = Vec::with_capacity(n + 1);
-        let mut acc = 0usize;
-        for i in 0..n {
-            edge_off.push(acc);
-            acc += graph.degree(i);
+        let unit = CACHE_LINE / std::mem::size_of::<P>();
+        let mut is_start = vec![false; n];
+        for r in ranges {
+            if r.start < n {
+                is_start[r.start] = true;
+            }
         }
-        edge_off.push(acc);
+        let mut theta_off = Vec::with_capacity(n);
+        let mut eta_off = Vec::with_capacity(n);
+        let mut deg = Vec::with_capacity(n);
+        let (mut toff, mut eoff) = (0usize, 0usize);
+        for i in 0..n {
+            if is_start[i] {
+                toff = align_up(toff, unit);
+                eoff = align_up(eoff, unit);
+            }
+            theta_off.push(toff);
+            eta_off.push(eoff);
+            let d = graph.degree(i);
+            deg.push(d);
+            toff += dim;
+            eoff += d;
+        }
         ParamArena {
             dim,
             n,
-            theta: [RawBuf::new(n * dim), RawBuf::new(n * dim)],
-            eta: [RawBuf::new(acc), RawBuf::new(acc)],
-            edge_off,
+            theta: [RawBuf::new(toff), RawBuf::new(toff)],
+            eta: [RawBuf::new(eoff), RawBuf::new(eoff)],
+            theta_off,
+            eta_off,
+            deg,
         }
     }
 
@@ -123,39 +326,48 @@ impl ParamArena {
         self.n == 0
     }
 
+    /// Bytes of parameter storage (the four scalar buffers, shard padding
+    /// included) — the quantity the f32 path halves exactly.
+    pub fn param_bytes(&self) -> usize {
+        (2 * self.theta[0].len + 2 * self.eta[0].len) * std::mem::size_of::<P>()
+    }
+
+    /// Total heap bytes: parameter buffers plus the per-node
+    /// offset/degree index (whose width is scalar-independent).
+    pub fn heap_bytes(&self) -> usize {
+        self.param_bytes()
+            + (self.theta_off.capacity() + self.eta_off.capacity()
+               + self.deg.capacity()) * std::mem::size_of::<usize>()
+    }
+
     /// Flat η-buffer index of the directed edge (`i` → its neighbour at
     /// `slot`).
     pub fn eta_index(&self, i: NodeId, slot: usize) -> usize {
-        debug_assert!(self.edge_off[i] + slot < self.edge_off[i + 1]);
-        self.edge_off[i] + slot
+        debug_assert!(slot < self.deg[i]);
+        self.eta_off[i] + slot
     }
 
     /// # Safety
     /// No worker may be writing `node`'s θ block in `parity` concurrently.
-    pub unsafe fn theta(&self, parity: usize, node: NodeId) -> &[f64] {
-        self.theta[parity & 1].read(node * self.dim, (node + 1) * self.dim)
-    }
-
-    /// # Safety
-    /// As [`ParamArena::theta`], for the whole buffer (leader fold only,
-    /// between the post-stats and post-verdict barriers).
-    pub unsafe fn theta_all(&self, parity: usize) -> &[f64] {
-        self.theta[parity & 1].read(0, self.n * self.dim)
+    pub unsafe fn theta(&self, parity: usize, node: NodeId) -> &[P] {
+        let lo = self.theta_off[node];
+        self.theta[parity & 1].read(lo, lo + self.dim)
     }
 
     /// # Safety
     /// Caller must be `node`'s owner, during a phase in which `parity` is
     /// the write buffer.
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn theta_mut(&self, parity: usize, node: NodeId) -> &mut [f64] {
-        self.theta[parity & 1].write(node * self.dim, (node + 1) * self.dim)
+    pub unsafe fn theta_mut(&self, parity: usize, node: NodeId) -> &mut [P] {
+        let lo = self.theta_off[node];
+        self.theta[parity & 1].write(lo, lo + self.dim)
     }
 
     /// η at a flat index (see [`ParamArena::eta_index`]).
     ///
     /// # Safety
     /// No worker may be writing the `parity` η buffer slot concurrently.
-    pub unsafe fn eta(&self, parity: usize, idx: usize) -> f64 {
+    pub unsafe fn eta(&self, parity: usize, idx: usize) -> P {
         self.eta[parity & 1].get(idx)
     }
 
@@ -165,8 +377,9 @@ impl ParamArena {
     /// Caller must be `node`'s owner, during a phase in which `parity` is
     /// the write buffer.
     #[allow(clippy::mut_from_ref)]
-    pub unsafe fn eta_out_mut(&self, parity: usize, node: NodeId) -> &mut [f64] {
-        self.eta[parity & 1].write(self.edge_off[node], self.edge_off[node + 1])
+    pub unsafe fn eta_out_mut(&self, parity: usize, node: NodeId) -> &mut [P] {
+        let lo = self.eta_off[node];
+        self.eta[parity & 1].write(lo, lo + self.deg[node])
     }
 }
 
@@ -231,13 +444,13 @@ impl PhaseBarrier {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::Topology;
+    use crate::graph::{shard_ranges, Topology};
     use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn arena_layout_matches_graph() {
         let g = Topology::Star.build(4).unwrap(); // deg: [3, 1, 1, 1]
-        let a = ParamArena::new(&g, 2);
+        let a: ParamArena = ParamArena::new(&g, 2);
         assert_eq!(a.dim(), 2);
         assert_eq!(a.len(), 4);
         assert_eq!(a.eta_index(0, 0), 0);
@@ -249,21 +462,91 @@ mod tests {
     #[test]
     fn arena_single_thread_roundtrip() {
         let g = Topology::Ring.build(3).unwrap();
-        let a = ParamArena::new(&g, 2);
+        let a: ParamArena = ParamArena::new(&g, 2);
         unsafe {
             a.theta_mut(0, 1).copy_from_slice(&[1.5, -2.5]);
             a.eta_out_mut(1, 2).copy_from_slice(&[7.0, 8.0]);
             assert_eq!(a.theta(0, 1), &[1.5, -2.5]);
             assert_eq!(a.theta(1, 1), &[0.0, 0.0], "buffers are independent");
             assert_eq!(a.eta(1, a.eta_index(2, 1)), 8.0);
-            assert_eq!(a.theta_all(0), &[0.0, 0.0, 1.5, -2.5, 0.0, 0.0]);
+            assert_eq!(a.theta(0, 0), &[0.0, 0.0]);
+            assert_eq!(a.theta(0, 2), &[0.0, 0.0]);
         }
+    }
+
+    #[test]
+    fn sharded_layout_aligns_every_shard_start() {
+        let g = Topology::Ring.build(10).unwrap();
+        let ranges = shard_ranges(&g, 3);
+        let a: ParamArena = ParamArena::new_sharded(&g, 3, &ranges);
+        for r in &ranges {
+            let t = unsafe { a.theta(0, r.start) }.as_ptr() as usize;
+            assert_eq!(t % CACHE_LINE, 0, "θ shard start {r:?}");
+            let e = unsafe { a.eta_out_mut(0, r.start) }.as_ptr() as usize;
+            assert_eq!(e % CACHE_LINE, 0, "η shard start {r:?}");
+        }
+        // interior nodes stay dense: blocks inside a shard are contiguous
+        let r0 = &ranges[0];
+        for i in r0.start..r0.end.saturating_sub(1) {
+            let a0 = unsafe { a.theta(0, i) }.as_ptr() as usize;
+            let a1 = unsafe { a.theta(0, i + 1) }.as_ptr() as usize;
+            assert_eq!(a1 - a0, 3 * std::mem::size_of::<f64>());
+        }
+    }
+
+    #[test]
+    fn single_shard_layout_is_dense() {
+        // ParamArena::new (the cluster path) must reproduce the unpadded
+        // layout exactly: node i's θ at i·dim, η at the degree prefix sum
+        let g = Topology::Star.build(5).unwrap();
+        let a: ParamArena = ParamArena::new(&g, 2);
+        let base = unsafe { a.theta(0, 0) }.as_ptr() as usize;
+        for i in 0..5 {
+            let p = unsafe { a.theta(0, i) }.as_ptr() as usize;
+            assert_eq!(p - base, i * 2 * std::mem::size_of::<f64>());
+        }
+        assert_eq!(a.eta_index(1, 0), 4); // after the hub's 4 slots
+        assert_eq!(a.param_bytes(), (2 * 10 + 2 * 8) * 8);
+    }
+
+    #[test]
+    fn f32_arena_roundtrips_and_halves_param_bytes() {
+        let g = Topology::Ring.build(8).unwrap();
+        let ranges = shard_ranges(&g, 2);
+        let a64: ParamArena<f64> = ParamArena::new_sharded(&g, 4, &ranges);
+        let a32: ParamArena<f32> = ParamArena::new_sharded(&g, 4, &ranges);
+        assert_eq!(a32.param_bytes() * 2, a64.param_bytes(),
+                   "f32 halves the parameter footprint exactly");
+        let vals = [1.25f64, -0.5, 3.0, 1e-3];
+        let mut scratch = [0.0f64; 4];
+        unsafe {
+            f32::store(a32.theta_mut(0, 5), &vals);
+            let wide = f32::widen(a32.theta(0, 5), &mut scratch);
+            for (w, v) in wide.iter().zip(&vals) {
+                assert!((w - v).abs() <= v.abs() * 1e-6, "{w} vs {v}");
+            }
+        }
+        // write_through narrows exactly like store
+        let mut scratch2 = [0.0f64; 4];
+        unsafe {
+            f32::write_through(a32.theta_mut(1, 5), &mut scratch2,
+                               |dst| dst.copy_from_slice(&vals));
+            assert_eq!(a32.theta(1, 5), &[1.25f32, -0.5, 3.0, 1e-3 as f32]);
+        }
+    }
+
+    #[test]
+    fn f64_widen_is_zero_copy() {
+        let src = [1.0f64, 2.0];
+        let mut scratch = [0.0f64; 2];
+        let wide = f64::widen(&src, &mut scratch);
+        assert_eq!(wide.as_ptr(), src.as_ptr(), "no copy on the f64 path");
     }
 
     #[test]
     fn barrier_synchronizes_writers_and_readers() {
         let g = Topology::Complete.build(4).unwrap();
-        let arena = ParamArena::new(&g, 1);
+        let arena: ParamArena = ParamArena::new(&g, 1);
         let barrier = PhaseBarrier::new(4);
         let hits = AtomicUsize::new(0);
         std::thread::scope(|s| {

@@ -113,13 +113,37 @@
 //! runs this same pool *per machine* and ships
 //! [`crate::metrics::StatPartial`]s across a simulated network instead of
 //! a mutex — see `cluster::machine` for the composition.
+//!
+//! ## Memory layout at scale
+//!
+//! The arena is struct-of-arrays: one flat buffer per quantity per
+//! parity (θ×2, η×2), 64-byte aligned, with every *shard's* block padded
+//! up to a cache line ([`ParamArena::new_sharded`]) so phase-A/phase-C
+//! writes by different workers never touch the same line:
+//!
+//! ```text
+//! θ: ║ shard 0: θ_0 θ_1 … ║pad║ shard 1: θ_k … ║pad║ …   (×2 parities)
+//! η: ║ shard 0: η-blocks  ║pad║ shard 1: …     ║pad║ …   (×2 parities)
+//!      ↑64B-aligned            ↑64B-aligned
+//! ```
+//!
+//! Combined with the CSR graph (`graph` module docs) and RCM relabeling,
+//! a worker's whole iteration touches two dense windows per buffer — its
+//! own shard (written) and a neighbourhood halo (read). At 10^6 nodes
+//! the parameter footprint is `(2·dim + 2·mean_deg) · scalar_bytes` per
+//! node plus three `usize` offsets; [`ShardedConfig::precision`] =
+//! [`Precision::F32`] halves the scalar part while keeping every
+//! accumulator f64 (see [`Precision`] for when *not* to use it —
+//! tolerances ≤ ~1e-6, bit-reproducibility requirements, ill-conditioned
+//! local problems). `bench_scale` measures bytes/node and
+//! iterations/sec at 1e4–1e6 nodes and `ci.sh` gates the envelope.
 
 mod arena;
 mod messages;
 mod runner;
 mod shard;
 
-pub use arena::{ParamArena, PhaseBarrier, Poisoned};
+pub use arena::{ArenaScalar, ParamArena, PhaseBarrier, Poisoned, CACHE_LINE};
 pub use messages::Verdict;
-pub use runner::{RunnerReport, ShardedConfig, ShardedRunner, SolverFactory,
-                 ThreadedConfig, ThreadedReport, ThreadedRunner};
+pub use runner::{Precision, RunnerReport, ShardedConfig, ShardedRunner,
+                 SolverFactory, ThreadedConfig, ThreadedReport, ThreadedRunner};

@@ -19,7 +19,7 @@
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use super::arena::{ParamArena, PhaseBarrier};
+use super::arena::{ArenaScalar, ParamArena, PhaseBarrier};
 use super::messages::Verdict;
 use super::shard::{worker_main, LeadOutcome, LeadState, ShardPartial, WorkerCtx,
                    WorkerError};
@@ -34,6 +34,35 @@ use crate::pool::{note_thread_spawn, ExecMode, PhasePool};
 /// Builds one node's solver inside its worker thread (backends need not
 /// be `Send`; only the factory crosses threads).
 pub type SolverFactory<S> = Arc<dyn Fn(NodeId) -> S + Send + Sync>;
+
+/// Storage precision of the parameter arena
+/// ([`ShardedConfig::precision`]).
+///
+/// `F64` is the default and is bit-identical to every prior release: the
+/// arena slices flow through the kernel with zero copies. `F32` halves
+/// the θ/η storage footprint — the lever that fits 10^6-node runs in
+/// cache-and-DRAM budgets — while *all arithmetic stays f64*: blocks are
+/// widened on read and narrowed on write at the arena boundary, and the
+/// Chan-style [`crate::metrics::StatPartial`] folds plus the stop test
+/// keep full-precision accumulators, so convergence verdicts stay
+/// honest.
+///
+/// When **not** to use `F32`: tolerances at or below ~1e-6 (the storage
+/// rounding floor, ~1e-7 relative, stalls the residuals there),
+/// bit-reproducibility requirements against f64 runs or the sequential
+/// engine, and ill-conditioned local problems where θ round-tripping
+/// through f32 each iteration perturbs the fixed point. Validation is by
+/// iteration-count-delta tolerance against the f64 run, never bit
+/// parity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// 8-byte θ/η storage — zero-copy, bit-identical default.
+    #[default]
+    F64,
+    /// 4-byte θ/η storage — half the parameter bytes; f64 arithmetic and
+    /// statistics (see type docs for caveats).
+    F32,
+}
 
 /// Sharded-run configuration (mirrors [`crate::consensus::EngineConfig`]).
 #[derive(Debug, Clone, Copy)]
@@ -65,6 +94,10 @@ pub struct ShardedConfig {
     /// nothing is instrumented inside the shard program (no per-round
     /// phase durations; no timeline: the arena has no wire)
     pub series: bool,
+    /// Arena storage precision (default [`Precision::F64`], bit-identical
+    /// to prior releases; [`Precision::F32`] halves parameter memory —
+    /// see the enum docs for caveats).
+    pub precision: Precision,
 }
 
 /// Backward-compatible name for [`ShardedConfig`] (the thread-per-node
@@ -86,6 +119,7 @@ impl Default for ShardedConfig {
             exec: ExecMode::default(),
             obs: false,
             series: false,
+            precision: Precision::default(),
         }
     }
 }
@@ -145,7 +179,10 @@ impl ShardedRunner {
         self.rcm_cache.get().map(Vec::as_slice)
     }
 
-    /// The worker-pool size a run will use.
+    /// The worker-pool size a run will request. The degree-skew cap in
+    /// [`crate::graph::shard_ranges`] may reduce the *actual* count on
+    /// heavy-tailed graphs; [`RunnerReport::workers`] records the
+    /// resolved value.
     pub fn workers(&self) -> usize {
         let n = self.graph.len();
         if self.cfg.workers > 0 {
@@ -201,6 +238,21 @@ impl ShardedRunner {
     where
         S: LocalSolver,
     {
+        // monomorphize the whole run on the arena scalar: the f64
+        // instantiation is the exact pre-Precision code path
+        match self.cfg.precision {
+            Precision::F64 => self.run_typed::<S, f64>(factory, metric),
+            Precision::F32 => self.run_typed::<S, f32>(factory, metric),
+        }
+    }
+
+    fn run_typed<S, P>(&self, factory: SolverFactory<S>,
+                       metric: Option<&mut (dyn AppMetricHook + Send)>)
+                       -> Result<RunnerReport>
+    where
+        S: LocalSolver,
+        P: ArenaScalar,
+    {
         let n = self.graph.len();
         // probe one solver for the parameter dimension (factories are
         // deterministic constructors, so this is cheap and side-effect
@@ -229,9 +281,12 @@ impl ShardedRunner {
         let graph: &Graph = relabeled.as_ref().unwrap_or(&self.graph);
 
         let ranges = shard_ranges(graph, workers);
-        debug_assert_eq!(ranges.len(), workers);
+        // the degree-skew cap may return fewer shards than requested —
+        // the barrier, pool, partials and report are all sized off the
+        // actual count (a barrier sized to the request would deadlock)
+        let workers = ranges.len();
 
-        let arena = ParamArena::new(graph, dim);
+        let arena: ParamArena<P> = ParamArena::new_sharded(graph, dim, &ranges);
         let barrier = PhaseBarrier::new(workers);
         let partials = Mutex::new(vec![ShardPartial::new(dim); workers]);
         let verdict = Mutex::new(Verdict {
@@ -376,7 +431,10 @@ impl ShardedRunner {
         let mut thetas = vec![vec![0.0; dim]; n];
         for (i, &orig) in order.iter().enumerate() {
             // Safety: every worker has been joined; no concurrent access.
-            thetas[orig].copy_from_slice(unsafe { arena.theta(parity, i) });
+            let th = unsafe { arena.theta(parity, i) };
+            for (d, &x) in thetas[orig].iter_mut().zip(th) {
+                *d = x.to_f64();
+            }
         }
         obs.inc(probes.rounds, lead.iterations as u64);
         obs.set_gauge(probes.iterations, lead.iterations as f64);
@@ -868,6 +926,73 @@ mod tests {
                            "{topo:?}/{scheme:?}: IterStats streams diverge");
             }
         }
+    }
+
+    #[test]
+    fn f32_precision_agrees_with_f64_on_verdict_and_iterations() {
+        // the tentpole acceptance contract: the f32 path is validated by
+        // an iteration-count-delta tolerance and verdict agreement, never
+        // bit parity. tol 1e-4 sits well above f32's ~1e-7 storage floor.
+        let run = |precision| {
+            let (factory, opt) = quad_factory(8, 3, 23);
+            let runner = ShardedRunner::new(
+                Topology::Ring.build(8).unwrap(),
+                ShardedConfig { scheme: SchemeKind::Ap, tol: 1e-4,
+                                max_iters: 800, precision,
+                                ..Default::default() },
+            );
+            (runner.run(factory).unwrap(), opt)
+        };
+        let (wide, opt) = run(Precision::F64);
+        let (narrow, _) = run(Precision::F32);
+        assert!(wide.converged, "f64 baseline must converge");
+        assert_eq!(wide.converged, narrow.converged, "verdicts agree");
+        let delta = wide.iterations.abs_diff(narrow.iterations);
+        assert!(delta <= wide.iterations / 4 + 2,
+                "iteration counts {} (f64) vs {} (f32) drifted past tolerance",
+                wide.iterations, narrow.iterations);
+        assert!(max_err(&narrow.thetas, &opt) < 1e-2,
+                "f32 run still lands near the centralized optimum: {}",
+                max_err(&narrow.thetas, &opt));
+    }
+
+    #[test]
+    fn f32_default_is_off_and_f64_path_unchanged() {
+        assert_eq!(ShardedConfig::default().precision, Precision::F64);
+        // explicit F64 is the same code path as the default — identical
+        // bits, not merely close
+        let run = |precision| {
+            let (factory, _) = quad_factory(6, 2, 47);
+            ShardedRunner::new(
+                Topology::Star.build(6).unwrap(),
+                ShardedConfig { scheme: SchemeKind::Vp, tol: 0.0, max_iters: 30,
+                                precision, ..Default::default() },
+            )
+            .run(factory)
+            .unwrap()
+        };
+        let dflt = run(Precision::default());
+        let f64e = run(Precision::F64);
+        assert_eq!(dflt.thetas, f64e.thetas);
+        assert_eq!(dflt.recorder.stats, f64e.recorder.stats);
+    }
+
+    #[test]
+    fn capped_shards_still_run_star_hub() {
+        // star(1001) at 64 requested workers is capped to 5 shards by the
+        // degree-skew cap; the barrier/pool must size to the actual count
+        // instead of deadlocking, and the report must record it
+        let (factory, _) = quad_factory(1001, 2, 3);
+        let runner = ShardedRunner::new(
+            Topology::Star.build(1001).unwrap(),
+            ShardedConfig { max_iters: 3, tol: 0.0, workers: 64,
+                            relabel: Relabel::Identity,
+                            ..Default::default() },
+        );
+        let report = runner.run(factory).unwrap();
+        assert_eq!(report.iterations, 3);
+        assert!(report.workers < 64, "hub cap reduced the pool");
+        assert!(report.thetas.iter().all(|t| t.iter().all(|x| x.is_finite())));
     }
 
     #[test]

@@ -12,8 +12,7 @@
 use std::ops::Range;
 use std::sync::Mutex;
 
-use super::arena::ParamArena;
-use super::arena::PhaseBarrier;
+use super::arena::{ArenaScalar, ParamArena, PhaseBarrier};
 use super::messages::Verdict;
 use super::runner::{ShardedConfig, SolverFactory};
 use crate::consensus::LocalSolver;
@@ -36,10 +35,13 @@ pub(crate) enum WorkerError {
 }
 
 /// Everything a worker borrows from the runner for the duration of a run.
-pub(crate) struct WorkerCtx<'a> {
+/// Generic over the arena storage scalar (`P = f64` is the zero-copy
+/// bit-parity default; `P = f32` is the reduced-precision path — see
+/// [`super::runner::Precision`]).
+pub(crate) struct WorkerCtx<'a, P: ArenaScalar = f64> {
     /// The (possibly relabeled) graph the pool actually runs on.
     pub graph: &'a Graph,
-    pub arena: &'a ParamArena,
+    pub arena: &'a ParamArena<P>,
     pub barrier: &'a PhaseBarrier,
     pub partials: &'a Mutex<Vec<ShardPartial>>,
     pub verdict: &'a Mutex<Verdict>,
@@ -100,45 +102,53 @@ struct NodeState<S> {
 }
 
 /// The coordinator's [`SlotView`]: always-live slots, exact (lag-0)
-/// zero-copy reads out of the parity-disciplined arena.
+/// reads out of the parity-disciplined arena. On the f64 path the reads
+/// are zero-copy (the arena slice itself); on the f32 path each read
+/// widens into `scratch` — one dim-sized buffer suffices because
+/// [`SlotView`] methods take `&mut self`, so at most one returned slice
+/// is live at a time.
 ///
 /// Safety of the unsafe reads: phase A reads only parity-`theta_parity`
 /// θ (no writers during the phase) and phase B reads the post-barrier
 /// parity-q θ plus the stable parity-p η — the coordinator's aliasing
 /// discipline, unchanged (see [`super`] module docs).
-struct ArenaSlots<'a> {
-    arena: &'a ParamArena,
+struct ArenaSlots<'a, P: ArenaScalar> {
+    arena: &'a ParamArena<P>,
     nbrs: &'a [NodeId],
     theta_parity: usize,
     eta_parity: usize,
     in_eta_idx: &'a [usize],
+    /// dim-sized widening buffer; untouched when `P = f64`
+    scratch: &'a mut [f64],
 }
 
-impl SlotView for ArenaSlots<'_> {
+impl<P: ArenaScalar> SlotView for ArenaSlots<'_, P> {
     fn live(&self, _slot: usize) -> bool {
         true
     }
 
     fn theta(&mut self, slot: usize) -> (&[f64], u64) {
         // Safety: see type docs.
-        (unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }, 0)
+        let raw = unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) };
+        (P::widen(raw, &mut *self.scratch), 0)
     }
 
     fn theta_again(&mut self, slot: usize) -> &[f64] {
         // Safety: see type docs.
-        unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) }
+        let raw = unsafe { self.arena.theta(self.theta_parity, self.nbrs[slot]) };
+        P::widen(raw, &mut *self.scratch)
     }
 
     fn eta_in(&mut self, slot: usize) -> f64 {
         // Safety: see type docs.
-        unsafe { self.arena.eta(self.eta_parity, self.in_eta_idx[slot]) }
+        unsafe { self.arena.eta(self.eta_parity, self.in_eta_idx[slot]) }.to_f64()
     }
 }
 
 /// The worker body. `widx` is the shard index; worker 0 carries the
 /// leader state. Returns the leader outcome (worker 0) or `None`.
-pub(crate) fn worker_main<S: LocalSolver>(
-    ctx: &WorkerCtx<'_>,
+pub(crate) fn worker_main<S: LocalSolver, P: ArenaScalar>(
+    ctx: &WorkerCtx<'_, P>,
     widx: usize,
     range: Range<usize>,
     factory: SolverFactory<S>,
@@ -165,8 +175,8 @@ pub(crate) fn worker_main<S: LocalSolver>(
         // Safety: we own node i; parity 0 is the pre-loop write buffer and
         // nobody reads it before the init barrier below.
         unsafe {
-            ctx.arena.theta_mut(0, i).copy_from_slice(&theta0);
-            ctx.arena.eta_out_mut(0, i).copy_from_slice(&kernel.etas);
+            P::store(ctx.arena.theta_mut(0, i), &theta0);
+            P::store(ctx.arena.eta_out_mut(0, i), &kernel.etas);
         }
         let in_eta_idx = ctx
             .graph
@@ -181,6 +191,13 @@ pub(crate) fn worker_main<S: LocalSolver>(
     }
     let mut scratch = KernelScratch::new(dim, max_deg);
     let mut partial = ShardPartial::new(dim);
+    // reduced-precision widening buffers, allocated once at setup. On the
+    // f64 path `widen`/`write_through` never touch them (the arena slices
+    // flow through directly), so the zero-copy, zero-alloc steady state
+    // is preserved exactly.
+    let mut own_wide = vec![0.0f64; dim];
+    let mut view_wide = vec![0.0f64; dim];
+    let mut write_wide = vec![0.0f64; dim];
 
     // everyone's θ⁰/η⁰ must be visible before the first solve
     ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?;
@@ -191,55 +208,66 @@ pub(crate) fn worker_main<S: LocalSolver>(
 
         // ---- phase A: local solves on epoch-t parameters ------------------
         for st in &mut nodes {
+            let NodeState { id, solver, kernel, in_eta_idx } = st;
+            let id = *id;
             // Safety: phase A reads only parity-p θ (no writers this phase)
             // and writes only our own parity-q block; solve_into overwrites
             // the block in full, so stale θ^{t−1} contents are never
             // observable.
-            let theta_t = unsafe { ctx.arena.theta(p, st.id) };
+            let theta_t = P::widen(unsafe { ctx.arena.theta(p, id) },
+                                   &mut own_wide);
             let mut view = ArenaSlots {
                 arena: ctx.arena,
-                nbrs: ctx.graph.neighbors(st.id),
+                nbrs: ctx.graph.neighbors(id),
                 theta_parity: p,
                 eta_parity: p,
-                in_eta_idx: &st.in_eta_idx,
+                in_eta_idx,
+                scratch: &mut view_wide,
             };
-            let theta_next = unsafe { ctx.arena.theta_mut(q, st.id) };
-            st.kernel.solve_into(&mut st.solver, theta_t,
-                                 ctx.graph.degree(st.id), &mut view,
-                                 &mut scratch, theta_next);
+            let theta_next = unsafe { ctx.arena.theta_mut(q, id) };
+            P::write_through(theta_next, &mut write_wide, |dst| {
+                kernel.solve_into(solver, theta_t, ctx.graph.degree(id),
+                                  &mut view, &mut scratch, dst);
+            });
         }
         ctx.barrier.wait().map_err(|_| WorkerError::Poisoned)?; // epoch swap
 
         // ---- phase B: duals, residuals, objectives, partial reduction -----
         partial.reset();
         for st in &mut nodes {
-            let deg = ctx.graph.degree(st.id);
+            let NodeState { id, solver, kernel, in_eta_idx } = st;
+            let id = *id;
+            let deg = ctx.graph.degree(id);
             // Safety: after the barrier every parity-q θ block is complete
             // and no worker writes θ until the next phase A; η parity-p is
             // stable until phase C writes parity-q.
-            let th_new = unsafe { ctx.arena.theta(q, st.id) };
+            let th_new = P::widen(unsafe { ctx.arena.theta(q, id) },
+                                  &mut own_wide);
             let mut view = ArenaSlots {
                 arena: ctx.arena,
-                nbrs: ctx.graph.neighbors(st.id),
+                nbrs: ctx.graph.neighbors(id),
                 theta_parity: q,
                 eta_parity: p,
-                in_eta_idx: &st.in_eta_idx,
+                in_eta_idx,
+                scratch: &mut view_wide,
             };
-            st.kernel.reduce(&mut st.solver, th_new, deg, &mut view,
-                             DualPolicy::exact(), &mut scratch);
+            kernel.reduce(solver, th_new, deg, &mut view,
+                          DualPolicy::exact(), &mut scratch);
 
             // shard-local reduction, node order = sequential order
-            partial.absorb_node(st.kernel.f_self, st.kernel.primal,
-                                st.kernel.dual, &st.kernel.etas, th_new);
+            partial.absorb_node(kernel.f_self, kernel.primal,
+                                kernel.dual, &kernel.etas, th_new);
         }
         // second shard-local pass over parity-q: spread about the *shard*
         // mean (the centered statistic the leader's Chan-style fold needs).
         // Safety: parity-q θ is stable throughout phase B.
-        partial.finish_centered(
-            nodes.len(),
-            nodes.iter().map(|st| unsafe { ctx.arena.theta(q, st.id) }),
-            &mut scratch.nbr_mean,
-        );
+        partial.finish_centered_with(nodes.len(), &mut scratch.nbr_mean,
+                                     |absorb| {
+            for st in &nodes {
+                let raw = unsafe { ctx.arena.theta(q, st.id) };
+                absorb(P::widen(raw, &mut own_wide));
+            }
+        });
         {
             let mut slots = ctx.partials.lock().unwrap_or_else(|e| e.into_inner());
             partial.store_into(&mut slots[widx]);
@@ -264,8 +292,8 @@ pub(crate) fn worker_main<S: LocalSolver>(
                               None);
             // Safety: we own node st.id; parity-q η is the write buffer
             // until the next iteration's post-solve barrier.
-            unsafe { ctx.arena.eta_out_mut(q, st.id) }
-                .copy_from_slice(&st.kernel.etas);
+            P::store(unsafe { ctx.arena.eta_out_mut(q, st.id) },
+                     &st.kernel.etas);
         }
     }
 
@@ -286,7 +314,8 @@ pub(crate) fn worker_main<S: LocalSolver>(
 /// between the post-stats and post-verdict barriers. O(W·dim + dim);
 /// only the on-demand app-metric snapshot still reads the parity-`q`
 /// arena.
-fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
+fn fold<P: ArenaScalar>(ctx: &WorkerCtx<'_, P>, lead: &mut LeadState<'_>,
+                        t: usize, q: usize) {
     let n = ctx.graph.len();
     let dim = ctx.arena.dim();
 
@@ -307,11 +336,13 @@ fn fold(ctx: &WorkerCtx<'_>, lead: &mut LeadState<'_>, t: usize, q: usize) {
                 lead.live = vec![true; n];
             }
             // Safety: between the post-stats and post-verdict barriers no
-            // worker writes parity-q θ.
-            let all = unsafe { ctx.arena.theta_all(q) };
+            // worker writes parity-q θ. Per-node reads (the shard-padded
+            // layout has no contiguous whole-buffer view).
             for i in 0..n {
-                lead.snapshot[ctx.order[i]]
-                    .copy_from_slice(&all[i * dim..(i + 1) * dim]);
+                let th = unsafe { ctx.arena.theta(q, i) };
+                for (d, &x) in lead.snapshot[ctx.order[i]].iter_mut().zip(th) {
+                    *d = x.to_f64();
+                }
             }
             metric.measure(t, &lead.snapshot, &lead.live)
         }

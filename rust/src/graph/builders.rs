@@ -24,6 +24,11 @@ pub enum Topology {
     Cluster,
     /// √n × √n 4-neighbour grid (n must be a perfect square).
     Grid,
+    /// Heavy-tailed preferential-attachment graph (Barabási–Albert,
+    /// m = 2, internally seeded by `n` so repeated builds agree) — the
+    /// degree-skew stressor for the sharder and the scale benches; see
+    /// [`power_law`] for the seedable variant.
+    PowerLaw,
 }
 
 impl Topology {
@@ -99,6 +104,9 @@ impl Topology {
                 }
                 Graph::new(n, &edges)
             }
+            Topology::PowerLaw => {
+                power_law(n, 2, &mut Pcg::new(0x50574c41, n as u64))
+            }
         }
     }
 
@@ -111,6 +119,7 @@ impl Topology {
             "star" => Ok(Topology::Star),
             "cluster" => Ok(Topology::Cluster),
             "grid" => Ok(Topology::Grid),
+            "power-law" | "powerlaw" => Ok(Topology::PowerLaw),
             _ => Err(Error::Config(format!("unknown topology '{s}'"))),
         }
     }
@@ -123,8 +132,58 @@ impl Topology {
             Topology::Star => "star",
             Topology::Cluster => "cluster",
             Topology::Grid => "grid",
+            Topology::PowerLaw => "power-law",
         }
     }
+}
+
+/// Seeded preferential-attachment (Barabási–Albert) graph: start from a
+/// complete seed on `m + 1` nodes, then attach each new node to `m`
+/// distinct existing nodes sampled with probability proportional to
+/// degree (uniform draws from the running edge-endpoint list). The
+/// resulting degree sequence is heavy-tailed (`P(deg = k) ~ k^{-3}`),
+/// which is exactly the regime that breaks naive degree-balanced
+/// sharding — see [`super::shard_ranges`]'s hub cap.
+///
+/// Connected by construction (every new node attaches to the existing
+/// component), deterministic for a fixed `rng` state, and `O(m·n)`
+/// expected time — safe at 10^6 nodes.
+pub fn power_law(n: usize, m: usize, rng: &mut Pcg) -> Result<Graph> {
+    if n == 0 {
+        return Err(Error::Config("graph: zero nodes".into()));
+    }
+    let m = m.max(1);
+    if n <= m + 1 {
+        // too small for attachment; a complete graph is the natural cap
+        return Topology::Complete.build(n);
+    }
+    let mut edges: Vec<(NodeId, NodeId)> = Vec::with_capacity(m * n);
+    // each edge contributes both endpoints: sampling an entry uniformly
+    // is degree-proportional node sampling
+    let mut endpoints: Vec<NodeId> = Vec::with_capacity(2 * m * n);
+    for i in 0..=m {
+        for j in (i + 1)..=m {
+            edges.push((i, j));
+            endpoints.push(i);
+            endpoints.push(j);
+        }
+    }
+    let mut picked: Vec<NodeId> = Vec::with_capacity(m);
+    for v in (m + 1)..n {
+        picked.clear();
+        while picked.len() < m {
+            let t = endpoints[rng.below(endpoints.len())];
+            if !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &t in &picked {
+            edges.push((v, t));
+            endpoints.push(v);
+            endpoints.push(t);
+        }
+    }
+    Graph::new(n, &edges)
 }
 
 /// Connected Erdős–Rényi G(n, p): sampled until connected (p well above the
@@ -238,9 +297,47 @@ mod tests {
     #[test]
     fn parse_roundtrip() {
         for t in [Topology::Complete, Topology::Ring, Topology::Chain,
-                  Topology::Star, Topology::Cluster, Topology::Grid] {
+                  Topology::Star, Topology::Cluster, Topology::Grid,
+                  Topology::PowerLaw] {
             assert_eq!(Topology::parse(t.name()).unwrap(), t);
         }
+        assert_eq!(Topology::parse("powerlaw").unwrap(), Topology::PowerLaw);
         assert!(Topology::parse("möbius").is_err());
+    }
+
+    #[test]
+    fn power_law_is_connected_and_heavy_tailed() {
+        let g = power_law(500, 2, &mut Pcg::seed(42)).unwrap();
+        assert_eq!(g.len(), 500);
+        assert!(g.is_connected());
+        // attachment adds m edges per node beyond the seed clique
+        assert_eq!(g.edge_count(), 3 + 2 * (500 - 3));
+        let max_deg = (0..500).map(|i| g.degree(i)).max().unwrap();
+        assert!(max_deg as f64 > 4.0 * g.mean_degree(),
+                "hub degree {max_deg} should dwarf the mean {}", g.mean_degree());
+        assert!((0..500).all(|i| g.degree(i) >= 2), "m = 2 floor");
+    }
+
+    #[test]
+    fn power_law_is_deterministic() {
+        let a = power_law(120, 3, &mut Pcg::seed(7)).unwrap();
+        let b = power_law(120, 3, &mut Pcg::seed(7)).unwrap();
+        for i in 0..120 {
+            assert_eq!(a.neighbors(i), b.neighbors(i));
+        }
+        // and the named topology reseeds internally per n
+        let c = Topology::PowerLaw.build(64).unwrap();
+        let d = Topology::PowerLaw.build(64).unwrap();
+        for i in 0..64 {
+            assert_eq!(c.neighbors(i), d.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn power_law_small_n_falls_back_to_complete() {
+        let g = power_law(3, 2, &mut Pcg::seed(1)).unwrap();
+        assert_eq!(g.edge_count(), 3);
+        assert!(Topology::PowerLaw.build(2).unwrap().is_connected());
+        assert!(power_law(0, 2, &mut Pcg::seed(1)).is_err());
     }
 }

@@ -5,6 +5,28 @@
 //! topology by driving per-edge penalties (Fig. 1c). This module provides
 //! the static graph builders, validation, and the effective-topology
 //! statistics used to visualize edge influence.
+//!
+//! ## Memory layout (the million-node contract)
+//!
+//! [`Graph`] is CSR: one `offsets` array (n + 1 `usize`s) plus one flat
+//! `targets` array (2E `NodeId`s) — `8(n + 1) + 16E` bytes of adjacency
+//! total, with no per-node heap allocation. `neighbors(i)` is a
+//! contiguous sorted slice, so a sweep over `0..n` walks `targets` front
+//! to back in streaming order. Everything downstream leans on that:
+//!
+//! * [`rcm_order`] / [`bandwidth`] make neighbour ids *numerically*
+//!   close, which under contiguous sharding makes them *physically*
+//!   close in both `targets` and the parameter arena;
+//! * [`shard_ranges`] cuts `0..n` into contiguous cost-balanced ranges
+//!   (degree-skew capped — see its docs), so each worker's slice of
+//!   `targets` and of the arena is a dense block;
+//! * for cluster-scale graphs, `rcm_order_in` re-runs RCM inside each
+//!   machine's range (hierarchical two-level ordering; see
+//!   `cluster::partition`).
+//!
+//! Rule of thumb at 10^6 nodes, mean degree 4: adjacency ≈ 72 MB,
+//! which is dominated by the parameter arena (`dim`-dependent) — see
+//! `coordinator`'s module docs for the arena side of the layout.
 
 mod builders;
 mod graph;
@@ -12,10 +34,10 @@ mod live;
 mod relabel;
 mod sharding;
 
-pub use builders::{random_connected, Topology};
+pub use builders::{power_law, random_connected, Topology};
 pub use graph::{EdgeId, Graph, NodeId};
 pub use live::LiveView;
-pub use relabel::{bandwidth, rcm_order, relabel_graph, Relabel};
+pub use relabel::{bandwidth, rcm_order, rcm_order_in, relabel_graph, Relabel};
 pub use sharding::{shard_ranges, shard_ranges_in};
 
 /// Effective-influence summary of a penalized graph state: for every edge,

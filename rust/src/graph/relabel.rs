@@ -76,6 +76,62 @@ pub fn rcm_order(graph: &Graph) -> Vec<NodeId> {
     order
 }
 
+/// [`rcm_order`] restricted to the subgraph induced by a contiguous id
+/// `span`: edges leaving the span are ignored, degrees are span-internal,
+/// and the returned order is a permutation of `span` (absolute ids,
+/// `span.len()` entries). The induced subgraph may be disconnected —
+/// every component is swept, lowest-internal-degree roots first — which
+/// is why this works directly on the host [`Graph`] instead of building
+/// (and failing to validate) a standalone subgraph.
+///
+/// `rcm_order_in(g, 0..n) == rcm_order(g)`: on the full span the
+/// internal degree *is* the degree, so the hierarchical two-level path
+/// (machine partition → per-machine RCM; see `cluster::partition`)
+/// degenerates to the flat ordering at one machine.
+pub fn rcm_order_in(graph: &Graph, span: std::ops::Range<usize>) -> Vec<NodeId> {
+    let lo = span.start;
+    let len = span.end.saturating_sub(lo);
+    let in_span = |v: usize| v >= lo && v < span.end;
+    // span-internal degrees, precomputed once (the sort key below)
+    let deg_in: Vec<usize> = span
+        .clone()
+        .map(|i| graph.neighbors(i).iter().filter(|&&u| in_span(u)).count())
+        .collect();
+    let mut order: Vec<NodeId> = Vec::with_capacity(len);
+    let mut visited = vec![false; len];
+    let mut nbrs: Vec<NodeId> = Vec::new();
+    loop {
+        let mut root: Option<NodeId> = None;
+        for i in span.clone() {
+            if !visited[i - lo]
+                && root.is_none_or(|r| deg_in[i - lo] < deg_in[r - lo])
+            {
+                root = Some(i);
+            }
+        }
+        let Some(root) = root else { break };
+        visited[root - lo] = true;
+        order.push(root);
+        let mut head = order.len() - 1;
+        while head < order.len() {
+            let u = order[head];
+            head += 1;
+            nbrs.clear();
+            nbrs.extend(graph.neighbors(u).iter().copied()
+                .filter(|&v| in_span(v) && !visited[v - lo]));
+            // stable sort on internal degree; neighbour lists are
+            // id-sorted, so the effective key is (degree, id)
+            nbrs.sort_by_key(|&v| deg_in[v - lo]);
+            for &v in &nbrs {
+                visited[v - lo] = true;
+                order.push(v);
+            }
+        }
+    }
+    order.reverse();
+    order
+}
+
 /// Apply a permutation (`order[new_id] = old_id`, e.g. from
 /// [`rcm_order`]) to a graph, producing the relabeled graph.
 pub fn relabel_graph(graph: &Graph, order: &[NodeId]) -> Result<Graph> {
@@ -186,6 +242,49 @@ mod tests {
                 assert!(r.neighbors(inv[a]).contains(&inv[b]));
             }
         });
+    }
+
+    #[test]
+    fn rcm_in_full_span_matches_flat_rcm() {
+        prop::check("rcm_order_in(0..n) ≡ rcm_order", |rng| {
+            let n = 1 + rng.below(30);
+            let g = random_connected(n, 0.25, rng).unwrap();
+            assert_eq!(rcm_order_in(&g, 0..n), rcm_order(&g));
+        });
+    }
+
+    #[test]
+    fn rcm_in_handles_disconnected_spans() {
+        // middle of a ring: the induced span is one path; ends of the
+        // span on a star's leaves: fully disconnected singletons
+        let ring = Topology::Ring.build(10).unwrap();
+        let ord = rcm_order_in(&ring, 3..8);
+        assert_eq!(ord.len(), 5);
+        let mut sorted = ord.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![3, 4, 5, 6, 7], "permutation of the span");
+
+        let star = Topology::Star.build(8).unwrap();
+        let leaves = rcm_order_in(&star, 2..6);
+        // all-isolated: swept in id order, each its own component
+        assert_eq!(leaves.len(), 4);
+        let mut s = leaves.clone();
+        s.sort_unstable();
+        assert_eq!(s, vec![2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn rcm_reduces_power_law_bandwidth() {
+        // the RCM-on-CSR regression: a seeded heavy-tailed graph must
+        // relabel deterministically and never lose locality vs the raw
+        // attachment order
+        let g = crate::graph::power_law(300, 2, &mut Pcg::seed(31)).unwrap();
+        let order = rcm_order(&g);
+        assert!(is_permutation(&order));
+        assert_eq!(order, rcm_order(&g), "deterministic");
+        let relabeled = relabel_graph(&g, &order).unwrap();
+        assert!(bandwidth(&relabeled) <= bandwidth(&g),
+                "RCM bandwidth {} vs raw {}", bandwidth(&relabeled), bandwidth(&g));
     }
 
     #[test]

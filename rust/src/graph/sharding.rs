@@ -13,6 +13,17 @@ use super::Graph;
 /// order reproduces the sequential node order, so shard-combined
 /// reductions visit nodes exactly as a single-threaded sweep would.
 ///
+/// **Degree-skew cap:** on heavy-tailed graphs a hub's cost can exceed
+/// the per-shard budget, which used to strand the hub in one huge shard
+/// while every other shard got a sliver — pathological max/min cost
+/// imbalance. The splitter now returns *fewer* shards when needed: the
+/// count is capped so each shard's budget is at least half the heaviest
+/// node's cost (`shards ≤ ⌊2·total/cmax⌋`), keeping the max/min shard
+/// cost ratio bounded instead of growing with the hub degree. The cap
+/// never reduces below 2 shards and never fires on degree-uniform
+/// graphs (rings, grids, complete), so existing splits are unchanged;
+/// callers must size worker state off `ranges.len()`, not the request.
+///
 /// Deterministic: same graph + same `max_shards` → same ranges.
 pub fn shard_ranges(graph: &Graph, max_shards: usize) -> Vec<Range<usize>> {
     shard_ranges_in(graph, 0..graph.len(), max_shards)
@@ -33,9 +44,12 @@ pub fn shard_ranges_in(graph: &Graph, span: Range<usize>,
     if len == 0 {
         return Vec::new();
     }
-    let shards = max_shards.max(1).min(len);
     let cost = |i: usize| (1 + graph.degree(i)) as f64;
     let total: f64 = (lo..n).map(cost).sum();
+    let cmax = (lo..n).map(cost).fold(0.0, f64::max);
+    // hub cap (see shard_ranges docs): every shard's budget stays ≥ cmax/2
+    let cap = ((2.0 * total / cmax).floor() as usize).max(1);
+    let shards = max_shards.max(1).min(len).min(cap);
 
     let mut out = Vec::with_capacity(shards);
     let mut start = lo;
@@ -73,9 +87,19 @@ mod tests {
     use crate::graph::Topology;
     use crate::util::prop;
 
+    fn cost_of(g: &Graph, r: &std::ops::Range<usize>) -> f64 {
+        r.clone().map(|i| (1 + g.degree(i)) as f64).sum()
+    }
+
     fn check_partition(g: &Graph, shards: usize) {
         let ranges = shard_ranges(g, shards);
-        assert_eq!(ranges.len(), shards.max(1).min(g.len()));
+        // the hub cap may return fewer shards than requested, never more
+        // and never zero
+        assert!(!ranges.is_empty());
+        assert!(ranges.len() <= shards.max(1).min(g.len()));
+        if shards >= 2 && g.len() >= 2 {
+            assert!(ranges.len() >= 2.min(shards), "cap floor is two shards");
+        }
         let mut expect = 0usize;
         for r in &ranges {
             assert_eq!(r.start, expect, "contiguous, in order");
@@ -83,12 +107,18 @@ mod tests {
             expect = r.end;
         }
         assert_eq!(expect, g.len(), "covers every node");
+        // the cap's point: each shard's budget is at least half the
+        // heaviest node, so no multi-node shard can dwarf the average
+        let total: f64 = cost_of(g, &(0..g.len()));
+        let cmax = (0..g.len()).map(|i| (1 + g.degree(i)) as f64).fold(0.0, f64::max);
+        assert!(total / ranges.len() as f64 >= 0.5 * cmax - 1e-9,
+                "budget {} under half of cmax {cmax}", total / ranges.len() as f64);
     }
 
     #[test]
     fn covers_all_named_topologies() {
         for topo in [Topology::Complete, Topology::Ring, Topology::Chain,
-                     Topology::Star, Topology::Cluster] {
+                     Topology::Star, Topology::Cluster, Topology::PowerLaw] {
             let g = topo.build(13).unwrap();
             for shards in [1, 2, 3, 5, 13, 64] {
                 check_partition(&g, shards);
@@ -150,6 +180,54 @@ mod tests {
             }
             assert_eq!(expect, span.end);
             assert_eq!(ranges.len(), shards.min(span.len()));
+        }
+    }
+
+    #[test]
+    fn uniform_degree_graphs_never_capped() {
+        // rings/complete graphs have cmax == mean cost: the hub cap must
+        // be invisible (exact requested shard count, PR 9 splits intact)
+        for (topo, n) in [(Topology::Ring, 12), (Topology::Complete, 9)] {
+            let g = topo.build(n).unwrap();
+            for shards in 1..=n {
+                assert_eq!(shard_ranges(&g, shards).len(), shards,
+                           "{topo:?} n={n} shards={shards}");
+            }
+        }
+    }
+
+    #[test]
+    fn star_hub_caps_the_shard_count() {
+        // hub cost 1001 vs total 3001: more than 5 shards would hand some
+        // worker a budget below half the hub. The old splitter returned 64
+        // ranges with a 1001-vs-~30 cost spread.
+        let g = Topology::Star.build(1001).unwrap();
+        let ranges = shard_ranges(&g, 64);
+        assert_eq!(ranges.len(), 5);
+        let costs: Vec<f64> = ranges.iter().map(|r| cost_of(&g, r)).collect();
+        let max = costs.iter().cloned().fold(0.0, f64::max);
+        let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(max / min <= 4.0, "max/min shard cost {max}/{min}");
+        // two-shard requests are never shrunk
+        assert_eq!(shard_ranges(&g, 2).len(), 2);
+    }
+
+    #[test]
+    fn power_law_shard_costs_stay_balanced() {
+        // the regression the cap exists for: a heavy-tailed graph sharded
+        // wide must keep the max/min shard-cost ratio bounded
+        let g = crate::graph::power_law(400, 2,
+                                        &mut crate::util::rng::Pcg::seed(9)).unwrap();
+        for shards in [4, 16, 64] {
+            let ranges = shard_ranges(&g, shards);
+            assert!(ranges.len() <= shards);
+            let costs: Vec<f64> = ranges.iter().map(|r| cost_of(&g, r)).collect();
+            let max = costs.iter().cloned().fold(0.0, f64::max);
+            let min = costs.iter().cloned().fold(f64::INFINITY, f64::min);
+            // the uncapped splitter reaches ~cmax/cmin (> 10) at 64 shards
+            assert!(max / min <= 6.0,
+                    "shards={shards}: cost spread {max}/{min} over {} ranges",
+                    ranges.len());
         }
     }
 

@@ -233,6 +233,22 @@ impl StatPartial {
     where
         I: IntoIterator<Item = &'a [f64]>,
     {
+        self.finish_centered_with(count, mean_scratch, |absorb| {
+            for th in thetas {
+                absorb(th);
+            }
+        });
+    }
+
+    /// Push-style [`StatPartial::finish_centered`]: the caller receives an
+    /// `absorb(θ_i)` sink and feeds the same θ slices in the same order.
+    /// Needed where the θ storage is not `f64` (the coordinator's reduced-
+    /// precision arena widens each block into one scratch buffer, so an
+    /// iterator of simultaneously-live slices cannot exist). Arithmetic is
+    /// identical to the pull variant — element order, accumulation order,
+    /// and the centered update all unchanged.
+    pub fn finish_centered_with(&mut self, count: usize, mean_scratch: &mut [f64],
+                                feed: impl FnOnce(&mut dyn FnMut(&[f64]))) {
         self.node_count = count;
         if count == 0 {
             return;
@@ -242,12 +258,13 @@ impl StatPartial {
         for k in 0..dim {
             mean_scratch[k] = self.theta_sum[k] * inv_count;
         }
-        for th in thetas {
+        let mean = &mean_scratch[..dim];
+        feed(&mut |th: &[f64]| {
             for k in 0..dim {
-                let d = th[k] - mean_scratch[k];
+                let d = th[k] - mean[k];
                 self.centered_sq += d * d;
             }
-        }
+        });
     }
 
     /// Copy into a pre-sized slot without reallocating its `theta_sum`.
